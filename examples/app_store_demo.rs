@@ -1,0 +1,211 @@
+//! App Store for Deep Learning Models — the full §2 story in one run:
+//!
+//! 1. Import a (synthetic) Caffe JSON export with the §3 importer.
+//! 2. Compress it with the Deep-Compression pipeline (§2's 240 MB → 6.9 MB
+//!    technique).
+//! 3. Publish both zoo models and the import into a local registry.
+//! 4. "Device side": fetch over a simulated LTE link, verify integrity,
+//!    then rapid-switch between models through the byte-budgeted cache
+//!    while the meta-model selector picks which model a context needs.
+//!
+//! Run with: `cargo run --release --example app_store_demo`
+
+use deeplearningkit::cache::{ModelCache, PolicyKind};
+use deeplearningkit::compression::{compress_model, StagePlan};
+use deeplearningkit::metrics::{fmt_bytes, Table};
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::selector::{Candidate, Context, LocationKind, MetaModel};
+use deeplearningkit::store::{Package, Registry, SimulatedNetwork};
+use deeplearningkit::{artifacts_dir, data, importer, model, store, testutil};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== App Store for Deep Learning Models (paper §2) ===\n");
+
+    // ---- 1. Import a Caffe export (the §3 importer) ----------------------
+    let caffe_json = synthetic_caffe_export();
+    let imported = importer::import_auto(&caffe_json)?;
+    println!(
+        "[import] Caffe export `{}` -> {} layers, {} params",
+        imported.manifest.id,
+        imported.manifest.arch.layers.len(),
+        imported.manifest.arch.param_count()?
+    );
+
+    // ---- 2. Compress (Deep Compression) ----------------------------------
+    let (_, report) = compress_model(&imported.weights, StagePlan::default())?;
+    println!(
+        "[compress] {} -> {} ({:.1}x, sparsity {:.0}%)",
+        fmt_bytes(report.sizes.original as u64),
+        fmt_bytes(report.sizes.after_huffman as u64),
+        report.ratio,
+        report.sparsity * 100.0
+    );
+
+    // ---- 3. Publish into the store ---------------------------------------
+    let registry_dir = testutil::tempdir("appstore-registry");
+    let registry = Registry::open(&registry_dir)?;
+    for id in ["lenet-mnist", "char-cnn"] {
+        let pkg = Package::from_model_dir(&artifacts_dir().join("models").join(id))?;
+        let p = registry.publish(&pkg)?;
+        println!("[publish] `{}` v{} ({})", p.id, p.version, fmt_bytes(p.package_bytes as u64));
+    }
+    // Publish the freshly imported model too.
+    let import_dir = testutil::tempdir("appstore-import");
+    let files = model::ModelFiles::new(&import_dir);
+    let weight_bytes = imported.weights.to_bytes();
+    std::fs::write(files.weights(), &weight_bytes)?;
+    let mut manifest = imported.manifest;
+    manifest.weights_sha256 = Some(store::sha256_hex(&weight_bytes));
+    manifest.save(&files.manifest())?;
+    let p = registry.publish(&Package::from_model_dir(&import_dir)?)?;
+    println!("[publish] `{}` v{} (from importer)", p.id, p.version);
+
+    // ---- 4. Device side: fetch + cache + selector ------------------------
+    let mut net = SimulatedNetwork::lte();
+    let device_store = testutil::tempdir("appstore-device");
+    let mut fetched: BTreeMap<String, std::path::PathBuf> = BTreeMap::new();
+    for id in ["lenet-mnist", "char-cnn"] {
+        let dest = device_store.join(id);
+        let stats = registry.fetch_to(id, &mut net, &dest)?;
+        println!(
+            "[fetch] `{id}`: {} over simulated LTE in {:.2} s (modeled)",
+            fmt_bytes(stats.bytes as u64),
+            stats.modeled.as_secs_f64()
+        );
+        fetched.insert(id.to_string(), dest);
+    }
+
+    // Rapid model switching through the byte-budgeted cache (paper: "very
+    // rapid load them from SSD into GPU accessible RAM").
+    let engine = Engine::start()?;
+    let mut cache = ModelCache::new(engine, 4_000_000, PolicyKind::Lru);
+    for (id, dir) in &fetched {
+        cache.register(id, dir);
+    }
+
+    let mut table = Table::new("model switching through the cache", &["step", "model", "hit", "latency"]);
+    let digit = data::glyphs(1, 1).inputs;
+    let text = data::chars(1, 1).inputs;
+    for (step, id) in ["lenet-mnist", "char-cnn", "lenet-mnist", "char-cnn"].iter().enumerate() {
+        let input = if id.contains("char") { text.clone() } else { digit.clone() };
+        let (_, access) = cache.infer(id, input)?;
+        table.row(&[
+            format!("{step}"),
+            id.to_string(),
+            format!("{}", access.hit),
+            if access.hit {
+                "resident".to_string()
+            } else {
+                format!("{:.1} ms load", access.load_time.as_secs_f64() * 1000.0)
+            },
+        ]);
+    }
+    table.print();
+    let cs = cache.stats();
+    println!(
+        "[cache] hits {} misses {} evictions {} (budget {})",
+        cs.hits,
+        cs.misses,
+        cs.evictions,
+        fmt_bytes(4_000_000)
+    );
+
+    // Meta-model model selection (paper: location/time/history -> model).
+    let meta = MetaModel::default();
+    let candidates = vec![
+        Candidate {
+            id: "lenet-mnist".into(),
+            location_affinity: BTreeMap::from([(LocationKind::Office, 0.9)]),
+            peak_hours: vec![10, 15],
+            infer_latency: Duration::from_millis(5),
+            load_latency: Duration::from_millis(40),
+            resident: cache.is_resident("lenet-mnist"),
+        },
+        Candidate {
+            id: "char-cnn".into(),
+            location_affinity: BTreeMap::from([(LocationKind::Home, 0.8)]),
+            peak_hours: vec![20],
+            infer_latency: Duration::from_millis(8),
+            load_latency: Duration::from_millis(60),
+            resident: cache.is_resident("char-cnn"),
+        },
+    ];
+    for (loc, hour) in [(LocationKind::Office, 10u8), (LocationKind::Home, 20u8)] {
+        let ctx = Context { location: loc, hour, ..Default::default() };
+        let choice = meta.select(&ctx, &candidates).expect("a model fits the budget");
+        println!(
+            "[selector] context ({loc:?}, {hour}:00) -> `{}` (score {:.2}, expected {:.0} ms)",
+            choice.id,
+            choice.score,
+            choice.expected_latency.as_secs_f64() * 1000.0
+        );
+    }
+
+    println!("\napp_store_demo OK");
+    Ok(())
+}
+
+/// A small but legitimate Caffe-style JSON export, generated in-process
+/// (stands in for a real `caffe_export.py` dump; same schema).
+fn synthetic_caffe_export() -> deeplearningkit::json::Value {
+    use deeplearningkit::json::Value;
+    use deeplearningkit::testutil::XorShiftRng;
+    let mut rng = XorShiftRng::new(4242);
+    let blob = |dims: &[usize], rng: &mut XorShiftRng| {
+        let n: usize = dims.iter().product();
+        Value::obj(&[
+            ("shape", Value::Array(dims.iter().map(|&d| d.into()).collect())),
+            ("data", Value::Array((0..n).map(|_| (rng.normal() as f64 * 0.08).into()).collect())),
+        ])
+    };
+    let layers = vec![
+        Value::obj(&[
+            ("name", "conv1".into()),
+            ("type", "Convolution".into()),
+            (
+                "convolution_param",
+                Value::obj(&[
+                    ("num_output", 8usize.into()),
+                    ("kernel_size", 5usize.into()),
+                    ("stride", 1usize.into()),
+                    ("pad", 2usize.into()),
+                ]),
+            ),
+            ("blobs", Value::Array(vec![blob(&[8, 3, 5, 5], &mut rng), blob(&[8], &mut rng)])),
+        ]),
+        Value::obj(&[("name", "relu1".into()), ("type", "ReLU".into())]),
+        Value::obj(&[
+            ("name", "pool1".into()),
+            ("type", "Pooling".into()),
+            (
+                "pooling_param",
+                Value::obj(&[
+                    ("pool", "MAX".into()),
+                    ("kernel_size", 2usize.into()),
+                    ("stride", 2usize.into()),
+                ]),
+            ),
+        ]),
+        Value::obj(&[
+            ("name", "ip1".into()),
+            ("type", "InnerProduct".into()),
+            ("inner_product_param", Value::obj(&[("num_output", 10usize.into())])),
+            (
+                "blobs",
+                Value::Array(vec![blob(&[10, 8 * 16 * 16], &mut rng), blob(&[10], &mut rng)]),
+            ),
+        ]),
+        Value::obj(&[("name", "prob".into()), ("type", "Softmax".into())]),
+    ];
+    Value::obj(&[
+        ("framework", "caffe".into()),
+        ("name", "demo_cifar_small".into()),
+        (
+            "input_dim",
+            Value::Array(vec![1usize.into(), 3usize.into(), 32usize.into(), 32usize.into()]),
+        ),
+        ("layers", Value::Array(layers)),
+    ])
+}

@@ -1,0 +1,25 @@
+//! Internal profiling helper (not part of the public example set): raw
+//! engine latency per batch size — used by the §Perf iteration log.
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::{artifacts_dir, data};
+use std::time::Instant;
+fn main() {
+    let engine = Engine::start().unwrap();
+    engine.load(artifacts_dir().join("models").join("lenet-mnist")).unwrap();
+    for &n in &[1usize, 8, 32] {
+        let batch = data::glyphs(n, 1);
+        for _ in 0..3 { engine.infer("lenet-mnist", batch.inputs.clone()).unwrap(); }
+        let t0 = Instant::now();
+        let iters = 20;
+        for _ in 0..iters { engine.infer("lenet-mnist", batch.inputs.clone()).unwrap(); }
+        let us = t0.elapsed().as_secs_f64()*1e6/iters as f64;
+        println!("lenet batch {n}: {:.0} us/exec, {:.0} us/item", us, us/n as f64);
+    }
+    engine.load(artifacts_dir().join("models").join("nin-cifar10")).unwrap();
+    let batch = data::textures(1, 1);
+    engine.infer("nin-cifar10", batch.inputs.clone()).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..5 { engine.infer("nin-cifar10", batch.inputs.clone()).unwrap(); }
+    println!("nin batch 1: {:.0} us/exec", t0.elapsed().as_secs_f64()*1e6/5.0);
+    engine.shutdown();
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load a pre-trained model from the artifacts directory and
+//! classify a handful of generated digit images — the paper's core
+//! use-case ("using pre-trained deep learning models on-device") in ~30
+//! lines of user code.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::{artifacts_dir, data, model};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start the inference engine (PJRT CPU client on its own thread —
+    //    the analog of MTLCreateSystemDefaultDevice + command queue).
+    let engine = Engine::start()?;
+
+    // 2. Load a pre-trained model (manifest + weights + AOT-compiled HLO).
+    let dir = artifacts_dir().join("models").join("lenet-mnist");
+    let info = engine.load(&dir)?;
+    println!(
+        "loaded `{}`: {} classes, AOT batch sizes {:?}, load took {:.1} ms",
+        info.id,
+        info.classes,
+        info.batches,
+        info.load_micros as f64 / 1000.0
+    );
+
+    // 3. Generate a batch of labeled digit images and classify them.
+    let manifest = model::Manifest::load(&dir.join("manifest.json"))?;
+    let batch = data::glyphs(8, 2026);
+    let probs = engine.infer(&info.id, batch.inputs.clone())?;
+    let preds = probs.argmax_rows();
+
+    let mut correct = 0;
+    for (i, (&p, &label)) in preds.iter().zip(&batch.labels).enumerate() {
+        let confidence = probs.data()[i * info.classes + p];
+        let ok = p == label;
+        correct += ok as usize;
+        println!(
+            "image {i}: predicted `{}` (p={confidence:.3}) actual `{}` {}",
+            manifest.labels[p],
+            manifest.labels[label],
+            if ok { "✓" } else { "✗" }
+        );
+    }
+    println!("accuracy: {correct}/8");
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! End-to-end serving driver (the repository's headline validation run,
+//! recorded in EXPERIMENTS.md).
+//!
+//! Loads the *trained* LeNet digits model through the full stack —
+//! Pallas-kernel HLO → PJRT engine → dynamic batcher → coordinator — and
+//! serves a few thousand classification requests from concurrent client
+//! threads, reporting latency percentiles, throughput, batching behaviour,
+//! SLO attainment against the paper's 100 ms Nielsen bar, and measured
+//! accuracy on held-out generated data.
+//!
+//! Run with: `cargo run --release --example serving_e2e`
+//! Flags: --requests N --concurrency N --max-batch N --max-delay-ms N
+
+use deeplearningkit::cli::Command;
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::metrics::Table;
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{artifacts_dir, data};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("serving_e2e", "end-to-end serving driver")
+        .flag("requests", "total requests", Some("2048"))
+        .flag("concurrency", "client threads", Some("8"))
+        .flag("max-batch", "batcher max batch", Some("8"))
+        .flag("max-delay-ms", "batcher flush deadline ms", Some("2"));
+    let a = cmd.parse(&argv)?;
+    let requests = a.get_usize("requests", 2048)?;
+    let concurrency = a.get_usize("concurrency", 8)?.max(1);
+    let max_batch = a.get_usize("max-batch", 8)?;
+    let max_delay = Duration::from_millis(a.get_usize("max-delay-ms", 2)? as u64);
+
+    println!("=== DeepLearningKit serving e2e ===");
+    let engine = Engine::start()?;
+    let mut coord = Coordinator::new(
+        engine,
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch, max_delay, queue_cap: 8192 },
+        },
+    );
+    let t_load = Instant::now();
+    let info = coord.serve_model(artifacts_dir().join("models").join("lenet-mnist"))?;
+    println!(
+        "model `{}` loaded+compiled in {:.1} ms ({} AOT batch sizes, {:.1} MB weights)",
+        info.id,
+        t_load.elapsed().as_secs_f64() * 1000.0,
+        info.batches.len(),
+        info.weight_bytes as f64 / 1e6
+    );
+
+    let coord = Arc::new(coord);
+    let correct = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let per_thread = (requests / concurrency).max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..concurrency {
+            let coord = coord.clone();
+            let correct = correct.clone();
+            let failed = failed.clone();
+            scope.spawn(move || {
+                let batch = data::glyphs(per_thread, 40_000 + t as u64);
+                for i in 0..per_thread {
+                    let input = Tensor::new(
+                        Shape::new(&[1usize, 28, 28]),
+                        batch.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+                    )
+                    .unwrap();
+                    match coord.infer("lenet-mnist", input) {
+                        Ok(r) => {
+                            if r.predicted == batch.labels[i] {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    let stats = coord.stats();
+    let served = requests as u64 - failed.load(Ordering::Relaxed);
+    let acc = correct.load(Ordering::Relaxed) as f64 / served.max(1) as f64;
+
+    let mut table = Table::new(
+        "serving results (trained LeNet, full three-layer stack)",
+        &["metric", "value"],
+    );
+    table.row(&["requests".into(), format!("{requests}")]);
+    table.row(&["client threads".into(), format!("{concurrency}")]);
+    table.row(&["wall time".into(), format!("{:.2} s", wall.as_secs_f64())]);
+    table.row(&[
+        "throughput".into(),
+        format!("{:.0} req/s", served as f64 / wall.as_secs_f64()),
+    ]);
+    table.row(&["p50 latency".into(), format!("{:.2} ms", stats.p50_us as f64 / 1000.0)]);
+    table.row(&["p95 latency".into(), format!("{:.2} ms", stats.p95_us as f64 / 1000.0)]);
+    table.row(&["p99 latency".into(), format!("{:.2} ms", stats.p99_us as f64 / 1000.0)]);
+    table.row(&["mean batch size".into(), format!("{:.2}", stats.mean_batch_size)]);
+    table.row(&["batches executed".into(), format!("{}", stats.batches)]);
+    table.row(&[
+        "SLO attainment (100 ms)".into(),
+        format!("{:.2}%", stats.slo_attainment * 100.0),
+    ]);
+    table.row(&["held-out accuracy".into(), format!("{:.4}", acc)]);
+    table.row(&["failed requests".into(), format!("{}", failed.load(Ordering::Relaxed))]);
+    table.print();
+
+    anyhow::ensure!(acc > 0.9, "accuracy regression: {acc}");
+    anyhow::ensure!(
+        stats.slo_attainment > 0.9,
+        "SLO regression: {:.1}%",
+        stats.slo_attainment * 100.0
+    );
+    println!("serving_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Text understanding with 1-D convolutions (paper roadmap item 9: adapt
+//! Zhang & LeCun's "Text Understanding from Scratch" encoding + 1-D
+//! operators).
+//!
+//! Serves the trained char-CNN through the full stack and classifies
+//! synthetic documents into the four topic classes, showing the same API
+//! works beyond image models.
+//!
+//! Run with: `cargo run --release --example text_cnn`
+
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::{artifacts_dir, data, model};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::start()?;
+    let dir = artifacts_dir().join("models").join("char-cnn");
+    let info = engine.load(&dir)?;
+    let manifest = model::Manifest::load(&dir.join("manifest.json"))?;
+    println!(
+        "loaded `{}`: classes {:?}, input one-hot [{} x {}]",
+        info.id,
+        manifest.labels,
+        data::CHAR_ALPHABET_SIZE,
+        data::CHAR_DOC_LEN
+    );
+
+    let batch = data::chars(8, 314);
+    let probs = engine.infer(&info.id, batch.inputs.clone())?;
+    let preds = probs.argmax_rows();
+
+    let mut correct = 0;
+    for (i, (&p, &label)) in preds.iter().zip(&batch.labels).enumerate() {
+        let ok = p == label;
+        correct += ok as usize;
+        println!(
+            "doc {i}: predicted `{}` (p={:.3}) actual `{}` {}",
+            manifest.labels[p],
+            probs.data()[i * 4 + p],
+            manifest.labels[label],
+            if ok { "✓" } else { "✗" }
+        );
+    }
+    println!("topic accuracy: {correct}/8");
+    anyhow::ensure!(correct >= 6, "char-cnn accuracy regressed");
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT exporter: lower every zoo model to HLO text + weights + manifest.
+
+This is the single place Python runs — `make artifacts` invokes it once;
+afterwards the rust `dlk` binary is self-contained.
+
+Per model the exporter emits into ``artifacts/models/<id>/``:
+
+    manifest.json       dlk-model/1 manifest (id, architecture, labels,
+                        aot batch list, weights sha256)
+    weights.dlkw        DLKW binary weights (trained for lenet/char-cnn,
+                        seeded-random for nin — latency-only model)
+    model_b<N>.hlo.txt  HLO text of the jitted forward pass at batch N,
+                        entry signature (x, param0, param1, ...) with
+                        params in Architecture.parameters() order
+
+HLO *text* (not serialized proto) is the interchange format: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dlkw, train
+from .model import ZOO, forward
+
+# Batch sizes compiled ahead of time, per model. The coordinator's dynamic
+# batcher rounds up to the nearest available size.
+AOT_BATCHES = {
+    "lenet-mnist": [1, 2, 4, 8, 16, 32],
+    "nin-cifar10": [1, 2, 4, 8],
+    "char-cnn": [1, 4, 8],
+}
+
+LABELS = {
+    "lenet-mnist": [str(d) for d in range(10)],
+    "nin-cifar10": [
+        "h-stripes", "v-stripes", "d-stripes", "a-stripes", "checker",
+        "dots", "rings", "h-gradient", "v-gradient", "blobs",
+    ],
+    "char-cnn": ["sports", "finance", "ml", "cooking"],
+}
+
+DESCRIPTIONS = {
+    "lenet-mnist": "LeNet digits classifier, trained on procedural glyph data",
+    "nin-cifar10": "Network-in-Network CIFAR-10 topology (paper's 20-layer E1 net)",
+    "char-cnn": "Zhang&LeCun-style char-level CNN, trained on procedural topics",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (reassigns 64-bit ids)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def get_params(model_id, arch, quick, cache_dir):
+    """Trained params for trainable models (cached), random for NIN."""
+    cache = os.path.join(cache_dir, f"{model_id}.npz")
+    if os.path.exists(cache):
+        print(f"  [{model_id}] using cached trained weights: {cache}")
+        loaded = np.load(cache)
+        return {k: jnp.asarray(loaded[k]) for k in loaded.files}, None
+
+    if model_id == "lenet-mnist":
+        steps = 60 if quick else 400
+        print(f"  [{model_id}] training {steps} steps on procedural glyphs ...")
+        params, acc, _ = train.train_lenet(steps=steps)
+    elif model_id == "char-cnn":
+        steps = 40 if quick else 250
+        print(f"  [{model_id}] training {steps} steps on procedural topics ...")
+        params, acc, _ = train.train_char_cnn(steps=steps)
+    else:
+        # NIN: the paper's latency model; random (seeded) weights.
+        print(f"  [{model_id}] seeded-random weights (latency-only model)")
+        return arch.init_params(seed=42), None
+
+    np.savez(cache, **{k: np.asarray(v) for k, v in params.items()})
+    with open(os.path.join(cache_dir, f"{model_id}.acc"), "w") as f:
+        f.write(f"{acc:.4f}\n")
+    return params, acc
+
+
+def export_model(model_id, out_dir, quick):
+    arch = ZOO[model_id]()
+    model_dir = os.path.join(out_dir, "models", model_id)
+    os.makedirs(model_dir, exist_ok=True)
+    cache_dir = os.path.join(out_dir, "trained")
+    os.makedirs(cache_dir, exist_ok=True)
+
+    params, acc = get_params(model_id, arch, quick, cache_dir)
+    param_order = [name for name, _ in arch.parameters()]
+    assert set(param_order) == set(params), (
+        f"{model_id}: params mismatch {sorted(params)} vs {sorted(param_order)}"
+    )
+
+    # 1. Weights.
+    weights_bytes = dlkw.write_dlkw({k: np.asarray(v) for k, v in params.items()})
+    weights_path = os.path.join(model_dir, "weights.dlkw")
+    with open(weights_path, "wb") as f:
+        f.write(weights_bytes)
+    sha = hashlib.sha256(weights_bytes).hexdigest()
+
+    # 2. HLO per batch size.
+    batches = AOT_BATCHES[model_id]
+    if quick:
+        batches = batches[:2]
+
+    def fn(x, *flat_params):
+        p = dict(zip(param_order, flat_params))
+        return (forward(arch, p, x, use_pallas=True),)
+
+    for batch in batches:
+        x_spec = jax.ShapeDtypeStruct((batch, *arch.input), jnp.float32)
+        p_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in param_order]
+        print(f"  [{model_id}] lowering batch={batch} ...")
+        lowered = jax.jit(fn).lower(x_spec, *p_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(model_dir, f"model_b{batch}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [{model_id}]   wrote {path} ({len(text)} chars)")
+
+    # 3. Manifest.
+    manifest = {
+        "format": "dlk-model/1",
+        "id": model_id,
+        "version": 1,
+        "source": "deeplearningkit",
+        "description": DESCRIPTIONS[model_id]
+        + (f" (held-out accuracy {acc:.3f})" if acc is not None else ""),
+        "architecture": arch.to_json(),
+        "labels": LABELS[model_id],
+        "aot_batches": batches,
+        "weights_sha256": sha,
+    }
+    with open(os.path.join(model_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"  [{model_id}] manifest written (weights sha256 {sha[:12]}...)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quick", action="store_true", help="fewer train steps / batch sizes")
+    ap.add_argument("--models", default=",".join(ZOO), help="comma-separated model ids")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    for model_id in args.models.split(","):
+        if model_id not in ZOO:
+            sys.exit(f"unknown model id `{model_id}` (have: {', '.join(ZOO)})")
+        print(f"[aot] exporting {model_id}")
+        export_model(model_id, out_dir, args.quick)
+    # Stamp for make's freshness check.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"[aot] artifacts complete in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

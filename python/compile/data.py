@@ -1,0 +1,135 @@
+"""Procedural datasets (offline substitutes for MNIST / CIFAR-10 / text).
+
+The environment has no network access, so the paper's datasets are
+replaced by deterministic procedural generators that exercise the same
+code paths (DESIGN.md substitution table):
+
+- `glyphs`: MNIST substitute — 10 digit classes rendered from a 5x7
+  bitmap font to 28x28 with random shift/scale/noise. A small CNN
+  reaches >95% on it within a few hundred steps, giving the serving
+  example a *real trained model* with a real accuracy number.
+- `textures`: CIFAR-10 substitute — 10 procedural 32x32x3 texture
+  classes (stripe orientations/frequencies, checkers, dots, gradients).
+- `chars`: 4-class synthetic character sequences for the char-CNN.
+
+All generators take a seed and are fully reproducible; the rust side
+(`rust/src/data/`) implements the same generators (same class
+definitions) so rust-served predictions can be scored against labels.
+"""
+
+import numpy as np
+
+# 5x7 bitmap font for digits 0-9 (classic LCD-style glyphs).
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def glyphs(n, seed=0):
+    """MNIST-like dataset: (images [n,1,28,28] f32 in [0,1], labels [n])."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, 1, 28, 28), dtype=np.float32)
+    labels = rng.integers(0, 10, size=n)
+    for i, d in enumerate(labels):
+        glyph = np.array(
+            [[float(ch) for ch in row] for row in _FONT[int(d)]], dtype=np.float32
+        )  # 7x5
+        # Random integer upscale (2x-3x) and placement.
+        sy = rng.integers(2, 4)
+        sx = rng.integers(2, 4)
+        big = np.kron(glyph, np.ones((sy, sx), dtype=np.float32))
+        gh, gw = big.shape
+        oy = rng.integers(0, 28 - gh + 1)
+        ox = rng.integers(0, 28 - gw + 1)
+        img = np.zeros((28, 28), dtype=np.float32)
+        img[oy : oy + gh, ox : ox + gw] = big
+        # Intensity jitter + noise.
+        img *= rng.uniform(0.7, 1.0)
+        img += rng.normal(0.0, 0.08, size=img.shape).astype(np.float32)
+        images[i, 0] = np.clip(img, 0.0, 1.0)
+    return images, labels.astype(np.int32)
+
+
+def _texture(cls, rng):
+    """One 32x32x3 image of texture class `cls` (0..9)."""
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32)
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(0.4, 0.7)
+    if cls == 0:  # horizontal stripes
+        base = np.sin(freq * yy + phase)
+    elif cls == 1:  # vertical stripes
+        base = np.sin(freq * xx + phase)
+    elif cls == 2:  # diagonal stripes
+        base = np.sin(freq * (xx + yy) * 0.7 + phase)
+    elif cls == 3:  # anti-diagonal stripes
+        base = np.sin(freq * (xx - yy) * 0.7 + phase)
+    elif cls == 4:  # checkerboard
+        base = np.sign(np.sin(freq * xx + phase) * np.sin(freq * yy + phase))
+    elif cls == 5:  # dots (radial bumps on a grid)
+        base = np.cos(freq * xx + phase) + np.cos(freq * yy + phase)
+    elif cls == 6:  # radial rings
+        r = np.sqrt((xx - 16) ** 2 + (yy - 16) ** 2)
+        base = np.sin(freq * 2.0 * r + phase)
+    elif cls == 7:  # horizontal gradient
+        base = (xx / 31.0) * 2 - 1 + 0.3 * np.sin(phase)
+    elif cls == 8:  # vertical gradient
+        base = (yy / 31.0) * 2 - 1 + 0.3 * np.sin(phase)
+    else:  # low-frequency blobs
+        base = np.sin(0.2 * xx + phase) * np.sin(0.2 * yy + phase * 0.7)
+    img = np.zeros((3, 32, 32), dtype=np.float32)
+    tint = rng.uniform(0.5, 1.0, size=3)
+    for ch in range(3):
+        img[ch] = base * tint[ch]
+    img += rng.normal(0, 0.15, size=img.shape).astype(np.float32)
+    return np.clip(img * 0.5 + 0.5, 0, 1)
+
+
+def textures(n, seed=0):
+    """CIFAR-like dataset: (images [n,3,32,32] f32 in [0,1], labels [n])."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n)
+    images = np.stack([_texture(int(c), rng) for c in labels])
+    return images.astype(np.float32), labels.astype(np.int32)
+
+
+# 4 "topics" with characteristic vocabulary for the char-CNN.
+_TOPIC_WORDS = [
+    ["ball", "goal", "team", "score", "match", "league", "coach"],
+    ["stock", "market", "price", "trade", "profit", "bank", "share"],
+    ["neuron", "tensor", "model", "train", "learn", "layer", "grad"],
+    ["pasta", "sauce", "oven", "spice", "flour", "butter", "salt"],
+]
+ALPHABET = "abcdefghijklmnopqrstuvwxyz0123456789 .,;:!?'\"()-"
+ALPHABET_SIZE = 64  # one-hot rows (padded beyond len(ALPHABET))
+DOC_LEN = 256
+
+
+def chars(n, seed=0):
+    """Char-CNN dataset: (one-hot [n,64,256] f32, labels [n] in 0..3)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, size=n)
+    docs = np.zeros((n, ALPHABET_SIZE, DOC_LEN), dtype=np.float32)
+    idx = {ch: i for i, ch in enumerate(ALPHABET)}
+    for i, c in enumerate(labels):
+        words = []
+        while sum(len(w) + 1 for w in words) < DOC_LEN:
+            if rng.uniform() < 0.7:
+                words.append(str(rng.choice(_TOPIC_WORDS[int(c)])))
+            else:  # filler noise words
+                length = rng.integers(2, 7)
+                words.append("".join(rng.choice(list(ALPHABET[:26]), size=length)))
+        text = " ".join(words)[:DOC_LEN]
+        for pos, ch in enumerate(text):
+            j = idx.get(ch)
+            if j is not None:
+                docs[i, j, pos] = 1.0
+    return docs, labels.astype(np.int32)

@@ -1,0 +1,65 @@
+"""Python writer/reader for the DLKW binary weights container.
+
+Byte-compatible with `rust/src/model/weights.rs`:
+
+    magic "DLKW" | version u32 LE | header_len u32 LE | header JSON | blob
+
+Header entries: {"name", "dtype", "shape", "offset", "len", "scale"?}.
+Only f32 is emitted from Python (storage-dtype experiments happen on the
+rust side); the reader handles f32 for round-trip tests.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"DLKW"
+VERSION = 1
+
+
+def write_dlkw(params: dict) -> bytes:
+    """Serialize {name: np.ndarray} to DLKW bytes (f32 storage)."""
+    header = []
+    blob = bytearray()
+    for name in sorted(params):
+        arr = np.asarray(params[name], dtype=np.float32)
+        offset = len(blob)
+        payload = arr.tobytes()  # C-order little-endian on all our hosts
+        blob.extend(payload)
+        header.append(
+            {
+                "name": name,
+                "dtype": "f32",
+                "shape": list(arr.shape),
+                "offset": offset,
+                "len": len(payload),
+            }
+        )
+    header_bytes = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    return (
+        MAGIC
+        + struct.pack("<I", VERSION)
+        + struct.pack("<I", len(header_bytes))
+        + header_bytes
+        + bytes(blob)
+    )
+
+
+def read_dlkw(data: bytes) -> dict:
+    """Parse DLKW bytes back to {name: np.ndarray} (f32 only)."""
+    if data[:4] != MAGIC:
+        raise ValueError("bad DLKW magic")
+    version, header_len = struct.unpack_from("<II", data, 4)
+    if version != VERSION:
+        raise ValueError(f"unsupported DLKW version {version}")
+    header = json.loads(data[12 : 12 + header_len].decode("utf-8"))
+    blob = data[12 + header_len :]
+    out = {}
+    for entry in header:
+        if entry["dtype"] != "f32":
+            raise ValueError(f"python reader only supports f32, got {entry['dtype']}")
+        start, length = entry["offset"], entry["len"]
+        arr = np.frombuffer(blob[start : start + length], dtype="<f4")
+        out[entry["name"]] = arr.reshape(entry["shape"]).copy()
+    return out

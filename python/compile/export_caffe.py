@@ -1,0 +1,93 @@
+"""Caffe-JSON exporter: the companion of the rust importer.
+
+The paper's §3 workflow is Caffe -> JSON -> DeepLearningKit. This module
+produces that JSON from a DLK `Architecture` + parameter dict — i.e. it
+plays the role of the `caffe_export.py` dump script a Caffe user would
+run, letting the test-suite round-trip a *trained* model through the rust
+importer (python export -> rust import -> identical predictions).
+"""
+
+import numpy as np
+
+from .model import Architecture
+
+
+def export_caffe_json(arch: Architecture, params: dict, *, batch_hint: int = 1) -> dict:
+    """Serialize a 2-D CNN as a Caffe-vocabulary JSON export document.
+
+    Only the Caffe-expressible subset is supported: conv2d, relu,
+    max/avg pool, global avg pool, dense (InnerProduct), dropout, softmax.
+    Flatten is implicit in Caffe and therefore dropped.
+    """
+    if len(arch.input) != 3:
+        raise ValueError("caffe export needs [C,H,W] input models")
+
+    def blob(name):
+        arr = np.asarray(params[name], dtype=np.float32)
+        return {"shape": list(arr.shape), "data": [float(v) for v in arr.reshape(-1)]}
+
+    layers = []
+    for l in arch.layers:
+        if l.type == "conv2d":
+            layers.append(
+                {
+                    "name": l.name,
+                    "type": "Convolution",
+                    "convolution_param": {
+                        "num_output": l.out_ch,
+                        "kernel_size": l.k,
+                        "stride": l.stride,
+                        "pad": l.pad,
+                    },
+                    "blobs": [blob(f"{l.name}.w"), blob(f"{l.name}.b")],
+                }
+            )
+        elif l.type == "relu":
+            layers.append({"name": l.name, "type": "ReLU"})
+        elif l.type in ("max_pool2d", "avg_pool2d"):
+            layers.append(
+                {
+                    "name": l.name,
+                    "type": "Pooling",
+                    "pooling_param": {
+                        "pool": "MAX" if l.type == "max_pool2d" else "AVE",
+                        "kernel_size": l.k,
+                        "stride": l.stride,
+                        "pad": l.pad,
+                    },
+                }
+            )
+        elif l.type == "global_avg_pool":
+            layers.append(
+                {
+                    "name": l.name,
+                    "type": "Pooling",
+                    "pooling_param": {"pool": "AVE", "global_pooling": True},
+                }
+            )
+        elif l.type == "dense":
+            layers.append(
+                {
+                    "name": l.name,
+                    "type": "InnerProduct",
+                    "inner_product_param": {"num_output": l.out},
+                    "blobs": [blob(f"{l.name}.w"), blob(f"{l.name}.b")],
+                }
+            )
+        elif l.type == "dropout":
+            layers.append(
+                {"name": l.name, "type": "Dropout", "dropout_param": {"dropout_ratio": l.rate}}
+            )
+        elif l.type == "softmax":
+            layers.append({"name": l.name, "type": "Softmax"})
+        elif l.type == "flatten":
+            continue  # implicit in Caffe's InnerProduct
+        else:
+            raise ValueError(f"layer type `{l.type}` has no Caffe equivalent")
+
+    return {
+        "framework": "caffe",
+        "name": arch.name,
+        "input_dim": [batch_hint, *arch.input],
+        "layers": layers,
+    }

@@ -1,0 +1,35 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+These are the reproduction of the paper's Metal shader functions --
+"convolution, pooling, rectifier layer and softmax" (SS1) -- rethought for
+the TPU programming model (DESIGN.md SSHardware-Adaptation):
+
+- convolution is im2col + a *tiled MXU matmul* Pallas kernel, instead of
+  Metal threadgroup scalar loops;
+- BlockSpecs express the HBM<->VMEM schedule that Metal expressed with
+  threadgroup dispatch;
+- every kernel runs under ``interpret=True`` (CPU PJRT cannot execute
+  Mosaic custom-calls) and is validated against the pure-jnp oracles in
+  :mod:`ref`.
+"""
+
+from .conv1d import conv1d_pallas
+from .conv2d import conv2d_pallas
+from .matmul import matmul_pallas
+from .pool import avg_pool2d_pallas, global_avg_pool_pallas, max_pool2d_pallas
+from .quant import fake_quant_matmul_pallas, quantize_symmetric
+from .relu import relu_pallas
+from .softmax import softmax_pallas
+
+__all__ = [
+    "avg_pool2d_pallas",
+    "conv1d_pallas",
+    "conv2d_pallas",
+    "fake_quant_matmul_pallas",
+    "global_avg_pool_pallas",
+    "matmul_pallas",
+    "max_pool2d_pallas",
+    "quantize_symmetric",
+    "relu_pallas",
+    "softmax_pallas",
+]

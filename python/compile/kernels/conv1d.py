@@ -1,0 +1,36 @@
+"""1-D convolution (char-CNN / NLP path, paper roadmap item 9).
+
+Same im2col + MXU-matmul structure as :mod:`conv2d`, over ``[n, c, l]``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+
+
+def conv1d_pallas(x, w, b, *, stride=1, pad=0):
+    """Cross-correlation over the last axis.
+
+    Args:
+        x: ``[n, c, l]``.
+        w: ``[oc, c, k]``.
+        b: ``[oc]`` or None.
+    """
+    n, c, l = x.shape
+    oc, wc, k = w.shape
+    if wc != c:
+        raise ValueError(f"weight channels {wc} != input {c}")
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k,),
+        window_strides=(stride,),
+        padding=((pad, pad),),
+    )  # [n, c*k, ol]
+    _, feat, ol = patches.shape
+    pm = jnp.transpose(patches, (1, 0, 2)).reshape(feat, n * ol)
+    ym = matmul_pallas(w.reshape(oc, feat), pm)
+    y = ym.reshape(oc, n, ol).transpose(1, 0, 2)
+    if b is not None:
+        y = y + b[None, :, None]
+    return y

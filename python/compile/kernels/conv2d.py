@@ -1,0 +1,56 @@
+"""2-D convolution as im2col + the tiled MXU matmul kernel.
+
+Hardware adaptation (DESIGN.md): the paper's Metal shader walks the
+receptive field with scalar loops per threadgroup; on TPU we restructure
+so the inner loop is a 128-lane matmul:
+
+    patches = im2col(x)                # [N, C*k*k, OH*OW]  (XLA gather)
+    y[oc, :] = W[oc, C*k*k] @ patches  # Pallas tiled MXU matmul
+
+The patch extraction is pure data movement, which XLA fuses; all FLOPs go
+through :func:`matmul_pallas`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+
+
+def conv2d_pallas(x, w, b, *, stride=1, pad=0):
+    """Cross-correlation (Caffe convention) over NCHW.
+
+    Args:
+        x: input ``[n, c, h, w]``.
+        w: weights ``[oc, c, k, k]``.
+        b: bias ``[oc]`` or None.
+        stride, pad: square stride / symmetric zero padding.
+
+    Returns:
+        ``[n, oc, oh, ow]`` f32.
+    """
+    n, c, h, wd = x.shape
+    oc, wc, kh, kw = w.shape
+    if wc != c:
+        raise ValueError(f"weight in_ch {wc} != input channels {c}")
+    if kh != kw:
+        raise ValueError("square kernels only")
+    # Patches: [n, c*k*k, oh, ow]; feature order is (c, ky, kx) — matches
+    # both the Caffe blob layout and the rust im2col.
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+    )
+    _, feat, oh, ow = patches.shape
+    # One GEMM per batch element through the shared Pallas kernel:
+    # W[oc, feat] @ P[feat, oh*ow]. Batch is folded into the N dimension of
+    # a single matmul so the MXU sees one big [feat, n*oh*ow] operand.
+    pm = jnp.transpose(patches, (1, 0, 2, 3)).reshape(feat, n * oh * ow)
+    wm = w.reshape(oc, feat)
+    ym = matmul_pallas(wm, pm)  # [oc, n*oh*ow]
+    y = ym.reshape(oc, n, oh, ow).transpose(1, 0, 2, 3)
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y

@@ -1,0 +1,116 @@
+"""Tiled MXU matmul — the workhorse Pallas kernel.
+
+The paper's Metal convolution shader assigns an output tile per
+threadgroup and loops scalar multiply-adds. On TPU the same computation
+should be one `jnp.dot` per (bm x bn) output tile so it lands on the MXU
+systolic array; the BlockSpec index maps below are the HBM->VMEM schedule
+(grid dim 2 walks the K dimension, accumulating into the resident output
+tile -- the double-buffering analog of Metal's threadgroup staging).
+
+VMEM budget per grid step (defaults, f32):
+    x tile  bm*bk*4 = 128*512*4   = 256 KiB
+    y tile  bk*bn*4 = 512*128*4   = 256 KiB
+    o tile  bm*bn*4 = 128*128*4   =  64 KiB
+    total ~576 KiB  << 16 MiB VMEM  (see DESIGN.md SSPerf)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile caps: multiples of the 128-lane MXU dimension. Actual tiles
+# are chosen per problem by `_pick_tiles` to fill (but not bust) the VMEM
+# budget with as FEW grid steps as possible — each grid step costs a
+# while-loop iteration in the lowered HLO, so on small CNN-layer GEMMs the
+# step count, not the FLOPs, dominates latency (EXPERIMENTS.md §Perf).
+BM, BN, BK = 256, 2048, 2048
+
+# Per-step VMEM budget (bytes): x-tile + y-tile + o-tile must fit well
+# inside the 16 MiB VMEM of a TPU core, leaving room for double-buffering.
+VMEM_BUDGET = 6 * 1024 * 1024
+
+
+def _round_up(x, mult):
+    return -(-x // mult) * mult
+
+
+def _pick_tiles(m, k, n, bm_cap, bn_cap, bk_cap):
+    """Choose (bm, bn, bk): whole dims when they fit, shrinking toward the
+    caps/VMEM budget. Tiles are padded to multiples of 8 (sublane) to stay
+    MXU-friendly."""
+    bm = min(_round_up(m, 8), bm_cap)
+    bn = min(_round_up(n, 128), bn_cap)
+    bk = min(_round_up(k, 128), bk_cap)
+
+    def vmem(bm, bn, bk):
+        return 4 * (bm * bk + bk * bn + bm * bn)
+
+    # Shrink the largest tile dimension until the working set fits.
+    while vmem(bm, bn, bk) > VMEM_BUDGET and (bn > 128 or bk > 128 or bm > 8):
+        if bn >= bk and bn > 128:
+            bn //= 2
+        elif bk > 128:
+            bk //= 2
+        elif bm > 8:
+            bm //= 2
+        else:
+            break
+    return max(bm, 8), max(bn, 128), max(bk, 128)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, rows, cols):
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(x, y, *, bm=BM, bn=BN, bk=BK):
+    """`x[m,k] @ y[k,n]` via the tiled Pallas kernel.
+
+    Shapes need not be tile-aligned: inputs are zero-padded to the tile
+    grid and the result is sliced back. Zero padding is exact for matmul.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"matmul inner dims {k} vs {k2}")
+    bm, bn, bk = _pick_tiles(m, k, n, bm, bn, bk)
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    xp = _pad_to(x.astype(jnp.float32), gm * bm, gk * bk)
+    yp = _pad_to(y.astype(jnp.float32), gk * bk, gn * bn)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def dense_pallas(x, w, b):
+    """Fully-connected layer: `x[batch,in] @ w.T[in,out] + b`.
+
+    Weight layout `[out, in]` (Caffe InnerProduct / rust `model` crate
+    convention).
+    """
+    return matmul_pallas(x, w.T) + b[None, :]

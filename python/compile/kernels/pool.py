@@ -1,0 +1,113 @@
+"""Pooling kernels (max / average / global-average) over NCHW.
+
+Caffe pooling semantics to match the rust reference backend: ceil output
+sizing, overhanging windows clipped to the input, padding excluded from
+average counts.
+
+The Pallas kernel grids over (plane-tile) where each step holds one
+``[bp, h, w]`` stack of image planes in VMEM and reduces its windows with
+statically unrolled shifted-slice maxima/sums — the TPU-friendly shape of
+the paper's per-threadgroup pooling shader (vector ops over lanes instead
+of scalar window walks).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_out(size, k, stride, pad):
+    """Caffe ceil-mode output size with the pad clamp: the last window must
+    start strictly inside `size + pad`."""
+    o = max(0, (size + 2 * pad - k + stride - 1)) // stride + 1
+    # Clamp: the last window must start strictly inside `size + pad`
+    # (applied unconditionally, unlike Caffe's pad-only guard, so the
+    # degenerate stride>k pad=0 case cannot produce an empty window).
+    if o > 1 and (o - 1) * stride >= size + pad:
+        o -= 1
+    return o
+
+
+def _pool_kernel(x_ref, o_ref, *, k, stride, pad, h, w, oh, ow, is_max):
+    """Reduce one stack of planes. x_ref: [bp, ph, pw] (pre-padded)."""
+    x = x_ref[...]
+    neg = jnp.float32(-3.0e38)
+    if is_max:
+        acc = jnp.full(o_ref.shape, neg, dtype=jnp.float32)
+    else:
+        acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+        cnt = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            # Window cell (ky,kx) contributes x[:, oy*stride+ky, ox*stride+kx]
+            # where the index is within the *padded* plane; validity mask
+            # marks cells that fall on real (unpadded, in-bounds) pixels.
+            ys = ky + stride * jnp.arange(oh)
+            xs = kx + stride * jnp.arange(ow)
+            cell = x[:, ys[:, None], xs[None, :]]
+            valid = (
+                (ys[:, None] >= pad)
+                & (ys[:, None] < pad + h)
+                & (xs[None, :] >= pad)
+                & (xs[None, :] < pad + w)
+            )
+            if is_max:
+                acc = jnp.maximum(acc, jnp.where(valid[None], cell, neg))
+            else:
+                acc = acc + jnp.where(valid[None], cell, 0.0)
+                cnt = cnt + valid[None].astype(jnp.float32)
+    if is_max:
+        o_ref[...] = acc
+    else:
+        o_ref[...] = acc / jnp.maximum(cnt, 1.0)
+
+
+def _pool2d(x, k, stride, pad, is_max):
+    n, c, h, w = x.shape
+    oh = _pool_out(h, k, stride, pad)
+    ow = _pool_out(w, k, stride, pad)
+    planes = x.reshape(n * c, h, w).astype(jnp.float32)
+    # Pad spatially so every window index is in range: the last window
+    # starts at (o-1)*stride and spans k.
+    ph = max(h + 2 * pad, (oh - 1) * stride + k)
+    pw = max(w + 2 * pad, (ow - 1) * stride + k)
+    planes = jnp.pad(planes, ((0, 0), (pad, ph - h - pad), (pad, pw - w - pad)))
+
+    # Plane tile: whole spatial extent, bp planes per grid step. Fill a
+    # ~4 MiB VMEM budget per step — grid steps are while-loop iterations in
+    # the lowered HLO, so fewer/fatter steps win (see matmul.py).
+    plane_bytes = 4 * ph * pw
+    bp = max(8, min(planes.shape[0], (4 * 1024 * 1024) // max(plane_bytes, 1)))
+    gp = -(-planes.shape[0] // bp)
+    planes = jnp.pad(planes, ((0, gp * bp - planes.shape[0]), (0, 0), (0, 0)))
+
+    kernel = functools.partial(
+        _pool_kernel, k=k, stride=stride, pad=pad, h=h, w=w, oh=oh, ow=ow, is_max=is_max
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gp,),
+        in_specs=[pl.BlockSpec((bp, ph, pw), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bp, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp * bp, oh, ow), jnp.float32),
+        interpret=True,
+    )(planes)
+    return out[: n * c].reshape(n, c, oh, ow)
+
+
+def max_pool2d_pallas(x, *, k, stride, pad=0):
+    """Max pooling, Caffe ceil semantics."""
+    return _pool2d(x, k, stride, pad, is_max=True)
+
+
+def avg_pool2d_pallas(x, *, k, stride, pad=0):
+    """Average pooling with in-bounds divisor (Caffe AVE, pad-excluded)."""
+    return _pool2d(x, k, stride, pad, is_max=False)
+
+
+def global_avg_pool_pallas(x):
+    """NCHW -> [N, C] global average (NIN classifier head)."""
+    n, c, h, w = x.shape
+    return avg_pool2d_pallas(x, k=max(h, w), stride=max(h, w), pad=0).reshape(n, c)

@@ -1,0 +1,25 @@
+"""Simulated low-precision matmul (paper roadmap item 2: "use lower
+resolution on floating point in order to increase performance and support
+larger models", citing Gupta et al. and Warden's eight-bit argument).
+
+`fake_quant_matmul_pallas` quantizes both operands to symmetric int8
+grids before the MXU matmul — the standard way to measure the *accuracy*
+cost of an int8 deployment while the arithmetic itself stays f32 in
+interpret mode. E7 sweeps this against f32/f16 storage.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+
+
+def quantize_symmetric(x, bits=8):
+    """Fake-quantize to a symmetric `bits`-bit grid: returns x_hat."""
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+    return jnp.round(x / scale).clip(-qmax, qmax) * scale
+
+
+def fake_quant_matmul_pallas(x, y, *, bits=8):
+    """Matmul with both operands fake-quantized to `bits` bits."""
+    return matmul_pallas(quantize_symmetric(x, bits), quantize_symmetric(y, bits))

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These use only stock `jax.lax`/`jnp` ops (no Pallas) and are the
+correctness contract: pytest + hypothesis assert each kernel matches its
+oracle across swept shapes/strides/paddings. They mirror the semantics of
+the rust CPU backend (`rust/src/nn/`) exactly — Caffe cross-correlation,
+ceil-mode pooling with pad-excluded averages.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def dense_ref(x, w, b):
+    return matmul_ref(x, w.T) + b[None, :]
+
+
+def conv2d_ref(x, w, b, *, stride=1, pad=0):
+    """NCHW cross-correlation via lax.conv_general_dilated."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def conv1d_ref(x, w, b, *, stride=1, pad=0):
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride,),
+        padding=((pad, pad),),
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+    if b is not None:
+        y = y + b[None, :, None]
+    return y
+
+
+def _pool_out(size, k, stride, pad):
+    o = max(0, (size + 2 * pad - k + stride - 1)) // stride + 1
+    # Clamp: the last window must start strictly inside `size + pad`
+    # (applied unconditionally, unlike Caffe's pad-only guard, so the
+    # degenerate stride>k pad=0 case cannot produce an empty window).
+    if o > 1 and (o - 1) * stride >= size + pad:
+        o -= 1
+    return o
+
+
+def _pool2d_ref_np(x, k, stride, pad, mode):
+    """Numpy reference with explicit Caffe semantics (ceil, clip, pad-excl)."""
+    x = np.asarray(x, dtype=np.float32)
+    n, c, h, w = x.shape
+    oh = _pool_out(h, k, stride, pad)
+    ow = _pool_out(w, k, stride, pad)
+    out = np.zeros((n, c, oh, ow), dtype=np.float32)
+    for oy in range(oh):
+        for ox in range(ow):
+            y0 = oy * stride - pad
+            x0 = ox * stride - pad
+            ys = slice(max(0, y0), min(h, y0 + k))
+            xs = slice(max(0, x0), min(w, x0 + k))
+            window = x[:, :, ys, xs]
+            if window.size == 0:
+                continue
+            if mode == "max":
+                out[:, :, oy, ox] = window.max(axis=(2, 3))
+            else:
+                out[:, :, oy, ox] = window.mean(axis=(2, 3))
+    return jnp.asarray(out)
+
+
+def max_pool2d_ref(x, *, k, stride, pad=0):
+    return _pool2d_ref_np(x, k, stride, pad, "max")
+
+
+def avg_pool2d_ref(x, *, k, stride, pad=0):
+    return _pool2d_ref_np(x, k, stride, pad, "avg")
+
+
+def global_avg_pool_ref(x):
+    return jnp.mean(x.astype(jnp.float32), axis=(2, 3))
+
+
+def relu_ref(x):
+    return jnp.maximum(x.astype(jnp.float32), 0.0)
+
+
+def softmax_ref(x):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)
+
+
+def fake_quant_ref(x, bits=8):
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+    return jnp.round(x / scale).clip(-qmax, qmax) * scale

@@ -1,0 +1,45 @@
+"""Rectifier kernel — the literal analog of the paper's Figure 3 Metal
+shader (`rectifier_linear`, `max(0.0, x)` elementwise).
+
+Gridded over leading-dim tiles so an arbitrarily large activation tensor
+streams through VMEM tile by tile.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128x128 f32 tile = 64 KiB of VMEM.
+TILE = 128
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+def relu_pallas(x):
+    """Elementwise `max(0, x)` for any shape (flattened to 2-D tiles).
+
+    Row-tile height adapts to a ~4 MiB VMEM budget so typical CNN
+    activation tensors run in one or two grid steps (grid steps lower to
+    while-loop iterations — see matmul.py)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # View as [rows, TILE] columns.
+    rows = -(-n // TILE)
+    padded = jnp.pad(flat, (0, rows * TILE - n)).reshape(rows, TILE)
+    # Rows per grid step under the budget.
+    tile_rows = max(TILE, min(rows, (4 * 1024 * 1024) // (4 * TILE)))
+    grid = -(-rows // tile_rows)
+    padded = jnp.pad(padded, ((0, grid * tile_rows - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        _relu_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_rows, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_rows, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(padded.shape, jnp.float32),
+        interpret=True,
+    )(padded.astype(jnp.float32))
+    return out.reshape(-1)[:n].reshape(shape)

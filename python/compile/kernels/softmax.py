@@ -1,0 +1,35 @@
+"""Row-wise softmax kernel (paper §1 operator list).
+
+Grids over row tiles; each step holds a ``[br, classes]`` tile in VMEM and
+does the max-subtract / exp / normalize dance entirely on-chip.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_pallas(x):
+    """Softmax over the last axis of a ``[batch, classes]`` array."""
+    b, c = x.shape
+    br = 128
+    gb = -(-b // br)
+    # Pad rows (padded rows produce garbage we slice off; they cannot NaN
+    # because exp(0-0)=1 rows normalize to uniform).
+    xp = jnp.pad(x.astype(jnp.float32), ((0, gb * br - b), (0, 0)))
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(gb,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gb * br, c), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:b]

@@ -1,0 +1,356 @@
+"""Layer-2 JAX model: layer IR + forward pass.
+
+Mirrors the rust `model::Architecture` IR exactly (same layer vocabulary,
+same parameter naming `<layer>.w` / `<layer>.b`, same manifest JSON) so
+that the Rust coordinator, the rust CPU reference backend and these JAX
+graphs agree on what a model is.
+
+`forward(arch, params, x, use_pallas=True)` is the graph that
+`aot.py` lowers to HLO; with `use_pallas=False` it runs on stock jnp ops
+(used by the trainer, where interpret-mode Pallas would be needlessly
+slow, and as an L2-level cross-check of the kernels).
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    avg_pool2d_pallas,
+    conv1d_pallas,
+    conv2d_pallas,
+    global_avg_pool_pallas,
+    max_pool2d_pallas,
+    relu_pallas,
+    softmax_pallas,
+)
+from .kernels import ref
+from .kernels.matmul import dense_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """One layer: name + type + attributes (mirror of rust LayerKind)."""
+
+    name: str
+    type: str
+    out_ch: int = 0
+    k: int = 0
+    stride: int = 1
+    pad: int = 0
+    out: int = 0
+    rate: float = 0.5
+
+    def to_json(self):
+        d = {"name": self.name, "type": self.type}
+        if self.type in ("conv2d", "conv1d"):
+            d.update(out_ch=self.out_ch, k=self.k, stride=self.stride, pad=self.pad)
+        elif self.type in ("max_pool2d", "avg_pool2d"):
+            d.update(k=self.k, stride=self.stride, pad=self.pad)
+        elif self.type == "max_pool1d":
+            d.update(k=self.k, stride=self.stride)
+        elif self.type == "dense":
+            d.update(out=self.out)
+        elif self.type == "dropout":
+            d.update(rate=self.rate)
+        return d
+
+
+@dataclasses.dataclass
+class Architecture:
+    """Sequential model IR (mirror of rust `model::Architecture`)."""
+
+    name: str
+    input: list  # [C,H,W] or [C,L], no batch dim
+    layers: list
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "input": list(self.input),
+            "layers": [l.to_json() for l in self.layers],
+        }
+
+    # ---- shape / parameter bookkeeping (mirrors rust exactly) ----------
+
+    def shapes(self):
+        """Shape after every layer, batch dim excluded."""
+        out = [list(self.input)]
+        cur = list(self.input)
+        for l in self.layers:
+            cur = _next_shape(cur, l)
+            out.append(list(cur))
+        return out
+
+    def num_classes(self):
+        last = self.shapes()[-1]
+        assert len(last) == 1, f"output is not a class vector: {last}"
+        return last[0]
+
+    def parameters(self):
+        """[(name, shape)] in execution order."""
+        shapes = self.shapes()
+        params = []
+        for i, l in enumerate(self.layers):
+            inp = shapes[i]
+            if l.type == "conv2d":
+                params.append((f"{l.name}.w", (l.out_ch, inp[0], l.k, l.k)))
+                params.append((f"{l.name}.b", (l.out_ch,)))
+            elif l.type == "conv1d":
+                params.append((f"{l.name}.w", (l.out_ch, inp[0], l.k)))
+                params.append((f"{l.name}.b", (l.out_ch,)))
+            elif l.type == "dense":
+                in_f = int(np.prod(inp))
+                params.append((f"{l.name}.w", (l.out, in_f)))
+                params.append((f"{l.name}.b", (l.out,)))
+        return params
+
+    def init_params(self, seed=0):
+        """He-initialized parameter dict."""
+        rng = np.random.default_rng(seed)
+        params = {}
+        for name, shape in self.parameters():
+            if name.endswith(".b"):
+                params[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                fan_in = int(np.prod(shape[1:])) or 1
+                scale = math.sqrt(2.0 / fan_in)
+                params[name] = jnp.asarray(
+                    rng.normal(0.0, scale, size=shape), jnp.float32
+                )
+        return params
+
+
+def _pool_out(size, k, stride, pad):
+    o = max(0, (size + 2 * pad - k + stride - 1)) // stride + 1
+    # Clamp: the last window must start strictly inside `size + pad`
+    # (applied unconditionally, unlike Caffe's pad-only guard, so the
+    # degenerate stride>k pad=0 case cannot produce an empty window).
+    if o > 1 and (o - 1) * stride >= size + pad:
+        o -= 1
+    return o
+
+
+def _next_shape(inp, l: Layer):
+    if l.type == "conv2d":
+        oh = (inp[1] + 2 * l.pad - l.k) // l.stride + 1
+        ow = (inp[2] + 2 * l.pad - l.k) // l.stride + 1
+        return [l.out_ch, oh, ow]
+    if l.type == "conv1d":
+        return [l.out_ch, (inp[1] + 2 * l.pad - l.k) // l.stride + 1]
+    if l.type in ("relu", "dropout"):
+        return inp
+    if l.type in ("max_pool2d", "avg_pool2d"):
+        return [inp[0], _pool_out(inp[1], l.k, l.stride, l.pad), _pool_out(inp[2], l.k, l.stride, l.pad)]
+    if l.type == "max_pool1d":
+        return [inp[0], (inp[1] - l.k) // l.stride + 1]
+    if l.type == "global_avg_pool":
+        return [inp[0]]
+    if l.type == "dense":
+        return [l.out]
+    if l.type == "flatten":
+        return [int(np.prod(inp))]
+    if l.type == "softmax":
+        assert len(inp) == 1, f"softmax expects a vector, got {inp}"
+        return inp
+    raise ValueError(f"unknown layer type {l.type}")
+
+
+def forward(arch: Architecture, params: dict, x, *, use_pallas: bool = True):
+    """Run the model. `x` is `[batch] + arch.input`.
+
+    With `use_pallas=True` all FLOP-bearing ops go through the Layer-1
+    Pallas kernels; otherwise stock jnp ops (identical semantics).
+    """
+    for l in arch.layers:
+        if l.type == "conv2d":
+            w, b = params[f"{l.name}.w"], params[f"{l.name}.b"]
+            if use_pallas:
+                x = conv2d_pallas(x, w, b, stride=l.stride, pad=l.pad)
+            else:
+                x = ref.conv2d_ref(x, w, b, stride=l.stride, pad=l.pad)
+        elif l.type == "conv1d":
+            w, b = params[f"{l.name}.w"], params[f"{l.name}.b"]
+            if use_pallas:
+                x = conv1d_pallas(x, w, b, stride=l.stride, pad=l.pad)
+            else:
+                x = ref.conv1d_ref(x, w, b, stride=l.stride, pad=l.pad)
+        elif l.type == "relu":
+            x = relu_pallas(x) if use_pallas else ref.relu_ref(x)
+        elif l.type == "max_pool2d":
+            if use_pallas:
+                x = max_pool2d_pallas(x, k=l.k, stride=l.stride, pad=l.pad)
+            else:
+                x = _pool2d_jnp(x, l.k, l.stride, l.pad, "max")
+        elif l.type == "avg_pool2d":
+            if use_pallas:
+                x = avg_pool2d_pallas(x, k=l.k, stride=l.stride, pad=l.pad)
+            else:
+                x = _pool2d_jnp(x, l.k, l.stride, l.pad, "avg")
+        elif l.type == "max_pool1d":
+            x = _pool1d_jnp(x, l.k, l.stride)
+        elif l.type == "global_avg_pool":
+            if use_pallas:
+                x = global_avg_pool_pallas(x)
+            else:
+                x = ref.global_avg_pool_ref(x)
+        elif l.type == "dense":
+            w, b = params[f"{l.name}.w"], params[f"{l.name}.b"]
+            x = dense_pallas(x, w, b) if use_pallas else ref.dense_ref(x, w, b)
+        elif l.type == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif l.type == "dropout":
+            pass  # inference no-op
+        elif l.type == "softmax":
+            x = softmax_pallas(x) if use_pallas else ref.softmax_ref(x)
+        else:
+            raise ValueError(f"unknown layer type {l.type}")
+    return x
+
+
+def logits_forward(arch: Architecture, params: dict, x):
+    """Training-path forward: jnp ops only, stops before softmax."""
+    sub = Architecture(arch.name, arch.input, [l for l in arch.layers if l.type != "softmax"])
+    return forward(sub, params, x, use_pallas=False)
+
+
+def _pool2d_jnp(x, k, stride, pad, mode):
+    """Ceil-mode Caffe pooling on stock jnp (trainer path)."""
+    n, c, h, w = x.shape
+    oh = _pool_out(h, k, stride, pad)
+    ow = _pool_out(w, k, stride, pad)
+    ph = max(h + 2 * pad, (oh - 1) * stride + k)
+    pw = max(w + 2 * pad, (ow - 1) * stride + k)
+    neg = jnp.float32(-3.0e38)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, ph - h - pad), (pad, pw - w - pad)))
+    acc = None
+    cnt = None
+    for ky in range(k):
+        for kx in range(k):
+            ys = ky + stride * np.arange(oh)
+            xs = kx + stride * np.arange(ow)
+            cell = xp[:, :, ys[:, None], xs[None, :]]
+            valid = (
+                (ys[:, None] >= pad)
+                & (ys[:, None] < pad + h)
+                & (xs[None, :] >= pad)
+                & (xs[None, :] < pad + w)
+            )
+            vm = jnp.asarray(valid)[None, None]
+            if mode == "max":
+                cell = jnp.where(vm, cell, neg)
+                acc = cell if acc is None else jnp.maximum(acc, cell)
+            else:
+                cell = jnp.where(vm, cell, 0.0)
+                acc = cell if acc is None else acc + cell
+                c1 = vm.astype(jnp.float32)
+                cnt = c1 if cnt is None else cnt + c1
+    if mode == "max":
+        return acc
+    return acc / jnp.maximum(cnt, 1.0)
+
+
+def _pool1d_jnp(x, k, stride):
+    n, c, l = x.shape
+    ol = (l - k) // stride + 1
+    acc = None
+    for ki in range(k):
+        cell = x[:, :, ki : ki + (ol - 1) * stride + 1 : stride]
+        acc = cell if acc is None else jnp.maximum(acc, cell)
+    return acc
+
+
+# ---- zoo builders (must mirror rust/src/model/zoo.rs exactly) -------------
+
+
+def lenet() -> Architecture:
+    """LeNet on 28x28 grayscale (paper: Theano-trained LeNet / MNIST)."""
+    L = Layer
+    return Architecture(
+        "lenet-mnist",
+        [1, 28, 28],
+        [
+            L("conv1", "conv2d", out_ch=20, k=5, stride=1, pad=0),
+            L("relu1", "relu"),
+            L("pool1", "max_pool2d", k=2, stride=2, pad=0),
+            L("conv2", "conv2d", out_ch=50, k=5, stride=1, pad=0),
+            L("relu2", "relu"),
+            L("pool2", "max_pool2d", k=2, stride=2, pad=0),
+            L("flatten", "flatten"),
+            L("fc1", "dense", out=500),
+            L("relu3", "relu"),
+            L("fc2", "dense", out=10),
+            L("softmax", "softmax"),
+        ],
+    )
+
+
+def nin_cifar10() -> Architecture:
+    """Network-in-Network / CIFAR-10 — the paper's 20-layer E1 network."""
+    L = Layer
+    return Architecture(
+        "nin-cifar10",
+        [3, 32, 32],
+        [
+            L("conv1", "conv2d", out_ch=192, k=5, stride=1, pad=2),
+            L("relu1", "relu"),
+            L("cccp1", "conv2d", out_ch=160, k=1, stride=1, pad=0),
+            L("relu_cccp1", "relu"),
+            L("cccp2", "conv2d", out_ch=96, k=1, stride=1, pad=0),
+            L("relu_cccp2", "relu"),
+            L("pool1", "max_pool2d", k=3, stride=2, pad=0),
+            L("drop1", "dropout", rate=0.5),
+            L("conv2", "conv2d", out_ch=192, k=5, stride=1, pad=2),
+            L("relu2", "relu"),
+            L("cccp3", "conv2d", out_ch=192, k=1, stride=1, pad=0),
+            L("relu_cccp3", "relu"),
+            L("cccp4", "conv2d", out_ch=192, k=1, stride=1, pad=0),
+            L("relu_cccp4", "relu"),
+            L("pool2", "avg_pool2d", k=3, stride=2, pad=0),
+            L("drop2", "dropout", rate=0.5),
+            L("conv3", "conv2d", out_ch=192, k=3, stride=1, pad=1),
+            L("relu3", "relu"),
+            L("cccp5", "conv2d", out_ch=192, k=1, stride=1, pad=0),
+            L("relu_cccp5", "relu"),
+            L("cccp6", "conv2d", out_ch=10, k=1, stride=1, pad=0),
+            L("relu_cccp6", "relu"),
+            L("gap", "global_avg_pool"),
+            L("softmax", "softmax"),
+        ],
+    )
+
+
+def char_cnn() -> Architecture:
+    """Character-level 1-D CNN (Zhang & LeCun; paper roadmap item 9)."""
+    L = Layer
+    return Architecture(
+        "char-cnn",
+        [64, 256],
+        [
+            L("conv1", "conv1d", out_ch=128, k=7, stride=1, pad=0),
+            L("relu1", "relu"),
+            L("pool1", "max_pool1d", k=3, stride=3),
+            L("conv2", "conv1d", out_ch=128, k=7, stride=1, pad=0),
+            L("relu2", "relu"),
+            L("pool2", "max_pool1d", k=3, stride=3),
+            L("conv3", "conv1d", out_ch=128, k=3, stride=1, pad=0),
+            L("relu3", "relu"),
+            L("pool3", "max_pool1d", k=3, stride=3),
+            L("flatten", "flatten"),
+            L("fc1", "dense", out=256),
+            L("relu4", "relu"),
+            L("drop1", "dropout", rate=0.5),
+            L("fc2", "dense", out=4),
+            L("softmax", "softmax"),
+        ],
+    )
+
+
+ZOO = {
+    "lenet-mnist": lenet,
+    "nin-cifar10": nin_cifar10,
+    "char-cnn": char_cnn,
+}

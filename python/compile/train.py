@@ -1,0 +1,99 @@
+"""Build-time trainer (hand-rolled Adam; no optax offline).
+
+Trains the small zoo models on the procedural datasets so the serving
+examples run a *real trained model* with a real accuracy number — the
+paper's premise is exactly this asymmetry: training happens elsewhere
+("piles of wood of energy"), the device only runs inference ("less energy
+than lighting a match").
+
+Entry points:
+    train_lenet(steps=...)    -> params, accuracy   (glyph digits)
+    train_char_cnn(steps=...) -> params, accuracy   (topic chars)
+
+Training uses the jnp forward path (`use_pallas=False`): interpret-mode
+Pallas is numerically identical but orders of magnitude slower, and L1
+kernels are validated separately by the pytest suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import Architecture, char_cnn, lenet, logits_forward
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new_params = {
+        k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params
+    }
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def _train(
+    arch: Architecture,
+    gen,
+    *,
+    steps=300,
+    batch=64,
+    lr=1e-3,
+    seed=0,
+    eval_n=512,
+    log_every=50,
+    verbose=True,
+):
+    """Generic training loop. `gen(n, seed)` yields (x, labels)."""
+    params = arch.init_params(seed)
+
+    @jax.jit
+    def loss_fn(params, x, y):
+        return cross_entropy(logits_forward(arch, params, x), y)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    state = adam_init(params)
+    losses = []
+    for step in range(steps):
+        x, y = gen(batch, seed=seed * 100003 + step + 1)
+        loss, grads = grad_fn(params, jnp.asarray(x), jnp.asarray(y))
+        params, state = adam_update(params, grads, state, lr=lr)
+        losses.append(float(loss))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"  step {step:4d}  loss {float(loss):.4f}")
+
+    # Held-out accuracy.
+    xe, ye = gen(eval_n, seed=987654321 + seed)
+    logits = jax.jit(functools.partial(logits_forward, arch))(params, jnp.asarray(xe))
+    acc = float(np.mean(np.argmax(np.asarray(logits), axis=-1) == ye))
+    if verbose:
+        print(f"  held-out accuracy: {acc:.3f}")
+    return params, acc, losses
+
+
+def train_lenet(steps=300, batch=64, seed=0, verbose=True):
+    """Train LeNet on the glyph digits. Returns (params, accuracy, losses)."""
+    return _train(lenet(), data.glyphs, steps=steps, batch=batch, seed=seed, verbose=verbose)
+
+
+def train_char_cnn(steps=200, batch=32, seed=0, verbose=True):
+    """Train the char-CNN on the topic corpus."""
+    return _train(
+        char_cnn(), data.chars, steps=steps, batch=batch, lr=5e-4, seed=seed, verbose=verbose
+    )

@@ -1,0 +1,67 @@
+"""Procedural dataset tests: determinism, ranges, learnability signal."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_glyphs_shapes_and_range():
+    x, y = data.glyphs(16, seed=3)
+    assert x.shape == (16, 1, 28, 28)
+    assert y.shape == (16,)
+    assert x.dtype == np.float32
+    assert (x >= 0).all() and (x <= 1).all()
+    assert ((y >= 0) & (y < 10)).all()
+
+
+def test_glyphs_deterministic():
+    a = data.glyphs(8, seed=42)
+    b = data.glyphs(8, seed=42)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    c = data.glyphs(8, seed=43)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_glyphs_classes_distinguishable():
+    """Mean images of different digits must differ meaningfully."""
+    x, y = data.glyphs(500, seed=1)
+    means = [x[y == d].mean(axis=0) for d in range(10) if (y == d).sum() > 3]
+    assert len(means) == 10
+    dists = []
+    for i in range(len(means)):
+        for j in range(i + 1, len(means)):
+            dists.append(np.abs(means[i] - means[j]).mean())
+    assert min(dists) > 0.005, f"classes overlap: {min(dists)}"
+
+
+def test_textures_shapes_and_determinism():
+    x, y = data.textures(12, seed=9)
+    assert x.shape == (12, 3, 32, 32)
+    assert ((y >= 0) & (y < 10)).all()
+    x2, y2 = data.textures(12, seed=9)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_textures_all_classes_generate():
+    x, y = data.textures(200, seed=5)
+    assert len(np.unique(y)) == 10
+    assert np.isfinite(x).all()
+
+
+def test_chars_one_hot():
+    x, y = data.chars(6, seed=2)
+    assert x.shape == (6, 64, 256)
+    assert ((y >= 0) & (y < 4)).all()
+    # Each position has at most one hot row.
+    col_sums = x.sum(axis=1)
+    assert (col_sums <= 1.0 + 1e-6).all()
+    # Documents are non-empty.
+    assert (x.sum(axis=(1, 2)) > 50).all()
+
+
+def test_chars_deterministic():
+    a = data.chars(4, seed=7)
+    b = data.chars(4, seed=7)
+    np.testing.assert_array_equal(a[0], b[0])

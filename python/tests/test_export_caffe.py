@@ -1,0 +1,49 @@
+"""Caffe exporter tests (schema + numeric fidelity)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile.export_caffe import export_caffe_json
+from compile.model import Architecture, Layer, char_cnn, lenet
+
+
+def test_lenet_exports_caffe_schema():
+    arch = lenet()
+    params = arch.init_params(0)
+    doc = export_caffe_json(arch, params)
+    assert doc["framework"] == "caffe"
+    assert doc["input_dim"] == [1, 1, 28, 28]
+    types = [l["type"] for l in doc["layers"]]
+    # flatten dropped; conv/relu/pool/ip/softmax present in Caffe vocabulary
+    assert "Convolution" in types and "InnerProduct" in types and "Softmax" in types
+    assert "Flatten" not in types
+    # Blob shapes follow Caffe [out, in, k, k] convention.
+    conv1 = doc["layers"][0]
+    assert conv1["blobs"][0]["shape"] == [20, 1, 5, 5]
+    assert conv1["blobs"][1]["shape"] == [20]
+
+
+def test_export_is_json_serializable_and_faithful():
+    arch = lenet()
+    params = arch.init_params(1)
+    doc = export_caffe_json(arch, params)
+    text = json.dumps(doc)  # must not raise
+    back = json.loads(text)
+    w = np.array(back["layers"][0]["blobs"][0]["data"], dtype=np.float32)
+    np.testing.assert_allclose(
+        w, np.asarray(params["conv1.w"]).reshape(-1), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_conv1d_models_rejected():
+    arch = char_cnn()
+    with pytest.raises(ValueError):
+        export_caffe_json(arch, arch.init_params(0))
+
+
+def test_unsupported_layer_rejected():
+    arch = Architecture("bad", [1, 8, 8], [Layer("p", "max_pool1d", k=2, stride=2)])
+    with pytest.raises(ValueError):
+        export_caffe_json(arch, {})

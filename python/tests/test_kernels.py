@@ -1,0 +1,283 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/paddings/dtypes — the python half of the
+correctness contract (the rust half checks the CPU backend and the PJRT
+runtime against each other).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    avg_pool2d_pallas,
+    conv1d_pallas,
+    conv2d_pallas,
+    fake_quant_matmul_pallas,
+    global_avg_pool_pallas,
+    matmul_pallas,
+    max_pool2d_pallas,
+    quantize_symmetric,
+    relu_pallas,
+    softmax_pallas,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---- matmul ---------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(
+        matmul_pallas(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_tile_aligned_and_tiny():
+    rng = np.random.default_rng(0)
+    for m, k, n in [(128, 512, 128), (256, 1024, 256), (1, 1, 1), (1, 7, 1)]:
+        x, y = rand(rng, m, k), rand(rng, k, n)
+        np.testing.assert_allclose(
+            matmul_pallas(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-3
+        )
+
+
+def test_matmul_rejects_bad_inner_dim():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        matmul_pallas(rand(rng, 4, 5), rand(rng, 6, 3))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_dtypes(dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(33, 65)), dtype)
+    y = jnp.asarray(rng.normal(size=(65, 17)), dtype)
+    got = matmul_pallas(x, y)
+    expect = ref.matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, expect, rtol=tol, atol=tol)
+
+
+# ---- conv2d ---------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 5),
+    oc=st.integers(1, 6),
+    hw=st.integers(5, 20),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 2),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_matches_ref(n, c, oc, hw, k, stride, pad, seed):
+    hypothesis.assume(hw + 2 * pad >= k)
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, c, hw, hw)
+    w = rand(rng, oc, c, k, k)
+    b = rand(rng, oc)
+    np.testing.assert_allclose(
+        conv2d_pallas(x, w, b, stride=stride, pad=pad),
+        ref.conv2d_ref(x, w, b, stride=stride, pad=pad),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+def test_conv2d_nin_shapes():
+    """The exact conv shapes of the paper's NIN net."""
+    rng = np.random.default_rng(7)
+    x = rand(rng, 1, 3, 32, 32)
+    w = rand(rng, 192, 3, 5, 5)
+    b = rand(rng, 192)
+    y = conv2d_pallas(x, w, b, stride=1, pad=2)
+    assert y.shape == (1, 192, 32, 32)
+    np.testing.assert_allclose(
+        y, ref.conv2d_ref(x, w, b, stride=1, pad=2), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_conv2d_shape_errors():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        conv2d_pallas(rand(rng, 1, 3, 8, 8), rand(rng, 4, 2, 3, 3), None)
+    with pytest.raises(ValueError):
+        conv2d_pallas(rand(rng, 1, 3, 8, 8), rand(rng, 4, 3, 3, 5), None)
+
+
+# ---- conv1d ---------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 5),
+    oc=st.integers(1, 6),
+    l=st.integers(6, 40),
+    k=st.sampled_from([1, 3, 7]),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31),
+)
+def test_conv1d_matches_ref(n, c, oc, l, k, stride, pad, seed):
+    hypothesis.assume(l + 2 * pad >= k)
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, c, l)
+    w = rand(rng, oc, c, k)
+    b = rand(rng, oc)
+    np.testing.assert_allclose(
+        conv1d_pallas(x, w, b, stride=stride, pad=pad),
+        ref.conv1d_ref(x, w, b, stride=stride, pad=pad),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+# ---- pooling --------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 4),
+    hw=st.integers(4, 24),
+    k=st.integers(2, 4),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 1),
+    seed=st.integers(0, 2**31),
+)
+def test_max_pool2d_matches_ref(n, c, hw, k, stride, pad, seed):
+    hypothesis.assume(pad < k)
+    hypothesis.assume(hw + 2 * pad >= k)
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, c, hw, hw)
+    np.testing.assert_allclose(
+        max_pool2d_pallas(x, k=k, stride=stride, pad=pad),
+        ref.max_pool2d_ref(x, k=k, stride=stride, pad=pad),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 4),
+    hw=st.integers(4, 24),
+    k=st.integers(2, 4),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 1),
+    seed=st.integers(0, 2**31),
+)
+def test_avg_pool2d_matches_ref(n, c, hw, k, stride, pad, seed):
+    hypothesis.assume(pad < k)
+    hypothesis.assume(hw + 2 * pad >= k)
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, c, hw, hw)
+    np.testing.assert_allclose(
+        avg_pool2d_pallas(x, k=k, stride=stride, pad=pad),
+        ref.avg_pool2d_ref(x, k=k, stride=stride, pad=pad),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_pool_nin_cases():
+    """NIN's exact pools: 3x3 stride-2 ceil mode on 32 and 15."""
+    rng = np.random.default_rng(3)
+    for hw in [32, 15]:
+        x = rand(rng, 2, 8, hw, hw)
+        got = max_pool2d_pallas(x, k=3, stride=2)
+        expect = ref.max_pool2d_ref(x, k=3, stride=2)
+        assert got.shape == expect.shape
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.integers(1, 3), c=st.integers(1, 8), h=st.integers(1, 12), w=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_global_avg_pool_matches_ref(n, c, h, w, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, c, h, w)
+    np.testing.assert_allclose(
+        global_avg_pool_pallas(x), ref.global_avg_pool_ref(x), rtol=1e-4, atol=1e-5
+    )
+
+
+# ---- relu / softmax / quant ------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    dims=st.lists(st.integers(1, 20), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31),
+)
+def test_relu_matches_ref(dims, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, *dims)
+    np.testing.assert_array_equal(relu_pallas(x), ref.relu_ref(x))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    b=st.integers(1, 200), c=st.integers(1, 32), seed=st.integers(0, 2**31)
+)
+def test_softmax_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, c) * 3.0
+    got = softmax_pallas(x)
+    np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.sum(np.asarray(got), axis=-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_large_logits_stable():
+    x = jnp.asarray([[1000.0, 1001.0, 999.0]])
+    got = np.asarray(softmax_pallas(x))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got.sum(), 1.0, rtol=1e-5)
+
+
+def test_quantize_symmetric_error_bound():
+    rng = np.random.default_rng(11)
+    x = rand(rng, 64, 64)
+    xq = quantize_symmetric(x, bits=8)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(xq - x))) <= scale * 0.5 + 1e-6
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(bits=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31))
+def test_fake_quant_matmul_error_shrinks_with_bits(bits, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, 24, 36), rand(rng, 36, 16)
+    exact = np.asarray(ref.matmul_ref(x, y))
+    got = np.asarray(fake_quant_matmul_pallas(x, y, bits=bits))
+    rel = np.abs(got - exact).mean() / (np.abs(exact).mean() + 1e-9)
+    # Coarse bound: mean relative error well under 2^-(bits-4).
+    assert rel < 2.0 ** -(bits - 4), f"bits={bits} rel={rel}"

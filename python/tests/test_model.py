@@ -1,0 +1,93 @@
+"""L2 tests: architecture IR, shape bookkeeping, forward-path parity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.model import ZOO, char_cnn, forward, lenet, logits_forward, nin_cifar10
+
+
+def test_lenet_shapes_and_params():
+    arch = lenet()
+    shapes = arch.shapes()
+    assert shapes[0] == [1, 28, 28]
+    assert shapes[-1] == [10]
+    assert arch.num_classes() == 10
+    # Same canonical count as the rust zoo test.
+    total = sum(int(np.prod(s)) for _, s in arch.parameters())
+    assert total == 520 + 25050 + 400500 + 5010
+
+
+def test_nin_matches_paper_depth():
+    arch = nin_cifar10()
+    assert arch.shapes()[-1] == [10]
+    # 9 convs, ~966k params.
+    convs = [l for l in arch.layers if l.type == "conv2d"]
+    assert len(convs) == 9
+    total = sum(int(np.prod(s)) for _, s in arch.parameters())
+    assert 900_000 < total < 1_050_000
+
+
+def test_char_cnn_shapes():
+    arch = char_cnn()
+    assert arch.shapes()[0] == [64, 256]
+    assert arch.num_classes() == 4
+
+
+@pytest.mark.parametrize("model_id", list(ZOO))
+def test_init_params_match_declared_shapes(model_id):
+    arch = ZOO[model_id]()
+    params = arch.init_params(0)
+    declared = dict(arch.parameters())
+    assert set(params) == set(declared)
+    for name, arr in params.items():
+        assert tuple(arr.shape) == tuple(declared[name]), name
+
+
+def test_forward_pallas_vs_jnp_parity_lenet():
+    arch = lenet()
+    params = arch.init_params(1)
+    x, _ = data.glyphs(3, seed=5)
+    a = np.asarray(forward(arch, params, jnp.asarray(x), use_pallas=True))
+    b = np.asarray(forward(arch, params, jnp.asarray(x), use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_forward_pallas_vs_jnp_parity_char_cnn():
+    arch = char_cnn()
+    params = arch.init_params(2)
+    x, _ = data.chars(2, seed=5)
+    a = np.asarray(forward(arch, params, jnp.asarray(x), use_pallas=True))
+    b = np.asarray(forward(arch, params, jnp.asarray(x), use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_forward_outputs_probabilities():
+    arch = lenet()
+    params = arch.init_params(3)
+    x, _ = data.glyphs(4, seed=6)
+    probs = np.asarray(forward(arch, params, jnp.asarray(x), use_pallas=False))
+    assert probs.shape == (4, 10)
+    np.testing.assert_allclose(probs.sum(axis=-1), 1.0, rtol=1e-5)
+    assert (probs >= 0).all()
+
+
+def test_logits_forward_drops_softmax():
+    arch = lenet()
+    params = arch.init_params(4)
+    x, _ = data.glyphs(2, seed=7)
+    logits = np.asarray(logits_forward(arch, params, jnp.asarray(x)))
+    # Logits should NOT be normalized.
+    assert not np.allclose(logits.sum(axis=-1), 1.0)
+
+
+def test_manifest_json_matches_rust_schema():
+    arch = lenet()
+    j = arch.to_json()
+    assert j["name"] == "lenet-mnist"
+    assert j["input"] == [1, 28, 28]
+    types = [l["type"] for l in j["layers"]]
+    assert types[0] == "conv2d" and types[-1] == "softmax"
+    conv = j["layers"][0]
+    assert set(conv) == {"name", "type", "out_ch", "k", "stride", "pad"}

@@ -1,0 +1,35 @@
+"""Trainer tests: loss decreases, accuracy beats chance quickly."""
+
+import numpy as np
+
+from compile.train import adam_init, adam_update, cross_entropy, train_lenet
+
+import jax.numpy as jnp
+
+
+def test_cross_entropy_known_value():
+    logits = jnp.asarray([[10.0, 0.0, 0.0]])
+    labels = jnp.asarray([0])
+    assert float(cross_entropy(logits, labels)) < 1e-3
+    wrong = jnp.asarray([2])
+    assert float(cross_entropy(logits, wrong)) > 5.0
+
+
+def test_adam_moves_toward_minimum():
+    # Minimize (w - 3)^2 with Adam.
+    params = {"w": jnp.asarray(0.0)}
+    state = adam_init(params)
+    for _ in range(400):
+        grads = {"w": 2 * (params["w"] - 3.0)}
+        params, state = adam_update(params, grads, state, lr=0.05)
+    assert abs(float(params["w"]) - 3.0) < 0.05
+
+
+def test_short_training_learns():
+    """40 steps must already beat chance (10%) comfortably."""
+    params, acc, losses = train_lenet(steps=40, batch=32, verbose=False)
+    assert losses[-1] < losses[0], "loss did not decrease"
+    assert acc > 0.3, f"accuracy {acc} not above chance"
+    # Parameters are finite.
+    for k, v in params.items():
+        assert np.isfinite(np.asarray(v)).all(), k

@@ -1,0 +1,70 @@
+//! E3 — paper Figures 10–12: the energy asymmetry between *training* a
+//! deep network ("piles of wood", the quoted tweet about per-night energy)
+//! and *running* one inference ("less energy than lighting a match").
+//!
+//! Regenerated from the analytical energy model over FLOP counts and the
+//! calibrated device tiers.
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::energy::{inference_energy, training_energy};
+use deeplearningkit::metrics::Table;
+use deeplearningkit::model::{alexnet_class, nin_cifar10};
+use deeplearningkit::{device, model};
+
+fn main() {
+    bench_header("E3 (Figures 10-12)", "energy to train vs energy to run a CNN");
+
+    let titan = device::tier("nvidia-titanx").unwrap();
+    let phone5s = device::tier("powervr-g6430").unwrap();
+    let phone6s = device::tier("powervr-gt7600").unwrap();
+
+    let workloads: Vec<(&str, model::Architecture, usize, u64)> = vec![
+        // (label, arch, train batch, train steps)
+        ("NIN-CIFAR10", nin_cifar10(), 128, 120_000),
+        ("AlexNet-class (ImageNet)", alexnet_class(), 256, 450_000),
+    ];
+
+    let mut table = Table::new(
+        "train once (Titan X) vs run once (iPhone)",
+        &["model", "phase", "device", "energy (J)", "paper units"],
+    );
+    for (label, arch, batch, steps) in &workloads {
+        let flops = arch.flops().unwrap() as f64;
+        let train = training_energy(&titan, flops, *batch, *steps);
+        table.row(&[
+            label.to_string(),
+            "train".into(),
+            titan.marketing.into(),
+            format!("{:.2e}", train.joules),
+            format!("{:.1} kg firewood", train.firewood_kg()),
+        ]);
+        for tier in [&phone5s, &phone6s] {
+            let infer = inference_energy(tier, flops);
+            table.row(&[
+                label.to_string(),
+                "infer x1".into(),
+                tier.marketing.into(),
+                format!("{:.3}", infer.joules),
+                format!("{:.5} matches", infer.matches()),
+            ]);
+        }
+        let infer6s = inference_energy(&phone6s, flops);
+        let ratio = train.joules / infer6s.joules;
+        println!(
+            "{label}: train/infer energy asymmetry = {ratio:.2e} (figures 10-12 shape: >=1e6)"
+        );
+        assert!(ratio > 1e6, "{label} asymmetry too small: {ratio}");
+        // Fig 12's claim: one inference costs less than lighting a match.
+        assert!(infer6s.matches() < 1.0, "{label} inference exceeds a match");
+    }
+    table.print();
+
+    // Figure 10's "piles of wood per night": one night of Titan-X training.
+    let night = 12.0 * 3600.0 * titan.watts;
+    println!(
+        "\none night of Titan-X training = {:.1} MJ = {:.1} kg firewood (Fig. 10's tweet)",
+        night / 1e6,
+        night / deeplearningkit::energy::FIREWOOD_JOULES_PER_KG
+    );
+    println!("E3 shape holds");
+}

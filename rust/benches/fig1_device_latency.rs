@@ -1,0 +1,95 @@
+//! E1 — paper §1.1: "Calculation time to run through a 20 layer deep
+//! convolutional neural network model for image recognition went from
+//! approximately 2 seconds [iPhone 5S] to less than 100 milliseconds
+//! [iPhone 6S]" — one order of magnitude.
+//!
+//! Regeneration: measure the real end-to-end NIN-CIFAR10 batch-1 latency
+//! on this host (PJRT path and rust CPU baseline), then project the
+//! workload through the calibrated device tiers. The reproduced claim is
+//! the *ratio* and the two absolute anchors (≈2 s, <100 ms).
+
+use deeplearningkit::bench::{bench_header, Bench};
+use deeplearningkit::metrics::{fmt_us, Table};
+use deeplearningkit::nn::CpuExecutor;
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::{artifacts_dir, data, device, model};
+
+fn main() {
+    bench_header("E1 (fig: §1.1 result)", "NIN 20-layer latency, iPhone 5S vs 6S");
+
+    let nin = model::nin_cifar10();
+    let flops = nin.flops().unwrap();
+    // Memory traffic: weights once + activations through the layer stack.
+    let bytes = (nin.param_count().unwrap() * 4 + 20_000_000) as u64;
+    println!(
+        "workload: {} (depth {}), {:.0} MFLOPs/image, ~{} MB touched\n",
+        nin.name,
+        nin.depth(),
+        flops as f64 / 1e6,
+        bytes / 1_000_000
+    );
+
+    // --- measured on this host --------------------------------------------
+    let mut measured = Table::new(
+        "measured on this host (batch 1)",
+        &["path", "latency", "throughput"],
+    );
+    let input = data::textures(1, 7).inputs;
+
+    let engine = Engine::start().unwrap();
+    engine.load(artifacts_dir().join("models").join("nin-cifar10")).unwrap();
+    let m_pjrt = Bench::quick().run(|| engine.infer("nin-cifar10", input.clone()).unwrap());
+    measured.row(&[
+        "PJRT (AOT Pallas kernels)".into(),
+        fmt_us(m_pjrt.mean_us),
+        format!("{:.1} img/s", 1e6 / m_pjrt.mean_us),
+    ]);
+
+    let cpu = CpuExecutor::with_random_weights(nin.clone(), 42).unwrap();
+    let m_cpu = Bench::quick().run(|| cpu.forward(&input).unwrap());
+    measured.row(&[
+        "rust CPU baseline (im2col)".into(),
+        fmt_us(m_cpu.mean_us),
+        format!("{:.1} img/s", 1e6 / m_cpu.mean_us),
+    ]);
+    measured.print();
+    engine.shutdown();
+
+    // --- projected through device tiers (the paper's measurement) ----------
+    let mut table = Table::new(
+        "projected through device tiers (roofline model, DESIGN.md §1)",
+        &["device", "latency", "paper reference"],
+    );
+    let mut t5s = 0.0;
+    let mut t6s = 0.0;
+    for tier in device::TIERS {
+        if tier.name == "nvidia-titanx" {
+            continue;
+        }
+        let est = device::project_latency(tier, flops, bytes);
+        let secs = est.latency.as_secs_f64();
+        if tier.name == "powervr-g6430" {
+            t5s = secs;
+        }
+        if tier.name == "powervr-gt7600" {
+            t6s = secs;
+        }
+        let paper = match tier.name {
+            "powervr-g6430" => "≈2 s (paper)",
+            "powervr-gt7600" => "<100 ms (paper)",
+            _ => "—",
+        };
+        table.row(&[
+            tier.marketing.to_string(),
+            fmt_us(secs * 1e6),
+            paper.to_string(),
+        ]);
+    }
+    table.print();
+    let ratio = t5s / t6s;
+    println!("\n5S → 6S improvement: {ratio:.1}x (paper: \"1 order of magnitude\")");
+    assert!(t5s > 1.0 && t5s < 4.0, "5S anchor off: {t5s}");
+    assert!(t6s < 0.1, "6S anchor off: {t6s}");
+    assert!(ratio >= 10.0, "improvement below an order of magnitude: {ratio}");
+    println!("E1 shape holds: 5S ≈ 2 s, 6S < 100 ms, ≥10x improvement");
+}

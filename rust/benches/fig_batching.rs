@@ -1,0 +1,75 @@
+//! E8 — paper §1.1's responsiveness bar: "100 milliseconds … is what
+//! Jakob Nielsen stated is one of 3 important response times that a user
+//! feels a system reacts instantaneously", combined with §2's concern that
+//! on-device latency budgets leave no slack.
+//!
+//! Regenerated as a dynamic-batching sweep on the full serving stack:
+//! batch-size limit vs throughput, p50/p99 latency, and SLO attainment
+//! against the 100 ms bar.
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::metrics::Table;
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{artifacts_dir, data};
+use std::time::{Duration, Instant};
+
+fn main() {
+    bench_header("E8 (§1.1 Nielsen bar)", "dynamic batching: throughput vs latency vs 100 ms SLO");
+
+    let requests = 512usize;
+    let batch_data = data::glyphs(requests, 31_337);
+
+    let mut table = Table::new(
+        &format!("serving sweep ({requests} requests, burst waves of 16)"),
+        &["max batch", "throughput", "p50", "p95", "p99", "mean batch", "SLO(100ms)"],
+    );
+    for max_batch in [1usize, 2, 4, 8, 16, 32] {
+        let engine = Engine::start().unwrap();
+        let mut coord = Coordinator::new(
+            engine,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_delay: Duration::from_millis(2),
+                    queue_cap: 4096,
+                },
+            },
+        );
+        coord.serve_model(artifacts_dir().join("models").join("lenet-mnist")).unwrap();
+
+        let t0 = Instant::now();
+        for wave in 0..requests / 16 {
+            let mut tickets = Vec::with_capacity(16);
+            for i in wave * 16..(wave + 1) * 16 {
+                let input = Tensor::new(
+                    Shape::new(&[1usize, 28, 28]),
+                    batch_data.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+                )
+                .unwrap();
+                tickets.push(coord.submit("lenet-mnist", input).unwrap());
+            }
+            for t in tickets {
+                t.wait().unwrap();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = coord.stats();
+        table.row(&[
+            format!("{max_batch}"),
+            format!("{:.0} req/s", requests as f64 / wall),
+            format!("{:.1}ms", stats.p50_us as f64 / 1000.0),
+            format!("{:.1}ms", stats.p95_us as f64 / 1000.0),
+            format!("{:.1}ms", stats.p99_us as f64 / 1000.0),
+            format!("{:.2}", stats.mean_batch_size),
+            format!("{:.1}%", stats.slo_attainment * 100.0),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape: batching amortizes the per-dispatch cost — throughput rises\n\
+         with max batch until the batch execution itself dominates latency;\n\
+         the 100 ms Nielsen bar bounds how much batching a mobile UI can take."
+    );
+}

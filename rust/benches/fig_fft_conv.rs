@@ -1,0 +1,78 @@
+//! E6 — paper roadmap item 1: "use FFT-based convolution — with
+//! precalculated convolution filters", citing fbfft (Vasilache et al.),
+//! which showed FFT wins for large kernels and loses for small ones.
+//!
+//! Regenerated as a direct vs im2col vs FFT sweep over kernel size on the
+//! CPU backend, reporting where the crossover falls plus the analytic
+//! FLOP-model columns.
+
+use deeplearningkit::bench::{bench_header, Bench};
+use deeplearningkit::metrics::{fmt_us, Table};
+use deeplearningkit::nn::{conv2d_direct, conv2d_fft, conv2d_im2col, fft_conv_flops, Conv2dParams};
+use deeplearningkit::tensor::{Shape, Tensor};
+
+fn main() {
+    bench_header("E6 (roadmap 1)", "FFT-based convolution vs direct/im2col, crossover by kernel size");
+
+    let (n, c, oc, hw) = (1usize, 16usize, 16usize, 32usize);
+    let x = Tensor::randn(Shape::nchw(n, c, hw, hw), 1, 1.0);
+
+    let mut table = Table::new(
+        &format!("conv strategies on {n}x{c}x{hw}x{hw}, {oc} output channels"),
+        &["kernel", "direct", "im2col", "fft", "winner", "direct MFLOPs", "fft MFLOPs (model)"],
+    );
+    let mut crossover: Option<usize> = None;
+    for k in [3usize, 5, 7, 9, 11, 13] {
+        let pad = k / 2;
+        let w = Tensor::randn(&[oc, c, k, k][..], 2, 0.2);
+        let params = Conv2dParams::new(1, pad);
+        let b = Bench::quick();
+        let m_direct = b.run(|| conv2d_direct(&x, &w, None, params).unwrap());
+        let m_im2col = b.run(|| conv2d_im2col(&x, &w, None, params).unwrap());
+        let m_fft = b.run(|| conv2d_fft(&x, &w, None, params).unwrap());
+        let best = [
+            ("direct", m_direct.mean_us),
+            ("im2col", m_im2col.mean_us),
+            ("fft", m_fft.mean_us),
+        ]
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+        if best.0 == "fft" && crossover.is_none() {
+            crossover = Some(k);
+        }
+        let direct_flops = 2.0 * (oc * hw * hw * c * k * k) as f64 / 1e6;
+        let fft_flops = fft_conv_flops(n, c, hw, hw, oc, k, pad) as f64 / 1e6;
+        table.row(&[
+            format!("{k}x{k}"),
+            fmt_us(m_direct.mean_us),
+            fmt_us(m_im2col.mean_us),
+            fmt_us(m_fft.mean_us),
+            best.0.to_string(),
+            format!("{direct_flops:.0}"),
+            format!("{fft_flops:.0}"),
+        ]);
+    }
+    table.print();
+
+    match crossover {
+        Some(k) => println!(
+            "\ncrossover: FFT becomes the fastest strategy at k={k} — matches the\n\
+             fbfft result the paper cites (FFT wins for larger kernels; small\n\
+             3x3/1x1 kernels favor im2col, which is what NIN mostly uses)."
+        ),
+        None => println!(
+            "\nno crossover in this sweep — on this host im2col holds to k=13;\n\
+             the analytic FLOP columns still show the asymptotic FFT advantage\n\
+             (direct grows with k², FFT is flat in k)."
+        ),
+    }
+    // The model columns must show the asymptotic shape regardless of host.
+    let f3 = fft_conv_flops(n, c, hw, hw, oc, 3, 1) as f64;
+    let f13 = fft_conv_flops(n, c, hw, hw, oc, 13, 6) as f64;
+    let d3 = (oc * hw * hw * c * 9) as f64;
+    let d13 = (oc * hw * hw * c * 169) as f64;
+    assert!(d13 / d3 > 15.0, "direct cost must grow ~k^2");
+    assert!(f13 / f3 < 3.0, "fft cost must stay ~flat in k");
+    println!("E6 shape holds: direct ~k² vs FFT ~flat");
+}

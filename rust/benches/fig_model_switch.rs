@@ -1,0 +1,90 @@
+//! E5 — paper §2: "one need to intelligently (and very rapid load them
+//! from SSD into GPU accessible RAM) switch between several Deep Learning
+//! Models, or if there is enough capacity one can run several models in
+//! parallel on the same GPU."
+//!
+//! Regenerated as a model-switch trace over the three artifact models,
+//! swept across cache byte-budgets and eviction policies; reports hit
+//! rate, mean switch latency, and the hit/miss latency gap that motivates
+//! the paper's "rapid load" concern.
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::cache::{ModelCache, PolicyKind};
+use deeplearningkit::metrics::{fmt_bytes, fmt_us, Table};
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::testutil::XorShiftRng;
+use deeplearningkit::{artifacts_dir, data};
+
+const MODELS: &[&str] = &["lenet-mnist", "char-cnn", "nin-cifar10"];
+
+fn main() {
+    bench_header("E5 (§2 model switching)", "SSD->RAM model switch latency under a byte budget");
+
+    // Zipf-ish access trace: lenet hot, char warm, nin cold.
+    let mut rng = XorShiftRng::new(2025);
+    let trace: Vec<&str> = (0..60)
+        .map(|_| {
+            let r = rng.next_f64();
+            if r < 0.55 {
+                MODELS[0]
+            } else if r < 0.85 {
+                MODELS[1]
+            } else {
+                MODELS[2]
+            }
+        })
+        .collect();
+
+    let digit = data::glyphs(1, 1).inputs;
+    let text = data::chars(1, 1).inputs;
+    let image = data::textures(1, 1).inputs;
+
+    let mut table = Table::new(
+        "switch trace (60 accesses, 55/30/15% mix) by budget x policy",
+        &["budget", "policy", "hit rate", "mean access", "mean miss (load)", "evictions"],
+    );
+    // Budgets all >= the largest model (3.9 MB NIN); smaller budgets are a
+    // hard error by design (the model simply cannot run).
+    for budget in [4_500_000usize, 6_000_000, 16_000_000] {
+        for policy in [PolicyKind::Lru, PolicyKind::Lfu] {
+            let engine = Engine::start().unwrap();
+            let mut cache = ModelCache::new(engine, budget, policy);
+            for id in MODELS {
+                cache.register(id, artifacts_dir().join("models").join(id));
+            }
+            let mut total_us = 0.0f64;
+            let mut miss_us = 0.0f64;
+            let mut misses = 0u32;
+            for &id in &trace {
+                let input = match id {
+                    "char-cnn" => text.clone(),
+                    "nin-cifar10" => image.clone(),
+                    _ => digit.clone(),
+                };
+                let t0 = std::time::Instant::now();
+                let (_, access) = cache.infer(id, input).unwrap();
+                let us = t0.elapsed().as_micros() as f64;
+                total_us += us;
+                if !access.hit {
+                    misses += 1;
+                    miss_us += access.load_time.as_micros() as f64;
+                }
+            }
+            let stats = cache.stats();
+            table.row(&[
+                fmt_bytes(budget as u64),
+                policy.name().to_string(),
+                format!("{:.0}%", stats.hit_rate() * 100.0),
+                fmt_us(total_us / trace.len() as f64),
+                if misses > 0 { fmt_us(miss_us / misses as f64) } else { "—".into() },
+                format!("{}", stats.evictions),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nshape: bigger budget -> higher hit rate -> lower mean access; a miss\n\
+         costs a full SSD-load + PJRT compile (the paper's 'very rapid load'\n\
+         concern), which is why the cache + selector exist."
+    );
+}

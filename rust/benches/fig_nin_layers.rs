@@ -1,0 +1,64 @@
+//! E9 — paper §1's operator inventory ("convolution, pooling, rectifier
+//! layer and softmax") on its flagship network: a per-layer latency and
+//! FLOP breakdown of the 20-layer NIN forward pass — the profile behind
+//! the paper's suspicion that "the Metal compute drivers for the GPU
+//! weren't fine tuned".
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::metrics::{fmt_us, Table};
+use deeplearningkit::model::nin_cifar10;
+use deeplearningkit::nn::CpuExecutor;
+use deeplearningkit::tensor::{Shape, Tensor};
+
+fn main() {
+    bench_header("E9 (§1 operator set)", "per-layer breakdown of the 20-layer NIN forward pass");
+
+    let exec = CpuExecutor::with_random_weights(nin_cifar10(), 42).unwrap();
+    let x = Tensor::randn(Shape::nchw(1, 3, 32, 32), 3, 1.0);
+    // Warm up, then a timed pass (per-layer timers inside).
+    exec.forward(&x).unwrap();
+    let (_, timings) = exec.forward_timed(&x).unwrap();
+
+    let total_us: f64 = timings.iter().map(|t| t.micros).sum();
+    let total_macs: u64 = timings.iter().map(|t| t.macs).sum();
+
+    let mut table = Table::new(
+        "NIN-CIFAR10 batch-1 forward, rust CPU backend (im2col)",
+        &["layer", "op", "time", "% time", "MMACs", "GMAC/s"],
+    );
+    for t in &timings {
+        table.row(&[
+            t.name.clone(),
+            t.kind.to_string(),
+            fmt_us(t.micros),
+            format!("{:.1}%", 100.0 * t.micros / total_us),
+            format!("{:.1}", t.macs as f64 / 1e6),
+            if t.macs > 0 {
+                format!("{:.2}", t.macs as f64 / t.micros / 1e3)
+            } else {
+                "—".into()
+            },
+        ]);
+    }
+    table.print();
+    println!(
+        "\ntotal: {} for {:.0} MMACs ({:.2} GMAC/s effective)",
+        fmt_us(total_us),
+        total_macs as f64 / 1e6,
+        total_macs as f64 / total_us / 1e3
+    );
+
+    // Shape assertions: the three 5x5/3x3 conv blocks dominate; pooling,
+    // relu and softmax are noise — exactly why the paper's Metal work put
+    // the effort into the convolution shader.
+    let conv_us: f64 = timings.iter().filter(|t| t.kind == "conv2d").map(|t| t.micros).sum();
+    assert!(
+        conv_us / total_us > 0.8,
+        "convolution share {:.1}% (expected >80%)",
+        100.0 * conv_us / total_us
+    );
+    let conv1 = timings.iter().find(|t| t.name == "conv1").unwrap();
+    let conv2 = timings.iter().find(|t| t.name == "conv2").unwrap();
+    assert!(conv1.macs + conv2.macs > total_macs / 3, "5x5 convs must carry most MACs");
+    println!("E9 shape holds: convolution dominates (>80% of forward time)");
+}

@@ -1,0 +1,127 @@
+//! Bench-harness substrate (criterion replacement for this offline build).
+//!
+//! Each `rust/benches/*.rs` target is a plain binary (`harness = false`)
+//! that uses [`Bench`] to time closures with warmup + repeated measurement
+//! and prints paper-style tables via [`crate::metrics::Table`]. Statistics
+//! reported: mean, median, p95, std-dev, iterations.
+
+use std::time::{Duration, Instant};
+
+/// Result of benchmarking one closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub iters: u32,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub stddev_us: f64,
+    pub min_us: f64,
+}
+
+impl Measurement {
+    pub fn fmt_mean(&self) -> String {
+        crate::metrics::fmt_us(self.mean_us)
+    }
+}
+
+/// Timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    pub target_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_millis(800),
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for slow end-to-end cases.
+    pub fn quick() -> Bench {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 20, target_time: Duration::from_millis(300) }
+    }
+
+    /// Time `f`, returning per-iteration statistics. The closure's return
+    /// value is passed through `std::hint::black_box` to keep the optimizer
+    /// honest.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples_us: Vec<f64> = Vec::new();
+        let started = Instant::now();
+        while (samples_us.len() as u32) < self.min_iters
+            || (started.elapsed() < self.target_time && (samples_us.len() as u32) < self.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        Self::stats(&samples_us)
+    }
+
+    fn stats(samples: &[f64]) -> Measurement {
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Measurement {
+            iters: n as u32,
+            mean_us: mean,
+            median_us: sorted[n / 2],
+            p95_us: sorted[((n as f64 * 0.95) as usize).min(n - 1)],
+            stddev_us: var.sqrt(),
+            min_us: sorted[0],
+        }
+    }
+}
+
+/// Header printed at the top of every bench binary, naming the paper
+/// artifact being regenerated.
+pub fn bench_header(experiment_id: &str, paper_artifact: &str) {
+    println!();
+    println!("######################################################################");
+    println!("# {experiment_id}: {paper_artifact}");
+    println!("# (DeepLearningKit reproduction — see DESIGN.md §5, EXPERIMENTS.md)");
+    println!("######################################################################");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let b = Bench { warmup_iters: 0, min_iters: 3, max_iters: 3, target_time: Duration::ZERO };
+        let m = b.run(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(m.mean_us >= 1_800.0, "mean={}", m.mean_us);
+        assert_eq!(m.iters, 3);
+    }
+
+    #[test]
+    fn stats_computed_correctly() {
+        let m = Bench::stats(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(m.iters, 5);
+        assert!((m.mean_us - 22.0).abs() < 1e-9);
+        assert_eq!(m.median_us, 3.0);
+        assert_eq!(m.min_us, 1.0);
+        assert_eq!(m.p95_us, 100.0);
+    }
+
+    #[test]
+    fn respects_min_iters() {
+        let b = Bench { warmup_iters: 0, min_iters: 7, max_iters: 100, target_time: Duration::ZERO };
+        let m = b.run(|| 1 + 1);
+        assert!(m.iters >= 7);
+    }
+}

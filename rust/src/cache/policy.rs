@@ -1,0 +1,114 @@
+//! Cache eviction policies: LRU and LFU (E5 compares them on model-switch
+//! traces).
+
+use std::collections::BTreeMap;
+
+/// Which policy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    Lfu,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "lru",
+            PolicyKind::Lfu => "lfu",
+        }
+    }
+}
+
+/// Bookkeeping for victim selection.
+pub struct EvictionPolicy {
+    kind: PolicyKind,
+    /// LRU: last-touch tick. LFU: touch count.
+    score: BTreeMap<String, u64>,
+    tick: u64,
+}
+
+impl EvictionPolicy {
+    pub fn new(kind: PolicyKind) -> EvictionPolicy {
+        EvictionPolicy { kind, score: BTreeMap::new(), tick: 0 }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// Record an access.
+    pub fn touch(&mut self, id: &str) {
+        self.tick += 1;
+        match self.kind {
+            PolicyKind::Lru => {
+                self.score.insert(id.to_string(), self.tick);
+            }
+            PolicyKind::Lfu => {
+                *self.score.entry(id.to_string()).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// Remove bookkeeping for an evicted entry.
+    pub fn forget(&mut self, id: &str) {
+        self.score.remove(id);
+    }
+
+    /// Choose the victim among `candidates` (lowest score; ties broken by
+    /// name for determinism).
+    pub fn pick_victim<'a>(&self, candidates: impl Iterator<Item = &'a str>) -> Option<String> {
+        candidates
+            .map(|id| (self.score.get(id).copied().unwrap_or(0), id))
+            .min()
+            .map(|(_, id)| id.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lru);
+        p.touch("a");
+        p.touch("b");
+        p.touch("a"); // a is now most recent
+        let victim = p.pick_victim(["a", "b"].into_iter()).unwrap();
+        assert_eq!(victim, "b");
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lfu);
+        p.touch("a");
+        p.touch("a");
+        p.touch("a");
+        p.touch("b"); // b touched once but most recently
+        let victim = p.pick_victim(["a", "b"].into_iter()).unwrap();
+        assert_eq!(victim, "b");
+    }
+
+    #[test]
+    fn forget_removes_state() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lfu);
+        p.touch("a");
+        p.touch("a");
+        p.forget("a");
+        p.touch("b");
+        // `a` has score 0 after forget, so it loses to b.
+        assert_eq!(p.pick_victim(["a", "b"].into_iter()).unwrap(), "a");
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let p = EvictionPolicy::new(PolicyKind::Lru);
+        assert_eq!(p.pick_victim(["z", "m", "a"].into_iter()).unwrap(), "a");
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let p = EvictionPolicy::new(PolicyKind::Lru);
+        assert!(p.pick_victim(std::iter::empty()).is_none());
+    }
+}

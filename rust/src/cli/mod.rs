@@ -1,0 +1,217 @@
+//! CLI substrate: a small declarative argument parser (subcommands, typed
+//! flags, `--help` generation). Used by the `dlk` binary, the examples and
+//! the bench harness.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative specification of one flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// A parsed command line: flag values + positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("flag --{name} expects an unsigned integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("flag --{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A command with flags; `Command::new("serve").flag(...).parse(argv)`.
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    /// A flag that takes a value, with an optional default.
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Command {
+        self.flags.push(FlagSpec { name, help, default, takes_value: true });
+        self
+    }
+
+    /// A boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Command {
+        self.flags.push(FlagSpec { name, help, default: None, takes_value: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}", self.name, self.about);
+        let _ = writeln!(out, "\nFLAGS:");
+        for f in &self.flags {
+            let val = if f.takes_value { " <value>" } else { "" };
+            let def = match f.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            let _ = writeln!(out, "  --{}{val}\n      {}{def}", f.name, f.help);
+        }
+        out
+    }
+
+    /// Parse an argument vector (not including the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> crate::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                // Support --name=value and --name value.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("flag --{name} expects a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), value);
+                } else {
+                    anyhow::ensure!(inline.is_none(), "switch --{name} does not take a value");
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the server")
+            .flag("model", "model id", Some("nin-cifar10"))
+            .flag("batch", "max batch", Some("8"))
+            .switch("verbose", "log more")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("model"), Some("nin-cifar10"));
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 8);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&argv(&["--model", "lenet", "--batch=4", "--verbose"])).unwrap();
+        assert_eq!(a.get("model"), Some("lenet"));
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 4);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["input.json", "--batch", "2", "out.bin"])).unwrap();
+        assert_eq!(a.positional(), &["input.json".to_string(), "out.bin".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors_with_usage() {
+        let e = cmd().parse(&argv(&["--nope"])).unwrap_err().to_string();
+        assert!(e.contains("unknown flag --nope"));
+        assert!(e.contains("FLAGS:"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = cmd().parse(&argv(&["--model"])).unwrap_err().to_string();
+        assert!(e.contains("expects a value"));
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = cmd().parse(&argv(&["--batch", "many"])).unwrap();
+        assert!(a.get_usize("batch", 0).is_err());
+    }
+
+    #[test]
+    fn switch_rejects_value() {
+        let e = cmd().parse(&argv(&["--verbose=yes"])).unwrap_err().to_string();
+        assert!(e.contains("does not take a value"));
+    }
+
+    #[test]
+    fn help_bails_with_usage() {
+        let e = cmd().parse(&argv(&["--help"])).unwrap_err().to_string();
+        assert!(e.contains("run the server"));
+    }
+}

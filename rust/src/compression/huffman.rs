@@ -1,0 +1,250 @@
+//! Canonical Huffman coder (Deep Compression stage 3), built from scratch.
+//!
+//! Encodes the u32 code streams the quantizer emits. Produces a
+//! length-limited-enough canonical code (plain Huffman; symbol alphabets
+//! here are <= 2^16 so depths stay sane) plus a bit-packed payload.
+
+use std::collections::BTreeMap;
+
+/// Code table: symbol -> (bits, length).
+#[derive(Clone, Debug, Default)]
+pub struct HuffmanTable {
+    /// Sorted (symbol, code length) pairs — enough to rebuild the
+    /// canonical code on decode.
+    pub lengths: Vec<(u32, u8)>,
+}
+
+impl HuffmanTable {
+    /// Serialized table size in bytes (symbol u32 + length u8 each).
+    pub fn bytes(&self) -> usize {
+        self.lengths.len() * 5
+    }
+
+    fn canonical_codes(&self) -> BTreeMap<u32, (u32, u8)> {
+        // Canonical assignment: sort by (length, symbol).
+        let mut items = self.lengths.clone();
+        items.sort_by_key(|&(sym, len)| (len, sym));
+        let mut codes = BTreeMap::new();
+        let mut code: u32 = 0;
+        let mut prev_len: u8 = 0;
+        for (sym, len) in items {
+            code <<= len - prev_len;
+            codes.insert(sym, (code, len));
+            code += 1;
+            prev_len = len;
+        }
+        codes
+    }
+}
+
+/// Huffman-encode a symbol stream. Returns (table, packed bits, bit count).
+pub fn huffman_encode(symbols: &[u32]) -> (HuffmanTable, Vec<u8>, usize) {
+    if symbols.is_empty() {
+        return (HuffmanTable::default(), Vec::new(), 0);
+    }
+    // Frequencies.
+    let mut freq: BTreeMap<u32, u64> = BTreeMap::new();
+    for &s in symbols {
+        *freq.entry(s).or_insert(0) += 1;
+    }
+
+    // Single-symbol degenerate alphabet: 1-bit code.
+    let lengths: Vec<(u32, u8)> = if freq.len() == 1 {
+        vec![(*freq.keys().next().unwrap(), 1)]
+    } else {
+        // Build the Huffman tree with a two-queue O(n log n) method.
+        #[derive(Debug)]
+        struct Node {
+            kind: NodeKind,
+        }
+        #[derive(Debug)]
+        enum NodeKind {
+            Leaf(u32),
+            Internal(Box<Node>, Box<Node>),
+        }
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+            std::collections::BinaryHeap::new();
+        let mut arena: Vec<Option<Node>> = Vec::new();
+        for (&sym, &w) in &freq {
+            arena.push(Some(Node { kind: NodeKind::Leaf(sym) }));
+            heap.push(std::cmp::Reverse((w, arena.len() - 1)));
+        }
+        while heap.len() > 1 {
+            let std::cmp::Reverse((w1, i1)) = heap.pop().unwrap();
+            let std::cmp::Reverse((w2, i2)) = heap.pop().unwrap();
+            let n1 = arena[i1].take().unwrap();
+            let n2 = arena[i2].take().unwrap();
+            arena.push(Some(Node { kind: NodeKind::Internal(Box::new(n1), Box::new(n2)) }));
+            heap.push(std::cmp::Reverse((w1 + w2, arena.len() - 1)));
+        }
+        let std::cmp::Reverse((_, root_i)) = heap.pop().unwrap();
+        let root = arena[root_i].take().unwrap();
+
+        // Depth-first walk for code lengths.
+        let mut lengths = Vec::new();
+        let mut stack = vec![(root, 0u8)];
+        while let Some((node, depth)) = stack.pop() {
+            match node.kind {
+                NodeKind::Leaf(sym) => lengths.push((sym, depth.max(1))),
+                NodeKind::Internal(a, b) => {
+                    stack.push((*a, depth + 1));
+                    stack.push((*b, depth + 1));
+                }
+            }
+        }
+        lengths.sort_unstable();
+        lengths
+    };
+
+    let table = HuffmanTable { lengths };
+    let codes = table.canonical_codes();
+
+    // Pack bits MSB-first.
+    let mut out = Vec::new();
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut total_bits = 0usize;
+    for &s in symbols {
+        let (code, len) = codes[&s];
+        acc = (acc << len) | code as u64;
+        acc_bits += len as u32;
+        total_bits += len as usize;
+        while acc_bits >= 8 {
+            out.push((acc >> (acc_bits - 8)) as u8);
+            acc_bits -= 8;
+        }
+    }
+    if acc_bits > 0 {
+        out.push(((acc << (8 - acc_bits)) & 0xFF) as u8);
+    }
+    (table, out, total_bits)
+}
+
+/// Decode `count` symbols from a packed stream.
+pub fn huffman_decode(
+    table: &HuffmanTable,
+    packed: &[u8],
+    count: usize,
+) -> crate::Result<Vec<u32>> {
+    if count == 0 {
+        return Ok(Vec::new());
+    }
+    anyhow::ensure!(!table.lengths.is_empty(), "empty huffman table");
+    let codes = table.canonical_codes();
+    // Reverse map (code,len) -> symbol.
+    let mut rev: BTreeMap<(u8, u32), u32> = BTreeMap::new();
+    for (sym, (code, len)) in &codes {
+        rev.insert((*len, *code), *sym);
+    }
+    let max_len = table.lengths.iter().map(|&(_, l)| l).max().unwrap();
+
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    let total_bits = packed.len() * 8;
+    let read_bit = |pos: usize| -> u32 { ((packed[pos / 8] >> (7 - pos % 8)) & 1) as u32 };
+    while out.len() < count {
+        let mut code: u32 = 0;
+        let mut len: u8 = 0;
+        loop {
+            anyhow::ensure!(bitpos < total_bits, "huffman stream truncated");
+            code = (code << 1) | read_bit(bitpos);
+            bitpos += 1;
+            len += 1;
+            if let Some(&sym) = rev.get(&(len, code)) {
+                out.push(sym);
+                break;
+            }
+            anyhow::ensure!(len <= max_len, "invalid huffman code in stream");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShiftRng;
+
+    #[test]
+    fn round_trip_simple() {
+        let symbols = vec![0u32, 1, 0, 0, 2, 0, 1, 0];
+        let (table, packed, _bits) = huffman_encode(&symbols);
+        let back = huffman_decode(&table, &packed, symbols.len()).unwrap();
+        assert_eq!(back, symbols);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let symbols = vec![7u32; 100];
+        let (table, packed, bits) = huffman_encode(&symbols);
+        assert_eq!(bits, 100);
+        let back = huffman_decode(&table, &packed, 100).unwrap();
+        assert_eq!(back, symbols);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let (table, packed, bits) = huffman_encode(&[]);
+        assert_eq!(bits, 0);
+        assert!(huffman_decode(&table, &packed, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn skewed_distribution_compresses() {
+        // 90% zeros: entropy ~0.47 bits + overhead -> well under 8 bits/sym.
+        let mut rng = XorShiftRng::new(31);
+        let symbols: Vec<u32> = (0..20_000)
+            .map(|_| {
+                if rng.bernoulli(0.9) {
+                    0
+                } else {
+                    rng.range_usize(1, 32) as u32
+                }
+            })
+            .collect();
+        let (table, packed, bits) = huffman_encode(&symbols);
+        assert!(bits < symbols.len() * 2, "bits/symbol = {}", bits as f64 / symbols.len() as f64);
+        let back = huffman_decode(&table, &packed, symbols.len()).unwrap();
+        assert_eq!(back, symbols);
+    }
+
+    #[test]
+    fn round_trip_property() {
+        crate::testutil::check(
+            25,
+            616,
+            |rng| {
+                let n = rng.range_usize(1, 3000);
+                let alphabet = rng.range_usize(1, 64) as u32;
+                (0..n).map(|_| rng.range_usize(0, alphabet as usize) as u32).collect::<Vec<_>>()
+            },
+            |symbols| {
+                let (table, packed, _) = huffman_encode(symbols);
+                let back =
+                    huffman_decode(&table, &packed, symbols.len()).map_err(|e| e.to_string())?;
+                if &back != symbols {
+                    return Err("round trip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn optimality_vs_fixed_width() {
+        // Uniform alphabet of 16: huffman ~4 bits/sym, never worse than 5.
+        let mut rng = XorShiftRng::new(32);
+        let symbols: Vec<u32> = (0..10_000).map(|_| rng.range_usize(0, 16) as u32).collect();
+        let (_, _, bits) = huffman_encode(&symbols);
+        let per_sym = bits as f64 / symbols.len() as f64;
+        assert!((3.9..5.0).contains(&per_sym), "bits/symbol = {per_sym}");
+    }
+
+    #[test]
+    fn truncated_stream_detected() {
+        let symbols = vec![0u32, 1, 2, 3, 4, 5, 6, 7];
+        let (table, packed, _) = huffman_encode(&symbols);
+        let e = huffman_decode(&table, &packed[..1], symbols.len());
+        assert!(e.is_err());
+    }
+}

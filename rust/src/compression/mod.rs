@@ -1,0 +1,27 @@
+//! Model compression pipeline (paper §2: "with state-of-the-art
+//! compression techniques … AlexNet … can be compressed from 240MB to
+//! 6.9MB", citing the Deep-Compression-style pipeline of pruning +
+//! quantization + Huffman coding; roadmap item 7).
+//!
+//! Stages (each usable alone, composed by [`pipeline::compress_model`]):
+//! 1. **Magnitude pruning** ([`prune`]): zero the smallest-|w| fraction,
+//!    store survivors in a sparse (4-bit-gap style) encoding.
+//! 2. **k-means codebook quantization** ([`quantize`]): cluster surviving
+//!    weights, store codebook + per-weight code indices.
+//! 3. **Huffman coding** ([`huffman`]): entropy-code the indices (own
+//!    encoder — no external crates).
+//!
+//! Experiment E4 runs the full pipeline on AlexNet-scale weights and
+//! reports the compression table.
+
+pub mod huffman;
+mod pipeline;
+mod prune;
+mod quantize;
+
+pub use huffman::{huffman_decode, huffman_encode, HuffmanTable};
+pub use pipeline::{
+    compress_model, decompress_model, CompressedModel, CompressionReport, StagePlan, StageSize,
+};
+pub use prune::{magnitude_prune, sparse_decode, sparse_encode, SparseTensor};
+pub use quantize::{kmeans_quantize, QuantizedTensor};

@@ -1,0 +1,190 @@
+//! Magnitude pruning + sparse encoding (Deep Compression stage 1).
+
+use crate::tensor::Tensor;
+
+/// A pruned tensor in gap-encoded sparse form: non-zero values plus the
+/// gap (number of zeros) before each. Gaps are u8 with an escape (gap 255
+/// means "255 zeros and no value here" — the zero-filler trick from the
+/// Deep Compression paper's 4-bit-gap scheme, widened to 8 bits).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor {
+    pub shape: Vec<usize>,
+    pub gaps: Vec<u8>,
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    /// Stored size in bytes (gaps as u8 + values as f32).
+    pub fn bytes(&self) -> usize {
+        self.gaps.len() + self.values.len() * 4
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// Zero out the smallest-magnitude `fraction` of entries (0.0..1.0).
+/// Returns the pruned dense tensor and the achieved sparsity.
+pub fn magnitude_prune(t: &Tensor, fraction: f64) -> (Tensor, f64) {
+    assert!((0.0..=1.0).contains(&fraction), "fraction in [0,1]");
+    let n = t.numel();
+    if n == 0 || fraction == 0.0 {
+        return (t.clone(), 0.0);
+    }
+    let mut mags: Vec<f32> = t.data().iter().map(|v| v.abs()).collect();
+    let cut_index = ((n as f64 * fraction) as usize).min(n - 1);
+    mags.select_nth_unstable_by(cut_index, |a, b| a.partial_cmp(b).unwrap());
+    let threshold = mags[cut_index];
+    let mut out = t.clone();
+    let mut zeroed = 0usize;
+    for v in out.data_mut() {
+        // `<` keeps ties; matches "prune strictly below the cut magnitude".
+        if v.abs() < threshold || *v == 0.0 {
+            *v = 0.0;
+            zeroed += 1;
+        }
+    }
+    (out, zeroed as f64 / n as f64)
+}
+
+/// Gap-encode a (pruned) dense tensor.
+pub fn sparse_encode(t: &Tensor) -> SparseTensor {
+    let mut gaps = Vec::new();
+    let mut values = Vec::new();
+    let mut gap: usize = 0;
+    for &v in t.data() {
+        if v == 0.0 {
+            gap += 1;
+            if gap == 255 {
+                gaps.push(255);
+                gap = 0;
+            }
+        } else {
+            gaps.push(gap as u8);
+            values.push(v);
+            gap = 0;
+        }
+    }
+    // Trailing zeros are implicit (shape carries the count).
+    SparseTensor { shape: t.shape().dims().to_vec(), gaps, values }
+}
+
+/// Decode back to dense.
+pub fn sparse_decode(s: &SparseTensor) -> crate::Result<Tensor> {
+    let numel: usize = s.shape.iter().product();
+    let mut data = vec![0.0f32; numel];
+    let mut pos = 0usize;
+    let mut vi = 0usize;
+    for &g in &s.gaps {
+        if g == 255 {
+            // Escape: 255 zeros, no value (encoder only emits 255 as the
+            // zero-filler escape; real gaps of >=255 become 255 + remainder).
+            pos += 255;
+            continue;
+        }
+        pos += g as usize;
+        anyhow::ensure!(pos < numel, "sparse decode overruns shape {:?}", s.shape);
+        data[pos] = s.values[vi];
+        vi += 1;
+        pos += 1;
+    }
+    anyhow::ensure!(vi == s.values.len(), "sparse decode left {} values", s.values.len() - vi);
+    Tensor::new(&s.shape[..], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prune_fraction_achieved() {
+        let t = Tensor::randn(&[1000][..], 17, 1.0);
+        let (pruned, sparsity) = magnitude_prune(&t, 0.9);
+        assert!((0.88..=0.92).contains(&sparsity), "sparsity={sparsity}");
+        let zeros = pruned.data().iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros as f64 / 1000.0, sparsity);
+    }
+
+    #[test]
+    fn prune_keeps_largest() {
+        let t = Tensor::new(&[4][..], vec![0.1, -5.0, 0.2, 3.0]).unwrap();
+        let (pruned, _) = magnitude_prune(&t, 0.5);
+        assert_eq!(pruned.data(), &[0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn prune_zero_fraction_is_identity() {
+        let t = Tensor::randn(&[64][..], 18, 1.0);
+        let (pruned, s) = magnitude_prune(&t, 0.0);
+        assert_eq!(pruned, t);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn sparse_round_trip() {
+        let t = Tensor::new(&[2, 5][..], vec![0.0, 1.5, 0.0, 0.0, -2.0, 0.0, 0.0, 0.0, 3.0, 0.0])
+            .unwrap();
+        let enc = sparse_encode(&t);
+        assert_eq!(enc.nnz(), 3);
+        let dec = sparse_decode(&enc).unwrap();
+        assert_eq!(dec, t);
+    }
+
+    #[test]
+    fn sparse_round_trip_long_gaps() {
+        // Gap > 255 exercises the escape encoding.
+        let mut data = vec![0.0f32; 600];
+        data[0] = 1.0;
+        data[599] = 2.0;
+        let t = Tensor::new(&[600][..], data).unwrap();
+        let dec = sparse_decode(&sparse_encode(&t)).unwrap();
+        assert_eq!(dec, t);
+    }
+
+    #[test]
+    fn sparse_round_trip_property() {
+        crate::testutil::check(
+            30,
+            515,
+            |rng| {
+                let n = rng.range_usize(1, 2000);
+                let sparsity = rng.next_f64();
+                let mut data = vec![0.0f32; n];
+                for v in data.iter_mut() {
+                    if !rng.bernoulli(sparsity) {
+                        *v = rng.range_f32(-2.0, 2.0);
+                        if *v == 0.0 {
+                            *v = 1.0;
+                        }
+                    }
+                }
+                data
+            },
+            |data| {
+                let t = Tensor::new(&[data.len()][..], data.clone()).unwrap();
+                let dec = sparse_decode(&sparse_encode(&t)).map_err(|e| e.to_string())?;
+                if dec != t {
+                    return Err("round trip mismatch".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sparse_saves_space_when_sparse() {
+        let t = Tensor::randn(&[10_000][..], 19, 1.0);
+        let (pruned, _) = magnitude_prune(&t, 0.9);
+        let enc = sparse_encode(&pruned);
+        assert!(enc.bytes() < 10_000 * 4 / 2, "bytes={}", enc.bytes());
+    }
+
+    #[test]
+    fn all_zero_tensor() {
+        let t = Tensor::zeros(&[300][..]);
+        let enc = sparse_encode(&t);
+        assert_eq!(enc.nnz(), 0);
+        assert_eq!(sparse_decode(&enc).unwrap(), t);
+    }
+}

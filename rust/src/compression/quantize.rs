@@ -1,0 +1,204 @@
+//! k-means codebook quantization (Deep Compression stage 2).
+//!
+//! Surviving weights are clustered into `2^bits` centroids; the tensor is
+//! stored as a small f32 codebook plus one `bits`-wide code per weight.
+//! Deep Compression uses 8 bits for conv layers and 5 bits for dense —
+//! [`super::pipeline`] follows that split.
+
+use crate::tensor::Tensor;
+use crate::testutil::XorShiftRng;
+
+/// A codebook-quantized tensor.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub shape: Vec<usize>,
+    pub codebook: Vec<f32>,
+    /// One code per element (stored unpacked; `packed_bits()` reports the
+    /// packed size used in the compression accounting).
+    pub codes: Vec<u32>,
+    pub bits: u32,
+}
+
+impl QuantizedTensor {
+    /// Packed storage size in bytes: codebook + bits-per-code.
+    pub fn bytes(&self) -> usize {
+        self.codebook.len() * 4 + (self.codes.len() * self.bits as usize).div_ceil(8)
+    }
+
+    /// Dequantize to dense.
+    pub fn decode(&self) -> crate::Result<Tensor> {
+        let data: Vec<f32> = self
+            .codes
+            .iter()
+            .map(|&c| self.codebook.get(c as usize).copied().unwrap_or(0.0))
+            .collect();
+        Tensor::new(&self.shape[..], data)
+    }
+}
+
+/// Max elements used to *fit* the codebook; larger tensors are subsampled
+/// (assignment still covers every element). Keeps AlexNet-scale tensors
+/// (fc6: 37.7M weights) tractable with negligible codebook quality loss.
+const FIT_SAMPLE_CAP: usize = 1 << 18;
+
+/// Quantize with k-means (Lloyd's, linear-initialized centroids — the
+/// initialization Deep Compression found best). Fitting runs on a
+/// subsample above [`FIT_SAMPLE_CAP`]; assignment uses a sorted-codebook
+/// binary search (1-D clusters), so the whole pass is O(n log k).
+///
+/// `zero_preserving`: keep an exact 0.0 centroid so pruned weights stay
+/// exactly zero through the pipeline.
+pub fn kmeans_quantize(t: &Tensor, bits: u32, zero_preserving: bool) -> QuantizedTensor {
+    assert!((1..=16).contains(&bits), "bits in 1..=16");
+    let k = 1usize << bits;
+    let data = t.data();
+    let n = data.len();
+    if n == 0 {
+        return QuantizedTensor { shape: t.shape().dims().to_vec(), codebook: vec![], codes: vec![], bits };
+    }
+
+    // Fitting sample.
+    let mut rng = XorShiftRng::new(0xC0DEB00C);
+    let sample: Vec<f32> = if n <= FIT_SAMPLE_CAP {
+        data.to_vec()
+    } else {
+        (0..FIT_SAMPLE_CAP).map(|_| data[rng.range_usize(0, n)]).collect()
+    };
+
+    let min = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let max = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    // Linear init across [min, max].
+    let mut centroids: Vec<f32> = if (max - min).abs() < 1e-12 {
+        vec![min; k]
+    } else {
+        (0..k)
+            .map(|i| min + (max - min) * i as f32 / (k - 1) as f32)
+            .collect()
+    };
+    if zero_preserving {
+        let zi = nearest_sorted(&centroids, 0.0);
+        centroids[zi] = 0.0;
+    }
+
+    // Lloyd iterations on the sample (sorted-codebook assignment).
+    let mut sample_codes = vec![0u32; sample.len()];
+    for _ in 0..12 {
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, &v) in sample.iter().enumerate() {
+            sample_codes[i] = nearest_sorted(&centroids, v) as u32;
+        }
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for (&c, &v) in sample_codes.iter().zip(&sample) {
+            sums[c as usize] += v as f64;
+            counts[c as usize] += 1;
+        }
+        for (ci, centroid) in centroids.iter_mut().enumerate() {
+            if zero_preserving && *centroid == 0.0 {
+                continue; // pinned
+            }
+            if counts[ci] > 0 {
+                *centroid = (sums[ci] / counts[ci] as f64) as f32;
+            } else {
+                *centroid = sample[rng.range_usize(0, sample.len())];
+            }
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Full assignment pass.
+    let codes: Vec<u32> = data.iter().map(|&v| nearest_sorted(&centroids, v) as u32).collect();
+    QuantizedTensor { shape: t.shape().dims().to_vec(), codebook: centroids, codes, bits }
+}
+
+/// Nearest centroid in a sorted codebook via binary search.
+fn nearest_sorted(sorted: &[f32], v: f32) -> usize {
+    match sorted.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+        Ok(i) => i,
+        Err(i) => {
+            if i == 0 {
+                0
+            } else if i >= sorted.len() {
+                sorted.len() - 1
+            } else if (v - sorted[i - 1]).abs() <= (sorted[i] - v).abs() {
+                i - 1
+            } else {
+                i
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_bounded() {
+        let t = Tensor::randn(&[4096][..], 23, 0.5);
+        let q = kmeans_quantize(&t, 5, false);
+        let back = q.decode().unwrap();
+        let range = 2.0 * t.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let max_err = back
+            .data()
+            .iter()
+            .zip(t.data())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // 32 clusters over the range: worst-case error well under range/16.
+        assert!(max_err < range / 16.0, "max_err={max_err} range={range}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let t = Tensor::randn(&[2048][..], 24, 1.0);
+        let err = |bits| {
+            let q = kmeans_quantize(&t, bits, false);
+            let back = q.decode().unwrap();
+            back.data()
+                .iter()
+                .zip(t.data())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let e2 = err(2);
+        let e5 = err(5);
+        let e8 = err(8);
+        assert!(e5 < e2 * 0.5, "e2={e2} e5={e5}");
+        assert!(e8 < e5, "e5={e5} e8={e8}");
+    }
+
+    #[test]
+    fn zero_preserving_keeps_pruned_zeros() {
+        let mut t = Tensor::randn(&[512][..], 25, 1.0);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let q = kmeans_quantize(&t, 4, true);
+        let back = q.decode().unwrap();
+        for (i, (&a, &b)) in back.data().iter().zip(t.data()).enumerate() {
+            if b == 0.0 {
+                assert_eq!(a, 0.0, "index {i} lost exact zero");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        let t = Tensor::randn(&[1000][..], 26, 1.0);
+        let q = kmeans_quantize(&t, 5, false);
+        // 32 codebook entries * 4 B + ceil(1000*5/8) B
+        assert_eq!(q.bytes(), 32 * 4 + 625);
+        assert!(q.bytes() < 1000 * 4 / 4, "5-bit codes beat f32 by >4x");
+    }
+
+    #[test]
+    fn constant_tensor() {
+        let t = Tensor::filled(&[64][..], 3.25);
+        let q = kmeans_quantize(&t, 3, false);
+        let back = q.decode().unwrap();
+        assert_eq!(back.data(), t.data());
+    }
+}

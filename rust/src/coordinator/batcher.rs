@@ -1,0 +1,295 @@
+//! Dynamic batcher: one per served model.
+//!
+//! Requests accumulate in a queue; a flush happens when either the batch
+//! is full (`max_batch`) or the oldest request has waited `max_delay`.
+//! Classic serving trade-off: larger batches raise throughput (one PJRT
+//! dispatch amortized over more items), the deadline bounds added latency.
+//! Experiment E8 sweeps this.
+
+use crate::tensor::{Shape, Tensor};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Batcher configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request is this old.
+    pub max_delay: Duration,
+    /// Reject requests when the queue holds this many items (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// One queued request: a single input (no batch dim) + reply channel.
+pub struct Pending {
+    pub input: Tensor,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<crate::Result<(Tensor, BatchMeta)>>,
+}
+
+/// Batch execution metadata attached to each reply.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchMeta {
+    pub batch_size: usize,
+    pub queue_micros: u64,
+}
+
+/// The batching core: owns the queue, decides when to flush. Execution is
+/// delegated to the caller-provided closure so the same logic is testable
+/// without a PJRT engine.
+///
+/// The flush deadline counts from when the oldest request was *pushed into
+/// this queue*, not from client submit time: requests that waited in the
+/// channel while the previous batch executed would otherwise arrive
+/// "already expired" and flush as singletons — the anti-synchronized
+/// closed-loop fixed point documented in EXPERIMENTS.md §Perf (L3).
+pub struct Batcher {
+    config: BatcherConfig,
+    queue: Vec<Pending>,
+    /// When the oldest currently-queued request entered the queue.
+    oldest_pushed: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        Batcher { config, queue: Vec::new(), oldest_pushed: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue a request. Errors (backpressure) if the queue is full.
+    pub fn push(&mut self, pending: Pending) -> Result<(), Pending> {
+        if self.queue.len() >= self.config.queue_cap {
+            return Err(pending);
+        }
+        if self.queue.is_empty() {
+            self.oldest_pushed = Some(Instant::now());
+        }
+        self.queue.push(pending);
+        Ok(())
+    }
+
+    /// Should the queue be flushed now?
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.config.max_batch {
+            return true;
+        }
+        match self.oldest_pushed {
+            Some(t) => now.duration_since(t) >= self.config.max_delay,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline flush of the oldest request (for the worker's
+    /// poll timeout), or None if the queue is empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest_pushed.map(|t| {
+            self.config
+                .max_delay
+                .saturating_sub(now.duration_since(t))
+        })
+    }
+
+    /// Take up to `max_batch` requests, stack their inputs into one batch
+    /// tensor, run `exec`, and scatter results (or the error) back to every
+    /// reply channel.
+    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<Tensor>) {
+        if self.queue.is_empty() {
+            return;
+        }
+        let take = self.queue.len().min(self.config.max_batch);
+        let batch: Vec<Pending> = self.queue.drain(..take).collect();
+        self.oldest_pushed = if self.queue.is_empty() { None } else { Some(Instant::now()) };
+        let n = batch.len();
+        let now = Instant::now();
+
+        // Stack inputs: all must share the per-item shape.
+        let item_shape = batch[0].input.shape().clone();
+        let mut ok_shapes = true;
+        for p in &batch[1..] {
+            if p.input.shape() != &item_shape {
+                ok_shapes = false;
+            }
+        }
+        if !ok_shapes {
+            for p in batch {
+                let _ = p
+                    .reply
+                    .send(Err(anyhow::anyhow!("mixed input shapes in one model queue")));
+            }
+            return;
+        }
+        let mut data = Vec::with_capacity(n * item_shape.numel());
+        for p in &batch {
+            data.extend_from_slice(p.input.data());
+        }
+        let mut dims = vec![n];
+        dims.extend_from_slice(item_shape.dims());
+        let stacked = Tensor::new(Shape::new(&dims), data).expect("stack shapes consistent");
+
+        match exec(&stacked) {
+            Ok(out) => {
+                // Scatter rows back. Output is [n, ...per-item dims].
+                let row = out.numel() / n;
+                let out_dims: Vec<usize> = out.shape().dims()[1..].to_vec();
+                for (i, p) in batch.into_iter().enumerate() {
+                    let slice = out.data()[i * row..(i + 1) * row].to_vec();
+                    let t = Tensor::new(Shape::new(&out_dims), slice).expect("row shape");
+                    let meta = BatchMeta {
+                        batch_size: n,
+                        queue_micros: now.duration_since(p.enqueued).as_micros() as u64,
+                    };
+                    let _ = p.reply.send(Ok((t, meta)));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for p in batch {
+                    let _ = p.reply.send(Err(anyhow::anyhow!("batch execution failed: {msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(v: f32) -> (Pending, mpsc::Receiver<crate::Result<(Tensor, BatchMeta)>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                input: Tensor::filled(&[2][..], v),
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, ..Default::default() });
+        let (p1, r1) = pending(1.0);
+        let (p2, r2) = pending(2.0);
+        b.push(p1).map_err(|_| ()).unwrap();
+        assert!(!b.should_flush(Instant::now()));
+        b.push(p2).map_err(|_| ()).unwrap();
+        assert!(b.should_flush(Instant::now()));
+
+        // exec: identity + 10.
+        b.flush(|x| {
+            assert_eq!(x.shape().dims(), &[2, 2]);
+            let mut out = x.clone();
+            for v in out.data_mut() {
+                *v += 10.0;
+            }
+            Ok(out)
+        });
+        let (t1, m1) = r1.recv().unwrap().unwrap();
+        let (t2, _) = r2.recv().unwrap().unwrap();
+        assert_eq!(t1.data(), &[11.0, 11.0]);
+        assert_eq!(t2.data(), &[12.0, 12.0]);
+        assert_eq!(m1.batch_size, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let cfg = BatcherConfig {
+            max_batch: 100,
+            max_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut b = Batcher::new(cfg);
+        let (p, _r) = pending(1.0);
+        b.push(p).map_err(|_| ()).unwrap();
+        assert!(!b.should_flush(Instant::now()));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let cfg = BatcherConfig { queue_cap: 1, ..Default::default() };
+        let mut b = Batcher::new(cfg);
+        let (p1, _r1) = pending(1.0);
+        let (p2, _r2) = pending(2.0);
+        assert!(b.push(p1).is_ok());
+        assert!(b.push(p2).is_err());
+    }
+
+    #[test]
+    fn exec_error_propagates_to_all() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let (p1, r1) = pending(1.0);
+        let (p2, r2) = pending(2.0);
+        b.push(p1).map_err(|_| ()).unwrap();
+        b.push(p2).map_err(|_| ()).unwrap();
+        b.flush(|_| Err(anyhow::anyhow!("engine on fire")));
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn partial_flush_takes_max_batch() {
+        let cfg = BatcherConfig { max_batch: 2, queue_cap: 10, ..Default::default() };
+        let mut b = Batcher::new(cfg);
+        let mut receivers = Vec::new();
+        for i in 0..5 {
+            let (p, r) = pending(i as f32);
+            b.push(p).map_err(|_| ()).unwrap();
+            receivers.push(r);
+        }
+        b.flush(|x| Ok(x.clone()));
+        assert_eq!(b.len(), 3);
+        assert!(receivers[0].try_recv().unwrap().is_ok());
+        assert!(receivers[1].try_recv().unwrap().is_ok());
+        assert!(receivers[2].try_recv().is_err()); // still queued
+    }
+
+    #[test]
+    fn mixed_shapes_rejected() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let (tx1, r1) = mpsc::channel();
+        let (tx2, r2) = mpsc::channel();
+        b.push(Pending {
+            input: Tensor::zeros(&[2][..]),
+            enqueued: Instant::now(),
+            reply: tx1,
+        })
+        .map_err(|_| ())
+        .unwrap();
+        b.push(Pending {
+            input: Tensor::zeros(&[3][..]),
+            enqueued: Instant::now(),
+            reply: tx2,
+        })
+        .map_err(|_| ())
+        .unwrap();
+        b.flush(|x| Ok(x.clone()));
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
+    }
+}

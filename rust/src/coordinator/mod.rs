@@ -1,0 +1,20 @@
+//! Serving coordinator: request routing, dynamic batching, SLO tracking.
+//!
+//! The paper's on-device serving story — "intelligently (and very rapid …)
+//! switch between several Deep Learning Models", answer within Nielsen's
+//! 100 ms "feels instantaneous" bar (§1.1) — realized as a multi-threaded
+//! coordinator in front of the PJRT engine:
+//!
+//! ```text
+//! client threads ──submit──► per-model Batcher ──batches──► EngineHandle
+//!                              (size/deadline)                (PJRT thread)
+//! ```
+
+mod batcher;
+mod server;
+
+pub use batcher::{BatchMeta, Batcher, BatcherConfig, Pending};
+pub use server::{Coordinator, CoordinatorConfig, RequestResult};
+
+/// Nielsen's "feels instantaneous" bar the paper cites (§1.1).
+pub const NIELSEN_SLO_MICROS: u64 = 100_000;

@@ -1,0 +1,247 @@
+//! The coordinator: per-model batcher worker threads in front of the PJRT
+//! engine, with end-to-end latency metrics and SLO accounting.
+
+use super::batcher::{Batcher, BatcherConfig, Pending};
+use super::NIELSEN_SLO_MICROS;
+use crate::metrics::{Histogram, ServingStats};
+use crate::runtime::{EngineHandle, ModelInfo};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+}
+
+/// The result of one request.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    /// Output row for this request (e.g. class probabilities).
+    pub output: Tensor,
+    /// Predicted class (argmax) for classifier models.
+    pub predicted: usize,
+    /// End-to-end latency observed by the coordinator.
+    pub latency: Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+struct ModelWorker {
+    tx: mpsc::Sender<Pending>,
+    info: ModelInfo,
+}
+
+struct Shared {
+    latency_hist: Mutex<Histogram>,
+    batch_sizes: Mutex<Vec<usize>>,
+    requests: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    started: Instant,
+}
+
+/// Multi-model serving coordinator.
+pub struct Coordinator {
+    engine: EngineHandle,
+    config: CoordinatorConfig,
+    workers: BTreeMap<String, ModelWorker>,
+    shared: Arc<Shared>,
+}
+
+impl Coordinator {
+    /// Create a coordinator over an engine.
+    pub fn new(engine: EngineHandle, config: CoordinatorConfig) -> Coordinator {
+        Coordinator {
+            engine,
+            config,
+            workers: BTreeMap::new(),
+            shared: Arc::new(Shared {
+                latency_hist: Mutex::new(Histogram::new()),
+                batch_sizes: Mutex::new(Vec::new()),
+                requests: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    /// Load a model from a directory and start its batcher worker.
+    pub fn serve_model(&mut self, dir: impl Into<std::path::PathBuf>) -> crate::Result<ModelInfo> {
+        let info = self.engine.load(dir)?;
+        let id = info.id.clone();
+
+        // Batch cap: don't exceed the largest AOT batch.
+        let mut cfg = self.config.batcher;
+        if let Some(&max_aot) = info.batches.iter().max() {
+            cfg.max_batch = cfg.max_batch.min(max_aot);
+        }
+
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let engine = self.engine.clone();
+        let shared = self.shared.clone();
+        let model_id = id.clone();
+        std::thread::Builder::new()
+            .name(format!("dlk-batcher-{id}"))
+            .spawn(move || batcher_main(rx, cfg, engine, model_id, shared))
+            .map_err(|e| anyhow::anyhow!("spawning batcher: {e}"))?;
+
+        self.workers.insert(id, ModelWorker { tx, info: info.clone() });
+        Ok(info)
+    }
+
+    /// Stop serving a model (drains in-flight work, unloads from engine).
+    pub fn retire_model(&mut self, id: &str) -> crate::Result<()> {
+        let worker = self
+            .workers
+            .remove(id)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not being served"))?;
+        drop(worker); // closes the channel; worker thread drains then exits
+        self.engine.unload(id)
+    }
+
+    /// Models currently served.
+    pub fn served_models(&self) -> Vec<&ModelInfo> {
+        self.workers.values().map(|w| &w.info).collect()
+    }
+
+    /// Submit one input (no batch dimension) and wait for its result.
+    pub fn infer(&self, model_id: &str, input: Tensor) -> crate::Result<RequestResult> {
+        self.submit(model_id, input)?.wait()
+    }
+
+    /// Submit asynchronously; returns a ticket to wait on.
+    pub fn submit(&self, model_id: &str, input: Tensor) -> crate::Result<Ticket> {
+        let worker = self
+            .workers
+            .get(model_id)
+            .ok_or_else(|| anyhow::anyhow!("model `{model_id}` is not being served"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let started = Instant::now();
+        worker
+            .tx
+            .send(Pending { input, enqueued: started, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("batcher for `{model_id}` is gone"))?;
+        self.shared.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket { reply: reply_rx, started, shared: self.shared.clone() })
+    }
+
+    /// Serving statistics snapshot.
+    pub fn stats(&self) -> ServingStats {
+        let hist = self.shared.latency_hist.lock().unwrap();
+        let batch_sizes = self.shared.batch_sizes.lock().unwrap();
+        let requests = self.shared.requests.load(Ordering::Relaxed);
+        let elapsed = self.shared.started.elapsed().as_secs_f64();
+        ServingStats {
+            requests,
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            p50_us: hist.quantile(0.5),
+            p95_us: hist.quantile(0.95),
+            p99_us: hist.quantile(0.99),
+            max_us: hist.max(),
+            mean_batch_size: if batch_sizes.is_empty() {
+                0.0
+            } else {
+                batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
+            },
+            throughput_rps: if elapsed > 0.0 { hist.count() as f64 / elapsed } else { 0.0 },
+            slo_attainment: hist.fraction_under(NIELSEN_SLO_MICROS),
+        }
+    }
+
+    /// Access to the underlying engine handle.
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+}
+
+/// A pending request handle.
+pub struct Ticket {
+    reply: mpsc::Receiver<crate::Result<(Tensor, super::batcher::BatchMeta)>>,
+    started: Instant,
+    shared: Arc<Shared>,
+}
+
+impl Ticket {
+    /// Block until the result arrives.
+    pub fn wait(self) -> crate::Result<RequestResult> {
+        let result = self
+            .reply
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped the request"))?;
+        let latency = self.started.elapsed();
+        match result {
+            Ok((output, meta)) => {
+                self.shared
+                    .latency_hist
+                    .lock()
+                    .unwrap()
+                    .record(latency.as_micros() as u64);
+                self.shared.batch_sizes.lock().unwrap().push(meta.batch_size);
+                let predicted = output.argmax();
+                Ok(RequestResult { output, predicted, latency, batch_size: meta.batch_size })
+            }
+            Err(e) => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Batcher worker loop: poll the channel with the flush deadline as the
+/// timeout; execute batches on the engine.
+fn batcher_main(
+    rx: mpsc::Receiver<Pending>,
+    cfg: BatcherConfig,
+    engine: EngineHandle,
+    model_id: String,
+    shared: Arc<Shared>,
+) {
+    let mut batcher = Batcher::new(cfg);
+    loop {
+        let now = Instant::now();
+        let timeout = batcher
+            .next_deadline(now)
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(pending) => {
+                let mut reject = |p: Pending| {
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = p
+                        .reply
+                        .send(Err(anyhow::anyhow!("queue full for `{model_id}` (backpressure)")));
+                };
+                if let Err(p) = batcher.push(pending) {
+                    reject(p);
+                }
+                // Greedily drain everything already waiting in the channel
+                // (requests that arrived while the previous batch executed)
+                // so they coalesce into this batch.
+                while let Ok(pending) = rx.try_recv() {
+                    if let Err(p) = batcher.push(pending) {
+                        reject(p);
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain remaining work, then exit.
+                while !batcher.is_empty() {
+                    shared.batches.fetch_add(1, Ordering::Relaxed);
+                    batcher.flush(|batch| engine.infer(&model_id, batch.clone()));
+                }
+                return;
+            }
+        }
+        while batcher.should_flush(Instant::now()) {
+            shared.batches.fetch_add(1, Ordering::Relaxed);
+            batcher.flush(|batch| engine.infer(&model_id, batch.clone()));
+        }
+    }
+}

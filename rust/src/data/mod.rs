@@ -1,0 +1,234 @@
+//! Procedural datasets — the rust mirror of `python/compile/data.py`.
+//!
+//! Same class definitions (glyph digits, texture classes, char topics) so
+//! that rust-side serving tests can generate labeled inputs and score the
+//! Python-trained models' predictions. The pixel-level generators differ
+//! from the Python ones (different RNG), which is fine: the *classes* are
+//! the contract, not the exact pixels.
+
+use crate::tensor::{Shape, Tensor};
+use crate::testutil::XorShiftRng;
+
+/// 5x7 bitmap font for digits 0-9 — byte-identical to the Python `_FONT`.
+const FONT: [[&str; 7]; 10] = [
+    ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+];
+
+/// A labeled batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// `[n, ...item]` tensor.
+    pub inputs: Tensor,
+    pub labels: Vec<usize>,
+}
+
+/// MNIST-substitute glyph digits: `[n, 1, 28, 28]` in [0,1].
+pub fn glyphs(n: usize, seed: u64) -> Batch {
+    let mut rng = XorShiftRng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut data = vec![0.0f32; n * 28 * 28];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = rng.range_usize(0, 10);
+        labels.push(digit);
+        let img = &mut data[i * 784..(i + 1) * 784];
+        let sy = rng.range_usize(2, 4);
+        let sx = rng.range_usize(2, 4);
+        let gh = 7 * sy;
+        let gw = 5 * sx;
+        let oy = rng.range_usize(0, 28 - gh + 1);
+        let ox = rng.range_usize(0, 28 - gw + 1);
+        let intensity = rng.range_f32(0.7, 1.0);
+        for (ry, row) in FONT[digit].iter().enumerate() {
+            for (rx, ch) in row.bytes().enumerate() {
+                if ch == b'1' {
+                    for dy in 0..sy {
+                        for dx in 0..sx {
+                            img[(oy + ry * sy + dy) * 28 + ox + rx * sx + dx] = intensity;
+                        }
+                    }
+                }
+            }
+        }
+        for px in img.iter_mut() {
+            *px = (*px + rng.normal() * 0.08).clamp(0.0, 1.0);
+        }
+    }
+    Batch {
+        inputs: Tensor::new(Shape::nchw(n, 1, 28, 28), data).unwrap(),
+        labels,
+    }
+}
+
+/// CIFAR-substitute textures: `[n, 3, 32, 32]` in [0,1]. Classes match the
+/// Python generator: 0 h-stripes, 1 v-stripes, 2 diag, 3 anti-diag,
+/// 4 checker, 5 dots, 6 rings, 7 h-gradient, 8 v-gradient, 9 blobs.
+pub fn textures(n: usize, seed: u64) -> Batch {
+    let mut rng = XorShiftRng::new(seed.wrapping_mul(0xA24BAED4963EE407) | 1);
+    let mut data = vec![0.0f32; n * 3 * 32 * 32];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = rng.range_usize(0, 10);
+        labels.push(cls);
+        let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+        let freq = rng.range_f32(0.4, 0.7);
+        let tint = [rng.range_f32(0.5, 1.0), rng.range_f32(0.5, 1.0), rng.range_f32(0.5, 1.0)];
+        for y in 0..32 {
+            for x in 0..32 {
+                let (xf, yf) = (x as f32, y as f32);
+                let base = match cls {
+                    0 => (freq * yf + phase).sin(),
+                    1 => (freq * xf + phase).sin(),
+                    2 => (freq * (xf + yf) * 0.7 + phase).sin(),
+                    3 => (freq * (xf - yf) * 0.7 + phase).sin(),
+                    4 => ((freq * xf + phase).sin() * (freq * yf + phase).sin()).signum(),
+                    5 => (freq * xf + phase).cos() + (freq * yf + phase).cos(),
+                    6 => {
+                        let r = ((xf - 16.0).powi(2) + (yf - 16.0).powi(2)).sqrt();
+                        (freq * 2.0 * r + phase).sin()
+                    }
+                    7 => (xf / 31.0) * 2.0 - 1.0 + 0.3 * phase.sin(),
+                    8 => (yf / 31.0) * 2.0 - 1.0 + 0.3 * phase.sin(),
+                    _ => (0.2 * xf + phase).sin() * (0.2 * yf + phase * 0.7).sin(),
+                };
+                for (ch, &t) in tint.iter().enumerate() {
+                    let noise = rng.normal() * 0.15;
+                    let v = ((base * t + noise) * 0.5 + 0.5).clamp(0.0, 1.0);
+                    data[((i * 3 + ch) * 32 + y) * 32 + x] = v;
+                }
+            }
+        }
+    }
+    Batch {
+        inputs: Tensor::new(Shape::nchw(n, 3, 32, 32), data).unwrap(),
+        labels,
+    }
+}
+
+/// Topic vocabulary — byte-identical to the Python `_TOPIC_WORDS`.
+const TOPIC_WORDS: [&[&str]; 4] = [
+    &["ball", "goal", "team", "score", "match", "league", "coach"],
+    &["stock", "market", "price", "trade", "profit", "bank", "share"],
+    &["neuron", "tensor", "model", "train", "learn", "layer", "grad"],
+    &["pasta", "sauce", "oven", "spice", "flour", "butter", "salt"],
+];
+const ALPHABET: &str = "abcdefghijklmnopqrstuvwxyz0123456789 .,;:!?'\"()-";
+pub const CHAR_ALPHABET_SIZE: usize = 64;
+pub const CHAR_DOC_LEN: usize = 256;
+
+/// Char-CNN topics: one-hot `[n, 64, 256]`.
+pub fn chars(n: usize, seed: u64) -> Batch {
+    let mut rng = XorShiftRng::new(seed.wrapping_mul(0xD6E8FEB86659FD93) | 1);
+    let mut data = vec![0.0f32; n * CHAR_ALPHABET_SIZE * CHAR_DOC_LEN];
+    let mut labels = Vec::with_capacity(n);
+    let index = |ch: char| ALPHABET.find(ch);
+    for i in 0..n {
+        let cls = rng.range_usize(0, 4);
+        labels.push(cls);
+        let mut text = String::new();
+        while text.len() < CHAR_DOC_LEN {
+            if rng.bernoulli(0.7) {
+                text.push_str(TOPIC_WORDS[cls][rng.range_usize(0, TOPIC_WORDS[cls].len())]);
+            } else {
+                let len = rng.range_usize(2, 7);
+                for _ in 0..len {
+                    text.push((b'a' + (rng.next_u32() % 26) as u8) as char);
+                }
+            }
+            text.push(' ');
+        }
+        for (pos, ch) in text.chars().take(CHAR_DOC_LEN).enumerate() {
+            if let Some(j) = index(ch) {
+                data[(i * CHAR_ALPHABET_SIZE + j) * CHAR_DOC_LEN + pos] = 1.0;
+            }
+        }
+    }
+    Batch {
+        inputs: Tensor::new(&[n, CHAR_ALPHABET_SIZE, CHAR_DOC_LEN][..], data).unwrap(),
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyphs_shapes_and_range() {
+        let b = glyphs(6, 3);
+        assert_eq!(b.inputs.shape().dims(), &[6, 1, 28, 28]);
+        assert_eq!(b.labels.len(), 6);
+        assert!(b.labels.iter().all(|&l| l < 10));
+        assert!(b.inputs.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = glyphs(4, 9);
+        let b = glyphs(4, 9);
+        assert_eq!(a.inputs, b.inputs);
+        assert_eq!(a.labels, b.labels);
+        let c = glyphs(4, 10);
+        assert_ne!(a.inputs, c.inputs);
+    }
+
+    #[test]
+    fn textures_all_classes_reachable() {
+        let b = textures(300, 1);
+        let mut seen = [false; 10];
+        for &l in &b.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+        assert!(b.inputs.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn chars_one_hot() {
+        let b = chars(3, 5);
+        assert_eq!(b.inputs.shape().dims(), &[3, 64, 256]);
+        // At most one hot per column.
+        for i in 0..3 {
+            for pos in 0..CHAR_DOC_LEN {
+                let mut s = 0.0;
+                for ch in 0..CHAR_ALPHABET_SIZE {
+                    s += b.inputs.at(&[i, ch, pos]);
+                }
+                assert!(s <= 1.0 + 1e-6);
+            }
+        }
+        // Non-empty documents.
+        let total: f32 = b.inputs.data().iter().sum();
+        assert!(total > 100.0);
+    }
+
+    #[test]
+    fn glyph_classes_distinguishable() {
+        // Mean image distance between classes must be clearly nonzero.
+        let b = glyphs(400, 2);
+        let mut sums = vec![vec![0.0f32; 784]; 10];
+        let mut counts = [0usize; 10];
+        for (i, &l) in b.labels.iter().enumerate() {
+            counts[l] += 1;
+            for (j, s) in sums[l].iter_mut().enumerate() {
+                *s += b.inputs.data()[i * 784 + j];
+            }
+        }
+        for (s, &c) in sums.iter_mut().zip(&counts) {
+            for v in s.iter_mut() {
+                *v /= c.max(1) as f32;
+            }
+        }
+        let d01: f32 =
+            sums[0].iter().zip(&sums[1]).map(|(a, b)| (a - b).abs()).sum::<f32>() / 784.0;
+        assert!(d01 > 0.005, "class means overlap: {d01}");
+    }
+}

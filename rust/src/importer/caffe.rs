@@ -1,0 +1,364 @@
+//! Caffe-JSON importer.
+//!
+//! Document schema (what a Caffe export script emits — net description in
+//! `prototxt` vocabulary plus trained blobs):
+//!
+//! ```json
+//! {
+//!   "framework": "caffe",
+//!   "name": "cifar10_nin",
+//!   "input_dim": [1, 3, 32, 32],
+//!   "layers": [
+//!     {"name": "conv1", "type": "Convolution",
+//!      "convolution_param": {"num_output": 192, "kernel_size": 5,
+//!                            "stride": 1, "pad": 2},
+//!      "blobs": [{"shape": [192,3,5,5], "data": [...]},
+//!                {"shape": [192], "data": [...]}]},
+//!     {"name": "relu1", "type": "ReLU"},
+//!     {"name": "pool1", "type": "Pooling",
+//!      "pooling_param": {"pool": "MAX", "kernel_size": 3, "stride": 2}},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Global pooling (`"global_pooling": true`) maps to `GlobalAvgPool`;
+//! `InnerProduct` to `Dense` (with implicit flatten when fed an image);
+//! `Dropout` is preserved as the inference no-op.
+
+use super::Imported;
+use crate::json::Value;
+use crate::model::{Architecture, LayerKind, Manifest, WeightStore};
+use crate::tensor::{Shape, Tensor};
+
+/// Import a Caffe JSON export document.
+pub fn import_caffe_json(doc: &Value) -> crate::Result<Imported> {
+    anyhow::ensure!(
+        doc.get("framework").and_then(Value::as_str) == Some("caffe"),
+        "not a caffe export document"
+    );
+    let name = doc.req_str("name")?;
+    let input_dim: Vec<usize> = doc
+        .req_array("input_dim")?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad input_dim entry")))
+        .collect::<crate::Result<_>>()?;
+    anyhow::ensure!(
+        input_dim.len() == 4,
+        "caffe input_dim must be [n,c,h,w], got {input_dim:?}"
+    );
+
+    let mut arch = Architecture::new(name, &input_dim[1..]);
+    let mut weights = WeightStore::new();
+    let mut needs_flatten_before_ip = true; // track if spatial dims remain
+
+    for (i, lv) in doc.req_array("layers")?.iter().enumerate() {
+        let lname = lv.req_str("name")?;
+        let ltype = lv.req_str("type")?;
+        let ctx = |msg: String| anyhow::anyhow!("caffe layer {i} `{lname}` ({ltype}): {msg}");
+        match ltype {
+            "Convolution" => {
+                let p = lv
+                    .get("convolution_param")
+                    .ok_or_else(|| ctx("missing convolution_param".into()))?;
+                let out_ch = p.req_usize("num_output")?;
+                let k = p.req_usize("kernel_size")?;
+                let stride = p.get("stride").and_then(Value::as_usize).unwrap_or(1);
+                let pad = p.get("pad").and_then(Value::as_usize).unwrap_or(0);
+                arch.push(lname, LayerKind::Conv2d { out_ch, k, stride, pad });
+                load_blobs(lv, lname, &mut weights)?;
+            }
+            "InnerProduct" => {
+                let p = lv
+                    .get("inner_product_param")
+                    .ok_or_else(|| ctx("missing inner_product_param".into()))?;
+                let out = p.req_usize("num_output")?;
+                // Caffe flattens implicitly; our IR is explicit.
+                if needs_flatten_before_ip && arch.output_shape().map(|s| s.len() > 1).unwrap_or(false) {
+                    arch.push(&format!("{lname}_flatten"), LayerKind::Flatten);
+                }
+                needs_flatten_before_ip = false;
+                arch.push(lname, LayerKind::Dense { out });
+                load_blobs(lv, lname, &mut weights)?;
+            }
+            "ReLU" => {
+                arch.push(lname, LayerKind::Relu);
+            }
+            "Pooling" => {
+                let p = lv
+                    .get("pooling_param")
+                    .ok_or_else(|| ctx("missing pooling_param".into()))?;
+                let global = p.get("global_pooling").and_then(Value::as_bool).unwrap_or(false);
+                let pool = p.get("pool").and_then(Value::as_str).unwrap_or("MAX");
+                if global {
+                    anyhow::ensure!(pool == "AVE", "global pooling supported only for AVE");
+                    arch.push(lname, LayerKind::GlobalAvgPool);
+                } else {
+                    let k = p.req_usize("kernel_size")?;
+                    let stride = p.get("stride").and_then(Value::as_usize).unwrap_or(1);
+                    let pad = p.get("pad").and_then(Value::as_usize).unwrap_or(0);
+                    match pool {
+                        "MAX" => arch.push(lname, LayerKind::MaxPool2d { k, stride, pad }),
+                        "AVE" => arch.push(lname, LayerKind::AvgPool2d { k, stride, pad }),
+                        other => return Err(ctx(format!("unsupported pool `{other}`"))),
+                    };
+                }
+            }
+            "Dropout" => {
+                let rate = lv
+                    .get("dropout_param")
+                    .and_then(|p| p.get("dropout_ratio"))
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.5);
+                arch.push(lname, LayerKind::Dropout { rate });
+            }
+            "Softmax" | "SoftmaxWithLoss" => {
+                arch.push(lname, LayerKind::Softmax);
+            }
+            "LRN" => {
+                // Local response norm ≈ identity for import purposes; noted
+                // in the manifest description rather than silently dropped.
+                continue;
+            }
+            other => {
+                return Err(ctx(format!(
+                    "unsupported layer type `{other}` (supported: Convolution, InnerProduct, \
+                     ReLU, Pooling, Dropout, Softmax, LRN)"
+                )))
+            }
+        }
+    }
+
+    // Validate architecture consistency and weight shapes.
+    arch.shapes()
+        .map_err(|e| anyhow::anyhow!("imported caffe net `{name}` is inconsistent: {e}"))?;
+    weights
+        .validate(&arch)
+        .map_err(|e| anyhow::anyhow!("imported caffe net `{name}`: {e}"))?;
+
+    let mut manifest = Manifest::new(&format!("caffe-{name}"), arch);
+    manifest.source = "caffe".to_string();
+    manifest.description = format!("imported from Caffe JSON export `{name}`");
+    if let Some(labels) = doc.get("labels").and_then(Value::as_array) {
+        manifest.labels = labels
+            .iter()
+            .map(|l| {
+                l.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("non-string label"))
+            })
+            .collect::<crate::Result<_>>()?;
+    }
+    Ok(Imported { manifest, weights })
+}
+
+/// Load `blobs[0]` as `<name>.w` and `blobs[1]` as `<name>.b`.
+fn load_blobs(layer: &Value, lname: &str, weights: &mut WeightStore) -> crate::Result<()> {
+    let blobs = layer
+        .req_array("blobs")
+        .map_err(|_| anyhow::anyhow!("layer `{lname}` has trained parameters but no blobs"))?;
+    anyhow::ensure!(
+        blobs.len() == 2,
+        "layer `{lname}` expects 2 blobs (weight, bias), got {}",
+        blobs.len()
+    );
+    for (blob, suffix) in blobs.iter().zip(["w", "b"]) {
+        let dims: Vec<usize> = blob
+            .req_array("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad blob dim in `{lname}`")))
+            .collect::<crate::Result<_>>()?;
+        let data: Vec<f32> = blob
+            .req_array("data")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|v| v as f32)
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric weight in `{lname}`"))
+            })
+            .collect::<crate::Result<_>>()?;
+        let t = Tensor::new(Shape::new(&dims), data)
+            .map_err(|e| anyhow::anyhow!("blob `{lname}.{suffix}`: {e}"))?;
+        weights.insert(&format!("{lname}.{suffix}"), t);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) fn sample_caffe_doc() -> Value {
+    use crate::testutil::XorShiftRng;
+    let mut rng = XorShiftRng::new(99);
+    let blob = |dims: &[usize], rng: &mut XorShiftRng| {
+        let n: usize = dims.iter().product();
+        Value::obj(&[
+            ("shape", Value::Array(dims.iter().map(|&d| d.into()).collect())),
+            (
+                "data",
+                Value::Array((0..n).map(|_| (rng.normal() as f64 * 0.1).into()).collect()),
+            ),
+        ])
+    };
+    let layers = vec![
+        Value::obj(&[
+            ("name", "conv1".into()),
+            ("type", "Convolution".into()),
+            (
+                "convolution_param",
+                Value::obj(&[
+                    ("num_output", 4usize.into()),
+                    ("kernel_size", 3usize.into()),
+                    ("stride", 1usize.into()),
+                    ("pad", 1usize.into()),
+                ]),
+            ),
+            (
+                "blobs",
+                Value::Array(vec![blob(&[4, 3, 3, 3], &mut rng), blob(&[4], &mut rng)]),
+            ),
+        ]),
+        Value::obj(&[("name", "relu1".into()), ("type", "ReLU".into())]),
+        Value::obj(&[
+            ("name", "pool1".into()),
+            ("type", "Pooling".into()),
+            (
+                "pooling_param",
+                Value::obj(&[
+                    ("pool", "MAX".into()),
+                    ("kernel_size", 2usize.into()),
+                    ("stride", 2usize.into()),
+                ]),
+            ),
+        ]),
+        Value::obj(&[
+            ("name", "ip1".into()),
+            ("type", "InnerProduct".into()),
+            ("inner_product_param", Value::obj(&[("num_output", 5usize.into())])),
+            (
+                "blobs",
+                Value::Array(vec![blob(&[5, 4 * 4 * 4], &mut rng), blob(&[5], &mut rng)]),
+            ),
+        ]),
+        Value::obj(&[("name", "prob".into()), ("type", "Softmax".into())]),
+    ];
+    Value::obj(&[
+        ("framework", "caffe".into()),
+        ("name", "tinynet".into()),
+        (
+            "input_dim",
+            Value::Array(vec![1usize.into(), 3usize.into(), 8usize.into(), 8usize.into()]),
+        ),
+        ("layers", Value::Array(layers)),
+        (
+            "labels",
+            Value::Array((0..5).map(|i| format!("class{i}").into()).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imports_sample_net() {
+        let doc = sample_caffe_doc();
+        let imported = import_caffe_json(&doc).unwrap();
+        assert_eq!(imported.manifest.id, "caffe-tinynet");
+        assert_eq!(imported.manifest.source, "caffe");
+        assert_eq!(imported.manifest.labels.len(), 5);
+        // conv, relu, pool, flatten(auto), dense, softmax
+        assert_eq!(imported.manifest.arch.layers.len(), 6);
+        assert_eq!(imported.manifest.arch.num_classes().unwrap(), 5);
+        assert_eq!(imported.weights.len(), 4);
+    }
+
+    #[test]
+    fn imported_model_executes() {
+        let imported = import_caffe_json(&sample_caffe_doc()).unwrap();
+        let exec =
+            crate::nn::CpuExecutor::new(imported.manifest.arch.clone(), imported.weights).unwrap();
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(2, 3, 8, 8), 1, 1.0);
+        let y = exec.forward(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[2, 5]);
+    }
+
+    #[test]
+    fn global_pooling_maps_to_gap() {
+        let mut doc = sample_caffe_doc();
+        // Replace pool1 with a global AVE pool and drop the dense layer so
+        // conv output channels (4) become the classes.
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(layers)) = o.get_mut("layers") {
+                layers[2] = Value::obj(&[
+                    ("name", "gap".into()),
+                    ("type", "Pooling".into()),
+                    (
+                        "pooling_param",
+                        Value::obj(&[("pool", "AVE".into()), ("global_pooling", true.into())]),
+                    ),
+                ]);
+                layers.remove(3); // drop ip1
+            }
+            o.insert("labels".to_string(), Value::Array(vec![]));
+        }
+        let imported = import_caffe_json(&doc).unwrap();
+        assert_eq!(imported.manifest.arch.num_classes().unwrap(), 4);
+    }
+
+    #[test]
+    fn missing_blobs_rejected() {
+        let mut doc = sample_caffe_doc();
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(layers)) = o.get_mut("layers") {
+                if let Value::Object(l0) = &mut layers[0] {
+                    l0.remove("blobs");
+                }
+            }
+        }
+        let e = import_caffe_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("blobs"), "{e}");
+    }
+
+    #[test]
+    fn wrong_blob_shape_rejected() {
+        let mut doc = sample_caffe_doc();
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(layers)) = o.get_mut("layers") {
+                // conv1 claims 5x5 kernels but blob is 3x3-sized.
+                if let Some(p) = layers[0].get("convolution_param").cloned() {
+                    let mut p = p;
+                    p.insert("kernel_size", 5usize.into());
+                    layers[0].insert("convolution_param", p);
+                }
+            }
+        }
+        assert!(import_caffe_json(&doc).is_err());
+    }
+
+    #[test]
+    fn unsupported_layer_type_named_in_error() {
+        let mut doc = sample_caffe_doc();
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(layers)) = o.get_mut("layers") {
+                layers[1].insert("type", "Deconvolution".into());
+            }
+        }
+        let e = import_caffe_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("Deconvolution"), "{e}");
+    }
+
+    #[test]
+    fn lrn_skipped() {
+        let mut doc = sample_caffe_doc();
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(layers)) = o.get_mut("layers") {
+                layers.insert(
+                    1,
+                    Value::obj(&[("name", "norm1".into()), ("type", "LRN".into())]),
+                );
+            }
+        }
+        let imported = import_caffe_json(&doc).unwrap();
+        assert!(imported.manifest.arch.layers.iter().all(|l| l.name != "norm1"));
+    }
+}

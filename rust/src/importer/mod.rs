@@ -1,0 +1,65 @@
+//! Deep Learning Model Importer (paper §3).
+//!
+//! "DeepLearningKit currently supports converting trained Caffe models to
+//! JSON (i.e. ready to be uploaded to app store) and then importing into
+//! Swift/Metal" — this module is that importer: it reads the JSON export
+//! of a source framework, validates it, and produces the native
+//! [`Manifest`](crate::model::Manifest) + [`WeightStore`](crate::model::WeightStore)
+//! pair the rest of the system consumes.
+//!
+//! Two source dialects are implemented, matching the paper:
+//! - **Caffe** (`caffe`): layer list in Caffe vocabulary (`Convolution`,
+//!   `Pooling`, `InnerProduct`, `ReLU`, `Softmax`, `Dropout`), blobs in
+//!   `[out, in, k, k]` order — what `tools/caffe_export.py`-style dumps
+//!   produce.
+//! - **Theano/LeNet** (`theano`): flat parameter list + explicit layer
+//!   stack, as the paper's "preliminary support running Theano trained
+//!   LeNet".
+
+mod caffe;
+mod theano;
+
+pub use caffe::import_caffe_json;
+pub use theano::import_theano_json;
+
+use crate::json::Value;
+use crate::model::{Manifest, WeightStore};
+
+/// Result of an import: a validated manifest + weights.
+#[derive(Debug)]
+pub struct Imported {
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+}
+
+/// Sniff the source framework of an export document and dispatch.
+pub fn import_auto(doc: &Value) -> crate::Result<Imported> {
+    match doc.get("framework").and_then(Value::as_str) {
+        Some("caffe") => import_caffe_json(doc),
+        Some("theano") => import_theano_json(doc),
+        Some(other) => anyhow::bail!(
+            "unsupported source framework `{other}` (supported: caffe, theano)"
+        ),
+        None => anyhow::bail!("export document missing `framework` field"),
+    }
+}
+
+/// Import from a file path.
+pub fn import_file(path: &std::path::Path) -> crate::Result<Imported> {
+    let doc = crate::json::from_file(path)?;
+    import_auto(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_dispatch_rejects_unknown() {
+        let doc = Value::obj(&[("framework", "tensorflow".into())]);
+        let e = import_auto(&doc).unwrap_err().to_string();
+        assert!(e.contains("tensorflow"), "{e}");
+        let e2 = import_auto(&Value::object()).unwrap_err().to_string();
+        assert!(e2.contains("framework"), "{e2}");
+    }
+}

@@ -1,0 +1,224 @@
+//! Theano-JSON importer ("preliminary support running Theano trained
+//! LeNet", paper §1).
+//!
+//! Theano has no net description format of its own (models are Python
+//! code), so exports are a flat layer stack in our vocabulary plus a
+//! parameter list — the shape a `theano_export.py` companion script
+//! produces from the deeplearning.net LeNet tutorial:
+//!
+//! ```json
+//! {
+//!   "framework": "theano",
+//!   "name": "lenet5",
+//!   "input": [1, 28, 28],
+//!   "stack": [
+//!     {"op": "conv", "name": "layer0", "filters": 20, "k": 5},
+//!     {"op": "maxpool", "name": "pool0", "k": 2},
+//!     {"op": "relu", "name": "relu0"},
+//!     {"op": "dense", "name": "layer2", "units": 500},
+//!     {"op": "softmax", "name": "out"}
+//!   ],
+//!   "params": [{"name": "layer0.w", "shape": [20,1,5,5], "data": [...]}, ...]
+//! }
+//! ```
+
+use super::Imported;
+use crate::json::Value;
+use crate::model::{Architecture, LayerKind, Manifest, WeightStore};
+use crate::tensor::{Shape, Tensor};
+
+/// Import a Theano JSON export document.
+pub fn import_theano_json(doc: &Value) -> crate::Result<Imported> {
+    anyhow::ensure!(
+        doc.get("framework").and_then(Value::as_str) == Some("theano"),
+        "not a theano export document"
+    );
+    let name = doc.req_str("name")?;
+    let input: Vec<usize> = doc
+        .req_array("input")?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad input dim")))
+        .collect::<crate::Result<_>>()?;
+
+    let mut arch = Architecture::new(name, &input);
+    let mut flattened = input.len() == 1;
+    for (i, sv) in doc.req_array("stack")?.iter().enumerate() {
+        let op = sv.req_str("op")?;
+        let lname = sv.req_str("name")?;
+        match op {
+            "conv" => {
+                let filters = sv.req_usize("filters")?;
+                let k = sv.req_usize("k")?;
+                let stride = sv.get("stride").and_then(Value::as_usize).unwrap_or(1);
+                let pad = sv.get("pad").and_then(Value::as_usize).unwrap_or(0);
+                arch.push(lname, LayerKind::Conv2d { out_ch: filters, k, stride, pad });
+            }
+            "maxpool" => {
+                let k = sv.req_usize("k")?;
+                let stride = sv.get("stride").and_then(Value::as_usize).unwrap_or(k);
+                arch.push(lname, LayerKind::MaxPool2d { k, stride, pad: 0 });
+            }
+            "relu" => {
+                arch.push(lname, LayerKind::Relu);
+            }
+            "tanh" | "sigmoid" => {
+                // The Theano LeNet tutorial uses tanh; our inference IR keeps
+                // relu/softmax only, so reject with a clear message rather
+                // than silently altering semantics.
+                anyhow::bail!(
+                    "theano stack entry {i} (`{lname}`): activation `{op}` is not supported by \
+                     the DLK operator set; re-export with relu activations"
+                );
+            }
+            "dense" => {
+                if !flattened {
+                    arch.push(&format!("{lname}_flatten"), LayerKind::Flatten);
+                    flattened = true;
+                }
+                arch.push(lname, LayerKind::Dense { out: sv.req_usize("units")? });
+            }
+            "dropout" => {
+                let rate = sv.get("rate").and_then(Value::as_f64).unwrap_or(0.5);
+                arch.push(lname, LayerKind::Dropout { rate });
+            }
+            "softmax" => {
+                arch.push(lname, LayerKind::Softmax);
+            }
+            other => anyhow::bail!("theano stack entry {i} (`{lname}`): unknown op `{other}`"),
+        }
+    }
+
+    let mut weights = WeightStore::new();
+    for pv in doc.req_array("params")? {
+        let pname = pv.req_str("name")?;
+        let dims: Vec<usize> = pv
+            .req_array("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim in `{pname}`")))
+            .collect::<crate::Result<_>>()?;
+        let data: Vec<f32> = pv
+            .req_array("data")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|v| v as f32)
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric value in `{pname}`"))
+            })
+            .collect::<crate::Result<_>>()?;
+        weights.insert(pname, Tensor::new(Shape::new(&dims), data)?);
+    }
+
+    arch.shapes()
+        .map_err(|e| anyhow::anyhow!("imported theano net `{name}` is inconsistent: {e}"))?;
+    weights
+        .validate(&arch)
+        .map_err(|e| anyhow::anyhow!("imported theano net `{name}`: {e}"))?;
+
+    let mut manifest = Manifest::new(&format!("theano-{name}"), arch);
+    manifest.source = "theano".to_string();
+    manifest.description = format!("imported from Theano JSON export `{name}`");
+    Ok(Imported { manifest, weights })
+}
+
+#[cfg(test)]
+pub(crate) fn sample_theano_doc() -> Value {
+    use crate::testutil::XorShiftRng;
+    let mut rng = XorShiftRng::new(123);
+    let param = |name: &str, dims: &[usize], rng: &mut XorShiftRng| {
+        let n: usize = dims.iter().product();
+        Value::obj(&[
+            ("name", name.into()),
+            ("shape", Value::Array(dims.iter().map(|&d| d.into()).collect())),
+            (
+                "data",
+                Value::Array((0..n).map(|_| (rng.normal() as f64 * 0.1).into()).collect()),
+            ),
+        ])
+    };
+    let stack = vec![
+        Value::obj(&[
+            ("op", "conv".into()),
+            ("name", "layer0".into()),
+            ("filters", 4usize.into()),
+            ("k", 5usize.into()),
+        ]),
+        Value::obj(&[("op", "maxpool".into()), ("name", "pool0".into()), ("k", 2usize.into())]),
+        Value::obj(&[("op", "relu".into()), ("name", "relu0".into())]),
+        Value::obj(&[
+            ("op", "dense".into()),
+            ("name", "layer2".into()),
+            ("units", 10usize.into()),
+        ]),
+        Value::obj(&[("op", "softmax".into()), ("name", "out".into())]),
+    ];
+    Value::obj(&[
+        ("framework", "theano".into()),
+        ("name", "lenet-mini".into()),
+        (
+            "input",
+            Value::Array(vec![1usize.into(), 12usize.into(), 12usize.into()]),
+        ),
+        ("stack", Value::Array(stack)),
+        (
+            "params",
+            Value::Array(vec![
+                param("layer0.w", &[4, 1, 5, 5], &mut rng),
+                param("layer0.b", &[4], &mut rng),
+                param("layer2.w", &[10, 4 * 4 * 4], &mut rng),
+                param("layer2.b", &[10], &mut rng),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imports_lenet_mini() {
+        let imported = import_theano_json(&sample_theano_doc()).unwrap();
+        assert_eq!(imported.manifest.id, "theano-lenet-mini");
+        assert_eq!(imported.manifest.arch.num_classes().unwrap(), 10);
+        // conv, pool, relu, flatten(auto), dense, softmax
+        assert_eq!(imported.manifest.arch.layers.len(), 6);
+    }
+
+    #[test]
+    fn imported_model_executes() {
+        let imported = import_theano_json(&sample_theano_doc()).unwrap();
+        let exec =
+            crate::nn::CpuExecutor::new(imported.manifest.arch.clone(), imported.weights).unwrap();
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(3, 1, 12, 12), 2, 1.0);
+        assert_eq!(exec.classify(&x).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn tanh_rejected_with_guidance() {
+        let mut doc = sample_theano_doc();
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(stack)) = o.get_mut("stack") {
+                stack[2].insert("op", "tanh".into());
+            }
+        }
+        let e = import_theano_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("re-export"), "{e}");
+    }
+
+    #[test]
+    fn missing_param_rejected() {
+        let mut doc = sample_theano_doc();
+        if let Value::Object(o) = &mut doc {
+            if let Some(Value::Array(params)) = o.get_mut("params") {
+                params.pop();
+            }
+        }
+        assert!(import_theano_json(&doc).is_err());
+    }
+
+    #[test]
+    fn auto_dispatch_works() {
+        let imported = super::super::import_auto(&sample_theano_doc()).unwrap();
+        assert_eq!(imported.manifest.source, "theano");
+    }
+}

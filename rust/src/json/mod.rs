@@ -1,0 +1,48 @@
+//! JSON substrate.
+//!
+//! The paper's model-interchange format *is* JSON ("DeepLearningKit currently
+//! supports converting trained Caffe models to JSON"), so this crate carries
+//! its own JSON implementation rather than treating it as an external
+//! convenience: a recursive-descent parser with line/column error reporting,
+//! a compact and a pretty serializer, and ergonomic accessors used by the
+//! model manifest, the Caffe importer and the model store.
+
+mod parse;
+mod ser;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use ser::{to_string, to_string_pretty};
+pub use value::{Number, Value};
+
+use crate::Result;
+
+/// Parse a JSON document from a file path.
+pub fn from_file(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+/// Serialize a value to a file (pretty-printed, trailing newline).
+pub fn to_file(path: &std::path::Path, value: &Value) -> Result<()> {
+    let mut text = to_string_pretty(value);
+    text.push('\n');
+    std::fs::write(path, text)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_file() {
+        let dir = crate::testutil::tempdir("json_file");
+        let path = dir.join("doc.json");
+        let v = parse(r#"{"a": [1, 2.5, "x"], "b": null}"#).unwrap();
+        to_file(&path, &v).unwrap();
+        let back = from_file(&path).unwrap();
+        assert_eq!(v, back);
+    }
+}

@@ -1,0 +1,424 @@
+//! Recursive-descent JSON parser with line/column error reporting.
+//!
+//! Strict RFC 8259 grammar (no comments, no trailing commas) because model
+//! manifests are machine-written; precise errors because Caffe-export files
+//! arrive from *other* tools and the importer must say exactly where an
+//! export is malformed.
+
+use super::value::{Number, Value};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error with 1-based line/column of the offending byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON parse error at {}:{}: {}", self.line, self.col, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Maximum nesting depth; guards against stack overflow on adversarial input
+/// (a fetched model package is untrusted data).
+const MAX_DEPTH: usize = 128;
+
+/// Parse a complete JSON document. Trailing whitespace is allowed; trailing
+/// garbage is an error.
+pub fn parse(text: &str) -> Result<Value, ParseError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing characters after document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        let mut line = 1;
+        let mut col = 1;
+        for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
+            if b == b'\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+        }
+        ParseError { line, col, message: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!(
+                "expected `{}`, found {}",
+                b as char,
+                self.describe_here()
+            )))
+        }
+    }
+
+    fn describe_here(&self) -> String {
+        match self.peek() {
+            Some(b) if b.is_ascii_graphic() => format!("`{}`", b as char),
+            Some(b) => format!("byte 0x{b:02x}"),
+            None => "end of input".to_string(),
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err(format!("nesting deeper than {MAX_DEPTH}")));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::String(self.string()?)),
+            Some(b't') => self.keyword("true", Value::Bool(true)),
+            Some(b'f') => self.keyword("false", Value::Bool(false)),
+            Some(b'n') => self.keyword("null", Value::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => Err(self.err(format!("expected a JSON value, found {}", self.describe_here()))),
+        }
+    }
+
+    fn keyword(&mut self, word: &str, value: Value) -> Result<Value, ParseError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(self.err(format!("invalid literal, expected `{word}`")))
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, ParseError> {
+        self.expect(b'{')?;
+        self.depth += 1;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Value::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(self.err(format!("expected object key string, found {}", self.describe_here())));
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            if map.insert(key.clone(), val).is_some() {
+                return Err(self.err(format!("duplicate object key `{key}`")));
+            }
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err(format!("expected `,` or `}}`, found {}", self.describe_here())));
+                }
+            }
+        }
+        self.depth -= 1;
+        Ok(Value::Object(map))
+    }
+
+    fn array(&mut self) -> Result<Value, ParseError> {
+        self.expect(b'[')?;
+        self.depth += 1;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => break,
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err(format!("expected `,` or `]`, found {}", self.describe_here())));
+                }
+            }
+        }
+        self.depth -= 1;
+        Ok(Value::Array(items))
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // Surrogate pair handling.
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired high surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let combined =
+                                0x10000 + (((cp - 0xD800) as u32) << 10) + (lo - 0xDC00) as u32;
+                            char::from_u32(combined)
+                                .ok_or_else(|| self.err("invalid surrogate pair"))?
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            return Err(self.err("unpaired low surrogate"));
+                        } else {
+                            char::from_u32(cp as u32)
+                                .ok_or_else(|| self.err("invalid unicode escape"))?
+                        };
+                        out.push(c);
+                    }
+                    _ => return Err(self.err("invalid escape sequence")),
+                },
+                Some(b) if b < 0x20 => {
+                    return Err(self.err("unescaped control character in string"))
+                }
+                Some(b) if b < 0x80 => out.push(b as char),
+                Some(b) => {
+                    // Multi-byte UTF-8: copy the full sequence through.
+                    let len = utf8_len(b)
+                        .ok_or_else(|| self.err("invalid UTF-8 start byte in string"))?;
+                    let start = self.pos - 1;
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated UTF-8 sequence"));
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("invalid UTF-8 sequence in string"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, ParseError> {
+        let mut v: u16 = 0;
+        for _ in 0..4 {
+            let b = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("non-hex digit in \\u escape"))?;
+            v = (v << 4) | d as u16;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // Integer part: `0` or non-zero digit followed by digits.
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+            }
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("invalid number: missing digits")),
+        }
+        let mut integral = true;
+        if self.peek() == Some(b'.') {
+            integral = false;
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("invalid number: digits required after `.`"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("invalid number: digits required in exponent"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        if integral {
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Value::Number(Number::from_i64(i)));
+            }
+        }
+        let f: f64 = text
+            .parse()
+            .map_err(|_| self.err(format!("invalid number literal `{text}`")))?;
+        if !f.is_finite() {
+            return Err(self.err(format!("number literal `{text}` overflows f64")));
+        }
+        Ok(Value::Number(Number::from_f64(f)))
+    }
+}
+
+fn utf8_len(first: u8) -> Option<usize> {
+    match first {
+        0xC2..=0xDF => Some(2),
+        0xE0..=0xEF => Some(3),
+        0xF0..=0xF4 => Some(4),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Value {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(p("null"), Value::Null);
+        assert_eq!(p("true"), Value::Bool(true));
+        assert_eq!(p("false"), Value::Bool(false));
+        assert_eq!(p("0").as_i64(), Some(0));
+        assert_eq!(p("-12").as_i64(), Some(-12));
+        assert_eq!(p("3.25").as_f64(), Some(3.25));
+        assert_eq!(p("1e3").as_f64(), Some(1000.0));
+        assert_eq!(p("-2.5E-2").as_f64(), Some(-0.025));
+        assert_eq!(p("\"hi\"").as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn containers() {
+        assert_eq!(p("[]"), Value::Array(vec![]));
+        assert_eq!(p("{}"), Value::object());
+        let v = p(r#"{"a": [1, {"b": "c"}], "d": null}"#);
+        assert_eq!(v.path("a/1/b").unwrap().as_str(), Some("c"));
+        assert!(v.get("d").unwrap().is_null());
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        let v = p(" \n\t{ \"a\" :\r [ 1 , 2 ] } \n");
+        assert_eq!(v.path("a/1").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(p(r#""\n\t\\\"\/""#).as_str(), Some("\n\t\\\"/"));
+        assert_eq!(p(r#""Aé""#).as_str(), Some("Aé"));
+        // Surrogate pair: U+1F600.
+        assert_eq!(p(r#""😀""#).as_str(), Some("😀"));
+        // Raw multi-byte UTF-8 passthrough.
+        assert_eq!(p("\"héllo → 世界\"").as_str(), Some("héllo → 世界"));
+    }
+
+    #[test]
+    fn error_positions() {
+        let e = parse("{\n  \"a\": tru\n}").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 8), "{e}");
+        let e = parse("[1, 2,]").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.message.contains("expected a JSON value"), "{e}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "{", "}", "[1 2]", "{\"a\"}", "{\"a\":}", "01", "1.", ".5", "1e",
+            "\"unterminated", "nul", "+1", "{\"a\":1,}", "[1,]", "\"\\x\"",
+            "\"\\ud800\"", "[1] garbage", "1e999",
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        let e = parse(r#"{"a":1,"a":2}"#).unwrap_err();
+        assert!(e.message.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn rejects_deep_nesting() {
+        let doc = "[".repeat(200) + &"]".repeat(200);
+        let e = parse(&doc).unwrap_err();
+        assert!(e.message.contains("nesting"), "{e}");
+    }
+
+    #[test]
+    fn big_integers_preserved() {
+        assert_eq!(p("9007199254740991").as_i64(), Some(9007199254740991));
+        // Larger than 2^53 falls back to f64 (standard JSON behaviour).
+        assert!(p("99999999999999999999").as_f64().is_some());
+    }
+
+    #[test]
+    fn control_chars_rejected_in_strings() {
+        assert!(parse("\"a\nb\"").is_err());
+        assert!(parse("\"a\tb\"").is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! JSON serializers: compact (wire/package format) and pretty (manifests a
+//! human edits). Both are deterministic — object keys are stored sorted —
+//! so serialized manifests can be checksummed byte-for-byte.
+
+use super::value::Value;
+
+/// Compact serialization (no insignificant whitespace).
+pub fn to_string(value: &Value) -> String {
+    let mut out = String::new();
+    write_value(&mut out, value, None, 0);
+    out
+}
+
+/// Pretty serialization with two-space indentation.
+pub fn to_string_pretty(value: &Value) -> String {
+    let mut out = String::new();
+    write_value(&mut out, value, Some(2), 0);
+    out
+}
+
+fn write_value(out: &mut String, value: &Value, indent: Option<usize>, depth: usize) {
+    match value {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Number(n) => out.push_str(&n.to_string()),
+        Value::String(s) => write_string(out, s),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_value(out, item, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push(']');
+        }
+        Value::Object(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, v)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_string(out, k);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(out, v, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(width) = indent {
+        out.push('\n');
+        for _ in 0..width * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn compact_shapes() {
+        let v = parse(r#"{"b": [1, 2.5], "a": "x"}"#).unwrap();
+        // Keys come out sorted (BTreeMap) — deterministic for checksums.
+        assert_eq!(to_string(&v), r#"{"a":"x","b":[1,2.5]}"#);
+    }
+
+    #[test]
+    fn pretty_shapes() {
+        let v = parse(r#"{"a":[1],"b":{}}"#).unwrap();
+        assert_eq!(to_string_pretty(&v), "{\n  \"a\": [\n    1\n  ],\n  \"b\": {}\n}");
+    }
+
+    #[test]
+    fn string_escaping() {
+        let v = Value::from("a\"b\\c\nd\u{0001}");
+        assert_eq!(to_string(&v), "\"a\\\"b\\\\c\\nd\\u0001\"");
+    }
+
+    #[test]
+    fn round_trip_identity() {
+        let docs = [
+            r#"{"layers":[{"k":5,"name":"conv1","pad":2}],"version":1}"#,
+            r#"[null,true,false,0,-1,0.5,"s",[],{}]"#,
+            r#"{"unicode":"héllo 世界 😀"}"#,
+        ];
+        for doc in docs {
+            let v = parse(doc).unwrap();
+            let s = to_string(&v);
+            assert_eq!(parse(&s).unwrap(), v, "{doc}");
+            let sp = to_string_pretty(&v);
+            assert_eq!(parse(&sp).unwrap(), v, "{doc}");
+        }
+    }
+
+    #[test]
+    fn float_round_trip_precision() {
+        let v = Value::from(0.1f64 + 0.2f64);
+        let back = parse(&to_string(&v)).unwrap();
+        assert_eq!(back.as_f64(), v.as_f64());
+    }
+}

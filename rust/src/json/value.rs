@@ -1,0 +1,324 @@
+//! JSON value tree.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON number. Stored as `f64` with an integer flag so that integers
+/// round-trip without a decimal point (weights offsets, layer sizes, …).
+#[derive(Clone, Copy, Debug)]
+pub struct Number {
+    value: f64,
+    is_int: bool,
+}
+
+impl Number {
+    pub fn from_f64(value: f64) -> Self {
+        Number { value, is_int: value.fract() == 0.0 && value.abs() < 9.0e15 }
+    }
+
+    pub fn from_i64(value: i64) -> Self {
+        Number { value: value as f64, is_int: true }
+    }
+
+    pub fn as_f64(self) -> f64 {
+        self.value
+    }
+
+    /// The integer value if this number is integral, else `None`.
+    pub fn as_i64(self) -> Option<i64> {
+        if self.is_int {
+            Some(self.value as i64)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_integer(self) -> bool {
+        self.is_int
+    }
+}
+
+impl PartialEq for Number {
+    fn eq(&self, other: &Self) -> bool {
+        self.value == other.value
+    }
+}
+
+impl fmt::Display for Number {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_int {
+            write!(f, "{}", self.value as i64)
+        } else {
+            // `{:?}` on f64 prints the shortest representation that
+            // round-trips, which is exactly what JSON wants.
+            write!(f, "{:?}", self.value)
+        }
+    }
+}
+
+/// A JSON document node. Objects use `BTreeMap` so serialization is
+/// deterministic — important for checksummed model manifests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(Number),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    // ---- constructors ----------------------------------------------------
+
+    pub fn object() -> Value {
+        Value::Object(BTreeMap::new())
+    }
+
+    pub fn array() -> Value {
+        Value::Array(Vec::new())
+    }
+
+    /// Build an object from key/value pairs.
+    pub fn obj(pairs: &[(&str, Value)]) -> Value {
+        let mut m = BTreeMap::new();
+        for (k, v) in pairs {
+            m.insert((*k).to_string(), v.clone());
+        }
+        Value::Object(m)
+    }
+
+    // ---- typed accessors ---------------------------------------------------
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(n.as_f64()),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Number(n) => n.as_i64(),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    // ---- navigation --------------------------------------------------------
+
+    /// Object member access; `None` for non-objects / missing keys.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Array element access.
+    pub fn at(&self, index: usize) -> Option<&Value> {
+        self.as_array().and_then(|a| a.get(index))
+    }
+
+    /// `/`-separated path access, e.g. `doc.path("layers/0/name")`.
+    pub fn path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('/') {
+            cur = match cur {
+                Value::Object(o) => o.get(part)?,
+                Value::Array(a) => a.get(part.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
+    /// Insert into an object (panics on non-object: programmer error).
+    pub fn insert(&mut self, key: &str, value: Value) -> &mut Value {
+        match self {
+            Value::Object(o) => {
+                o.insert(key.to_string(), value);
+            }
+            _ => panic!("Value::insert on non-object"),
+        }
+        self
+    }
+
+    /// Push onto an array (panics on non-array: programmer error).
+    pub fn push(&mut self, value: Value) -> &mut Value {
+        match self {
+            Value::Array(a) => a.push(value),
+            _ => panic!("Value::push on non-array"),
+        }
+        self
+    }
+
+    // ---- checked accessors (manifest/importer ergonomics) -------------------
+
+    /// Required string member, with a contextual error.
+    pub fn req_str(&self, key: &str) -> crate::Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string field `{key}`"))
+    }
+
+    /// Required integer member.
+    pub fn req_i64(&self, key: &str) -> crate::Result<i64> {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-integer field `{key}`"))
+    }
+
+    /// Required unsigned member.
+    pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
+        self.get(key)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-unsigned-integer field `{key}`"))
+    }
+
+    /// Required float member.
+    pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-number field `{key}`"))
+    }
+
+    /// Required array member.
+    pub fn req_array(&self, key: &str) -> crate::Result<&[Value]> {
+        self.get(key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-array field `{key}`"))
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::Number(Number::from_i64(v))
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Number(Number::from_i64(v as i64))
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Number(Number::from_f64(v))
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::String(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::String(s)
+    }
+}
+
+impl<T: Into<Value> + Clone> From<&[T]> for Value {
+    fn from(items: &[T]) -> Value {
+        Value::Array(items.iter().cloned().map(Into::into).collect())
+    }
+}
+
+impl From<Vec<Value>> for Value {
+    fn from(items: Vec<Value>) -> Value {
+        Value::Array(items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_integer_display() {
+        assert_eq!(Number::from_i64(42).to_string(), "42");
+        assert_eq!(Number::from_f64(42.0).to_string(), "42");
+        assert_eq!(Number::from_f64(2.5).to_string(), "2.5");
+        assert_eq!(Number::from_f64(-0.125).to_string(), "-0.125");
+    }
+
+    #[test]
+    fn number_as_i64_only_for_integers() {
+        assert_eq!(Number::from_f64(3.0).as_i64(), Some(3));
+        assert_eq!(Number::from_f64(3.5).as_i64(), None);
+        // Beyond 2^53 exact-int guarantee drops.
+        assert_eq!(Number::from_f64(1.0e16).as_i64(), None);
+    }
+
+    #[test]
+    fn path_navigation() {
+        let v = Value::obj(&[(
+            "layers",
+            Value::Array(vec![
+                Value::obj(&[("name", "conv1".into())]),
+                Value::obj(&[("name", "relu1".into())]),
+            ]),
+        )]);
+        assert_eq!(v.path("layers/1/name").unwrap().as_str(), Some("relu1"));
+        assert!(v.path("layers/2/name").is_none());
+        assert!(v.path("nope").is_none());
+    }
+
+    #[test]
+    fn req_accessors_report_key() {
+        let v = Value::obj(&[("n", 3i64.into())]);
+        assert_eq!(v.req_i64("n").unwrap(), 3);
+        let err = v.req_str("name").unwrap_err().to_string();
+        assert!(err.contains("name"), "{err}");
+    }
+
+    #[test]
+    fn from_impls() {
+        assert_eq!(Value::from(true), Value::Bool(true));
+        assert_eq!(Value::from(1.5).as_f64(), Some(1.5));
+        assert_eq!(Value::from("x").as_str(), Some("x"));
+        let arr: Value = (&[1i64, 2, 3][..]).into();
+        assert_eq!(arr.at(2).unwrap().as_i64(), Some(3));
+    }
+}

@@ -1,0 +1,51 @@
+//! # DeepLearningKit (reproduction)
+//!
+//! A three-layer Rust + JAX + Pallas rebuild of *DeepLearningKit — a GPU
+//! Optimized Deep Learning Framework for Apple's iOS, OS X and tvOS*
+//! (Tveit, Morland & Røst, 2016).
+//!
+//! - **Layer 1** (build-time Python): Pallas compute kernels (convolution,
+//!   pooling, rectifier, softmax, …) — the paper's Metal shader functions.
+//! - **Layer 2** (build-time Python): JAX model graphs (NIN, LeNet, char-CNN)
+//!   lowered AOT to HLO text.
+//! - **Layer 3** (this crate): the serving coordinator — model store, model
+//!   cache, importer, compression, request batching, and a PJRT runtime that
+//!   executes the AOT artifacts. Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod bench;
+pub mod cache;
+pub mod cli;
+pub mod compression;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod energy;
+pub mod importer;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod nn;
+pub mod runtime;
+pub mod selector;
+pub mod store;
+pub mod tensor;
+pub mod testutil;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Repository root discovery: honours `DLK_ROOT`, falls back to the
+/// compile-time manifest directory (works for `cargo run`/`cargo test`).
+pub fn repo_root() -> std::path::PathBuf {
+    match std::env::var_os("DLK_ROOT") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+    }
+}
+
+/// Default artifacts directory (`$DLK_ROOT/artifacts`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}

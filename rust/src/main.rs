@@ -1,0 +1,361 @@
+//! `dlk` — the DeepLearningKit reproduction CLI.
+//!
+//! Subcommands mirror the system's user-facing surface:
+//!   serve     load model(s) and run a synthetic serving workload
+//!   infer     classify generated inputs with one model
+//!   import    convert a Caffe/Theano JSON export to the native format
+//!   compress  run the Deep-Compression pipeline on a model's weights
+//!   store     publish / list / fetch models in a local registry
+//!   devices   show device tiers and projected NIN latencies (paper §1.1)
+//!   energy    show train-vs-inference energy (paper figs. 10-12)
+
+use deeplearningkit::cli::Command;
+use deeplearningkit::{
+    artifacts_dir, compression, coordinator, data, device, energy, importer, metrics, model, nn,
+    runtime, store, tensor,
+};
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match args.split_first() {
+        Some((s, rest)) => (s.as_str(), rest.to_vec()),
+        None => {
+            eprint!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match sub {
+        "serve" => cmd_serve(&rest),
+        "infer" => cmd_infer(&rest),
+        "import" => cmd_import(&rest),
+        "compress" => cmd_compress(&rest),
+        "store" => cmd_store(&rest),
+        "devices" => cmd_devices(&rest),
+        "energy" => cmd_energy(&rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand `{other}`\n\n{}", usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "dlk — DeepLearningKit reproduction (rust + JAX + Pallas over PJRT)\n\
+     \n\
+     USAGE: dlk <subcommand> [flags]\n\
+     \n\
+     SUBCOMMANDS:\n\
+       serve     load model(s), run a serving workload, print stats\n\
+       infer     classify procedurally generated inputs\n\
+       import    convert a Caffe/Theano JSON export to the DLK format\n\
+       compress  Deep-Compression pipeline on a model's weights\n\
+       store     publish/list/fetch in a local model registry\n\
+       devices   device tiers + projected NIN latency (paper §1.1)\n\
+       energy    train-vs-inference energy (paper figs. 10-12)\n\
+     \n\
+     Run `dlk <subcommand> --help` for flags.\n"
+        .to_string()
+}
+
+fn model_dir(id: &str) -> std::path::PathBuf {
+    artifacts_dir().join("models").join(id)
+}
+
+fn generator_for(id: &str) -> fn(usize, u64) -> data::Batch {
+    if id.contains("char") {
+        data::chars
+    } else if id.contains("nin") || id.contains("cifar") {
+        data::textures
+    } else {
+        data::glyphs
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk serve", "run a synthetic serving workload")
+        .flag("model", "model id under artifacts/models/", Some("lenet-mnist"))
+        .flag("requests", "number of requests", Some("256"))
+        .flag("concurrency", "client threads", Some("4"))
+        .flag("max-batch", "dynamic batcher max batch", Some("8"))
+        .flag("max-delay-ms", "batcher flush deadline (ms)", Some("2"));
+    let a = cmd.parse(argv)?;
+    let model_id = a.get_or("model", "lenet-mnist").to_string();
+    let requests = a.get_usize("requests", 256)?;
+    let concurrency = a.get_usize("concurrency", 4)?.max(1);
+    let max_batch = a.get_usize("max-batch", 8)?;
+    let max_delay = Duration::from_millis(a.get_usize("max-delay-ms", 2)? as u64);
+
+    let engine = runtime::Engine::start()?;
+    let mut coord = coordinator::Coordinator::new(
+        engine,
+        coordinator::CoordinatorConfig {
+            batcher: coordinator::BatcherConfig { max_batch, max_delay, queue_cap: 4096 },
+        },
+    );
+    let info = coord.serve_model(model_dir(&model_id))?;
+    println!(
+        "serving `{}` ({} classes, AOT batches {:?}, {} KB weights, load {:.1} ms)",
+        info.id,
+        info.classes,
+        info.batches,
+        info.weight_bytes / 1024,
+        info.load_micros as f64 / 1000.0
+    );
+
+    let generate = generator_for(&model_id);
+    let coord = std::sync::Arc::new(coord);
+    let correct = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let done = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let per_thread = (requests / concurrency).max(1);
+    std::thread::scope(|scope| {
+        for t in 0..concurrency {
+            let coord = coord.clone();
+            let correct = correct.clone();
+            let done = done.clone();
+            let model_id = model_id.clone();
+            scope.spawn(move || {
+                let batch = generate(per_thread, 1000 + t as u64);
+                let item = batch.inputs.numel() / per_thread;
+                for i in 0..per_thread {
+                    let input = tensor::Tensor::new(
+                        tensor::Shape::new(&batch.inputs.shape().dims()[1..]),
+                        batch.inputs.data()[i * item..(i + 1) * item].to_vec(),
+                    )
+                    .unwrap();
+                    match coord.infer(&model_id, input) {
+                        Ok(r) => {
+                            if r.predicted == batch.labels[i] {
+                                correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                            done.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        Err(e) => eprintln!("request failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = coord.stats();
+    println!("{}", stats.summary());
+    let done_n = done.load(std::sync::atomic::Ordering::Relaxed);
+    let correct_n = correct.load(std::sync::atomic::Ordering::Relaxed);
+    if done_n > 0 {
+        println!("accuracy: {}/{} = {:.3}", correct_n, done_n, correct_n as f64 / done_n as f64);
+    }
+    Ok(())
+}
+
+fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk infer", "classify generated inputs")
+        .flag("model", "model id", Some("lenet-mnist"))
+        .flag("count", "number of inputs", Some("8"))
+        .switch("cpu", "use the rust CPU reference backend instead of PJRT");
+    let a = cmd.parse(argv)?;
+    let model_id = a.get_or("model", "lenet-mnist").to_string();
+    let count = a.get_usize("count", 8)?.max(1);
+    let batch = generator_for(&model_id)(count, 7);
+
+    let manifest = model::Manifest::load(&model_dir(&model_id).join("manifest.json"))?;
+    let preds: Vec<usize> = if a.has("cpu") {
+        let ws = model::WeightStore::load(&model_dir(&model_id).join("weights.dlkw"))?;
+        let exec = nn::CpuExecutor::new(manifest.arch.clone(), ws)?;
+        exec.classify(&batch.inputs)?
+    } else {
+        let engine = runtime::Engine::start()?;
+        engine.load(model_dir(&model_id))?;
+        let out = engine.infer(&model_id, batch.inputs.clone())?;
+        out.argmax_rows()
+    };
+
+    let mut correct = 0;
+    for (i, (&p, &l)) in preds.iter().zip(&batch.labels).enumerate() {
+        let pl = manifest.labels.get(p).map(|s| s.as_str()).unwrap_or("?");
+        let ll = manifest.labels.get(l).map(|s| s.as_str()).unwrap_or("?");
+        let mark = if p == l {
+            correct += 1;
+            "ok "
+        } else {
+            "MISS"
+        };
+        println!("#{i:3} predicted {pl:12} actual {ll:12} {mark}");
+    }
+    println!("accuracy {correct}/{count}");
+    Ok(())
+}
+
+fn cmd_import(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk import", "convert a Caffe/Theano JSON export")
+        .flag("out", "output model directory", None);
+    let a = cmd.parse(argv)?;
+    let input = a
+        .positional()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dlk import <export.json> --out <dir>"))?;
+    let out = a
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <dir> is required"))?;
+    let imported = importer::import_file(std::path::Path::new(input))?;
+    let out_dir = std::path::PathBuf::from(out);
+    std::fs::create_dir_all(&out_dir)?;
+    let files = model::ModelFiles::new(&out_dir);
+    let weights_bytes = imported.weights.to_bytes();
+    std::fs::write(files.weights(), &weights_bytes)?;
+    let mut manifest = imported.manifest;
+    manifest.weights_sha256 = Some(store::sha256_hex(&weights_bytes));
+    manifest.save(&files.manifest())?;
+    println!(
+        "imported `{}` from {} ({} params) -> {}",
+        manifest.id,
+        manifest.source,
+        manifest.arch.param_count()?,
+        out_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_compress(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk compress", "Deep-Compression pipeline")
+        .flag("model", "model id", Some("lenet-mnist"))
+        .flag("conv-prune", "conv pruning fraction", Some("0.65"))
+        .flag("dense-prune", "dense pruning fraction", Some("0.91"));
+    let a = cmd.parse(argv)?;
+    let model_id = a.get_or("model", "lenet-mnist");
+    let ws = model::WeightStore::load(&model_dir(model_id).join("weights.dlkw"))?;
+    let plan = compression::StagePlan {
+        conv_prune: a.get_f64("conv-prune", 0.65)?,
+        dense_prune: a.get_f64("dense-prune", 0.91)?,
+        ..Default::default()
+    };
+    let (_, report) = compression::compress_model(&ws, plan)?;
+    let mut table = metrics::Table::new(
+        &format!("Deep Compression on `{model_id}`"),
+        &["stage", "bytes", "ratio"],
+    );
+    let s = report.sizes;
+    table.row(&["original f32".into(), metrics::fmt_bytes(s.original as u64), "1.0x".into()]);
+    table.row(&[
+        "pruned (sparse)".into(),
+        metrics::fmt_bytes(s.after_prune as u64),
+        format!("{:.1}x", s.original as f64 / s.after_prune as f64),
+    ]);
+    table.row(&[
+        "quantized".into(),
+        metrics::fmt_bytes(s.after_quant as u64),
+        format!("{:.1}x", s.original as f64 / s.after_quant as f64),
+    ]);
+    table.row(&[
+        "huffman".into(),
+        metrics::fmt_bytes(s.after_huffman as u64),
+        format!("{:.1}x", report.ratio),
+    ]);
+    table.print();
+    println!("sparsity {:.1}%  mean |err| {:.5}", report.sparsity * 100.0, report.mean_abs_error);
+    Ok(())
+}
+
+fn cmd_store(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk store", "local model registry")
+        .flag("registry", "registry directory", Some("./dlk-registry"))
+        .flag("publish", "model id to publish from artifacts", None)
+        .flag("fetch", "model id to fetch", None)
+        .flag("dest", "fetch destination directory", Some("./fetched"))
+        .switch("list", "list published models");
+    let a = cmd.parse(argv)?;
+    let registry = store::Registry::open(a.get_or("registry", "./dlk-registry"))?;
+    if let Some(id) = a.get("publish") {
+        let pkg = store::Package::from_model_dir(&model_dir(id))?;
+        let published = registry.publish(&pkg)?;
+        println!(
+            "published `{}` v{} ({})",
+            published.id,
+            published.version,
+            metrics::fmt_bytes(published.package_bytes as u64)
+        );
+    }
+    if a.has("list") {
+        let mut table =
+            metrics::Table::new("model store", &["id", "version", "size", "description"]);
+        for m in registry.list()? {
+            table.row(&[
+                m.id,
+                format!("v{}", m.version),
+                metrics::fmt_bytes(m.package_bytes as u64),
+                m.description,
+            ]);
+        }
+        table.print();
+    }
+    if let Some(id) = a.get("fetch") {
+        let mut net = store::SimulatedNetwork::lte();
+        let dest = std::path::PathBuf::from(a.get_or("dest", "./fetched")).join(id);
+        let stats = registry.fetch_to(id, &mut net, &dest)?;
+        println!(
+            "fetched `{id}` -> {} ({} over simulated LTE: {:.2} s modeled)",
+            dest.display(),
+            metrics::fmt_bytes(stats.bytes as u64),
+            stats.modeled.as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_devices(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk devices", "device tiers + projected NIN latency");
+    cmd.parse(argv)?;
+    let nin = model::nin_cifar10();
+    let flops = nin.flops()?;
+    let bytes = (nin.param_count()? * 4 + 20_000_000) as u64; // weights + activation traffic
+    let mut table = metrics::Table::new(
+        "device tiers (projected NIN-CIFAR10 batch-1 latency)",
+        &["tier", "GFLOP/s", "eff", "latency", "bound"],
+    );
+    for t in device::TIERS {
+        let est = device::project_latency(t, flops, bytes);
+        table.row(&[
+            t.marketing.to_string(),
+            format!("{:.0}", t.gflops),
+            format!("{:.0}%", t.efficiency * 100.0),
+            metrics::fmt_us(est.latency.as_micros() as f64),
+            if est.compute_bound { "compute".into() } else { "memory".into() },
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_energy(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk energy", "train-vs-inference energy");
+    cmd.parse(argv)?;
+    let nin = model::nin_cifar10();
+    let flops = nin.flops()? as f64;
+    let titan = device::tier("nvidia-titanx")?;
+    let phone = device::tier("powervr-gt7600")?;
+    let train = energy::training_energy(&titan, flops, 128, 120_000);
+    let infer = energy::inference_energy(&phone, flops);
+    let mut table = metrics::Table::new(
+        "energy: train once vs run once (NIN-CIFAR10)",
+        &["phase", "device", "joules", "in paper units"],
+    );
+    table.row(&[
+        "training (120k steps)".into(),
+        titan.marketing.into(),
+        format!("{:.0}", train.joules),
+        format!("{:.1} kg firewood", train.firewood_kg()),
+    ]);
+    table.row(&[
+        "one inference".into(),
+        phone.marketing.into(),
+        format!("{:.4}", infer.joules),
+        format!("{:.5} matches", infer.matches()),
+    ]);
+    table.print();
+    println!("asymmetry: {:.0}x", train.joules / infer.joules);
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, base-2 buckets with
+//! linear sub-buckets). Constant memory, O(1) record, approximate quantiles
+//! with bounded relative error (~1/16).
+
+/// Number of linear sub-buckets per power-of-two bucket. 16 gives ≤6.25%
+/// relative quantile error, plenty for latency reporting.
+const SUB_BUCKETS: usize = 16;
+/// Covers values up to 2^40 µs (~12 days) — effectively unbounded.
+const BUCKETS: usize = 41;
+
+/// Histogram over `u64` values (we use microseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS * SUB_BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(value: u64) -> usize {
+        if value < SUB_BUCKETS as u64 {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros() as usize;
+        let bucket = msb - 3; // first 4 bits are covered by the linear region
+        let sub = ((value >> (msb - 4)) & 0xF) as usize;
+        (bucket * SUB_BUCKETS + sub).min(BUCKETS * SUB_BUCKETS - 1)
+    }
+
+    /// Representative (lower-bound) value of a bucket index.
+    fn value_of(index: usize) -> u64 {
+        if index < SUB_BUCKETS {
+            return index as u64;
+        }
+        let bucket = index / SUB_BUCKETS;
+        let sub = index % SUB_BUCKETS;
+        let msb = bucket + 3;
+        (1u64 << msb) | ((sub as u64) << (msb - 4))
+    }
+
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index(value)] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile (`q` in [0,1]). Returns the representative value
+    /// of the bucket containing the q-th sample.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Clamp representative into observed range for tails.
+                return Self::value_of(i).clamp(self.min(), self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fraction of recorded values ≤ `threshold`.
+    pub fn fraction_under(&self, threshold: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let idx = Self::index(threshold);
+        let under: u64 = self.counts[..=idx].iter().sum();
+        under as f64 / self.total as f64
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.fraction_under(100), 0.0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.5), 3);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 5);
+        assert_eq!(h.mean(), 3.0);
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        let mut h = Histogram::new();
+        let mut rng = crate::testutil::XorShiftRng::new(21);
+        let mut values: Vec<u64> = (0..10_000).map(|_| rng.range_usize(1, 5_000_000) as u64).collect();
+        for &v in &values {
+            h.record(v);
+        }
+        values.sort_unstable();
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let exact = values[((q * values.len() as f64).ceil() as usize - 1).min(values.len() - 1)];
+            let approx = h.quantile(q);
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.07, "q={q} exact={exact} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn fraction_under_matches_exact() {
+        let mut h = Histogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        let f = h.fraction_under(499);
+        assert!((f - 0.5).abs() < 0.07, "f={f}");
+        assert_eq!(h.fraction_under(10_000), 1.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        b.record(2000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 2000);
+    }
+
+    #[test]
+    fn index_value_monotone() {
+        // Property: bucket index is monotone in the value, and value_of is a
+        // lower bound of values mapping to that index.
+        let mut prev = 0;
+        for v in (0..1_000_000u64).step_by(997) {
+            let i = Histogram::index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            prev = i;
+            assert!(Histogram::value_of(i) <= v.max(1), "v={v} i={i}");
+        }
+    }
+}

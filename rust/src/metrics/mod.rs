@@ -1,0 +1,112 @@
+//! Metrics substrate: latency histograms, counters, and formatted reports.
+//!
+//! The coordinator tracks every request against the paper's responsiveness
+//! bar (Nielsen's 100 ms "feels instantaneous" threshold, §1.1); benches use
+//! the same histogram for p50/p95/p99 tables.
+
+mod histogram;
+mod report;
+
+pub use histogram::Histogram;
+pub use report::{fmt_bytes, fmt_us, Table};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing counter (thread-safe).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Snapshot of serving statistics, assembled by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct ServingStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub mean_batch_size: f64,
+    pub throughput_rps: f64,
+    /// Fraction of requests under the 100 ms Nielsen threshold.
+    pub slo_attainment: f64,
+}
+
+impl ServingStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} rejected={} p50={:.2}ms p95={:.2}ms p99={:.2}ms \
+             mean_batch={:.2} throughput={:.1} req/s slo(100ms)={:.1}%",
+            self.requests,
+            self.batches,
+            self.rejected,
+            self.p50_us as f64 / 1000.0,
+            self.p95_us as f64 / 1000.0,
+            self.p99_us as f64 / 1000.0,
+            self.mean_batch_size,
+            self.throughput_rps,
+            self.slo_attainment * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn counter_thread_safe() {
+        let c = std::sync::Arc::new(Counter::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn stats_summary_formats() {
+        let s = ServingStats { requests: 10, p50_us: 1500, slo_attainment: 0.95, ..Default::default() };
+        let text = s.summary();
+        assert!(text.contains("requests=10"));
+        assert!(text.contains("p50=1.50ms"));
+        assert!(text.contains("slo(100ms)=95.0%"));
+    }
+}

@@ -1,0 +1,459 @@
+//! Architecture IR: a linear stack of typed layers (the paper's networks —
+//! NIN, LeNet, char-CNN — are all sequential graphs).
+//!
+//! The IR knows how to (a) infer every intermediate shape, (b) enumerate
+//! its parameter tensors with canonical names, and (c) count FLOPs/bytes —
+//! the numbers behind the device-latency (E1), energy (E3) and per-layer
+//! (E9) experiments.
+
+use crate::json::Value;
+use crate::tensor::Shape;
+
+/// Activation attached to conv/dense layers in imports; standalone ReLU
+/// layers also exist (paper lists "rectifier layer" as its own operator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Sigmoid,
+    Tanh,
+}
+
+impl Activation {
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Activation> {
+        match s {
+            "none" => Ok(Activation::None),
+            "relu" => Ok(Activation::Relu),
+            "sigmoid" => Ok(Activation::Sigmoid),
+            "tanh" => Ok(Activation::Tanh),
+            other => anyhow::bail!("unknown activation `{other}`"),
+        }
+    }
+}
+
+/// Layer types supported by the format (superset of the paper's operator
+/// list: convolution, pooling, rectifier, softmax; plus dense/flatten/
+/// dropout needed for LeNet, and 1-D variants for the char-CNN).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv2d { out_ch: usize, k: usize, stride: usize, pad: usize },
+    Conv1d { out_ch: usize, k: usize, stride: usize, pad: usize },
+    Relu,
+    MaxPool2d { k: usize, stride: usize, pad: usize },
+    AvgPool2d { k: usize, stride: usize, pad: usize },
+    MaxPool1d { k: usize, stride: usize },
+    GlobalAvgPool,
+    Dense { out: usize },
+    Flatten,
+    /// Inference no-op; kept so imported training graphs round-trip.
+    Dropout { rate: f64 },
+    Softmax,
+}
+
+impl LayerKind {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv2d { .. } => "conv2d",
+            LayerKind::Conv1d { .. } => "conv1d",
+            LayerKind::Relu => "relu",
+            LayerKind::MaxPool2d { .. } => "max_pool2d",
+            LayerKind::AvgPool2d { .. } => "avg_pool2d",
+            LayerKind::MaxPool1d { .. } => "max_pool1d",
+            LayerKind::GlobalAvgPool => "global_avg_pool",
+            LayerKind::Dense { .. } => "dense",
+            LayerKind::Flatten => "flatten",
+            LayerKind::Dropout { .. } => "dropout",
+            LayerKind::Softmax => "softmax",
+        }
+    }
+}
+
+/// A named layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// A sequential model: input shape (without batch dim) + layers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Architecture {
+    pub name: String,
+    /// Input shape *without* the batch dimension: `[C,H,W]` or `[C,L]`.
+    pub input: Vec<usize>,
+    pub layers: Vec<Layer>,
+}
+
+impl Architecture {
+    pub fn new(name: &str, input: &[usize]) -> Architecture {
+        Architecture { name: name.to_string(), input: input.to_vec(), layers: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, kind: LayerKind) -> &mut Self {
+        self.layers.push(Layer { name: name.to_string(), kind });
+        self
+    }
+
+    /// Shape after every layer (index 0 = input), batch dim excluded.
+    /// Errors if any layer is incompatible with its input — this is the
+    /// format validator the importer relies on.
+    pub fn shapes(&self) -> crate::Result<Vec<Vec<usize>>> {
+        let mut shapes = vec![self.input.clone()];
+        let mut cur = self.input.clone();
+        for layer in &self.layers {
+            cur = next_shape(&cur, layer)?;
+            shapes.push(cur.clone());
+        }
+        Ok(shapes)
+    }
+
+    /// Output shape (no batch dim).
+    pub fn output_shape(&self) -> crate::Result<Vec<usize>> {
+        Ok(self.shapes()?.pop().unwrap())
+    }
+
+    /// Number of classes if the model ends in softmax over a vector.
+    pub fn num_classes(&self) -> crate::Result<usize> {
+        let out = self.output_shape()?;
+        anyhow::ensure!(out.len() == 1, "model output is not a class vector: {out:?}");
+        Ok(out[0])
+    }
+
+    /// Parameter tensors as `(name, shape)` in execution order. Conv
+    /// weights are `[oc, ic, k, k]` / `[oc, ic, k]`, dense `[out, in]`,
+    /// biases `[out]`; names are `<layer>.w` / `<layer>.b`.
+    pub fn parameters(&self) -> crate::Result<Vec<(String, Shape)>> {
+        let shapes = self.shapes()?;
+        let mut params = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let inp = &shapes[i];
+            match &layer.kind {
+                LayerKind::Conv2d { out_ch, k, .. } => {
+                    params.push((format!("{}.w", layer.name), Shape::new(&[*out_ch, inp[0], *k, *k])));
+                    params.push((format!("{}.b", layer.name), Shape::new(&[*out_ch])));
+                }
+                LayerKind::Conv1d { out_ch, k, .. } => {
+                    params.push((format!("{}.w", layer.name), Shape::new(&[*out_ch, inp[0], *k])));
+                    params.push((format!("{}.b", layer.name), Shape::new(&[*out_ch])));
+                }
+                LayerKind::Dense { out } => {
+                    let in_f: usize = inp.iter().product();
+                    params.push((format!("{}.w", layer.name), Shape::new(&[*out, in_f])));
+                    params.push((format!("{}.b", layer.name), Shape::new(&[*out])));
+                }
+                _ => {}
+            }
+        }
+        Ok(params)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> crate::Result<usize> {
+        Ok(self.parameters()?.iter().map(|(_, s)| s.numel()).sum())
+    }
+
+    /// Multiply-accumulate count for a single input (batch 1). The paper's
+    /// device/energy experiments scale from this.
+    pub fn macs(&self) -> crate::Result<u64> {
+        let shapes = self.shapes()?;
+        let mut total: u64 = 0;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let inp = &shapes[i];
+            let out = &shapes[i + 1];
+            total += match &layer.kind {
+                LayerKind::Conv2d { out_ch, k, .. } => {
+                    // out_ch*oh*ow positions x ic*k*k MACs
+                    (out_ch * out[1] * out[2] * inp[0] * k * k) as u64
+                }
+                LayerKind::Conv1d { out_ch, k, .. } => (out_ch * out[1] * inp[0] * k) as u64,
+                LayerKind::Dense { out: of } => (of * inp.iter().product::<usize>()) as u64,
+                _ => 0,
+            };
+        }
+        Ok(total)
+    }
+
+    /// FLOPs ≈ 2 × MACs.
+    pub fn flops(&self) -> crate::Result<u64> {
+        Ok(self.macs()? * 2)
+    }
+
+    /// Depth as the paper counts it for "20 layer deep convolutional neural
+    /// network" — every operator stage (conv/relu/pool/... excluding
+    /// dropout no-ops) counts.
+    pub fn depth(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| !matches!(l.kind, LayerKind::Dropout { .. }))
+            .count()
+    }
+
+    // ---- JSON (manifest embedding) -----------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut layers = Value::array();
+        for layer in &self.layers {
+            let mut v = Value::object();
+            v.insert("name", layer.name.as_str().into());
+            v.insert("type", layer.kind.type_name().into());
+            match &layer.kind {
+                LayerKind::Conv2d { out_ch, k, stride, pad }
+                | LayerKind::Conv1d { out_ch, k, stride, pad } => {
+                    v.insert("out_ch", (*out_ch).into());
+                    v.insert("k", (*k).into());
+                    v.insert("stride", (*stride).into());
+                    v.insert("pad", (*pad).into());
+                }
+                LayerKind::MaxPool2d { k, stride, pad } | LayerKind::AvgPool2d { k, stride, pad } => {
+                    v.insert("k", (*k).into());
+                    v.insert("stride", (*stride).into());
+                    v.insert("pad", (*pad).into());
+                }
+                LayerKind::MaxPool1d { k, stride } => {
+                    v.insert("k", (*k).into());
+                    v.insert("stride", (*stride).into());
+                }
+                LayerKind::Dense { out } => {
+                    v.insert("out", (*out).into());
+                }
+                LayerKind::Dropout { rate } => {
+                    v.insert("rate", (*rate).into());
+                }
+                _ => {}
+            }
+            layers.push(v);
+        }
+        Value::obj(&[
+            ("name", self.name.as_str().into()),
+            ("input", Value::Array(self.input.iter().map(|&d| d.into()).collect())),
+            ("layers", layers),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> crate::Result<Architecture> {
+        let name = v.req_str("name")?;
+        let input: Vec<usize> = v
+            .req_array("input")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad input dim")))
+            .collect::<crate::Result<_>>()?;
+        let mut arch = Architecture::new(name, &input);
+        for (i, lv) in v.req_array("layers")?.iter().enumerate() {
+            let lname = lv.req_str("name")?;
+            let ty = lv.req_str("type")?;
+            let kind = match ty {
+                "conv2d" => LayerKind::Conv2d {
+                    out_ch: lv.req_usize("out_ch")?,
+                    k: lv.req_usize("k")?,
+                    stride: lv.req_usize("stride")?,
+                    pad: lv.req_usize("pad")?,
+                },
+                "conv1d" => LayerKind::Conv1d {
+                    out_ch: lv.req_usize("out_ch")?,
+                    k: lv.req_usize("k")?,
+                    stride: lv.req_usize("stride")?,
+                    pad: lv.req_usize("pad")?,
+                },
+                "relu" => LayerKind::Relu,
+                "max_pool2d" => LayerKind::MaxPool2d {
+                    k: lv.req_usize("k")?,
+                    stride: lv.req_usize("stride")?,
+                    pad: lv.req_usize("pad")?,
+                },
+                "avg_pool2d" => LayerKind::AvgPool2d {
+                    k: lv.req_usize("k")?,
+                    stride: lv.req_usize("stride")?,
+                    pad: lv.req_usize("pad")?,
+                },
+                "max_pool1d" => LayerKind::MaxPool1d {
+                    k: lv.req_usize("k")?,
+                    stride: lv.req_usize("stride")?,
+                },
+                "global_avg_pool" => LayerKind::GlobalAvgPool,
+                "dense" => LayerKind::Dense { out: lv.req_usize("out")? },
+                "flatten" => LayerKind::Flatten,
+                "dropout" => LayerKind::Dropout { rate: lv.req_f64("rate")? },
+                "softmax" => LayerKind::Softmax,
+                other => anyhow::bail!("layer {i} (`{lname}`): unknown type `{other}`"),
+            };
+            arch.push(lname, kind);
+        }
+        // Validate by inferring shapes.
+        arch.shapes()
+            .map_err(|e| anyhow::anyhow!("architecture `{name}` is inconsistent: {e}"))?;
+        Ok(arch)
+    }
+}
+
+/// Shape inference for one layer (batch dim excluded).
+fn next_shape(inp: &[usize], layer: &Layer) -> crate::Result<Vec<usize>> {
+    let err = |msg: String| anyhow::anyhow!("layer `{}`: {msg}", layer.name);
+    match &layer.kind {
+        LayerKind::Conv2d { out_ch, k, stride, pad } => {
+            if inp.len() != 3 {
+                return Err(err(format!("conv2d expects [C,H,W] input, got {inp:?}")));
+            }
+            let p = crate::nn::Conv2dParams::new(*stride, *pad);
+            let (oh, ow) = p.out_hw(inp[1], inp[2], *k).map_err(|e| err(e.to_string()))?;
+            Ok(vec![*out_ch, oh, ow])
+        }
+        LayerKind::Conv1d { out_ch, k, stride, pad } => {
+            if inp.len() != 2 {
+                return Err(err(format!("conv1d expects [C,L] input, got {inp:?}")));
+            }
+            let p = crate::nn::Conv1dParams { stride: *stride, pad: *pad };
+            let ol = p.out_len(inp[1], *k).map_err(|e| err(e.to_string()))?;
+            Ok(vec![*out_ch, ol])
+        }
+        LayerKind::Relu | LayerKind::Dropout { .. } => Ok(inp.to_vec()),
+        LayerKind::MaxPool2d { k, stride, pad } | LayerKind::AvgPool2d { k, stride, pad } => {
+            if inp.len() != 3 {
+                return Err(err(format!("pool2d expects [C,H,W] input, got {inp:?}")));
+            }
+            let p = crate::nn::Pool2dParams::new(*k, *stride, *pad);
+            let (oh, ow) = p.out_hw(inp[1], inp[2]).map_err(|e| err(e.to_string()))?;
+            Ok(vec![inp[0], oh, ow])
+        }
+        LayerKind::MaxPool1d { k, stride } => {
+            if inp.len() != 2 {
+                return Err(err(format!("pool1d expects [C,L] input, got {inp:?}")));
+            }
+            if inp[1] < *k {
+                return Err(err(format!("window {k} larger than length {}", inp[1])));
+            }
+            Ok(vec![inp[0], (inp[1] - k) / stride + 1])
+        }
+        LayerKind::GlobalAvgPool => {
+            if inp.len() != 3 {
+                return Err(err(format!("gap expects [C,H,W] input, got {inp:?}")));
+            }
+            Ok(vec![inp[0]])
+        }
+        LayerKind::Dense { out } => Ok(vec![*out]),
+        LayerKind::Flatten => Ok(vec![inp.iter().product()]),
+        LayerKind::Softmax => {
+            if inp.len() != 1 {
+                return Err(err(format!("softmax expects a vector, got {inp:?}")));
+            }
+            Ok(inp.to_vec())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Architecture {
+        let mut a = Architecture::new("tiny", &[3, 8, 8]);
+        a.push("conv1", LayerKind::Conv2d { out_ch: 4, k: 3, stride: 1, pad: 1 });
+        a.push("relu1", LayerKind::Relu);
+        a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+        a.push("gap", LayerKind::GlobalAvgPool);
+        a.push("softmax", LayerKind::Softmax);
+        a
+    }
+
+    #[test]
+    fn shape_inference() {
+        let shapes = tiny().shapes().unwrap();
+        assert_eq!(shapes[0], vec![3, 8, 8]);
+        assert_eq!(shapes[1], vec![4, 8, 8]); // padded conv preserves hw
+        assert_eq!(shapes[3], vec![4, 4, 4]); // pooled
+        assert_eq!(shapes[5], vec![4]);
+        assert_eq!(tiny().num_classes().unwrap(), 4);
+    }
+
+    #[test]
+    fn parameters_enumerated() {
+        let params = tiny().parameters().unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].0, "conv1.w");
+        assert_eq!(params[0].1.dims(), &[4, 3, 3, 3]);
+        assert_eq!(params[1].0, "conv1.b");
+        assert_eq!(tiny().param_count().unwrap(), 4 * 3 * 9 + 4);
+    }
+
+    #[test]
+    fn macs_counted() {
+        // conv: 4 out_ch * 8*8 positions * 3 ic * 9 k² = 6912 MACs
+        assert_eq!(tiny().macs().unwrap(), 6912);
+        assert_eq!(tiny().flops().unwrap(), 13824);
+    }
+
+    #[test]
+    fn depth_ignores_dropout() {
+        let mut a = tiny();
+        a.push("drop", LayerKind::Dropout { rate: 0.5 });
+        assert_eq!(a.depth(), 5);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let a = tiny();
+        let j = a.to_json();
+        let b = Architecture::from_json(&j).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn json_round_trip_all_layer_kinds() {
+        let mut a = Architecture::new("all", &[2, 16]);
+        a.push("c1", LayerKind::Conv1d { out_ch: 3, k: 3, stride: 1, pad: 1 });
+        a.push("r", LayerKind::Relu);
+        a.push("p", LayerKind::MaxPool1d { k: 2, stride: 2 });
+        a.push("f", LayerKind::Flatten);
+        a.push("d", LayerKind::Dense { out: 5 });
+        a.push("dr", LayerKind::Dropout { rate: 0.25 });
+        a.push("s", LayerKind::Softmax);
+        let b = Architecture::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.num_classes().unwrap(), 5);
+    }
+
+    #[test]
+    fn inconsistent_architecture_rejected() {
+        // Softmax over an image is invalid.
+        let mut a = Architecture::new("bad", &[3, 8, 8]);
+        a.push("s", LayerKind::Softmax);
+        assert!(a.shapes().is_err());
+        assert!(Architecture::from_json(&a.to_json()).is_err());
+    }
+
+    #[test]
+    fn conv_too_large_rejected() {
+        let mut a = Architecture::new("bad", &[3, 4, 4]);
+        a.push("c", LayerKind::Conv2d { out_ch: 1, k: 7, stride: 1, pad: 0 });
+        assert!(a.shapes().is_err());
+    }
+
+    #[test]
+    fn unknown_layer_type_rejected() {
+        let mut j = tiny().to_json();
+        // Patch layer 0's type.
+        if let crate::json::Value::Object(o) = &mut j {
+            if let Some(crate::json::Value::Array(layers)) = o.get_mut("layers") {
+                layers[0].insert("type", "warp_drive".into());
+            }
+        }
+        let e = Architecture::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("warp_drive"), "{e}");
+    }
+
+    #[test]
+    fn activation_parse_round_trip() {
+        for a in [Activation::None, Activation::Relu, Activation::Sigmoid, Activation::Tanh] {
+            assert_eq!(Activation::parse(a.name()).unwrap(), a);
+        }
+        assert!(Activation::parse("gelu").is_err());
+    }
+}

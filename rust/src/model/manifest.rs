@@ -1,0 +1,206 @@
+//! Model manifest: the JSON document that travels with every model through
+//! the importer, the store and the runtime. Mirrors the paper's
+//! Caffe-model-to-JSON interchange and adds the metadata the App Store
+//! needs (version, source framework, integrity hashes, available AOT
+//! artifacts).
+
+use super::architecture::Architecture;
+use crate::json::{self, Value};
+use std::path::{Path, PathBuf};
+
+/// File names inside a model directory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelFiles {
+    pub dir: PathBuf,
+}
+
+impl ModelFiles {
+    pub fn new(dir: impl Into<PathBuf>) -> ModelFiles {
+        ModelFiles { dir: dir.into() }
+    }
+
+    pub fn manifest(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+
+    pub fn weights(&self) -> PathBuf {
+        self.dir.join("weights.dlkw")
+    }
+
+    /// HLO artifact for a given batch size.
+    pub fn hlo(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("model_b{batch}.hlo.txt"))
+    }
+}
+
+/// The model manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Unique id, e.g. `nin-cifar10`.
+    pub id: String,
+    pub version: u32,
+    /// Source framework (the paper imports Caffe and Theano models).
+    pub source: String,
+    /// Human description.
+    pub description: String,
+    pub arch: Architecture,
+    /// Class labels, when known (len == num_classes).
+    pub labels: Vec<String>,
+    /// sha256 of the weights file (hex), filled at publish time.
+    pub weights_sha256: Option<String>,
+    /// Batch sizes with AOT-compiled HLO artifacts.
+    pub aot_batches: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn new(id: &str, arch: Architecture) -> Manifest {
+        Manifest {
+            id: id.to_string(),
+            version: 1,
+            source: "deeplearningkit".to_string(),
+            description: String::new(),
+            arch,
+            labels: Vec::new(),
+            weights_sha256: None,
+            aot_batches: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj(&[
+            ("format", "dlk-model/1".into()),
+            ("id", self.id.as_str().into()),
+            ("version", (self.version as i64).into()),
+            ("source", self.source.as_str().into()),
+            ("description", self.description.as_str().into()),
+            ("architecture", self.arch.to_json()),
+            (
+                "labels",
+                Value::Array(self.labels.iter().map(|l| l.as_str().into()).collect()),
+            ),
+            (
+                "aot_batches",
+                Value::Array(self.aot_batches.iter().map(|&b| b.into()).collect()),
+            ),
+        ]);
+        if let Some(h) = &self.weights_sha256 {
+            v.insert("weights_sha256", h.as_str().into());
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> crate::Result<Manifest> {
+        let format = v.req_str("format")?;
+        anyhow::ensure!(
+            format == "dlk-model/1",
+            "unsupported manifest format `{format}` (expected dlk-model/1)"
+        );
+        let arch = Architecture::from_json(
+            v.get("architecture")
+                .ok_or_else(|| anyhow::anyhow!("manifest missing `architecture`"))?,
+        )?;
+        let labels: Vec<String> = match v.get("labels") {
+            Some(Value::Array(items)) => items
+                .iter()
+                .map(|l| {
+                    l.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow::anyhow!("non-string label"))
+                })
+                .collect::<crate::Result<_>>()?,
+            _ => Vec::new(),
+        };
+        if !labels.is_empty() {
+            let classes = arch.num_classes()?;
+            anyhow::ensure!(
+                labels.len() == classes,
+                "manifest has {} labels but model outputs {classes} classes",
+                labels.len()
+            );
+        }
+        let aot_batches: Vec<usize> = match v.get("aot_batches") {
+            Some(Value::Array(items)) => items
+                .iter()
+                .map(|b| b.as_usize().ok_or_else(|| anyhow::anyhow!("bad aot batch size")))
+                .collect::<crate::Result<_>>()?,
+            _ => Vec::new(),
+        };
+        Ok(Manifest {
+            id: v.req_str("id")?.to_string(),
+            version: v.req_i64("version")? as u32,
+            source: v.req_str("source")?.to_string(),
+            description: v.req_str("description")?.to_string(),
+            arch,
+            labels,
+            weights_sha256: v.get("weights_sha256").and_then(Value::as_str).map(String::from),
+            aot_batches,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        json::to_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Manifest> {
+        Self::from_json(&json::from_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::architecture::{Architecture, LayerKind};
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut arch = Architecture::new("tiny", &[1, 8, 8]);
+        arch.push("conv1", LayerKind::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 });
+        arch.push("gap", LayerKind::GlobalAvgPool);
+        arch.push("softmax", LayerKind::Softmax);
+        let mut m = Manifest::new("tiny-demo", arch);
+        m.description = "demo".into();
+        m.labels = vec!["cat".into(), "dog".into()];
+        m.aot_batches = vec![1, 8];
+        m
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = sample();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = crate::testutil::tempdir("manifest");
+        let path = dir.join("manifest.json");
+        let mut m = sample();
+        m.weights_sha256 = Some("ab".repeat(32));
+        m.save(&path).unwrap();
+        let back = Manifest::load(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn label_count_validated() {
+        let mut j = sample().to_json();
+        j.insert("labels", Value::Array(vec!["one".into()]));
+        let e = Manifest::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("labels"), "{e}");
+    }
+
+    #[test]
+    fn unknown_format_rejected() {
+        let mut j = sample().to_json();
+        j.insert("format", "dlk-model/99".into());
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn model_files_paths() {
+        let f = ModelFiles::new("/tmp/m");
+        assert!(f.manifest().ends_with("manifest.json"));
+        assert!(f.weights().ends_with("weights.dlkw"));
+        assert!(f.hlo(8).ends_with("model_b8.hlo.txt"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Model format: architecture IR, JSON manifest, binary weights container,
+//! and the model zoo.
+//!
+//! This is the reproduction of the paper's §3 "Deep Learning Model
+//! Importer" interchange: a trained network is shipped as a **JSON
+//! manifest** (architecture + metadata + integrity hashes) plus a **binary
+//! weights file**. The same IR is mirrored by the Python side
+//! (`python/compile/model.py`), which guarantees the Rust coordinator, the
+//! CPU reference backend and the AOT-compiled JAX graphs all agree on what
+//! a model *is*.
+
+mod architecture;
+mod manifest;
+mod weights;
+mod zoo;
+
+pub use architecture::{Activation, Architecture, Layer, LayerKind};
+pub use manifest::{Manifest, ModelFiles};
+pub use weights::{WeightStore, WEIGHTS_MAGIC};
+pub use zoo::{alexnet_class, char_cnn, lenet, nin_cifar10, zoo_models};

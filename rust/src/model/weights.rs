@@ -1,0 +1,310 @@
+//! Binary weights container ("DLKW" format).
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic "DLKW"            4 bytes
+//! version u32             4 bytes
+//! header_len u32          4 bytes
+//! header JSON             header_len bytes — [{name, dtype, shape, offset,
+//!                          len, scale?}, ...] offsets relative to blob start
+//! blob                    concatenated tensor payloads
+//! ```
+//! Tensors may be stored as `f32`, `f16` or `i8` (per-tensor symmetric
+//! scale) — the lower-precision roadmap item (E7). Reading always yields
+//! `f32` tensors.
+
+use crate::json::{self, Value};
+use crate::tensor::{DType, Shape, Tensor};
+use std::collections::BTreeMap;
+use std::io::Write;
+
+pub const WEIGHTS_MAGIC: &[u8; 4] = b"DLKW";
+const VERSION: u32 = 1;
+
+/// An in-memory named weight collection with binary (de)serialization.
+#[derive(Clone, Debug, Default)]
+pub struct WeightStore {
+    tensors: BTreeMap<String, Tensor>,
+    /// Storage dtype per tensor (defaults to f32).
+    dtypes: BTreeMap<String, DType>,
+}
+
+impl WeightStore {
+    pub fn new() -> WeightStore {
+        WeightStore::default()
+    }
+
+    pub fn insert(&mut self, name: &str, tensor: Tensor) {
+        self.tensors.insert(name.to_string(), tensor);
+    }
+
+    /// Set the storage dtype used when serializing `name`.
+    pub fn set_dtype(&mut self, name: &str, dtype: DType) {
+        self.dtypes.insert(name.to_string(), dtype);
+    }
+
+    /// Set every tensor's storage dtype.
+    pub fn set_all_dtypes(&mut self, dtype: DType) {
+        for name in self.tensors.keys().cloned().collect::<Vec<_>>() {
+            self.dtypes.insert(name, dtype);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight `{name}` not found"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+
+    /// Serialize to the DLKW binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut blob: Vec<u8> = Vec::new();
+        let mut header = Value::array();
+        for (name, tensor) in &self.tensors {
+            let dtype = self.dtypes.get(name).copied().unwrap_or(DType::F32);
+            let offset = blob.len();
+            let mut entry = Value::object();
+            match dtype {
+                DType::F32 => blob.extend_from_slice(&tensor.to_f32_bytes()),
+                DType::F16 => blob.extend_from_slice(&tensor.to_f16_bytes()),
+                DType::I8 => {
+                    let (bytes, scale) = tensor.to_i8_bytes();
+                    blob.extend_from_slice(&bytes);
+                    entry.insert("scale", (scale as f64).into());
+                }
+            }
+            entry.insert("name", name.as_str().into());
+            entry.insert("dtype", dtype.name().into());
+            entry.insert(
+                "shape",
+                Value::Array(tensor.shape().dims().iter().map(|&d| d.into()).collect()),
+            );
+            entry.insert("offset", offset.into());
+            entry.insert("len", (blob.len() - offset).into());
+            header.push(entry);
+        }
+        let header_bytes = json::to_string(&header).into_bytes();
+        let mut out = Vec::with_capacity(12 + header_bytes.len() + blob.len());
+        out.write_all(WEIGHTS_MAGIC).unwrap();
+        out.write_all(&VERSION.to_le_bytes()).unwrap();
+        out.write_all(&(header_bytes.len() as u32).to_le_bytes()).unwrap();
+        out.write_all(&header_bytes).unwrap();
+        out.write_all(&blob).unwrap();
+        out
+    }
+
+    /// Deserialize from the DLKW binary format.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<WeightStore> {
+        anyhow::ensure!(bytes.len() >= 12, "weights file truncated ({} bytes)", bytes.len());
+        anyhow::ensure!(&bytes[0..4] == WEIGHTS_MAGIC, "bad magic (not a DLKW file)");
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        anyhow::ensure!(version == VERSION, "unsupported DLKW version {version}");
+        let header_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        anyhow::ensure!(bytes.len() >= 12 + header_len, "weights header truncated");
+        let header_text = std::str::from_utf8(&bytes[12..12 + header_len])
+            .map_err(|_| anyhow::anyhow!("weights header is not UTF-8"))?;
+        let header = json::parse(header_text)?;
+        let blob = &bytes[12 + header_len..];
+
+        let mut store = WeightStore::new();
+        for entry in header
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("weights header must be an array"))?
+        {
+            let name = entry.req_str("name")?;
+            let dtype = DType::parse(entry.req_str("dtype")?)?;
+            let dims: Vec<usize> = entry
+                .req_array("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim in `{name}`")))
+                .collect::<crate::Result<_>>()?;
+            let shape = Shape::new(&dims);
+            let offset = entry.req_usize("offset")?;
+            let len = entry.req_usize("len")?;
+            anyhow::ensure!(
+                offset + len <= blob.len(),
+                "tensor `{name}` extends past blob end ({} > {})",
+                offset + len,
+                blob.len()
+            );
+            let payload = &blob[offset..offset + len];
+            let tensor = match dtype {
+                DType::F32 => Tensor::from_f32_bytes(shape, payload)?,
+                DType::F16 => Tensor::from_f16_bytes(shape, payload)?,
+                DType::I8 => {
+                    let scale = entry.req_f64("scale")? as f32;
+                    Tensor::from_i8_bytes(shape, payload, scale)?
+                }
+            };
+            store.dtypes.insert(name.to_string(), dtype);
+            store.insert(name, tensor);
+        }
+        Ok(store)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Validate against an architecture: every parameter present with the
+    /// right shape, no extras.
+    pub fn validate(&self, arch: &super::Architecture) -> crate::Result<()> {
+        let params = arch.parameters()?;
+        for (name, shape) in &params {
+            let t = self
+                .tensors
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("model `{}` missing weight `{name}`", arch.name))?;
+            anyhow::ensure!(
+                t.shape() == shape,
+                "weight `{name}` has shape {} but architecture expects {shape}",
+                t.shape()
+            );
+        }
+        anyhow::ensure!(
+            self.tensors.len() == params.len(),
+            "weights file has {} tensors, architecture expects {}",
+            self.tensors.len(),
+            params.len()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::architecture::{Architecture, LayerKind};
+    use super::*;
+    use crate::testutil::assert_allclose;
+
+    fn sample() -> WeightStore {
+        let mut ws = WeightStore::new();
+        ws.insert("conv1.w", Tensor::randn(&[4, 3, 3, 3][..], 81, 0.1));
+        ws.insert("conv1.b", Tensor::randn(&[4][..], 82, 0.1));
+        ws
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let ws = sample();
+        let back = WeightStore::from_bytes(&ws.to_bytes()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("conv1.w").unwrap(), ws.get("conv1.w").unwrap());
+        assert_eq!(back.get("conv1.b").unwrap(), ws.get("conv1.b").unwrap());
+    }
+
+    #[test]
+    fn f16_round_trip_lossy_but_close() {
+        let mut ws = sample();
+        ws.set_all_dtypes(DType::F16);
+        let back = WeightStore::from_bytes(&ws.to_bytes()).unwrap();
+        assert_allclose(
+            back.get("conv1.w").unwrap().data(),
+            ws.get("conv1.w").unwrap().data(),
+            1.0 / 1024.0,
+            1e-4,
+        );
+    }
+
+    #[test]
+    fn i8_round_trip_bounded_error() {
+        let mut ws = sample();
+        ws.set_dtype("conv1.w", DType::I8);
+        let back = WeightStore::from_bytes(&ws.to_bytes()).unwrap();
+        let orig = ws.get("conv1.w").unwrap();
+        let max_abs = orig.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = max_abs / 127.0;
+        for (&a, &e) in back.get("conv1.w").unwrap().data().iter().zip(orig.data()) {
+            assert!((a - e).abs() <= scale * 0.5 + 1e-6);
+        }
+        // Bias stayed f32-exact.
+        assert_eq!(back.get("conv1.b").unwrap(), ws.get("conv1.b").unwrap());
+    }
+
+    #[test]
+    fn mixed_dtypes_sizes() {
+        let mut ws = sample();
+        let full = ws.to_bytes().len();
+        ws.set_dtype("conv1.w", DType::F16);
+        let half = ws.to_bytes().len();
+        assert!(half < full, "f16 encoding should shrink the file ({half} vs {full})");
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let ws = sample();
+        let bytes = ws.to_bytes();
+        assert!(WeightStore::from_bytes(&bytes[..8]).is_err()); // truncated
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(WeightStore::from_bytes(&bad_magic).is_err());
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 99;
+        assert!(WeightStore::from_bytes(&bad_version).is_err());
+        let mut truncated_blob = bytes.clone();
+        truncated_blob.truncate(bytes.len() - 8);
+        assert!(WeightStore::from_bytes(&truncated_blob).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = crate::testutil::tempdir("weights");
+        let path = dir.join("w.dlkw");
+        let ws = sample();
+        ws.save(&path).unwrap();
+        let back = WeightStore::load(&path).unwrap();
+        assert_eq!(back.get("conv1.w").unwrap(), ws.get("conv1.w").unwrap());
+    }
+
+    #[test]
+    fn validate_against_architecture() {
+        let mut arch = Architecture::new("m", &[3, 8, 8]);
+        arch.push("conv1", LayerKind::Conv2d { out_ch: 4, k: 3, stride: 1, pad: 1 });
+        let ws = sample();
+        ws.validate(&arch).unwrap();
+
+        // Missing weight.
+        let mut missing = WeightStore::new();
+        missing.insert("conv1.w", Tensor::zeros(&[4, 3, 3, 3][..]));
+        assert!(missing.validate(&arch).is_err());
+
+        // Wrong shape.
+        let mut wrong = sample();
+        wrong.insert("conv1.w", Tensor::zeros(&[4, 3, 5, 5][..]));
+        assert!(wrong.validate(&arch).is_err());
+
+        // Extra tensor.
+        let mut extra = sample();
+        extra.insert("ghost", Tensor::zeros(&[1][..]));
+        assert!(extra.validate(&arch).is_err());
+    }
+
+    #[test]
+    fn param_count() {
+        assert_eq!(sample().param_count(), 4 * 27 + 4);
+    }
+}

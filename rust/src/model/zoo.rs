@@ -1,0 +1,189 @@
+//! Model zoo: the architectures the paper names.
+//!
+//! - [`nin_cifar10`]: Min Lin's Network-in-Network as trained on CIFAR-10 —
+//!   the "20 layer deep convolutional neural network model for image
+//!   recognition" of the §1.1 iPhone measurement.
+//! - [`lenet`]: the Theano-trained LeNet on MNIST digits (§1).
+//! - [`alexnet_class`]: an AlexNet-scale parameter layout (~61 M params /
+//!   ~240 MB f32) used by the §2 compression experiment (E4).
+//! - [`char_cnn`]: Zhang & LeCun-style character-level 1-D conv net
+//!   (roadmap item 9 / "Text Understanding from Scratch").
+
+use super::architecture::{Architecture, LayerKind};
+
+/// Network-in-Network for CIFAR-10 (Caffe `cifar10_nin` deploy topology).
+/// Counted as the paper counts (conv/relu/pool stages, dropout excluded):
+/// 9 conv + 9 relu + 3 pool = 21 operator stages ≈ the paper's "20 layer"
+/// network.
+pub fn nin_cifar10() -> Architecture {
+    let mut a = Architecture::new("nin-cifar10", &[3, 32, 32]);
+    // Block 1: 5x5 conv + two 1x1 "mlpconv" layers.
+    a.push("conv1", LayerKind::Conv2d { out_ch: 192, k: 5, stride: 1, pad: 2 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("cccp1", LayerKind::Conv2d { out_ch: 160, k: 1, stride: 1, pad: 0 });
+    a.push("relu_cccp1", LayerKind::Relu);
+    a.push("cccp2", LayerKind::Conv2d { out_ch: 96, k: 1, stride: 1, pad: 0 });
+    a.push("relu_cccp2", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("drop1", LayerKind::Dropout { rate: 0.5 });
+    // Block 2.
+    a.push("conv2", LayerKind::Conv2d { out_ch: 192, k: 5, stride: 1, pad: 2 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("cccp3", LayerKind::Conv2d { out_ch: 192, k: 1, stride: 1, pad: 0 });
+    a.push("relu_cccp3", LayerKind::Relu);
+    a.push("cccp4", LayerKind::Conv2d { out_ch: 192, k: 1, stride: 1, pad: 0 });
+    a.push("relu_cccp4", LayerKind::Relu);
+    a.push("pool2", LayerKind::AvgPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("drop2", LayerKind::Dropout { rate: 0.5 });
+    // Block 3: classifier via 1x1 convs + global average pooling.
+    a.push("conv3", LayerKind::Conv2d { out_ch: 192, k: 3, stride: 1, pad: 1 });
+    a.push("relu3", LayerKind::Relu);
+    a.push("cccp5", LayerKind::Conv2d { out_ch: 192, k: 1, stride: 1, pad: 0 });
+    a.push("relu_cccp5", LayerKind::Relu);
+    a.push("cccp6", LayerKind::Conv2d { out_ch: 10, k: 1, stride: 1, pad: 0 });
+    a.push("relu_cccp6", LayerKind::Relu);
+    a.push("gap", LayerKind::GlobalAvgPool);
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// LeNet-style digit classifier (Theano tutorial topology, 28x28 inputs).
+pub fn lenet() -> Architecture {
+    let mut a = Architecture::new("lenet-mnist", &[1, 28, 28]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 20, k: 5, stride: 1, pad: 0 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("conv2", LayerKind::Conv2d { out_ch: 50, k: 5, stride: 1, pad: 0 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("pool2", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc1", LayerKind::Dense { out: 500 });
+    a.push("relu3", LayerKind::Relu);
+    a.push("fc2", LayerKind::Dense { out: 10 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// AlexNet-scale architecture: same parameter budget (~61 M params; the
+/// paper's "240 MB" f32 model) so the compression pipeline (E4) operates on
+/// realistic weight-tensor shapes. Spatial dims follow the ImageNet net.
+pub fn alexnet_class() -> Architecture {
+    let mut a = Architecture::new("alexnet-class", &[3, 227, 227]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 96, k: 11, stride: 4, pad: 0 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("conv2", LayerKind::Conv2d { out_ch: 256, k: 5, stride: 1, pad: 2 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("pool2", LayerKind::MaxPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("conv3", LayerKind::Conv2d { out_ch: 384, k: 3, stride: 1, pad: 1 });
+    a.push("relu3", LayerKind::Relu);
+    a.push("conv4", LayerKind::Conv2d { out_ch: 384, k: 3, stride: 1, pad: 1 });
+    a.push("relu4", LayerKind::Relu);
+    a.push("conv5", LayerKind::Conv2d { out_ch: 256, k: 3, stride: 1, pad: 1 });
+    a.push("relu5", LayerKind::Relu);
+    a.push("pool5", LayerKind::MaxPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc6", LayerKind::Dense { out: 4096 });
+    a.push("relu6", LayerKind::Relu);
+    a.push("drop6", LayerKind::Dropout { rate: 0.5 });
+    a.push("fc7", LayerKind::Dense { out: 4096 });
+    a.push("relu7", LayerKind::Relu);
+    a.push("drop7", LayerKind::Dropout { rate: 0.5 });
+    a.push("fc8", LayerKind::Dense { out: 1000 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// Character-level CNN for text classification (Zhang & LeCun, scaled to
+/// a 64-char alphabet x 256-char documents).
+pub fn char_cnn() -> Architecture {
+    let mut a = Architecture::new("char-cnn", &[64, 256]);
+    a.push("conv1", LayerKind::Conv1d { out_ch: 128, k: 7, stride: 1, pad: 0 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool1d { k: 3, stride: 3 });
+    a.push("conv2", LayerKind::Conv1d { out_ch: 128, k: 7, stride: 1, pad: 0 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("pool2", LayerKind::MaxPool1d { k: 3, stride: 3 });
+    a.push("conv3", LayerKind::Conv1d { out_ch: 128, k: 3, stride: 1, pad: 0 });
+    a.push("relu3", LayerKind::Relu);
+    a.push("pool3", LayerKind::MaxPool1d { k: 3, stride: 3 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc1", LayerKind::Dense { out: 256 });
+    a.push("relu4", LayerKind::Relu);
+    a.push("drop1", LayerKind::Dropout { rate: 0.5 });
+    a.push("fc2", LayerKind::Dense { out: 4 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// All zoo models (id, constructor result).
+pub fn zoo_models() -> Vec<Architecture> {
+    vec![nin_cifar10(), lenet(), alexnet_class(), char_cnn()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nin_is_the_papers_20_layer_network() {
+        let nin = nin_cifar10();
+        // "20 layer deep convolutional neural network" — conv+relu+pool
+        // stages (dropout excluded) give 21; the conv stack alone is 9.
+        let depth = nin.depth() - 2; // excluding gap + softmax bookkeeping
+        assert!((19..=22).contains(&depth), "depth={depth}");
+        assert_eq!(nin.num_classes().unwrap(), 10);
+        // ~966K parameters (Caffe NIN-CIFAR10 is ≈0.97M).
+        let params = nin.param_count().unwrap();
+        assert!((900_000..1_050_000).contains(&params), "params={params}");
+        // ~220M MACs per image.
+        let macs = nin.macs().unwrap();
+        assert!((150_000_000..300_000_000).contains(&macs), "macs={macs}");
+    }
+
+    #[test]
+    fn nin_shapes_flow() {
+        let shapes = nin_cifar10().shapes().unwrap();
+        assert_eq!(shapes[0], vec![3, 32, 32]);
+        // After pool1: 96 x 16 x 16 (3x3 stride 2 ceil).
+        let pool1 = &shapes[7];
+        assert_eq!(pool1, &vec![96, 16, 16]);
+        // Output: 10 classes.
+        assert_eq!(shapes.last().unwrap(), &vec![10]);
+    }
+
+    #[test]
+    fn lenet_param_count() {
+        let l = lenet();
+        // conv1 20*1*25+20=520; conv2 50*20*25+50=25050; fc1 500*800+500 = 400500; fc2 10*500+10=5010
+        assert_eq!(l.param_count().unwrap(), 520 + 25050 + 400500 + 5010);
+        assert_eq!(l.num_classes().unwrap(), 10);
+    }
+
+    #[test]
+    fn alexnet_class_is_240mb_scale() {
+        let a = alexnet_class();
+        let params = a.param_count().unwrap();
+        // Real AlexNet: 60.97M params. Ours must land within ~5%.
+        assert!((58_000_000..64_000_000).contains(&params), "params={params}");
+        let mb = params as f64 * 4.0 / (1024.0 * 1024.0);
+        assert!((225.0..245.0).contains(&mb), "mb={mb}");
+    }
+
+    #[test]
+    fn char_cnn_valid() {
+        let c = char_cnn();
+        assert_eq!(c.num_classes().unwrap(), 4);
+        assert!(c.param_count().unwrap() > 100_000);
+    }
+
+    #[test]
+    fn all_zoo_models_validate() {
+        for m in zoo_models() {
+            m.shapes().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            let j = m.to_json();
+            let back = Architecture::from_json(&j).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+}

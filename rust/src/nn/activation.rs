@@ -1,0 +1,88 @@
+//! Activation functions. The paper's Figure 3 shows exactly the rectifier
+//! shader this module's [`relu`] mirrors; sigmoid/tanh round out the set for
+//! imported models.
+
+use crate::tensor::Tensor;
+
+/// Rectifier: `max(0, x)` elementwise (paper Fig. 3/4).
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    relu_in_place(&mut out);
+    out
+}
+
+/// In-place rectifier — the paper's roadmap item 5 ("more in-place
+/// calculations to save memory"); the CPU executor uses this on
+/// activation layers so no extra buffer is allocated.
+pub fn relu_in_place(x: &mut Tensor) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    for v in out.data_mut() {
+        *v = 1.0 / (1.0 + (-*v).exp());
+    }
+    out
+}
+
+/// Hyperbolic tangent (named `tanh_act` to avoid clashing with `f32::tanh`).
+pub fn tanh_act(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    for v in out.data_mut() {
+        *v = v.tanh();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let x = Tensor::new(&[5][..], vec![-2.0, -0.5, 0.0, 0.5, 2.0]).unwrap();
+        assert_eq!(relu(&x).data(), &[0.0, 0.0, 0.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn relu_in_place_matches() {
+        let x = Tensor::randn(Shape::nchw(1, 2, 3, 3), 3, 1.0);
+        let mut y = x.clone();
+        relu_in_place(&mut y);
+        assert_eq!(y.data(), relu(&x).data());
+    }
+
+    #[test]
+    fn relu_idempotent() {
+        let x = Tensor::randn(&[64][..], 4, 1.0);
+        let once = relu(&x);
+        let twice = relu(&once);
+        assert_eq!(once.data(), twice.data());
+    }
+
+    #[test]
+    fn sigmoid_range_and_symmetry() {
+        let x = Tensor::new(&[3][..], vec![-10.0, 0.0, 10.0]).unwrap();
+        let y = sigmoid(&x);
+        assert!(y.data()[0] < 1e-4);
+        assert!((y.data()[1] - 0.5).abs() < 1e-6);
+        assert!(y.data()[2] > 0.9999);
+        // sigmoid(-x) = 1 - sigmoid(x)
+        assert!((y.data()[0] + y.data()[2] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn tanh_known_values() {
+        let x = Tensor::new(&[2][..], vec![0.0, 1.0]).unwrap();
+        let y = tanh_act(&x);
+        assert_eq!(y.data()[0], 0.0);
+        assert!((y.data()[1] - 0.7615942).abs() < 1e-6);
+    }
+}

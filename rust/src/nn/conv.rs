@@ -1,0 +1,368 @@
+//! 2-D convolution (cross-correlation, Caffe convention) over NCHW tensors.
+//!
+//! Three strategies:
+//! - [`conv2d_direct`]: straightforward 7-loop implementation; the
+//!   correctness anchor (mirrors the paper's Metal shader inner loop).
+//! - [`conv2d_im2col`]: lower to patch-matrix + GEMM — the same
+//!   restructuring the Pallas kernel uses to land on the MXU
+//!   (DESIGN.md §Hardware-Adaptation), and the fast CPU path.
+//! - FFT convolution lives in [`super::fft_conv`].
+
+use crate::tensor::{Shape, Tensor};
+
+/// Convolution hyper-parameters (square kernel, symmetric padding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dParams {
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Default for Conv2dParams {
+    fn default() -> Self {
+        Conv2dParams { stride: 1, pad: 0 }
+    }
+}
+
+impl Conv2dParams {
+    pub fn new(stride: usize, pad: usize) -> Self {
+        Conv2dParams { stride, pad }
+    }
+
+    /// Output spatial size for an input of `(h, w)` and kernel `k`.
+    pub fn out_hw(&self, h: usize, w: usize, k: usize) -> crate::Result<(usize, usize)> {
+        anyhow::ensure!(self.stride > 0, "stride must be positive");
+        anyhow::ensure!(
+            h + 2 * self.pad >= k && w + 2 * self.pad >= k,
+            "kernel {k} larger than padded input {}x{}",
+            h + 2 * self.pad,
+            w + 2 * self.pad
+        );
+        Ok((
+            (h + 2 * self.pad - k) / self.stride + 1,
+            (w + 2 * self.pad - k) / self.stride + 1,
+        ))
+    }
+}
+
+fn check_args(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+) -> crate::Result<(usize, usize, usize, usize, usize, usize)> {
+    anyhow::ensure!(input.shape().rank() == 4, "conv2d input must be NCHW, got {}", input.shape());
+    anyhow::ensure!(
+        weight.shape().rank() == 4,
+        "conv2d weight must be [out_ch, in_ch, k, k], got {}",
+        weight.shape()
+    );
+    let (n, c, h, w) = (
+        input.shape().dim(0),
+        input.shape().dim(1),
+        input.shape().dim(2),
+        input.shape().dim(3),
+    );
+    let (oc, wc, kh, kw) = (
+        weight.shape().dim(0),
+        weight.shape().dim(1),
+        weight.shape().dim(2),
+        weight.shape().dim(3),
+    );
+    anyhow::ensure!(kh == kw, "only square kernels supported, got {kh}x{kw}");
+    anyhow::ensure!(wc == c, "weight in_ch {wc} != input channels {c}");
+    if let Some(b) = bias {
+        anyhow::ensure!(
+            b.numel() == oc,
+            "bias has {} elements, expected {oc}",
+            b.numel()
+        );
+    }
+    Ok((n, c, h, w, oc, kh))
+}
+
+/// Direct (naive) convolution. O(N·OC·OH·OW·IC·K²).
+pub fn conv2d_direct(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+) -> crate::Result<Tensor> {
+    let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
+    let x = input.data();
+    let wt = weight.data();
+    let o = out.data_mut();
+
+    for b in 0..n {
+        for och in 0..oc {
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bias_v;
+                    for ic in 0..c {
+                        for ky in 0..k {
+                            // Input row for this kernel row; skip out-of-pad rows.
+                            let iy = (oy * params.stride + ky) as isize - params.pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let x_row = (b * c + ic) * h * w + iy as usize * w;
+                            let w_row = ((och * c + ic) * k + ky) * k;
+                            for kx in 0..k {
+                                let ix = (ox * params.stride + kx) as isize - params.pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                acc += x[x_row + ix as usize] * wt[w_row + kx];
+                            }
+                        }
+                    }
+                    o[((b * oc + och) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Lower an NCHW image to the im2col patch matrix of shape
+/// `[c*k*k, oh*ow]` for one batch element.
+///
+/// Each column is the receptive field of one output pixel; convolution then
+/// becomes `weight[oc, c*k*k] @ patches[c*k*k, oh*ow]`.
+pub fn im2col(
+    input: &Tensor,
+    batch: usize,
+    k: usize,
+    params: Conv2dParams,
+) -> crate::Result<Tensor> {
+    let c = input.shape().dim(1);
+    let h = input.shape().dim(2);
+    let w = input.shape().dim(3);
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    let rows = c * k * k;
+    let cols = oh * ow;
+    let mut out = Tensor::zeros(Shape::new(&[rows, cols]));
+    let x = input.data();
+    let o = out.data_mut();
+    let base = batch * c * h * w;
+
+    let mut row = 0;
+    for ic in 0..c {
+        for ky in 0..k {
+            for kx in 0..k {
+                let out_row = &mut o[row * cols..(row + 1) * cols];
+                for oy in 0..oh {
+                    let iy = (oy * params.stride + ky) as isize - params.pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // stays zero (padding)
+                    }
+                    let x_row = base + ic * h * w + iy as usize * w;
+                    let o_off = oy * ow;
+                    for ox in 0..ow {
+                        let ix = (ox * params.stride + kx) as isize - params.pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        out_row[o_off + ox] = x[x_row + ix as usize];
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// im2col + GEMM convolution. Same numerics as [`conv2d_direct`] (up to f32
+/// association order), much better locality.
+pub fn conv2d_im2col(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+) -> crate::Result<Tensor> {
+    let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    let cols = oh * ow;
+    let rows = c * k * k;
+    let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
+
+    // Weight viewed as [oc, rows] without copying.
+    let wmat = weight.data();
+    for b in 0..n {
+        let patches = im2col(input, b, k, params)?;
+        let p = patches.data();
+        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
+        // GEMM: out[ocH, cols] = W[oc, rows] x P[rows, cols]  (ikj order)
+        for och in 0..oc {
+            let orow = &mut o[och * cols..(och + 1) * cols];
+            if let Some(bv) = bias {
+                orow.fill(bv.data()[och]);
+            }
+            for r in 0..rows {
+                let wv = wmat[och * rows + r];
+                if wv == 0.0 {
+                    continue; // pruned-weight fast path (compression E4/E7)
+                }
+                let prow = &p[r * cols..(r + 1) * cols];
+                for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
+                    *ov += wv * pv;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Default convolution entry point (im2col).
+pub fn conv2d(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+) -> crate::Result<Tensor> {
+    conv2d_im2col(input, weight, bias, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_allclose, Gen, XorShiftRng};
+
+    #[test]
+    fn identity_kernel_1x1() {
+        // 1x1 kernel with weight 1.0 is identity per channel.
+        let x = Tensor::randn(Shape::nchw(1, 1, 4, 4), 1, 1.0);
+        let w = Tensor::new(&[1, 1, 1, 1][..], vec![1.0]).unwrap();
+        let y = conv2d_direct(&x, &w, None, Conv2dParams::default()).unwrap();
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn known_3x3_sum_kernel() {
+        // All-ones 3x3 kernel over an all-ones 3x3 input = 9.
+        let x = Tensor::filled(Shape::nchw(1, 1, 3, 3), 1.0);
+        let w = Tensor::filled(&[1, 1, 3, 3][..], 1.0);
+        let y = conv2d_direct(&x, &w, None, Conv2dParams::default()).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 1, 1, 1]);
+        assert_eq!(y.data()[0], 9.0);
+    }
+
+    #[test]
+    fn padding_behaves_like_zeros() {
+        let x = Tensor::filled(Shape::nchw(1, 1, 2, 2), 1.0);
+        let w = Tensor::filled(&[1, 1, 3, 3][..], 1.0);
+        let y = conv2d_direct(&x, &w, None, Conv2dParams::new(1, 1)).unwrap();
+        // Center of padded 2x2 of ones: each output counts the in-bounds ones.
+        assert_eq!(y.shape().dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[4.0, 4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn stride_subsamples() {
+        let x = Tensor::new(
+            Shape::nchw(1, 1, 4, 4),
+            (0..16).map(|i| i as f32).collect(),
+        )
+        .unwrap();
+        let w = Tensor::new(&[1, 1, 1, 1][..], vec![1.0]).unwrap();
+        let y = conv2d_direct(&x, &w, None, Conv2dParams::new(2, 0)).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn bias_added_per_channel() {
+        let x = Tensor::filled(Shape::nchw(1, 1, 2, 2), 0.0);
+        let w = Tensor::filled(&[2, 1, 1, 1][..], 1.0);
+        let b = Tensor::new(&[2][..], vec![0.5, -1.5]).unwrap();
+        let y = conv2d_direct(&x, &w, Some(&b), Conv2dParams::default()).unwrap();
+        assert_eq!(&y.data()[..4], &[0.5; 4]);
+        assert_eq!(&y.data()[4..], &[-1.5; 4]);
+    }
+
+    #[test]
+    fn multi_channel_accumulates() {
+        // Two input channels, kernel sums both.
+        let mut x = Tensor::zeros(Shape::nchw(1, 2, 1, 1));
+        x.set(&[0, 0, 0, 0], 2.0);
+        x.set(&[0, 1, 0, 0], 3.0);
+        let w = Tensor::filled(&[1, 2, 1, 1][..], 1.0);
+        let y = conv2d_direct(&x, &w, None, Conv2dParams::default()).unwrap();
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn im2col_matches_direct_property() {
+        crate::testutil::check(40, 101, Gen::conv_shape, |s| {
+            let mut rng = XorShiftRng::new(s.h as u64 * 31 + s.k as u64);
+            let x = Tensor::new(
+                Shape::nchw(s.batch, s.in_ch, s.h, s.w),
+                Gen::tensor_data(&mut rng, s.batch * s.in_ch * s.h * s.w),
+            )
+            .unwrap();
+            let w = Tensor::new(
+                &[s.out_ch, s.in_ch, s.k, s.k][..],
+                Gen::tensor_data(&mut rng, s.out_ch * s.in_ch * s.k * s.k),
+            )
+            .unwrap();
+            let b = Tensor::new(&[s.out_ch][..], Gen::tensor_data(&mut rng, s.out_ch)).unwrap();
+            let p = Conv2dParams::new(s.stride, s.pad);
+            let yd = conv2d_direct(&x, &w, Some(&b), p).map_err(|e| e.to_string())?;
+            let yi = conv2d_im2col(&x, &w, Some(&b), p).map_err(|e| e.to_string())?;
+            if yd.shape() != yi.shape() {
+                return Err(format!("shape mismatch {} vs {}", yd.shape(), yi.shape()));
+            }
+            for (i, (&a, &bv)) in yd.data().iter().zip(yi.data()).enumerate() {
+                if (a - bv).abs() > 1e-4 + 1e-4 * bv.abs() {
+                    return Err(format!("mismatch at {i}: {a} vs {bv}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let x = Tensor::zeros(Shape::nchw(1, 2, 4, 4));
+        let w = Tensor::zeros(&[1, 3, 3, 3][..]); // wrong in_ch
+        assert!(conv2d_direct(&x, &w, None, Conv2dParams::default()).is_err());
+        let w2 = Tensor::zeros(&[1, 2, 5, 5][..]); // kernel larger than input
+        assert!(conv2d_direct(&x, &w2, None, Conv2dParams::default()).is_err());
+        let w3 = Tensor::zeros(&[1, 2, 3, 3][..]);
+        let bad_bias = Tensor::zeros(&[2][..]);
+        assert!(conv2d_direct(&x, &w3, Some(&bad_bias), Conv2dParams::default()).is_err());
+    }
+
+    #[test]
+    fn im2col_layout() {
+        // 1 channel, 2x2 input, k=1: patch matrix is the flattened image.
+        let x = Tensor::new(Shape::nchw(1, 1, 2, 2), vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let p = im2col(&x, 0, 1, Conv2dParams::default()).unwrap();
+        assert_eq!(p.shape().dims(), &[1, 4]);
+        assert_eq!(p.data(), &[1.0, 2.0, 3.0, 4.0]);
+        // k=2 with no padding: single output pixel, column = the 4 values.
+        let p2 = im2col(&x, 0, 2, Conv2dParams::default()).unwrap();
+        assert_eq!(p2.shape().dims(), &[4, 1]);
+        assert_eq!(p2.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pruned_weights_fast_path_consistent() {
+        // Zeros in the weight matrix must not change results (fast path skips).
+        let mut rng = XorShiftRng::new(5);
+        let x = Tensor::new(Shape::nchw(1, 2, 5, 5), Gen::tensor_data(&mut rng, 50)).unwrap();
+        let mut wdata = Gen::tensor_data(&mut rng, 3 * 2 * 9);
+        for (i, v) in wdata.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let w = Tensor::new(&[3, 2, 3, 3][..], wdata).unwrap();
+        let p = Conv2dParams::new(1, 1);
+        let yd = conv2d_direct(&x, &w, None, p).unwrap();
+        let yi = conv2d_im2col(&x, &w, None, p).unwrap();
+        assert_allclose(yi.data(), yd.data(), 1e-4, 1e-5);
+    }
+}

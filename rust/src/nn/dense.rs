@@ -1,0 +1,174 @@
+//! Dense (fully-connected) layer and the GEMM primitives behind it.
+
+use crate::tensor::{Shape, Tensor};
+
+/// Naive row-major matmul: `a[m,k] @ b[k,n] -> [m,n]` in ikj order (cache
+/// friendly for row-major b).
+pub fn matmul(a: &Tensor, b: &Tensor) -> crate::Result<Tensor> {
+    anyhow::ensure!(a.shape().rank() == 2 && b.shape().rank() == 2, "matmul expects rank-2");
+    let (m, k) = (a.shape().dim(0), a.shape().dim(1));
+    let (k2, n) = (b.shape().dim(0), b.shape().dim(1));
+    anyhow::ensure!(k == k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(Shape::new(&[m, n]));
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let orow = &mut od[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = ad[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Blocked/tiled matmul — the hot-path variant used by the CPU executor.
+/// Tiles chosen so a block of `b` fits L1 (64x64 f32 = 16 KiB).
+pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> crate::Result<Tensor> {
+    const BK: usize = 64;
+    const BN: usize = 64;
+    anyhow::ensure!(a.shape().rank() == 2 && b.shape().rank() == 2, "matmul expects rank-2");
+    let (m, k) = (a.shape().dim(0), a.shape().dim(1));
+    let (k2, n) = (b.shape().dim(0), b.shape().dim(1));
+    anyhow::ensure!(k == k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(Shape::new(&[m, n]));
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for k0 in (0..k).step_by(BK) {
+        let kmax = (k0 + BK).min(k);
+        for n0 in (0..n).step_by(BN) {
+            let nmax = (n0 + BN).min(n);
+            for i in 0..m {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut od[i * n + n0..i * n + nmax];
+                for kk in k0..kmax {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n + n0..kk * n + nmax];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Fully-connected layer: `x[batch, in] @ w^T[in, out] + bias`.
+/// Weight layout is `[out, in]` (Caffe InnerProduct convention).
+pub fn dense(x: &Tensor, weight: &Tensor, bias: Option<&Tensor>) -> crate::Result<Tensor> {
+    anyhow::ensure!(x.shape().rank() == 2, "dense input must be [batch, in], got {}", x.shape());
+    anyhow::ensure!(weight.shape().rank() == 2, "dense weight must be [out, in]");
+    let (batch, in_f) = (x.shape().dim(0), x.shape().dim(1));
+    let (out_f, w_in) = (weight.shape().dim(0), weight.shape().dim(1));
+    anyhow::ensure!(w_in == in_f, "dense weight in-features {w_in} != input {in_f}");
+    if let Some(b) = bias {
+        anyhow::ensure!(b.numel() == out_f, "dense bias size {} != {out_f}", b.numel());
+    }
+    let mut out = Tensor::zeros(Shape::new(&[batch, out_f]));
+    let (xd, wd) = (x.data(), weight.data());
+    let od = out.data_mut();
+    for bi in 0..batch {
+        let xrow = &xd[bi * in_f..(bi + 1) * in_f];
+        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
+        for of in 0..out_f {
+            let wrow = &wd[of * in_f..(of + 1) * in_f];
+            let mut acc = bias.map_or(0.0, |bv| bv.data()[of]);
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                acc += xv * wv;
+            }
+            orow[of] = acc;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_allclose, Gen, XorShiftRng};
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2][..], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(&[2, 2][..], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut id = Tensor::zeros(&[3, 3][..]);
+        for i in 0..3 {
+            id.set(&[i, i], 1.0);
+        }
+        let a = Tensor::randn(&[3, 3][..], 2, 1.0);
+        let c = matmul(&a, &id).unwrap();
+        assert_allclose(c.data(), a.data(), 1e-6, 0.0);
+    }
+
+    #[test]
+    fn blocked_matches_naive_property() {
+        crate::testutil::check(
+            25,
+            202,
+            |rng| {
+                (
+                    rng.range_usize(1, 90),
+                    rng.range_usize(1, 90),
+                    rng.range_usize(1, 90),
+                    rng.next_u64(),
+                )
+            },
+            |&(m, k, n, seed)| {
+                let mut rng = XorShiftRng::new(seed);
+                let a = Tensor::new(&[m, k][..], Gen::tensor_data(&mut rng, m * k)).unwrap();
+                let b = Tensor::new(&[k, n][..], Gen::tensor_data(&mut rng, k * n)).unwrap();
+                let c1 = matmul(&a, &b).map_err(|e| e.to_string())?;
+                let c2 = matmul_blocked(&a, &b).map_err(|e| e.to_string())?;
+                for (i, (&x, &y)) in c1.data().iter().zip(c2.data()).enumerate() {
+                    if (x - y).abs() > 1e-3 + 1e-4 * y.abs() {
+                        return Err(format!("mismatch at {i}: {x} vs {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dense_matches_matmul_transpose() {
+        let mut rng = XorShiftRng::new(7);
+        let x = Tensor::new(&[4, 6][..], Gen::tensor_data(&mut rng, 24)).unwrap();
+        let w = Tensor::new(&[3, 6][..], Gen::tensor_data(&mut rng, 18)).unwrap();
+        let b = Tensor::new(&[3][..], vec![0.1, 0.2, 0.3]).unwrap();
+        let y = dense(&x, &w, Some(&b)).unwrap();
+        assert_eq!(y.shape().dims(), &[4, 3]);
+        // Check one entry by hand.
+        let mut expect = 0.2;
+        for i in 0..6 {
+            expect += x.at(&[1, i]) * w.at(&[1, i]);
+        }
+        assert!((y.at(&[1, 1]) - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3][..]);
+        let b = Tensor::zeros(&[4, 2][..]);
+        assert!(matmul(&a, &b).is_err());
+        assert!(dense(&a, &b, None).is_err()); // w_in=2 != in=3
+        let w = Tensor::zeros(&[4, 3][..]);
+        let bad_bias = Tensor::zeros(&[5][..]);
+        assert!(dense(&a, &w, Some(&bad_bias)).is_err());
+    }
+}

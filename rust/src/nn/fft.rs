@@ -1,0 +1,245 @@
+//! Radix-2 FFT substrate (built from scratch — no FFT crate offline).
+//!
+//! Supports the paper's roadmap item 1: "use FFT-based convolution — with
+//! precalculated convolution filters". Iterative Cooley–Tukey with
+//! bit-reversal permutation; 2-D transforms via row/column passes.
+
+/// Complex number (f32 pair). Minimal ops the FFT needs.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Complex {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex {
+    pub fn new(re: f32, im: f32) -> Complex {
+        Complex { re, im }
+    }
+
+    pub fn zero() -> Complex {
+        Complex::default()
+    }
+
+    pub fn conj(self) -> Complex {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    pub fn mul(self, other: Complex) -> Complex {
+        Complex {
+            re: self.re * other.re - self.im * other.im,
+            im: self.re * other.im + self.im * other.re,
+        }
+    }
+
+    pub fn add(self, other: Complex) -> Complex {
+        Complex { re: self.re + other.re, im: self.im + other.im }
+    }
+
+    pub fn sub(self, other: Complex) -> Complex {
+        Complex { re: self.re - other.re, im: self.im - other.im }
+    }
+
+    pub fn scale(self, s: f32) -> Complex {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+
+    pub fn abs(self) -> f32 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// In-place iterative radix-2 FFT. `data.len()` must be a power of two.
+pub fn fft(data: &mut [Complex]) {
+    fft_dir(data, false);
+}
+
+/// In-place inverse FFT (includes the 1/N normalization).
+pub fn ifft(data: &mut [Complex]) {
+    fft_dir(data, true);
+    let inv = 1.0 / data.len() as f32;
+    for v in data.iter_mut() {
+        *v = v.scale(inv);
+    }
+}
+
+fn fft_dir(data: &mut [Complex], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length {n} must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) & (n - 1);
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterfly passes. Twiddles computed per stage with a recurrence-free
+    // sin/cos call (f64 angle for accuracy at large N).
+    let sign = if inverse { 1.0f64 } else { -1.0f64 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            for k in 0..half {
+                let tw = Complex::new((ang * k as f64).cos() as f32, (ang * k as f64).sin() as f32);
+                let a = data[start + k];
+                let b = data[start + k + half].mul(tw);
+                data[start + k] = a.add(b);
+                data[start + k + half] = a.sub(b);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// 2-D FFT over a row-major `rows x cols` grid (both powers of two).
+pub fn fft2d(data: &mut [Complex], rows: usize, cols: usize) {
+    fft2d_dir(data, rows, cols, false);
+}
+
+/// 2-D inverse FFT (normalized).
+pub fn ifft2d(data: &mut [Complex], rows: usize, cols: usize) {
+    fft2d_dir(data, rows, cols, true);
+    let inv = 1.0 / (rows * cols) as f32;
+    for v in data.iter_mut() {
+        *v = v.scale(inv);
+    }
+}
+
+fn fft2d_dir(data: &mut [Complex], rows: usize, cols: usize, inverse: bool) {
+    assert_eq!(data.len(), rows * cols);
+    // Rows.
+    for r in 0..rows {
+        fft_dir(&mut data[r * cols..(r + 1) * cols], inverse);
+    }
+    // Columns via gather/scatter through a scratch buffer.
+    let mut col = vec![Complex::zero(); rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col[r] = data[r * cols + c];
+        }
+        fft_dir(&mut col, inverse);
+        for r in 0..rows {
+            data[r * cols + c] = col[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShiftRng;
+
+    fn to_complex(xs: &[f32]) -> Vec<Complex> {
+        xs.iter().map(|&x| Complex::new(x, 0.0)).collect()
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut d = vec![Complex::zero(); 8];
+        d[0] = Complex::new(1.0, 0.0);
+        fft(&mut d);
+        for v in &d {
+            assert!((v.re - 1.0).abs() < 1e-6 && v.im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fft_of_constant_is_impulse() {
+        let mut d = to_complex(&[1.0; 8]);
+        fft(&mut d);
+        assert!((d[0].re - 8.0).abs() < 1e-5);
+        for v in &d[1..] {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn known_dft_4() {
+        // DFT([0,1,2,3]) = [6, -2+2i, -2, -2-2i]
+        let mut d = to_complex(&[0.0, 1.0, 2.0, 3.0]);
+        fft(&mut d);
+        let expect = [
+            Complex::new(6.0, 0.0),
+            Complex::new(-2.0, 2.0),
+            Complex::new(-2.0, 0.0),
+            Complex::new(-2.0, -2.0),
+        ];
+        for (a, e) in d.iter().zip(expect.iter()) {
+            assert!((a.re - e.re).abs() < 1e-5 && (a.im - e.im).abs() < 1e-5, "{a:?} vs {e:?}");
+        }
+    }
+
+    #[test]
+    fn round_trip_identity() {
+        let mut rng = XorShiftRng::new(55);
+        for &n in &[1usize, 2, 4, 16, 128, 1024] {
+            let orig: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0)))
+                .collect();
+            let mut d = orig.clone();
+            fft(&mut d);
+            ifft(&mut d);
+            for (a, e) in d.iter().zip(orig.iter()) {
+                assert!((a.re - e.re).abs() < 1e-4 && (a.im - e.im).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = XorShiftRng::new(56);
+        let n = 256;
+        let orig: Vec<Complex> = (0..n).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let time_energy: f64 = orig.iter().map(|v| (v.abs() as f64).powi(2)).sum();
+        let mut d = orig;
+        fft(&mut d);
+        let freq_energy: f64 = d.iter().map(|v| (v.abs() as f64).powi(2)).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() / time_energy < 1e-5);
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = XorShiftRng::new(57);
+        let n = 32;
+        let x: Vec<Complex> = (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        // Naive O(n^2) DFT.
+        let mut expect = vec![Complex::zero(); n];
+        for (k, e) in expect.iter_mut().enumerate() {
+            for (t, &v) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                let tw = Complex::new(ang.cos() as f32, ang.sin() as f32);
+                *e = e.add(v.mul(tw));
+            }
+        }
+        let mut d = x;
+        fft(&mut d);
+        for (a, e) in d.iter().zip(expect.iter()) {
+            assert!((a.re - e.re).abs() < 1e-3 && (a.im - e.im).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn fft2d_round_trip() {
+        let mut rng = XorShiftRng::new(58);
+        let (r, c) = (8, 16);
+        let orig: Vec<Complex> = (0..r * c).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let mut d = orig.clone();
+        fft2d(&mut d, r, c);
+        ifft2d(&mut d, r, c);
+        for (a, e) in d.iter().zip(orig.iter()) {
+            assert!((a.re - e.re).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let mut d = vec![Complex::zero(); 6];
+        fft(&mut d);
+    }
+}

@@ -1,0 +1,192 @@
+//! FFT-based 2-D convolution (paper roadmap item 1, benchmarked in E6).
+//!
+//! Convolution theorem: correlation in the spatial domain is pointwise
+//! multiplication with the conjugate spectrum. Per (batch, out-channel)
+//! pair we accumulate `IFFT( FFT(x_c) * conj(FFT(w_oc,c)) )` over input
+//! channels, on a power-of-two padded grid. Filters are transformed once
+//! per call ("precalculated convolution filters" — with a resident model
+//! they would be cached; the E6 harness reports both amortized and
+//! unamortized figures).
+
+use super::conv::Conv2dParams;
+use super::fft::{fft2d, ifft2d, Complex};
+use crate::tensor::{Shape, Tensor};
+
+/// FFT convolution with the same semantics as [`super::conv2d_direct`].
+pub fn conv2d_fft(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+) -> crate::Result<Tensor> {
+    anyhow::ensure!(input.shape().rank() == 4 && weight.shape().rank() == 4, "NCHW expected");
+    let (n, c, h, w) = (
+        input.shape().dim(0),
+        input.shape().dim(1),
+        input.shape().dim(2),
+        input.shape().dim(3),
+    );
+    let (oc, wc, k, kw) = (
+        weight.shape().dim(0),
+        weight.shape().dim(1),
+        weight.shape().dim(2),
+        weight.shape().dim(3),
+    );
+    anyhow::ensure!(k == kw, "square kernels only");
+    anyhow::ensure!(wc == c, "weight in_ch {wc} != input {c}");
+    let (oh, ow) = params.out_hw(h, w, k)?;
+
+    // Padded grid: must hold the padded input; power of two for radix-2.
+    let ph = h + 2 * params.pad;
+    let pw = w + 2 * params.pad;
+    let gr = ph.next_power_of_two();
+    let gc = pw.next_power_of_two();
+
+    // Pre-transform all filters: spectra[oc][c] on the gr x gc grid.
+    let wd = weight.data();
+    let mut filter_spectra = vec![vec![Complex::zero(); gr * gc]; oc * c];
+    for och in 0..oc {
+        for ic in 0..c {
+            let spec = &mut filter_spectra[och * c + ic];
+            for ky in 0..k {
+                for kx in 0..k {
+                    spec[ky * gc + kx] = Complex::new(wd[((och * c + ic) * k + ky) * k + kx], 0.0);
+                }
+            }
+            fft2d(spec, gr, gc);
+        }
+    }
+
+    let x = input.data();
+    let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
+    let o = out.data_mut();
+
+    let mut xspec = vec![Complex::zero(); gr * gc];
+    let mut acc = vec![Complex::zero(); gr * gc];
+    for b in 0..n {
+        // Transform each input channel once per batch element.
+        let mut channel_spectra = vec![vec![Complex::zero(); gr * gc]; c];
+        for ic in 0..c {
+            xspec.iter_mut().for_each(|v| *v = Complex::zero());
+            let plane = &x[(b * c + ic) * h * w..(b * c + ic + 1) * h * w];
+            for iy in 0..h {
+                for ix in 0..w {
+                    // Shift by pad so index 0 is the padded border.
+                    xspec[(iy + params.pad) * gc + (ix + params.pad)] =
+                        Complex::new(plane[iy * w + ix], 0.0);
+                }
+            }
+            fft2d(&mut xspec, gr, gc);
+            channel_spectra[ic].copy_from_slice(&xspec);
+        }
+        for och in 0..oc {
+            acc.iter_mut().for_each(|v| *v = Complex::zero());
+            for ic in 0..c {
+                let fs = &filter_spectra[och * c + ic];
+                let cs = &channel_spectra[ic];
+                // Correlation: X(f) * conj(W(f)).
+                for ((a, &xv), &wv) in acc.iter_mut().zip(cs.iter()).zip(fs.iter()) {
+                    *a = a.add(xv.mul(wv.conj()));
+                }
+            }
+            ifft2d(&mut acc, gr, gc);
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            let orow = &mut o[((b * oc + och) * oh) * ow..((b * oc + och) * oh + oh) * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    orow[oy * ow + ox] = acc[(oy * params.stride) * gc + ox * params.stride].re + bias_v;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// FLOP estimate for one FFT conv call (used by E6's model columns).
+pub fn fft_conv_flops(
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    oc: usize,
+    k: usize,
+    pad: usize,
+) -> u64 {
+    let gr = (h + 2 * pad).next_power_of_two() as u64;
+    let gc = (w + 2 * pad).next_power_of_two() as u64;
+    let grid = gr * gc;
+    let fft_cost = 5 * grid * (grid as f64).log2() as u64; // ~5N log N per 2-D FFT
+    let n = n as u64;
+    let c = c as u64;
+    let oc = oc as u64;
+    let _ = k;
+    // filters: oc*c ffts; inputs: n*c ffts; outputs: n*oc iffts; pointwise: n*oc*c*grid*6
+    (oc * c + n * c + n * oc) * fft_cost + n * oc * c * grid * 6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conv::conv2d_direct;
+    use super::*;
+    use crate::testutil::{Gen, XorShiftRng};
+
+    #[test]
+    fn matches_direct_small() {
+        let mut rng = XorShiftRng::new(61);
+        let x = Tensor::new(Shape::nchw(1, 1, 5, 5), Gen::tensor_data(&mut rng, 25)).unwrap();
+        let w = Tensor::new(&[1, 1, 3, 3][..], Gen::tensor_data(&mut rng, 9)).unwrap();
+        let p = Conv2dParams::new(1, 0);
+        let yd = conv2d_direct(&x, &w, None, p).unwrap();
+        let yf = conv2d_fft(&x, &w, None, p).unwrap();
+        crate::testutil::assert_allclose(yf.data(), yd.data(), 1e-3, 1e-4);
+    }
+
+    #[test]
+    fn matches_direct_property() {
+        crate::testutil::check(25, 303, Gen::conv_shape, |s| {
+            let mut rng = XorShiftRng::new((s.w * 131 + s.out_ch) as u64);
+            let x = Tensor::new(
+                Shape::nchw(s.batch, s.in_ch, s.h, s.w),
+                Gen::tensor_data(&mut rng, s.batch * s.in_ch * s.h * s.w),
+            )
+            .unwrap();
+            let w = Tensor::new(
+                &[s.out_ch, s.in_ch, s.k, s.k][..],
+                Gen::tensor_data(&mut rng, s.out_ch * s.in_ch * s.k * s.k),
+            )
+            .unwrap();
+            let b = Tensor::new(&[s.out_ch][..], Gen::tensor_data(&mut rng, s.out_ch)).unwrap();
+            let p = Conv2dParams::new(s.stride, s.pad);
+            let yd = conv2d_direct(&x, &w, Some(&b), p).map_err(|e| e.to_string())?;
+            let yf = conv2d_fft(&x, &w, Some(&b), p).map_err(|e| e.to_string())?;
+            for (i, (&a, &e)) in yf.data().iter().zip(yd.data()).enumerate() {
+                if (a - e).abs() > 2e-3 + 1e-3 * e.abs() {
+                    return Err(format!("mismatch at {i}: fft={a} direct={e} ({s:?})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strided_fft_conv() {
+        let mut rng = XorShiftRng::new(62);
+        let x = Tensor::new(Shape::nchw(1, 2, 8, 8), Gen::tensor_data(&mut rng, 128)).unwrap();
+        let w = Tensor::new(&[2, 2, 3, 3][..], Gen::tensor_data(&mut rng, 36)).unwrap();
+        let p = Conv2dParams::new(2, 1);
+        let yd = conv2d_direct(&x, &w, None, p).unwrap();
+        let yf = conv2d_fft(&x, &w, None, p).unwrap();
+        assert_eq!(yd.shape(), yf.shape());
+        crate::testutil::assert_allclose(yf.data(), yd.data(), 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn flop_model_monotone_in_kernel_grid() {
+        // FFT cost is flat in k (grid-dominated) while direct grows with k².
+        let small = fft_conv_flops(1, 16, 32, 32, 16, 3, 1);
+        let large = fft_conv_flops(1, 16, 32, 32, 16, 11, 5);
+        // Larger pad -> larger grid, but same order of magnitude.
+        assert!(large >= small);
+        assert!(large < small * 8);
+    }
+}

@@ -1,0 +1,279 @@
+//! CPU graph executor: runs an [`Architecture`](crate::model::Architecture)
+//! with a [`WeightStore`](crate::model::WeightStore) over NCHW batches.
+//!
+//! This is the "CPU baseline" half of every GPU-vs-CPU comparison in the
+//! benches, and the independent oracle the integration tests hold the PJRT
+//! path against. Per-layer timings feed experiment E9 (the NIN layer
+//! breakdown).
+
+use super::{
+    avg_pool2d, conv1d, conv2d_direct, conv2d_fft, conv2d_im2col, dense, global_avg_pool,
+    max_pool1d, max_pool2d, relu_in_place, softmax, Conv1dParams, Conv2dParams, ConvStrategy,
+    Pool2dParams,
+};
+use crate::model::{Architecture, LayerKind, WeightStore};
+use crate::tensor::{Shape, Tensor};
+use std::time::Instant;
+
+/// Wall-time spent in one layer during [`CpuExecutor::forward_timed`].
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub name: String,
+    pub kind: &'static str,
+    pub micros: f64,
+    pub macs: u64,
+}
+
+/// CPU executor bound to one architecture + weights.
+pub struct CpuExecutor {
+    arch: Architecture,
+    weights: WeightStore,
+    strategy: ConvStrategy,
+}
+
+impl CpuExecutor {
+    /// Build an executor; validates weights against the architecture.
+    pub fn new(arch: Architecture, weights: WeightStore) -> crate::Result<CpuExecutor> {
+        weights.validate(&arch)?;
+        Ok(CpuExecutor { arch, weights, strategy: ConvStrategy::Im2col })
+    }
+
+    /// Build with random weights (latency benchmarking — numerics don't
+    /// affect timing).
+    pub fn with_random_weights(arch: Architecture, seed: u64) -> crate::Result<CpuExecutor> {
+        let mut ws = WeightStore::new();
+        for (i, (name, shape)) in arch.parameters()?.iter().enumerate() {
+            let fan_in: usize = shape.dims().iter().skip(1).product::<usize>().max(1);
+            let scale = (2.0 / fan_in as f32).sqrt();
+            ws.insert(name, Tensor::randn(shape.clone(), seed.wrapping_add(i as u64), scale));
+        }
+        CpuExecutor::new(arch, ws)
+    }
+
+    pub fn set_strategy(&mut self, strategy: ConvStrategy) {
+        self.strategy = strategy;
+    }
+
+    pub fn arch(&self) -> &Architecture {
+        &self.arch
+    }
+
+    pub fn weights(&self) -> &WeightStore {
+        &self.weights
+    }
+
+    fn run_conv2d(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        p: Conv2dParams,
+    ) -> crate::Result<Tensor> {
+        match self.strategy {
+            ConvStrategy::Direct => conv2d_direct(x, w, Some(b), p),
+            ConvStrategy::Im2col => conv2d_im2col(x, w, Some(b), p),
+            ConvStrategy::Fft => conv2d_fft(x, w, Some(b), p),
+        }
+    }
+
+    /// Forward pass over a batch. Input shape `[batch, ...input_dims]`.
+    pub fn forward(&self, input: &Tensor) -> crate::Result<Tensor> {
+        Ok(self.forward_inner(input, None)?.0)
+    }
+
+    /// Forward pass recording per-layer wall time.
+    pub fn forward_timed(&self, input: &Tensor) -> crate::Result<(Tensor, Vec<LayerTiming>)> {
+        let mut timings = Vec::new();
+        let out = self.forward_inner(input, Some(&mut timings))?.0;
+        Ok((out, timings))
+    }
+
+    fn forward_inner(
+        &self,
+        input: &Tensor,
+        mut timings: Option<&mut Vec<LayerTiming>>,
+    ) -> crate::Result<(Tensor,)> {
+        // Validate input shape: [batch] + arch.input.
+        let expect: Vec<usize> = self.arch.input.clone();
+        let got = input.shape().dims();
+        anyhow::ensure!(
+            got.len() == expect.len() + 1 && got[1..] == expect[..],
+            "input shape {} does not match model input [N,{}]",
+            input.shape(),
+            expect.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let batch = got[0];
+        let layer_shapes = self.arch.shapes()?;
+
+        let mut x = input.clone();
+        for (i, layer) in self.arch.layers.iter().enumerate() {
+            let t0 = Instant::now();
+            let in_shape = &layer_shapes[i];
+            x = match &layer.kind {
+                LayerKind::Conv2d { stride, pad, .. } => {
+                    let w = self.weights.get(&format!("{}.w", layer.name))?;
+                    let b = self.weights.get(&format!("{}.b", layer.name))?;
+                    self.run_conv2d(&x, w, b, Conv2dParams::new(*stride, *pad))?
+                }
+                LayerKind::Conv1d { k: _, stride, pad, .. } => {
+                    let w = self.weights.get(&format!("{}.w", layer.name))?;
+                    let b = self.weights.get(&format!("{}.b", layer.name))?;
+                    conv1d(&x, w, Some(b), Conv1dParams { stride: *stride, pad: *pad })?
+                }
+                LayerKind::Relu => {
+                    relu_in_place(&mut x);
+                    x
+                }
+                LayerKind::MaxPool2d { k, stride, pad } => {
+                    max_pool2d(&x, Pool2dParams::new(*k, *stride, *pad))?
+                }
+                LayerKind::AvgPool2d { k, stride, pad } => {
+                    avg_pool2d(&x, Pool2dParams::new(*k, *stride, *pad))?
+                }
+                LayerKind::MaxPool1d { k, stride } => max_pool1d(&x, *k, *stride)?,
+                LayerKind::GlobalAvgPool => global_avg_pool(&x)?,
+                LayerKind::Dense { .. } => {
+                    let w = self.weights.get(&format!("{}.w", layer.name))?;
+                    let b = self.weights.get(&format!("{}.b", layer.name))?;
+                    dense(&x, w, Some(b))?
+                }
+                LayerKind::Flatten => {
+                    let flat: usize = in_shape.iter().product();
+                    x.reshape(Shape::new(&[batch, flat]))?
+                }
+                LayerKind::Dropout { .. } => x, // inference no-op
+                LayerKind::Softmax => softmax(&x)?,
+            };
+            if let Some(ts) = timings.as_deref_mut() {
+                // Per-layer MACs scaled by batch.
+                let layer_macs = {
+                    let out = &layer_shapes[i + 1];
+                    match &layer.kind {
+                        LayerKind::Conv2d { out_ch, k, .. } => {
+                            (out_ch * out[1] * out[2] * in_shape[0] * k * k) as u64
+                        }
+                        LayerKind::Conv1d { out_ch, k, .. } => {
+                            (out_ch * out[1] * in_shape[0] * k) as u64
+                        }
+                        LayerKind::Dense { out: of } => {
+                            (of * in_shape.iter().product::<usize>()) as u64
+                        }
+                        _ => 0,
+                    }
+                } * batch as u64;
+                ts.push(LayerTiming {
+                    name: layer.name.clone(),
+                    kind: layer.kind.type_name(),
+                    micros: t0.elapsed().as_secs_f64() * 1e6,
+                    macs: layer_macs,
+                });
+            }
+        }
+        Ok((x,))
+    }
+
+    /// Classify a batch: forward + per-row argmax.
+    pub fn classify(&self, input: &Tensor) -> crate::Result<Vec<usize>> {
+        let out = self.forward(input)?;
+        anyhow::ensure!(out.shape().rank() == 2, "classify needs [batch, classes] output");
+        Ok(out.argmax_rows())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{lenet, nin_cifar10, Architecture, LayerKind};
+
+    fn tiny_arch() -> Architecture {
+        let mut a = Architecture::new("tiny", &[1, 6, 6]);
+        a.push("conv1", LayerKind::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 });
+        a.push("relu1", LayerKind::Relu);
+        a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+        a.push("flatten", LayerKind::Flatten);
+        a.push("fc", LayerKind::Dense { out: 3 });
+        a.push("softmax", LayerKind::Softmax);
+        a
+    }
+
+    #[test]
+    fn forward_shapes_and_probabilities() {
+        let exec = CpuExecutor::with_random_weights(tiny_arch(), 1).unwrap();
+        let x = Tensor::randn(Shape::nchw(4, 1, 6, 6), 2, 1.0);
+        let y = exec.forward(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[4, 3]);
+        for row in y.data().chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn input_shape_validated() {
+        let exec = CpuExecutor::with_random_weights(tiny_arch(), 1).unwrap();
+        let bad = Tensor::zeros(Shape::nchw(1, 3, 6, 6));
+        assert!(exec.forward(&bad).is_err());
+        let missing_batch = Tensor::zeros(&[1, 6, 6][..]);
+        assert!(exec.forward(&missing_batch).is_err());
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let exec = CpuExecutor::with_random_weights(tiny_arch(), 7).unwrap();
+        let x = Tensor::randn(Shape::nchw(2, 1, 6, 6), 3, 1.0);
+        let y1 = exec.forward(&x).unwrap();
+        let y2 = exec.forward(&x).unwrap();
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn strategies_agree() {
+        let x = Tensor::randn(Shape::nchw(1, 1, 6, 6), 4, 1.0);
+        let mut outs = Vec::new();
+        for strat in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+            let mut exec = CpuExecutor::with_random_weights(tiny_arch(), 9).unwrap();
+            exec.set_strategy(strat);
+            outs.push(exec.forward(&x).unwrap());
+        }
+        crate::testutil::assert_allclose(outs[1].data(), outs[0].data(), 1e-4, 1e-5);
+        crate::testutil::assert_allclose(outs[2].data(), outs[0].data(), 1e-3, 1e-4);
+    }
+
+    #[test]
+    fn timed_forward_reports_all_layers() {
+        let exec = CpuExecutor::with_random_weights(tiny_arch(), 1).unwrap();
+        let x = Tensor::randn(Shape::nchw(1, 1, 6, 6), 2, 1.0);
+        let (_, timings) = exec.forward_timed(&x).unwrap();
+        assert_eq!(timings.len(), 6);
+        assert_eq!(timings[0].kind, "conv2d");
+        assert!(timings[0].macs > 0);
+        assert_eq!(timings[1].macs, 0); // relu
+    }
+
+    #[test]
+    fn lenet_runs_end_to_end() {
+        let exec = CpuExecutor::with_random_weights(lenet(), 42).unwrap();
+        let x = Tensor::randn(Shape::nchw(2, 1, 28, 28), 5, 1.0);
+        let preds = exec.classify(&x).unwrap();
+        assert_eq!(preds.len(), 2);
+        assert!(preds.iter().all(|&p| p < 10));
+    }
+
+    #[test]
+    fn nin_runs_end_to_end() {
+        // The paper's actual 20-layer network, batch 1 (this is the E1 model).
+        let exec = CpuExecutor::with_random_weights(nin_cifar10(), 42).unwrap();
+        let x = Tensor::randn(Shape::nchw(1, 3, 32, 32), 6, 1.0);
+        let y = exec.forward(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 10]);
+        let s: f32 = y.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_validation_enforced() {
+        let arch = tiny_arch();
+        let ws = WeightStore::new(); // empty
+        assert!(CpuExecutor::new(arch, ws).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! CPU reference neural-network backend.
+//!
+//! This is the paper's operator set — "convolution, pooling, rectifier
+//! layer and softmax" (§1) — implemented in pure Rust over NCHW tensors.
+//! It plays two roles:
+//!
+//! 1. **Baseline comparator.** The paper's predecessor work compared
+//!    Metal-GPU against Apple's Accelerate CPU path; here `nn/` is the
+//!    CPU path and the PJRT runtime (`runtime/`) is the "GPU" path.
+//! 2. **Independent oracle.** Integration tests check PJRT executions of
+//!    the AOT-compiled JAX models against this backend, which shares no
+//!    code with JAX/XLA.
+//!
+//! Convolution comes in three strategies — direct, im2col+GEMM, and FFT
+//! (the paper's roadmap item 1) — benchmarked against each other in E6.
+
+mod activation;
+mod conv;
+mod conv1d;
+mod dense;
+mod fft;
+mod fft_conv;
+mod graph;
+mod pool;
+mod softmax;
+
+pub use activation::{relu, relu_in_place, sigmoid, tanh_act};
+pub use conv::{conv2d, conv2d_direct, conv2d_im2col, im2col, Conv2dParams};
+pub use conv1d::{conv1d, max_pool1d, Conv1dParams};
+pub use dense::{dense, matmul, matmul_blocked};
+pub use fft::{fft, fft2d, ifft, ifft2d, Complex};
+pub use fft_conv::{conv2d_fft, fft_conv_flops};
+pub use graph::{CpuExecutor, LayerTiming};
+pub use pool::{avg_pool2d, global_avg_pool, max_pool2d, Pool2dParams};
+pub use softmax::{log_softmax, softmax};
+
+/// Convolution strategy selector (E6 sweeps all of these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvStrategy {
+    Direct,
+    Im2col,
+    Fft,
+}
+
+impl ConvStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvStrategy::Direct => "direct",
+            ConvStrategy::Im2col => "im2col",
+            ConvStrategy::Fft => "fft",
+        }
+    }
+}

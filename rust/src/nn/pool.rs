@@ -1,0 +1,216 @@
+//! Spatial pooling over NCHW tensors: max, average, and global average
+//! (NIN's classifier head uses global average pooling instead of dense
+//! layers — that is the architecture the paper ships).
+//!
+//! Caffe pooling semantics: output size uses ceil division, and windows may
+//! overhang the padded edge (overhanging cells are excluded from both max
+//! and average counts).
+
+use crate::tensor::{Shape, Tensor};
+
+/// Pooling hyper-parameters (square window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool2dParams {
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Pool2dParams {
+    pub fn new(k: usize, stride: usize, pad: usize) -> Self {
+        Pool2dParams { k, stride, pad }
+    }
+
+    /// Caffe-style (ceil) output size, including Caffe's clamp: with
+    /// padding, the last window must start strictly inside `input + pad`
+    /// (otherwise it would see only padding).
+    pub fn out_hw(&self, h: usize, w: usize) -> crate::Result<(usize, usize)> {
+        anyhow::ensure!(self.stride > 0, "pool stride must be positive");
+        anyhow::ensure!(self.k > 0, "pool window must be positive");
+        anyhow::ensure!(self.pad < self.k, "pool pad {} must be < window {}", self.pad, self.k);
+        let out = |size: usize| {
+            let mut o = (size + 2 * self.pad).saturating_sub(self.k).div_ceil(self.stride) + 1;
+            // Unconditional clamp (Caffe guards on pad, but the stride>k
+            // pad=0 corner would otherwise produce an empty last window).
+            if o > 1 && (o - 1) * self.stride >= size + self.pad {
+                o -= 1;
+            }
+            o
+        };
+        Ok((out(h), out(w)))
+    }
+}
+
+fn pool2d(
+    input: &Tensor,
+    params: Pool2dParams,
+    is_max: bool,
+) -> crate::Result<Tensor> {
+    anyhow::ensure!(input.shape().rank() == 4, "pool input must be NCHW, got {}", input.shape());
+    let (n, c, h, w) = (
+        input.shape().dim(0),
+        input.shape().dim(1),
+        input.shape().dim(2),
+        input.shape().dim(3),
+    );
+    let (oh, ow) = params.out_hw(h, w)?;
+    let mut out = Tensor::zeros(Shape::nchw(n, c, oh, ow));
+    let x = input.data();
+    let o = out.data_mut();
+    for b in 0..n {
+        for ch in 0..c {
+            let plane = &x[(b * c + ch) * h * w..(b * c + ch + 1) * h * w];
+            let oplane = &mut o[(b * c + ch) * oh * ow..(b * c + ch + 1) * oh * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let y0 = (oy * params.stride) as isize - params.pad as isize;
+                    let x0 = (ox * params.stride) as isize - params.pad as isize;
+                    let mut best = f32::NEG_INFINITY;
+                    let mut sum = 0.0f32;
+                    let mut count = 0usize;
+                    for ky in 0..params.k {
+                        let iy = y0 + ky as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..params.k {
+                            let ix = x0 + kx as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = plane[iy as usize * w + ix as usize];
+                            best = best.max(v);
+                            sum += v;
+                            count += 1;
+                        }
+                    }
+                    oplane[oy * ow + ox] = if count == 0 {
+                        0.0
+                    } else if is_max {
+                        best
+                    } else {
+                        sum / count as f32
+                    };
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Max pooling.
+pub fn max_pool2d(input: &Tensor, params: Pool2dParams) -> crate::Result<Tensor> {
+    pool2d(input, params, true)
+}
+
+/// Average pooling (in-bounds count divisor, Caffe `AVE` with pad exclusion).
+pub fn avg_pool2d(input: &Tensor, params: Pool2dParams) -> crate::Result<Tensor> {
+    pool2d(input, params, false)
+}
+
+/// Global average pooling: NCHW -> [N, C] (NIN classifier head).
+pub fn global_avg_pool(input: &Tensor) -> crate::Result<Tensor> {
+    anyhow::ensure!(input.shape().rank() == 4, "gap input must be NCHW");
+    let (n, c, h, w) = (
+        input.shape().dim(0),
+        input.shape().dim(1),
+        input.shape().dim(2),
+        input.shape().dim(3),
+    );
+    let mut out = Tensor::zeros(Shape::new(&[n, c]));
+    let x = input.data();
+    let o = out.data_mut();
+    let inv = 1.0 / (h * w) as f32;
+    for b in 0..n {
+        for ch in 0..c {
+            let plane = &x[(b * c + ch) * h * w..(b * c + ch + 1) * h * w];
+            o[b * c + ch] = plane.iter().sum::<f32>() * inv;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(values: &[f32], h: usize, w: usize) -> Tensor {
+        Tensor::new(Shape::nchw(1, 1, h, w), values.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = img(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0], 4, 4);
+        let y = max_pool2d(&x, Pool2dParams::new(2, 2, 0)).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[6.0, 8.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn avg_pool_2x2() {
+        let x = img(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        let y = avg_pool2d(&x, Pool2dParams::new(2, 2, 0)).unwrap();
+        assert_eq!(y.data(), &[2.5]);
+    }
+
+    #[test]
+    fn caffe_ceil_output_size() {
+        // NIN pools: 3x3 stride 2 on 32x32 -> ceil((32-3)/2)+1 = 16.
+        let p = Pool2dParams::new(3, 2, 0);
+        assert_eq!(p.out_hw(32, 32).unwrap(), (16, 16));
+        // On 15x15 -> ceil(12/2)+1 = 7.
+        assert_eq!(p.out_hw(15, 15).unwrap(), (7, 7));
+    }
+
+    #[test]
+    fn overhanging_window_excludes_outside() {
+        // 3x3 input, 2x2 window stride 2 -> ceil(1/2)+1 = 2 outputs; the
+        // bottom-right window covers only the corner element.
+        let x = img(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0], 3, 3);
+        let y = max_pool2d(&x, Pool2dParams::new(2, 2, 0)).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 6.0, 8.0, 9.0]);
+        let a = avg_pool2d(&x, Pool2dParams::new(2, 2, 0)).unwrap();
+        assert_eq!(a.data(), &[3.0, 4.5, 7.5, 9.0]);
+    }
+
+    #[test]
+    fn padding_excluded_from_average() {
+        let x = img(&[4.0], 1, 1);
+        // pad=1 below window=3: windows see only the single real pixel.
+        let y = avg_pool2d(&x, Pool2dParams::new(3, 1, 1)).unwrap();
+        assert_eq!(y.data(), &[4.0]);
+    }
+
+    #[test]
+    fn max_pool_handles_negatives() {
+        let x = img(&[-5.0, -2.0, -3.0, -4.0], 2, 2);
+        let y = max_pool2d(&x, Pool2dParams::new(2, 2, 0)).unwrap();
+        assert_eq!(y.data(), &[-2.0]);
+    }
+
+    #[test]
+    fn global_avg_pool_nin_head() {
+        let mut x = Tensor::zeros(Shape::nchw(2, 3, 2, 2));
+        for b in 0..2 {
+            for c in 0..3 {
+                for i in 0..2 {
+                    for j in 0..2 {
+                        x.set(&[b, c, i, j], (b * 3 + c) as f32);
+                    }
+                }
+            }
+        }
+        let y = global_avg_pool(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[2, 3]);
+        assert_eq!(y.data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let x = img(&[1.0], 1, 1);
+        assert!(max_pool2d(&x, Pool2dParams::new(0, 1, 0)).is_err());
+        assert!(max_pool2d(&x, Pool2dParams::new(2, 0, 0)).is_err());
+        assert!(max_pool2d(&x, Pool2dParams::new(2, 1, 2)).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Softmax / log-softmax over the last axis of a rank-2 tensor
+//! (numerically stabilized by max subtraction).
+
+use crate::tensor::Tensor;
+
+/// Row-wise softmax of a `[batch, classes]` tensor.
+pub fn softmax(x: &Tensor) -> crate::Result<Tensor> {
+    anyhow::ensure!(x.shape().rank() == 2, "softmax expects [batch, classes], got {}", x.shape());
+    let classes = x.shape().dim(1);
+    anyhow::ensure!(classes > 0, "softmax needs at least one class");
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_exact_mut(classes) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    Ok(out)
+}
+
+/// Row-wise log-softmax (used for cross-entropy checking against the
+/// Python trainer).
+pub fn log_softmax(x: &Tensor) -> crate::Result<Tensor> {
+    anyhow::ensure!(x.shape().rank() == 2, "log_softmax expects [batch, classes]");
+    let classes = x.shape().dim(1);
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_exact_mut(classes) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let log_sum = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        for v in row.iter_mut() {
+            *v -= log_sum;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_allclose;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let x = Tensor::randn(&[8, 10][..], 31, 2.0);
+        let y = softmax(&x).unwrap();
+        for row in y.data().chunks_exact(10) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "sum={s}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn uniform_logits_give_uniform_probs() {
+        let x = Tensor::filled(&[1, 4][..], 3.0);
+        let y = softmax(&x).unwrap();
+        assert_allclose(y.data(), &[0.25; 4], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn invariant_to_constant_shift() {
+        let a = Tensor::new(&[1, 3][..], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(&[1, 3][..], vec![101.0, 102.0, 103.0]).unwrap();
+        assert_allclose(softmax(&a).unwrap().data(), softmax(&b).unwrap().data(), 1e-5, 1e-7);
+    }
+
+    #[test]
+    fn numerically_stable_for_large_logits() {
+        let x = Tensor::new(&[1, 3][..], vec![1000.0, 1001.0, 1002.0]).unwrap();
+        let y = softmax(&x).unwrap();
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        let s: f32 = y.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_preserved() {
+        let x = Tensor::new(&[1, 5][..], vec![0.1, -2.0, 3.0, 0.5, 1.0]).unwrap();
+        let y = softmax(&x).unwrap();
+        assert_eq!(y.argmax(), 2);
+    }
+
+    #[test]
+    fn log_softmax_is_log_of_softmax() {
+        let x = Tensor::randn(&[4, 7][..], 33, 1.5);
+        let s = softmax(&x).unwrap();
+        let ls = log_softmax(&x).unwrap();
+        let logs: Vec<f32> = s.data().iter().map(|&p| p.ln()).collect();
+        assert_allclose(ls.data(), &logs, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn rejects_bad_rank() {
+        let x = Tensor::zeros(&[2, 2, 2][..]);
+        assert!(softmax(&x).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Engine thread: sole owner of the PJRT client and every loaded model.
+//!
+//! [`EngineHandle`] is the thread-safe facade: `load`, `unload`, `infer`,
+//! `stats`. Requests travel over an mpsc channel; each carries a reply
+//! channel. This is the Metal `MTLCommandQueue` role from paper Fig. 2 —
+//! commands are serialized onto the device by a queue the app threads feed.
+
+use super::loaded_model::LoadedModel;
+use crate::metrics::Histogram;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Metadata returned by a successful load.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub id: String,
+    pub batches: Vec<usize>,
+    pub weight_bytes: usize,
+    pub classes: usize,
+    pub labels: Vec<String>,
+    /// Wall time the load took (disk + weight staging + PJRT compile).
+    pub load_micros: u64,
+}
+
+/// Engine statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub items: u64,
+    pub exec_p50_us: u64,
+    pub exec_p95_us: u64,
+    pub exec_p99_us: u64,
+    pub resident_models: usize,
+    pub resident_bytes: usize,
+}
+
+enum Request {
+    Load { dir: PathBuf, reply: mpsc::Sender<crate::Result<ModelInfo>> },
+    Unload { id: String, reply: mpsc::Sender<crate::Result<()>> },
+    Infer { id: String, input: Tensor, reply: mpsc::Sender<crate::Result<Tensor>> },
+    Stats { reply: mpsc::Sender<EngineStats> },
+    Shutdown,
+}
+
+/// Thread-safe handle to the engine thread. Cloneable; dropping all
+/// handles shuts the engine down.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// The engine: spawn with [`Engine::start`], returns the handle and the
+/// join handle.
+pub struct Engine;
+
+impl Engine {
+    /// Start the engine thread (creates the PJRT CPU client on-thread).
+    pub fn start() -> crate::Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        std::thread::Builder::new()
+            .name("dlk-engine".to_string())
+            .spawn(move || engine_main(rx, ready_tx))
+            .map_err(|e| anyhow::anyhow!("spawning engine thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(EngineHandle { tx })
+    }
+}
+
+fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<crate::Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("PJRT client init failed: {e}")));
+            return;
+        }
+    };
+    let mut models: BTreeMap<String, LoadedModel> = BTreeMap::new();
+    let mut exec_hist = Histogram::new();
+    let mut executions: u64 = 0;
+    let mut items: u64 = 0;
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Load { dir, reply } => {
+                let t0 = Instant::now();
+                let result = LoadedModel::load(&client, &dir).map(|m| {
+                    let info = ModelInfo {
+                        id: m.manifest.id.clone(),
+                        batches: m.batches(),
+                        weight_bytes: m.weight_bytes,
+                        classes: m.manifest.arch.num_classes().unwrap_or(0),
+                        labels: m.manifest.labels.clone(),
+                        load_micros: t0.elapsed().as_micros() as u64,
+                    };
+                    models.insert(info.id.clone(), m);
+                    info
+                });
+                let _ = reply.send(result);
+            }
+            Request::Unload { id, reply } => {
+                let result = match models.remove(&id) {
+                    Some(_) => Ok(()),
+                    None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
+                };
+                let _ = reply.send(result);
+            }
+            Request::Infer { id, input, reply } => {
+                let result = match models.get(&id) {
+                    Some(m) => {
+                        let t0 = Instant::now();
+                        let n = input.shape().dims().first().copied().unwrap_or(0) as u64;
+                        let r = m.infer(&input);
+                        if r.is_ok() {
+                            exec_hist.record(t0.elapsed().as_micros() as u64);
+                            executions += 1;
+                            items += n;
+                        }
+                        r
+                    }
+                    None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
+                };
+                let _ = reply.send(result);
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(EngineStats {
+                    executions,
+                    items,
+                    exec_p50_us: exec_hist.quantile(0.5),
+                    exec_p95_us: exec_hist.quantile(0.95),
+                    exec_p99_us: exec_hist.quantile(0.99),
+                    resident_models: models.len(),
+                    resident_bytes: models.values().map(|m| m.weight_bytes).sum(),
+                });
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+impl EngineHandle {
+    fn call<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> Request) -> crate::Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped the request"))
+    }
+
+    /// Load a model directory; compiles all its AOT batch sizes.
+    pub fn load(&self, dir: impl Into<PathBuf>) -> crate::Result<ModelInfo> {
+        self.call(|reply| Request::Load { dir: dir.into(), reply })?
+    }
+
+    /// Unload (frees executables + weight literals).
+    pub fn unload(&self, id: &str) -> crate::Result<()> {
+        self.call(|reply| Request::Unload { id: id.to_string(), reply })?
+    }
+
+    /// Synchronous inference on a `[n, ...]` batch.
+    pub fn infer(&self, id: &str, input: Tensor) -> crate::Result<Tensor> {
+        self.call(|reply| Request::Infer { id: id.to_string(), input, reply })?
+    }
+
+    /// Engine statistics.
+    pub fn stats(&self) -> crate::Result<EngineStats> {
+        self.call(|reply| Request::Stats { reply })
+    }
+
+    /// Explicit shutdown (optional; dropping all handles also stops it).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need real artifacts live in rust/tests/
+    // (integration); here we only check lifecycle basics.
+
+    #[test]
+    fn start_and_shutdown() {
+        let engine = Engine::start().unwrap();
+        let stats = engine.stats().unwrap();
+        assert_eq!(stats.resident_models, 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let engine = Engine::start().unwrap();
+        let e = engine
+            .infer("ghost", Tensor::zeros(&[1, 1][..]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("ghost"), "{e}");
+        let e2 = engine.unload("ghost").unwrap_err().to_string();
+        assert!(e2.contains("not loaded"), "{e2}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn load_rejects_bad_dir() {
+        let engine = Engine::start().unwrap();
+        let dir = crate::testutil::tempdir("engine-bad");
+        assert!(engine.load(&dir).is_err());
+        engine.shutdown();
+    }
+}

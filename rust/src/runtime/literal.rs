@@ -1,0 +1,41 @@
+//! Tensor <-> XLA Literal conversion at the runtime boundary.
+
+use crate::tensor::{Shape, Tensor};
+
+/// Convert a dense f32 [`Tensor`] to an XLA literal of the same shape.
+pub fn tensor_to_literal(tensor: &Tensor) -> crate::Result<xla::Literal> {
+    let bytes = tensor.to_f32_bytes();
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        tensor.shape().dims(),
+        &bytes,
+    )?;
+    Ok(lit)
+}
+
+/// Convert an f32 XLA literal back to a [`Tensor`]. The caller supplies the
+/// shape (PJRT results' logical shape is known from the manifest).
+pub fn literal_to_tensor(literal: &xla::Literal, shape: Shape) -> crate::Result<Tensor> {
+    let values: Vec<f32> = literal.to_vec::<f32>()?;
+    Tensor::new(shape, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let t = Tensor::randn(Shape::nchw(2, 3, 4, 5), 31, 1.0);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, t.shape().clone()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn element_count_checked() {
+        let t = Tensor::randn(&[6][..], 32, 1.0);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit, Shape::new(&[7])).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! A model resident on the PJRT device: manifest + weight literals +
+//! compiled executables per AOT batch size.
+//!
+//! Lives on the engine thread only (PJRT handles are `!Send`).
+
+use super::literal::{literal_to_tensor, tensor_to_literal};
+use crate::model::{Manifest, ModelFiles, WeightStore};
+use crate::tensor::{Shape, Tensor};
+use std::collections::BTreeMap;
+
+/// A fully loaded model (weights staged as literals, one compiled
+/// executable per batch size).
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    /// Weight literals in `Architecture::parameters()` order — the AOT
+    /// entry signature is `(x, param0, param1, ...)`.
+    weights: Vec<xla::Literal>,
+    /// Compiled executable per batch size.
+    executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Bytes of weights resident (for the cache budget).
+    pub weight_bytes: usize,
+}
+
+impl LoadedModel {
+    /// Load a model directory (manifest.json / weights.dlkw /
+    /// model_b*.hlo.txt), verify integrity, stage weights, compile every
+    /// declared batch size.
+    pub fn load(client: &xla::PjRtClient, dir: &std::path::Path) -> crate::Result<LoadedModel> {
+        let files = ModelFiles::new(dir);
+        let manifest = Manifest::load(&files.manifest())?;
+
+        // Integrity: sha256 of the weights file must match the manifest.
+        let weight_blob = std::fs::read(files.weights())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", files.weights().display()))?;
+        if let Some(expect) = &manifest.weights_sha256 {
+            let got = crate::store::sha256_hex(&weight_blob);
+            anyhow::ensure!(
+                &got == expect,
+                "weights integrity failure for `{}`: sha256 {got} != manifest {expect}",
+                manifest.id
+            );
+        }
+        let store = WeightStore::from_bytes(&weight_blob)?;
+        store.validate(&manifest.arch)?;
+
+        // Stage weights as literals in parameter order.
+        let mut weights = Vec::new();
+        let mut weight_bytes = 0;
+        for (name, _) in manifest.arch.parameters()? {
+            let t = store.get(&name)?;
+            weight_bytes += t.numel() * 4;
+            weights.push(tensor_to_literal(t)?);
+        }
+
+        // Compile each AOT batch size.
+        let mut executables = BTreeMap::new();
+        for &batch in &manifest.aot_batches {
+            let path = files.hlo(batch);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {}", path.display()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(batch, exe);
+        }
+        anyhow::ensure!(
+            !executables.is_empty(),
+            "model `{}` declares no AOT batch sizes",
+            manifest.id
+        );
+        Ok(LoadedModel { manifest, weights, executables, weight_bytes })
+    }
+
+    /// Batch sizes available.
+    pub fn batches(&self) -> Vec<usize> {
+        self.executables.keys().copied().collect()
+    }
+
+    /// Smallest AOT batch size >= `n`, or the largest available (caller
+    /// must split bigger batches).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for &b in self.executables.keys() {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.executables.keys().last().unwrap()
+    }
+
+    /// Run inference on a `[n, ...]` input; pads to the chosen executable's
+    /// batch and slices the result back to `n` rows.
+    pub fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
+        let dims = input.shape().dims();
+        anyhow::ensure!(!dims.is_empty(), "input must have a batch dimension");
+        let n = dims[0];
+        anyhow::ensure!(n > 0, "empty batch");
+        anyhow::ensure!(
+            dims[1..] == self.manifest.arch.input[..],
+            "input shape {} does not match model `{}` input {:?}",
+            input.shape(),
+            self.manifest.id,
+            self.manifest.arch.input
+        );
+        let exec_batch = self.pick_batch(n);
+        anyhow::ensure!(
+            n <= exec_batch,
+            "batch {n} exceeds largest AOT batch {exec_batch} for `{}` (split upstream)",
+            self.manifest.id
+        );
+
+        // Pad with zero rows to the executable's batch.
+        let padded = if n == exec_batch {
+            input.clone()
+        } else {
+            let row = input.numel() / n;
+            let mut data = Vec::with_capacity(exec_batch * row);
+            data.extend_from_slice(input.data());
+            data.resize(exec_batch * row, 0.0);
+            let mut shape = dims.to_vec();
+            shape[0] = exec_batch;
+            Tensor::new(Shape::new(&shape), data)?
+        };
+
+        let x_lit = tensor_to_literal(&padded)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&x_lit);
+        args.extend(self.weights.iter());
+
+        let exe = &self.executables[&exec_batch];
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // AOT lowers with return_tuple=True
+
+        let out_dims: Vec<usize> = std::iter::once(exec_batch)
+            .chain(self.manifest.arch.output_shape()?)
+            .collect();
+        let full = literal_to_tensor(&out, Shape::new(&out_dims))?;
+        if n == exec_batch {
+            return Ok(full);
+        }
+        // Slice the first n rows.
+        let row = full.numel() / exec_batch;
+        let mut sliced_dims = out_dims;
+        sliced_dims[0] = n;
+        Tensor::new(Shape::new(&sliced_dims), full.data()[..n * row].to_vec())
+    }
+}

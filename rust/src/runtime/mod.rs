@@ -1,0 +1,19 @@
+//! PJRT runtime: loads AOT artifacts (HLO text + DLKW weights) and executes
+//! them from the serving hot path. Python is never involved here.
+//!
+//! Architecture: the `xla` crate's PJRT handles are raw pointers (`!Send`),
+//! so a dedicated **engine thread** owns the `PjRtClient`, every compiled
+//! executable and the resident weight literals; the rest of the system
+//! talks to it through the cloneable, thread-safe [`EngineHandle`] — the
+//! exact analog of Metal's `MTLCommandQueue` feeding one `MTLDevice`
+//! (paper Fig. 2; see [`api_mapping`] for the full correspondence table).
+
+pub mod api_mapping;
+mod engine;
+mod literal;
+mod loaded_model;
+
+pub use api_mapping::{api_mapping_table, ApiMappingRow};
+pub use engine::{Engine, EngineHandle, EngineStats, ModelInfo};
+pub use literal::{literal_to_tensor, tensor_to_literal};
+pub use loaded_model::LoadedModel;

@@ -1,0 +1,232 @@
+//! Meta-model for model selection (paper §2).
+//!
+//! "We have some ideas for a meta model for selecting a model to use,
+//! which can use input like location, time of day, and camera history to
+//! predict which models might be most relevant." … "latency plays an even
+//! bigger part in the mobile on-device case (don't have time to run many
+//! models)".
+//!
+//! Implementation: a linear scorer over context features with a
+//! latency-budget filter — rank candidate models by affinity to the
+//! context, drop those whose expected load+inference cost busts the
+//! budget, and return the ranked list the cache should prefetch.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Where the user currently is (coarse, like CoreLocation significant-
+/// change granularity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LocationKind {
+    Home,
+    Office,
+    Outdoors,
+    Restaurant,
+    Transit,
+}
+
+/// The request context the selector scores against.
+#[derive(Clone, Debug)]
+pub struct Context {
+    pub location: LocationKind,
+    /// Hour of day 0..24.
+    pub hour: u8,
+    /// Recent classification history: model id -> uses in the last window.
+    pub history: BTreeMap<String, u32>,
+    /// Latency budget for the whole decision (Nielsen 100 ms default).
+    pub latency_budget: Duration,
+}
+
+impl Default for Context {
+    fn default() -> Self {
+        Context {
+            location: LocationKind::Home,
+            hour: 12,
+            history: BTreeMap::new(),
+            latency_budget: Duration::from_millis(100),
+        }
+    }
+}
+
+/// A candidate model with its selector metadata.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub id: String,
+    /// Affinity per location kind (0..1).
+    pub location_affinity: BTreeMap<LocationKind, f64>,
+    /// Hours (0..24) at which this model is most relevant; affinity decays
+    /// with circular distance from the nearest.
+    pub peak_hours: Vec<u8>,
+    /// Expected inference latency when resident.
+    pub infer_latency: Duration,
+    /// Expected load latency when not resident.
+    pub load_latency: Duration,
+    pub resident: bool,
+}
+
+/// A scored candidate.
+#[derive(Clone, Debug)]
+pub struct Ranked {
+    pub id: String,
+    pub score: f64,
+    pub expected_latency: Duration,
+    pub within_budget: bool,
+}
+
+/// Scorer weights (tuned constants; a learned model would slot in here).
+#[derive(Clone, Copy, Debug)]
+pub struct MetaModel {
+    pub w_location: f64,
+    pub w_time: f64,
+    pub w_history: f64,
+    pub w_resident: f64,
+}
+
+impl Default for MetaModel {
+    fn default() -> Self {
+        MetaModel { w_location: 1.0, w_time: 0.6, w_history: 1.2, w_resident: 0.4 }
+    }
+}
+
+impl MetaModel {
+    /// Rank candidates for a context: filter by latency budget, sort by
+    /// descending score (ties by id for determinism).
+    pub fn rank(&self, ctx: &Context, candidates: &[Candidate]) -> Vec<Ranked> {
+        let total_history: u32 = ctx.history.values().sum();
+        let mut out: Vec<Ranked> = candidates
+            .iter()
+            .map(|c| {
+                let loc = c.location_affinity.get(&ctx.location).copied().unwrap_or(0.0);
+                let time = c
+                    .peak_hours
+                    .iter()
+                    .map(|&h| {
+                        let d = circular_hour_distance(ctx.hour, h);
+                        1.0 - (d as f64 / 12.0)
+                    })
+                    .fold(0.0f64, f64::max);
+                let hist = if total_history == 0 {
+                    0.0
+                } else {
+                    ctx.history.get(&c.id).copied().unwrap_or(0) as f64 / total_history as f64
+                };
+                let resident = if c.resident { 1.0 } else { 0.0 };
+                let score = self.w_location * loc
+                    + self.w_time * time
+                    + self.w_history * hist
+                    + self.w_resident * resident;
+                let expected_latency = if c.resident {
+                    c.infer_latency
+                } else {
+                    c.load_latency + c.infer_latency
+                };
+                Ranked {
+                    id: c.id.clone(),
+                    score,
+                    expected_latency,
+                    within_budget: expected_latency <= ctx.latency_budget,
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            b.within_budget
+                .cmp(&a.within_budget)
+                .then(b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.id.cmp(&b.id))
+        });
+        out
+    }
+
+    /// The single best choice within budget (None if nothing fits).
+    pub fn select(&self, ctx: &Context, candidates: &[Candidate]) -> Option<Ranked> {
+        self.rank(ctx, candidates).into_iter().find(|r| r.within_budget)
+    }
+}
+
+fn circular_hour_distance(a: u8, b: u8) -> u8 {
+    let d = (a as i16 - b as i16).unsigned_abs() as u8 % 24;
+    d.min(24 - d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn candidate(id: &str) -> Candidate {
+        Candidate {
+            id: id.to_string(),
+            location_affinity: BTreeMap::new(),
+            peak_hours: vec![],
+            infer_latency: Duration::from_millis(20),
+            load_latency: Duration::from_millis(200),
+            resident: true,
+        }
+    }
+
+    #[test]
+    fn location_affinity_dominates() {
+        let mut food = candidate("food-classifier");
+        food.location_affinity.insert(LocationKind::Restaurant, 1.0);
+        let mut docs = candidate("document-scanner");
+        docs.location_affinity.insert(LocationKind::Office, 1.0);
+
+        let ctx = Context { location: LocationKind::Restaurant, ..Default::default() };
+        let ranked = MetaModel::default().rank(&ctx, &[docs.clone(), food.clone()]);
+        assert_eq!(ranked[0].id, "food-classifier");
+
+        let ctx2 = Context { location: LocationKind::Office, ..Default::default() };
+        let ranked2 = MetaModel::default().rank(&ctx2, &[docs, food]);
+        assert_eq!(ranked2[0].id, "document-scanner");
+    }
+
+    #[test]
+    fn history_breaks_ties() {
+        let a = candidate("a");
+        let b = candidate("b");
+        let mut ctx = Context::default();
+        ctx.history.insert("b".to_string(), 9);
+        ctx.history.insert("a".to_string(), 1);
+        let ranked = MetaModel::default().rank(&ctx, &[a, b]);
+        assert_eq!(ranked[0].id, "b");
+    }
+
+    #[test]
+    fn latency_budget_filters_nonresident() {
+        let mut heavy = candidate("heavy");
+        heavy.resident = false; // 220 ms expected
+        let light = candidate("light"); // 20 ms
+        let ctx = Context::default(); // 100 ms budget
+        let best = MetaModel::default().select(&ctx, &[heavy.clone(), light]).unwrap();
+        assert_eq!(best.id, "light");
+        // With only the heavy model, nothing fits the budget.
+        assert!(MetaModel::default().select(&ctx, &[heavy]).is_none());
+    }
+
+    #[test]
+    fn time_of_day_affinity() {
+        let mut morning = candidate("breakfast-model");
+        morning.peak_hours = vec![8];
+        let mut night = candidate("stargazing-model");
+        night.peak_hours = vec![23];
+        let ctx = Context { hour: 9, ..Default::default() };
+        let ranked = MetaModel::default().rank(&ctx, &[night, morning]);
+        assert_eq!(ranked[0].id, "breakfast-model");
+    }
+
+    #[test]
+    fn circular_distance() {
+        assert_eq!(circular_hour_distance(23, 1), 2);
+        assert_eq!(circular_hour_distance(0, 12), 12);
+        assert_eq!(circular_hour_distance(6, 6), 0);
+    }
+
+    #[test]
+    fn deterministic_ordering() {
+        let a = candidate("a");
+        let b = candidate("b");
+        let r1 = MetaModel::default().rank(&Context::default(), &[b.clone(), a.clone()]);
+        let r2 = MetaModel::default().rank(&Context::default(), &[a, b]);
+        assert_eq!(r1[0].id, r2[0].id);
+        assert_eq!(r1[0].id, "a"); // tie broken by id
+    }
+}

@@ -1,0 +1,52 @@
+//! App Store for Deep Learning Models (paper §2).
+//!
+//! "Given the massive GPU resources and time required to train Deep
+//! Learning models we suggest an App Store like model to distribute and
+//! download pretrained and reusable Deep Learning models."
+//!
+//! Pieces:
+//! - [`package`]: single-file `.dlkpkg` container (manifest + weights +
+//!   HLO artifacts) with per-entry sha256 integrity.
+//! - [`registry`]: the store itself — publish packages, list versions,
+//!   fetch over a [`SimulatedNetwork`] with configurable
+//!   bandwidth/latency (the device-side download path).
+
+mod fetch;
+mod package;
+mod registry;
+
+pub use fetch::{FetchStats, SimulatedNetwork};
+pub use package::{Package, PackageEntry, PACKAGE_MAGIC};
+pub use registry::{PublishedModel, Registry};
+
+use sha2::{Digest, Sha256};
+
+/// Hex-encoded sha256 of a byte slice (integrity checks everywhere).
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let mut hasher = Sha256::new();
+    hasher.update(bytes);
+    let digest = hasher.finalize();
+    let mut out = String::with_capacity(64);
+    for b in digest {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        // sha256("abc")
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+}

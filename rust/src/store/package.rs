@@ -1,0 +1,250 @@
+//! `.dlkpkg` — the single-file unit the App Store distributes.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "DLKP"           4 bytes
+//! version u32            4 bytes
+//! entry_count u32        4 bytes
+//! entries:
+//!   name_len u32 | name utf-8 | data_len u64 | sha256 (32 bytes) | data
+//! ```
+//! Every entry carries its own sha256; unpack verifies all of them, so a
+//! corrupted download is detected before anything touches the model cache.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+pub const PACKAGE_MAGIC: &[u8; 4] = b"DLKP";
+const VERSION: u32 = 1;
+
+/// One file inside a package.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackageEntry {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+/// An in-memory package.
+#[derive(Clone, Debug, Default)]
+pub struct Package {
+    entries: BTreeMap<String, Vec<u8>>,
+}
+
+impl Package {
+    pub fn new() -> Package {
+        Package::default()
+    }
+
+    pub fn add(&mut self, name: &str, data: Vec<u8>) -> &mut Package {
+        self.entries.insert(name.to_string(), data);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[u8]> {
+        self.entries.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total payload bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.entries.values().map(|v| v.len()).sum()
+    }
+
+    /// Build a package from a model directory (manifest + weights + HLO).
+    pub fn from_model_dir(dir: &Path) -> crate::Result<Package> {
+        let mut pkg = Package::new();
+        let mut found_manifest = false;
+        for entry in std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+        {
+            let entry = entry?;
+            let path = entry.path();
+            if !path.is_file() {
+                continue;
+            }
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 file name in {}", dir.display()))?
+                .to_string();
+            let keep = name == "manifest.json"
+                || name == "weights.dlkw"
+                || (name.starts_with("model_b") && name.ends_with(".hlo.txt"));
+            if !keep {
+                continue;
+            }
+            found_manifest |= name == "manifest.json";
+            pkg.add(&name, std::fs::read(&path)?);
+        }
+        anyhow::ensure!(found_manifest, "{} has no manifest.json", dir.display());
+        anyhow::ensure!(
+            pkg.get("weights.dlkw").is_some(),
+            "{} has no weights.dlkw",
+            dir.display()
+        );
+        Ok(pkg)
+    }
+
+    /// Unpack into a directory (verifying nothing extra — integrity was
+    /// verified at parse time).
+    pub fn unpack_to(&self, dir: &Path) -> crate::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (name, data) in &self.entries {
+            anyhow::ensure!(
+                !name.contains('/') && !name.contains('\\') && !name.starts_with('.'),
+                "package entry `{name}` has an unsafe name"
+            );
+            std::fs::write(dir.join(name), data)?;
+        }
+        Ok(())
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.write_all(PACKAGE_MAGIC).unwrap();
+        out.write_all(&VERSION.to_le_bytes()).unwrap();
+        out.write_all(&(self.entries.len() as u32).to_le_bytes()).unwrap();
+        for (name, data) in &self.entries {
+            out.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            out.write_all(name.as_bytes()).unwrap();
+            out.write_all(&(data.len() as u64).to_le_bytes()).unwrap();
+            let sha = {
+                use sha2::{Digest, Sha256};
+                let mut h = Sha256::new();
+                h.update(data);
+                h.finalize()
+            };
+            out.write_all(&sha).unwrap();
+            out.write_all(data).unwrap();
+        }
+        out
+    }
+
+    /// Parse + verify from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Package> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> crate::Result<&[u8]> {
+            anyhow::ensure!(*pos + n <= bytes.len(), "package truncated at byte {}", *pos);
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        anyhow::ensure!(take(&mut pos, 4)? == PACKAGE_MAGIC, "bad package magic");
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        anyhow::ensure!(version == VERSION, "unsupported package version {version}");
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        anyhow::ensure!(count <= 4096, "implausible entry count {count}");
+        let mut pkg = Package::new();
+        for _ in 0..count {
+            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            anyhow::ensure!(name_len <= 4096, "implausible name length {name_len}");
+            let name = std::str::from_utf8(take(&mut pos, name_len)?)
+                .map_err(|_| anyhow::anyhow!("package entry name is not UTF-8"))?
+                .to_string();
+            let data_len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            let expect_sha: Vec<u8> = take(&mut pos, 32)?.to_vec();
+            let data = take(&mut pos, data_len)?.to_vec();
+            let got_sha = {
+                use sha2::{Digest, Sha256};
+                let mut h = Sha256::new();
+                h.update(&data);
+                h.finalize().to_vec()
+            };
+            anyhow::ensure!(
+                got_sha == expect_sha,
+                "integrity failure in package entry `{name}`"
+            );
+            pkg.entries.insert(name, data);
+        }
+        anyhow::ensure!(pos == bytes.len(), "trailing bytes after package");
+        Ok(pkg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Package {
+        let mut p = Package::new();
+        p.add("manifest.json", b"{}".to_vec());
+        p.add("weights.dlkw", vec![1, 2, 3, 4]);
+        p.add("model_b1.hlo.txt", b"HloModule m".to_vec());
+        p
+    }
+
+    #[test]
+    fn round_trip() {
+        let p = sample();
+        let back = Package::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("weights.dlkw").unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = sample().to_bytes();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF; // flip a payload byte of the last entry
+        let e = Package::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(e.contains("integrity"), "{e}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample().to_bytes();
+        for cut in [3, 10, bytes.len() - 1] {
+            assert!(Package::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(Package::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn dir_round_trip() {
+        let src = crate::testutil::tempdir("pkg-src");
+        std::fs::write(src.join("manifest.json"), b"{}").unwrap();
+        std::fs::write(src.join("weights.dlkw"), b"DLKW...").unwrap();
+        std::fs::write(src.join("model_b1.hlo.txt"), b"HloModule x").unwrap();
+        std::fs::write(src.join("notes.txt"), b"ignored").unwrap();
+        let pkg = Package::from_model_dir(&src).unwrap();
+        assert_eq!(pkg.len(), 3, "extra files must be excluded");
+
+        let dst = crate::testutil::tempdir("pkg-dst");
+        pkg.unpack_to(&dst).unwrap();
+        assert_eq!(std::fs::read(dst.join("weights.dlkw")).unwrap(), b"DLKW...");
+    }
+
+    #[test]
+    fn missing_manifest_rejected() {
+        let src = crate::testutil::tempdir("pkg-nomanifest");
+        std::fs::write(src.join("weights.dlkw"), b"x").unwrap();
+        assert!(Package::from_model_dir(&src).is_err());
+    }
+
+    #[test]
+    fn unsafe_entry_names_rejected_on_unpack() {
+        let mut p = Package::new();
+        p.add("../evil", vec![1]);
+        let dst = crate::testutil::tempdir("pkg-evil");
+        assert!(p.unpack_to(&dst).is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! The model registry — the server side of the App Store.
+//!
+//! On-disk layout:
+//! ```text
+//! <root>/index.json                      {"models": {id: {latest, versions}}}
+//! <root>/<id>/v<version>/model.dlkpkg
+//! ```
+//! Publishing validates the package (manifest parses, weights sha matches)
+//! before admission; fetching transfers the package through a
+//! [`SimulatedNetwork`] and re-verifies integrity on arrival.
+
+use super::fetch::{FetchStats, SimulatedNetwork};
+use super::package::Package;
+use crate::json::{self, Value};
+use crate::model::Manifest;
+use std::path::{Path, PathBuf};
+
+/// Summary of one published model version.
+#[derive(Clone, Debug)]
+pub struct PublishedModel {
+    pub id: String,
+    pub version: u32,
+    pub package_bytes: usize,
+    pub description: String,
+}
+
+/// A directory-backed model registry.
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    /// Open (creating if needed) a registry rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> crate::Result<Registry> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        let index = root.join("index.json");
+        if !index.exists() {
+            json::to_file(&index, &Value::obj(&[("models", Value::object())]))?;
+        }
+        Ok(Registry { root })
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join("index.json")
+    }
+
+    fn read_index(&self) -> crate::Result<Value> {
+        json::from_file(&self.index_path())
+    }
+
+    /// Publish a package. Returns the stored version (auto-incremented).
+    pub fn publish(&self, pkg: &Package) -> crate::Result<PublishedModel> {
+        // Validate: manifest parses, weights integrity holds.
+        let manifest_bytes = pkg
+            .get("manifest.json")
+            .ok_or_else(|| anyhow::anyhow!("package has no manifest.json"))?;
+        let manifest = Manifest::from_json(&json::parse(
+            std::str::from_utf8(manifest_bytes)
+                .map_err(|_| anyhow::anyhow!("manifest.json is not UTF-8"))?,
+        )?)?;
+        let weights = pkg
+            .get("weights.dlkw")
+            .ok_or_else(|| anyhow::anyhow!("package has no weights.dlkw"))?;
+        if let Some(expect) = &manifest.weights_sha256 {
+            let got = super::sha256_hex(weights);
+            anyhow::ensure!(
+                &got == expect,
+                "publish rejected: weights sha256 {got} != manifest {expect}"
+            );
+        }
+        for &batch in &manifest.aot_batches {
+            anyhow::ensure!(
+                pkg.get(&format!("model_b{batch}.hlo.txt")).is_some(),
+                "publish rejected: manifest declares batch {batch} but package lacks its HLO"
+            );
+        }
+
+        // Version = last + 1.
+        let mut index = self.read_index()?;
+        let current = index
+            .path(&format!("models/{}/latest", manifest.id))
+            .and_then(Value::as_i64)
+            .unwrap_or(0) as u32;
+        let version = current + 1;
+
+        let dir = self.root.join(&manifest.id).join(format!("v{version}"));
+        std::fs::create_dir_all(&dir)?;
+        let bytes = pkg.to_bytes();
+        std::fs::write(dir.join("model.dlkpkg"), &bytes)?;
+
+        // Update index.
+        let models = match index.get("models") {
+            Some(m) => m.clone(),
+            None => Value::object(),
+        };
+        let mut models = models;
+        let mut entry = models.get(&manifest.id).cloned().unwrap_or_else(Value::object);
+        entry.insert("latest", (version as i64).into());
+        entry.insert("description", manifest.description.as_str().into());
+        let mut versions = entry
+            .get("versions")
+            .cloned()
+            .unwrap_or_else(Value::array);
+        versions.push((version as i64).into());
+        entry.insert("versions", versions);
+        models.insert(&manifest.id, entry);
+        index.insert("models", models);
+        json::to_file(&self.index_path(), &index)?;
+
+        Ok(PublishedModel {
+            id: manifest.id,
+            version,
+            package_bytes: bytes.len(),
+            description: manifest.description,
+        })
+    }
+
+    /// List all published models (latest versions).
+    pub fn list(&self) -> crate::Result<Vec<PublishedModel>> {
+        let index = self.read_index()?;
+        let models = index
+            .get("models")
+            .and_then(Value::as_object)
+            .ok_or_else(|| anyhow::anyhow!("corrupt index"))?;
+        let mut out = Vec::new();
+        for (id, entry) in models {
+            let version = entry.req_i64("latest")? as u32;
+            let path = self.package_path(id, version);
+            let package_bytes = std::fs::metadata(&path).map(|m| m.len() as usize).unwrap_or(0);
+            out.push(PublishedModel {
+                id: id.clone(),
+                version,
+                package_bytes,
+                description: entry
+                    .get("description")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        Ok(out)
+    }
+
+    fn package_path(&self, id: &str, version: u32) -> PathBuf {
+        self.root.join(id).join(format!("v{version}")).join("model.dlkpkg")
+    }
+
+    /// Latest version number of a model.
+    pub fn latest_version(&self, id: &str) -> crate::Result<u32> {
+        let index = self.read_index()?;
+        index
+            .path(&format!("models/{id}/latest"))
+            .and_then(Value::as_i64)
+            .map(|v| v as u32)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not in the store"))
+    }
+
+    /// Fetch the latest version of `id` through `net`, verify integrity,
+    /// unpack into `dest_dir`. Returns transfer stats.
+    pub fn fetch_to(
+        &self,
+        id: &str,
+        net: &mut SimulatedNetwork,
+        dest_dir: &Path,
+    ) -> crate::Result<FetchStats> {
+        let version = self.latest_version(id)?;
+        let bytes = std::fs::read(self.package_path(id, version))?;
+        let (received, stats) = net.transfer(&bytes);
+        let pkg = Package::from_bytes(&received)
+            .map_err(|e| anyhow::anyhow!("fetch of `{id}` failed verification: {e}"))?;
+        pkg.unpack_to(dest_dir)?;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{lenet, Manifest};
+    use crate::model::WeightStore;
+    use crate::tensor::Tensor;
+
+    /// Build a small valid package for tests.
+    pub(crate) fn test_package(id: &str) -> Package {
+        let mut arch = crate::model::Architecture::new(id, &[1, 6, 6]);
+        arch.push(
+            "conv1",
+            crate::model::LayerKind::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+        );
+        arch.push("gap", crate::model::LayerKind::GlobalAvgPool);
+        arch.push("softmax", crate::model::LayerKind::Softmax);
+        let mut ws = WeightStore::new();
+        for (name, shape) in arch.parameters().unwrap() {
+            ws.insert(&name, Tensor::randn(shape, 7, 0.1));
+        }
+        let weights = ws.to_bytes();
+        let mut manifest = Manifest::new(id, arch);
+        manifest.weights_sha256 = Some(super::super::sha256_hex(&weights));
+        manifest.aot_batches = vec![];
+        let mut pkg = Package::new();
+        pkg.add(
+            "manifest.json",
+            crate::json::to_string(&manifest.to_json()).into_bytes(),
+        );
+        pkg.add("weights.dlkw", weights);
+        pkg
+    }
+
+    #[test]
+    fn publish_list_fetch_round_trip() {
+        let root = crate::testutil::tempdir("registry");
+        let reg = Registry::open(&root).unwrap();
+        let published = reg.publish(&test_package("tiny-a")).unwrap();
+        assert_eq!(published.version, 1);
+        reg.publish(&test_package("tiny-b")).unwrap();
+
+        let list = reg.list().unwrap();
+        assert_eq!(list.len(), 2);
+
+        let dest = crate::testutil::tempdir("registry-fetch");
+        let mut net = SimulatedNetwork::wifi();
+        let stats = reg.fetch_to("tiny-a", &mut net, &dest).unwrap();
+        assert!(stats.bytes > 0);
+        assert!(dest.join("manifest.json").exists());
+        assert!(dest.join("weights.dlkw").exists());
+        // Fetched manifest must parse and carry the right id.
+        let m = Manifest::load(&dest.join("manifest.json")).unwrap();
+        assert_eq!(m.id, "tiny-a");
+    }
+
+    #[test]
+    fn versions_increment() {
+        let root = crate::testutil::tempdir("registry-ver");
+        let reg = Registry::open(&root).unwrap();
+        assert_eq!(reg.publish(&test_package("m")).unwrap().version, 1);
+        assert_eq!(reg.publish(&test_package("m")).unwrap().version, 2);
+        assert_eq!(reg.latest_version("m").unwrap(), 2);
+    }
+
+    #[test]
+    fn publish_rejects_weight_mismatch() {
+        let mut pkg = test_package("bad");
+        // Tamper with weights after the manifest hash was computed.
+        let mut w = pkg.get("weights.dlkw").unwrap().to_vec();
+        let n = w.len();
+        w[n - 1] ^= 1;
+        pkg.add("weights.dlkw", w);
+        let root = crate::testutil::tempdir("registry-bad");
+        let reg = Registry::open(&root).unwrap();
+        let e = reg.publish(&pkg).unwrap_err().to_string();
+        assert!(e.contains("sha256"), "{e}");
+    }
+
+    #[test]
+    fn publish_rejects_missing_hlo() {
+        let mut pkg = test_package("nohlo");
+        // Claim an AOT batch that has no artifact in the package.
+        let manifest_text = std::str::from_utf8(pkg.get("manifest.json").unwrap()).unwrap();
+        let mut mj = crate::json::parse(manifest_text).unwrap();
+        mj.insert("aot_batches", crate::json::Value::Array(vec![1usize.into()]));
+        pkg.add("manifest.json", crate::json::to_string(&mj).into_bytes());
+        let root = crate::testutil::tempdir("registry-nohlo");
+        let reg = Registry::open(&root).unwrap();
+        let e = reg.publish(&pkg).unwrap_err().to_string();
+        assert!(e.contains("HLO"), "{e}");
+    }
+
+    #[test]
+    fn corrupted_fetch_detected() {
+        let root = crate::testutil::tempdir("registry-corrupt");
+        let reg = Registry::open(&root).unwrap();
+        reg.publish(&test_package("m")).unwrap();
+        let dest = crate::testutil::tempdir("registry-corrupt-dest");
+        let mut net = SimulatedNetwork::new(std::time::Duration::ZERO, 1_000_000, 1.0).with_seed(5);
+        let e = reg.fetch_to("m", &mut net, &dest).unwrap_err().to_string();
+        assert!(e.contains("verification"), "{e}");
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let root = crate::testutil::tempdir("registry-unknown");
+        let reg = Registry::open(&root).unwrap();
+        assert!(reg.latest_version("ghost").is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Element dtypes and software f16 conversion.
+//!
+//! The paper's roadmap item 2 is "use lower resolution on floating point in
+//! order to increase performance and support larger models". We implement
+//! IEEE 754 binary16 conversion in software (round-to-nearest-even) plus a
+//! symmetric i8 affine quantization; experiment E7 measures the
+//! accuracy/size trade-off these give the model store.
+
+use std::fmt;
+
+/// Storage dtypes the model format supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    /// Manifest string form.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::I8 => "i8",
+        }
+    }
+
+    /// Parse the manifest string form.
+    pub fn parse(s: &str) -> crate::Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f16" => Ok(DType::F16),
+            "i8" => Ok(DType::I8),
+            other => anyhow::bail!("unknown dtype `{other}` (expected f32|f16|i8)"),
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Convert an `f32` to IEEE binary16 bits, round-to-nearest-even, with
+/// overflow to ±inf and gradual underflow to subnormals.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let bits = value.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN. Preserve a NaN payload bit so NaN stays NaN.
+        let nan_bit = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | nan_bit | ((mant >> 13) as u16 & 0x03FF);
+    }
+
+    // Re-bias exponent: f32 bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal range. Round mantissa from 23 to 10 bits, RNE.
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let mant10 = mant >> 13;
+        let round_bits = mant & 0x1FFF;
+        let mut out = sign | half_exp | mant10 as u16;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (mant10 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: correct (rounds to next binade / inf)
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal range: shift the (implicit-1) mantissa right.
+        let full_mant = mant | 0x0080_0000;
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mant10 = (full_mant >> shift) as u16;
+        let round_mask = (1u32 << shift) - 1;
+        let round_bits = full_mant & round_mask;
+        let halfway = 1u32 << (shift - 1);
+        let mut out = sign | mant10;
+        if round_bits > halfway || (round_bits == halfway && (mant10 & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow to signed zero
+}
+
+/// Convert IEEE binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let mant = (bits & 0x03FF) as u32;
+
+    if exp == 0x1F {
+        // Inf / NaN
+        return f32::from_bits(sign | 0x7F80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        if mant == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // Subnormal: value = mant * 2^-24. Normalize: with the mantissa MSB at
+        // bit (9 - (shift - 1)), the normalized exponent is 113 - shift.
+        let shift = mant.leading_zeros() - 21; // 10-bit mantissa in a u32
+        let norm_mant = (mant << shift) & 0x03FF;
+        let norm_exp = 113 - shift;
+        return f32::from_bits(sign | (norm_exp << 23) | (norm_mant << 13));
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (mant << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(x: f32) -> f32 {
+        f16_bits_to_f32(f32_to_f16_bits(x))
+    }
+
+    #[test]
+    fn exact_values_round_trip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1024.0] {
+            assert_eq!(round_trip(x), x, "{x}");
+        }
+        // Signed zero preserved.
+        assert_eq!(round_trip(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(round_trip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_trip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(round_trip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        assert_eq!(round_trip(70000.0), f32::INFINITY);
+        assert_eq!(round_trip(-1e10), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn subnormals() {
+        // Smallest f16 subnormal = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(round_trip(tiny), tiny);
+        // Half of it rounds to zero (RNE: exactly halfway, even = 0).
+        assert_eq!(round_trip(tiny / 2.0), 0.0);
+        // Below half rounds to zero.
+        assert_eq!(round_trip(tiny / 4.0), 0.0);
+        // Largest subnormal.
+        let big_sub = 2.0f32.powi(-14) - 2.0f32.powi(-24);
+        assert_eq!(round_trip(big_sub), big_sub);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10; ties to even -> 1.0.
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(round_trip(x), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9; ties to even -> 1+2^-9.
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(round_trip(y), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn relative_error_bounded_in_normal_range() {
+        let mut rng = crate::testutil::XorShiftRng::new(77);
+        for _ in 0..5000 {
+            let x = rng.range_f32(-60000.0, 60000.0);
+            if x.abs() < 6.1e-5 {
+                continue; // skip subnormal range (absolute error regime)
+            }
+            let rt = round_trip(x);
+            let rel = ((rt - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0, "x={x} rt={rt} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_round_trip_exactly() {
+        // f16 -> f32 -> f16 must be the identity on all 65536 patterns
+        // (every f16 value is exactly representable in f32).
+        for bits in 0u16..=u16::MAX {
+            let f = f16_bits_to_f32(bits);
+            let back = f32_to_f16_bits(f);
+            if f.is_nan() {
+                // NaN payloads may differ but NaN-ness must survive.
+                assert!(f16_bits_to_f32(back).is_nan());
+            } else {
+                assert_eq!(back, bits, "bits={bits:#06x} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn dtype_sizes_and_names() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F16.size(), 2);
+        assert_eq!(DType::I8.size(), 1);
+        for d in [DType::F32, DType::F16, DType::I8] {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::parse("f64").is_err());
+    }
+}

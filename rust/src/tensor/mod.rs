@@ -1,0 +1,16 @@
+//! Tensor substrate: shapes, dtypes (f32, software f16, i8) and a dense
+//! NCHW `f32` tensor used by the CPU reference backend, the importer and
+//! the runtime boundary.
+//!
+//! Compute is always `f32` (matching the paper: "for now it uses 32 bit
+//! float"); `f16`/`i8` exist as *storage* formats for the paper's
+//! lower-precision roadmap item (E7) and the compression pipeline (E4).
+
+mod dtype;
+mod shape;
+#[allow(clippy::module_inception)]
+mod tensor;
+
+pub use dtype::{f16_bits_to_f32, f32_to_f16_bits, DType};
+pub use shape::Shape;
+pub use tensor::Tensor;

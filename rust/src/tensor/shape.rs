@@ -1,0 +1,156 @@
+//! Tensor shapes (row-major / NCHW convention).
+
+use std::fmt;
+
+/// A dense row-major shape. Rank is arbitrary; the CNN paths use NCHW
+/// (batch, channels, height, width) like the paper's Caffe-trained models.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape(Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Shape {
+        Shape(dims.to_vec())
+    }
+
+    /// NCHW constructor.
+    pub fn nchw(n: usize, c: usize, h: usize, w: usize) -> Shape {
+        Shape(vec![n, c, h, w])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1; self.0.len()];
+        for i in (0..self.0.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.0[i + 1];
+        }
+        strides
+    }
+
+    /// Linear offset of a multi-index (debug-checked bounds).
+    pub fn offset(&self, index: &[usize]) -> usize {
+        debug_assert_eq!(index.len(), self.rank());
+        let strides = self.strides();
+        let mut off = 0;
+        for (i, (&ix, &st)) in index.iter().zip(strides.iter()).enumerate() {
+            debug_assert!(ix < self.0[i], "index {ix} out of bounds for dim {i} ({})", self.0[i]);
+            off += ix * st;
+        }
+        off
+    }
+
+    /// Reshape compatibility check.
+    pub fn can_reshape_to(&self, other: &Shape) -> bool {
+        self.numel() == other.numel()
+    }
+
+    /// Batch dimension (dim 0) replaced.
+    pub fn with_batch(&self, n: usize) -> Shape {
+        let mut d = self.0.clone();
+        if !d.is_empty() {
+            d[0] = n;
+        }
+        Shape(d)
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(dims: &[usize]) -> Shape {
+        Shape::new(dims)
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(dims: Vec<usize>) -> Shape {
+        Shape(dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::nchw(2, 3, 4, 5);
+        assert_eq!(s.numel(), 120);
+        assert_eq!(s.strides(), vec![60, 20, 5, 1]);
+        assert_eq!(s.rank(), 4);
+    }
+
+    #[test]
+    fn offset_row_major() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.offset(&[0, 0, 0]), 0);
+        assert_eq!(s.offset(&[0, 0, 3]), 3);
+        assert_eq!(s.offset(&[0, 2, 1]), 9);
+        assert_eq!(s.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn offset_bounds_checked() {
+        Shape::new(&[2, 2]).offset(&[2, 0]);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Shape::new(&[]);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn display_and_batch() {
+        let s = Shape::nchw(1, 3, 32, 32);
+        assert_eq!(s.to_string(), "[1x3x32x32]");
+        assert_eq!(s.with_batch(8).dims(), &[8, 3, 32, 32]);
+    }
+
+    #[test]
+    fn offsets_are_dense_and_unique() {
+        // Property: every multi-index maps to a unique offset in [0, numel).
+        let s = Shape::new(&[3, 4, 5]);
+        let mut seen = vec![false; s.numel()];
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    let off = s.offset(&[i, j, k]);
+                    assert!(!seen[off]);
+                    seen[off] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,271 @@
+//! Dense f32 tensor with NCHW helpers and lossy storage conversions.
+
+use super::dtype::{f16_bits_to_f32, f32_to_f16_bits};
+use super::shape::Shape;
+
+/// A dense row-major `f32` tensor. This is the lingua franca between the
+/// importer, the CPU reference backend (`nn/`) and the PJRT runtime
+/// boundary (`runtime::literal`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from shape + data; checks the element count.
+    pub fn new(shape: impl Into<Shape>, data: Vec<f32>) -> crate::Result<Tensor> {
+        let shape = shape.into();
+        anyhow::ensure!(
+            shape.numel() == data.len(),
+            "shape {shape} expects {} elements, got {}",
+            shape.numel(),
+            data.len()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: impl Into<Shape>) -> Tensor {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: impl Into<Shape>, value: f32) -> Tensor {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor { shape, data: vec![value; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (He-style scale for fan-in).
+    pub fn randn(shape: impl Into<Shape>, seed: u64, scale: f32) -> Tensor {
+        let shape = shape.into();
+        let mut rng = crate::testutil::XorShiftRng::new(seed);
+        let data = (0..shape.numel()).map(|_| rng.normal() * scale).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Element at a multi-index.
+    pub fn at(&self, index: &[usize]) -> f32 {
+        self.data[self.shape.offset(index)]
+    }
+
+    pub fn set(&mut self, index: &[usize], value: f32) {
+        let off = self.shape.offset(index);
+        self.data[off] = value;
+    }
+
+    /// Zero-copy reshape.
+    pub fn reshape(self, shape: impl Into<Shape>) -> crate::Result<Tensor> {
+        let shape = shape.into();
+        anyhow::ensure!(
+            self.shape.can_reshape_to(&shape),
+            "cannot reshape {} to {shape}",
+            self.shape
+        );
+        Ok(Tensor { shape, data: self.data })
+    }
+
+    /// Index of the maximum element (argmax over the flat buffer).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Per-row argmax for a [batch, classes] tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.rank(), 2, "argmax_rows expects a rank-2 tensor");
+        let classes = self.shape.dim(1);
+        self.data
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+
+    // ---- storage conversions (roadmap item 2 / E7) --------------------------
+
+    /// Encode to f16 storage bytes (little-endian pairs).
+    pub fn to_f16_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 2);
+        for &x in &self.data {
+            out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode from f16 storage bytes.
+    pub fn from_f16_bytes(shape: impl Into<Shape>, bytes: &[u8]) -> crate::Result<Tensor> {
+        let shape = shape.into();
+        anyhow::ensure!(
+            bytes.len() == shape.numel() * 2,
+            "f16 byte length {} does not match shape {shape}",
+            bytes.len()
+        );
+        let data = bytes
+            .chunks_exact(2)
+            .map(|b| f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+
+    /// Symmetric i8 quantization: returns (bytes, scale) with
+    /// `x ≈ scale * q`. Scale is chosen from the max absolute value.
+    pub fn to_i8_bytes(&self) -> (Vec<u8>, f32) {
+        let max_abs = self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if max_abs == 0.0 { 1.0 } else { max_abs / 127.0 };
+        let bytes = self
+            .data
+            .iter()
+            .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8 as u8)
+            .collect();
+        (bytes, scale)
+    }
+
+    /// Decode symmetric i8 quantization.
+    pub fn from_i8_bytes(shape: impl Into<Shape>, bytes: &[u8], scale: f32) -> crate::Result<Tensor> {
+        let shape = shape.into();
+        anyhow::ensure!(
+            bytes.len() == shape.numel(),
+            "i8 byte length {} does not match shape {shape}",
+            bytes.len()
+        );
+        let data = bytes.iter().map(|&b| (b as i8) as f32 * scale).collect();
+        Ok(Tensor { shape, data })
+    }
+
+    /// f32 little-endian bytes (weights container format).
+    pub fn to_f32_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for &x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_f32_bytes(shape: impl Into<Shape>, bytes: &[u8]) -> crate::Result<Tensor> {
+        let shape = shape.into();
+        anyhow::ensure!(
+            bytes.len() == shape.numel() * 4,
+            "f32 byte length {} does not match shape {shape}",
+            bytes.len()
+        );
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_allclose;
+
+    #[test]
+    fn construction_checks_count() {
+        assert!(Tensor::new(&[2, 2][..], vec![1.0; 4]).is_ok());
+        assert!(Tensor::new(&[2, 2][..], vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn indexing_nchw() {
+        let mut t = Tensor::zeros(Shape::nchw(1, 2, 2, 2));
+        t.set(&[0, 1, 0, 1], 7.0);
+        assert_eq!(t.at(&[0, 1, 0, 1]), 7.0);
+        assert_eq!(t.data()[5], 7.0); // c=1,h=0,w=1 -> 1*4 + 0*2 + 1
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(&[2, 3][..], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.clone().reshape(&[3, 2][..]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[4, 2][..]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(&[2, 3][..], vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.7]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 2]);
+    }
+
+    #[test]
+    fn f32_bytes_round_trip() {
+        let t = Tensor::randn(&[3, 4][..], 9, 1.0);
+        let back = Tensor::from_f32_bytes(&[3, 4][..], &t.to_f32_bytes()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn f16_round_trip_error_bounded() {
+        let t = Tensor::randn(&[128][..], 10, 1.0);
+        let back = Tensor::from_f16_bytes(&[128][..], &t.to_f16_bytes()).unwrap();
+        assert_allclose(back.data(), t.data(), 1.0 / 1024.0, 1e-4);
+    }
+
+    #[test]
+    fn i8_round_trip_error_bounded() {
+        let t = Tensor::randn(&[256][..], 11, 0.5);
+        let (bytes, scale) = t.to_i8_bytes();
+        let back = Tensor::from_i8_bytes(&[256][..], &bytes, scale).unwrap();
+        // Max quantization error is scale/2.
+        for (&a, &b) in back.data().iter().zip(t.data()) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "a={a} b={b} scale={scale}");
+        }
+    }
+
+    #[test]
+    fn i8_zero_tensor() {
+        let t = Tensor::zeros(&[8][..]);
+        let (bytes, scale) = t.to_i8_bytes();
+        let back = Tensor::from_i8_bytes(&[8][..], &bytes, scale).unwrap();
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn byte_length_validation() {
+        assert!(Tensor::from_f32_bytes(&[2][..], &[0u8; 7]).is_err());
+        assert!(Tensor::from_f16_bytes(&[2][..], &[0u8; 3]).is_err());
+        assert!(Tensor::from_i8_bytes(&[2][..], &[0u8; 3], 1.0).is_err());
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[16][..], 5, 1.0);
+        let b = Tensor::randn(&[16][..], 5, 1.0);
+        assert_eq!(a, b);
+        let c = Tensor::randn(&[16][..], 6, 1.0);
+        assert_ne!(a, c);
+    }
+}

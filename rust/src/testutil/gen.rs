@@ -1,0 +1,133 @@
+//! Property-test value generators built over [`XorShiftRng`].
+
+use super::rng::XorShiftRng;
+
+/// Generators for the shapes/values our property tests sweep. Mirrors the
+/// hypothesis strategies on the Python side (python/tests) so the two
+/// suites explore comparable spaces.
+pub struct Gen;
+
+impl Gen {
+    /// A plausible convolution shape: (batch, in_ch, h, w, out_ch, k, stride, pad).
+    pub fn conv_shape(rng: &mut XorShiftRng) -> ConvShape {
+        let k = *rng.choose(&[1usize, 3, 5, 7]);
+        let stride = rng.range_usize(1, 3);
+        let pad = rng.range_usize(0, k / 2 + 1);
+        // Keep spatial dims >= k so output is non-empty even without padding.
+        let h = rng.range_usize(k, k + 12);
+        let w = rng.range_usize(k, k + 12);
+        ConvShape {
+            batch: rng.range_usize(1, 3),
+            in_ch: rng.range_usize(1, 5),
+            out_ch: rng.range_usize(1, 5),
+            h,
+            w,
+            k,
+            stride,
+            pad,
+        }
+    }
+
+    /// A random tensor of `n` values in [-2, 2).
+    pub fn tensor_data(rng: &mut XorShiftRng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect()
+    }
+
+    /// A random lowercase ASCII identifier.
+    pub fn ident(rng: &mut XorShiftRng, max_len: usize) -> String {
+        let len = rng.range_usize(1, max_len.max(2));
+        (0..len)
+            .map(|_| (b'a' + (rng.next_u32() % 26) as u8) as char)
+            .collect()
+    }
+
+    /// An arbitrary JSON value of bounded depth (for parser fuzzing).
+    pub fn json(rng: &mut XorShiftRng, depth: usize) -> crate::json::Value {
+        use crate::json::Value;
+        let leaf_only = depth == 0;
+        match rng.range_usize(0, if leaf_only { 4 } else { 6 }) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bernoulli(0.5)),
+            2 => {
+                if rng.bernoulli(0.5) {
+                    Value::from(rng.next_u64() as i64 >> 16)
+                } else {
+                    Value::from(rng.range_f32(-1e6, 1e6) as f64)
+                }
+            }
+            3 => Value::from(Self::ident(rng, 12)),
+            4 => {
+                let n = rng.range_usize(0, 4);
+                Value::Array((0..n).map(|_| Self::json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.range_usize(0, 4);
+                let mut obj = Value::object();
+                for _ in 0..n {
+                    obj.insert(&Self::ident(rng, 8), Self::json(rng, depth - 1));
+                }
+                obj
+            }
+        }
+    }
+}
+
+/// Parameters of a randomly generated convolution test case.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvShape {
+    pub batch: usize,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_are_valid() {
+        let mut rng = XorShiftRng::new(11);
+        for _ in 0..200 {
+            let s = Gen::conv_shape(&mut rng);
+            assert!(s.h + 2 * s.pad >= s.k, "{s:?}");
+            assert!(s.out_h() >= 1 && s.out_w() >= 1, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn json_gen_round_trips_through_serializer() {
+        let mut rng = XorShiftRng::new(12);
+        for _ in 0..100 {
+            let v = Gen::json(&mut rng, 3);
+            let text = crate::json::to_string(&v);
+            let back = crate::json::parse(&text).unwrap();
+            // Numbers may lose the int flag distinction but compare by value.
+            assert_eq!(back, v, "doc: {text}");
+        }
+    }
+
+    #[test]
+    fn idents_are_ascii_lowercase() {
+        let mut rng = XorShiftRng::new(13);
+        for _ in 0..50 {
+            let id = Gen::ident(&mut rng, 10);
+            assert!(!id.is_empty());
+            assert!(id.bytes().all(|b| b.is_ascii_lowercase()));
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Test/benchmark support substrate: a deterministic PRNG, value
+//! generators for property-style tests, tolerance assertions, and temp-dir
+//! helpers. (No external property-testing crate is available offline, so
+//! this module carries the pieces the test-suite needs.)
+
+mod gen;
+mod rng;
+
+pub use gen::Gen;
+pub use rng::XorShiftRng;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Create a unique temporary directory under the target dir. Leaks the
+/// directory on purpose (tests may inspect failures); `target/` is
+/// disposable.
+pub fn tempdir(tag: &str) -> PathBuf {
+    let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("dlk-test-{tag}-{pid}-{n}"));
+    std::fs::create_dir_all(&dir).expect("create tempdir");
+    dir
+}
+
+/// Assert two f32 slices are elementwise close: `|a-b| <= atol + rtol*|b|`.
+#[track_caller]
+pub fn assert_allclose(actual: &[f32], expected: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(
+        actual.len(),
+        expected.len(),
+        "length mismatch: {} vs {}",
+        actual.len(),
+        expected.len()
+    );
+    let mut worst: Option<(usize, f32, f32, f32)> = None;
+    for (i, (&a, &e)) in actual.iter().zip(expected.iter()).enumerate() {
+        let tol = atol + rtol * e.abs();
+        let diff = (a - e).abs();
+        if !(diff <= tol) {
+            let excess = diff - tol;
+            if worst.map_or(true, |(_, _, _, w)| excess > w) {
+                worst = Some((i, a, e, excess));
+            }
+        }
+    }
+    if let Some((i, a, e, _)) = worst {
+        panic!("allclose failed at index {i}: actual={a}, expected={e} (rtol={rtol}, atol={atol})");
+    }
+}
+
+/// Run a property over `cases` generated inputs, reporting the seed of the
+/// failing case so it can be replayed.
+#[track_caller]
+pub fn check<T, G, P>(cases: usize, seed: u64, generate: G, property: P)
+where
+    G: Fn(&mut XorShiftRng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShiftRng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdirs_are_unique() {
+        let a = tempdir("uniq");
+        let b = tempdir("uniq");
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+    }
+
+    #[test]
+    fn allclose_passes_within_tolerance() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-6, 2.0 - 1e-6], 1e-5, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_fails_outside_tolerance() {
+        assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn allclose_fails_on_length() {
+        assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let counter = std::cell::Cell::new(0usize);
+        check(16, 7, |r| r.range_usize(0, 100), |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counter.get(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_seed_on_failure() {
+        check(8, 3, |r| r.range_usize(0, 10), |&x| {
+            if x < 100 {
+                Err("always fails".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

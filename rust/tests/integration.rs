@@ -1,0 +1,281 @@
+//! Integration tests over the real AOT artifacts: PJRT engine, coordinator,
+//! model cache, store round-trips, end-to-end accuracy.
+//!
+//! These need `make artifacts` to have run (skipped otherwise with a clear
+//! panic message naming the command).
+
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::runtime::Engine;
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{artifacts_dir, cache, data, model, nn, store, testutil};
+use std::time::Duration;
+
+fn model_dir(id: &str) -> std::path::PathBuf {
+    let dir = artifacts_dir().join("models").join(id);
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing ({}) — run `make artifacts` first",
+        dir.display()
+    );
+    dir
+}
+
+#[test]
+fn engine_loads_and_infers_lenet() {
+    let engine = Engine::start().unwrap();
+    let info = engine.load(model_dir("lenet-mnist")).unwrap();
+    assert_eq!(info.id, "lenet-mnist");
+    assert_eq!(info.classes, 10);
+    assert!(info.batches.contains(&1) && info.batches.contains(&8));
+
+    let batch = data::glyphs(4, 11);
+    let out = engine.infer("lenet-mnist", batch.inputs.clone()).unwrap();
+    assert_eq!(out.shape().dims(), &[4, 10]);
+    // Output rows are probability distributions.
+    for row in out.data().chunks_exact(10) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn pjrt_matches_cpu_reference_backend() {
+    // The strongest cross-validation in the repo: the AOT-compiled JAX
+    // graph (Pallas kernels -> HLO -> PJRT) and the from-scratch rust CPU
+    // backend must produce the same probabilities on the same weights.
+    let dir = model_dir("lenet-mnist");
+    let manifest = model::Manifest::load(&dir.join("manifest.json")).unwrap();
+    let weights = model::WeightStore::load(&dir.join("weights.dlkw")).unwrap();
+    let cpu = nn::CpuExecutor::new(manifest.arch.clone(), weights).unwrap();
+
+    let engine = Engine::start().unwrap();
+    engine.load(&dir).unwrap();
+
+    let batch = data::glyphs(8, 23);
+    let pjrt_out = engine.infer("lenet-mnist", batch.inputs.clone()).unwrap();
+    let cpu_out = cpu.forward(&batch.inputs).unwrap();
+    testutil::assert_allclose(pjrt_out.data(), cpu_out.data(), 1e-3, 1e-4);
+    engine.shutdown();
+}
+
+#[test]
+fn trained_model_accuracy_on_held_out_data() {
+    let engine = Engine::start().unwrap();
+    engine.load(model_dir("lenet-mnist")).unwrap();
+    let batch = data::glyphs(32, 99);
+    let out = engine.infer("lenet-mnist", batch.inputs.clone()).unwrap();
+    let preds = out.argmax_rows();
+    let correct = preds.iter().zip(&batch.labels).filter(|(p, l)| p == l).count();
+    // Trained to ~99% on the python generator; the rust generator draws the
+    // same glyph classes, so accuracy must stay high.
+    assert!(correct >= 28, "accuracy {correct}/32");
+    engine.shutdown();
+}
+
+#[test]
+fn char_cnn_serves_and_classifies() {
+    let engine = Engine::start().unwrap();
+    let info = engine.load(model_dir("char-cnn")).unwrap();
+    assert_eq!(info.classes, 4);
+    let batch = data::chars(8, 5);
+    let out = engine.infer("char-cnn", batch.inputs.clone()).unwrap();
+    let preds = out.argmax_rows();
+    let correct = preds.iter().zip(&batch.labels).filter(|(p, l)| p == l).count();
+    assert!(correct >= 6, "char-cnn accuracy {correct}/8");
+    engine.shutdown();
+}
+
+#[test]
+fn nin_runs_at_batch_1() {
+    // The paper's E1 model: NIN-CIFAR10, batch 1.
+    let engine = Engine::start().unwrap();
+    let info = engine.load(model_dir("nin-cifar10")).unwrap();
+    assert_eq!(info.classes, 10);
+    let batch = data::textures(1, 3);
+    let out = engine.infer("nin-cifar10", batch.inputs.clone()).unwrap();
+    assert_eq!(out.shape().dims(), &[1, 10]);
+    let s: f32 = out.data().iter().sum();
+    assert!((s - 1.0).abs() < 1e-4);
+    engine.shutdown();
+}
+
+#[test]
+fn batch_padding_round_trip() {
+    // Infer with batch sizes that don't match any AOT size: the runtime
+    // pads and slices; results must equal the batch-1 results.
+    let engine = Engine::start().unwrap();
+    engine.load(model_dir("lenet-mnist")).unwrap();
+    let batch = data::glyphs(3, 41); // pads to AOT batch 4
+    let out3 = engine.infer("lenet-mnist", batch.inputs.clone()).unwrap();
+    assert_eq!(out3.shape().dims(), &[3, 10]);
+    // Same inputs one by one.
+    for i in 0..3 {
+        let single = Tensor::new(
+            Shape::nchw(1, 1, 28, 28),
+            batch.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+        )
+        .unwrap();
+        let out1 = engine.infer("lenet-mnist", single).unwrap();
+        testutil::assert_allclose(
+            out1.data(),
+            &out3.data()[i * 10..(i + 1) * 10],
+            1e-4,
+            1e-5,
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    let engine = Engine::start().unwrap();
+    engine.load(model_dir("lenet-mnist")).unwrap();
+    let batch = data::glyphs(64, 5); // largest AOT batch is 32
+    let e = engine.infer("lenet-mnist", batch.inputs).unwrap_err().to_string();
+    assert!(e.contains("exceeds"), "{e}");
+    engine.shutdown();
+}
+
+#[test]
+fn coordinator_serves_concurrent_clients() {
+    let engine = Engine::start().unwrap();
+    let mut coord = Coordinator::new(
+        engine,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 512,
+            },
+        },
+    );
+    coord.serve_model(model_dir("lenet-mnist")).unwrap();
+    let coord = std::sync::Arc::new(coord);
+
+    // Burst-submit asynchronously: all tickets enqueue well inside one
+    // flush window, so the dynamic batcher must coalesce them.
+    let batch = data::glyphs(64, 300);
+    let mut correct = 0usize;
+    for wave in 0..8 {
+        let mut tickets = Vec::new();
+        for i in wave * 8..wave * 8 + 8 {
+            let input = Tensor::new(
+                Shape::new(&[1usize, 28, 28]),
+                batch.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+            )
+            .unwrap();
+            tickets.push((i, coord.submit("lenet-mnist", input).unwrap()));
+        }
+        for (i, t) in tickets {
+            let r = t.wait().unwrap();
+            if r.predicted == batch.labels[i] {
+                correct += 1;
+            }
+        }
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.requests, 64);
+    assert!(stats.batches > 0);
+    // Dynamic batching must actually form multi-request batches under
+    // burst load (8 concurrent per wave, max_batch 8).
+    assert!(stats.mean_batch_size > 2.0, "mean batch {}", stats.mean_batch_size);
+    assert!(stats.batches < 60, "batches {}", stats.batches);
+    assert!(correct >= 55, "accuracy {correct}/64");
+}
+
+#[test]
+fn coordinator_retire_model() {
+    let engine = Engine::start().unwrap();
+    let mut coord = Coordinator::new(engine, CoordinatorConfig::default());
+    coord.serve_model(model_dir("lenet-mnist")).unwrap();
+    assert_eq!(coord.served_models().len(), 1);
+    coord.retire_model("lenet-mnist").unwrap();
+    assert_eq!(coord.served_models().len(), 0);
+    let batch = data::glyphs(1, 1);
+    assert!(coord
+        .infer("lenet-mnist", batch.inputs.clone().reshape(&[1usize, 28, 28][..]).unwrap())
+        .is_err());
+    assert!(coord.retire_model("lenet-mnist").is_err());
+}
+
+#[test]
+fn model_cache_eviction_under_budget() {
+    let engine = Engine::start().unwrap();
+    // Budget fits lenet (~1.7 MB) + char-cnn (~1.3 MB) but not nin (~3.9 MB) too.
+    let mut mc = cache::ModelCache::new(engine, 6_000_000, cache::PolicyKind::Lru);
+    mc.register("lenet-mnist", model_dir("lenet-mnist"));
+    mc.register("char-cnn", model_dir("char-cnn"));
+    mc.register("nin-cifar10", model_dir("nin-cifar10"));
+
+    let a1 = mc.ensure("lenet-mnist").unwrap();
+    assert!(!a1.hit && a1.evicted.is_empty());
+    let a2 = mc.ensure("char-cnn").unwrap();
+    assert!(!a2.hit);
+    let a3 = mc.ensure("lenet-mnist").unwrap();
+    assert!(a3.hit, "second access must hit");
+
+    // Loading NIN must evict the LRU model (char-cnn).
+    let a4 = mc.ensure("nin-cifar10").unwrap();
+    assert!(!a4.hit);
+    assert!(a4.evicted.contains(&"char-cnn".to_string()), "evicted: {:?}", a4.evicted);
+    assert!(mc.is_resident("lenet-mnist"));
+    assert!(!mc.is_resident("char-cnn"));
+
+    // Inference still works through the cache after the shuffle.
+    let batch = data::glyphs(2, 8);
+    let (out, access) = mc.infer("lenet-mnist", batch.inputs).unwrap();
+    assert!(access.hit);
+    assert_eq!(out.shape().dims(), &[2, 10]);
+
+    let stats = mc.stats();
+    assert_eq!(stats.hits, 2); // lenet re-access + the infer() ensure
+    assert_eq!(stats.misses, 3);
+    assert_eq!(stats.evictions, 1);
+}
+
+#[test]
+fn store_publish_fetch_load_serve_round_trip() {
+    // Full App-Store loop: package artifacts -> publish -> fetch over the
+    // simulated network -> load the fetched copy -> infer.
+    let root = testutil::tempdir("e2e-registry");
+    let registry = store::Registry::open(&root).unwrap();
+    let pkg = store::Package::from_model_dir(&model_dir("lenet-mnist")).unwrap();
+    let published = registry.publish(&pkg).unwrap();
+    assert_eq!(published.id, "lenet-mnist");
+
+    let dest = testutil::tempdir("e2e-fetched");
+    let mut net = store::SimulatedNetwork::wifi();
+    let stats = registry.fetch_to("lenet-mnist", &mut net, &dest).unwrap();
+    assert!(stats.bytes > 100_000);
+
+    let engine = Engine::start().unwrap();
+    let info = engine.load(&dest).unwrap();
+    assert_eq!(info.id, "lenet-mnist");
+    let batch = data::glyphs(2, 77);
+    let out = engine.infer("lenet-mnist", batch.inputs).unwrap();
+    assert_eq!(out.shape().dims(), &[2, 10]);
+    engine.shutdown();
+}
+
+#[test]
+fn tampered_weights_rejected_at_load() {
+    // Integrity: flip a byte in the weights of a copied model dir; the
+    // engine must refuse to load it.
+    let dir = testutil::tempdir("tampered-model");
+    let src = model_dir("lenet-mnist");
+    for f in std::fs::read_dir(&src).unwrap() {
+        let f = f.unwrap();
+        std::fs::copy(f.path(), dir.join(f.file_name())).unwrap();
+    }
+    let wpath = dir.join("weights.dlkw");
+    let mut bytes = std::fs::read(&wpath).unwrap();
+    let n = bytes.len();
+    bytes[n - 1] ^= 0xFF;
+    std::fs::write(&wpath, bytes).unwrap();
+
+    let engine = Engine::start().unwrap();
+    let e = engine.load(&dir).unwrap_err().to_string();
+    assert!(e.contains("integrity"), "{e}");
+    engine.shutdown();
+}
