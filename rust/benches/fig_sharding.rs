@@ -1,0 +1,185 @@
+//! E10 — the ROADMAP's "heavy traffic" bar: one engine thread (the seed's
+//! single `MTLCommandQueue` analog) caps multi-model throughput at one
+//! core, however fast the kernels are. This experiment regenerates the
+//! scaling argument for the engine-pool refactor.
+//!
+//! Sweep: shards ∈ {1, 2, 4, 8}, a fixed 8-model workload under 16
+//! closed-loop clients. Models are synthetic LeNet-class fixtures (CPU
+//! backend), so this bench runs without AOT artifacts. Reported per
+//! config: aggregate throughput, p50/p99 latency, shard imbalance, and the
+//! speedup over the 1-shard baseline. A final segment demonstrates
+//! admission control: a stalled shard sheds a burst with typed
+//! `Overloaded` rejections instead of queueing without bound.
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::metrics::Table;
+use deeplearningkit::model::lenet;
+use deeplearningkit::runtime::{BackendKind, EnginePool, Overloaded, PoolConfig};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{data, testutil};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const MODELS: usize = 8;
+const CLIENTS: usize = 16;
+const REQUESTS_PER_CLIENT: usize = 24;
+
+fn main() {
+    bench_header(
+        "E10 (engine-pool scaling)",
+        "multi-model aggregate throughput vs shard count (1 shard = seed baseline)",
+    );
+
+    // One model directory per served model (LeNet-class compute, random
+    // weights — numerics don't matter for timing).
+    let model_dirs: Vec<(String, std::path::PathBuf)> = (0..MODELS)
+        .map(|k| {
+            let id = format!("lenet-shard-{k}");
+            let dir = testutil::tempdir("fig-sharding");
+            testutil::write_model_dir(&dir, &id, lenet(), 100 + k as u64, &[1, 8, 32])
+                .expect("write fixture");
+            (id, dir)
+        })
+        .collect();
+
+    // Pre-generate client inputs (one glyph set per client).
+    let inputs: Vec<Vec<Tensor>> = (0..CLIENTS)
+        .map(|c| {
+            let batch = data::glyphs(REQUESTS_PER_CLIENT, 500 + c as u64);
+            (0..REQUESTS_PER_CLIENT)
+                .map(|i| {
+                    Tensor::new(
+                        Shape::new(&[1usize, 28, 28]),
+                        batch.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+                    )
+                    .unwrap()
+                })
+                .collect()
+        })
+        .collect();
+
+    let total_requests = CLIENTS * REQUESTS_PER_CLIENT;
+    let mut table = Table::new(
+        &format!("{MODELS} models, {CLIENTS} closed-loop clients, {total_requests} requests"),
+        &["shards", "throughput", "speedup", "p50", "p99", "imbalance"],
+    );
+    let mut baseline_rps: Option<f64> = None;
+    for shards in [1usize, 2, 4, 8] {
+        let pool = EnginePool::start(PoolConfig {
+            shards,
+            queue_cap: 4096,
+            backend: BackendKind::Cpu,
+        })
+        .expect("start pool");
+        let mut coord = Coordinator::over_pool(
+            pool.clone(),
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(2),
+                    queue_cap: 4096,
+                },
+            },
+        );
+        for (id, dir) in &model_dirs {
+            coord.serve_model(dir).unwrap_or_else(|e| panic!("serve {id}: {e}"));
+        }
+
+        let coord = std::sync::Arc::new(coord);
+        let failed = AtomicU64::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for (c, client_inputs) in inputs.iter().enumerate() {
+                let coord = coord.clone();
+                let failed = &failed;
+                let model_id = model_dirs[c % MODELS].0.clone();
+                scope.spawn(move || {
+                    for x in client_inputs {
+                        if coord.infer(&model_id, x.clone()).is_err() {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = total_requests as f64 / wall;
+        let speedup = match baseline_rps {
+            Some(base) => rps / base,
+            None => {
+                baseline_rps = Some(rps);
+                1.0
+            }
+        };
+        let stats = coord.stats();
+        let util = pool.utilization().expect("pool stats");
+        table.row(&[
+            format!("{shards}"),
+            format!("{rps:.0} req/s"),
+            format!("{speedup:.2}x"),
+            format!("{:.1}ms", stats.p50_us as f64 / 1000.0),
+            format!("{:.1}ms", stats.p99_us as f64 / 1000.0),
+            format!("{:.2}", util.imbalance()),
+        ]);
+        assert_eq!(failed.load(Ordering::Relaxed), 0, "no request may fail in the sweep");
+        pool.shutdown();
+    }
+    table.print();
+    println!(
+        "\nshape: with one shard every model serializes onto a single engine\n\
+         thread (the seed architecture); shards add parallel engine threads\n\
+         and placement spreads the {MODELS} models across them, so aggregate\n\
+         throughput scales until shards exceed cores (or models)."
+    );
+
+    // --- Admission control demonstration -------------------------------
+    println!();
+    println!("admission control: burst of 64 at a stalled shard, queue cap 4");
+    let pool = EnginePool::start(PoolConfig {
+        shards: 1,
+        queue_cap: 256,
+        backend: BackendKind::Cpu,
+    })
+    .expect("start pool");
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 4,
+            },
+        },
+    );
+    let (id, dir) = &model_dirs[0];
+    coord.serve_model(dir).expect("serve");
+    pool.shard_handle(0).debug_stall(Duration::from_millis(200)).expect("stall");
+
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..64u64 {
+        match coord.submit(id, inputs[0][(i as usize) % REQUESTS_PER_CLIENT].clone()) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert!(e.downcast_ref::<Overloaded>().is_some(), "untyped rejection: {e}");
+                rejected += 1;
+            }
+        }
+    }
+    let mut completed = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(e) => {
+                assert!(e.downcast_ref::<Overloaded>().is_some(), "untyped rejection: {e}");
+                rejected += 1;
+            }
+        }
+    }
+    println!(
+        "  completed {completed}, rejected {rejected} — every rejection was a typed\n\
+         `Overloaded` (model/shard/queue_cap attached), no client blocked unboundedly"
+    );
+    pool.shutdown();
+}

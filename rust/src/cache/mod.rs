@@ -3,17 +3,20 @@
 //! "…one need to intelligently (and very rapid load them from SSD into GPU
 //! accessible RAM) switch between several Deep Learning Models…"
 //!
-//! [`ModelCache`] manages which models are resident in the engine under a
-//! byte budget (the "GPU-accessible RAM" of the paper's iPhone), loading
-//! from a model directory ("SSD") on miss and evicting by policy (LRU or
-//! LFU). Experiment E5 measures hit/miss switch latency across budgets and
-//! policies.
+//! [`ModelCache`] manages which models are resident in the engine pool
+//! under a **per-shard** byte budget (the "GPU-accessible RAM" of the
+//! paper's iPhone, one budget per engine shard), loading from a model
+//! directory ("SSD") on miss and evicting by policy (LRU or LFU) **among
+//! the models sharing the victim's shard** — eviction frees bytes where
+//! the new model actually lands, never on an unrelated shard. Experiment
+//! E5 measures hit/miss switch latency across budgets and policies.
 
 mod policy;
 
 pub use policy::{EvictionPolicy, PolicyKind};
 
-use crate::runtime::{EngineHandle, ModelInfo};
+use crate::model::{Manifest, ModelFiles};
+use crate::runtime::{EngineHandle, ModelInfo, PoolHandle};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -22,10 +25,14 @@ use std::time::{Duration, Instant};
 /// Outcome of an access through the cache.
 #[derive(Clone, Debug)]
 pub struct Access {
+    /// Whether the model was already resident.
     pub hit: bool,
     /// Load time when it was a miss (disk + stage + compile).
     pub load_time: Duration,
+    /// Models evicted (from the loaded model's shard) to make room.
     pub evicted: Vec<String>,
+    /// Shard the model is resident on after this access.
+    pub shard: usize,
 }
 
 /// Cache statistics.
@@ -34,10 +41,12 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Weight bytes resident across all shards.
     pub resident_bytes: usize,
 }
 
 impl CacheStats {
+    /// Hits over total accesses (0.0 before any access).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -51,11 +60,13 @@ impl CacheStats {
 struct Resident {
     info: ModelInfo,
     bytes: usize,
+    shard: usize,
 }
 
-/// A byte-budgeted model cache over the PJRT engine.
+/// A byte-budgeted model cache over the engine pool. The budget applies
+/// per shard: each shard may pin at most `budget_bytes` of weights.
 pub struct ModelCache {
-    engine: EngineHandle,
+    pool: PoolHandle,
     /// Model id -> directory on "SSD".
     catalog: BTreeMap<String, PathBuf>,
     resident: BTreeMap<String, Resident>,
@@ -65,9 +76,17 @@ pub struct ModelCache {
 }
 
 impl ModelCache {
+    /// Cache over a single engine (wrapped as a one-shard pool);
+    /// `budget_bytes` is that shard's budget. Kept for small deployments
+    /// and existing call sites.
     pub fn new(engine: EngineHandle, budget_bytes: usize, policy: PolicyKind) -> ModelCache {
+        ModelCache::over_pool(PoolHandle::single(engine), budget_bytes, policy)
+    }
+
+    /// Cache over an engine pool with a per-shard byte budget.
+    pub fn over_pool(pool: PoolHandle, budget_bytes: usize, policy: PolicyKind) -> ModelCache {
         ModelCache {
-            engine,
+            pool,
             catalog: BTreeMap::new(),
             resident: BTreeMap::new(),
             policy: EvictionPolicy::new(policy),
@@ -81,14 +100,17 @@ impl ModelCache {
         self.catalog.insert(id.to_string(), dir.into());
     }
 
+    /// Cache statistics snapshot.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
 
+    /// Ids of resident models (sorted).
     pub fn resident_models(&self) -> Vec<&str> {
         self.resident.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Whether `id` is resident.
     pub fn is_resident(&self, id: &str) -> bool {
         self.resident.contains_key(id)
     }
@@ -98,12 +120,27 @@ impl ModelCache {
         self.resident.get(id).map(|r| &r.info)
     }
 
-    /// Ensure `id` is resident, loading and evicting as needed.
+    /// Weight bytes the cache has pinned on `shard`.
+    pub fn resident_bytes_on(&self, shard: usize) -> usize {
+        self.resident.values().filter(|r| r.shard == shard).map(|r| r.bytes).sum()
+    }
+
+    /// Undo a load the cache decided not to keep: unload from the pool
+    /// and drop the placement affinity the load created.
+    fn rollback_load(&self, id: &str) -> crate::Result<()> {
+        let unload = self.pool.unload(id);
+        self.pool.forget_affinity(id);
+        unload
+    }
+
+    /// Ensure `id` is resident, loading and evicting (on its shard) as
+    /// needed.
     pub fn ensure(&mut self, id: &str) -> crate::Result<Access> {
-        if self.resident.contains_key(id) {
+        if let Some(r) = self.resident.get(id) {
+            let shard = r.shard;
             self.policy.touch(id);
             self.stats.hits += 1;
-            return Ok(Access { hit: true, load_time: Duration::ZERO, evicted: Vec::new() });
+            return Ok(Access { hit: true, load_time: Duration::ZERO, evicted: Vec::new(), shard });
         }
         let dir = self
             .catalog
@@ -112,59 +149,169 @@ impl ModelCache {
             .clone();
         self.stats.misses += 1;
 
+        // The pool may be shared with other users (a Coordinator serving
+        // the same model): remember whether this model was resident in the
+        // pool *before* our load, so error rollbacks below never yank a
+        // residency the cache did not create.
+        let manifest_id = Manifest::load(&ModelFiles::new(&dir).manifest())?.id;
+        let pre_existing = self.pool.shard_of(&manifest_id).is_some();
+
         let t0 = Instant::now();
-        let info = self.engine.load(&dir)?;
+        let info = self.pool.load(&dir)?;
         let load_time = t0.elapsed();
         let bytes = info.weight_bytes;
+        let shard = info.shard;
 
-        // Evict until the new model fits.
+        // Every downstream path (eviction unload, infer routing) addresses
+        // the pool by the manifest id, so the catalog key must match it.
+        if info.id != id {
+            // Roll back only if the cache created this residency and does
+            // not track it under its true id — otherwise the load above
+            // merely refreshed a legitimate entry.
+            if !pre_existing && !self.resident.contains_key(&info.id) {
+                self.rollback_load(&info.id)?;
+            }
+            anyhow::bail!(
+                "cache catalog key `{id}` does not match the model's manifest id `{}`",
+                info.id
+            );
+        }
+
+        if bytes > self.budget_bytes {
+            // The model alone exceeds a shard budget: undo the load (when
+            // ours) so the pool is not left carrying untracked weights.
+            if !pre_existing {
+                self.rollback_load(&info.id)?;
+            }
+            anyhow::bail!(
+                "model `{id}` ({bytes} B) exceeds the per-shard cache budget ({} B)",
+                self.budget_bytes
+            );
+        }
+
+        // Evict on the shard the model landed on until it fits.
         let mut evicted = Vec::new();
-        while self.resident_bytes() + bytes > self.budget_bytes && !self.resident.is_empty() {
+        while self.resident_bytes_on(shard) + bytes > self.budget_bytes {
+            let candidates: Vec<String> = self
+                .resident
+                .iter()
+                .filter(|(_, r)| r.shard == shard)
+                .map(|(id, _)| id.clone())
+                .collect();
             let victim = self
                 .policy
-                .pick_victim(self.resident.keys().map(|s| s.as_str()))
-                .expect("non-empty resident set");
-            self.engine.unload(&victim)?;
+                .pick_victim(candidates.iter().map(|s| s.as_str()))
+                .expect("over budget implies a resident victim on the shard");
+            self.pool.unload(&victim)?;
+            // Capacity eviction: also drop the victim's shard affinity so
+            // its next load places least-loaded instead of bouncing back
+            // onto this (full) shard — otherwise two models alternating
+            // over one shard's budget would thrash forever while other
+            // shards sit empty.
+            self.pool.forget_affinity(&victim);
             self.resident.remove(&victim);
             self.policy.forget(&victim);
             self.stats.evictions += 1;
             evicted.push(victim);
         }
-        anyhow::ensure!(
-            bytes <= self.budget_bytes,
-            "model `{id}` ({bytes} B) exceeds the cache budget ({} B)",
-            self.budget_bytes
-        );
 
-        self.resident.insert(id.to_string(), Resident { info, bytes });
+        self.resident.insert(id.to_string(), Resident { info, bytes, shard });
         self.policy.touch(id);
-        self.stats.resident_bytes = self.resident_bytes();
-        Ok(Access { hit: false, load_time, evicted })
+        self.stats.resident_bytes = self.resident.values().map(|r| r.bytes).sum();
+        Ok(Access { hit: false, load_time, evicted, shard })
     }
 
-    fn resident_bytes(&self) -> usize {
-        self.resident.values().map(|r| r.bytes).sum()
-    }
-
-    /// Run inference through the cache (ensures residency first).
+    /// Run inference through the cache (ensures residency first; the
+    /// request routes to the model's shard with admission control).
     pub fn infer(&mut self, id: &str, input: Tensor) -> crate::Result<(Tensor, Access)> {
         let access = self.ensure(id)?;
-        let out = self.engine.infer(id, input)?;
+        let (out, _shard) = self.pool.infer(id, input)?;
         Ok((out, access))
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // ModelCache needs real artifacts + a PJRT engine; its end-to-end tests
-    // live in rust/tests/integration.rs. Policy logic is tested in policy.rs
-    // and CacheStats math here.
     use super::*;
+    use crate::runtime::{BackendKind, EnginePool, PoolConfig};
+    use crate::testutil;
 
     #[test]
     fn hit_rate_math() {
         let s = CacheStats { hits: 3, misses: 1, ..Default::default() };
         assert_eq!(s.hit_rate(), 0.75);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    fn cpu_pool(shards: usize) -> PoolHandle {
+        EnginePool::start(PoolConfig { shards, queue_cap: 64, backend: BackendKind::Cpu })
+            .unwrap()
+    }
+
+    #[test]
+    fn per_shard_budget_evicts_on_the_loaded_shard() {
+        // Two shards; the per-shard budget fits exactly one tiny model
+        // (tiny_cnn width 16 is ~4.6 KB of f32 weights).
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 6_000, PolicyKind::Lru);
+        for (id, seed) in [("m-a", 1u64), ("m-b", 2), ("m-c", 3)] {
+            mc.register(id, testutil::tiny_model_dir("cache-shard", id, 16, seed));
+        }
+        let a = mc.ensure("m-a").unwrap();
+        let b = mc.ensure("m-b").unwrap();
+        assert!(!a.hit && !b.hit);
+        assert_eq!(a.shard, 0, "first model onto the empty pool lands on shard 0");
+        assert_eq!(b.shard, 1, "least-loaded placement must spread to shard 1");
+        assert!(a.evicted.is_empty() && b.evicted.is_empty());
+
+        // The third model lands on shard 0 (equal bytes, lowest id wins)
+        // and must evict the model there — not the one on shard 1.
+        let c = mc.ensure("m-c").unwrap();
+        assert_eq!(c.shard, 0);
+        assert_eq!(c.evicted, vec!["m-a".to_string()]);
+        assert!(mc.is_resident("m-b") && !mc.is_resident("m-a"));
+        assert_eq!(mc.stats().evictions, 1);
+        let c_bytes = mc.resident_info("m-c").unwrap().weight_bytes;
+        assert_eq!(mc.resident_bytes_on(0), c_bytes);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn oversized_model_rejected_and_unloaded() {
+        let pool = cpu_pool(1);
+        let mut mc = ModelCache::over_pool(pool.clone(), 100, PolicyKind::Lru);
+        mc.register("big", testutil::tiny_model_dir("cache-big", "big", 32, 7));
+        let e = mc.ensure("big").unwrap_err().to_string();
+        assert!(e.contains("exceeds the per-shard cache budget"), "{e}");
+        // The failed load must not leave the model resident in the pool.
+        assert_eq!(pool.shard_of("big"), None);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn catalog_key_must_match_manifest_id() {
+        let pool = cpu_pool(1);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+        mc.register("alias", testutil::tiny_model_dir("cache-alias", "real-id", 8, 4));
+        let e = mc.ensure("alias").unwrap_err().to_string();
+        assert!(e.contains("does not match"), "{e}");
+        // The mismatched load must be rolled back, not left resident.
+        assert_eq!(pool.shard_of("real-id"), None);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn infer_through_cache_routes_to_shard() {
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lfu);
+        mc.register("m", testutil::tiny_model_dir("cache-infer", "m", 8, 5));
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 2, 1.0);
+        let (out, access) = mc.infer("m", x.clone()).unwrap();
+        assert!(!access.hit);
+        assert_eq!(out.shape().dims(), &[1, 4]);
+        let (_, access2) = mc.infer("m", x).unwrap();
+        assert!(access2.hit);
+        assert_eq!(access2.shard, access.shard);
+        pool.shutdown();
     }
 }

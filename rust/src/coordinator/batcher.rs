@@ -6,6 +6,7 @@
 //! dispatch amortized over more items), the deadline bounds added latency.
 //! Experiment E8 sweeps this.
 
+use crate::runtime::Overloaded;
 use crate::tensor::{Shape, Tensor};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -41,8 +42,12 @@ pub struct Pending {
 /// Batch execution metadata attached to each reply.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchMeta {
+    /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// Time the request waited in the batcher queue (microseconds).
     pub queue_micros: u64,
+    /// Engine-pool shard that executed the batch.
+    pub shard: usize,
 }
 
 /// The batching core: owns the queue, decides when to flush. Execution is
@@ -112,8 +117,9 @@ impl Batcher {
 
     /// Take up to `max_batch` requests, stack their inputs into one batch
     /// tensor, run `exec`, and scatter results (or the error) back to every
-    /// reply channel.
-    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<Tensor>) {
+    /// reply channel. `exec` returns the output batch plus the engine-pool
+    /// shard that executed it (surfaced to clients via [`BatchMeta`]).
+    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<(Tensor, usize)>) {
         if self.queue.is_empty() {
             return;
         }
@@ -148,7 +154,7 @@ impl Batcher {
         let stacked = Tensor::new(Shape::new(&dims), data).expect("stack shapes consistent");
 
         match exec(&stacked) {
-            Ok(out) => {
+            Ok((out, shard)) => {
                 // Scatter rows back. Output is [n, ...per-item dims].
                 let row = out.numel() / n;
                 let out_dims: Vec<usize> = out.shape().dims()[1..].to_vec();
@@ -158,14 +164,23 @@ impl Batcher {
                     let meta = BatchMeta {
                         batch_size: n,
                         queue_micros: now.duration_since(p.enqueued).as_micros() as u64,
+                        shard,
                     };
                     let _ = p.reply.send(Ok((t, meta)));
                 }
             }
             Err(e) => {
+                // Every requester in the batch gets the failure. Typed
+                // `Overloaded` rejections are re-wrapped per requester so
+                // each caller can downcast and apply backoff.
+                let overloaded = e.downcast_ref::<Overloaded>().cloned();
                 let msg = e.to_string();
                 for p in batch {
-                    let _ = p.reply.send(Err(anyhow::anyhow!("batch execution failed: {msg}")));
+                    let err = match &overloaded {
+                        Some(o) => anyhow::Error::new(o.clone()),
+                        None => anyhow::anyhow!("batch execution failed: {msg}"),
+                    };
+                    let _ = p.reply.send(Err(err));
                 }
             }
         }
@@ -198,20 +213,22 @@ mod tests {
         b.push(p2).map_err(|_| ()).unwrap();
         assert!(b.should_flush(Instant::now()));
 
-        // exec: identity + 10.
+        // exec: identity + 10, "executed on shard 5".
         b.flush(|x| {
             assert_eq!(x.shape().dims(), &[2, 2]);
             let mut out = x.clone();
             for v in out.data_mut() {
                 *v += 10.0;
             }
-            Ok(out)
+            Ok((out, 5))
         });
         let (t1, m1) = r1.recv().unwrap().unwrap();
-        let (t2, _) = r2.recv().unwrap().unwrap();
+        let (t2, m2) = r2.recv().unwrap().unwrap();
         assert_eq!(t1.data(), &[11.0, 11.0]);
         assert_eq!(t2.data(), &[12.0, 12.0]);
         assert_eq!(m1.batch_size, 2);
+        assert_eq!(m1.shard, 5);
+        assert_eq!(m2.shard, 5);
         assert!(b.is_empty());
     }
 
@@ -253,6 +270,23 @@ mod tests {
     }
 
     #[test]
+    fn overloaded_stays_typed_for_every_requester() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let (p1, r1) = pending(1.0);
+        let (p2, r2) = pending(2.0);
+        b.push(p1).map_err(|_| ()).unwrap();
+        b.push(p2).map_err(|_| ()).unwrap();
+        b.flush(|_| {
+            Err(anyhow::Error::new(Overloaded { model: "m".into(), shard: 1, queue_cap: 4 }))
+        });
+        for r in [r1, r2] {
+            let e = r.recv().unwrap().unwrap_err();
+            let o = e.downcast_ref::<Overloaded>().expect("typed Overloaded");
+            assert_eq!(o.shard, 1);
+        }
+    }
+
+    #[test]
     fn partial_flush_takes_max_batch() {
         let cfg = BatcherConfig { max_batch: 2, queue_cap: 10, ..Default::default() };
         let mut b = Batcher::new(cfg);
@@ -262,7 +296,7 @@ mod tests {
             b.push(p).map_err(|_| ()).unwrap();
             receivers.push(r);
         }
-        b.flush(|x| Ok(x.clone()));
+        b.flush(|x| Ok((x.clone(), 0)));
         assert_eq!(b.len(), 3);
         assert!(receivers[0].try_recv().unwrap().is_ok());
         assert!(receivers[1].try_recv().unwrap().is_ok());
@@ -288,7 +322,7 @@ mod tests {
         })
         .map_err(|_| ())
         .unwrap();
-        b.flush(|x| Ok(x.clone()));
+        b.flush(|x| Ok((x.clone(), 0)));
         assert!(r1.recv().unwrap().is_err());
         assert!(r2.recv().unwrap().is_err());
     }

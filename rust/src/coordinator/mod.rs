@@ -3,12 +3,19 @@
 //! The paper's on-device serving story — "intelligently (and very rapid …)
 //! switch between several Deep Learning Models", answer within Nielsen's
 //! 100 ms "feels instantaneous" bar (§1.1) — realized as a multi-threaded
-//! coordinator in front of the PJRT engine:
+//! coordinator in front of the sharded engine pool:
 //!
 //! ```text
-//! client threads ──submit──► per-model Batcher ──batches──► EngineHandle
-//!                              (size/deadline)                (PJRT thread)
+//! client threads ──submit──► per-model Batcher ──batches──► PoolHandle
+//!                 (admission   (size/deadline)           (model → shard)
+//!                  control)                                     │
+//!                                                     engine shard threads
 //! ```
+//!
+//! Admission control happens at `submit`: a model whose queue is at
+//! `queue_cap` rejects with the typed
+//! [`Overloaded`](crate::runtime::Overloaded) error instead of queueing
+//! without bound.
 
 mod batcher;
 mod server;

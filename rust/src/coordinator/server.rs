@@ -1,19 +1,22 @@
-//! The coordinator: per-model batcher worker threads in front of the PJRT
-//! engine, with end-to-end latency metrics and SLO accounting.
+//! The coordinator: per-model batcher worker threads in front of the
+//! engine pool, with end-to-end latency metrics, SLO accounting and
+//! submit-time admission control.
 
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::NIELSEN_SLO_MICROS;
 use crate::metrics::{Histogram, ServingStats};
-use crate::runtime::{EngineHandle, ModelInfo};
+use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Coordinator configuration.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CoordinatorConfig {
+    /// Per-model dynamic-batching parameters (`queue_cap` doubles as the
+    /// submit-time admission bound per model).
     pub batcher: BatcherConfig,
 }
 
@@ -28,11 +31,19 @@ pub struct RequestResult {
     pub latency: Duration,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// Engine-pool shard that executed the batch.
+    pub shard: usize,
 }
 
 struct ModelWorker {
     tx: mpsc::Sender<Pending>,
     info: ModelInfo,
+    /// Requests submitted but not yet picked up by the batcher worker —
+    /// the submit-time admission-control window.
+    depth: Arc<AtomicUsize>,
+    /// The batcher worker thread, joined on retire so in-flight work
+    /// drains before the model is unloaded from its shard.
+    join: std::thread::JoinHandle<()>,
 }
 
 struct Shared {
@@ -44,19 +55,32 @@ struct Shared {
     started: Instant,
 }
 
-/// Multi-model serving coordinator.
+/// Multi-model serving coordinator over an engine pool.
+///
+/// One batcher worker thread per served model coalesces requests into
+/// batches and flushes them through the [`PoolHandle`], which routes each
+/// batch to the shard holding the model's weights. Rejections — at submit
+/// time when a model's queue is at `queue_cap`, or downstream when the
+/// owning shard is saturated — surface as typed [`Overloaded`] errors.
 pub struct Coordinator {
-    engine: EngineHandle,
+    pool: PoolHandle,
     config: CoordinatorConfig,
     workers: BTreeMap<String, ModelWorker>,
     shared: Arc<Shared>,
 }
 
 impl Coordinator {
-    /// Create a coordinator over an engine.
+    /// Create a coordinator over a single engine (wrapped as a one-shard
+    /// pool). Kept for small deployments and existing call sites; use
+    /// [`Coordinator::over_pool`] to scale out.
     pub fn new(engine: EngineHandle, config: CoordinatorConfig) -> Coordinator {
+        Coordinator::over_pool(PoolHandle::single(engine), config)
+    }
+
+    /// Create a coordinator over an engine pool.
+    pub fn over_pool(pool: PoolHandle, config: CoordinatorConfig) -> Coordinator {
         Coordinator {
-            engine,
+            pool,
             config,
             workers: BTreeMap::new(),
             shared: Arc::new(Shared {
@@ -70,9 +94,10 @@ impl Coordinator {
         }
     }
 
-    /// Load a model from a directory and start its batcher worker.
+    /// Load a model from a directory (placed onto a pool shard by the
+    /// placement policy) and start its batcher worker.
     pub fn serve_model(&mut self, dir: impl Into<std::path::PathBuf>) -> crate::Result<ModelInfo> {
-        let info = self.engine.load(dir)?;
+        let info = self.pool.load(dir)?;
         let id = info.id.clone();
 
         // Batch cap: don't exceed the largest AOT batch.
@@ -82,26 +107,32 @@ impl Coordinator {
         }
 
         let (tx, rx) = mpsc::channel::<Pending>();
-        let engine = self.engine.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let pool = self.pool.clone();
         let shared = self.shared.clone();
         let model_id = id.clone();
-        std::thread::Builder::new()
+        let worker_depth = depth.clone();
+        let shard = info.shard;
+        let join = std::thread::Builder::new()
             .name(format!("dlk-batcher-{id}"))
-            .spawn(move || batcher_main(rx, cfg, engine, model_id, shared))
+            .spawn(move || batcher_main(rx, cfg, pool, model_id, shard, worker_depth, shared))
             .map_err(|e| anyhow::anyhow!("spawning batcher: {e}"))?;
 
-        self.workers.insert(id, ModelWorker { tx, info: info.clone() });
+        self.workers.insert(id, ModelWorker { tx, info: info.clone(), depth, join });
         Ok(info)
     }
 
-    /// Stop serving a model (drains in-flight work, unloads from engine).
+    /// Stop serving a model: closes its queue, waits for the batcher
+    /// worker to drain in-flight work, then unloads from its shard (the
+    /// model keeps its shard affinity for a later reload).
     pub fn retire_model(&mut self, id: &str) -> crate::Result<()> {
-        let worker = self
+        let ModelWorker { tx, join, .. } = self
             .workers
             .remove(id)
             .ok_or_else(|| anyhow::anyhow!("model `{id}` is not being served"))?;
-        drop(worker); // closes the channel; worker thread drains then exits
-        self.engine.unload(id)
+        drop(tx); // closes the channel; worker drains remaining work
+        let _ = join.join(); // drain must finish before the unload below
+        self.pool.unload(id)
     }
 
     /// Models currently served.
@@ -114,18 +145,36 @@ impl Coordinator {
         self.submit(model_id, input)?.wait()
     }
 
-    /// Submit asynchronously; returns a ticket to wait on.
+    /// Submit asynchronously; returns a ticket to wait on. Admission
+    /// control happens here: once `queue_cap` submissions are waiting to
+    /// be picked up by the model's batcher, further submissions are
+    /// rejected with a typed [`Overloaded`] error instead of queueing
+    /// without bound. (The batcher's internal queue is capped at
+    /// `queue_cap` as well, so a model holds at most ~2×`queue_cap`
+    /// unserved requests across both stages.)
     pub fn submit(&self, model_id: &str, input: Tensor) -> crate::Result<Ticket> {
         let worker = self
             .workers
             .get(model_id)
             .ok_or_else(|| anyhow::anyhow!("model `{model_id}` is not being served"))?;
+        // Atomic admission: increment first, back out on overflow, so
+        // concurrent submitters can never admit past `queue_cap`.
+        let prev = worker.depth.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.config.batcher.queue_cap {
+            worker.depth.fetch_sub(1, Ordering::AcqRel);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(Overloaded {
+                model: model_id.to_string(),
+                shard: worker.info.shard,
+                queue_cap: self.config.batcher.queue_cap,
+            }));
+        }
         let (reply_tx, reply_rx) = mpsc::channel();
         let started = Instant::now();
-        worker
-            .tx
-            .send(Pending { input, enqueued: started, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("batcher for `{model_id}` is gone"))?;
+        if worker.tx.send(Pending { input, enqueued: started, reply: reply_tx }).is_err() {
+            worker.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow::anyhow!("batcher for `{model_id}` is gone"));
+        }
         self.shared.requests.fetch_add(1, Ordering::Relaxed);
         Ok(Ticket { reply: reply_rx, started, shared: self.shared.clone() })
     }
@@ -154,9 +203,9 @@ impl Coordinator {
         }
     }
 
-    /// Access to the underlying engine handle.
-    pub fn engine(&self) -> &EngineHandle {
-        &self.engine
+    /// Access to the underlying engine pool.
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
     }
 }
 
@@ -184,7 +233,13 @@ impl Ticket {
                     .record(latency.as_micros() as u64);
                 self.shared.batch_sizes.lock().unwrap().push(meta.batch_size);
                 let predicted = output.argmax();
-                Ok(RequestResult { output, predicted, latency, batch_size: meta.batch_size })
+                Ok(RequestResult {
+                    output,
+                    predicted,
+                    latency,
+                    batch_size: meta.batch_size,
+                    shard: meta.shard,
+                })
             }
             Err(e) => {
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
@@ -195,12 +250,14 @@ impl Ticket {
 }
 
 /// Batcher worker loop: poll the channel with the flush deadline as the
-/// timeout; execute batches on the engine.
+/// timeout; execute batches on the model's pool shard.
 fn batcher_main(
     rx: mpsc::Receiver<Pending>,
     cfg: BatcherConfig,
-    engine: EngineHandle,
+    pool: PoolHandle,
     model_id: String,
+    shard: usize,
+    depth: Arc<AtomicUsize>,
     shared: Arc<Shared>,
 ) {
     let mut batcher = Batcher::new(cfg);
@@ -211,11 +268,15 @@ fn batcher_main(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(pending) => {
-                let mut reject = |p: Pending| {
-                    shared.rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ = p
-                        .reply
-                        .send(Err(anyhow::anyhow!("queue full for `{model_id}` (backpressure)")));
+                depth.fetch_sub(1, Ordering::AcqRel);
+                // Rejections are counted once, in `Ticket::wait`, when the
+                // error reaches the client.
+                let reject = |p: Pending| {
+                    let _ = p.reply.send(Err(anyhow::Error::new(Overloaded {
+                        model: model_id.clone(),
+                        shard,
+                        queue_cap: cfg.queue_cap,
+                    })));
                 };
                 if let Err(p) = batcher.push(pending) {
                     reject(p);
@@ -224,6 +285,7 @@ fn batcher_main(
                 // (requests that arrived while the previous batch executed)
                 // so they coalesce into this batch.
                 while let Ok(pending) = rx.try_recv() {
+                    depth.fetch_sub(1, Ordering::AcqRel);
                     if let Err(p) = batcher.push(pending) {
                         reject(p);
                     }
@@ -234,14 +296,14 @@ fn batcher_main(
                 // Drain remaining work, then exit.
                 while !batcher.is_empty() {
                     shared.batches.fetch_add(1, Ordering::Relaxed);
-                    batcher.flush(|batch| engine.infer(&model_id, batch.clone()));
+                    batcher.flush(|batch| pool.infer(&model_id, batch.clone()));
                 }
                 return;
             }
         }
         while batcher.should_flush(Instant::now()) {
             shared.batches.fetch_add(1, Ordering::Relaxed);
-            batcher.flush(|batch| engine.infer(&model_id, batch.clone()));
+            batcher.flush(|batch| pool.infer(&model_id, batch.clone()));
         }
     }
 }

@@ -79,48 +79,74 @@ fn generator_for(id: &str) -> fn(usize, u64) -> data::Batch {
 
 fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("dlk serve", "run a synthetic serving workload")
-        .flag("model", "model id under artifacts/models/", Some("lenet-mnist"))
-        .flag("requests", "number of requests", Some("256"))
+        .flag("model", "comma-separated model id(s) under artifacts/models/", Some("lenet-mnist"))
+        .flag("requests", "number of requests (total across models)", Some("256"))
         .flag("concurrency", "client threads", Some("4"))
         .flag("max-batch", "dynamic batcher max batch", Some("8"))
-        .flag("max-delay-ms", "batcher flush deadline (ms)", Some("2"));
+        .flag("max-delay-ms", "batcher flush deadline (ms)", Some("2"))
+        .flag("shards", "engine pool shards (0 = available parallelism)", Some("0"))
+        .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"));
     let a = cmd.parse(argv)?;
-    let model_id = a.get_or("model", "lenet-mnist").to_string();
+    let model_ids: Vec<String> = a
+        .get_or("model", "lenet-mnist")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!model_ids.is_empty(), "--model needs at least one model id");
     let requests = a.get_usize("requests", 256)?;
-    let concurrency = a.get_usize("concurrency", 4)?.max(1);
+    // Client threads round-robin over models by thread index, so every
+    // model needs at least one thread to receive traffic.
+    let mut concurrency = a.get_usize("concurrency", 4)?.max(1);
+    if concurrency < model_ids.len() {
+        concurrency = model_ids.len();
+        eprintln!("note: raising --concurrency to {concurrency} (one client per model)");
+    }
     let max_batch = a.get_usize("max-batch", 8)?;
     let max_delay = Duration::from_millis(a.get_usize("max-delay-ms", 2)? as u64);
+    let shards = a.get_usize("shards", 0)?;
+    let queue_cap = a.get_usize("queue-cap", 1024)?.max(1);
 
-    let engine = runtime::Engine::start()?;
-    let mut coord = coordinator::Coordinator::new(
-        engine,
+    let pool = runtime::EnginePool::start(runtime::PoolConfig {
+        shards,
+        queue_cap,
+        ..Default::default()
+    })?;
+    println!("engine pool: {} shard(s), queue cap {queue_cap}", pool.shard_count());
+    let mut coord = coordinator::Coordinator::over_pool(
+        pool.clone(),
         coordinator::CoordinatorConfig {
-            batcher: coordinator::BatcherConfig { max_batch, max_delay, queue_cap: 4096 },
+            batcher: coordinator::BatcherConfig { max_batch, max_delay, queue_cap },
         },
     );
-    let info = coord.serve_model(model_dir(&model_id))?;
-    println!(
-        "serving `{}` ({} classes, AOT batches {:?}, {} KB weights, load {:.1} ms)",
-        info.id,
-        info.classes,
-        info.batches,
-        info.weight_bytes / 1024,
-        info.load_micros as f64 / 1000.0
-    );
+    for id in &model_ids {
+        let info = coord.serve_model(model_dir(id))?;
+        println!(
+            "serving `{}` on shard {} ({} classes, AOT batches {:?}, {} KB weights, load {:.1} ms)",
+            info.id,
+            info.shard,
+            info.classes,
+            info.batches,
+            info.weight_bytes / 1024,
+            info.load_micros as f64 / 1000.0
+        );
+    }
 
-    let generate = generator_for(&model_id);
     let coord = std::sync::Arc::new(coord);
     let correct = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let done = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let overloaded = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let per_thread = (requests / concurrency).max(1);
     std::thread::scope(|scope| {
         for t in 0..concurrency {
             let coord = coord.clone();
             let correct = correct.clone();
             let done = done.clone();
-            let model_id = model_id.clone();
+            let overloaded = overloaded.clone();
+            // Client threads round-robin over the served models.
+            let model_id = model_ids[t % model_ids.len()].clone();
             scope.spawn(move || {
-                let batch = generate(per_thread, 1000 + t as u64);
+                let batch = generator_for(&model_id)(per_thread, 1000 + t as u64);
                 let item = batch.inputs.numel() / per_thread;
                 for i in 0..per_thread {
                     let input = tensor::Tensor::new(
@@ -135,6 +161,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
                             }
                             done.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
+                        Err(e) if e.is::<runtime::Overloaded>() => {
+                            overloaded.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
                         Err(e) => eprintln!("request failed: {e}"),
                     }
                 }
@@ -144,6 +173,13 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
 
     let stats = coord.stats();
     println!("{}", stats.summary());
+    if let Ok(util) = coord.pool().utilization() {
+        println!("{}", util.summary());
+    }
+    let over_n = overloaded.load(std::sync::atomic::Ordering::Relaxed);
+    if over_n > 0 {
+        println!("overloaded rejections: {over_n} (typed backpressure; retry with backoff)");
+    }
     let done_n = done.load(std::sync::atomic::Ordering::Relaxed);
     let correct_n = correct.load(std::sync::atomic::Ordering::Relaxed);
     if done_n > 0 {

@@ -39,17 +39,91 @@ impl Counter {
 /// Snapshot of serving statistics, assembled by the coordinator.
 #[derive(Clone, Debug, Default)]
 pub struct ServingStats {
+    /// Requests admitted (submitted past admission control).
     pub requests: u64,
+    /// Batches flushed to the engine pool.
     pub batches: u64,
+    /// Requests rejected (admission control / backpressure).
     pub rejected: u64,
+    /// End-to-end latency percentiles (microseconds).
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// Mean formed batch size.
     pub mean_batch_size: f64,
+    /// Completed requests per second since the coordinator started.
     pub throughput_rps: f64,
     /// Fraction of requests under the 100 ms Nielsen threshold.
     pub slo_attainment: f64,
+}
+
+/// Pool utilization snapshot: per-shard load counters, assembled from the
+/// engine pool's per-shard stats (`PoolStats::utilization()`). All vectors
+/// are indexed by shard id and share one length.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PoolUtilization {
+    /// Batches executed per shard.
+    pub executions: Vec<u64>,
+    /// Items (batch rows) executed per shard.
+    pub items: Vec<u64>,
+    /// Models resident per shard.
+    pub resident_models: Vec<usize>,
+    /// Weight bytes resident per shard.
+    pub resident_bytes: Vec<usize>,
+}
+
+impl PoolUtilization {
+    /// Number of shards described.
+    pub fn shard_count(&self) -> usize {
+        self.executions.len()
+    }
+
+    /// Total batches executed across shards.
+    pub fn total_executions(&self) -> u64 {
+        self.executions.iter().sum()
+    }
+
+    /// Each shard's share of executed batches (sums to 1.0 when any work
+    /// ran; all zeros otherwise).
+    pub fn shares(&self) -> Vec<f64> {
+        let total = self.total_executions();
+        if total == 0 {
+            return vec![0.0; self.executions.len()];
+        }
+        self.executions.iter().map(|&e| e as f64 / total as f64).collect()
+    }
+
+    /// Load imbalance: busiest shard's executions over the per-shard mean.
+    /// 1.0 is perfectly balanced; `shard_count()` means one shard did
+    /// everything. 0.0 when no work ran.
+    pub fn imbalance(&self) -> f64 {
+        let total = self.total_executions();
+        if total == 0 || self.executions.is_empty() {
+            return 0.0;
+        }
+        let mean = total as f64 / self.executions.len() as f64;
+        let max = self.executions.iter().copied().max().unwrap_or(0) as f64;
+        max / mean
+    }
+
+    /// One-line summary for logs and the CLI.
+    pub fn summary(&self) -> String {
+        let per_shard: Vec<String> = self
+            .executions
+            .iter()
+            .zip(&self.resident_models)
+            .zip(&self.resident_bytes)
+            .enumerate()
+            .map(|(s, ((e, m), b))| format!("s{s}: {e} exec/{m} models/{}", fmt_bytes(*b as u64)))
+            .collect();
+        format!(
+            "pool[{} shards] imbalance={:.2} {}",
+            self.shard_count(),
+            self.imbalance(),
+            per_shard.join("  ")
+        )
+    }
 }
 
 impl ServingStats {
@@ -99,6 +173,31 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn pool_utilization_math() {
+        let u = PoolUtilization {
+            executions: vec![30, 10, 0, 0],
+            items: vec![60, 20, 0, 0],
+            resident_models: vec![2, 1, 0, 0],
+            resident_bytes: vec![2048, 1024, 0, 0],
+        };
+        assert_eq!(u.shard_count(), 4);
+        assert_eq!(u.total_executions(), 40);
+        assert_eq!(u.shares(), vec![0.75, 0.25, 0.0, 0.0]);
+        // Busiest shard did 30 of a mean 10 → imbalance 3.0.
+        assert!((u.imbalance() - 3.0).abs() < 1e-12);
+        let s = u.summary();
+        assert!(s.contains("pool[4 shards]") && s.contains("s0: 30 exec"), "{s}");
+    }
+
+    #[test]
+    fn pool_utilization_empty_is_quiet() {
+        let u = PoolUtilization::default();
+        assert_eq!(u.total_executions(), 0);
+        assert_eq!(u.imbalance(), 0.0);
+        assert!(u.shares().is_empty());
     }
 
     #[test]

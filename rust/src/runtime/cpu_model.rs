@@ -1,0 +1,201 @@
+//! A model resident on the CPU reference backend: manifest + a
+//! [`CpuExecutor`](crate::nn::CpuExecutor) over the same on-disk format the
+//! PJRT path consumes (`manifest.json` + `weights.dlkw`).
+//!
+//! This is the engine's fallback when the crate is built without the
+//! `pjrt` feature (no `xla` dependency available). It deliberately mirrors
+//! the PJRT loader's semantics — integrity hash verification, the declared
+//! AOT batch sizes, pad-to-batch/slice-back execution — so every layer
+//! above the engine (pool, coordinator, cache, benches) behaves identically
+//! on either backend.
+
+use crate::model::{Manifest, ModelFiles, WeightStore};
+use crate::nn::CpuExecutor;
+use crate::tensor::{Shape, Tensor};
+use std::path::Path;
+
+/// A fully loaded CPU-backend model.
+pub struct CpuModel {
+    /// The manifest that travelled with the model directory.
+    pub manifest: Manifest,
+    exec: CpuExecutor,
+    /// Bytes of weights resident (for cache/placement budgets).
+    pub weight_bytes: usize,
+    batches: Vec<usize>,
+}
+
+impl CpuModel {
+    /// Load a model directory (`manifest.json` / `weights.dlkw`), verify
+    /// integrity, and bind the weights to a CPU executor. HLO artifacts are
+    /// not required; the declared `aot_batches` still bound execution batch
+    /// sizes for parity with the PJRT path.
+    pub fn load(dir: &Path) -> crate::Result<CpuModel> {
+        let files = ModelFiles::new(dir);
+        let manifest = Manifest::load(&files.manifest())?;
+
+        // Integrity: sha256 of the weights file must match the manifest.
+        let weight_blob = std::fs::read(files.weights())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", files.weights().display()))?;
+        if let Some(expect) = &manifest.weights_sha256 {
+            let got = crate::store::sha256_hex(&weight_blob);
+            anyhow::ensure!(
+                &got == expect,
+                "weights integrity failure for `{}`: sha256 {got} != manifest {expect}",
+                manifest.id
+            );
+        }
+        let store = WeightStore::from_bytes(&weight_blob)?;
+        let weight_bytes = manifest.arch.param_count()? * 4;
+
+        let mut batches = manifest.aot_batches.clone();
+        batches.sort_unstable();
+        batches.dedup();
+        anyhow::ensure!(
+            !batches.is_empty(),
+            "model `{}` declares no AOT batch sizes",
+            manifest.id
+        );
+
+        let exec = CpuExecutor::new(manifest.arch.clone(), store)?;
+        Ok(CpuModel { manifest, exec, weight_bytes, batches })
+    }
+
+    /// Batch sizes available (the manifest's declared AOT sizes).
+    pub fn batches(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    /// Smallest declared batch size >= `n`, or the largest available
+    /// (caller must split bigger batches).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for &b in &self.batches {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.batches.last().unwrap()
+    }
+
+    /// Run inference on a `[n, ...]` input; pads to the chosen batch size
+    /// and slices the result back to `n` rows — the same contract as the
+    /// PJRT loader, so cross-backend tests can compare outputs directly.
+    pub fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
+        let dims = input.shape().dims();
+        anyhow::ensure!(!dims.is_empty(), "input must have a batch dimension");
+        let n = dims[0];
+        anyhow::ensure!(n > 0, "empty batch");
+        anyhow::ensure!(
+            dims[1..] == self.manifest.arch.input[..],
+            "input shape {} does not match model `{}` input {:?}",
+            input.shape(),
+            self.manifest.id,
+            self.manifest.arch.input
+        );
+        let exec_batch = self.pick_batch(n);
+        anyhow::ensure!(
+            n <= exec_batch,
+            "batch {n} exceeds largest AOT batch {exec_batch} for `{}` (split upstream)",
+            self.manifest.id
+        );
+
+        // Pad with zero rows to the executable's batch.
+        let padded = if n == exec_batch {
+            input.clone()
+        } else {
+            let row = input.numel() / n;
+            let mut data = Vec::with_capacity(exec_batch * row);
+            data.extend_from_slice(input.data());
+            data.resize(exec_batch * row, 0.0);
+            let mut shape = dims.to_vec();
+            shape[0] = exec_batch;
+            Tensor::new(Shape::new(&shape), data)?
+        };
+
+        let full = self.exec.forward(&padded)?;
+        if n == exec_batch {
+            return Ok(full);
+        }
+        // Slice the first n rows.
+        let row = full.numel() / exec_batch;
+        let mut sliced_dims = full.shape().dims().to_vec();
+        sliced_dims[0] = n;
+        Tensor::new(Shape::new(&sliced_dims), full.data()[..n * row].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn loads_and_infers_fixture() {
+        let dir = testutil::tiny_model_dir("cpu-model", "tiny-cpu", 16, 11);
+        let m = CpuModel::load(&dir).unwrap();
+        assert_eq!(m.manifest.id, "tiny-cpu");
+        assert_eq!(m.batches(), vec![1, 4, 8]);
+        assert!(m.weight_bytes > 0);
+
+        let x = Tensor::randn(Shape::nchw(2, 1, 8, 8), 5, 1.0);
+        let y = m.infer(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[2, 4]);
+        for row in y.data().chunks_exact(4) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+        }
+    }
+
+    #[test]
+    fn padding_matches_exact_batch() {
+        // Batch 3 pads to AOT batch 4; rows must equal the batch-1 results.
+        let dir = testutil::tiny_model_dir("cpu-pad", "tiny-pad", 16, 7);
+        let m = CpuModel::load(&dir).unwrap();
+        let x = Tensor::randn(Shape::nchw(3, 1, 8, 8), 9, 1.0);
+        let out3 = m.infer(&x).unwrap();
+        assert_eq!(out3.shape().dims(), &[3, 4]);
+        for i in 0..3 {
+            let single = Tensor::new(
+                Shape::nchw(1, 1, 8, 8),
+                x.data()[i * 64..(i + 1) * 64].to_vec(),
+            )
+            .unwrap();
+            let out1 = m.infer(&single).unwrap();
+            crate::testutil::assert_allclose(
+                out1.data(),
+                &out3.data()[i * 4..(i + 1) * 4],
+                1e-5,
+                1e-6,
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let dir = testutil::tiny_model_dir("cpu-over", "tiny-over", 8, 3);
+        let m = CpuModel::load(&dir).unwrap();
+        let x = Tensor::zeros(Shape::nchw(16, 1, 8, 8));
+        let e = m.infer(&x).unwrap_err().to_string();
+        assert!(e.contains("exceeds"), "{e}");
+    }
+
+    #[test]
+    fn tampered_weights_rejected() {
+        let dir = testutil::tiny_model_dir("cpu-tamper", "tiny-tamper", 8, 3);
+        let wpath = dir.join("weights.dlkw");
+        let mut bytes = std::fs::read(&wpath).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&wpath, bytes).unwrap();
+        let e = CpuModel::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("integrity"), "{e}");
+    }
+
+    #[test]
+    fn empty_aot_batches_rejected() {
+        let dir = testutil::tempdir("cpu-nobatch");
+        testutil::write_model_dir(&dir, "no-batch", testutil::tiny_cnn("no-batch", 8), 1, &[])
+            .unwrap();
+        let e = CpuModel::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("no AOT batch sizes"), "{e}");
+    }
+}

@@ -1,39 +1,129 @@
-//! Engine thread: sole owner of the PJRT client and every loaded model.
+//! Engine shard: a dedicated thread owning one execution backend and every
+//! model resident on it.
 //!
 //! [`EngineHandle`] is the thread-safe facade: `load`, `unload`, `infer`,
-//! `stats`. Requests travel over an mpsc channel; each carries a reply
-//! channel. This is the Metal `MTLCommandQueue` role from paper Fig. 2 —
-//! commands are serialized onto the device by a queue the app threads feed.
+//! `stats`. Requests travel over a **bounded** mpsc channel; each carries a
+//! reply channel. This is the Metal `MTLCommandQueue` role from paper
+//! Fig. 2 — commands are serialized onto the device by a queue the app
+//! threads feed. The shard's admission window is its in-flight-inference
+//! count (bounded by `queue_cap`): [`EngineHandle::try_infer`] rejects
+//! with a typed [`Overloaded`](super::Overloaded) error instead of
+//! blocking when the window is full, while control-plane traffic
+//! (stats/load/unload) keeps flowing through reserved channel slack.
+//!
+//! One process runs N shards as an [`EnginePool`](super::EnginePool)
+//! (`runtime/pool.rs`); a single shard is still useful standalone and is
+//! what [`Engine::start`] gives you.
+//!
+//! Backends: with the `pjrt` feature the shard owns an `xla::PjRtClient`
+//! (raw pointers, `!Send` — hence the thread-per-shard design); without it
+//! the shard runs the in-crate CPU reference executor over the same model
+//! format, so the whole serving stack works in artifact-less environments.
 
+use super::cpu_model::CpuModel;
+#[cfg(feature = "pjrt")]
 use super::loaded_model::LoadedModel;
+use super::pool::Overloaded;
 use crate::metrics::Histogram;
+use crate::model::Manifest;
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Which execution backend a shard runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The in-crate CPU reference executor (`nn::CpuExecutor`). Needs only
+    /// `manifest.json` + `weights.dlkw`; no AOT HLO artifacts.
+    Cpu,
+    /// The PJRT runtime executing AOT-compiled HLO (requires the `pjrt`
+    /// feature and the model's `model_b*.hlo.txt` artifacts).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl Default for BackendKind {
+    fn default() -> BackendKind {
+        #[cfg(feature = "pjrt")]
+        {
+            BackendKind::Pjrt
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            BackendKind::Cpu
+        }
+    }
+}
+
+impl BackendKind {
+    /// Short name for logs and tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Configuration for one engine shard.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Shard index, surfaced in stats, thread names and `Overloaded`
+    /// rejections. A standalone engine is shard 0.
+    pub shard: usize,
+    /// Bound on the shard's request queue. `try_infer` rejects with
+    /// [`Overloaded`](super::Overloaded) once this many requests are
+    /// queued (admission control / backpressure).
+    pub queue_cap: usize,
+    /// Execution backend.
+    pub backend: BackendKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { shard: 0, queue_cap: 1024, backend: BackendKind::default() }
+    }
+}
 
 /// Metadata returned by a successful load.
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
+    /// Model id from the manifest.
     pub id: String,
+    /// Batch sizes the model can execute (declared AOT sizes).
     pub batches: Vec<usize>,
+    /// Resident weight bytes (feeds cache/placement budgets).
     pub weight_bytes: usize,
+    /// Number of output classes (0 when unknown).
     pub classes: usize,
+    /// Class labels, when the manifest carries them.
     pub labels: Vec<String>,
-    /// Wall time the load took (disk + weight staging + PJRT compile).
+    /// Wall time the load took (disk + weight staging + compile).
     pub load_micros: u64,
+    /// The shard now holding the model.
+    pub shard: usize,
 }
 
-/// Engine statistics snapshot.
+/// Engine statistics snapshot (one shard's view; the pool aggregates them).
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
+    /// Shard index this snapshot describes.
+    pub shard: usize,
+    /// Batches executed.
     pub executions: u64,
+    /// Items (batch rows) executed.
     pub items: u64,
+    /// Execution-latency percentiles (per batch, microseconds).
     pub exec_p50_us: u64,
     pub exec_p95_us: u64,
     pub exec_p99_us: u64,
+    /// Models resident on this shard.
     pub resident_models: usize,
+    /// Weight bytes resident on this shard.
     pub resident_bytes: usize,
 }
 
@@ -42,48 +132,148 @@ enum Request {
     Unload { id: String, reply: mpsc::Sender<crate::Result<()>> },
     Infer { id: String, input: Tensor, reply: mpsc::Sender<crate::Result<Tensor>> },
     Stats { reply: mpsc::Sender<EngineStats> },
+    /// Test hook: hold the engine thread busy for a while (see
+    /// [`EngineHandle::debug_stall`]). `started` is acked just before the
+    /// sleep begins so callers can wait for the stall deterministically.
+    Stall { duration: Duration, started: mpsc::Sender<()> },
     Shutdown,
 }
 
-/// Thread-safe handle to the engine thread. Cloneable; dropping all
-/// handles shuts the engine down.
+/// Channel slots reserved beyond `queue_cap` so rare control-plane
+/// messages (stats/load/unload/shutdown) don't block behind a saturated
+/// inference queue: admission control counts in-flight *inferences*, not
+/// raw channel occupancy.
+const CONTROL_SLACK: usize = 16;
+
+/// Thread-safe handle to one engine shard. Cloneable; dropping all handles
+/// shuts the shard down.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
+    shard: usize,
+    queue_cap: usize,
+    /// Inferences admitted but not yet completed by the engine thread
+    /// (the admission-control window for `try_infer`).
+    inflight: Arc<AtomicUsize>,
 }
 
-/// The engine: spawn with [`Engine::start`], returns the handle and the
-/// join handle.
+/// The engine: spawn with [`Engine::start`] (one default shard) or
+/// [`Engine::start_with`] (explicit config; what the pool uses).
 pub struct Engine;
 
 impl Engine {
-    /// Start the engine thread (creates the PJRT CPU client on-thread).
+    /// Start a single engine shard with the default config (shard 0,
+    /// default backend, queue cap 1024).
     pub fn start() -> crate::Result<EngineHandle> {
-        let (tx, rx) = mpsc::channel::<Request>();
+        Engine::start_with(EngineConfig::default())
+    }
+
+    /// Start an engine shard with an explicit configuration. The backend
+    /// client is created on-thread; this returns once it is ready.
+    pub fn start_with(config: EngineConfig) -> crate::Result<EngineHandle> {
+        let queue_cap = config.queue_cap.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue_cap + CONTROL_SLACK);
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let thread_inflight = inflight.clone();
         std::thread::Builder::new()
-            .name("dlk-engine".to_string())
-            .spawn(move || engine_main(rx, ready_tx))
+            .name(format!("dlk-engine-{}", config.shard))
+            .spawn(move || engine_main(config, thread_inflight, rx, ready_tx))
             .map_err(|e| anyhow::anyhow!("spawning engine thread: {e}"))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(EngineHandle { tx })
+        Ok(EngineHandle { tx, shard: config.shard, queue_cap, inflight })
     }
 }
 
-fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<crate::Result<()>>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
+/// The backend a shard thread owns (kept on-thread: PJRT handles are
+/// `!Send`).
+enum Backend {
+    Cpu,
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtClient),
+}
+
+impl Backend {
+    fn create(kind: BackendKind) -> crate::Result<Backend> {
+        match kind {
+            BackendKind::Cpu => Ok(Backend::Cpu),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => match xla::PjRtClient::cpu() {
+                Ok(c) => Ok(Backend::Pjrt(c)),
+                Err(e) => Err(anyhow::anyhow!("PJRT client init failed: {e}")),
+            },
+        }
+    }
+
+    fn load(&self, dir: &std::path::Path) -> crate::Result<Resident> {
+        match self {
+            Backend::Cpu => Ok(Resident::Cpu(CpuModel::load(dir)?)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(client) => Ok(Resident::Pjrt(LoadedModel::load(client, dir)?)),
+        }
+    }
+}
+
+/// A resident model, whichever backend loaded it.
+enum Resident {
+    Cpu(CpuModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(LoadedModel),
+}
+
+impl Resident {
+    fn manifest(&self) -> &Manifest {
+        match self {
+            Resident::Cpu(m) => &m.manifest,
+            #[cfg(feature = "pjrt")]
+            Resident::Pjrt(m) => &m.manifest,
+        }
+    }
+
+    fn weight_bytes(&self) -> usize {
+        match self {
+            Resident::Cpu(m) => m.weight_bytes,
+            #[cfg(feature = "pjrt")]
+            Resident::Pjrt(m) => m.weight_bytes,
+        }
+    }
+
+    fn batches(&self) -> Vec<usize> {
+        match self {
+            Resident::Cpu(m) => m.batches(),
+            #[cfg(feature = "pjrt")]
+            Resident::Pjrt(m) => m.batches(),
+        }
+    }
+
+    fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
+        match self {
+            Resident::Cpu(m) => m.infer(input),
+            #[cfg(feature = "pjrt")]
+            Resident::Pjrt(m) => m.infer(input),
+        }
+    }
+}
+
+fn engine_main(
+    config: EngineConfig,
+    inflight: Arc<AtomicUsize>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<crate::Result<()>>,
+) {
+    let backend = match Backend::create(config.backend) {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            c
+            b
         }
         Err(e) => {
-            let _ = ready.send(Err(anyhow::anyhow!("PJRT client init failed: {e}")));
+            let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut models: BTreeMap<String, LoadedModel> = BTreeMap::new();
+    let mut models: BTreeMap<String, Resident> = BTreeMap::new();
     let mut exec_hist = Histogram::new();
     let mut executions: u64 = 0;
     let mut items: u64 = 0;
@@ -92,14 +282,15 @@ fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<crate::Result<()
         match req {
             Request::Load { dir, reply } => {
                 let t0 = Instant::now();
-                let result = LoadedModel::load(&client, &dir).map(|m| {
+                let result = backend.load(&dir).map(|m| {
                     let info = ModelInfo {
-                        id: m.manifest.id.clone(),
+                        id: m.manifest().id.clone(),
                         batches: m.batches(),
-                        weight_bytes: m.weight_bytes,
-                        classes: m.manifest.arch.num_classes().unwrap_or(0),
-                        labels: m.manifest.labels.clone(),
+                        weight_bytes: m.weight_bytes(),
+                        classes: m.manifest().arch.num_classes().unwrap_or(0),
+                        labels: m.manifest().labels.clone(),
                         load_micros: t0.elapsed().as_micros() as u64,
+                        shard: config.shard,
                     };
                     models.insert(info.id.clone(), m);
                     info
@@ -129,20 +320,47 @@ fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<crate::Result<()
                     None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
                 };
                 let _ = reply.send(result);
+                inflight.fetch_sub(1, Ordering::AcqRel);
             }
             Request::Stats { reply } => {
                 let _ = reply.send(EngineStats {
+                    shard: config.shard,
                     executions,
                     items,
                     exec_p50_us: exec_hist.quantile(0.5),
                     exec_p95_us: exec_hist.quantile(0.95),
                     exec_p99_us: exec_hist.quantile(0.99),
                     resident_models: models.len(),
-                    resident_bytes: models.values().map(|m| m.weight_bytes).sum(),
+                    resident_bytes: models.values().map(|m| m.weight_bytes()).sum(),
                 });
+            }
+            Request::Stall { duration, started } => {
+                let _ = started.send(());
+                std::thread::sleep(duration);
             }
             Request::Shutdown => break,
         }
+    }
+}
+
+/// A reply ticket for an in-flight asynchronous inference
+/// ([`EngineHandle::try_infer_async`]).
+pub struct InferTicket {
+    reply: mpsc::Receiver<crate::Result<Tensor>>,
+    shard: usize,
+}
+
+impl InferTicket {
+    /// Block until the result arrives.
+    pub fn wait(self) -> crate::Result<Tensor> {
+        self.reply
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine shard {} dropped the request", self.shard))?
+    }
+
+    /// The shard executing this request.
+    pub fn shard(&self) -> usize {
+        self.shard
     }
 }
 
@@ -151,11 +369,25 @@ impl EngineHandle {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(make(reply_tx))
-            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
-        reply_rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped the request"))
+            .map_err(|_| anyhow::anyhow!("engine shard {} is gone", self.shard))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine shard {} dropped the request", self.shard))
     }
 
-    /// Load a model directory; compiles all its AOT batch sizes.
+    /// This handle's shard index.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The shard's admission-control queue bound.
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Load a model directory; stages weights and prepares all declared
+    /// batch sizes. Blocks (does not count against admission control —
+    /// loads are rare control-plane work).
     pub fn load(&self, dir: impl Into<PathBuf>) -> crate::Result<ModelInfo> {
         self.call(|reply| Request::Load { dir: dir.into(), reply })?
     }
@@ -165,14 +397,86 @@ impl EngineHandle {
         self.call(|reply| Request::Unload { id: id.to_string(), reply })?
     }
 
-    /// Synchronous inference on a `[n, ...]` batch.
+    /// Synchronous inference on a `[n, ...]` batch. Blocks for a queue slot
+    /// if the shard is saturated (it still counts toward the admission
+    /// window `try_infer` enforces); use [`EngineHandle::try_infer`] for
+    /// admission-controlled submission.
     pub fn infer(&self, id: &str, input: Tensor) -> crate::Result<Tensor> {
-        self.call(|reply| Request::Infer { id: id.to_string(), input, reply })?
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let request = Request::Infer { id: id.to_string(), input, reply: reply_tx };
+        if self.tx.send(request).is_err() {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow::anyhow!("engine shard {} is gone", self.shard));
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine shard {} dropped the request", self.shard))?
+    }
+
+    /// Admission-controlled inference: rejects with a typed
+    /// [`Overloaded`](super::Overloaded) error (instead of blocking) when
+    /// the shard's request queue is full.
+    pub fn try_infer(&self, id: &str, input: Tensor) -> crate::Result<Tensor> {
+        self.try_infer_async(id, input)?.wait()
+    }
+
+    /// Admission-controlled, non-blocking submission: enqueues the request
+    /// and returns an [`InferTicket`] to wait on, or a typed
+    /// [`Overloaded`](super::Overloaded) error when the shard already has
+    /// `queue_cap` inferences in flight. Admission counts in-flight
+    /// inferences (not raw channel occupancy), so control-plane calls like
+    /// [`EngineHandle::stats`] stay responsive under saturation.
+    pub fn try_infer_async(&self, id: &str, input: Tensor) -> crate::Result<InferTicket> {
+        // Atomic admission: increment first, back out on overflow.
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.queue_cap {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow::Error::new(Overloaded {
+                model: id.to_string(),
+                shard: self.shard,
+                queue_cap: self.queue_cap,
+            }));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let request = Request::Infer { id: id.to_string(), input, reply: reply_tx };
+        match self.tx.try_send(request) {
+            Ok(()) => Ok(InferTicket { reply: reply_rx, shard: self.shard }),
+            Err(mpsc::TrySendError::Full(_)) => {
+                // Only possible when blocking `infer` callers filled the
+                // control slack too; still a typed rejection.
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                Err(anyhow::Error::new(Overloaded {
+                    model: id.to_string(),
+                    shard: self.shard,
+                    queue_cap: self.queue_cap,
+                }))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                Err(anyhow::anyhow!("engine shard {} is gone", self.shard))
+            }
+        }
     }
 
     /// Engine statistics.
     pub fn stats(&self) -> crate::Result<EngineStats> {
         self.call(|reply| Request::Stats { reply })
+    }
+
+    /// Test hook: occupy the engine thread for `duration` so tests can
+    /// deterministically fill the request queue and observe `Overloaded`
+    /// rejections. Returns once the engine thread has *started* stalling
+    /// (no sleep-based synchronization needed at the call site).
+    #[doc(hidden)]
+    pub fn debug_stall(&self, duration: Duration) -> crate::Result<()> {
+        let (started_tx, started_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stall { duration, started: started_tx })
+            .map_err(|_| anyhow::anyhow!("engine shard {} is gone", self.shard))?;
+        started_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine shard {} is gone", self.shard))
     }
 
     /// Explicit shutdown (optional; dropping all handles also stops it).
@@ -184,15 +488,21 @@ impl EngineHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testutil;
 
-    // Engine tests that need real artifacts live in rust/tests/
-    // (integration); here we only check lifecycle basics.
+    // Engine tests that need real AOT artifacts live in rust/tests/
+    // (integration); here we use synthetic CPU-backend fixtures.
+
+    fn cpu_engine(shard: usize, queue_cap: usize) -> EngineHandle {
+        Engine::start_with(EngineConfig { shard, queue_cap, backend: BackendKind::Cpu }).unwrap()
+    }
 
     #[test]
     fn start_and_shutdown() {
         let engine = Engine::start().unwrap();
         let stats = engine.stats().unwrap();
         assert_eq!(stats.resident_models, 0);
+        assert_eq!(stats.shard, 0);
         engine.shutdown();
     }
 
@@ -215,5 +525,58 @@ mod tests {
         let dir = crate::testutil::tempdir("engine-bad");
         assert!(engine.load(&dir).is_err());
         engine.shutdown();
+    }
+
+    #[test]
+    fn cpu_backend_loads_and_infers() {
+        let engine = cpu_engine(3, 64);
+        let dir = testutil::tiny_model_dir("engine-cpu", "tiny-engine", 16, 5);
+        let info = engine.load(&dir).unwrap();
+        assert_eq!(info.id, "tiny-engine");
+        assert_eq!(info.shard, 3);
+        assert_eq!(info.classes, 4);
+
+        let x = Tensor::randn(crate::tensor::Shape::nchw(2, 1, 8, 8), 1, 1.0);
+        let out = engine.infer("tiny-engine", x).unwrap();
+        assert_eq!(out.shape().dims(), &[2, 4]);
+
+        let stats = engine.stats().unwrap();
+        assert_eq!(stats.shard, 3);
+        assert_eq!(stats.executions, 1);
+        assert_eq!(stats.items, 2);
+        assert_eq!(stats.resident_models, 1);
+        assert!(stats.resident_bytes > 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn overloaded_rejection_when_queue_full() {
+        let engine = cpu_engine(1, 1);
+        let dir = testutil::tiny_model_dir("engine-full", "tiny-full", 8, 2);
+        engine.load(&dir).unwrap();
+
+        // Occupy the engine thread (returns once the stall has begun),
+        // then fill the 1-slot admission window with an async submission;
+        // the next admission must be rejected, typed.
+        engine.debug_stall(Duration::from_millis(300)).unwrap();
+        let x = Tensor::zeros(crate::tensor::Shape::nchw(1, 1, 8, 8));
+        let ticket = engine.try_infer_async("tiny-full", x.clone()).unwrap();
+
+        let err = engine.try_infer_async("tiny-full", x).unwrap_err();
+        let overloaded = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+        assert_eq!(overloaded.shard, 1);
+        assert_eq!(overloaded.queue_cap, 1);
+        assert_eq!(overloaded.model, "tiny-full");
+        assert!(err.to_string().contains("overloaded"), "{err}");
+
+        // The admitted request still completes once the stall ends.
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.shape().dims(), &[1, 4]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn backend_kind_names() {
+        assert_eq!(BackendKind::Cpu.name(), "cpu");
     }
 }

@@ -1,19 +1,42 @@
-//! PJRT runtime: loads AOT artifacts (HLO text + DLKW weights) and executes
-//! them from the serving hot path. Python is never involved here.
+//! The execution runtime: engine shards, the engine pool, and model
+//! placement.
 //!
-//! Architecture: the `xla` crate's PJRT handles are raw pointers (`!Send`),
-//! so a dedicated **engine thread** owns the `PjRtClient`, every compiled
-//! executable and the resident weight literals; the rest of the system
-//! talks to it through the cloneable, thread-safe [`EngineHandle`] — the
-//! exact analog of Metal's `MTLCommandQueue` feeding one `MTLDevice`
-//! (paper Fig. 2; see [`api_mapping`] for the full correspondence table).
+//! Execution handles (PJRT clients are raw pointers and `!Send`; the CPU
+//! executor is kept symmetric) are each owned by a dedicated **engine
+//! thread**; the rest of the system talks to a shard through the
+//! cloneable, thread-safe [`EngineHandle`] — the exact analog of Metal's
+//! `MTLCommandQueue` feeding one `MTLDevice` (paper Fig. 2; see
+//! [`api_mapping`] for the full correspondence table).
+//!
+//! Scaling: [`EnginePool`] runs N such shards behind one [`PoolHandle`].
+//! [`Placement`] maps each model to a shard (least-loaded-bytes with
+//! sticky affinity) and every shard's bounded request queue provides
+//! admission control — saturation surfaces as the typed [`Overloaded`]
+//! error rather than unbounded queueing. `DESIGN.md` §3 walks through the
+//! request lifecycle.
+//!
+//! Backends: the `pjrt` feature enables the XLA/PJRT path over the AOT
+//! artifacts; without it every shard runs the in-crate CPU reference
+//! executor over the same model format ([`CpuModel`]).
 
 pub mod api_mapping;
+mod cpu_model;
 mod engine;
+#[cfg(feature = "pjrt")]
 mod literal;
+#[cfg(feature = "pjrt")]
 mod loaded_model;
+mod placement;
+mod pool;
 
 pub use api_mapping::{api_mapping_table, ApiMappingRow};
-pub use engine::{Engine, EngineHandle, EngineStats, ModelInfo};
+pub use cpu_model::CpuModel;
+pub use engine::{
+    BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, InferTicket, ModelInfo,
+};
+#[cfg(feature = "pjrt")]
 pub use literal::{literal_to_tensor, tensor_to_literal};
+#[cfg(feature = "pjrt")]
 pub use loaded_model::LoadedModel;
+pub use placement::{Placement, ShardAssignment};
+pub use pool::{EnginePool, Overloaded, PoolConfig, PoolHandle, PoolStats};

@@ -1,0 +1,195 @@
+//! Model→shard placement for the engine pool.
+//!
+//! Policy: **least-loaded-bytes with model affinity**.
+//!
+//! - A model that is resident stays where it is (its weights are staged on
+//!   that shard's device; moving them would repay the full load cost).
+//! - A model that was resident before keeps its *affinity*: a reload goes
+//!   back to the shard that served it last (warm OS page cache, stable
+//!   shard-local metrics), even across unload/load cycles.
+//! - A brand-new model lands on the shard currently pinning the fewest
+//!   resident weight bytes; ties break toward the lowest shard id for
+//!   determinism.
+//!
+//! [`Placement`] is pure bookkeeping — it never talks to an engine — so the
+//! policy is unit-testable without spawning threads. [`PoolHandle`]
+//! (`runtime/pool.rs`) consults it under a mutex on every load/unload.
+//!
+//! [`PoolHandle`]: super::PoolHandle
+
+use std::collections::BTreeMap;
+
+/// Where a resident model lives and how many weight bytes it pins there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardAssignment {
+    /// Owning shard index (`0..shards`).
+    pub shard: usize,
+    /// Resident weight bytes, as reported by the engine after the load.
+    pub bytes: usize,
+}
+
+/// Placement bookkeeping: which shard owns each model.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    shards: usize,
+    /// Models currently resident: id → (shard, bytes).
+    resident: BTreeMap<String, ShardAssignment>,
+    /// Sticky shard preference for models that were resident before.
+    affinity: BTreeMap<String, usize>,
+}
+
+impl Placement {
+    /// Bookkeeping for a pool of `shards` engines (clamped to at least 1).
+    pub fn new(shards: usize) -> Placement {
+        Placement {
+            shards: shards.max(1),
+            resident: BTreeMap::new(),
+            affinity: BTreeMap::new(),
+        }
+    }
+
+    /// Number of shards this placement spreads over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Decide which shard should host `id`. Pure: does not record anything —
+    /// call [`Placement::commit`] once the load succeeded.
+    pub fn place(&self, id: &str) -> usize {
+        if let Some(a) = self.resident.get(id) {
+            return a.shard;
+        }
+        if let Some(&s) = self.affinity.get(id) {
+            return s;
+        }
+        (0..self.shards)
+            .min_by_key(|&s| (self.bytes_on(s), s))
+            .unwrap_or(0)
+    }
+
+    /// Record a successful load of `id` onto `shard` with `bytes` of
+    /// resident weights. Also pins the model's affinity to that shard.
+    pub fn commit(&mut self, id: &str, shard: usize, bytes: usize) {
+        debug_assert!(shard < self.shards, "shard {shard} out of range");
+        self.resident.insert(id.to_string(), ShardAssignment { shard, bytes });
+        self.affinity.insert(id.to_string(), shard);
+    }
+
+    /// Record an unload. Frees the shard's byte accounting but **keeps the
+    /// affinity**, so a later reload returns to the same shard. Returns the
+    /// shard the model was resident on, if any.
+    pub fn release(&mut self, id: &str) -> Option<usize> {
+        self.resident.remove(id).map(|a| a.shard)
+    }
+
+    /// Drop all state for `id`, including affinity (e.g. the model was
+    /// deleted from the catalog entirely).
+    pub fn forget(&mut self, id: &str) {
+        self.resident.remove(id);
+        self.affinity.remove(id);
+    }
+
+    /// Shard currently holding `id`, if it is resident.
+    pub fn shard_of(&self, id: &str) -> Option<usize> {
+        self.resident.get(id).map(|a| a.shard)
+    }
+
+    /// Total resident weight bytes pinned on `shard`.
+    pub fn bytes_on(&self, shard: usize) -> usize {
+        self.resident.values().filter(|a| a.shard == shard).map(|a| a.bytes).sum()
+    }
+
+    /// Ids of the models resident on `shard` (sorted, deterministic).
+    pub fn resident_on(&self, shard: usize) -> Vec<String> {
+        self.resident
+            .iter()
+            .filter(|(_, a)| a.shard == shard)
+            .map(|(id, _)| id.clone())
+            .collect()
+    }
+
+    /// Number of models resident across the pool.
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_bytes_wins() {
+        let mut p = Placement::new(3);
+        p.commit("a", 0, 1000);
+        p.commit("b", 1, 10);
+        // Shard 2 holds nothing; a new model must land there.
+        assert_eq!(p.place("c"), 2);
+        p.commit("c", 2, 500);
+        // Now shard 1 (10 B) is the least loaded.
+        assert_eq!(p.place("d"), 1);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_shard() {
+        let p = Placement::new(4);
+        assert_eq!(p.place("anything"), 0);
+    }
+
+    #[test]
+    fn resident_model_stays_put() {
+        let mut p = Placement::new(2);
+        p.commit("m", 1, 100);
+        p.commit("heavy", 0, 1); // shard 0 is now lighter…
+        assert_eq!(p.place("m"), 1); // …but `m` is resident on 1 and stays.
+    }
+
+    #[test]
+    fn affinity_survives_unload() {
+        let mut p = Placement::new(2);
+        p.commit("m", 1, 100);
+        assert_eq!(p.release("m"), Some(1));
+        assert_eq!(p.shard_of("m"), None);
+        // Even though shard 0 is emptier, the reload goes back to shard 1.
+        assert_eq!(p.place("m"), 1);
+    }
+
+    #[test]
+    fn forget_clears_affinity() {
+        let mut p = Placement::new(2);
+        p.commit("m", 1, 100);
+        p.commit("other", 1, 50);
+        p.forget("m");
+        // No affinity left: least-loaded (shard 0) wins again.
+        assert_eq!(p.place("m"), 0);
+    }
+
+    #[test]
+    fn byte_accounting_per_shard() {
+        let mut p = Placement::new(2);
+        p.commit("a", 0, 100);
+        p.commit("b", 0, 50);
+        p.commit("c", 1, 10);
+        assert_eq!(p.bytes_on(0), 150);
+        assert_eq!(p.bytes_on(1), 10);
+        assert_eq!(p.resident_on(0), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(p.resident_count(), 3);
+        p.release("b");
+        assert_eq!(p.bytes_on(0), 100);
+    }
+
+    #[test]
+    fn zero_shards_clamped() {
+        let p = Placement::new(0);
+        assert_eq!(p.shards(), 1);
+        assert_eq!(p.place("m"), 0);
+    }
+
+    #[test]
+    fn recommit_updates_bytes() {
+        let mut p = Placement::new(2);
+        p.commit("m", 0, 100);
+        p.commit("m", 0, 200); // reload with different weights
+        assert_eq!(p.bytes_on(0), 200);
+    }
+}

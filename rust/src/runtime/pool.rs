@@ -1,0 +1,387 @@
+//! The engine pool: N engine shards behind one handle.
+//!
+//! The seed reproduction funnelled every request for every model through a
+//! single engine thread — one `MTLCommandQueue` for the whole app. This
+//! module is the scaling seam: [`EnginePool`] starts N shards (default:
+//! available parallelism), [`Placement`] assigns each model to a shard
+//! (least-loaded-bytes with affinity, so a model's batches always hit the
+//! shard holding its staged weights), and each shard's bounded queue gives
+//! per-shard admission control — a saturated shard rejects with the typed
+//! [`Overloaded`] error instead of queueing without bound.
+//!
+//! ```text
+//!                    ┌─ shard 0 (engine thread, models A,C)
+//!  PoolHandle ──────►├─ shard 1 (engine thread, models B)
+//!   placement lookup └─ shard 2 (engine thread, models D,E)
+//! ```
+//!
+//! Everything above this layer (coordinator, cache, CLI) takes a
+//! [`PoolHandle`]; a single-engine deployment is just
+//! [`PoolHandle::single`].
+
+use super::engine::{BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, ModelInfo};
+use super::placement::Placement;
+use crate::metrics::PoolUtilization;
+use crate::model::{Manifest, ModelFiles};
+use crate::tensor::Tensor;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Typed admission-control rejection: the target shard's request queue is
+/// at capacity. Callers should shed load or retry with backoff; the
+/// request was **not** queued.
+///
+/// Travels inside [`crate::Result`]'s error type; recover it with
+/// `err.downcast_ref::<Overloaded>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Model the request addressed.
+    pub model: String,
+    /// Shard that rejected the request.
+    pub shard: usize,
+    /// The shard's queue bound that was hit.
+    pub queue_cap: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "model `{}` overloaded: shard {} queue is at capacity ({}); \
+             request rejected (retry with backoff)",
+            self.model, self.shard, self.queue_cap
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Engine-pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Number of engine shards. `0` means "auto": the machine's available
+    /// parallelism.
+    pub shards: usize,
+    /// Per-shard request-queue bound (admission control).
+    pub queue_cap: usize,
+    /// Execution backend for every shard.
+    pub backend: BackendKind,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { shards: 0, queue_cap: 1024, backend: BackendKind::default() }
+    }
+}
+
+impl PoolConfig {
+    /// Resolve `shards == 0` to the machine's available parallelism.
+    pub fn resolved_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// Pool statistics: one [`EngineStats`] per shard.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Per-shard snapshots, indexed by shard id.
+    pub shards: Vec<EngineStats>,
+}
+
+impl PoolStats {
+    /// Total batches executed across shards.
+    pub fn total_executions(&self) -> u64 {
+        self.shards.iter().map(|s| s.executions).sum()
+    }
+
+    /// Total items (batch rows) executed across shards.
+    pub fn total_items(&self) -> u64 {
+        self.shards.iter().map(|s| s.items).sum()
+    }
+
+    /// Total weight bytes resident across shards.
+    pub fn total_resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.resident_bytes).sum()
+    }
+
+    /// Condense into the metrics-layer utilization snapshot.
+    pub fn utilization(&self) -> PoolUtilization {
+        PoolUtilization {
+            executions: self.shards.iter().map(|s| s.executions).collect(),
+            items: self.shards.iter().map(|s| s.items).collect(),
+            resident_models: self.shards.iter().map(|s| s.resident_models).collect(),
+            resident_bytes: self.shards.iter().map(|s| s.resident_bytes).collect(),
+        }
+    }
+}
+
+/// The engine pool. [`EnginePool::start`] returns the cloneable
+/// [`PoolHandle`]; the pool itself holds no state beyond its shards.
+pub struct EnginePool;
+
+impl EnginePool {
+    /// Start `config.resolved_shards()` engine shards and return the pool
+    /// handle. Each shard owns its backend client on its own thread.
+    pub fn start(config: PoolConfig) -> crate::Result<PoolHandle> {
+        let shards = config.resolved_shards();
+        let mut handles = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            handles.push(Engine::start_with(EngineConfig {
+                shard,
+                queue_cap: config.queue_cap,
+                backend: config.backend,
+            })?);
+        }
+        Ok(PoolHandle {
+            shards: Arc::new(handles),
+            placement: Arc::new(Mutex::new(Placement::new(shards))),
+        })
+    }
+}
+
+/// Cloneable, thread-safe handle to an engine pool: placement-aware
+/// `load`/`unload`/`infer` plus aggregate stats.
+#[derive(Clone)]
+pub struct PoolHandle {
+    shards: Arc<Vec<EngineHandle>>,
+    placement: Arc<Mutex<Placement>>,
+}
+
+impl PoolHandle {
+    /// Wrap one already-running engine as a single-shard pool. This is how
+    /// legacy single-engine call sites (and small deployments) plug into
+    /// the pool-shaped serving stack.
+    pub fn single(engine: EngineHandle) -> PoolHandle {
+        PoolHandle {
+            shards: Arc::new(vec![engine]),
+            placement: Arc::new(Mutex::new(Placement::new(1))),
+        }
+    }
+
+    /// Number of shards in the pool.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct handle to one shard (for shard-local diagnostics).
+    pub fn shard_handle(&self, shard: usize) -> &EngineHandle {
+        &self.shards[shard]
+    }
+
+    /// Which shard would host `id` right now (affinity or least-loaded) —
+    /// a pure preview; nothing is recorded.
+    pub fn placement_preview(&self, id: &str) -> usize {
+        self.placement.lock().unwrap().place(id)
+    }
+
+    /// Shard currently holding `id`, if resident.
+    pub fn shard_of(&self, id: &str) -> Option<usize> {
+        self.placement.lock().unwrap().shard_of(id)
+    }
+
+    /// Load a model directory onto the shard the placement policy picks
+    /// (resident shard, then sticky affinity, then least-loaded-bytes).
+    pub fn load(&self, dir: impl Into<PathBuf>) -> crate::Result<ModelInfo> {
+        let dir = dir.into();
+        // Peek the manifest for the model id and a weight-byte estimate so
+        // placement can decide before the heavyweight load runs on the
+        // chosen shard's thread.
+        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
+        let estimate = manifest.arch.param_count().map(|p| p * 4).unwrap_or(0);
+        // Decide and *reserve* under one lock acquisition: the estimate is
+        // committed immediately so concurrent loads see each other's
+        // in-flight placements instead of all picking the same
+        // least-loaded shard.
+        let shard = {
+            let mut p = self.placement.lock().unwrap();
+            let shard = p.place(&manifest.id);
+            p.commit(&manifest.id, shard, estimate);
+            shard
+        };
+        match self.shards[shard].load(dir) {
+            Ok(info) => {
+                self.placement.lock().unwrap().commit(&info.id, shard, info.weight_bytes);
+                Ok(info)
+            }
+            Err(e) => {
+                // Roll the reservation back (affinity kept: a retry of the
+                // same model landing on the same shard is harmless).
+                self.placement.lock().unwrap().release(&manifest.id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Unload a model from its shard. Keeps the model's shard affinity so
+    /// a reload returns to the same shard (use
+    /// [`PoolHandle::forget_affinity`] afterwards for capacity-driven
+    /// evictions, where stickiness would pin reloads to the full shard).
+    pub fn unload(&self, id: &str) -> crate::Result<()> {
+        let shard = self
+            .shard_of(id)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not loaded on any shard"))?;
+        self.shards[shard].unload(id)?;
+        self.placement.lock().unwrap().release(id);
+        Ok(())
+    }
+
+    /// Drop a model's sticky shard affinity (and residency bookkeeping, if
+    /// any). A later load places it fresh by least-loaded-bytes. This is
+    /// the right call after a *capacity eviction*: keeping affinity there
+    /// would reload the victim onto the very shard that just ran out of
+    /// room while other shards sit idle.
+    pub fn forget_affinity(&self, id: &str) {
+        self.placement.lock().unwrap().forget(id);
+    }
+
+    /// Admission-controlled inference routed to the model's shard. Returns
+    /// the output and the shard that executed it; rejects with a typed
+    /// [`Overloaded`] error when the shard's queue is full.
+    pub fn infer(&self, id: &str, input: Tensor) -> crate::Result<(Tensor, usize)> {
+        let shard = self
+            .shard_of(id)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not loaded on any shard"))?;
+        let out = self.shards[shard].try_infer(id, input)?;
+        Ok((out, shard))
+    }
+
+    /// Per-shard statistics.
+    pub fn stats(&self) -> crate::Result<PoolStats> {
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for h in self.shards.iter() {
+            shards.push(h.stats()?);
+        }
+        Ok(PoolStats { shards })
+    }
+
+    /// Pool utilization snapshot (per-shard executions/items/residency).
+    pub fn utilization(&self) -> crate::Result<PoolUtilization> {
+        Ok(self.stats()?.utilization())
+    }
+
+    /// Shut down every shard (optional; dropping all handles also stops
+    /// them).
+    pub fn shutdown(&self) {
+        for h in self.shards.iter() {
+            h.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    fn cpu_pool(shards: usize, queue_cap: usize) -> PoolHandle {
+        EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu }).unwrap()
+    }
+
+    #[test]
+    fn auto_shards_resolves_positive() {
+        assert!(PoolConfig::default().resolved_shards() >= 1);
+        assert_eq!(PoolConfig { shards: 3, ..Default::default() }.resolved_shards(), 3);
+    }
+
+    #[test]
+    fn models_spread_across_shards() {
+        let pool = cpu_pool(2, 64);
+        let a = testutil::tiny_model_dir("pool-a", "model-a", 16, 1);
+        let b = testutil::tiny_model_dir("pool-b", "model-b", 16, 2);
+        let ia = pool.load(&a).unwrap();
+        let ib = pool.load(&b).unwrap();
+        // Two equal-size models on an empty 2-shard pool must not share.
+        assert_ne!(ia.shard, ib.shard);
+        assert_eq!(pool.shard_of("model-a"), Some(ia.shard));
+        assert_eq!(pool.shard_of("model-b"), Some(ib.shard));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn infer_routes_to_owning_shard() {
+        let pool = cpu_pool(2, 64);
+        let a = testutil::tiny_model_dir("pool-route", "model-r", 16, 3);
+        let info = pool.load(&a).unwrap();
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 4, 1.0);
+        let (out, shard) = pool.infer("model-r", x).unwrap();
+        assert_eq!(shard, info.shard);
+        assert_eq!(out.shape().dims(), &[1, 4]);
+        // The executing shard's counters moved; the other shard's did not.
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.shards[shard].executions, 1);
+        assert_eq!(stats.shards[1 - shard].executions, 0);
+        assert_eq!(stats.total_executions(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn infer_unknown_model_errors() {
+        let pool = cpu_pool(2, 8);
+        let x = crate::tensor::Tensor::zeros(&[1, 1][..]);
+        let e = pool.infer("nope", x).unwrap_err().to_string();
+        assert!(e.contains("not loaded on any shard"), "{e}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn unload_keeps_affinity_for_reload() {
+        let pool = cpu_pool(2, 64);
+        let a = testutil::tiny_model_dir("pool-aff-a", "aff-a", 8, 1);
+        let b = testutil::tiny_model_dir("pool-aff-b", "aff-b", 64, 2);
+        let ia = pool.load(&a).unwrap();
+        pool.load(&b).unwrap();
+        pool.unload("aff-a").unwrap();
+        assert_eq!(pool.shard_of("aff-a"), None);
+        // aff-a's old shard is now empty, but even if it weren't the
+        // reload must return to it by affinity.
+        assert_eq!(pool.placement_preview("aff-a"), ia.shard);
+        let again = pool.load(&a).unwrap();
+        assert_eq!(again.shard, ia.shard);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn forget_affinity_allows_rebalance() {
+        let pool = cpu_pool(2, 64);
+        let a = testutil::tiny_model_dir("pool-fg-a", "fg-a", 8, 1); // small
+        let b = testutil::tiny_model_dir("pool-fg-b", "fg-b", 32, 2); // mid
+        let c = testutil::tiny_model_dir("pool-fg-c", "fg-c", 64, 3); // big
+        assert_eq!(pool.load(&a).unwrap().shard, 0);
+        assert_eq!(pool.load(&b).unwrap().shard, 1);
+        assert_eq!(pool.load(&c).unwrap().shard, 0); // shard 0 still lighter
+        pool.unload("fg-a").unwrap();
+        // Sticky: would return to shard 0 even though it is now heavier.
+        assert_eq!(pool.placement_preview("fg-a"), 0);
+        pool.forget_affinity("fg-a");
+        // Fresh placement: least-loaded-bytes now picks shard 1.
+        assert_eq!(pool.placement_preview("fg-a"), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn overloaded_error_display_is_actionable() {
+        let e = Overloaded { model: "m".into(), shard: 2, queue_cap: 8 };
+        let text = e.to_string();
+        assert!(text.contains("overloaded") && text.contains("shard 2"), "{text}");
+    }
+
+    #[test]
+    fn single_wraps_one_engine() {
+        let engine = Engine::start_with(EngineConfig {
+            shard: 0,
+            queue_cap: 16,
+            backend: BackendKind::Cpu,
+        })
+        .unwrap();
+        let pool = PoolHandle::single(engine);
+        assert_eq!(pool.shard_count(), 1);
+        let dir = testutil::tiny_model_dir("pool-single", "single-m", 8, 9);
+        let info = pool.load(&dir).unwrap();
+        assert_eq!(info.shard, 0);
+        pool.shutdown();
+    }
+}

@@ -4,9 +4,11 @@
 //! this module carries the pieces the test-suite needs.)
 
 mod gen;
+mod model_fixture;
 mod rng;
 
 pub use gen::Gen;
+pub use model_fixture::{tiny_cnn, tiny_model_dir, write_model_dir};
 pub use rng::XorShiftRng;
 
 use std::path::PathBuf;

@@ -1,0 +1,82 @@
+//! Synthetic model-directory fixtures: a manifest + randomly initialised
+//! weights written in the native on-disk format, loadable by the CPU
+//! backend without any AOT artifacts. Pool/placement tests and the
+//! sharding bench use these so they run in any environment.
+
+use crate::model::{Architecture, LayerKind, Manifest, ModelFiles, WeightStore};
+use crate::tensor::Tensor;
+use std::path::Path;
+
+/// Write a complete model directory (`manifest.json` + `weights.dlkw`,
+/// integrity hash filled in) for `arch` with random weights.
+pub fn write_model_dir(
+    dir: &Path,
+    id: &str,
+    arch: Architecture,
+    seed: u64,
+    aot_batches: &[usize],
+) -> crate::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut ws = WeightStore::new();
+    for (i, (name, shape)) in arch.parameters()?.iter().enumerate() {
+        let fan_in: usize = shape.dims().iter().skip(1).product::<usize>().max(1);
+        let scale = (2.0 / fan_in as f32).sqrt();
+        ws.insert(name, Tensor::randn(shape.clone(), seed.wrapping_add(i as u64), scale));
+    }
+    let bytes = ws.to_bytes();
+    let files = ModelFiles::new(dir);
+    std::fs::write(files.weights(), &bytes)?;
+    let mut manifest = Manifest::new(id, arch);
+    manifest.description = format!("synthetic fixture `{id}`");
+    manifest.aot_batches = aot_batches.to_vec();
+    manifest.weights_sha256 = Some(crate::store::sha256_hex(&bytes));
+    manifest.save(&files.manifest())?;
+    Ok(())
+}
+
+/// A small conv-net architecture for fixtures. `width` scales the dense
+/// layer so different fixtures get visibly different weight footprints
+/// (placement tests rely on that).
+pub fn tiny_cnn(name: &str, width: usize) -> Architecture {
+    let mut a = Architecture::new(name, &[1, 8, 8]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 4, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc1", LayerKind::Dense { out: width });
+    a.push("relu2", LayerKind::Relu);
+    a.push("fc2", LayerKind::Dense { out: 4 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// Write a `tiny_cnn` fixture into a fresh temp dir and return its path.
+pub fn tiny_model_dir(tag: &str, id: &str, width: usize, seed: u64) -> std::path::PathBuf {
+    let dir = super::tempdir(tag);
+    write_model_dir(&dir, id, tiny_cnn(id, width), seed, &[1, 4, 8])
+        .expect("write model fixture");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    #[test]
+    fn fixture_round_trips_through_loader() {
+        let dir = tiny_model_dir("fixture-rt", "tiny-a", 16, 3);
+        let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+        assert_eq!(manifest.id, "tiny-a");
+        assert_eq!(manifest.aot_batches, vec![1, 4, 8]);
+        let ws = WeightStore::load(&dir.join("weights.dlkw")).unwrap();
+        ws.validate(&manifest.arch).unwrap();
+    }
+
+    #[test]
+    fn width_changes_weight_bytes() {
+        let narrow = tiny_cnn("n", 8);
+        let wide = tiny_cnn("w", 64);
+        assert!(wide.param_count().unwrap() > narrow.param_count().unwrap());
+    }
+}

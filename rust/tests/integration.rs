@@ -1,8 +1,11 @@
-//! Integration tests over the real AOT artifacts: PJRT engine, coordinator,
+//! Integration tests over the real AOT artifacts: engine, coordinator,
 //! model cache, store round-trips, end-to-end accuracy.
 //!
-//! These need `make artifacts` to have run (skipped otherwise with a clear
-//! panic message naming the command).
+//! These need the trained artifacts under `artifacts/models/` (produced by
+//! `python python/compile/aot.py`, which needs JAX). Environments without
+//! them — CI included — **skip** each test with a clear message instead of
+//! failing; the artifact-free serving stack is covered by the unit tests
+//! and `rust/tests/sharding.rs`.
 
 use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use deeplearningkit::runtime::Engine;
@@ -10,18 +13,32 @@ use deeplearningkit::tensor::{Shape, Tensor};
 use deeplearningkit::{artifacts_dir, cache, data, model, nn, store, testutil};
 use std::time::Duration;
 
+/// Whether the trained AOT artifacts are present in this checkout.
+fn artifacts_present() -> bool {
+    artifacts_dir().join("models").join("lenet-mnist").join("manifest.json").exists()
+}
+
+/// Skip (early-return) the calling test when artifacts are missing,
+/// logging why so `cargo test -- --nocapture` shows the gate.
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!(
+                "skipping (artifacts missing under {}; run `python python/compile/aot.py`)",
+                artifacts_dir().display()
+            );
+            return;
+        }
+    };
+}
+
 fn model_dir(id: &str) -> std::path::PathBuf {
-    let dir = artifacts_dir().join("models").join(id);
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing ({}) — run `make artifacts` first",
-        dir.display()
-    );
-    dir
+    artifacts_dir().join("models").join(id)
 }
 
 #[test]
 fn engine_loads_and_infers_lenet() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     let info = engine.load(model_dir("lenet-mnist")).unwrap();
     assert_eq!(info.id, "lenet-mnist");
@@ -40,10 +57,12 @@ fn engine_loads_and_infers_lenet() {
 }
 
 #[test]
-fn pjrt_matches_cpu_reference_backend() {
-    // The strongest cross-validation in the repo: the AOT-compiled JAX
-    // graph (Pallas kernels -> HLO -> PJRT) and the from-scratch rust CPU
-    // backend must produce the same probabilities on the same weights.
+fn engine_matches_cpu_reference_backend() {
+    // The strongest cross-validation in the repo: the engine's backend
+    // (PJRT over the AOT-compiled JAX graph when built with `pjrt`, the
+    // CPU executor otherwise) and the from-scratch rust CPU backend must
+    // produce the same probabilities on the same weights.
+    require_artifacts!();
     let dir = model_dir("lenet-mnist");
     let manifest = model::Manifest::load(&dir.join("manifest.json")).unwrap();
     let weights = model::WeightStore::load(&dir.join("weights.dlkw")).unwrap();
@@ -53,14 +72,15 @@ fn pjrt_matches_cpu_reference_backend() {
     engine.load(&dir).unwrap();
 
     let batch = data::glyphs(8, 23);
-    let pjrt_out = engine.infer("lenet-mnist", batch.inputs.clone()).unwrap();
+    let engine_out = engine.infer("lenet-mnist", batch.inputs.clone()).unwrap();
     let cpu_out = cpu.forward(&batch.inputs).unwrap();
-    testutil::assert_allclose(pjrt_out.data(), cpu_out.data(), 1e-3, 1e-4);
+    testutil::assert_allclose(engine_out.data(), cpu_out.data(), 1e-3, 1e-4);
     engine.shutdown();
 }
 
 #[test]
 fn trained_model_accuracy_on_held_out_data() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     engine.load(model_dir("lenet-mnist")).unwrap();
     let batch = data::glyphs(32, 99);
@@ -75,6 +95,7 @@ fn trained_model_accuracy_on_held_out_data() {
 
 #[test]
 fn char_cnn_serves_and_classifies() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     let info = engine.load(model_dir("char-cnn")).unwrap();
     assert_eq!(info.classes, 4);
@@ -89,6 +110,7 @@ fn char_cnn_serves_and_classifies() {
 #[test]
 fn nin_runs_at_batch_1() {
     // The paper's E1 model: NIN-CIFAR10, batch 1.
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     let info = engine.load(model_dir("nin-cifar10")).unwrap();
     assert_eq!(info.classes, 10);
@@ -104,6 +126,7 @@ fn nin_runs_at_batch_1() {
 fn batch_padding_round_trip() {
     // Infer with batch sizes that don't match any AOT size: the runtime
     // pads and slices; results must equal the batch-1 results.
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     engine.load(model_dir("lenet-mnist")).unwrap();
     let batch = data::glyphs(3, 41); // pads to AOT batch 4
@@ -129,6 +152,7 @@ fn batch_padding_round_trip() {
 
 #[test]
 fn oversized_batch_rejected() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     engine.load(model_dir("lenet-mnist")).unwrap();
     let batch = data::glyphs(64, 5); // largest AOT batch is 32
@@ -139,6 +163,7 @@ fn oversized_batch_rejected() {
 
 #[test]
 fn coordinator_serves_concurrent_clients() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     let mut coord = Coordinator::new(
         engine,
@@ -169,6 +194,7 @@ fn coordinator_serves_concurrent_clients() {
         }
         for (i, t) in tickets {
             let r = t.wait().unwrap();
+            assert_eq!(r.shard, 0, "single-engine coordinator serves from shard 0");
             if r.predicted == batch.labels[i] {
                 correct += 1;
             }
@@ -186,6 +212,7 @@ fn coordinator_serves_concurrent_clients() {
 
 #[test]
 fn coordinator_retire_model() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     let mut coord = Coordinator::new(engine, CoordinatorConfig::default());
     coord.serve_model(model_dir("lenet-mnist")).unwrap();
@@ -201,6 +228,7 @@ fn coordinator_retire_model() {
 
 #[test]
 fn model_cache_eviction_under_budget() {
+    require_artifacts!();
     let engine = Engine::start().unwrap();
     // Budget fits lenet (~1.7 MB) + char-cnn (~1.3 MB) but not nin (~3.9 MB) too.
     let mut mc = cache::ModelCache::new(engine, 6_000_000, cache::PolicyKind::Lru);
@@ -238,6 +266,7 @@ fn model_cache_eviction_under_budget() {
 fn store_publish_fetch_load_serve_round_trip() {
     // Full App-Store loop: package artifacts -> publish -> fetch over the
     // simulated network -> load the fetched copy -> infer.
+    require_artifacts!();
     let root = testutil::tempdir("e2e-registry");
     let registry = store::Registry::open(&root).unwrap();
     let pkg = store::Package::from_model_dir(&model_dir("lenet-mnist")).unwrap();
@@ -262,6 +291,7 @@ fn store_publish_fetch_load_serve_round_trip() {
 fn tampered_weights_rejected_at_load() {
     // Integrity: flip a byte in the weights of a copied model dir; the
     // engine must refuse to load it.
+    require_artifacts!();
     let dir = testutil::tempdir("tampered-model");
     let src = model_dir("lenet-mnist");
     for f in std::fs::read_dir(&src).unwrap() {

@@ -1,0 +1,179 @@
+//! Integration tests for the sharded serving path: engine pool, placement,
+//! admission control, and the coordinator on top — all on synthetic
+//! CPU-backend model fixtures, so they run in any environment (no AOT
+//! artifacts needed).
+
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::runtime::{BackendKind, EnginePool, Overloaded, PoolConfig, PoolHandle};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::testutil;
+use std::time::Duration;
+
+fn cpu_pool(shards: usize, queue_cap: usize) -> PoolHandle {
+    EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu }).unwrap()
+}
+
+/// One per-item input (no batch dimension — the coordinator's submit
+/// convention; the batcher stacks items into the batch dim itself).
+fn input(seed: u64) -> Tensor {
+    Tensor::randn(Shape::new(&[1usize, 8, 8]), seed, 1.0)
+}
+
+#[test]
+fn coordinator_spreads_models_over_shards() {
+    let pool = cpu_pool(2, 256);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+        },
+    );
+    let mut infos = Vec::new();
+    for (id, seed) in [("s-a", 1u64), ("s-b", 2), ("s-c", 3), ("s-d", 4)] {
+        let dir = testutil::tiny_model_dir("shard-coord", id, 16, seed);
+        infos.push(coord.serve_model(&dir).unwrap());
+    }
+    // Equal-size models must alternate onto the two shards.
+    let on_shard_0 = infos.iter().filter(|i| i.shard == 0).count();
+    assert_eq!(on_shard_0, 2, "placement: {:?}", infos.iter().map(|i| i.shard).collect::<Vec<_>>());
+
+    // Every model answers, and the executing shard is surfaced and matches
+    // the placement table.
+    for (k, info) in infos.iter().enumerate() {
+        let r = coord.infer(&info.id, input(10 + k as u64)).unwrap();
+        assert_eq!(r.shard, info.shard);
+        assert_eq!(pool.shard_of(&info.id), Some(info.shard));
+        assert_eq!(r.output.shape().dims(), &[4]);
+    }
+    // Both shards did work.
+    let util = pool.utilization().unwrap();
+    assert_eq!(util.shard_count(), 2);
+    assert!(util.executions.iter().all(|&e| e > 0), "{:?}", util.executions);
+    assert!((util.shares().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    pool.shutdown();
+}
+
+#[test]
+fn overload_sheds_with_typed_error_instead_of_blocking() {
+    let pool = cpu_pool(1, 256);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 4,
+            },
+        },
+    );
+    let dir = testutil::tiny_model_dir("shard-over", "over-m", 16, 9);
+    coord.serve_model(&dir).unwrap();
+
+    // Stall the only shard (returns once the stall has begun) so batches
+    // back up deterministically, then burst far past every queue bound.
+    pool.shard_handle(0).debug_stall(Duration::from_millis(400)).unwrap();
+
+    let mut tickets = Vec::new();
+    let mut rejected_at_submit = 0usize;
+    for i in 0..32u64 {
+        match coord.submit("over-m", input(i)) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                let o = e.downcast_ref::<Overloaded>().expect("typed Overloaded at submit");
+                assert_eq!(o.model, "over-m");
+                rejected_at_submit += 1;
+            }
+        }
+    }
+    let mut completed = 0usize;
+    let mut rejected_in_queue = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                assert_eq!(r.shard, 0);
+                completed += 1;
+            }
+            Err(e) => {
+                e.downcast_ref::<Overloaded>().expect("typed Overloaded from batcher");
+                rejected_in_queue += 1;
+            }
+        }
+    }
+    assert!(completed >= 1, "admitted requests must complete after the stall");
+    assert!(
+        rejected_at_submit + rejected_in_queue >= 1,
+        "a 32-request burst past queue_cap 4 must shed load"
+    );
+    assert_eq!(completed + rejected_at_submit + rejected_in_queue, 32);
+    let stats = coord.stats();
+    assert_eq!(stats.rejected as usize, rejected_at_submit + rejected_in_queue);
+    pool.shutdown();
+}
+
+#[test]
+fn retire_and_reserve_returns_to_affinity_shard() {
+    let pool = cpu_pool(2, 64);
+    let mut coord = Coordinator::over_pool(pool.clone(), CoordinatorConfig::default());
+    let dir_a = testutil::tiny_model_dir("shard-ret-a", "ret-a", 8, 1);
+    let dir_b = testutil::tiny_model_dir("shard-ret-b", "ret-b", 64, 2);
+    let ia = coord.serve_model(&dir_a).unwrap();
+    coord.serve_model(&dir_b).unwrap();
+
+    coord.retire_model("ret-a").unwrap();
+    assert!(coord.infer("ret-a", input(1)).is_err());
+    assert_eq!(pool.shard_of("ret-a"), None);
+
+    // Re-serving must return to the shard that held the weights before,
+    // even though the other shard now has fewer resident bytes.
+    let again = coord.serve_model(&dir_a).unwrap();
+    assert_eq!(again.shard, ia.shard);
+    let r = coord.infer("ret-a", input(2)).unwrap();
+    assert_eq!(r.shard, ia.shard);
+    pool.shutdown();
+}
+
+#[test]
+fn concurrent_clients_across_sharded_models() {
+    // Smoke the full stack under concurrency: 4 models on 2 shards, 4
+    // client threads each hammering one model.
+    let pool = cpu_pool(2, 256);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+        },
+    );
+    let ids = ["cc-a", "cc-b", "cc-c", "cc-d"];
+    for (k, id) in ids.iter().enumerate() {
+        let dir = testutil::tiny_model_dir("shard-cc", id, 16, 20 + k as u64);
+        coord.serve_model(&dir).unwrap();
+    }
+    let coord = std::sync::Arc::new(coord);
+    let per_client = 16usize;
+    std::thread::scope(|scope| {
+        for (k, id) in ids.iter().enumerate() {
+            let coord = coord.clone();
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let r = coord.infer(id, input((k * 100 + i) as u64)).unwrap();
+                    assert_eq!(r.output.shape().dims(), &[4]);
+                }
+            });
+        }
+    });
+    let stats = coord.stats();
+    assert_eq!(stats.requests, (ids.len() * per_client) as u64);
+    assert_eq!(stats.rejected, 0);
+    let util = pool.utilization().unwrap();
+    assert!(util.total_executions() as usize >= ids.len());
+    assert!(util.executions.iter().all(|&e| e > 0), "both shards must execute");
+    pool.shutdown();
+}

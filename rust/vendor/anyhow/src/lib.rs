@@ -1,0 +1,211 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! This build environment has no network access, so the repository vendors
+//! the small slice of the `anyhow` API the codebase actually uses: the
+//! [`Error`] type, the [`Result`] alias, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. The implementation is original (not copied from the
+//! upstream crate) and intentionally minimal:
+//!
+//! - `Error` wraps either a formatted message or a boxed
+//!   `std::error::Error`, so `?` works on `io::Error` & friends and typed
+//!   errors (e.g. the runtime's `Overloaded` rejection) survive for
+//!   [`Error::downcast_ref`].
+//! - No backtraces, no `context()` chaining — add them here if a future PR
+//!   needs them, or swap this path dependency for the real crates.io
+//!   `anyhow` once builds may touch the network.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in alias matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: either a formatted message or a wrapped typed error.
+pub struct Error {
+    inner: Inner,
+}
+
+enum Inner {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` produces).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { inner: Inner::Msg(message.to_string()) }
+    }
+
+    /// Wrap a typed error, preserving it for [`Error::downcast_ref`].
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Inner::Boxed(Box::new(error)) }
+    }
+
+    /// Borrow the wrapped error as `E`, if this error wraps one.
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: StdError + 'static,
+    {
+        match &self.inner {
+            Inner::Msg(_) => None,
+            Inner::Boxed(boxed) => boxed.downcast_ref::<E>(),
+        }
+    }
+
+    /// Whether this error wraps a value of type `E`.
+    pub fn is<E>(&self) -> bool
+    where
+        E: StdError + 'static,
+    {
+        self.downcast_ref::<E>().is_some()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            Inner::Msg(message) => f.write_str(message),
+            Inner::Boxed(error) => {
+                write!(f, "{error}")?;
+                // `{:#}` renders the source chain, like upstream anyhow.
+                if f.alternate() {
+                    let mut source = error.source();
+                    while let Some(cause) = source {
+                        write!(f, ": {cause}")?;
+                        source = cause.source();
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from the arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: `{}`",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl StdError for Typed {}
+
+    #[test]
+    fn message_formatting() {
+        let n = 3;
+        let e = anyhow!("bad count {n}");
+        assert_eq!(e.to_string(), "bad count 3");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn inner() -> Result<()> {
+            std::fs::read("/definitely/not/a/real/path/i/hope")?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.is::<std::io::Error>());
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x % 2 == 0);
+            Ok(())
+        }
+        assert!(f(1).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn downcast_typed_errors() {
+        let e = Error::new(Typed(9));
+        assert_eq!(e.to_string(), "typed error 9");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(9)));
+        assert!(!e.is::<std::io::Error>());
+        // Message errors carry no type.
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
+    }
+}
