@@ -1,0 +1,214 @@
+//! E11 — over-the-air model delivery: cold-start-to-first-inference vs
+//! compression plan × simulated bandwidth.
+//!
+//! The paper's §2 "App Store for Deep Learning Models" only pays off if a
+//! device can go from "a new model version exists" to "first prediction"
+//! fast. This experiment publishes the same LeNet-class model under three
+//! wire plans (raw f32, Deep-Compression at the published settings, and a
+//! gentler plan) and pulls each over three simulated links (Wi-Fi, LTE,
+//! 3G), reporting every leg of the delivery: modeled fetch, verify,
+//! decompress, engine load, first inference — the E11 table.
+//!
+//! A second segment demonstrates the zero-downtime hot-swap: a coordinator
+//! serves closed-loop traffic while v2 is published and swapped in;
+//! in-flight requests on v1 complete, new requests hit v2, and the bench
+//! asserts **zero failed requests** across the update.
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::compression::StagePlan;
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::metrics::{fmt_bytes, Table};
+use deeplearningkit::model::{lenet, Manifest, WeightStore};
+use deeplearningkit::runtime::{BackendKind, EnginePool, PoolConfig};
+use deeplearningkit::store::{deploy, Registry, SimulatedNetwork, WirePlan};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{data, testutil};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn lenet_weights(seed: u64) -> WeightStore {
+    let arch = lenet();
+    let mut ws = WeightStore::new();
+    for (i, (name, shape)) in arch.parameters().unwrap().iter().enumerate() {
+        ws.insert(name, Tensor::randn(shape.clone(), seed + i as u64, 0.1));
+    }
+    ws
+}
+
+fn probe() -> Tensor {
+    let batch = data::glyphs(1, 424_242);
+    Tensor::new(Shape::new(&[1usize, 1, 28, 28]), batch.inputs.data().to_vec()).unwrap()
+}
+
+fn main() {
+    bench_header(
+        "E11 (model delivery)",
+        "OTA cold-start-to-first-inference vs compression plan x bandwidth",
+    );
+
+    let plans: [(&str, WirePlan); 3] = [
+        ("raw-f32", WirePlan::Raw),
+        ("deep-compress", WirePlan::Compressed(StagePlan::default())),
+        (
+            "gentle",
+            WirePlan::Compressed(StagePlan {
+                conv_prune: 0.3,
+                dense_prune: 0.5,
+                conv_bits: 8,
+                dense_bits: 8,
+            }),
+        ),
+    ];
+    let networks: [(&str, fn() -> SimulatedNetwork); 3] = [
+        ("wifi", SimulatedNetwork::wifi),
+        ("lte", SimulatedNetwork::lte),
+        ("3g", SimulatedNetwork::three_g),
+    ];
+
+    // Publish each plan as its own model id (one version each).
+    let registry_root = testutil::tempdir("fig-delivery-registry");
+    let registry = Registry::open(&registry_root).expect("open registry");
+    let ws = lenet_weights(11_000);
+    let mut published = Vec::new();
+    for (plan_name, plan) in plans {
+        let id = format!("lenet-ota-{plan_name}");
+        let manifest = Manifest::new(&id, lenet());
+        let report =
+            deploy::publish_model(&registry, &manifest, &ws, plan).expect("publish plan");
+        println!(
+            "published `{id}` v{}: wire {} (raw {}, ratio {:.1}x)",
+            report.published.version,
+            fmt_bytes(report.wire_bytes as u64),
+            fmt_bytes(report.raw_bytes as u64),
+            report.raw_bytes as f64 / report.wire_bytes as f64,
+        );
+        published.push((plan_name, id, report));
+    }
+
+    println!();
+    let mut table = Table::new(
+        "E11: cold start to first inference (publish -> fetch -> verify -> decompress -> \
+         load -> infer)",
+        &["plan", "link", "package", "fetch", "verify", "decomp", "load", "infer", "COLD START"],
+    );
+    let ms = |d: std::time::Duration| format!("{:.1} ms", d.as_secs_f64() * 1000.0);
+    for (plan_name, id, report) in &published {
+        for (net_name, make_net) in networks {
+            let pool = EnginePool::start(PoolConfig {
+                shards: 1,
+                queue_cap: 64,
+                backend: BackendKind::Cpu,
+            })
+            .expect("pool");
+            let mut net = make_net();
+            let dest = testutil::tempdir("fig-delivery-device");
+            let d = deploy::deliver(&registry, id, None, &mut net, &dest, &pool, Some(probe()))
+                .expect("deliver");
+            table.row(&[
+                plan_name.to_string(),
+                net_name.to_string(),
+                fmt_bytes(report.package_bytes as u64),
+                ms(d.timing.fetch),
+                ms(d.timing.verify),
+                ms(d.timing.decompress),
+                ms(d.timing.load),
+                ms(d.timing.first_infer),
+                ms(d.timing.cold_start()),
+            ]);
+            pool.shutdown();
+        }
+    }
+    table.print();
+    println!(
+        "(fetch is modeled from bytes/bandwidth + RTT; verify/decompress/load/infer are \
+         measured wall time)"
+    );
+
+    hot_swap_segment(&registry);
+}
+
+/// Serve traffic while publishing and hot-swapping v2: zero failed
+/// requests, in-flight v1 work drains, new requests hit v2.
+fn hot_swap_segment(registry: &Registry) {
+    println!();
+    println!("--- zero-downtime hot-swap under load ---");
+    let id = "lenet-ota-raw-f32"; // published above by the plan sweep (v1)
+    let pool = EnginePool::start(PoolConfig {
+        shards: 2,
+        queue_cap: 1024,
+        backend: BackendKind::Cpu,
+    })
+    .expect("pool");
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: std::time::Duration::from_millis(1),
+                queue_cap: 1024,
+            },
+        },
+    );
+    let mut net = SimulatedNetwork::wifi();
+    let dest = testutil::tempdir("fig-delivery-swap");
+    let v1 = deploy::pull(registry, id, None, &mut net, &dest).expect("pull v1");
+    coord.serve_model(&v1.dir).expect("serve v1");
+    let coord = std::sync::Arc::new(coord);
+
+    let completed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    const CLIENTS: usize = 4;
+    const REQUESTS_PER_CLIENT: usize = 100;
+
+    let swap_report = std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let coord = coord.clone();
+            let completed = &completed;
+            let failed = &failed;
+            scope.spawn(move || {
+                let batch = data::glyphs(REQUESTS_PER_CLIENT, 900 + c as u64);
+                for i in 0..REQUESTS_PER_CLIENT {
+                    let input = Tensor::new(
+                        Shape::new(&[1usize, 28, 28]),
+                        batch.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+                    )
+                    .unwrap();
+                    match coord.infer(id, input) {
+                        Ok(_) => {
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+
+        // Mid-workload: publish v2 (fresh weights), pull, hot-swap.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let manifest = Manifest::new(id, lenet());
+        deploy::publish_model(registry, &manifest, &lenet_weights(22_000), WirePlan::Raw)
+            .expect("publish v2");
+        let mut net = SimulatedNetwork::wifi();
+        let v2 = deploy::pull(registry, id, None, &mut net, &dest).expect("pull v2");
+        coord.update_model(id, &v2.dir).expect("hot-swap v2")
+    });
+
+    let done = completed.load(Ordering::Relaxed);
+    let lost = failed.load(Ordering::Relaxed);
+    println!(
+        "served {done} requests across the update; failed: {lost}; swap: v{} -> v{} on \
+         shard {} ({} in-flight drained, {:.1} ms)",
+        swap_report.old_version.unwrap_or(0),
+        swap_report.info.version,
+        swap_report.shard,
+        swap_report.drained,
+        swap_report.swap_micros as f64 / 1000.0
+    );
+    let now_serving = coord.served_models();
+    assert_eq!(now_serving.len(), 1);
+    assert_eq!(now_serving[0].version, 2, "coordinator must be serving v2");
+    assert_eq!(lost, 0, "a hot-swap must fail zero in-flight requests");
+    println!("hot-swap OK: zero failed in-flight requests");
+    pool.shutdown();
+}

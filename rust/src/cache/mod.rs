@@ -16,7 +16,7 @@ mod policy;
 pub use policy::{EvictionPolicy, PolicyKind};
 
 use crate::model::{Manifest, ModelFiles};
-use crate::runtime::{EngineHandle, ModelInfo, PoolHandle};
+use crate::runtime::{EngineHandle, ModelInfo, PoolHandle, SwapReport};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -41,6 +41,8 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Versioned hot-swaps applied through the cache.
+    pub swaps: u64,
     /// Weight bytes resident across all shards.
     pub resident_bytes: usize,
 }
@@ -228,6 +230,80 @@ impl ModelCache {
         let (out, _shard) = self.pool.infer(id, input)?;
         Ok((out, access))
     }
+
+    /// Hot-swap a resident model to a new version directory. The owning
+    /// shard drains in-flight work on the old version and replaces it
+    /// atomically ([`PoolHandle::swap`]); this method then retargets the
+    /// catalog, **evicts the old version's byte accounting on that shard**
+    /// (it was freed by the replacement) and — if the new version grew
+    /// past the shard budget — evicts *other* residents of the same shard
+    /// until it fits again.
+    pub fn swap_version(
+        &mut self,
+        id: &str,
+        new_dir: impl Into<PathBuf>,
+    ) -> crate::Result<(SwapReport, Vec<String>)> {
+        anyhow::ensure!(
+            self.resident.contains_key(id),
+            "model `{id}` is not resident; use `ensure` for first loads"
+        );
+        let dir = new_dir.into();
+        // Refuse before touching the pool: a directory naming a different
+        // model must not replace this entry.
+        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
+        anyhow::ensure!(
+            manifest.id == id,
+            "swap of `{id}` rejected: directory manifest says `{}`",
+            manifest.id
+        );
+
+        let report = self.pool.swap(&dir)?;
+        let shard = report.shard;
+        let bytes = report.info.weight_bytes;
+        self.catalog.insert(id.to_string(), dir);
+        let entry = self.resident.get_mut(id).expect("checked resident above");
+        entry.info = report.info.clone();
+        entry.bytes = bytes;
+        entry.shard = shard;
+        self.policy.touch(id);
+        self.stats.swaps += 1;
+
+        // Rebalance the shard budget around the new version's footprint.
+        let mut evicted = Vec::new();
+        while self.resident_bytes_on(shard) > self.budget_bytes {
+            let candidates: Vec<String> = self
+                .resident
+                .iter()
+                .filter(|(cid, r)| r.shard == shard && cid.as_str() != id)
+                .map(|(cid, _)| cid.clone())
+                .collect();
+            let Some(victim) = self.policy.pick_victim(candidates.iter().map(|s| s.as_str()))
+            else {
+                // Nothing left to evict but the swapped model itself: the
+                // new version alone busts the shard budget. Unload it so
+                // the pool is not left over budget, then report.
+                self.pool.unload(id)?;
+                self.pool.forget_affinity(id);
+                self.resident.remove(id);
+                self.policy.forget(id);
+                self.stats.resident_bytes = self.resident.values().map(|r| r.bytes).sum();
+                anyhow::bail!(
+                    "model `{id}` v{} ({bytes} B) exceeds the per-shard cache budget ({} B); \
+                     unloaded",
+                    report.info.version,
+                    self.budget_bytes
+                );
+            };
+            self.pool.unload(&victim)?;
+            self.pool.forget_affinity(&victim);
+            self.resident.remove(&victim);
+            self.policy.forget(&victim);
+            self.stats.evictions += 1;
+            evicted.push(victim);
+        }
+        self.stats.resident_bytes = self.resident.values().map(|r| r.bytes).sum();
+        Ok((report, evicted))
+    }
 }
 
 #[cfg(test)]
@@ -297,6 +373,50 @@ mod tests {
         assert!(e.contains("does not match"), "{e}");
         // The mismatched load must be rolled back, not left resident.
         assert_eq!(pool.shard_of("real-id"), None);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn swap_version_rebalances_the_shard_budget() {
+        // One shard, budget for two tiny models; the third dimension is a
+        // fat v2 of one of them arriving over the air.
+        let pool = cpu_pool(1);
+        let mut mc = ModelCache::over_pool(pool.clone(), 12_000, PolicyKind::Lru);
+        mc.register("m-a", testutil::tiny_model_dir("cache-swap", "m-a", 16, 1));
+        mc.register("m-b", testutil::tiny_model_dir("cache-swap", "m-b", 16, 2));
+        mc.ensure("m-a").unwrap();
+        mc.ensure("m-b").unwrap();
+        let old_bytes = mc.resident_info("m-a").unwrap().weight_bytes;
+
+        // Fat v2 of m-a (~9 KB: still under the budget alone, over it
+        // together with m-b): the swap itself succeeds on the shard, then
+        // the budget rebalance must evict m-b (LRU victim), not m-a.
+        let v2 = testutil::tiny_model_dir("cache-swap-v2", "m-a", 32, 3);
+        let (report, evicted) = mc.swap_version("m-a", &v2).unwrap();
+        assert_eq!(report.old_version, Some(1));
+        assert!(report.info.weight_bytes > old_bytes);
+        assert_eq!(evicted, vec!["m-b".to_string()]);
+        assert!(mc.is_resident("m-a") && !mc.is_resident("m-b"));
+        assert_eq!(mc.stats().swaps, 1);
+        assert_eq!(mc.stats().evictions, 1);
+        assert_eq!(mc.resident_bytes_on(0), report.info.weight_bytes);
+        // The catalog now points at v2: a re-ensure is a hit, no reload.
+        assert!(mc.ensure("m-a").unwrap().hit);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn swap_version_rejects_mismatched_directory() {
+        let pool = cpu_pool(1);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+        mc.register("m", testutil::tiny_model_dir("cache-swap-mm", "m", 8, 1));
+        mc.ensure("m").unwrap();
+        let other = testutil::tiny_model_dir("cache-swap-mm2", "other", 8, 2);
+        let e = mc.swap_version("m", &other).unwrap_err().to_string();
+        assert!(e.contains("directory manifest says `other`"), "{e}");
+        // The resident model is untouched.
+        assert!(mc.is_resident("m"));
+        assert_eq!(pool.shard_of("other"), None);
         pool.shutdown();
     }
 

@@ -1,0 +1,274 @@
+//! Binary container for a compressed model ("DLKC" format) — what the
+//! `.dlkpkg` ships when a model is published with a compression plan
+//! (entry name `weights.dlkc`; see `docs/PACKAGE_FORMAT.md`).
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic "DLKC"            4 bytes
+//! version u32             4 bytes
+//! ctensor_count u32       4 bytes
+//! raw_count u32           4 bytes
+//! per compressed tensor:
+//!   name_len u32 | name utf-8 | rank u32 | dims u64 each | bits u32 |
+//!   codebook_len u32 | codebook f32 each |
+//!   code_count u64 | table_len u32 | table (symbol u32, length u8) each |
+//!   packed_len u64 | packed bytes
+//! per raw tensor (biases — kept exact f32):
+//!   name_len u32 | name utf-8 | rank u32 | dims u64 each | data f32 each
+//! ```
+//!
+//! The wire form Huffman-codes the **full** per-element code stream (zeros
+//! included; they dominate after pruning and cost ~1 bit each), so decode
+//! recovers `QuantizedTensor::codes` exactly and
+//! [`decompress_model`](super::decompress_model) reconstructs bit-identical
+//! weights on every device that pulls the same package version.
+
+use super::huffman::{huffman_decode, huffman_encode, HuffmanTable};
+use super::pipeline::{CompressedModel, CompressedTensor};
+use super::quantize::QuantizedTensor;
+use crate::tensor::Tensor;
+use crate::wire::Reader;
+use std::io::Write;
+
+pub const COMPRESSED_MAGIC: &[u8; 4] = b"DLKC";
+const VERSION: u32 = 1;
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.write_all(&(s.len() as u32).to_le_bytes()).unwrap();
+    out.write_all(s.as_bytes()).unwrap();
+}
+
+fn put_dims(out: &mut Vec<u8>, dims: &[usize]) {
+    out.write_all(&(dims.len() as u32).to_le_bytes()).unwrap();
+    for &d in dims {
+        out.write_all(&(d as u64).to_le_bytes()).unwrap();
+    }
+}
+
+fn read_string(r: &mut Reader) -> crate::Result<String> {
+    let len = r.u32()? as usize;
+    anyhow::ensure!(len <= 4096, "implausible name length {len}");
+    Ok(std::str::from_utf8(r.take(len)?)
+        .map_err(|_| anyhow::anyhow!("tensor name is not UTF-8"))?
+        .to_string())
+}
+
+/// Read a shape and its element count, rejecting products that overflow.
+fn read_dims(r: &mut Reader) -> crate::Result<(Vec<usize>, usize)> {
+    let rank = r.u32()? as usize;
+    anyhow::ensure!(rank <= 8, "implausible tensor rank {rank}");
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(r.u64_len()?);
+    }
+    let numel = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("tensor shape {dims:?} overflows the element count"))?;
+    Ok((dims, numel))
+}
+
+impl CompressedModel {
+    /// Serialize to the DLKC wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.write_all(COMPRESSED_MAGIC).unwrap();
+        out.write_all(&VERSION.to_le_bytes()).unwrap();
+        out.write_all(&(self.tensors.len() as u32).to_le_bytes()).unwrap();
+        out.write_all(&(self.raw.len() as u32).to_le_bytes()).unwrap();
+        for ct in &self.tensors {
+            put_str(&mut out, &ct.name);
+            put_dims(&mut out, &ct.quant.shape);
+            out.write_all(&ct.quant.bits.to_le_bytes()).unwrap();
+            out.write_all(&(ct.quant.codebook.len() as u32).to_le_bytes()).unwrap();
+            for &c in &ct.quant.codebook {
+                out.write_all(&c.to_le_bytes()).unwrap();
+            }
+            // Huffman over the full code stream (zeros included) so the
+            // decoder recovers the exact per-element codes.
+            let (table, packed, _bits) = huffman_encode(&ct.quant.codes);
+            out.write_all(&(ct.quant.codes.len() as u64).to_le_bytes()).unwrap();
+            out.write_all(&(table.lengths.len() as u32).to_le_bytes()).unwrap();
+            for &(sym, len) in &table.lengths {
+                out.write_all(&sym.to_le_bytes()).unwrap();
+                out.push(len);
+            }
+            out.write_all(&(packed.len() as u64).to_le_bytes()).unwrap();
+            out.write_all(&packed).unwrap();
+        }
+        for (name, t) in &self.raw {
+            put_str(&mut out, name);
+            put_dims(&mut out, t.shape().dims());
+            for &v in t.data() {
+                out.write_all(&v.to_le_bytes()).unwrap();
+            }
+        }
+        out
+    }
+
+    /// Parse from the DLKC wire format. The per-tensor Huffman tables and
+    /// packed streams of the in-memory form are rebuilt deterministically,
+    /// so `from_bytes(x.to_bytes())` round-trips the decoded weights
+    /// bit-exactly.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<CompressedModel> {
+        let mut r = Reader::new(bytes);
+        anyhow::ensure!(
+            r.take(4)? == COMPRESSED_MAGIC,
+            "bad magic (not a DLKC compressed model)"
+        );
+        let version = r.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported DLKC version {version}");
+        let ctensors = r.u32()? as usize;
+        let raws = r.u32()? as usize;
+        anyhow::ensure!(
+            ctensors <= 4096 && raws <= 4096,
+            "implausible tensor counts ({ctensors} compressed, {raws} raw)"
+        );
+
+        let mut tensors = Vec::with_capacity(ctensors);
+        for _ in 0..ctensors {
+            let name = read_string(&mut r)?;
+            let (dims, numel) = read_dims(&mut r)?;
+            let bits = r.u32()?;
+            anyhow::ensure!((1..=16).contains(&bits), "implausible code width {bits}");
+            let codebook_len = r.u32()? as usize;
+            anyhow::ensure!(
+                codebook_len <= 1 << bits,
+                "codebook of {codebook_len} entries exceeds 2^{bits}"
+            );
+            let mut codebook = Vec::with_capacity(codebook_len);
+            for _ in 0..codebook_len {
+                codebook.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+            }
+            let code_count = r.u64_len()?;
+            anyhow::ensure!(
+                code_count == numel,
+                "`{name}`: {code_count} codes for a {numel}-element tensor"
+            );
+            let table_len = r.u32()? as usize;
+            anyhow::ensure!(table_len <= 1 << bits, "implausible huffman table ({table_len})");
+            let mut lengths = Vec::with_capacity(table_len);
+            for _ in 0..table_len {
+                let sym = r.u32()?;
+                let len = r.take(1)?[0];
+                lengths.push((sym, len));
+            }
+            let wire_table = HuffmanTable { lengths };
+            let packed_len = r.u64_len()?;
+            let wire_packed = r.take(packed_len)?;
+            // Every symbol costs at least one bit, so a claimed element
+            // count beyond 8x the packed bytes can only be hostile —
+            // reject before the decoder sizes a buffer from it.
+            anyhow::ensure!(
+                code_count <= wire_packed.len().saturating_mul(8),
+                "`{name}`: {code_count} codes cannot fit in {} packed bytes",
+                wire_packed.len()
+            );
+            let codes = huffman_decode(&wire_table, wire_packed, code_count)
+                .map_err(|e| anyhow::anyhow!("`{name}`: {e}"))?;
+            anyhow::ensure!(
+                codes.iter().all(|&c| (c as usize) < codebook.len()),
+                "`{name}`: code out of codebook range"
+            );
+
+            // Rebuild the in-memory (gap-free) Huffman form over non-zero
+            // codes, exactly as `compress_model` produced it.
+            let nz_codes: Vec<u32> = codes
+                .iter()
+                .copied()
+                .filter(|&c| codebook[c as usize] != 0.0)
+                .collect();
+            let (table, packed, packed_bits) = huffman_encode(&nz_codes);
+            tensors.push(CompressedTensor {
+                name,
+                quant: QuantizedTensor { shape: dims, codebook, codes, bits },
+                table,
+                packed,
+                packed_bits,
+            });
+        }
+
+        let mut raw = Vec::with_capacity(raws);
+        for _ in 0..raws {
+            let name = read_string(&mut r)?;
+            let (dims, numel) = read_dims(&mut r)?;
+            // 4 bytes per element must actually be present before the
+            // allocation is sized from the claimed shape.
+            anyhow::ensure!(
+                numel <= r.remaining() / 4,
+                "`{name}`: {numel} f32 elements exceed the {} bytes left",
+                r.remaining()
+            );
+            let mut data = Vec::with_capacity(numel);
+            for _ in 0..numel {
+                data.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+            }
+            raw.push((name, Tensor::new(&dims[..], data)?));
+        }
+        anyhow::ensure!(r.is_empty(), "trailing bytes after compressed container");
+        Ok(CompressedModel { tensors, raw })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{compress_model, decompress_model, StagePlan};
+    use super::*;
+    use crate::model::{lenet, WeightStore};
+
+    fn lenet_compressed() -> CompressedModel {
+        let arch = lenet();
+        let mut ws = WeightStore::new();
+        for (i, (name, shape)) in arch.parameters().unwrap().iter().enumerate() {
+            ws.insert(name, Tensor::randn(shape.clone(), 4_000 + i as u64, 0.1));
+        }
+        compress_model(&ws, StagePlan::default()).unwrap().0
+    }
+
+    #[test]
+    fn wire_round_trip_is_bit_exact() {
+        let cm = lenet_compressed();
+        let bytes = cm.to_bytes();
+        let back = CompressedModel::from_bytes(&bytes).unwrap();
+        // The decoded weight stores must be byte-identical.
+        let a = decompress_model(&cm).unwrap().to_bytes();
+        let b = decompress_model(&back).unwrap().to_bytes();
+        assert_eq!(a, b);
+        // And re-serializing produces the identical wire form.
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn wire_form_is_much_smaller_than_f32() {
+        let cm = lenet_compressed();
+        let f32_bytes = decompress_model(&cm).unwrap().to_bytes().len();
+        let wire = cm.to_bytes().len();
+        assert!(
+            wire * 8 < f32_bytes,
+            "wire {wire} B should be >8x under raw {f32_bytes} B"
+        );
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = lenet_compressed().to_bytes();
+        for cut in [3usize, 11, 50, bytes.len() - 1] {
+            assert!(CompressedModel::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        let mut bytes = lenet_compressed().to_bytes();
+        bytes.push(0);
+        assert!(CompressedModel::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut bytes = lenet_compressed().to_bytes();
+        bytes[0] = b'X';
+        let e = CompressedModel::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+    }
+}

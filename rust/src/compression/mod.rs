@@ -3,25 +3,33 @@
 //! 6.9MB", citing the Deep-Compression-style pipeline of pruning +
 //! quantization + Huffman coding; roadmap item 7).
 //!
-//! Stages (each usable alone, composed by [`pipeline::compress_model`]):
-//! 1. **Magnitude pruning** ([`prune`]): zero the smallest-|w| fraction,
-//!    store survivors in a sparse (4-bit-gap style) encoding.
-//! 2. **k-means codebook quantization** ([`quantize`]): cluster surviving
-//!    weights, store codebook + per-weight code indices.
+//! Stages (each usable alone, composed by [`compress_model`]):
+//! 1. **Magnitude pruning** ([`magnitude_prune`]): zero the smallest-|w|
+//!    fraction, store survivors in a sparse (4-bit-gap style) encoding.
+//! 2. **k-means codebook quantization** ([`kmeans_quantize`]): cluster
+//!    surviving weights, store codebook + per-weight code indices.
 //! 3. **Huffman coding** ([`huffman`]): entropy-code the indices (own
 //!    encoder — no external crates).
+//!
+//! [`CompressedModel::to_bytes`]/[`CompressedModel::from_bytes`] give the
+//! compressed form a wire container (`weights.dlkc`, spec in
+//! `docs/PACKAGE_FORMAT.md` §4) so compressed models travel through the
+//! `.dlkpkg` delivery loop and reconstruct bit-identically on device.
 //!
 //! Experiment E4 runs the full pipeline on AlexNet-scale weights and
 //! reports the compression table.
 
+mod container;
 pub mod huffman;
 mod pipeline;
 mod prune;
 mod quantize;
 
+pub use container::COMPRESSED_MAGIC;
 pub use huffman::{huffman_decode, huffman_encode, HuffmanTable};
 pub use pipeline::{
-    compress_model, decompress_model, CompressedModel, CompressionReport, StagePlan, StageSize,
+    compress_model, decompress_model, CompressedModel, CompressedTensor, CompressionReport,
+    StagePlan, StageSize,
 };
 pub use prune::{magnitude_prune, sparse_decode, sparse_encode, SparseTensor};
 pub use quantize::{kmeans_quantize, QuantizedTensor};

@@ -3,7 +3,7 @@
 //! Surviving weights are clustered into `2^bits` centroids; the tensor is
 //! stored as a small f32 codebook plus one `bits`-wide code per weight.
 //! Deep Compression uses 8 bits for conv layers and 5 bits for dense —
-//! [`super::pipeline`] follows that split.
+//! `super::pipeline` follows that split.
 
 use crate::tensor::Tensor;
 use crate::testutil::XorShiftRng;
@@ -43,7 +43,7 @@ const FIT_SAMPLE_CAP: usize = 1 << 18;
 
 /// Quantize with k-means (Lloyd's, linear-initialized centroids — the
 /// initialization Deep Compression found best). Fitting runs on a
-/// subsample above [`FIT_SAMPLE_CAP`]; assignment uses a sorted-codebook
+/// subsample above `FIT_SAMPLE_CAP`; assignment uses a sorted-codebook
 /// binary search (1-D clusters), so the whole pass is O(n log k).
 ///
 /// `zero_preserving`: keep an exact 0.0 centroid so pruned weights stay

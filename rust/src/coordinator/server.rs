@@ -5,7 +5,8 @@
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::NIELSEN_SLO_MICROS;
 use crate::metrics::{Histogram, ServingStats};
-use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle};
+use crate::model::{Manifest, ModelFiles};
+use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle, SwapReport};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -37,7 +38,13 @@ pub struct RequestResult {
 
 struct ModelWorker {
     tx: mpsc::Sender<Pending>,
-    info: ModelInfo,
+    /// Behind a mutex so a hot-swap ([`Coordinator::update_model`]) can
+    /// refresh it while clients submit through `&self`.
+    info: Mutex<ModelInfo>,
+    /// Effective batcher max batch (clamped to the served version's
+    /// largest executable batch at spawn). A hot-swap must not install a
+    /// version that cannot execute batches this large.
+    max_batch: usize,
     /// Requests submitted but not yet picked up by the batcher worker —
     /// the submit-time admission-control window.
     depth: Arc<AtomicUsize>,
@@ -118,8 +125,63 @@ impl Coordinator {
             .spawn(move || batcher_main(rx, cfg, pool, model_id, shard, worker_depth, shared))
             .map_err(|e| anyhow::anyhow!("spawning batcher: {e}"))?;
 
-        self.workers.insert(id, ModelWorker { tx, info: info.clone(), depth, join });
+        self.workers.insert(
+            id,
+            ModelWorker { tx, info: Mutex::new(info.clone()), max_batch: cfg.max_batch, depth, join },
+        );
         Ok(info)
+    }
+
+    /// Hot-swap a served model to a new version directory while it keeps
+    /// serving. Guarantees: **no request is ever failed by the update**;
+    /// batches already submitted to the owning shard complete on the old
+    /// version (the shard FIFO drains them ahead of the swap); requests
+    /// submitted after this call returns run on the new version. Requests
+    /// still coalescing in the model's batcher when the swap lands may
+    /// flush to either side of it — version-consistent cutover for those
+    /// would require pausing the batcher, which this path deliberately
+    /// does not do. The model's batcher worker, queue and shard placement
+    /// all survive the swap. Blocks until the owning shard has drained
+    /// and replaced.
+    pub fn update_model(
+        &self,
+        id: &str,
+        dir: impl Into<std::path::PathBuf>,
+    ) -> crate::Result<SwapReport> {
+        let worker = self
+            .workers
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not being served"))?;
+        let dir = dir.into();
+        // Refuse before touching the pool: swapping a directory whose
+        // manifest names a different model would replace the wrong one.
+        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
+        anyhow::ensure!(
+            manifest.id == id,
+            "update of `{id}` rejected: directory manifest says `{}`",
+            manifest.id
+        );
+        // The running batcher's max batch was baked in at serve time; a
+        // version that cannot execute batches that large would make every
+        // oversized flush fail, breaking the zero-failed-requests
+        // guarantee. Reject the update instead (retire + re-serve to
+        // shrink the batcher).
+        let new_max = manifest
+            .aot_batches
+            .iter()
+            .max()
+            .copied()
+            // Weights-only packages run on the CPU default ladder.
+            .unwrap_or(*crate::runtime::CpuModel::DEFAULT_BATCHES.last().unwrap());
+        anyhow::ensure!(
+            new_max >= worker.max_batch,
+            "update of `{id}` rejected: new version's largest executable batch {new_max} is \
+             below the running batcher's max batch {}; retire and re-serve to shrink it",
+            worker.max_batch
+        );
+        let report = self.pool.swap(dir)?;
+        *worker.info.lock().unwrap() = report.info.clone();
+        Ok(report)
     }
 
     /// Stop serving a model: closes its queue, waits for the batcher
@@ -135,9 +197,10 @@ impl Coordinator {
         self.pool.unload(id)
     }
 
-    /// Models currently served.
-    pub fn served_models(&self) -> Vec<&ModelInfo> {
-        self.workers.values().map(|w| &w.info).collect()
+    /// Models currently served (point snapshots; a concurrent
+    /// [`Coordinator::update_model`] may bump versions).
+    pub fn served_models(&self) -> Vec<ModelInfo> {
+        self.workers.values().map(|w| w.info.lock().unwrap().clone()).collect()
     }
 
     /// Submit one input (no batch dimension) and wait for its result.
@@ -165,7 +228,7 @@ impl Coordinator {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow::Error::new(Overloaded {
                 model: model_id.to_string(),
-                shard: worker.info.shard,
+                shard: worker.info.lock().unwrap().shard,
                 queue_cap: self.config.batcher.queue_cap,
             }));
         }

@@ -32,6 +32,7 @@ pub mod selector;
 pub mod store;
 pub mod tensor;
 pub mod testutil;
+pub(crate) mod wire;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -2,9 +2,13 @@
 //!
 //! Subcommands mirror the system's user-facing surface:
 //!   serve     load model(s) and run a synthetic serving workload
+//!             (--registry pulls them OTA; --auto-update hot-swaps new
+//!             versions published while serving)
 //!   infer     classify generated inputs with one model
 //!   import    convert a Caffe/Theano JSON export to the native format
 //!   compress  run the Deep-Compression pipeline on a model's weights
+//!   publish   compress + package + publish a model version to a registry
+//!   pull      fetch a published version: verify, decompress, lay out
 //!   store     publish / list / fetch models in a local registry
 //!   devices   show device tiers and projected NIN latencies (paper §1.1)
 //!   energy    show train-vs-inference energy (paper figs. 10-12)
@@ -30,6 +34,8 @@ fn main() {
         "infer" => cmd_infer(&rest),
         "import" => cmd_import(&rest),
         "compress" => cmd_compress(&rest),
+        "publish" => cmd_publish(&rest),
+        "pull" => cmd_pull(&rest),
         "store" => cmd_store(&rest),
         "devices" => cmd_devices(&rest),
         "energy" => cmd_energy(&rest),
@@ -52,9 +58,13 @@ fn usage() -> String {
      \n\
      SUBCOMMANDS:\n\
        serve     load model(s), run a serving workload, print stats\n\
+                 (--registry: pull models OTA; --auto-update: hot-swap\n\
+                 versions published while serving)\n\
        infer     classify procedurally generated inputs\n\
        import    convert a Caffe/Theano JSON export to the DLK format\n\
        compress  Deep-Compression pipeline on a model's weights\n\
+       publish   compress+package+publish a model version to a registry\n\
+       pull      fetch a published version (verify, decompress, lay out)\n\
        store     publish/list/fetch in a local model registry\n\
        devices   device tiers + projected NIN latency (paper §1.1)\n\
        energy    train-vs-inference energy (paper figs. 10-12)\n\
@@ -77,6 +87,18 @@ fn generator_for(id: &str) -> fn(usize, u64) -> data::Batch {
     }
 }
 
+/// Parse `--network lte|wifi|3g` (+ optional `--interrupt p`, `--net-seed`).
+fn network_from_args(a: &deeplearningkit::cli::Args) -> anyhow::Result<store::SimulatedNetwork> {
+    let net = match a.get_or("network", "wifi") {
+        "wifi" => store::SimulatedNetwork::wifi(),
+        "lte" => store::SimulatedNetwork::lte(),
+        "3g" => store::SimulatedNetwork::three_g(),
+        other => anyhow::bail!("unknown --network `{other}` (expected wifi, lte or 3g)"),
+    };
+    let net = net.with_interruptions(a.get_f64("interrupt", 0.0)?);
+    Ok(net.with_seed(a.get_usize("net-seed", 0x0DE1_1E44)? as u64))
+}
+
 fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("dlk serve", "run a synthetic serving workload")
         .flag("model", "comma-separated model id(s) under artifacts/models/", Some("lenet-mnist"))
@@ -85,7 +107,13 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("max-batch", "dynamic batcher max batch", Some("8"))
         .flag("max-delay-ms", "batcher flush deadline (ms)", Some("2"))
         .flag("shards", "engine pool shards (0 = available parallelism)", Some("0"))
-        .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"));
+        .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
+        .flag("registry", "pull served models from this registry instead of artifacts/", None)
+        .switch("auto-update", "poll the registry and hot-swap newly published versions")
+        .flag("update-poll-ms", "auto-update poll interval (ms)", Some("200"))
+        .flag("network", "simulated link for registry pulls: wifi, lte or 3g", Some("wifi"))
+        .flag("interrupt", "per-chunk interruption probability for pulls", Some("0"))
+        .flag("net-seed", "simulated network seed", None);
     let a = cmd.parse(argv)?;
     let model_ids: Vec<String> = a
         .get_or("model", "lenet-mnist")
@@ -119,11 +147,37 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             batcher: coordinator::BatcherConfig { max_batch, max_delay, queue_cap },
         },
     );
+
+    // Model source: the local artifacts directory, or an OTA pull from a
+    // registry (verify + decompress via the delivery layer).
+    let registry_path = a.get("registry").map(std::path::PathBuf::from);
+    let pull_root = std::env::temp_dir().join(format!("dlk-serve-pull-{}", std::process::id()));
+    let mut served_versions: std::collections::BTreeMap<String, u32> =
+        std::collections::BTreeMap::new();
     for id in &model_ids {
-        let info = coord.serve_model(model_dir(id))?;
+        let dir = match &registry_path {
+            Some(reg_path) => {
+                let reg = store::Registry::open(reg_path)?;
+                let mut net = network_from_args(&a)?;
+                let pulled = store::deploy::pull(&reg, id, None, &mut net, &pull_root)?;
+                println!(
+                    "pulled `{id}` v{} ({}, {} retries, {})",
+                    pulled.version,
+                    metrics::fmt_bytes(pulled.fetch.bytes as u64),
+                    pulled.fetch.retries,
+                    pulled.timing.summary()
+                );
+                served_versions.insert(id.clone(), pulled.version);
+                pulled.dir
+            }
+            None => model_dir(id),
+        };
+        let info = coord.serve_model(dir)?;
         println!(
-            "serving `{}` on shard {} ({} classes, AOT batches {:?}, {} KB weights, load {:.1} ms)",
+            "serving `{}` v{} on shard {} ({} classes, AOT batches {:?}, {} KB weights, \
+             load {:.1} ms)",
             info.id,
+            info.version,
             info.shard,
             info.classes,
             info.batches,
@@ -133,6 +187,63 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     }
 
     let coord = std::sync::Arc::new(coord);
+
+    // Auto-update: poll the registry while the workload runs; a newer
+    // published version is pulled, verified and hot-swapped into the
+    // serving pool with zero downtime (`dlk publish` from another terminal
+    // to watch it happen live).
+    let stop_updates = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let updater = match (&registry_path, a.has("auto-update")) {
+        (Some(reg_path), true) => {
+            let poll = Duration::from_millis(a.get_usize("update-poll-ms", 200)? as u64);
+            let coord = coord.clone();
+            let stop = stop_updates.clone();
+            let reg_path = reg_path.clone();
+            let pull_root = pull_root.clone();
+            let ids = model_ids.clone();
+            let mut net = network_from_args(&a)?;
+            let mut current = served_versions.clone();
+            Some(std::thread::spawn(move || {
+                let Ok(reg) = store::Registry::open(&reg_path) else { return };
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    for id in &ids {
+                        let Ok(latest) = reg.latest_version(id) else { continue };
+                        if latest <= current.get(id).copied().unwrap_or(0) {
+                            continue;
+                        }
+                        let swapped = store::deploy::pull(
+                            &reg,
+                            id,
+                            Some(latest),
+                            &mut net,
+                            &pull_root,
+                        )
+                        .and_then(|p| coord.update_model(id, &p.dir));
+                        match swapped {
+                            Ok(report) => {
+                                println!(
+                                    "[auto-update] `{id}` v{} -> v{} hot-swapped on shard {} \
+                                     ({} in-flight drained, {:.1} ms)",
+                                    report.old_version.unwrap_or(0),
+                                    report.info.version,
+                                    report.shard,
+                                    report.drained,
+                                    report.swap_micros as f64 / 1000.0
+                                );
+                                current.insert(id.clone(), latest);
+                            }
+                            Err(e) => eprintln!("[auto-update] `{id}`: {e}"),
+                        }
+                    }
+                    std::thread::sleep(poll);
+                }
+            }))
+        }
+        (None, true) => {
+            anyhow::bail!("--auto-update needs --registry (nowhere to poll for versions)")
+        }
+        _ => None,
+    };
     let correct = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let done = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let overloaded = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
@@ -171,10 +282,18 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         }
     });
 
+    stop_updates.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(updater) = updater {
+        let _ = updater.join();
+    }
+
     let stats = coord.stats();
     println!("{}", stats.summary());
     if let Ok(util) = coord.pool().utilization() {
         println!("{}", util.summary());
+    }
+    for info in coord.served_models() {
+        println!("final: `{}` v{} on shard {}", info.id, info.version, info.shard);
     }
     let over_n = overloaded.load(std::sync::atomic::Ordering::Relaxed);
     if over_n > 0 {
@@ -293,6 +412,130 @@ fn cmd_compress(argv: &[String]) -> anyhow::Result<()> {
     ]);
     table.print();
     println!("sparsity {:.1}%  mean |err| {:.5}", report.sparsity * 100.0, report.mean_abs_error);
+    Ok(())
+}
+
+/// Stage plan from the shared compression flags.
+fn plan_from_args(a: &deeplearningkit::cli::Args) -> anyhow::Result<compression::StagePlan> {
+    Ok(compression::StagePlan {
+        conv_prune: a.get_f64("conv-prune", 0.65)?,
+        dense_prune: a.get_f64("dense-prune", 0.91)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_publish(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "dlk publish",
+        "compress + package + publish a model version to a registry",
+    )
+    .flag("model", "model id (artifacts/models/<id>, or a zoo architecture)", Some("lenet-mnist"))
+    .flag("registry", "registry directory", Some("./dlk-registry"))
+    .switch("compress", "ship weights Deep-Compressed (weights.dlkc) instead of raw f32")
+    .flag("conv-prune", "conv pruning fraction (with --compress)", Some("0.65"))
+    .flag("dense-prune", "dense pruning fraction (with --compress)", Some("0.91"))
+    .flag("seed", "weight seed for zoo models without artifacts", Some("42"))
+    .flag("description", "human description stored in the registry", None);
+    let a = cmd.parse(argv)?;
+    let id = a.get_or("model", "lenet-mnist").to_string();
+    let registry = store::Registry::open(a.get_or("registry", "./dlk-registry"))?;
+    let plan = if a.has("compress") {
+        store::WirePlan::Compressed(plan_from_args(&a)?)
+    } else {
+        store::WirePlan::Raw
+    };
+    let description = a.get_or("description", "").to_string();
+
+    let dir = model_dir(&id);
+    let report = if dir.join("manifest.json").exists() {
+        // Trained artifacts: publish their weights (compressed when asked);
+        // raw publishes keep the AOT HLO entries via the package path.
+        if a.has("compress") {
+            let mut manifest = model::Manifest::load(&dir.join("manifest.json"))?;
+            if !description.is_empty() {
+                manifest.description = description;
+            }
+            let ws = model::WeightStore::load(&dir.join("weights.dlkw"))?;
+            store::publish_model(&registry, &manifest, &ws, plan)?
+        } else {
+            let pkg = store::Package::from_model_dir(&dir)?;
+            let published = registry.publish(&pkg)?;
+            println!(
+                "published `{}` v{} ({}) from {}",
+                published.id,
+                published.version,
+                metrics::fmt_bytes(published.package_bytes as u64),
+                dir.display()
+            );
+            return Ok(());
+        }
+    } else {
+        // No artifacts: fall back to a zoo architecture with synthesized
+        // weights — the offline stand-in for a fresh training run.
+        let arch = model::zoo_models()
+            .into_iter()
+            .find(|m| m.name == id)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "`{id}` has no artifacts under {} and is not a zoo architecture",
+                    dir.display()
+                )
+            })?;
+        let seed = a.get_usize("seed", 42)? as u64;
+        eprintln!("note: no artifacts for `{id}`; publishing seeded synthetic weights");
+        store::publish_synthetic(&registry, arch, seed, plan, &description)?
+    };
+
+    println!(
+        "published `{}` v{} as {}: wire {} (raw {}, package {})",
+        report.published.id,
+        report.published.version,
+        plan.name(),
+        metrics::fmt_bytes(report.wire_bytes as u64),
+        metrics::fmt_bytes(report.raw_bytes as u64),
+        metrics::fmt_bytes(report.package_bytes as u64),
+    );
+    if let Some(c) = &report.compression {
+        println!(
+            "compression: {:.1}x (sparsity {:.1}%, mean |err| {:.5})",
+            c.ratio,
+            c.sparsity * 100.0,
+            c.mean_abs_error
+        );
+    }
+    println!("weights sha256 {}", report.weights_sha256);
+    Ok(())
+}
+
+fn cmd_pull(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dlk pull", "fetch a published model version onto this device")
+        .flag("model", "model id", Some("lenet-mnist"))
+        .flag("version", "version to pull (default: latest)", None)
+        .flag("registry", "registry directory", Some("./dlk-registry"))
+        .flag("dest", "device-side model root", Some("./pulled"))
+        .flag("network", "simulated link: wifi, lte or 3g", Some("wifi"))
+        .flag("interrupt", "per-chunk interruption probability", Some("0"))
+        .flag("net-seed", "simulated network seed", None);
+    let a = cmd.parse(argv)?;
+    let id = a.get_or("model", "lenet-mnist").to_string();
+    let registry = store::Registry::open(a.get_or("registry", "./dlk-registry"))?;
+    let version = match a.get("version") {
+        Some(_) => Some(a.get_usize("version", 0)? as u32),
+        None => None,
+    };
+    let mut net = network_from_args(&a)?;
+    let dest = std::path::PathBuf::from(a.get_or("dest", "./pulled"));
+    let pulled = store::deploy::pull(&registry, &id, version, &mut net, &dest)?;
+    println!(
+        "pulled `{}` v{} -> {} ({}{}; {} resumed reconnect(s), no progress lost)",
+        pulled.id,
+        pulled.version,
+        pulled.dir.display(),
+        metrics::fmt_bytes(pulled.fetch.bytes as u64),
+        if pulled.was_compressed { ", compressed wire" } else { "" },
+        pulled.fetch.retries,
+    );
+    println!("{}", pulled.timing.summary());
     Ok(())
 }
 

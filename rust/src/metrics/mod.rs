@@ -11,6 +11,7 @@ pub use histogram::Histogram;
 pub use report::{fmt_bytes, fmt_us, Table};
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// A monotonically increasing counter (thread-safe).
 #[derive(Debug, Default)]
@@ -126,6 +127,53 @@ impl PoolUtilization {
     }
 }
 
+/// Cold-start-to-first-inference breakdown for one over-the-air model
+/// delivery (experiment E11): every device-side leg from "the registry has
+/// a version we want" to "the first prediction came back".
+///
+/// `fetch` is *modeled* network time (the
+/// [`SimulatedNetwork`](crate::store::SimulatedNetwork) computes it from
+/// bytes and bandwidth instead of sleeping); the other legs are measured
+/// wall time, so `cold_start()` mixes the two exactly the way the paper's
+/// app-store story would experience them on a device.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeliveryTiming {
+    /// Modeled network transfer, including RTTs for interrupted-resume
+    /// reconnects.
+    pub fetch: Duration,
+    /// Integrity work: package parse + per-entry sha256, plus the
+    /// manifest weights-hash check over the materialized dense weights.
+    pub verify: Duration,
+    /// Codebook/Huffman decode back to dense f32 weights (zero for raw
+    /// packages).
+    pub decompress: Duration,
+    /// Engine load: weight staging (+ compile on the PJRT backend).
+    pub load: Duration,
+    /// First inference after the load (cold caches).
+    pub first_infer: Duration,
+}
+
+impl DeliveryTiming {
+    /// Total cold-start-to-first-inference time.
+    pub fn cold_start(&self) -> Duration {
+        self.fetch + self.verify + self.decompress + self.load + self.first_infer
+    }
+
+    /// One-line summary for logs and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "cold-start {:.1} ms (fetch {:.1} + verify {:.1} + decompress {:.1} + load {:.1} \
+             + first-infer {:.1})",
+            self.cold_start().as_secs_f64() * 1000.0,
+            self.fetch.as_secs_f64() * 1000.0,
+            self.verify.as_secs_f64() * 1000.0,
+            self.decompress.as_secs_f64() * 1000.0,
+            self.load.as_secs_f64() * 1000.0,
+            self.first_infer.as_secs_f64() * 1000.0
+        )
+    }
+}
+
 impl ServingStats {
     pub fn summary(&self) -> String {
         format!(
@@ -198,6 +246,20 @@ mod tests {
         assert_eq!(u.total_executions(), 0);
         assert_eq!(u.imbalance(), 0.0);
         assert!(u.shares().is_empty());
+    }
+
+    #[test]
+    fn delivery_timing_sums_and_formats() {
+        let t = DeliveryTiming {
+            fetch: Duration::from_millis(500),
+            verify: Duration::from_millis(20),
+            decompress: Duration::from_millis(30),
+            load: Duration::from_millis(40),
+            first_infer: Duration::from_millis(10),
+        };
+        assert_eq!(t.cold_start(), Duration::from_millis(600));
+        let s = t.summary();
+        assert!(s.contains("cold-start 600.0 ms") && s.contains("fetch 500.0"), "{s}");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! - [`conv2d_im2col`]: lower to patch-matrix + GEMM — the same
 //!   restructuring the Pallas kernel uses to land on the MXU
 //!   (DESIGN.md §Hardware-Adaptation), and the fast CPU path.
-//! - FFT convolution lives in [`super::fft_conv`].
+//! - FFT convolution lives in [`conv2d_fft`](super::conv2d_fft).
 
 use crate::tensor::{Shape, Tensor};
 

@@ -25,6 +25,10 @@ pub struct CpuModel {
 }
 
 impl CpuModel {
+    /// Batch ladder used when a manifest declares no AOT sizes (portable
+    /// weights-only packages, e.g. pulled over the air).
+    pub const DEFAULT_BATCHES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
     /// Load a model directory (`manifest.json` / `weights.dlkw`), verify
     /// integrity, and bind the weights to a CPU executor. HLO artifacts are
     /// not required; the declared `aot_batches` still bound execution batch
@@ -50,11 +54,14 @@ impl CpuModel {
         let mut batches = manifest.aot_batches.clone();
         batches.sort_unstable();
         batches.dedup();
-        anyhow::ensure!(
-            !batches.is_empty(),
-            "model `{}` declares no AOT batch sizes",
-            manifest.id
-        );
+        if batches.is_empty() {
+            // A portable (weights-only) package — e.g. one published over
+            // the air without compiled HLO artifacts — declares no AOT
+            // sizes. The CPU executor runs any batch, so fall back to the
+            // standard serving ladder; the PJRT loader still requires real
+            // artifacts.
+            batches = CpuModel::DEFAULT_BATCHES.to_vec();
+        }
 
         let exec = CpuExecutor::new(manifest.arch.clone(), store)?;
         Ok(CpuModel { manifest, exec, weight_bytes, batches })
@@ -191,11 +198,15 @@ mod tests {
     }
 
     #[test]
-    fn empty_aot_batches_rejected() {
+    fn empty_aot_batches_fall_back_to_default_ladder() {
+        // Portable (weights-only) packages declare no AOT sizes; the CPU
+        // backend serves them on the standard batch ladder.
         let dir = testutil::tempdir("cpu-nobatch");
         testutil::write_model_dir(&dir, "no-batch", testutil::tiny_cnn("no-batch", 8), 1, &[])
             .unwrap();
-        let e = CpuModel::load(&dir).unwrap_err().to_string();
-        assert!(e.contains("no AOT batch sizes"), "{e}");
+        let m = CpuModel::load(&dir).unwrap();
+        assert_eq!(m.batches(), CpuModel::DEFAULT_BATCHES.to_vec());
+        let x = Tensor::randn(Shape::nchw(3, 1, 8, 8), 2, 1.0);
+        assert_eq!(m.infer(&x).unwrap().shape().dims(), &[3, 4]);
     }
 }

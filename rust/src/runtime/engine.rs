@@ -94,6 +94,9 @@ impl Default for EngineConfig {
 pub struct ModelInfo {
     /// Model id from the manifest.
     pub id: String,
+    /// Model version from the manifest (the registry stamps the published
+    /// version here, so a hot-swap can report old → new).
+    pub version: u32,
     /// Batch sizes the model can execute (declared AOT sizes).
     pub batches: Vec<usize>,
     /// Resident weight bytes (feeds cache/placement budgets).
@@ -127,13 +130,28 @@ pub struct EngineStats {
     pub resident_bytes: usize,
 }
 
+/// Result of a hot-swap on one shard: the freshly loaded model plus what
+/// it replaced.
+#[derive(Clone, Debug)]
+pub struct SwapInfo {
+    /// The new resident version.
+    pub info: ModelInfo,
+    /// Version that was resident under the same id before the swap
+    /// (`None`: the swap degenerated to a first load).
+    pub old_version: Option<u32>,
+}
+
 enum Request {
     Load { dir: PathBuf, reply: mpsc::Sender<crate::Result<ModelInfo>> },
+    /// Versioned hot-swap: because the queue is FIFO, every inference
+    /// enqueued before this request completes on the old version first
+    /// (the drain), then the replacement is atomic on the engine thread.
+    Swap { dir: PathBuf, reply: mpsc::Sender<crate::Result<SwapInfo>> },
     Unload { id: String, reply: mpsc::Sender<crate::Result<()>> },
     Infer { id: String, input: Tensor, reply: mpsc::Sender<crate::Result<Tensor>> },
     Stats { reply: mpsc::Sender<EngineStats> },
     /// Test hook: hold the engine thread busy for a while (see
-    /// [`EngineHandle::debug_stall`]). `started` is acked just before the
+    /// `EngineHandle::debug_stall`). `started` is acked just before the
     /// sleep begins so callers can wait for the stall deterministically.
     Stall { duration: Duration, started: mpsc::Sender<()> },
     Shutdown,
@@ -257,6 +275,28 @@ impl Resident {
     }
 }
 
+/// Load a model directory on the engine thread, producing the resident
+/// model and its metadata (shared by the load and swap paths).
+fn load_model(
+    backend: &Backend,
+    dir: &std::path::Path,
+    shard: usize,
+) -> crate::Result<(Resident, ModelInfo)> {
+    let t0 = Instant::now();
+    let m = backend.load(dir)?;
+    let info = ModelInfo {
+        id: m.manifest().id.clone(),
+        version: m.manifest().version,
+        batches: m.batches(),
+        weight_bytes: m.weight_bytes(),
+        classes: m.manifest().arch.num_classes().unwrap_or(0),
+        labels: m.manifest().labels.clone(),
+        load_micros: t0.elapsed().as_micros() as u64,
+        shard,
+    };
+    Ok((m, info))
+}
+
 fn engine_main(
     config: EngineConfig,
     inflight: Arc<AtomicUsize>,
@@ -281,19 +321,21 @@ fn engine_main(
     while let Ok(req) = rx.recv() {
         match req {
             Request::Load { dir, reply } => {
-                let t0 = Instant::now();
-                let result = backend.load(&dir).map(|m| {
-                    let info = ModelInfo {
-                        id: m.manifest().id.clone(),
-                        batches: m.batches(),
-                        weight_bytes: m.weight_bytes(),
-                        classes: m.manifest().arch.num_classes().unwrap_or(0),
-                        labels: m.manifest().labels.clone(),
-                        load_micros: t0.elapsed().as_micros() as u64,
-                        shard: config.shard,
-                    };
+                let result = load_model(&backend, &dir, config.shard).map(|(m, info)| {
                     models.insert(info.id.clone(), m);
                     info
+                });
+                let _ = reply.send(result);
+            }
+            Request::Swap { dir, reply } => {
+                // All inferences enqueued ahead of this request have
+                // already executed (FIFO queue = the drain); the insert
+                // below replaces the old version atomically from every
+                // client's point of view.
+                let result = load_model(&backend, &dir, config.shard).map(|(m, info)| {
+                    let old_version =
+                        models.insert(info.id.clone(), m).map(|old| old.manifest().version);
+                    SwapInfo { info, old_version }
                 });
                 let _ = reply.send(result);
             }
@@ -390,6 +432,24 @@ impl EngineHandle {
     /// loads are rare control-plane work).
     pub fn load(&self, dir: impl Into<PathBuf>) -> crate::Result<ModelInfo> {
         self.call(|reply| Request::Load { dir: dir.into(), reply })?
+    }
+
+    /// Versioned hot-swap: load the model directory and atomically replace
+    /// the resident model with the same id. The shard's FIFO queue drains
+    /// every inference submitted before this call on the **old** version;
+    /// inferences submitted after it run on the new version. No request is
+    /// ever failed by a swap. Blocks until the swap (drain + load +
+    /// replace) completes; control-plane work, exempt from admission
+    /// control like [`EngineHandle::load`].
+    pub fn swap(&self, dir: impl Into<PathBuf>) -> crate::Result<SwapInfo> {
+        self.call(|reply| Request::Swap { dir: dir.into(), reply })?
+    }
+
+    /// Inferences admitted but not yet completed on this shard (a point
+    /// snapshot; the drain a concurrent [`EngineHandle::swap`] will wait
+    /// out).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
     }
 
     /// Unload (frees executables + weight literals).
@@ -578,5 +638,37 @@ mod tests {
     #[test]
     fn backend_kind_names() {
         assert_eq!(BackendKind::Cpu.name(), "cpu");
+    }
+
+    #[test]
+    fn swap_replaces_resident_model_and_reports_versions() {
+        let engine = cpu_engine(0, 16);
+        let v1 = testutil::tiny_model_dir("engine-swap-v1", "swap-m", 8, 1);
+        let info = engine.load(&v1).unwrap();
+        assert_eq!(info.version, 1);
+
+        // Same id, different width (weight bytes change across versions).
+        let v2 = testutil::tiny_model_dir("engine-swap-v2", "swap-m", 32, 2);
+        let swap = engine.swap(&v2).unwrap();
+        assert_eq!(swap.info.id, "swap-m");
+        assert_eq!(swap.old_version, Some(1));
+        assert!(swap.info.weight_bytes > info.weight_bytes);
+
+        // Still exactly one resident model; it serves inference.
+        let stats = engine.stats().unwrap();
+        assert_eq!(stats.resident_models, 1);
+        let x = Tensor::zeros(crate::tensor::Shape::nchw(1, 1, 8, 8));
+        assert_eq!(engine.infer("swap-m", x).unwrap().shape().dims(), &[1, 4]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn swap_without_prior_load_is_a_first_load() {
+        let engine = cpu_engine(0, 16);
+        let dir = testutil::tiny_model_dir("engine-swap-fresh", "fresh-m", 8, 3);
+        let swap = engine.swap(&dir).unwrap();
+        assert_eq!(swap.old_version, None);
+        assert_eq!(engine.stats().unwrap().resident_models, 1);
+        engine.shutdown();
     }
 }

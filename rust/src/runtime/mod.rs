@@ -32,11 +32,11 @@ mod pool;
 pub use api_mapping::{api_mapping_table, ApiMappingRow};
 pub use cpu_model::CpuModel;
 pub use engine::{
-    BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, InferTicket, ModelInfo,
+    BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, InferTicket, ModelInfo, SwapInfo,
 };
 #[cfg(feature = "pjrt")]
 pub use literal::{literal_to_tensor, tensor_to_literal};
 #[cfg(feature = "pjrt")]
 pub use loaded_model::LoadedModel;
 pub use placement::{Placement, ShardAssignment};
-pub use pool::{EnginePool, Overloaded, PoolConfig, PoolHandle, PoolStats};
+pub use pool::{EnginePool, Overloaded, PoolConfig, PoolHandle, PoolStats, SwapReport};

@@ -20,6 +20,7 @@
 //! [`PoolHandle::single`].
 
 use super::engine::{BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, ModelInfo};
+use std::time::Instant;
 use super::placement::Placement;
 use crate::metrics::PoolUtilization;
 use crate::model::{Manifest, ModelFiles};
@@ -55,6 +56,23 @@ impl std::fmt::Display for Overloaded {
 }
 
 impl std::error::Error for Overloaded {}
+
+/// Result of a zero-downtime hot-swap through the pool (see
+/// [`PoolHandle::swap`]).
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    /// The new resident version's metadata.
+    pub info: ModelInfo,
+    /// Version replaced under the same id (`None`: first load).
+    pub old_version: Option<u32>,
+    /// Shard the swap ran on (the model's owning shard).
+    pub shard: usize,
+    /// Inferences in flight on that shard when the swap was submitted —
+    /// the work the shard drained (on the old version) before replacing.
+    pub drained: usize,
+    /// Wall time of the whole swap: drain + load + atomic replace.
+    pub swap_micros: u64,
+}
 
 /// Engine-pool configuration.
 #[derive(Clone, Copy, Debug)]
@@ -216,6 +234,51 @@ impl PoolHandle {
         }
     }
 
+    /// Zero-downtime versioned hot-swap. If the model is resident, the
+    /// swap runs on its owning shard: the shard's FIFO queue first drains
+    /// every inference already submitted (they complete on the **old**
+    /// version), then the replacement is atomic — inferences submitted
+    /// after this call return from the **new** version, and no request is
+    /// ever failed by the swap. If the model is not resident the swap
+    /// degenerates to a placed [`PoolHandle::load`].
+    ///
+    /// Blocks until the swap completes. Other shards — and other models on
+    /// the same shard's queue — keep serving throughout.
+    pub fn swap(&self, dir: impl Into<PathBuf>) -> crate::Result<SwapReport> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
+        let t0 = Instant::now();
+        match self.shard_of(&manifest.id) {
+            Some(shard) => {
+                let drained = self.shards[shard].inflight();
+                let swap = self.shards[shard].swap(dir)?;
+                // Commit the new version's actual weight bytes so
+                // least-loaded placement sees the post-swap footprint.
+                self.placement
+                    .lock()
+                    .unwrap()
+                    .commit(&swap.info.id, shard, swap.info.weight_bytes);
+                Ok(SwapReport {
+                    info: swap.info,
+                    old_version: swap.old_version,
+                    shard,
+                    drained,
+                    swap_micros: t0.elapsed().as_micros() as u64,
+                })
+            }
+            None => {
+                let info = self.load(dir)?;
+                Ok(SwapReport {
+                    shard: info.shard,
+                    info,
+                    old_version: None,
+                    drained: 0,
+                    swap_micros: t0.elapsed().as_micros() as u64,
+                })
+            }
+        }
+    }
+
     /// Unload a model from its shard. Keeps the model's shard affinity so
     /// a reload returns to the same shard (use
     /// [`PoolHandle::forget_affinity`] afterwards for capacity-driven
@@ -359,6 +422,40 @@ mod tests {
         pool.forget_affinity("fg-a");
         // Fresh placement: least-loaded-bytes now picks shard 1.
         assert_eq!(pool.placement_preview("fg-a"), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn swap_stays_on_owning_shard_and_updates_placement_bytes() {
+        let pool = cpu_pool(2, 64);
+        let v1 = testutil::tiny_model_dir("pool-swap-v1", "swap-p", 8, 1);
+        let other = testutil::tiny_model_dir("pool-swap-o", "other-p", 8, 2);
+        let i1 = pool.load(&v1).unwrap();
+        let io = pool.load(&other).unwrap();
+        assert_ne!(i1.shard, io.shard);
+
+        // Swap to a much fatter v2 of the same model.
+        let v2 = testutil::tiny_model_dir("pool-swap-v2", "swap-p", 64, 3);
+        let report = pool.swap(&v2).unwrap();
+        assert_eq!(report.shard, i1.shard, "swap must stay on the owning shard");
+        assert_eq!(report.old_version, Some(1));
+        assert!(report.info.weight_bytes > i1.weight_bytes);
+        assert_eq!(pool.shard_of("swap-p"), Some(i1.shard));
+
+        // Placement now sees the grown footprint: the next model must
+        // avoid the swapped model's heavier shard.
+        let third = testutil::tiny_model_dir("pool-swap-t", "third-p", 8, 4);
+        assert_eq!(pool.load(&third).unwrap().shard, io.shard);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn swap_of_unplaced_model_is_a_placed_load() {
+        let pool = cpu_pool(2, 64);
+        let dir = testutil::tiny_model_dir("pool-swap-fresh", "fresh-p", 8, 5);
+        let report = pool.swap(&dir).unwrap();
+        assert_eq!(report.old_version, None);
+        assert_eq!(pool.shard_of("fresh-p"), Some(report.shard));
         pool.shutdown();
     }
 

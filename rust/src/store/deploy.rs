@@ -1,0 +1,460 @@
+//! Over-the-air model delivery: the lifecycle layer that turns the
+//! repo's three standalone paper artifacts — the `.dlkpkg` store, the
+//! Deep-Compression pipeline and the engine pool — into one serving story:
+//!
+//! ```text
+//!  trainer side                      device side
+//!  ────────────                      ───────────
+//!  weights ──compress──► .dlkpkg ──publish──► Registry
+//!                                               │ fetch (resumable, versioned)
+//!                                               ▼
+//!                                   verify (per-entry sha256 + manifest hash)
+//!                                               │ decompress (.dlkc → .dlkw)
+//!                                               ▼
+//!                                   hot-swap into the EnginePool
+//!                                   (drain old version → atomic replace)
+//! ```
+//!
+//! [`publish_model`] is the trainer side; [`pull`] is the device side up
+//! to a loadable model directory; [`deliver`] completes the loop into a
+//! running [`PoolHandle`] and reports the cold-start-to-first-inference
+//! breakdown ([`DeliveryTiming`], experiment E11).
+//!
+//! Determinism guarantee: compression is lossy, but *decompression is a
+//! pure function of the wire bytes*, so the publisher records the sha256
+//! of the reconstructed `weights.dlkw` in the manifest and every device
+//! that pulls the same package version materializes bit-identical weights
+//! (verified again on device after decompression).
+
+use super::fetch::{FetchStats, SimulatedNetwork};
+use super::package::Package;
+use super::registry::{PublishedModel, Registry};
+use crate::compression::{
+    compress_model, decompress_model, CompressedModel, CompressionReport, StagePlan,
+};
+use crate::json;
+use crate::metrics::DeliveryTiming;
+use crate::model::{Architecture, Manifest, ModelFiles, WeightStore};
+use crate::runtime::{PoolHandle, SwapReport};
+use crate::tensor::Tensor;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// How weights travel inside a published package.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum WirePlan {
+    /// Raw f32 `weights.dlkw` — biggest package, bit-exact vs the source
+    /// weight store.
+    #[default]
+    Raw,
+    /// Deep-Compression (`prune → quantize → Huffman`) with this stage
+    /// plan, shipped as `weights.dlkc`. The package is several times
+    /// smaller; the device reconstructs the quantized weights exactly.
+    Compressed(StagePlan),
+}
+
+impl WirePlan {
+    /// Short name for tables and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WirePlan::Raw => "raw-f32",
+            WirePlan::Compressed(_) => "deep-compression",
+        }
+    }
+}
+
+/// Outcome of a publish.
+#[derive(Clone, Debug)]
+pub struct PublishReport {
+    pub published: PublishedModel,
+    /// Size of the dense f32 weights (`weights.dlkw`) the device will
+    /// materialize.
+    pub raw_bytes: usize,
+    /// Size of the weights entry actually shipped (equals `raw_bytes` for
+    /// [`WirePlan::Raw`]).
+    pub wire_bytes: usize,
+    /// Whole-package size on the wire.
+    pub package_bytes: usize,
+    /// sha256 (hex) of the canonical `weights.dlkw` bytes — what every
+    /// device must reconstruct, recorded in the manifest.
+    pub weights_sha256: String,
+    /// Stage-by-stage accounting when a compression plan ran.
+    pub compression: Option<CompressionReport>,
+}
+
+/// Package `weights` for `manifest`'s architecture under `plan` and
+/// publish to the registry. Returns the assigned version and size
+/// accounting.
+///
+/// The manifest's `weights_sha256` is overwritten with the hash of the
+/// canonical (reconstructed) weights and its `aot_batches` are cleared —
+/// this path ships no HLO artifacts; use `Package::from_model_dir` +
+/// [`Registry::publish`] to publish a compiled artifact directory.
+pub fn publish_model(
+    registry: &Registry,
+    manifest: &Manifest,
+    weights: &WeightStore,
+    plan: WirePlan,
+) -> crate::Result<PublishReport> {
+    weights.validate(&manifest.arch)?;
+    let mut manifest = manifest.clone();
+    manifest.aot_batches = Vec::new();
+
+    // Hash + sizes are recorded before the buffers move into the package,
+    // so no weight-sized clone is ever made (an AlexNet-scale publish
+    // would otherwise copy ~240 MB).
+    let (wire_name, wire, compression, weights_sha256, raw_bytes) = match plan {
+        WirePlan::Raw => {
+            let raw = weights.to_bytes();
+            let sha = super::sha256_hex(&raw);
+            let raw_bytes = raw.len();
+            ("weights.dlkw", raw, None, sha, raw_bytes)
+        }
+        WirePlan::Compressed(stage_plan) => {
+            let (cm, report) = compress_model(weights, stage_plan)?;
+            // The canonical bytes are what decompression yields — lossy vs
+            // the input, but identical on every device.
+            let canonical = decompress_model(&cm)?.to_bytes();
+            let sha = super::sha256_hex(&canonical);
+            let raw_bytes = canonical.len();
+            ("weights.dlkc", cm.to_bytes(), Some(report), sha, raw_bytes)
+        }
+    };
+    manifest.weights_sha256 = Some(weights_sha256.clone());
+    let wire_bytes = wire.len();
+
+    let mut pkg = Package::new();
+    pkg.add("manifest.json", json::to_string(&manifest.to_json()).into_bytes());
+    pkg.add(wire_name, wire);
+    let published = registry.publish(&pkg)?;
+    Ok(PublishReport {
+        raw_bytes,
+        wire_bytes,
+        package_bytes: published.package_bytes,
+        weights_sha256,
+        compression,
+        published,
+    })
+}
+
+/// Synthesize He-initialized weights for `arch` (seeded, reproducible) and
+/// publish them — the offline stand-in for "a training run produced a new
+/// version of this model".
+pub fn publish_synthetic(
+    registry: &Registry,
+    arch: Architecture,
+    seed: u64,
+    plan: WirePlan,
+    description: &str,
+) -> crate::Result<PublishReport> {
+    let mut ws = WeightStore::new();
+    for (i, (name, shape)) in arch.parameters()?.iter().enumerate() {
+        let fan_in: usize = shape.dims().iter().skip(1).product::<usize>().max(1);
+        let scale = (2.0 / fan_in as f32).sqrt();
+        ws.insert(name, Tensor::randn(shape.clone(), seed.wrapping_add(i as u64), scale));
+    }
+    let id = arch.name.clone();
+    let mut manifest = Manifest::new(&id, arch);
+    manifest.description = description.to_string();
+    publish_model(registry, &manifest, &ws, plan)
+}
+
+/// A model pulled onto the "device": verified, decompressed and laid out
+/// as a loadable directory.
+#[derive(Clone, Debug)]
+pub struct PulledModel {
+    pub id: String,
+    /// Registry version this directory holds.
+    pub version: u32,
+    /// Loadable model directory (`manifest.json` + dense `weights.dlkw`).
+    pub dir: PathBuf,
+    /// Network transfer statistics (resume retries included).
+    pub fetch: FetchStats,
+    /// Device-side legs measured so far (`fetch`/`verify`/`decompress`;
+    /// `load`/`first_infer` stay zero until [`deliver`] fills them).
+    pub timing: DeliveryTiming,
+    /// Whether the weights travelled as `weights.dlkc`.
+    pub was_compressed: bool,
+}
+
+/// Fetch `id` at `version` (`None` = latest) over `net`, verify, decode,
+/// and lay out `dest_root/<id>/v<version>/` as a loadable model directory.
+///
+/// Verification happens twice: the `.dlkpkg` per-entry sha256 at parse
+/// time (any corrupted transfer dies here), and the manifest's
+/// `weights_sha256` against the materialized dense weights (so a
+/// compressed package proves it reconstructed exactly what the publisher
+/// hashed).
+pub fn pull(
+    registry: &Registry,
+    id: &str,
+    version: Option<u32>,
+    net: &mut SimulatedNetwork,
+    dest_root: &Path,
+) -> crate::Result<PulledModel> {
+    let version = match version {
+        Some(v) => v,
+        None => registry.latest_version(id)?,
+    };
+    // `verify` accumulates exactly the integrity-bearing wall cost:
+    // package parse + per-entry sha256 here, plus the manifest
+    // weights-hash check over the materialized bytes below. The network
+    // time is *modeled* (reported as `fetch`); the simulator's local
+    // byte-shuffling is deliberately billed to neither leg.
+    let bytes = registry.package_bytes(id, version)?;
+    let (received, fetch) = net.download(&bytes, Registry::FETCH_ATTEMPTS)?;
+    let t_verify = Instant::now();
+    let pkg = Package::from_bytes(&received)
+        .map_err(|e| anyhow::anyhow!("fetch of `{id}` v{version} failed verification: {e}"))?;
+    let mut verify = t_verify.elapsed();
+
+    let manifest_bytes = pkg
+        .get("manifest.json")
+        .ok_or_else(|| anyhow::anyhow!("package `{id}` v{version} has no manifest.json"))?;
+    let manifest = Manifest::from_json(&json::parse(
+        std::str::from_utf8(manifest_bytes)
+            .map_err(|_| anyhow::anyhow!("manifest.json is not UTF-8"))?,
+    )?)?;
+    anyhow::ensure!(
+        manifest.id == id,
+        "pulled package manifest says `{}`, expected `{id}`",
+        manifest.id
+    );
+    anyhow::ensure!(
+        manifest.version == version,
+        "pulled package manifest says v{}, expected v{version}",
+        manifest.version
+    );
+
+    let t_decompress = Instant::now();
+    let (weights_bytes, was_compressed): (Vec<u8>, bool) =
+        if let Some(wire) = pkg.get("weights.dlkc") {
+            let cm = CompressedModel::from_bytes(wire)?;
+            (decompress_model(&cm)?.to_bytes(), true)
+        } else if let Some(raw) = pkg.get("weights.dlkw") {
+            (raw.to_vec(), false)
+        } else {
+            anyhow::bail!("package `{id}` v{version} has neither weights.dlkw nor weights.dlkc");
+        };
+    let decompress = if was_compressed { t_decompress.elapsed() } else { Default::default() };
+
+    // Device-side proof of bit-exact reconstruction. Hashing the dense
+    // weights is a real verify cost (dominant for big models), so it
+    // counts toward the `verify` leg, not `decompress`.
+    if let Some(expect) = &manifest.weights_sha256 {
+        let t_sha = Instant::now();
+        let got = super::sha256_hex(&weights_bytes);
+        verify += t_sha.elapsed();
+        anyhow::ensure!(
+            &got == expect,
+            "`{id}` v{version}: reconstructed weights sha256 {got} != manifest {expect}"
+        );
+    }
+
+    // Lay out everything except the weight entries (manifest, HLO), then
+    // write the materialized dense weights exactly once — no redundant
+    // second write for raw packages, no compressed copy left on device.
+    let dir = dest_root.join(id).join(format!("v{version}"));
+    pkg.unpack_filtered_to(&dir, |name| name != "weights.dlkw" && name != "weights.dlkc")?;
+    std::fs::write(ModelFiles::new(&dir).weights(), &weights_bytes)?;
+
+    Ok(PulledModel {
+        id: id.to_string(),
+        version,
+        dir,
+        fetch,
+        timing: DeliveryTiming { fetch: fetch.modeled, verify, decompress, ..Default::default() },
+        was_compressed,
+    })
+}
+
+/// A completed over-the-air delivery into a running pool.
+#[derive(Clone, Debug)]
+pub struct Delivery {
+    pub pulled: PulledModel,
+    /// The pool-level swap (drain + atomic replace; a first delivery is a
+    /// placed load with `old_version: None`).
+    pub swap: SwapReport,
+    /// Full cold-start-to-first-inference breakdown (E11).
+    pub timing: DeliveryTiming,
+}
+
+/// The full device-side loop: [`pull`] a version, then hot-swap it into
+/// `pool` with zero downtime. When `probe` is given (a `[n, ...]` input
+/// batch), one inference runs on the new version and the
+/// `first_infer` leg is timed — completing the E11
+/// cold-start-to-first-inference measurement.
+pub fn deliver(
+    registry: &Registry,
+    id: &str,
+    version: Option<u32>,
+    net: &mut SimulatedNetwork,
+    dest_root: &Path,
+    pool: &PoolHandle,
+    probe: Option<Tensor>,
+) -> crate::Result<Delivery> {
+    let pulled = pull(registry, id, version, net, dest_root)?;
+    let t_load = Instant::now();
+    let swap = pool.swap(&pulled.dir)?;
+    let load = t_load.elapsed();
+    let first_infer = match probe {
+        Some(x) => {
+            let t = Instant::now();
+            pool.infer(id, x)?;
+            t.elapsed()
+        }
+        None => Default::default(),
+    };
+    let timing = DeliveryTiming { load, first_infer, ..pulled.timing };
+    Ok(Delivery { pulled, swap, timing })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{BackendKind, EnginePool, PoolConfig};
+    use crate::testutil;
+
+    fn small_arch(id: &str) -> Architecture {
+        testutil::tiny_cnn(id, 16)
+    }
+
+    fn synth_weights(arch: &Architecture, seed: u64) -> WeightStore {
+        let mut ws = WeightStore::new();
+        for (i, (name, shape)) in arch.parameters().unwrap().iter().enumerate() {
+            ws.insert(name, Tensor::randn(shape.clone(), seed + i as u64, 0.1));
+        }
+        ws
+    }
+
+    #[test]
+    fn raw_publish_pull_is_bit_exact_vs_source() {
+        let root = testutil::tempdir("deploy-raw");
+        let reg = Registry::open(root.join("registry")).unwrap();
+        let arch = small_arch("deploy-raw-m");
+        let ws = synth_weights(&arch, 5);
+        let manifest = Manifest::new("deploy-raw-m", arch);
+        let report = publish_model(&reg, &manifest, &ws, WirePlan::Raw).unwrap();
+        assert_eq!(report.published.version, 1);
+        assert_eq!(report.wire_bytes, report.raw_bytes);
+        assert!(report.compression.is_none());
+
+        let mut net = SimulatedNetwork::wifi();
+        let pulled = pull(&reg, "deploy-raw-m", None, &mut net, &root.join("device")).unwrap();
+        assert_eq!(pulled.version, 1);
+        assert!(!pulled.was_compressed);
+        // Raw plan: the device's weights are the publisher's, byte for byte.
+        let device = std::fs::read(ModelFiles::new(&pulled.dir).weights()).unwrap();
+        assert_eq!(device, ws.to_bytes());
+    }
+
+    #[test]
+    fn compressed_publish_shrinks_and_pull_matches_manifest_hash() {
+        let root = testutil::tempdir("deploy-dlkc");
+        let reg = Registry::open(root.join("registry")).unwrap();
+        let report = publish_synthetic(
+            &reg,
+            testutil::tiny_cnn("deploy-c-m", 64),
+            9,
+            WirePlan::Compressed(StagePlan::default()),
+            "compressed fixture",
+        )
+        .unwrap();
+        assert!(
+            report.wire_bytes * 2 < report.raw_bytes,
+            "wire {} vs raw {}",
+            report.wire_bytes,
+            report.raw_bytes
+        );
+
+        let mut net = SimulatedNetwork::lte();
+        let pulled = pull(&reg, "deploy-c-m", None, &mut net, &root.join("device")).unwrap();
+        assert!(pulled.was_compressed);
+        let device = std::fs::read(ModelFiles::new(&pulled.dir).weights()).unwrap();
+        // Device materialization matches the publisher's recorded hash.
+        assert_eq!(crate::store::sha256_hex(&device), report.weights_sha256);
+    }
+
+    #[test]
+    fn pull_of_unknown_version_errors() {
+        let root = testutil::tempdir("deploy-nover");
+        let reg = Registry::open(root.join("registry")).unwrap();
+        publish_synthetic(&reg, small_arch("deploy-nv-m"), 2, WirePlan::Raw, "").unwrap();
+        let mut net = SimulatedNetwork::wifi();
+        assert!(pull(&reg, "deploy-nv-m", Some(9), &mut net, &root.join("d")).is_err());
+        assert!(pull(&reg, "ghost", None, &mut net, &root.join("d")).is_err());
+    }
+
+    #[test]
+    fn deliver_times_every_leg_and_swaps_versions() {
+        let root = testutil::tempdir("deploy-deliver");
+        let reg = Registry::open(root.join("registry")).unwrap();
+        publish_synthetic(&reg, small_arch("deploy-d-m"), 3, WirePlan::Raw, "v1").unwrap();
+
+        let pool = EnginePool::start(PoolConfig {
+            shards: 1,
+            queue_cap: 16,
+            backend: BackendKind::Cpu,
+        })
+        .unwrap();
+        let mut net = SimulatedNetwork::wifi();
+        let probe = Tensor::zeros(crate::tensor::Shape::nchw(1, 1, 8, 8));
+        let d1 = deliver(
+            &reg,
+            "deploy-d-m",
+            None,
+            &mut net,
+            &root.join("device"),
+            &pool,
+            Some(probe.clone()),
+        )
+        .unwrap();
+        assert_eq!(d1.swap.old_version, None, "first delivery is a cold start");
+        assert_eq!(d1.swap.info.version, 1);
+        assert!(d1.timing.fetch > Default::default());
+        assert!(d1.timing.first_infer > Default::default());
+        assert!(d1.timing.cold_start() > d1.timing.fetch);
+
+        // Publish v2 and deliver again: a hot-swap, not a cold start.
+        publish_synthetic(&reg, small_arch("deploy-d-m"), 4, WirePlan::Raw, "v2").unwrap();
+        let d2 = deliver(
+            &reg,
+            "deploy-d-m",
+            None,
+            &mut net,
+            &root.join("device"),
+            &pool,
+            Some(probe),
+        )
+        .unwrap();
+        assert_eq!(d2.swap.old_version, Some(1));
+        assert_eq!(d2.swap.info.version, 2);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn interrupted_pull_resumes_and_reports_retries() {
+        let root = testutil::tempdir("deploy-resume");
+        let reg = Registry::open(root.join("registry")).unwrap();
+        // Wide model → multi-chunk package so interruptions can strike.
+        publish_synthetic(&reg, testutil::tiny_cnn("deploy-r-m", 2048), 6, WirePlan::Raw, "")
+            .unwrap();
+        let mut saw_retry = false;
+        for seed in 0..6u64 {
+            let mut net =
+                SimulatedNetwork::wifi().with_interruptions(0.25).with_seed(700 + seed);
+            match pull(&reg, "deploy-r-m", None, &mut net, &root.join("device")) {
+                Ok(pulled) => {
+                    // Progress was never lost: exactly the payload crossed
+                    // the link, however many reconnects it took.
+                    assert_eq!(pulled.fetch.transferred, pulled.fetch.bytes, "seed {seed}");
+                    saw_retry |= pulled.fetch.retries > 0;
+                }
+                // A download may legitimately exhaust its attempt budget
+                // under heavy interruption; anything else is a bug.
+                Err(e) => assert!(e.to_string().contains("gave up"), "seed {seed}: {e}"),
+            }
+        }
+        assert!(saw_retry, "a multi-chunk package at 0.25/chunk must resume at least once");
+    }
+}

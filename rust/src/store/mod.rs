@@ -5,16 +5,27 @@
 //! download pretrained and reusable Deep Learning models."
 //!
 //! Pieces:
-//! - [`package`]: single-file `.dlkpkg` container (manifest + weights +
-//!   HLO artifacts) with per-entry sha256 integrity.
-//! - [`registry`]: the store itself — publish packages, list versions,
+//! - [`Package`]: single-file `.dlkpkg` container (manifest + weights +
+//!   HLO artifacts) with per-entry sha256 integrity. The normative
+//!   byte-level spec, including a worked example, is
+//!   `docs/PACKAGE_FORMAT.md` at the repository root.
+//! - [`Registry`]: the store itself — publish packages, list versions,
 //!   fetch over a [`SimulatedNetwork`] with configurable
-//!   bandwidth/latency (the device-side download path).
+//!   bandwidth/latency and byte-offset resume (the device-side download
+//!   path).
+//! - [`deploy`]: the lifecycle layer — compress → publish → fetch →
+//!   verify → decompress → hot-swap into a running engine pool, with
+//!   cold-start-to-first-inference timing (experiment E11).
 
+pub mod deploy;
 mod fetch;
 mod package;
 mod registry;
 
+pub use deploy::{
+    deliver, publish_model, publish_synthetic, pull, Delivery, PublishReport, PulledModel,
+    WirePlan,
+};
 pub use fetch::{FetchStats, SimulatedNetwork};
 pub use package::{Package, PackageEntry, PACKAGE_MAGIC};
 pub use registry::{PublishedModel, Registry};

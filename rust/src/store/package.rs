@@ -10,6 +10,11 @@
 //! ```
 //! Every entry carries its own sha256; unpack verifies all of them, so a
 //! corrupted download is detected before anything touches the model cache.
+//!
+//! The normative byte-level specification — container framing, entry
+//! names (`manifest.json`, `weights.dlkw` / `weights.dlkc`,
+//! `model_b{N}.hlo.txt`), and a worked example — is `docs/PACKAGE_FORMAT.md`
+//! at the repository root.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -62,7 +67,8 @@ impl Package {
         self.entries.values().map(|v| v.len()).sum()
     }
 
-    /// Build a package from a model directory (manifest + weights + HLO).
+    /// Build a package from a model directory (manifest + weights —
+    /// raw `weights.dlkw` and/or compressed `weights.dlkc` — + HLO).
     pub fn from_model_dir(dir: &Path) -> crate::Result<Package> {
         let mut pkg = Package::new();
         let mut found_manifest = false;
@@ -81,6 +87,7 @@ impl Package {
                 .to_string();
             let keep = name == "manifest.json"
                 || name == "weights.dlkw"
+                || name == "weights.dlkc"
                 || (name.starts_with("model_b") && name.ends_with(".hlo.txt"));
             if !keep {
                 continue;
@@ -90,8 +97,8 @@ impl Package {
         }
         anyhow::ensure!(found_manifest, "{} has no manifest.json", dir.display());
         anyhow::ensure!(
-            pkg.get("weights.dlkw").is_some(),
-            "{} has no weights.dlkw",
+            pkg.get("weights.dlkw").is_some() || pkg.get("weights.dlkc").is_some(),
+            "{} has neither weights.dlkw nor weights.dlkc",
             dir.display()
         );
         Ok(pkg)
@@ -100,13 +107,26 @@ impl Package {
     /// Unpack into a directory (verifying nothing extra — integrity was
     /// verified at parse time).
     pub fn unpack_to(&self, dir: &Path) -> crate::Result<()> {
+        self.unpack_filtered_to(dir, |_| true)
+    }
+
+    /// Unpack only the entries `keep` accepts. Used by the delivery layer
+    /// to skip the weights entries it materializes itself (no double
+    /// write of the dense weights, no compressed copy left on device).
+    pub fn unpack_filtered_to(
+        &self,
+        dir: &Path,
+        keep: impl Fn(&str) -> bool,
+    ) -> crate::Result<()> {
         std::fs::create_dir_all(dir)?;
         for (name, data) in &self.entries {
             anyhow::ensure!(
                 !name.contains('/') && !name.contains('\\') && !name.starts_with('.'),
                 "package entry `{name}` has an unsafe name"
             );
-            std::fs::write(dir.join(name), data)?;
+            if keep(name) {
+                std::fs::write(dir.join(name), data)?;
+            }
         }
         Ok(())
     }
@@ -135,28 +155,22 @@ impl Package {
 
     /// Parse + verify from bytes.
     pub fn from_bytes(bytes: &[u8]) -> crate::Result<Package> {
-        let mut pos = 0usize;
-        let take = |pos: &mut usize, n: usize| -> crate::Result<&[u8]> {
-            anyhow::ensure!(*pos + n <= bytes.len(), "package truncated at byte {}", *pos);
-            let s = &bytes[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
-        };
-        anyhow::ensure!(take(&mut pos, 4)? == PACKAGE_MAGIC, "bad package magic");
-        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let mut r = crate::wire::Reader::new(bytes);
+        anyhow::ensure!(r.take(4)? == PACKAGE_MAGIC, "bad package magic");
+        let version = r.u32()?;
         anyhow::ensure!(version == VERSION, "unsupported package version {version}");
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let count = r.u32()? as usize;
         anyhow::ensure!(count <= 4096, "implausible entry count {count}");
         let mut pkg = Package::new();
         for _ in 0..count {
-            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name_len = r.u32()? as usize;
             anyhow::ensure!(name_len <= 4096, "implausible name length {name_len}");
-            let name = std::str::from_utf8(take(&mut pos, name_len)?)
+            let name = std::str::from_utf8(r.take(name_len)?)
                 .map_err(|_| anyhow::anyhow!("package entry name is not UTF-8"))?
                 .to_string();
-            let data_len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
-            let expect_sha: Vec<u8> = take(&mut pos, 32)?.to_vec();
-            let data = take(&mut pos, data_len)?.to_vec();
+            let data_len = r.u64_len()?;
+            let expect_sha: Vec<u8> = r.take(32)?.to_vec();
+            let data = r.take(data_len)?.to_vec();
             let got_sha = {
                 use sha2::{Digest, Sha256};
                 let mut h = Sha256::new();
@@ -169,7 +183,7 @@ impl Package {
             );
             pkg.entries.insert(name, data);
         }
-        anyhow::ensure!(pos == bytes.len(), "trailing bytes after package");
+        anyhow::ensure!(r.is_empty(), "trailing bytes after package");
         Ok(pkg)
     }
 }
@@ -238,6 +252,20 @@ mod tests {
         let src = crate::testutil::tempdir("pkg-nomanifest");
         std::fs::write(src.join("weights.dlkw"), b"x").unwrap();
         assert!(Package::from_model_dir(&src).is_err());
+    }
+
+    #[test]
+    fn filtered_unpack_skips_entries_but_still_validates_names() {
+        let p = sample();
+        let dst = crate::testutil::tempdir("pkg-filter");
+        p.unpack_filtered_to(&dst, |n| n != "weights.dlkw").unwrap();
+        assert!(dst.join("manifest.json").exists());
+        assert!(!dst.join("weights.dlkw").exists());
+        // Unsafe names are rejected even when the filter drops them.
+        let mut evil = Package::new();
+        evil.add("../evil", vec![1]);
+        let dst2 = crate::testutil::tempdir("pkg-filter-evil");
+        assert!(evil.unpack_filtered_to(&dst2, |_| false).is_err());
     }
 
     #[test]

@@ -50,20 +50,35 @@ impl Registry {
     }
 
     /// Publish a package. Returns the stored version (auto-incremented).
+    ///
+    /// Validation before admission: the manifest parses; the weights entry
+    /// — raw `weights.dlkw` or Deep-Compressed `weights.dlkc` (which is
+    /// decoded here) — reconstructs to bytes matching the manifest's
+    /// `weights_sha256`; every declared AOT batch has its HLO entry. The
+    /// stored package's manifest is re-stamped with the version the
+    /// registry assigned, so a fetched package is self-describing.
     pub fn publish(&self, pkg: &Package) -> crate::Result<PublishedModel> {
         // Validate: manifest parses, weights integrity holds.
         let manifest_bytes = pkg
             .get("manifest.json")
             .ok_or_else(|| anyhow::anyhow!("package has no manifest.json"))?;
-        let manifest = Manifest::from_json(&json::parse(
+        let mut manifest = Manifest::from_json(&json::parse(
             std::str::from_utf8(manifest_bytes)
                 .map_err(|_| anyhow::anyhow!("manifest.json is not UTF-8"))?,
         )?)?;
-        let weights = pkg
-            .get("weights.dlkw")
-            .ok_or_else(|| anyhow::anyhow!("package has no weights.dlkw"))?;
+        // Borrow raw weights in place; only the compressed branch has to
+        // materialize bytes (no weight-sized copy on the raw path).
+        let weights: std::borrow::Cow<[u8]> = if let Some(raw) = pkg.get("weights.dlkw") {
+            std::borrow::Cow::Borrowed(raw)
+        } else if let Some(wire) = pkg.get("weights.dlkc") {
+            let cm = crate::compression::CompressedModel::from_bytes(wire)
+                .map_err(|e| anyhow::anyhow!("publish rejected: bad weights.dlkc: {e}"))?;
+            std::borrow::Cow::Owned(crate::compression::decompress_model(&cm)?.to_bytes())
+        } else {
+            anyhow::bail!("package has neither weights.dlkw nor weights.dlkc");
+        };
         if let Some(expect) = &manifest.weights_sha256 {
-            let got = super::sha256_hex(weights);
+            let got = super::sha256_hex(&weights);
             anyhow::ensure!(
                 &got == expect,
                 "publish rejected: weights sha256 {got} != manifest {expect}"
@@ -84,9 +99,17 @@ impl Registry {
             .unwrap_or(0) as u32;
         let version = current + 1;
 
+        // Stamp the assigned version into the stored manifest so devices
+        // (and the hot-swap path) see which version they are running.
+        let mut stored = pkg.clone();
+        if manifest.version != version {
+            manifest.version = version;
+            stored.add("manifest.json", json::to_string(&manifest.to_json()).into_bytes());
+        }
+
         let dir = self.root.join(&manifest.id).join(format!("v{version}"));
         std::fs::create_dir_all(&dir)?;
-        let bytes = pkg.to_bytes();
+        let bytes = stored.to_bytes();
         std::fs::write(dir.join("model.dlkpkg"), &bytes)?;
 
         // Update index.
@@ -156,6 +179,47 @@ impl Registry {
             .ok_or_else(|| anyhow::anyhow!("model `{id}` is not in the store"))
     }
 
+    /// All published versions of a model (ascending).
+    pub fn versions(&self, id: &str) -> crate::Result<Vec<u32>> {
+        let index = self.read_index()?;
+        let list = index
+            .path(&format!("models/{id}/versions"))
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not in the store"))?;
+        list.iter()
+            .map(|v| {
+                v.as_i64()
+                    .map(|v| v as u32)
+                    .ok_or_else(|| anyhow::anyhow!("corrupt versions list for `{id}`"))
+            })
+            .collect()
+    }
+
+    /// Connection attempts [`Registry::fetch_package`] makes before giving
+    /// up on an interrupted download (progress is kept across attempts).
+    pub const FETCH_ATTEMPTS: u32 = 8;
+
+    /// Raw bytes of one published package (the server side of a fetch).
+    pub fn package_bytes(&self, id: &str, version: u32) -> crate::Result<Vec<u8>> {
+        std::fs::read(self.package_path(id, version))
+            .map_err(|e| anyhow::anyhow!("model `{id}` v{version} is not in the store: {e}"))
+    }
+
+    /// Fetch one published version through `net` with byte-offset resume,
+    /// and verify the package's per-entry integrity on arrival.
+    pub fn fetch_package(
+        &self,
+        id: &str,
+        version: u32,
+        net: &mut SimulatedNetwork,
+    ) -> crate::Result<(Package, FetchStats)> {
+        let bytes = self.package_bytes(id, version)?;
+        let (received, stats) = net.download(&bytes, Self::FETCH_ATTEMPTS)?;
+        let pkg = Package::from_bytes(&received)
+            .map_err(|e| anyhow::anyhow!("fetch of `{id}` v{version} failed verification: {e}"))?;
+        Ok((pkg, stats))
+    }
+
     /// Fetch the latest version of `id` through `net`, verify integrity,
     /// unpack into `dest_dir`. Returns transfer stats.
     pub fn fetch_to(
@@ -165,10 +229,7 @@ impl Registry {
         dest_dir: &Path,
     ) -> crate::Result<FetchStats> {
         let version = self.latest_version(id)?;
-        let bytes = std::fs::read(self.package_path(id, version))?;
-        let (received, stats) = net.transfer(&bytes);
-        let pkg = Package::from_bytes(&received)
-            .map_err(|e| anyhow::anyhow!("fetch of `{id}` failed verification: {e}"))?;
+        let (pkg, stats) = self.fetch_package(id, version, net)?;
         pkg.unpack_to(dest_dir)?;
         Ok(stats)
     }
@@ -236,6 +297,79 @@ mod tests {
         assert_eq!(reg.publish(&test_package("m")).unwrap().version, 1);
         assert_eq!(reg.publish(&test_package("m")).unwrap().version, 2);
         assert_eq!(reg.latest_version("m").unwrap(), 2);
+        assert_eq!(reg.versions("m").unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn stored_manifest_is_stamped_with_registry_version() {
+        let root = crate::testutil::tempdir("registry-stamp");
+        let reg = Registry::open(&root).unwrap();
+        reg.publish(&test_package("m")).unwrap();
+        reg.publish(&test_package("m")).unwrap();
+        // Pull each version explicitly; its manifest must say which one it is.
+        let mut net = SimulatedNetwork::wifi();
+        for v in [1u32, 2] {
+            let (pkg, _) = reg.fetch_package("m", v, &mut net).unwrap();
+            let m = Manifest::from_json(
+                &crate::json::parse(
+                    std::str::from_utf8(pkg.get("manifest.json").unwrap()).unwrap(),
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            assert_eq!(m.version, v);
+        }
+    }
+
+    #[test]
+    fn compressed_package_publishes_and_validates() {
+        use crate::compression::{compress_model, decompress_model, StagePlan};
+        // Build a package whose weights travel as weights.dlkc.
+        let id = "tiny-compressed";
+        let mut arch = crate::model::Architecture::new(id, &[1, 6, 6]);
+        arch.push(
+            "conv1",
+            crate::model::LayerKind::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+        );
+        arch.push("gap", crate::model::LayerKind::GlobalAvgPool);
+        arch.push("softmax", crate::model::LayerKind::Softmax);
+        let mut ws = WeightStore::new();
+        for (name, shape) in arch.parameters().unwrap() {
+            ws.insert(&name, Tensor::randn(shape, 17, 0.1));
+        }
+        let (cm, _) = compress_model(&ws, StagePlan::default()).unwrap();
+        // The manifest hash covers the *reconstructed* weights, which is
+        // what every device will decode.
+        let canonical = decompress_model(&cm).unwrap().to_bytes();
+        let mut manifest = Manifest::new(id, arch);
+        manifest.weights_sha256 = Some(super::super::sha256_hex(&canonical));
+        let mut pkg = Package::new();
+        pkg.add("manifest.json", crate::json::to_string(&manifest.to_json()).into_bytes());
+        pkg.add("weights.dlkc", cm.to_bytes());
+
+        let root = crate::testutil::tempdir("registry-dlkc");
+        let reg = Registry::open(&root).unwrap();
+        reg.publish(&pkg).unwrap();
+
+        // Tampering with the compressed entry must be rejected at publish.
+        let mut wire = cm.to_bytes();
+        let n = wire.len();
+        wire[n - 1] ^= 0x10;
+        let mut bad = pkg.clone();
+        bad.add("weights.dlkc", wire);
+        assert!(reg.publish(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_weights_entry_rejected() {
+        // A manifest-only package: valid manifest, no weights entry at all.
+        let with_weights = test_package("w");
+        let mut pkg = Package::new();
+        pkg.add("manifest.json", with_weights.get("manifest.json").unwrap().to_vec());
+        let root = crate::testutil::tempdir("registry-noweights");
+        let reg = Registry::open(&root).unwrap();
+        let e = reg.publish(&pkg).unwrap_err().to_string();
+        assert!(e.contains("neither weights.dlkw nor weights.dlkc"), "{e}");
     }
 
     #[test]

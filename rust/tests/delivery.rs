@@ -1,0 +1,389 @@
+//! End-to-end tests for the over-the-air model-delivery subsystem
+//! (`store::deploy`): publish → fetch → verify → decompress → hot-swap.
+//!
+//! Everything here runs on synthetic models and the CPU backend — no
+//! trained artifacts needed, so the suite runs in any environment.
+
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::model::{Manifest, ModelFiles, WeightStore};
+use deeplearningkit::runtime::{BackendKind, Engine, EngineConfig, EnginePool, PoolConfig};
+use deeplearningkit::store::{self, deploy, Registry, SimulatedNetwork, WirePlan};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{compression, testutil};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+fn cpu_pool(shards: usize, queue_cap: usize) -> deeplearningkit::runtime::PoolHandle {
+    EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu }).unwrap()
+}
+
+fn probe() -> Tensor {
+    Tensor::randn(Shape::nchw(1, 1, 8, 8), 31_337, 1.0)
+}
+
+/// Reference output: load `dir` into a standalone engine and run `x`.
+fn reference_output(dir: &std::path::Path, id: &str, x: &Tensor) -> Tensor {
+    let engine = Engine::start_with(EngineConfig {
+        shard: 0,
+        queue_cap: 8,
+        backend: BackendKind::Cpu,
+    })
+    .unwrap();
+    engine.load(dir).unwrap();
+    let out = engine.infer(id, x.clone()).unwrap();
+    engine.shutdown();
+    out
+}
+
+#[test]
+fn ota_round_trip_is_bit_exact_across_devices() {
+    // Zoo-style model → compress → publish → two devices fetch + verify +
+    // decompress → both materialize bit-identical weights that load and
+    // serve.
+    let root = testutil::tempdir("delivery-roundtrip");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    let report = store::publish_synthetic(
+        &reg,
+        testutil::tiny_cnn("ota-m", 64),
+        7,
+        WirePlan::Compressed(compression::StagePlan::default()),
+        "round-trip fixture",
+    )
+    .unwrap();
+    assert!(report.wire_bytes < report.raw_bytes, "compression must shrink the wire form");
+
+    let mut net_a = SimulatedNetwork::lte().with_seed(1);
+    let mut net_b = SimulatedNetwork::three_g().with_seed(2);
+    let a = deploy::pull(&reg, "ota-m", None, &mut net_a, &root.join("device-a")).unwrap();
+    let b = deploy::pull(&reg, "ota-m", None, &mut net_b, &root.join("device-b")).unwrap();
+    assert!(a.was_compressed && b.was_compressed);
+
+    let bytes_a = std::fs::read(ModelFiles::new(&a.dir).weights()).unwrap();
+    let bytes_b = std::fs::read(ModelFiles::new(&b.dir).weights()).unwrap();
+    // Bit-exact: the same package version reconstructs identically on
+    // every device, and matches the hash the publisher recorded.
+    assert_eq!(bytes_a, bytes_b);
+    assert_eq!(store::sha256_hex(&bytes_a), report.weights_sha256);
+    // The reconstructed store parses and validates against the architecture.
+    let ws = WeightStore::from_bytes(&bytes_a).unwrap();
+    ws.validate(&testutil::tiny_cnn("ota-m", 64)).unwrap();
+
+    // And it serves: load into a pool, run the probe.
+    let pool = cpu_pool(1, 8);
+    pool.load(&a.dir).unwrap();
+    let (out, _) = pool.infer("ota-m", probe()).unwrap();
+    assert_eq!(out.shape().dims(), &[1, 4]);
+    pool.shutdown();
+}
+
+#[test]
+fn raw_round_trip_is_bit_exact_vs_publisher_weights() {
+    let root = testutil::tempdir("delivery-raw-rt");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    let arch = testutil::tiny_cnn("raw-m", 16);
+    let mut ws = WeightStore::new();
+    for (i, (name, shape)) in arch.parameters().unwrap().iter().enumerate() {
+        ws.insert(name, Tensor::randn(shape.clone(), 100 + i as u64, 0.1));
+    }
+    let manifest = Manifest::new("raw-m", arch);
+    store::publish_model(&reg, &manifest, &ws, WirePlan::Raw).unwrap();
+
+    let mut net = SimulatedNetwork::wifi();
+    let pulled = deploy::pull(&reg, "raw-m", None, &mut net, &root.join("device")).unwrap();
+    assert!(!pulled.was_compressed);
+    let device_bytes = std::fs::read(ModelFiles::new(&pulled.dir).weights()).unwrap();
+    assert_eq!(device_bytes, ws.to_bytes(), "raw plan is bit-exact vs the source weights");
+}
+
+#[test]
+fn versioned_pull_fetches_the_requested_version() {
+    let root = testutil::tempdir("delivery-versions");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("ver-m", 16), 1, WirePlan::Raw, "v1")
+        .unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("ver-m", 16), 2, WirePlan::Raw, "v2")
+        .unwrap();
+    assert_eq!(reg.versions("ver-m").unwrap(), vec![1, 2]);
+
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "ver-m", Some(1), &mut net, &dest).unwrap();
+    let v2 = deploy::pull(&reg, "ver-m", None, &mut net, &dest).unwrap();
+    assert_eq!(v1.version, 1);
+    assert_eq!(v2.version, 2);
+    assert_ne!(v1.dir, v2.dir, "versions lay out side by side");
+    for pulled in [&v1, &v2] {
+        let m = Manifest::load(&ModelFiles::new(&pulled.dir).manifest()).unwrap();
+        assert_eq!(m.version, pulled.version, "stamped manifest matches the directory");
+    }
+}
+
+#[test]
+fn corrupted_fetch_is_rejected_before_touching_the_device_dir() {
+    let root = testutil::tempdir("delivery-corrupt");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("cor-m", 16), 4, WirePlan::Raw, "")
+        .unwrap();
+    let dest = root.join("device");
+    // Every transfer corrupts one byte somewhere in the package; whichever
+    // field it hits (entry data → sha mismatch, framing → parse error,
+    // entry name → missing required entry), the pull must fail before
+    // anything reaches the device's model directory.
+    for seed in 13..21u64 {
+        let mut net = SimulatedNetwork::new(Duration::ZERO, 1_000_000, 1.0).with_seed(seed);
+        assert!(
+            deploy::pull(&reg, "cor-m", None, &mut net, &dest).is_err(),
+            "seed {seed}: corrupted transfer must not pull"
+        );
+    }
+    assert!(
+        !dest.join("cor-m").join("v1").join("weights.dlkw").exists(),
+        "a failed pull must not materialize weights"
+    );
+}
+
+#[test]
+fn hot_swap_serves_old_version_to_in_flight_and_new_version_after() {
+    // The acceptance-criterion test: with the owning shard stalled, an
+    // in-flight request enqueued before the swap completes on v1 while a
+    // request enqueued after the swap returns v2 — and neither fails.
+    let root = testutil::tempdir("delivery-swap");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("swap-m", 16), 10, WirePlan::Raw, "v1")
+        .unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("swap-m", 16), 20, WirePlan::Raw, "v2")
+        .unwrap();
+
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "swap-m", Some(1), &mut net, &dest).unwrap();
+    let v2 = deploy::pull(&reg, "swap-m", Some(2), &mut net, &dest).unwrap();
+
+    let x = probe();
+    let ref1 = reference_output(&v1.dir, "swap-m", &x);
+    let ref2 = reference_output(&v2.dir, "swap-m", &x);
+    assert_ne!(ref1.data(), ref2.data(), "versions must be distinguishable");
+
+    let pool = cpu_pool(1, 8);
+    let info = pool.load(&v1.dir).unwrap();
+    assert_eq!(info.version, 1);
+    let shard = pool.shard_handle(info.shard);
+
+    // Hold the engine thread so the queue order is deterministic:
+    //   [stall][infer#1][swap v2][infer#2]
+    shard.debug_stall(Duration::from_millis(400)).unwrap();
+    let ticket1 = shard.try_infer_async("swap-m", x.clone()).unwrap();
+
+    let pool_for_swap = pool.clone();
+    let v2_dir = v2.dir.clone();
+    let swapper = std::thread::spawn(move || pool_for_swap.swap(&v2_dir));
+    // Give the swap thread time to enqueue behind infer#1 (it then blocks
+    // until the drain completes).
+    std::thread::sleep(Duration::from_millis(150));
+    let ticket2 = shard.try_infer_async("swap-m", x.clone()).unwrap();
+
+    let out1 = ticket1.wait().unwrap();
+    let out2 = ticket2.wait().unwrap();
+    let report = swapper.join().unwrap().unwrap();
+
+    assert_eq!(out1.data(), ref1.data(), "in-flight request completed on the old version");
+    assert_eq!(out2.data(), ref2.data(), "post-swap request served by the new version");
+    assert_eq!(report.old_version, Some(1));
+    assert_eq!(report.info.version, 2);
+    assert_eq!(report.shard, info.shard);
+    assert_eq!(pool.shard_of("swap-m"), Some(info.shard), "model stayed on its shard");
+    pool.shutdown();
+}
+
+#[test]
+fn coordinator_update_fails_zero_requests_under_load() {
+    let root = testutil::tempdir("delivery-coord");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("live-m", 16), 50, WirePlan::Raw, "v1")
+        .unwrap();
+
+    let pool = cpu_pool(2, 1024);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 1024,
+            },
+        },
+    );
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "live-m", None, &mut net, &dest).unwrap();
+    coord.serve_model(&v1.dir).unwrap();
+    let coord = std::sync::Arc::new(coord);
+
+    let completed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 60;
+
+    let report = std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let coord = coord.clone();
+            let completed = &completed;
+            let failed = &failed;
+            scope.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    // Coordinator inputs carry no batch dimension (the
+                    // batcher stacks rows): [c, h, w].
+                    let x = Tensor::randn(
+                        Shape::new(&[1usize, 8, 8]),
+                        (c * PER_CLIENT + i) as u64,
+                        1.0,
+                    );
+                    match coord.infer("live-m", x) {
+                        Ok(r) => {
+                            assert_eq!(r.output.shape().dims(), &[4]);
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+
+        // Mid-workload: publish v2, pull it, hot-swap it in.
+        std::thread::sleep(Duration::from_millis(20));
+        store::publish_synthetic(&reg, testutil::tiny_cnn("live-m", 16), 60, WirePlan::Raw, "v2")
+            .unwrap();
+        let mut net = SimulatedNetwork::wifi();
+        let v2 = deploy::pull(&reg, "live-m", None, &mut net, &dest).unwrap();
+        coord.update_model("live-m", &v2.dir).unwrap()
+    });
+
+    assert_eq!(
+        failed.load(Ordering::Relaxed),
+        0,
+        "a hot-swap must fail zero in-flight requests"
+    );
+    assert_eq!(completed.load(Ordering::Relaxed), (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(report.old_version, Some(1));
+    assert_eq!(report.info.version, 2);
+
+    // Requests after the update are served by v2, matching a standalone
+    // engine loaded from the same pulled directory. (Coordinator takes the
+    // item form [c,h,w]; the engine takes the batch form [1,c,h,w].)
+    let x_item = Tensor::randn(Shape::new(&[1usize, 8, 8]), 31_337, 1.0);
+    let x_batch = Tensor::new(Shape::nchw(1, 1, 8, 8), x_item.data().to_vec()).unwrap();
+    let after = coord.infer("live-m", x_item).unwrap();
+    let served = coord.served_models();
+    assert_eq!(served.len(), 1);
+    assert_eq!(served[0].version, 2);
+    let v2_dir = dest.join("live-m").join("v2");
+    let ref2 = reference_output(&v2_dir, "live-m", &x_batch);
+    assert_eq!(after.output.data(), ref2.data(), "post-update traffic hits the new version");
+    pool.shutdown();
+}
+
+#[test]
+fn update_rejects_versions_that_cannot_serve_the_running_batch_size() {
+    // The batcher's max batch is baked in at serve time; an update to a
+    // version whose batch ladder is smaller must be rejected up front
+    // (otherwise every oversized flush would fail mid-traffic).
+    let v1 = testutil::tempdir("delivery-clamp-v1");
+    testutil::write_model_dir(&v1, "clamp-m", testutil::tiny_cnn("clamp-m", 16), 1, &[1, 4, 8])
+        .unwrap();
+    let v2 = testutil::tempdir("delivery-clamp-v2");
+    testutil::write_model_dir(&v2, "clamp-m", testutil::tiny_cnn("clamp-m", 16), 2, &[1, 2])
+        .unwrap();
+
+    let pool = cpu_pool(1, 64);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        },
+    );
+    coord.serve_model(&v1).unwrap();
+    let e = coord.update_model("clamp-m", &v2).unwrap_err().to_string();
+    assert!(e.contains("largest executable batch 2"), "{e}");
+    // The old version is untouched and still serving.
+    let x = Tensor::randn(Shape::new(&[1usize, 8, 8]), 3, 1.0);
+    assert!(coord.infer("clamp-m", x).is_ok());
+    assert_eq!(coord.served_models()[0].version, 1);
+    pool.shutdown();
+}
+
+#[test]
+fn cache_swap_version_keeps_serving_through_version_bumps() {
+    use deeplearningkit::cache::{ModelCache, PolicyKind};
+    let root = testutil::tempdir("delivery-cache");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("cache-m", 16), 70, WirePlan::Raw, "v1")
+        .unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("cache-m", 16), 80, WirePlan::Raw, "v2")
+        .unwrap();
+
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "cache-m", Some(1), &mut net, &dest).unwrap();
+    let v2 = deploy::pull(&reg, "cache-m", Some(2), &mut net, &dest).unwrap();
+
+    let pool = cpu_pool(1, 8);
+    let mut cache = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+    cache.register("cache-m", &v1.dir);
+    let access = cache.ensure("cache-m").unwrap();
+    assert!(!access.hit);
+    assert_eq!(cache.resident_info("cache-m").unwrap().version, 1);
+
+    let (report, evicted) = cache.swap_version("cache-m", &v2.dir).unwrap();
+    assert_eq!(report.old_version, Some(1));
+    assert!(evicted.is_empty());
+    assert_eq!(cache.resident_info("cache-m").unwrap().version, 2);
+    assert_eq!(cache.stats().swaps, 1);
+    // Still a hit — no reload — and inference flows.
+    let (out, access) = cache.infer("cache-m", probe()).unwrap();
+    assert!(access.hit);
+    assert_eq!(out.shape().dims(), &[1, 4]);
+    pool.shutdown();
+}
+
+#[test]
+fn delivery_timing_reports_every_leg() {
+    let root = testutil::tempdir("delivery-timing");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(
+        &reg,
+        testutil::tiny_cnn("timing-m", 64),
+        90,
+        WirePlan::Compressed(compression::StagePlan::default()),
+        "",
+    )
+    .unwrap();
+    let pool = cpu_pool(1, 8);
+    let mut net = SimulatedNetwork::lte();
+    let d = deploy::deliver(
+        &reg,
+        "timing-m",
+        None,
+        &mut net,
+        &root.join("device"),
+        &pool,
+        Some(probe()),
+    )
+    .unwrap();
+    assert!(d.timing.fetch >= Duration::from_millis(50), "LTE RTT alone is 50 ms");
+    assert!(d.timing.decompress > Duration::ZERO, "compressed pull must time decompression");
+    assert!(d.timing.first_infer > Duration::ZERO);
+    assert_eq!(
+        d.timing.cold_start(),
+        d.timing.fetch + d.timing.verify + d.timing.decompress + d.timing.load
+            + d.timing.first_infer
+    );
+    let s = d.timing.summary();
+    assert!(s.contains("cold-start"), "{s}");
+    pool.shutdown();
+}

@@ -1,0 +1,234 @@
+//! Offline stand-in for the `sha2` crate.
+//!
+//! This build environment has no network access, so the repository vendors
+//! the slice of the `sha2` API the codebase uses: [`Sha256`] driven through
+//! the [`Digest`] trait (`new` / `update` / `finalize`). The implementation
+//! is a from-scratch FIPS 180-4 SHA-256; [`Digest::finalize`] returns a
+//! plain `[u8; 32]` instead of upstream's `GenericArray<u8, U32>`, which
+//! coerces the same way at every call site in this repo (`&digest` as
+//! `&[u8]`, `.to_vec()`, by-value iteration).
+//!
+//! Swap this path dependency for crates.io `sha2 = "0.10"` once builds may
+//! touch the network; no call sites need to change.
+
+/// The hashing interface (mirrors the subset of `sha2::Digest` used here).
+pub trait Digest: Sized {
+    /// Fresh hasher state.
+    fn new() -> Self;
+    /// Absorb more input.
+    fn update(&mut self, data: impl AsRef<[u8]>);
+    /// Consume the hasher, returning the 32-byte digest.
+    fn finalize(self) -> [u8; 32];
+}
+
+/// FIPS 180-4 SHA-256.
+pub struct Sha256 {
+    /// Hash state H0..H7.
+    state: [u32; 8],
+    /// Partially filled input block.
+    buffer: [u8; 64],
+    /// Bytes currently in `buffer`.
+    buffered: usize,
+    /// Total message length in bytes.
+    total_len: u64,
+}
+
+/// First 32 bits of the fractional parts of the square roots of the first
+/// 8 primes (FIPS 180-4 §5.3.3).
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+/// First 32 bits of the fractional parts of the cube roots of the first
+/// 64 primes (FIPS 180-4 §4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+impl Sha256 {
+    /// Compress one 64-byte block into the state (FIPS 180-4 §6.2.2).
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for t in 16..64 {
+            let s0 = w[t - 15].rotate_right(7) ^ w[t - 15].rotate_right(18) ^ (w[t - 15] >> 3);
+            let s1 = w[t - 2].rotate_right(17) ^ w[t - 2].rotate_right(19) ^ (w[t - 2] >> 10);
+            w[t] = w[t - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[t - 7])
+                .wrapping_add(s1);
+        }
+
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for t in 0..64 {
+            let big_s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(big_s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[t])
+                .wrapping_add(w[t]);
+            let big_s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = big_s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+impl Digest for Sha256 {
+    fn new() -> Sha256 {
+        Sha256 { state: H0, buffer: [0u8; 64], buffered: 0, total_len: 0 }
+    }
+
+    fn update(&mut self, data: impl AsRef<[u8]>) {
+        let mut input = data.as_ref();
+        self.total_len = self.total_len.wrapping_add(input.len() as u64);
+
+        // Top up a partial block first.
+        if self.buffered > 0 {
+            let take = input.len().min(64 - self.buffered);
+            self.buffer[self.buffered..self.buffered + take].copy_from_slice(&input[..take]);
+            self.buffered += take;
+            input = &input[take..];
+            if self.buffered == 64 {
+                let block = self.buffer;
+                self.compress(&block);
+                self.buffered = 0;
+            }
+        }
+
+        // Whole blocks straight from the input.
+        while input.len() >= 64 {
+            let block: [u8; 64] = input[..64].try_into().unwrap();
+            self.compress(&block);
+            input = &input[64..];
+        }
+
+        // Stash the tail.
+        if !input.is_empty() {
+            self.buffer[..input.len()].copy_from_slice(input);
+            self.buffered = input.len();
+        }
+    }
+
+    fn finalize(mut self) -> [u8; 32] {
+        // Padding: 0x80, zeros to 56 mod 64, then the bit length (big-endian
+        // u64). May spill into one extra block.
+        let bit_len = self.total_len.wrapping_mul(8);
+        let mut pad = [0u8; 72];
+        pad[0] = 0x80;
+        // Bytes needed so (buffered + pad_len) % 64 == 56.
+        let pad_len = 1 + (55usize.wrapping_sub(self.buffered)) % 64;
+        pad[pad_len..pad_len + 8].copy_from_slice(&bit_len.to_be_bytes());
+        self.update(&pad[..pad_len + 8]);
+        debug_assert_eq!(self.buffered, 0);
+
+        let mut out = [0u8; 32];
+        for (i, word) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn digest_of(data: &[u8]) -> String {
+        let mut h = Sha256::new();
+        h.update(data);
+        hex(&h.finalize())
+    }
+
+    #[test]
+    fn fips_vectors() {
+        // FIPS 180-4 / NIST CAVP known answers.
+        assert_eq!(
+            digest_of(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            digest_of(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            digest_of(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn million_a() {
+        let mut h = Sha256::new();
+        for _ in 0..1_000_000 {
+            h.update([b'a']);
+        }
+        assert_eq!(
+            hex(&h.finalize()),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let oneshot = digest_of(&data);
+        // Feed in awkward chunk sizes that straddle block boundaries.
+        for chunk in [1usize, 7, 63, 64, 65, 200] {
+            let mut h = Sha256::new();
+            for part in data.chunks(chunk) {
+                h.update(part);
+            }
+            assert_eq!(hex(&h.finalize()), oneshot, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn boundary_lengths() {
+        // Lengths around the padding boundary (55/56/63/64) exercise the
+        // one-vs-two final block paths. Cross-checked against hashlib.
+        assert_eq!(
+            digest_of(&vec![0u8; 55]),
+            "02779466cdec163811d078815c633f21901413081449002f24aa3e80f0b88ef7"
+        );
+        assert_eq!(
+            digest_of(&vec![0u8; 56]),
+            "d4817aa5497628e7c77e6b606107042bbba3130888c5f47a375e6179be789fbb"
+        );
+        assert_eq!(
+            digest_of(&vec![0u8; 64]),
+            "f5a5fd42d16a20302798ef6ed309979b43003d2320d9f0e8ea9831a92759fb4b"
+        );
+    }
+}
