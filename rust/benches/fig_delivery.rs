@@ -97,6 +97,7 @@ fn main() {
                 shards: 1,
                 queue_cap: 64,
                 backend: BackendKind::Cpu,
+                ..Default::default()
             })
             .expect("pool");
             let mut net = make_net();
@@ -136,6 +137,7 @@ fn hot_swap_segment(registry: &Registry) {
         shards: 2,
         queue_cap: 1024,
         backend: BackendKind::Cpu,
+        ..Default::default()
     })
     .expect("pool");
     let mut coord = Coordinator::over_pool(

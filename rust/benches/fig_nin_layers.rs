@@ -3,33 +3,48 @@
 //! FLOP breakdown of the 20-layer NIN forward pass — the profile behind
 //! the paper's suspicion that "the Metal compute drivers for the GPU
 //! weren't fine tuned".
+//!
+//! Timings come from the compiled execution plan (`nn::plan`), so the
+//! breakdown reflects the serving hot path: arena slot reuse, per-layer
+//! conv strategies, interned layer names (no per-forward allocation).
 
 use deeplearningkit::bench::bench_header;
 use deeplearningkit::metrics::{fmt_us, Table};
 use deeplearningkit::model::nin_cifar10;
-use deeplearningkit::nn::CpuExecutor;
+use deeplearningkit::nn::{PlanOptions, PlannedExecutor};
 use deeplearningkit::tensor::{Shape, Tensor};
 
 fn main() {
     bench_header("E9 (§1 operator set)", "per-layer breakdown of the 20-layer NIN forward pass");
 
-    let exec = CpuExecutor::with_random_weights(nin_cifar10(), 42).unwrap();
+    let exec =
+        PlannedExecutor::with_random_weights(nin_cifar10(), 42, PlanOptions::default()).unwrap();
     let x = Tensor::randn(Shape::nchw(1, 3, 32, 32), 3, 1.0);
-    // Warm up, then a timed pass (per-layer timers inside).
+    // Warm up (compiles the plan + builds the arena), then a timed pass.
     exec.forward(&x).unwrap();
     let (_, timings) = exec.forward_timed(&x).unwrap();
+    let plan = exec.cached_plan(1).unwrap();
+    let strategies = plan.conv_strategies();
+    let strategy_of = |name: &str| -> &'static str {
+        strategies
+            .iter()
+            .find(|(n, _)| &**n == name)
+            .map(|(_, s)| s.name())
+            .unwrap_or("—")
+    };
 
     let total_us: f64 = timings.iter().map(|t| t.micros).sum();
     let total_macs: u64 = timings.iter().map(|t| t.macs).sum();
 
     let mut table = Table::new(
-        "NIN-CIFAR10 batch-1 forward, rust CPU backend (im2col)",
-        &["layer", "op", "time", "% time", "MMACs", "GMAC/s"],
+        "NIN-CIFAR10 batch-1 forward, compiled plan (per-layer strategies)",
+        &["layer", "op", "strategy", "time", "% time", "MMACs", "GMAC/s"],
     );
     for t in &timings {
         table.row(&[
-            t.name.clone(),
+            t.name.to_string(),
             t.kind.to_string(),
+            strategy_of(&t.name).to_string(),
             fmt_us(t.micros),
             format!("{:.1}%", 100.0 * t.micros / total_us),
             format!("{:.1}", t.macs as f64 / 1e6),
@@ -42,10 +57,12 @@ fn main() {
     }
     table.print();
     println!(
-        "\ntotal: {} for {:.0} MMACs ({:.2} GMAC/s effective)",
+        "\ntotal: {} for {:.0} MMACs ({:.2} GMAC/s effective); arena {} slots, peak {} KB",
         fmt_us(total_us),
         total_macs as f64 / 1e6,
-        total_macs as f64 / total_us / 1e3
+        total_macs as f64 / total_us / 1e3,
+        plan.slot_sizes().len(),
+        plan.peak_arena_bytes() / 1024
     );
 
     // Shape assertions: the three 5x5/3x3 conv blocks dominate; pooling,
@@ -57,8 +74,8 @@ fn main() {
         "convolution share {:.1}% (expected >80%)",
         100.0 * conv_us / total_us
     );
-    let conv1 = timings.iter().find(|t| t.name == "conv1").unwrap();
-    let conv2 = timings.iter().find(|t| t.name == "conv2").unwrap();
+    let conv1 = timings.iter().find(|t| &*t.name == "conv1").unwrap();
+    let conv2 = timings.iter().find(|t| &*t.name == "conv2").unwrap();
     assert!(conv1.macs + conv2.macs > total_macs / 3, "5x5 convs must carry most MACs");
     println!("E9 shape holds: convolution dominates (>80% of forward time)");
 }

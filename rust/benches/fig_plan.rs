@@ -1,0 +1,156 @@
+//! E12 — the "plan once, execute many" refactor, measured: interpreter
+//! (per-forward allocation, one global conv strategy) vs compiled
+//! execution plan (arena slot reuse, per-layer strategy from the
+//! calibrated cost model, precalculated FFT filter spectra).
+//!
+//! The paper's §GPU-memory-handling claim is that reusing memory between
+//! layers and caching compiled kernels is where the per-inference wins
+//! live; the comparative-framework literature (Bahrampour et al.) adds
+//! that the best conv algorithm flips with layer geometry. A NIN-style
+//! tower (5x5, 1x1 and 3x3 convs) at batch 1 exercises both.
+
+use deeplearningkit::bench::{bench_header, Bench};
+use deeplearningkit::metrics::{fmt_bytes, fmt_us, Table};
+use deeplearningkit::model::{Architecture, LayerKind};
+use deeplearningkit::nn::{ConvStrategy, CpuExecutor, PlanOptions, PlannedExecutor};
+use deeplearningkit::tensor::{Shape, Tensor};
+
+/// NIN-style mlpconv tower, slimmed so the full sweep stays CI-sized
+/// while keeping the geometry diversity that makes per-layer selection
+/// interesting: 5x5 stem convs, 1x1 mlpconv layers, a 3x3 block, pools
+/// and a global-average-pool head.
+fn nin_style() -> Architecture {
+    let mut a = Architecture::new("nin-style", &[3, 32, 32]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 48, k: 5, stride: 1, pad: 2 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("cccp1", LayerKind::Conv2d { out_ch: 40, k: 1, stride: 1, pad: 0 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("cccp2", LayerKind::Conv2d { out_ch: 24, k: 1, stride: 1, pad: 0 });
+    a.push("relu3", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("conv2", LayerKind::Conv2d { out_ch: 48, k: 5, stride: 1, pad: 2 });
+    a.push("relu4", LayerKind::Relu);
+    a.push("cccp3", LayerKind::Conv2d { out_ch: 48, k: 1, stride: 1, pad: 0 });
+    a.push("relu5", LayerKind::Relu);
+    a.push("pool2", LayerKind::AvgPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("conv3", LayerKind::Conv2d { out_ch: 48, k: 3, stride: 1, pad: 1 });
+    a.push("relu6", LayerKind::Relu);
+    a.push("cccp4", LayerKind::Conv2d { out_ch: 10, k: 1, stride: 1, pad: 0 });
+    a.push("relu7", LayerKind::Relu);
+    a.push("gap", LayerKind::GlobalAvgPool);
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+fn main() {
+    bench_header(
+        "E12 (plan vs interpreter)",
+        "arena buffer reuse + per-layer conv autotuning on a NIN-style tower, batch 1",
+    );
+    let arch = nin_style();
+    let x = Tensor::randn(Shape::nchw(1, 3, 32, 32), 3, 1.0);
+    let b = Bench::quick();
+
+    let mut table = Table::new(
+        "NIN-style batch-1 forward: interpreter vs compiled plan",
+        &["strategy", "interpreter", "planned", "plan speedup"],
+    );
+    let mut best_fixed: Option<(&'static str, f64)> = None;
+    let mut worst_fixed = 0.0f64;
+    let mut interp_im2col = f64::NAN;
+    let mut plan_im2col = f64::NAN;
+    for strat in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+        let mut oracle = CpuExecutor::with_random_weights(arch.clone(), 42).unwrap();
+        oracle.set_strategy(strat);
+        let m_i = b.run(|| oracle.forward(&x).unwrap());
+
+        let planned =
+            PlannedExecutor::with_random_weights(arch.clone(), 42, PlanOptions::fixed(strat))
+                .unwrap();
+        planned.forward(&x).unwrap(); // compile + build the arena once
+        let m_p = b.run(|| planned.forward(&x).unwrap());
+
+        table.row(&[
+            strat.name().to_string(),
+            fmt_us(m_i.mean_us),
+            fmt_us(m_p.mean_us),
+            format!("{:.2}x", m_i.mean_us / m_p.mean_us),
+        ]);
+        // Comparisons below use min-of-N, which is robust to scheduler
+        // noise on shared CI runners (the mean is reported above).
+        if best_fixed.map_or(true, |(_, us)| m_p.min_us < us) {
+            best_fixed = Some((strat.name(), m_p.min_us));
+        }
+        worst_fixed = worst_fixed.max(m_p.min_us);
+        if strat == ConvStrategy::Im2col {
+            interp_im2col = m_i.min_us;
+            plan_im2col = m_p.min_us;
+        }
+    }
+
+    let auto =
+        PlannedExecutor::with_random_weights(arch.clone(), 42, PlanOptions::default()).unwrap();
+    auto.forward(&x).unwrap();
+    let m_auto = b.run(|| auto.forward(&x).unwrap());
+    table.row(&[
+        "auto (per-layer)".to_string(),
+        "—".to_string(),
+        fmt_us(m_auto.mean_us),
+        String::new(),
+    ]);
+    table.print();
+
+    let plan = auto.cached_plan(1).unwrap();
+    println!("\nauto plan per-layer strategies (cost model, host-calibrated):");
+    for (name, s) in plan.conv_strategies() {
+        println!("  {name:<8} -> {}", s.name());
+    }
+    println!(
+        "arena: {} slots, peak {} (interpreter allocated a fresh tensor per layer)",
+        plan.slot_sizes().len(),
+        fmt_bytes(plan.peak_arena_bytes() as u64)
+    );
+
+    let (bf_name, bf_us) = best_fixed.unwrap();
+    println!(
+        "\nbest single global strategy: {bf_name} at {} — auto plan: {}",
+        fmt_us(bf_us),
+        fmt_us(m_auto.min_us)
+    );
+    if m_auto.min_us <= bf_us {
+        println!(
+            "auto beats the best global strategy by {:.1}% (per-layer selection pays)",
+            100.0 * (bf_us - m_auto.min_us) / bf_us
+        );
+    } else {
+        println!(
+            "auto within {:.1}% of the best global strategy on this host",
+            100.0 * (m_auto.min_us - bf_us) / bf_us
+        );
+    }
+
+    // Shape assertions, deliberately coarse (min-of-N timings, generous
+    // slack) so this CI smoke only trips on real regressions: the auto
+    // plan must land near (or below) the best fixed strategy — it could
+    // always have picked that strategy for every layer — never near the
+    // worst one, and the arena must not tax the im2col path.
+    assert!(
+        m_auto.min_us <= bf_us * 1.5,
+        "auto plan {:.0} us is >50% worse than best fixed {bf_name} {:.0} us",
+        m_auto.min_us,
+        bf_us
+    );
+    assert!(
+        m_auto.min_us <= worst_fixed * 1.1,
+        "auto plan ({:.0} us) must never lose to the worst global strategy ({:.0} us)",
+        m_auto.min_us,
+        worst_fixed
+    );
+    assert!(
+        plan_im2col <= interp_im2col * 1.35,
+        "planned im2col {:.0} us slower than interpreter {:.0} us — arena regression",
+        plan_im2col,
+        interp_im2col
+    );
+    println!("E12 shape holds: plan ≥ interpreter, auto ≈/≤ best global strategy");
+}

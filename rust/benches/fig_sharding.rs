@@ -70,6 +70,7 @@ fn main() {
             shards,
             queue_cap: 4096,
             backend: BackendKind::Cpu,
+            ..Default::default()
         })
         .expect("start pool");
         let mut coord = Coordinator::over_pool(
@@ -140,6 +141,7 @@ fn main() {
         shards: 1,
         queue_cap: 256,
         backend: BackendKind::Cpu,
+        ..Default::default()
     })
     .expect("start pool");
     let mut coord = Coordinator::over_pool(

@@ -320,8 +320,13 @@ mod tests {
     }
 
     fn cpu_pool(shards: usize) -> PoolHandle {
-        EnginePool::start(PoolConfig { shards, queue_cap: 64, backend: BackendKind::Cpu })
-            .unwrap()
+        EnginePool::start(PoolConfig {
+            shards,
+            queue_cap: 64,
+            backend: BackendKind::Cpu,
+            ..Default::default()
+        })
+        .unwrap()
     }
 
     #[test]

@@ -32,6 +32,7 @@ fn main() {
     let result = match sub {
         "serve" => cmd_serve(&rest),
         "infer" => cmd_infer(&rest),
+        "plan" => cmd_plan(&rest),
         "import" => cmd_import(&rest),
         "compress" => cmd_compress(&rest),
         "publish" => cmd_publish(&rest),
@@ -61,6 +62,8 @@ fn usage() -> String {
                  (--registry: pull models OTA; --auto-update: hot-swap\n\
                  versions published while serving)\n\
        infer     classify procedurally generated inputs\n\
+       plan      compile a model's execution plans and print per-layer\n\
+                 conv strategies, arena slots and peak arena bytes\n\
        import    convert a Caffe/Theano JSON export to the DLK format\n\
        compress  Deep-Compression pipeline on a model's weights\n\
        publish   compress+package+publish a model version to a registry\n\
@@ -108,6 +111,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("max-delay-ms", "batcher flush deadline (ms)", Some("2"))
         .flag("shards", "engine pool shards (0 = available parallelism)", Some("0"))
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
+        .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
         .switch("auto-update", "poll the registry and hot-swap newly published versions")
         .flag("update-poll-ms", "auto-update poll interval (ms)", Some("200"))
@@ -134,10 +138,12 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let max_delay = Duration::from_millis(a.get_usize("max-delay-ms", 2)? as u64);
     let shards = a.get_usize("shards", 0)?;
     let queue_cap = a.get_usize("queue-cap", 1024)?.max(1);
+    let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
 
     let pool = runtime::EnginePool::start(runtime::PoolConfig {
         shards,
         queue_cap,
+        strategy,
         ..Default::default()
     })?;
     println!("engine pool: {} shard(s), queue cap {queue_cap}", pool.shard_count());
@@ -174,13 +180,14 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         };
         let info = coord.serve_model(dir)?;
         println!(
-            "serving `{}` v{} on shard {} ({} classes, AOT batches {:?}, {} KB weights, \
-             load {:.1} ms)",
+            "serving `{}` v{} on shard {} ({} classes, AOT batches {:?}, {} plans, \
+             {} KB weights, load {:.1} ms)",
             info.id,
             info.version,
             info.shard,
             info.classes,
             info.batches,
+            info.plans,
             info.weight_bytes / 1024,
             info.load_micros as f64 / 1000.0
         );
@@ -311,19 +318,30 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("dlk infer", "classify generated inputs")
         .flag("model", "model id", Some("lenet-mnist"))
         .flag("count", "number of inputs", Some("8"))
+        .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .switch("cpu", "use the rust CPU reference backend instead of PJRT");
     let a = cmd.parse(argv)?;
     let model_id = a.get_or("model", "lenet-mnist").to_string();
     let count = a.get_usize("count", 8)?.max(1);
+    let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
     let batch = generator_for(&model_id)(count, 7);
 
     let manifest = model::Manifest::load(&model_dir(&model_id).join("manifest.json"))?;
     let preds: Vec<usize> = if a.has("cpu") {
+        // Planned executor over the raw weights (one compiled plan for
+        // this batch size, per-layer strategies from the cost model).
         let ws = model::WeightStore::load(&model_dir(&model_id).join("weights.dlkw"))?;
-        let exec = nn::CpuExecutor::new(manifest.arch.clone(), ws)?;
-        exec.classify(&batch.inputs)?
+        let planned = nn::PlannedExecutor::new(
+            manifest.arch.clone(),
+            std::sync::Arc::new(ws),
+            nn::PlanOptions { strategy, cost_model: None },
+        )?;
+        planned.forward(&batch.inputs)?.argmax_rows()
     } else {
-        let engine = runtime::Engine::start()?;
+        let engine = runtime::Engine::start_with(runtime::EngineConfig {
+            strategy,
+            ..Default::default()
+        })?;
         engine.load(model_dir(&model_id))?;
         let out = engine.infer(&model_id, batch.inputs.clone())?;
         out.argmax_rows()
@@ -342,6 +360,56 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
         println!("#{i:3} predicted {pl:12} actual {ll:12} {mark}");
     }
     println!("accuracy {correct}/{count}");
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "dlk plan",
+        "compile a model's execution plans and print per-layer strategies + arena layout",
+    )
+    .flag("batch", "comma-separated batch sizes (default: the model's AOT ladder)", None)
+    .flag("conv-strategy", "conv strategy: auto, direct, im2col or fft", Some("auto"));
+    let a = cmd.parse(argv)?;
+    let target = a.positional().first().ok_or_else(|| {
+        anyhow::anyhow!("usage: dlk plan <model-dir-or-id> [--batch 1,8] [--conv-strategy auto]")
+    })?;
+    // Accept a model directory, or a model id under artifacts/models/.
+    let dir = {
+        let p = std::path::PathBuf::from(target);
+        if p.join("manifest.json").exists() {
+            p
+        } else {
+            model_dir(target)
+        }
+    };
+    let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
+    let model =
+        runtime::CpuModel::load_with(&dir, nn::PlanOptions { strategy, cost_model: None })?;
+    let batches: Vec<usize> = match a.get("batch") {
+        Some(spec) => spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--batch expects integers, got `{s}`"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+        None => model.batches(),
+    };
+    println!(
+        "model `{}` v{} from {} — {} plan(s), conv strategy {}",
+        model.manifest.id,
+        model.manifest.version,
+        dir.display(),
+        batches.len(),
+        strategy.name()
+    );
+    for b in batches {
+        let plan = model.compile_plan(b)?;
+        println!();
+        print!("{}", plan.dump());
+    }
     Ok(())
 }
 

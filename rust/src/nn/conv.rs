@@ -79,6 +79,15 @@ fn check_args(
     Ok((n, c, h, w, oc, kh))
 }
 
+fn check_out(out: &Tensor, n: usize, oc: usize, oh: usize, ow: usize) -> crate::Result<()> {
+    anyhow::ensure!(
+        out.shape().dims() == [n, oc, oh, ow],
+        "conv2d out tensor is {}, expected [{n},{oc},{oh},{ow}]",
+        out.shape()
+    );
+    Ok(())
+}
+
 /// Direct (naive) convolution. O(N·OC·OH·OW·IC·K²).
 pub fn conv2d_direct(
     input: &Tensor,
@@ -89,6 +98,24 @@ pub fn conv2d_direct(
     let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
+    conv2d_direct_into(input, weight, bias, params, &mut out)?;
+    Ok(out)
+}
+
+/// [`conv2d_direct`] writing into a preallocated `out` tensor (shape
+/// `[n, oc, oh, ow]`); every output element is overwritten, so `out` may
+/// hold stale data. This is the variant the execution plan dispatches
+/// through so steady-state forward passes allocate nothing.
+pub fn conv2d_direct_into(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
     let x = input.data();
     let wt = weight.data();
     let o = out.data_mut();
@@ -122,7 +149,7 @@ pub fn conv2d_direct(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Lower an NCHW image to the im2col patch matrix of shape
@@ -140,11 +167,39 @@ pub fn im2col(
     let h = input.shape().dim(2);
     let w = input.shape().dim(3);
     let (oh, ow) = params.out_hw(h, w, k)?;
+    let mut out = Tensor::zeros(Shape::new(&[c * k * k, oh * ow]));
+    im2col_into(input, batch, k, params, &mut out)?;
+    Ok(out)
+}
+
+/// [`im2col`] into a preallocated `[c*k*k, oh*ow]` patch matrix. With
+/// padding the matrix is zeroed first, so padding cells stay correct
+/// when the buffer is reused across batch elements or layers; without
+/// padding every cell is written, so the memset is skipped.
+pub fn im2col_into(
+    input: &Tensor,
+    batch: usize,
+    k: usize,
+    params: Conv2dParams,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let c = input.shape().dim(1);
+    let h = input.shape().dim(2);
+    let w = input.shape().dim(3);
+    let (oh, ow) = params.out_hw(h, w, k)?;
     let rows = c * k * k;
     let cols = oh * ow;
-    let mut out = Tensor::zeros(Shape::new(&[rows, cols]));
+    anyhow::ensure!(
+        out.shape().dims() == [rows, cols],
+        "im2col out matrix is {}, expected [{rows},{cols}]",
+        out.shape()
+    );
     let x = input.data();
     let o = out.data_mut();
+    if params.pad > 0 {
+        // Out-of-image cells are only skipped (left zero) under padding.
+        o.fill(0.0);
+    }
     let base = batch * c * h * w;
 
     let mut row = 0;
@@ -171,7 +226,7 @@ pub fn im2col(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// im2col + GEMM convolution. Same numerics as [`conv2d_direct`] (up to f32
@@ -184,21 +239,41 @@ pub fn conv2d_im2col(
 ) -> crate::Result<Tensor> {
     let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
+    let mut patches = Tensor::zeros(Shape::new(&[c * k * k, oh * ow]));
+    let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
+    conv2d_im2col_into(input, weight, bias, params, &mut patches, &mut out)?;
+    Ok(out)
+}
+
+/// [`conv2d_im2col`] writing into a preallocated `out` tensor, lowering
+/// through a caller-provided `patches` scratch matrix of shape
+/// `[c*k*k, oh*ow]` (the execution plan hands both out of its arena).
+pub fn conv2d_im2col_into(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    patches: &mut Tensor,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
     let cols = oh * ow;
     let rows = c * k * k;
-    let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
 
     // Weight viewed as [oc, rows] without copying.
     let wmat = weight.data();
     for b in 0..n {
-        let patches = im2col(input, b, k, params)?;
+        im2col_into(input, b, k, params, patches)?;
         let p = patches.data();
         let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
         // GEMM: out[ocH, cols] = W[oc, rows] x P[rows, cols]  (ikj order)
         for och in 0..oc {
             let orow = &mut o[och * cols..(och + 1) * cols];
-            if let Some(bv) = bias {
-                orow.fill(bv.data()[och]);
+            match bias {
+                Some(bv) => orow.fill(bv.data()[och]),
+                None => orow.fill(0.0),
             }
             for r in 0..rows {
                 let wv = wmat[och * rows + r];
@@ -212,7 +287,7 @@ pub fn conv2d_im2col(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Default convolution entry point (im2col).
@@ -346,6 +421,42 @@ mod tests {
         let p2 = im2col(&x, 0, 2, Conv2dParams::default()).unwrap();
         assert_eq!(p2.shape().dims(), &[4, 1]);
         assert_eq!(p2.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // The plan reuses arena slots, so `_into` must be correct over
+        // stale data: poison the buffers and demand bit-exact parity.
+        let mut rng = XorShiftRng::new(77);
+        let x = Tensor::new(Shape::nchw(2, 3, 6, 6), Gen::tensor_data(&mut rng, 216)).unwrap();
+        let w = Tensor::new(&[4, 3, 3, 3][..], Gen::tensor_data(&mut rng, 108)).unwrap();
+        let b = Tensor::new(&[4][..], Gen::tensor_data(&mut rng, 4)).unwrap();
+        let p = Conv2dParams::new(1, 1);
+
+        let expect = conv2d_direct(&x, &w, Some(&b), p).unwrap();
+        let mut out = Tensor::filled(Shape::nchw(2, 4, 6, 6), f32::NAN);
+        conv2d_direct_into(&x, &w, Some(&b), p, &mut out).unwrap();
+        assert_eq!(out.data(), expect.data());
+
+        let expect2 = conv2d_im2col(&x, &w, None, p).unwrap();
+        let mut patches = Tensor::filled(&[27, 36][..], f32::NAN);
+        let mut out2 = Tensor::filled(Shape::nchw(2, 4, 6, 6), f32::NAN);
+        conv2d_im2col_into(&x, &w, None, p, &mut patches, &mut out2).unwrap();
+        assert_eq!(out2.data(), expect2.data());
+
+        // pad-0 skips the patch-matrix memset; a dirty scratch must still
+        // be fully overwritten by the lowering.
+        let p0 = Conv2dParams::new(1, 0);
+        let expect0 = conv2d_im2col(&x, &w, Some(&b), p0).unwrap();
+        let mut patches0 = Tensor::filled(&[27, 16][..], f32::NAN);
+        let mut out0 = Tensor::filled(Shape::nchw(2, 4, 4, 4), f32::NAN);
+        conv2d_im2col_into(&x, &w, Some(&b), p0, &mut patches0, &mut out0).unwrap();
+        assert_eq!(out0.data(), expect0.data());
+
+        // Mis-shaped out tensors are rejected, not silently clobbered.
+        let mut bad = Tensor::zeros(Shape::nchw(1, 4, 6, 6));
+        assert!(conv2d_direct_into(&x, &w, Some(&b), p, &mut bad).is_err());
+        assert!(conv2d_im2col_into(&x, &w, None, p, &mut patches, &mut bad).is_err());
     }
 
     #[test]

@@ -38,6 +38,24 @@ pub fn conv1d(
 ) -> crate::Result<Tensor> {
     anyhow::ensure!(input.shape().rank() == 3, "conv1d input must be [n,c,l], got {}", input.shape());
     anyhow::ensure!(weight.shape().rank() == 3, "conv1d weight must be [oc,c,k]");
+    let n = input.shape().dim(0);
+    let oc = weight.shape().dim(0);
+    let ol = params.out_len(input.shape().dim(2), weight.shape().dim(2))?;
+    let mut out = Tensor::zeros(Shape::new(&[n, oc, ol]));
+    conv1d_into(input, weight, bias, params, &mut out)?;
+    Ok(out)
+}
+
+/// [`conv1d`] into a preallocated `[n, oc, out_len]` tensor.
+pub fn conv1d_into(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv1dParams,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    anyhow::ensure!(input.shape().rank() == 3, "conv1d input must be [n,c,l], got {}", input.shape());
+    anyhow::ensure!(weight.shape().rank() == 3, "conv1d weight must be [oc,c,k]");
     let (n, c, l) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
     let (oc, wc, k) = (weight.shape().dim(0), weight.shape().dim(1), weight.shape().dim(2));
     anyhow::ensure!(wc == c, "weight channels {wc} != input {c}");
@@ -45,7 +63,11 @@ pub fn conv1d(
         anyhow::ensure!(b.numel() == oc, "bias size {} != {oc}", b.numel());
     }
     let ol = params.out_len(l, k)?;
-    let mut out = Tensor::zeros(Shape::new(&[n, oc, ol]));
+    anyhow::ensure!(
+        out.shape().dims() == [n, oc, ol],
+        "conv1d out tensor is {}, expected [{n},{oc},{ol}]",
+        out.shape()
+    );
     let (x, wd) = (input.data(), weight.data());
     let o = out.data_mut();
     for b in 0..n {
@@ -68,7 +90,7 @@ pub fn conv1d(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// 1-D max pooling (char-CNN downsampling).
@@ -79,6 +101,22 @@ pub fn max_pool1d(input: &Tensor, k: usize, stride: usize) -> crate::Result<Tens
     anyhow::ensure!(l >= k, "window {k} larger than length {l}");
     let ol = (l - k) / stride + 1;
     let mut out = Tensor::zeros(Shape::new(&[n, c, ol]));
+    max_pool1d_into(input, k, stride, &mut out)?;
+    Ok(out)
+}
+
+/// [`max_pool1d`] into a preallocated `[n, c, out_len]` tensor.
+pub fn max_pool1d_into(input: &Tensor, k: usize, stride: usize, out: &mut Tensor) -> crate::Result<()> {
+    anyhow::ensure!(input.shape().rank() == 3, "pool1d input must be [n,c,l]");
+    anyhow::ensure!(k > 0 && stride > 0, "window and stride must be positive");
+    let (n, c, l) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    anyhow::ensure!(l >= k, "window {k} larger than length {l}");
+    let ol = (l - k) / stride + 1;
+    anyhow::ensure!(
+        out.shape().dims() == [n, c, ol],
+        "pool1d out tensor is {}, expected [{n},{c},{ol}]",
+        out.shape()
+    );
     let x = input.data();
     let o = out.data_mut();
     for plane in 0..n * c {
@@ -89,7 +127,7 @@ pub fn max_pool1d(input: &Tensor, k: usize, stride: usize) -> crate::Result<Tens
             *ov = xrow[start..start + k].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

@@ -68,13 +68,31 @@ pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> crate::Result<Tensor> {
 pub fn dense(x: &Tensor, weight: &Tensor, bias: Option<&Tensor>) -> crate::Result<Tensor> {
     anyhow::ensure!(x.shape().rank() == 2, "dense input must be [batch, in], got {}", x.shape());
     anyhow::ensure!(weight.shape().rank() == 2, "dense weight must be [out, in]");
+    let mut out = Tensor::zeros(Shape::new(&[x.shape().dim(0), weight.shape().dim(0)]));
+    dense_into(x, weight, bias, &mut out)?;
+    Ok(out)
+}
+
+/// [`dense`] into a preallocated `[batch, out]` tensor.
+pub fn dense_into(
+    x: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    anyhow::ensure!(x.shape().rank() == 2, "dense input must be [batch, in], got {}", x.shape());
+    anyhow::ensure!(weight.shape().rank() == 2, "dense weight must be [out, in]");
     let (batch, in_f) = (x.shape().dim(0), x.shape().dim(1));
     let (out_f, w_in) = (weight.shape().dim(0), weight.shape().dim(1));
     anyhow::ensure!(w_in == in_f, "dense weight in-features {w_in} != input {in_f}");
     if let Some(b) = bias {
         anyhow::ensure!(b.numel() == out_f, "dense bias size {} != {out_f}", b.numel());
     }
-    let mut out = Tensor::zeros(Shape::new(&[batch, out_f]));
+    anyhow::ensure!(
+        out.shape().dims() == [batch, out_f],
+        "dense out tensor is {}, expected [{batch},{out_f}]",
+        out.shape()
+    );
     let (xd, wd) = (x.data(), weight.data());
     let od = out.data_mut();
     for bi in 0..batch {
@@ -89,7 +107,7 @@ pub fn dense(x: &Tensor, weight: &Tensor, bias: Option<&Tensor>) -> crate::Resul
             orow[of] = acc;
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

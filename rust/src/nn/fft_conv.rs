@@ -12,7 +12,203 @@ use super::conv::Conv2dParams;
 use super::fft::{fft2d, ifft2d, Complex};
 use crate::tensor::{Shape, Tensor};
 
+/// A conv layer lowered to the frequency domain once, ahead of time: the
+/// filter spectra are precomputed from the weights at plan-build time (the
+/// paper's "precalculated convolution filters"), so a steady-state forward
+/// pass only transforms the *input* — into caller-owned
+/// [`FftScratch`] buffers, allocating nothing.
+pub struct FftConvPlan {
+    params: Conv2dParams,
+    c: usize,
+    oc: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    gr: usize,
+    gc: usize,
+    /// `oc*c` filter spectra, each a `gr*gc` plane.
+    filter_spectra: Vec<Complex>,
+}
+
+/// Reusable complex work buffers for [`FftConvPlan::run_into`]. One
+/// scratch can serve several plans: buffers only need to be at least as
+/// large as each plan's [`FftConvPlan::scratch_needs`].
+pub struct FftScratch {
+    /// One `gr*gc` plane (input transform + accumulator workspace).
+    pub xspec: Vec<Complex>,
+    /// One `gr*gc` plane (per-output-channel accumulator).
+    pub acc: Vec<Complex>,
+    /// `c` planes of `gr*gc` (per-channel input spectra for one batch
+    /// element).
+    pub channels: Vec<Complex>,
+}
+
+impl FftScratch {
+    /// Scratch sized for `(grid, channel_planes)` elements (see
+    /// [`FftConvPlan::scratch_needs`]).
+    pub fn with_sizes(grid: usize, channel_planes: usize) -> FftScratch {
+        FftScratch {
+            xspec: vec![Complex::zero(); grid],
+            acc: vec![Complex::zero(); grid],
+            channels: vec![Complex::zero(); channel_planes],
+        }
+    }
+}
+
+impl FftConvPlan {
+    /// Precompute the filter spectra for `weight` applied to `h`×`w`
+    /// inputs with `params`.
+    pub fn new(weight: &Tensor, h: usize, w: usize, params: Conv2dParams) -> crate::Result<FftConvPlan> {
+        anyhow::ensure!(weight.shape().rank() == 4, "fft conv weight must be [oc,c,k,k]");
+        let (oc, c, k, kw) = (
+            weight.shape().dim(0),
+            weight.shape().dim(1),
+            weight.shape().dim(2),
+            weight.shape().dim(3),
+        );
+        anyhow::ensure!(k == kw, "square kernels only");
+        let (oh, ow) = params.out_hw(h, w, k)?;
+
+        // Padded grid: must hold the padded input; power of two for radix-2.
+        let gr = (h + 2 * params.pad).next_power_of_two();
+        let gc = (w + 2 * params.pad).next_power_of_two();
+
+        // Pre-transform all filters: spectra[oc][c] on the gr x gc grid.
+        let wd = weight.data();
+        let mut filter_spectra = vec![Complex::zero(); oc * c * gr * gc];
+        for och in 0..oc {
+            for ic in 0..c {
+                let spec = &mut filter_spectra[(och * c + ic) * gr * gc..(och * c + ic + 1) * gr * gc];
+                for ky in 0..k {
+                    for kx in 0..k {
+                        spec[ky * gc + kx] = Complex::new(wd[((och * c + ic) * k + ky) * k + kx], 0.0);
+                    }
+                }
+                fft2d(spec, gr, gc);
+            }
+        }
+        Ok(FftConvPlan { params, c, oc, k, h, w, oh, ow, gr, gc, filter_spectra })
+    }
+
+    /// `(grid, channel_planes)` element counts this plan needs from an
+    /// [`FftScratch`].
+    pub fn scratch_needs(&self) -> (usize, usize) {
+        (self.gr * self.gc, self.c * self.gr * self.gc)
+    }
+
+    /// A scratch sized exactly for this plan.
+    pub fn scratch(&self) -> FftScratch {
+        let (grid, channels) = self.scratch_needs();
+        FftScratch::with_sizes(grid, channels)
+    }
+
+    /// Bytes held by the precomputed filter spectra (plan debug dumps).
+    pub fn spectra_bytes(&self) -> usize {
+        self.filter_spectra.len() * std::mem::size_of::<Complex>()
+    }
+
+    /// Kernel size the spectra were built for.
+    pub fn kernel(&self) -> usize {
+        self.k
+    }
+
+    /// The padded power-of-two FFT grid, `(rows, cols)`.
+    pub fn grid(&self) -> (usize, usize) {
+        (self.gr, self.gc)
+    }
+
+    /// Run the convolution for `input` (`[n, c, h, w]`, matching the plan)
+    /// into the preallocated `out` (`[n, oc, oh, ow]`). Identical numerics
+    /// to [`conv2d_fft`].
+    pub fn run_into(
+        &self,
+        input: &Tensor,
+        bias: Option<&Tensor>,
+        scratch: &mut FftScratch,
+        out: &mut Tensor,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            input.shape().dims().len() == 4
+                && input.shape().dim(1) == self.c
+                && input.shape().dim(2) == self.h
+                && input.shape().dim(3) == self.w,
+            "fft conv plan expects [n,{},{},{}] input, got {}",
+            self.c,
+            self.h,
+            self.w,
+            input.shape()
+        );
+        if let Some(b) = bias {
+            anyhow::ensure!(b.numel() == self.oc, "bias has {} elements, expected {}", b.numel(), self.oc);
+        }
+        let n = input.shape().dim(0);
+        anyhow::ensure!(
+            out.shape().dims() == [n, self.oc, self.oh, self.ow],
+            "fft conv out tensor is {}, expected [{n},{},{},{}]",
+            out.shape(),
+            self.oc,
+            self.oh,
+            self.ow
+        );
+        let (grid, chan) = self.scratch_needs();
+        anyhow::ensure!(
+            scratch.xspec.len() >= grid && scratch.acc.len() >= grid && scratch.channels.len() >= chan,
+            "fft scratch too small: needs grid {grid} / channels {chan}"
+        );
+        let (c, oc, h, w, oh, ow, gr, gc) =
+            (self.c, self.oc, self.h, self.w, self.oh, self.ow, self.gr, self.gc);
+        let pad = self.params.pad;
+        let stride = self.params.stride;
+
+        let x = input.data();
+        let o = out.data_mut();
+        let xspec = &mut scratch.xspec[..grid];
+        let acc = &mut scratch.acc[..grid];
+        let channel_spectra = &mut scratch.channels[..chan];
+        for b in 0..n {
+            // Transform each input channel once per batch element.
+            for ic in 0..c {
+                xspec.iter_mut().for_each(|v| *v = Complex::zero());
+                let plane = &x[(b * c + ic) * h * w..(b * c + ic + 1) * h * w];
+                for iy in 0..h {
+                    for ix in 0..w {
+                        // Shift by pad so index 0 is the padded border.
+                        xspec[(iy + pad) * gc + (ix + pad)] = Complex::new(plane[iy * w + ix], 0.0);
+                    }
+                }
+                fft2d(xspec, gr, gc);
+                channel_spectra[ic * grid..(ic + 1) * grid].copy_from_slice(xspec);
+            }
+            for och in 0..oc {
+                acc.iter_mut().for_each(|v| *v = Complex::zero());
+                for ic in 0..c {
+                    let fs = &self.filter_spectra[(och * c + ic) * grid..(och * c + ic + 1) * grid];
+                    let cs = &channel_spectra[ic * grid..(ic + 1) * grid];
+                    // Correlation: X(f) * conj(W(f)).
+                    for ((a, &xv), &wv) in acc.iter_mut().zip(cs.iter()).zip(fs.iter()) {
+                        *a = a.add(xv.mul(wv.conj()));
+                    }
+                }
+                ifft2d(acc, gr, gc);
+                let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+                let orow = &mut o[((b * oc + och) * oh) * ow..((b * oc + och) * oh + oh) * ow];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        orow[oy * ow + ox] = acc[(oy * stride) * gc + ox * stride].re + bias_v;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// FFT convolution with the same semantics as [`super::conv2d_direct`].
+/// One-shot wrapper over [`FftConvPlan`]: transforms the filters, runs,
+/// and discards the plan (a resident model keeps the plan instead — see
+/// `nn::plan`).
 pub fn conv2d_fft(
     input: &Tensor,
     weight: &Tensor,
@@ -26,79 +222,15 @@ pub fn conv2d_fft(
         input.shape().dim(2),
         input.shape().dim(3),
     );
-    let (oc, wc, k, kw) = (
-        weight.shape().dim(0),
-        weight.shape().dim(1),
-        weight.shape().dim(2),
-        weight.shape().dim(3),
+    anyhow::ensure!(
+        weight.shape().dim(1) == c,
+        "weight in_ch {} != input {c}",
+        weight.shape().dim(1)
     );
-    anyhow::ensure!(k == kw, "square kernels only");
-    anyhow::ensure!(wc == c, "weight in_ch {wc} != input {c}");
-    let (oh, ow) = params.out_hw(h, w, k)?;
-
-    // Padded grid: must hold the padded input; power of two for radix-2.
-    let ph = h + 2 * params.pad;
-    let pw = w + 2 * params.pad;
-    let gr = ph.next_power_of_two();
-    let gc = pw.next_power_of_two();
-
-    // Pre-transform all filters: spectra[oc][c] on the gr x gc grid.
-    let wd = weight.data();
-    let mut filter_spectra = vec![vec![Complex::zero(); gr * gc]; oc * c];
-    for och in 0..oc {
-        for ic in 0..c {
-            let spec = &mut filter_spectra[och * c + ic];
-            for ky in 0..k {
-                for kx in 0..k {
-                    spec[ky * gc + kx] = Complex::new(wd[((och * c + ic) * k + ky) * k + kx], 0.0);
-                }
-            }
-            fft2d(spec, gr, gc);
-        }
-    }
-
-    let x = input.data();
-    let mut out = Tensor::zeros(Shape::nchw(n, oc, oh, ow));
-    let o = out.data_mut();
-
-    let mut xspec = vec![Complex::zero(); gr * gc];
-    let mut acc = vec![Complex::zero(); gr * gc];
-    for b in 0..n {
-        // Transform each input channel once per batch element.
-        let mut channel_spectra = vec![vec![Complex::zero(); gr * gc]; c];
-        for ic in 0..c {
-            xspec.iter_mut().for_each(|v| *v = Complex::zero());
-            let plane = &x[(b * c + ic) * h * w..(b * c + ic + 1) * h * w];
-            for iy in 0..h {
-                for ix in 0..w {
-                    // Shift by pad so index 0 is the padded border.
-                    xspec[(iy + params.pad) * gc + (ix + params.pad)] =
-                        Complex::new(plane[iy * w + ix], 0.0);
-                }
-            }
-            fft2d(&mut xspec, gr, gc);
-            channel_spectra[ic].copy_from_slice(&xspec);
-        }
-        for och in 0..oc {
-            acc.iter_mut().for_each(|v| *v = Complex::zero());
-            for ic in 0..c {
-                let fs = &filter_spectra[och * c + ic];
-                let cs = &channel_spectra[ic];
-                // Correlation: X(f) * conj(W(f)).
-                for ((a, &xv), &wv) in acc.iter_mut().zip(cs.iter()).zip(fs.iter()) {
-                    *a = a.add(xv.mul(wv.conj()));
-                }
-            }
-            ifft2d(&mut acc, gr, gc);
-            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
-            let orow = &mut o[((b * oc + och) * oh) * ow..((b * oc + och) * oh + oh) * ow];
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    orow[oy * ow + ox] = acc[(oy * params.stride) * gc + ox * params.stride].re + bias_v;
-                }
-            }
-        }
-    }
+    let plan = FftConvPlan::new(weight, h, w, params)?;
+    let mut scratch = plan.scratch();
+    let mut out = Tensor::zeros(Shape::nchw(n, plan.oc, plan.oh, plan.ow));
+    plan.run_into(input, bias, &mut scratch, &mut out)?;
     Ok(out)
 }
 
@@ -166,6 +298,31 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn plan_reuse_matches_one_shot_bit_exact() {
+        let mut rng = XorShiftRng::new(63);
+        let x = Tensor::new(Shape::nchw(2, 3, 7, 7), Gen::tensor_data(&mut rng, 294)).unwrap();
+        let w = Tensor::new(&[2, 3, 3, 3][..], Gen::tensor_data(&mut rng, 54)).unwrap();
+        let b = Tensor::new(&[2][..], Gen::tensor_data(&mut rng, 2)).unwrap();
+        let p = Conv2dParams::new(1, 1);
+        let expect = conv2d_fft(&x, &w, Some(&b), p).unwrap();
+
+        let plan = FftConvPlan::new(&w, 7, 7, p).unwrap();
+        assert_eq!(plan.kernel(), 3);
+        assert_eq!(plan.grid(), (16, 16)); // 7+2 rounded up to a power of two
+        assert!(plan.spectra_bytes() > 0);
+        let mut scratch = plan.scratch();
+        let mut out = Tensor::filled(Shape::nchw(2, 2, 7, 7), f32::NAN);
+        plan.run_into(&x, Some(&b), &mut scratch, &mut out).unwrap();
+        assert_eq!(out.data(), expect.data());
+        // Re-run over the now-dirty scratch and output: identical again.
+        plan.run_into(&x, Some(&b), &mut scratch, &mut out).unwrap();
+        assert_eq!(out.data(), expect.data());
+        // Undersized scratch is rejected.
+        let mut small = FftScratch::with_sizes(4, 4);
+        assert!(plan.run_into(&x, Some(&b), &mut small, &mut out).is_err());
     }
 
     #[test]

@@ -13,12 +13,16 @@ use super::{
 };
 use crate::model::{Architecture, LayerKind, WeightStore};
 use crate::tensor::{Shape, Tensor};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// Wall-time spent in one layer during [`CpuExecutor::forward_timed`].
+/// Wall-time spent in one layer during [`CpuExecutor::forward_timed`]
+/// (or a planned execution — see [`super::plan::ExecutionPlan`]).
 #[derive(Clone, Debug)]
 pub struct LayerTiming {
-    pub name: String,
+    /// Layer name, interned once at executor/plan build time: cloning
+    /// it is a refcount bump, so timed forwards allocate no strings.
+    pub name: Arc<str>,
     pub kind: &'static str,
     pub micros: f64,
     pub macs: u64,
@@ -27,15 +31,32 @@ pub struct LayerTiming {
 /// CPU executor bound to one architecture + weights.
 pub struct CpuExecutor {
     arch: Architecture,
-    weights: WeightStore,
+    weights: Arc<WeightStore>,
     strategy: ConvStrategy,
+    /// Interned layer names (shared with every `LayerTiming` emitted).
+    names: Vec<Arc<str>>,
+    /// Precomputed `<layer>.w` / `<layer>.b` keys so the hot loop never
+    /// formats strings.
+    weight_keys: Vec<(String, String)>,
 }
 
 impl CpuExecutor {
     /// Build an executor; validates weights against the architecture.
     pub fn new(arch: Architecture, weights: WeightStore) -> crate::Result<CpuExecutor> {
         weights.validate(&arch)?;
-        Ok(CpuExecutor { arch, weights, strategy: ConvStrategy::Im2col })
+        let names = arch.layers.iter().map(|l| Arc::from(l.name.as_str())).collect();
+        let weight_keys = arch
+            .layers
+            .iter()
+            .map(|l| (format!("{}.w", l.name), format!("{}.b", l.name)))
+            .collect();
+        Ok(CpuExecutor {
+            arch,
+            weights: Arc::new(weights),
+            strategy: ConvStrategy::Im2col,
+            names,
+            weight_keys,
+        })
     }
 
     /// Build with random weights (latency benchmarking — numerics don't
@@ -60,6 +81,13 @@ impl CpuExecutor {
 
     pub fn weights(&self) -> &WeightStore {
         &self.weights
+    }
+
+    /// Shared handle to the weights, so a
+    /// [`PlannedExecutor`](super::plan::PlannedExecutor) can reuse them
+    /// without duplicating the resident tensors.
+    pub fn shared_weights(&self) -> Arc<WeightStore> {
+        self.weights.clone()
     }
 
     fn run_conv2d(
@@ -109,15 +137,16 @@ impl CpuExecutor {
         for (i, layer) in self.arch.layers.iter().enumerate() {
             let t0 = Instant::now();
             let in_shape = &layer_shapes[i];
+            let (wk, bk) = &self.weight_keys[i];
             x = match &layer.kind {
                 LayerKind::Conv2d { stride, pad, .. } => {
-                    let w = self.weights.get(&format!("{}.w", layer.name))?;
-                    let b = self.weights.get(&format!("{}.b", layer.name))?;
+                    let w = self.weights.get(wk)?;
+                    let b = self.weights.get(bk)?;
                     self.run_conv2d(&x, w, b, Conv2dParams::new(*stride, *pad))?
                 }
                 LayerKind::Conv1d { k: _, stride, pad, .. } => {
-                    let w = self.weights.get(&format!("{}.w", layer.name))?;
-                    let b = self.weights.get(&format!("{}.b", layer.name))?;
+                    let w = self.weights.get(wk)?;
+                    let b = self.weights.get(bk)?;
                     conv1d(&x, w, Some(b), Conv1dParams { stride: *stride, pad: *pad })?
                 }
                 LayerKind::Relu => {
@@ -133,8 +162,8 @@ impl CpuExecutor {
                 LayerKind::MaxPool1d { k, stride } => max_pool1d(&x, *k, *stride)?,
                 LayerKind::GlobalAvgPool => global_avg_pool(&x)?,
                 LayerKind::Dense { .. } => {
-                    let w = self.weights.get(&format!("{}.w", layer.name))?;
-                    let b = self.weights.get(&format!("{}.b", layer.name))?;
+                    let w = self.weights.get(wk)?;
+                    let b = self.weights.get(bk)?;
                     dense(&x, w, Some(b))?
                 }
                 LayerKind::Flatten => {
@@ -162,7 +191,7 @@ impl CpuExecutor {
                     }
                 } * batch as u64;
                 ts.push(LayerTiming {
-                    name: layer.name.clone(),
+                    name: self.names[i].clone(),
                     kind: layer.kind.type_name(),
                     micros: t0.elapsed().as_secs_f64() * 1e6,
                     macs: layer_macs,
@@ -246,8 +275,13 @@ mod tests {
         let (_, timings) = exec.forward_timed(&x).unwrap();
         assert_eq!(timings.len(), 6);
         assert_eq!(timings[0].kind, "conv2d");
+        assert_eq!(&*timings[0].name, "conv1");
         assert!(timings[0].macs > 0);
         assert_eq!(timings[1].macs, 0); // relu
+        // Names are interned at build time: two timed forwards hand out
+        // the same Arc, not a fresh String per layer per call.
+        let (_, again) = exec.forward_timed(&x).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&timings[0].name, &again[0].name));
     }
 
     #[test]

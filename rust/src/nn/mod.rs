@@ -21,18 +21,28 @@ mod dense;
 mod fft;
 mod fft_conv;
 mod graph;
+pub mod plan;
 mod pool;
 mod softmax;
 
 pub use activation::{relu, relu_in_place, sigmoid, tanh_act};
-pub use conv::{conv2d, conv2d_direct, conv2d_im2col, im2col, Conv2dParams};
-pub use conv1d::{conv1d, max_pool1d, Conv1dParams};
-pub use dense::{dense, matmul, matmul_blocked};
+pub use conv::{
+    conv2d, conv2d_direct, conv2d_direct_into, conv2d_im2col, conv2d_im2col_into, im2col,
+    im2col_into, Conv2dParams,
+};
+pub use conv1d::{conv1d, conv1d_into, max_pool1d, max_pool1d_into, Conv1dParams};
+pub use dense::{dense, dense_into, matmul, matmul_blocked};
 pub use fft::{fft, fft2d, ifft, ifft2d, Complex};
-pub use fft_conv::{conv2d_fft, fft_conv_flops};
+pub use fft_conv::{conv2d_fft, fft_conv_flops, FftConvPlan, FftScratch};
 pub use graph::{CpuExecutor, LayerTiming};
-pub use pool::{avg_pool2d, global_avg_pool, max_pool2d, Pool2dParams};
-pub use softmax::{log_softmax, softmax};
+pub use plan::{
+    CostModel, ExecutionPlan, PlanOptions, PlanStrategy, PlannedExecutor,
+};
+pub use pool::{
+    avg_pool2d, avg_pool2d_into, global_avg_pool, global_avg_pool_into, max_pool2d,
+    max_pool2d_into, Pool2dParams,
+};
+pub use softmax::{log_softmax, softmax, softmax_in_place};
 
 /// Convolution strategy selector (E6 sweeps all of these).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,1313 @@
+//! Compiled forward passes: "plan once, execute many".
+//!
+//! The paper's central GPU optimization is the lifecycle *around* the
+//! shaders, not the shaders themselves — "reuse memory between layers"
+//! and cache compiled kernels so the per-inference path does no
+//! allocation and no recompilation (§GPU memory handling). This module is
+//! that lifecycle for the CPU backend:
+//!
+//! - [`ExecutionPlan::compile`] runs shape inference over an
+//!   [`Architecture`] for one batch size, computes **tensor liveness**
+//!   over the layer chain, and assigns every intermediate (plus im2col
+//!   scratch) to a slot in a preallocated **arena** — steady-state
+//!   forward passes perform zero per-layer heap allocation.
+//! - Convolution strategy is chosen **per layer** by a [`CostModel`]
+//!   whose coefficients are measured on this host at first use
+//!   (microbenchmark calibration), replacing the interpreter's single
+//!   executor-wide [`ConvStrategy`]. The comparative-framework
+//!   literature (Bahrampour et al.) shows the winning algorithm flips
+//!   with layer geometry; E12 (`fig_plan`) regenerates that result.
+//! - FFT convs bake their **precalculated filter spectra** into the plan
+//!   (the paper's own phrase), so per-forward work is input transforms
+//!   only.
+//!
+//! The walk-the-architecture interpreter ([`super::CpuExecutor`]) is
+//! retained as the correctness oracle: `rust/tests/plan.rs` holds the
+//! planned executor bit-exact against it for every layer kind and every
+//! ladder batch size.
+
+use super::fft::Complex;
+use super::fft_conv::{FftConvPlan, FftScratch};
+use super::{
+    avg_pool2d_into, conv1d_into, conv2d_direct_into, conv2d_im2col_into, dense_into,
+    fft_conv_flops, global_avg_pool_into, max_pool1d_into, max_pool2d_into, relu_in_place,
+    softmax_in_place, Conv1dParams, Conv2dParams, ConvStrategy, LayerTiming, Pool2dParams,
+};
+use crate::model::{Architecture, LayerKind, WeightStore};
+use crate::tensor::{Shape, Tensor};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Auto strategy selection declines FFT once the plan-resident filter
+/// spectra would exceed this (the paper targets memory-tight devices;
+/// a forced `Fixed(Fft)` is still honored).
+const FFT_SPECTRA_CAP_BYTES: usize = 16 << 20;
+
+// ---------------------------------------------------------------------------
+// Cost model
+// ---------------------------------------------------------------------------
+
+/// Per-operation cost coefficients (microseconds per unit of work). The
+/// absolute values only matter relative to each other — the plan uses
+/// them to rank conv strategies per layer geometry and to estimate whole
+/// forward passes for the selector's latency-budget filter.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// µs per MAC for the direct 7-loop convolution.
+    pub direct_us_per_mac: f64,
+    /// µs per MAC for GEMM inner loops (im2col conv, dense).
+    pub gemm_us_per_mac: f64,
+    /// µs per patch-matrix element for the im2col lowering.
+    pub lower_us_per_elem: f64,
+    /// µs per modeled FLOP of the FFT path ([`fft_conv_flops`]).
+    pub fft_us_per_flop: f64,
+    /// µs per element for elementwise / pooling traffic.
+    pub elem_us: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel::analytic()
+    }
+}
+
+/// Bytes of plan-resident filter spectra an FFT conv of this geometry
+/// would hold (`oc*c` planes on the power-of-two padded grid).
+fn fft_spectra_bytes(c: usize, h: usize, w: usize, oc: usize, params: Conv2dParams) -> usize {
+    let grid =
+        (h + 2 * params.pad).next_power_of_two() * (w + 2 * params.pad).next_power_of_two();
+    oc * c * grid * std::mem::size_of::<Complex>()
+}
+
+/// Minimum-of-N wall time for one closure, in µs.
+fn probe_us(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+impl CostModel {
+    /// Analytic fallback coefficients (order-of-magnitude CPU figures).
+    /// Used when calibration cannot run or produces degenerate fits.
+    pub fn analytic() -> CostModel {
+        CostModel {
+            direct_us_per_mac: 1.5e-3,
+            gemm_us_per_mac: 4.0e-4,
+            lower_us_per_elem: 1.5e-3,
+            fft_us_per_flop: 4.0e-4,
+            elem_us: 5.0e-4,
+        }
+    }
+
+    /// Calibrate the coefficients on this host with a few small
+    /// microbenchmarks (a handful of milliseconds, total). Two im2col
+    /// probes with different output-channel counts separate the GEMM
+    /// coefficient from the patch-lowering coefficient.
+    pub fn measured() -> CostModel {
+        let fallback = CostModel::analytic();
+        let p = Conv2dParams::new(1, 1);
+        let (c, hw, k) = (8usize, 12usize, 3usize);
+        let x = Tensor::randn(Shape::nchw(1, c, hw, hw), 11, 1.0);
+
+        // Direct.
+        let w8 = Tensor::randn(&[8, c, k, k][..], 12, 0.2);
+        let mut out8 = Tensor::zeros(Shape::nchw(1, 8, hw, hw));
+        let t_direct = probe_us(3, || {
+            conv2d_direct_into(&x, &w8, None, p, &mut out8).unwrap();
+        });
+        let macs8 = (8 * hw * hw * c * k * k) as f64;
+        let direct = t_direct / macs8;
+
+        // im2col: two probes, solve for (gemm, lower).
+        let patch_elems = (c * k * k * hw * hw) as f64;
+        let mut patches = Tensor::zeros(&[c * k * k, hw * hw][..]);
+        let w16 = Tensor::randn(&[16, c, k, k][..], 13, 0.2);
+        let mut out16 = Tensor::zeros(Shape::nchw(1, 16, hw, hw));
+        let t16 = probe_us(3, || {
+            conv2d_im2col_into(&x, &w16, None, p, &mut patches, &mut out16).unwrap();
+        });
+        let w1 = Tensor::randn(&[1, c, k, k][..], 14, 0.2);
+        let mut out1 = Tensor::zeros(Shape::nchw(1, 1, hw, hw));
+        let t1 = probe_us(3, || {
+            conv2d_im2col_into(&x, &w1, None, p, &mut patches, &mut out1).unwrap();
+        });
+        let (macs16, macs1) = ((16 * hw * hw * c * k * k) as f64, (hw * hw * c * k * k) as f64);
+        // The lowering coefficient is only meaningful relative to a sane
+        // GEMM fit; if noise made the GEMM slope degenerate, reject both
+        // (NaN fails the ok() guard below) rather than pricing im2col
+        // from garbage.
+        let gemm = (t16 - t1) / (macs16 - macs1);
+        let lower = if gemm.is_finite() && gemm > 0.0 {
+            (t1 - gemm * macs1) / patch_elems
+        } else {
+            f64::NAN
+        };
+
+        // FFT.
+        let pf = Conv2dParams::new(1, 2);
+        let kf = 5usize;
+        let wf = Tensor::randn(&[4, 4, kf, kf][..], 15, 0.2);
+        let xf = Tensor::randn(Shape::nchw(1, 4, hw, hw), 16, 1.0);
+        let t_fft = match FftConvPlan::new(&wf, hw, hw, pf) {
+            Ok(plan) => {
+                let mut scratch = plan.scratch();
+                let mut outf = Tensor::zeros(Shape::nchw(1, 4, hw, hw));
+                probe_us(3, || {
+                    plan.run_into(&xf, None, &mut scratch, &mut outf).unwrap();
+                })
+            }
+            Err(_) => f64::NAN,
+        };
+        let fft = t_fft / fft_conv_flops(1, 4, hw, hw, 4, kf, pf.pad) as f64;
+
+        // Elementwise.
+        let mut buf = Tensor::randn(&[1 << 14][..], 17, 1.0);
+        let t_elem = probe_us(3, || relu_in_place(&mut buf));
+        let elem = t_elem / (1 << 14) as f64;
+
+        let ok = |v: f64| v.is_finite() && v > 0.0;
+        CostModel {
+            direct_us_per_mac: if ok(direct) { direct } else { fallback.direct_us_per_mac },
+            gemm_us_per_mac: if ok(gemm) { gemm } else { fallback.gemm_us_per_mac },
+            lower_us_per_elem: if ok(lower) { lower } else { fallback.lower_us_per_elem },
+            fft_us_per_flop: if ok(fft) { fft } else { fallback.fft_us_per_flop },
+            elem_us: if ok(elem) { elem } else { fallback.elem_us },
+        }
+    }
+
+    /// The process-wide calibrated model (measured once, on first use).
+    pub fn global() -> CostModel {
+        static CALIBRATED: OnceLock<CostModel> = OnceLock::new();
+        *CALIBRATED.get_or_init(CostModel::measured)
+    }
+
+    /// Predicted cost of one conv2d call, in µs.
+    pub fn conv2d_us(
+        &self,
+        strategy: ConvStrategy,
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        oc: usize,
+        k: usize,
+        params: Conv2dParams,
+    ) -> crate::Result<f64> {
+        let (oh, ow) = params.out_hw(h, w, k)?;
+        let macs = (n * oc * oh * ow * c * k * k) as f64;
+        Ok(match strategy {
+            ConvStrategy::Direct => macs * self.direct_us_per_mac,
+            ConvStrategy::Im2col => {
+                macs * self.gemm_us_per_mac
+                    + (n * c * k * k * oh * ow) as f64 * self.lower_us_per_elem
+            }
+            ConvStrategy::Fft => {
+                fft_conv_flops(n, c, h, w, oc, k, params.pad) as f64 * self.fft_us_per_flop
+            }
+        })
+    }
+
+    /// The cheapest strategy for one conv2d geometry, with its predicted
+    /// cost (ties break toward direct, then im2col — deterministic).
+    pub fn pick_conv2d(
+        &self,
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        oc: usize,
+        k: usize,
+        params: Conv2dParams,
+    ) -> crate::Result<(ConvStrategy, f64)> {
+        let mut best: Option<(ConvStrategy, f64)> = None;
+        for s in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+            let us = self.conv2d_us(s, n, c, h, w, oc, k, params)?;
+            if best.map_or(true, |(_, b)| us < b) {
+                best = Some((s, us));
+            }
+        }
+        Ok(best.unwrap())
+    }
+
+    /// [`CostModel::pick_conv2d`] under the plan's resident-memory
+    /// guard: when the cheapest strategy is FFT but its plan-resident
+    /// filter spectra would exceed the spectra cap (16 MB), fall back
+    /// to the cheaper of direct/im2col. This is the selection
+    /// [`ExecutionPlan::compile`] actually uses in auto mode, and the
+    /// one [`CostModel::estimate_forward_us`] prices — so the selector's
+    /// budget filter and the compiled plan agree.
+    pub fn pick_conv2d_capped(
+        &self,
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        oc: usize,
+        k: usize,
+        params: Conv2dParams,
+    ) -> crate::Result<(ConvStrategy, f64)> {
+        let (s, est) = self.pick_conv2d(n, c, h, w, oc, k, params)?;
+        if s == ConvStrategy::Fft && fft_spectra_bytes(c, h, w, oc, params) > FFT_SPECTRA_CAP_BYTES
+        {
+            let d = self.conv2d_us(ConvStrategy::Direct, n, c, h, w, oc, k, params)?;
+            let i2 = self.conv2d_us(ConvStrategy::Im2col, n, c, h, w, oc, k, params)?;
+            return Ok(if d <= i2 {
+                (ConvStrategy::Direct, d)
+            } else {
+                (ConvStrategy::Im2col, i2)
+            });
+        }
+        Ok((s, est))
+    }
+
+    /// Predicted forward-pass cost for a whole architecture at `batch`,
+    /// in µs, assuming the per-layer strategy the plan would pick (the
+    /// capped auto selection). This is what the model selector's
+    /// latency-budget filter consumes
+    /// ([`crate::selector::Candidate::for_arch`]).
+    pub fn estimate_forward_us(&self, arch: &Architecture, batch: usize) -> crate::Result<f64> {
+        let shapes = arch.shapes()?;
+        let mut total = 0.0;
+        for (i, layer) in arch.layers.iter().enumerate() {
+            let inp = &shapes[i];
+            let out = &shapes[i + 1];
+            let out_elems = (batch * out.iter().product::<usize>()) as f64;
+            total += match &layer.kind {
+                LayerKind::Conv2d { out_ch, k, stride, pad } => {
+                    let p = Conv2dParams::new(*stride, *pad);
+                    self.pick_conv2d_capped(batch, inp[0], inp[1], inp[2], *out_ch, *k, p)?.1
+                }
+                LayerKind::Conv1d { out_ch, k, .. } => {
+                    (batch * out_ch * out[1] * inp[0] * k) as f64 * self.direct_us_per_mac
+                }
+                LayerKind::Dense { out: of } => {
+                    (batch * of * inp.iter().product::<usize>()) as f64 * self.gemm_us_per_mac
+                }
+                LayerKind::MaxPool2d { k, .. } | LayerKind::AvgPool2d { k, .. } => {
+                    out_elems * (k * k) as f64 * self.elem_us
+                }
+                LayerKind::MaxPool1d { k, .. } => out_elems * *k as f64 * self.elem_us,
+                LayerKind::GlobalAvgPool => (batch * inp.iter().product::<usize>()) as f64 * self.elem_us,
+                LayerKind::Relu => out_elems * self.elem_us,
+                LayerKind::Softmax => out_elems * 4.0 * self.elem_us,
+                LayerKind::Flatten | LayerKind::Dropout { .. } => 0.0,
+            };
+        }
+        Ok(total)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan options
+// ---------------------------------------------------------------------------
+
+/// Conv-strategy policy for a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PlanStrategy {
+    /// Pick per layer with the calibrated cost model (the default).
+    #[default]
+    Auto,
+    /// Force one strategy for every conv2d (the old executor-wide knob,
+    /// kept for sweeps and for bit-exact oracle comparisons).
+    Fixed(ConvStrategy),
+}
+
+impl PlanStrategy {
+    /// Parse a CLI value: `auto`, `direct`, `im2col` or `fft`.
+    pub fn parse(s: &str) -> crate::Result<PlanStrategy> {
+        Ok(match s {
+            "auto" => PlanStrategy::Auto,
+            "direct" => PlanStrategy::Fixed(ConvStrategy::Direct),
+            "im2col" => PlanStrategy::Fixed(ConvStrategy::Im2col),
+            "fft" => PlanStrategy::Fixed(ConvStrategy::Fft),
+            other => anyhow::bail!(
+                "unknown conv strategy `{other}` (expected auto, direct, im2col or fft)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanStrategy::Auto => "auto",
+            PlanStrategy::Fixed(s) => s.name(),
+        }
+    }
+}
+
+/// Options for [`ExecutionPlan::compile`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanOptions {
+    pub strategy: PlanStrategy,
+    /// Cost model override; `None` uses the process-wide calibrated one.
+    pub cost_model: Option<CostModel>,
+}
+
+impl PlanOptions {
+    /// Force one conv strategy everywhere.
+    pub fn fixed(strategy: ConvStrategy) -> PlanOptions {
+        PlanOptions { strategy: PlanStrategy::Fixed(strategy), cost_model: None }
+    }
+
+    fn resolve_cost(&self) -> CostModel {
+        self.cost_model.unwrap_or_else(CostModel::global)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan structure
+// ---------------------------------------------------------------------------
+
+enum Op {
+    Conv2dDirect { params: Conv2dParams },
+    Conv2dIm2col { params: Conv2dParams, scratch_slot: usize, patch_shape: Shape },
+    /// Shared across every ladder batch size's plan: the filter spectra
+    /// depend only on (weights, input H×W, params), never on batch, so
+    /// `PlannedExecutor` compiles them once per conv layer.
+    Conv2dFft { fft: Arc<FftConvPlan> },
+    Conv1d { params: Conv1dParams },
+    Relu,
+    MaxPool2d { params: Pool2dParams },
+    AvgPool2d { params: Pool2dParams },
+    MaxPool1d { k: usize, stride: usize },
+    GlobalAvgPool,
+    Dense,
+    FlattenAlias,
+    DropoutNoop,
+    SoftmaxInPlace,
+}
+
+impl Op {
+    fn strategy(&self) -> Option<ConvStrategy> {
+        match self {
+            Op::Conv2dDirect { .. } => Some(ConvStrategy::Direct),
+            Op::Conv2dIm2col { .. } => Some(ConvStrategy::Im2col),
+            Op::Conv2dFft { .. } => Some(ConvStrategy::Fft),
+            _ => None,
+        }
+    }
+
+    fn in_place(&self) -> bool {
+        matches!(
+            self,
+            Op::Relu | Op::FlattenAlias | Op::DropoutNoop | Op::SoftmaxInPlace
+        )
+    }
+}
+
+struct Step {
+    op: Op,
+    in_slot: usize,
+    out_slot: usize,
+    /// Output shape, batch dimension included.
+    out_shape: Shape,
+    w_key: Option<String>,
+    b_key: Option<String>,
+    /// Interned layer name (shared with every `LayerTiming` this step
+    /// emits — no per-forward string allocation).
+    name: Arc<str>,
+    kind: &'static str,
+    /// Batch-scaled multiply-accumulates.
+    macs: u64,
+    /// Cost-model estimate, µs.
+    est_us: f64,
+}
+
+/// Liveness record for one arena buffer: which steps it spans and the
+/// slot it was assigned to. Inclusive interval; two buffers may share a
+/// slot only if their `[birth, death]` intervals are disjoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufferInfo {
+    pub slot: usize,
+    pub birth: usize,
+    pub death: usize,
+    pub numel: usize,
+}
+
+/// One step of the plan, as seen by introspection (tests, `dlk plan`).
+#[derive(Clone, Debug)]
+pub struct StepInfo {
+    pub name: Arc<str>,
+    pub kind: &'static str,
+    pub in_slot: usize,
+    pub out_slot: usize,
+    pub scratch_slot: Option<usize>,
+    pub in_place: bool,
+    pub strategy: Option<ConvStrategy>,
+    pub out_shape: Vec<usize>,
+    pub macs: u64,
+    pub est_us: f64,
+}
+
+struct ArenaBuffers {
+    slots: Vec<Tensor>,
+    fft: Option<FftScratch>,
+}
+
+/// A forward pass compiled for one `(architecture, batch)` pair: layer
+/// sequence resolved to `_into` kernel calls over arena slots, conv
+/// strategies fixed per layer, FFT filter spectra precomputed. Compile
+/// once at model-load time, execute many times; the arena is allocated
+/// lazily on first execute and reused forever after.
+///
+/// `execute` takes `&self`; concurrent callers serialize on the internal
+/// arena lock (each engine shard owns its models, so in the serving
+/// stack the lock is uncontended).
+pub struct ExecutionPlan {
+    arch_name: String,
+    batch: usize,
+    input_shape: Shape,
+    output_shape: Shape,
+    input_slot: usize,
+    output_slot: usize,
+    steps: Vec<Step>,
+    slot_numel: Vec<usize>,
+    buffers_meta: Vec<BufferInfo>,
+    /// `(grid, channel_planes)` FFT scratch sizing, when any conv chose FFT.
+    fft_scratch_spec: Option<(usize, usize)>,
+    est_us: f64,
+    arena: Mutex<Option<ArenaBuffers>>,
+    arena_builds: AtomicU64,
+}
+
+fn take_slot(slots: &mut [Tensor], i: usize) -> Tensor {
+    std::mem::replace(&mut slots[i], Tensor::zeros(&[0][..]))
+}
+
+impl ExecutionPlan {
+    /// Compile `arch` + `weights` for one batch size.
+    pub fn compile(
+        arch: &Architecture,
+        weights: &WeightStore,
+        batch: usize,
+        opts: &PlanOptions,
+    ) -> crate::Result<ExecutionPlan> {
+        ExecutionPlan::compile_with_fft_cache(arch, weights, batch, opts, &mut BTreeMap::new())
+    }
+
+    /// [`ExecutionPlan::compile`] reusing precomputed FFT filter spectra
+    /// across plans: spectra depend only on (weights, layer geometry),
+    /// never on batch, so `PlannedExecutor` hands every ladder compile
+    /// the same cache (keyed by weight name) and a conv layer's filters
+    /// are transformed exactly once per model.
+    fn compile_with_fft_cache(
+        arch: &Architecture,
+        weights: &WeightStore,
+        batch: usize,
+        opts: &PlanOptions,
+        fft_cache: &mut BTreeMap<String, Arc<FftConvPlan>>,
+    ) -> crate::Result<ExecutionPlan> {
+        anyhow::ensure!(batch > 0, "plan batch must be positive");
+        weights.validate(arch)?;
+        let shapes = arch.shapes()?;
+        let cost = opts.resolve_cost();
+
+        // Liveness values: index 0 is the staged input; each out-of-place
+        // step births a new value (plus, for im2col, a same-step scratch
+        // value). In-place steps extend the current value's lifetime.
+        struct BufVal {
+            birth: usize,
+            death: usize,
+            numel: usize,
+        }
+        let input_numel = batch * shapes[0].iter().product::<usize>();
+        let mut bufs = vec![BufVal { birth: 0, death: 0, numel: input_numel }];
+        let mut cur = 0usize;
+
+        // Built with slot fields holding *buffer* indices; remapped to
+        // arena slots after liveness assignment below.
+        let mut steps: Vec<Step> = Vec::with_capacity(arch.layers.len());
+        let mut fft_spec: Option<(usize, usize)> = None;
+
+        for (i, layer) in arch.layers.iter().enumerate() {
+            let inp = &shapes[i];
+            let out = &shapes[i + 1];
+            let out_numel = batch * out.iter().product::<usize>();
+            let mut out_shape_dims = vec![batch];
+            out_shape_dims.extend_from_slice(out);
+            let out_shape = Shape::new(&out_shape_dims);
+            let name: Arc<str> = Arc::from(layer.name.as_str());
+            let kind = layer.kind.type_name();
+            let w_key = format!("{}.w", layer.name);
+            let b_key = format!("{}.b", layer.name);
+
+            // MACs, batch-scaled (same accounting as the interpreter).
+            let macs = match &layer.kind {
+                LayerKind::Conv2d { out_ch, k, .. } => {
+                    (out_ch * out[1] * out[2] * inp[0] * k * k) as u64
+                }
+                LayerKind::Conv1d { out_ch, k, .. } => (out_ch * out[1] * inp[0] * k) as u64,
+                LayerKind::Dense { out: of } => (of * inp.iter().product::<usize>()) as u64,
+                _ => 0,
+            } * batch as u64;
+
+            // In-place steps keep the current buffer; out-of-place steps
+            // close it at `i` and birth a fresh one.
+            let in_buf = cur;
+            bufs[cur].death = i;
+            let out_of_place = |bufs: &mut Vec<BufVal>, numel: usize| {
+                bufs.push(BufVal { birth: i, death: i, numel });
+                bufs.len() - 1
+            };
+
+            let (op, est_us, weighted, out_buf) = match &layer.kind {
+                LayerKind::Conv2d { out_ch, k, stride, pad } => {
+                    let params = Conv2dParams::new(*stride, *pad);
+                    let (c, h, w) = (inp[0], inp[1], inp[2]);
+                    let (strategy, est) = match opts.strategy {
+                        PlanStrategy::Fixed(s) => {
+                            (s, cost.conv2d_us(s, batch, c, h, w, *out_ch, *k, params)?)
+                        }
+                        // The capped pick: auto mode declines FFT when the
+                        // plan-resident spectra would outgrow the cap.
+                        PlanStrategy::Auto => {
+                            cost.pick_conv2d_capped(batch, c, h, w, *out_ch, *k, params)?
+                        }
+                    };
+                    let out_buf = out_of_place(&mut bufs, out_numel);
+                    let op = match strategy {
+                        ConvStrategy::Direct => Op::Conv2dDirect { params },
+                        ConvStrategy::Im2col => {
+                            let (oh, ow) = params.out_hw(h, w, *k)?;
+                            let patch_shape = Shape::new(&[c * k * k, oh * ow]);
+                            let scratch = out_of_place(&mut bufs, patch_shape.numel());
+                            Op::Conv2dIm2col { params, scratch_slot: scratch, patch_shape }
+                        }
+                        ConvStrategy::Fft => {
+                            let fft = match fft_cache.get(&w_key) {
+                                Some(p) => p.clone(),
+                                None => {
+                                    let wt = weights.get(&w_key)?;
+                                    let p = Arc::new(FftConvPlan::new(wt, h, w, params)?);
+                                    fft_cache.insert(w_key.clone(), p.clone());
+                                    p
+                                }
+                            };
+                            let (grid, chan) = fft.scratch_needs();
+                            fft_spec = Some(match fft_spec {
+                                Some((g, c0)) => (g.max(grid), c0.max(chan)),
+                                None => (grid, chan),
+                            });
+                            Op::Conv2dFft { fft }
+                        }
+                    };
+                    (op, est, true, out_buf)
+                }
+                LayerKind::Conv1d { stride, pad, .. } => {
+                    let params = Conv1dParams { stride: *stride, pad: *pad };
+                    let est = macs as f64 * cost.direct_us_per_mac;
+                    (Op::Conv1d { params }, est, true, out_of_place(&mut bufs, out_numel))
+                }
+                LayerKind::Relu => (Op::Relu, out_numel as f64 * cost.elem_us, false, cur),
+                LayerKind::MaxPool2d { k, stride, pad } => {
+                    let params = Pool2dParams::new(*k, *stride, *pad);
+                    let est = out_numel as f64 * (k * k) as f64 * cost.elem_us;
+                    (Op::MaxPool2d { params }, est, false, out_of_place(&mut bufs, out_numel))
+                }
+                LayerKind::AvgPool2d { k, stride, pad } => {
+                    let params = Pool2dParams::new(*k, *stride, *pad);
+                    let est = out_numel as f64 * (k * k) as f64 * cost.elem_us;
+                    (Op::AvgPool2d { params }, est, false, out_of_place(&mut bufs, out_numel))
+                }
+                LayerKind::MaxPool1d { k, stride } => {
+                    let est = out_numel as f64 * *k as f64 * cost.elem_us;
+                    (
+                        Op::MaxPool1d { k: *k, stride: *stride },
+                        est,
+                        false,
+                        out_of_place(&mut bufs, out_numel),
+                    )
+                }
+                LayerKind::GlobalAvgPool => {
+                    let est = (batch * inp.iter().product::<usize>()) as f64 * cost.elem_us;
+                    (Op::GlobalAvgPool, est, false, out_of_place(&mut bufs, out_numel))
+                }
+                LayerKind::Dense { .. } => {
+                    anyhow::ensure!(
+                        inp.len() == 1,
+                        "layer `{}`: dense expects a flattened input, got {inp:?}",
+                        layer.name
+                    );
+                    let est = macs as f64 * cost.gemm_us_per_mac;
+                    (Op::Dense, est, true, out_of_place(&mut bufs, out_numel))
+                }
+                LayerKind::Flatten => (Op::FlattenAlias, 0.0, false, cur),
+                LayerKind::Dropout { .. } => (Op::DropoutNoop, 0.0, false, cur),
+                LayerKind::Softmax => {
+                    (Op::SoftmaxInPlace, out_numel as f64 * 4.0 * cost.elem_us, false, cur)
+                }
+            };
+            steps.push(Step {
+                op,
+                in_slot: in_buf,
+                out_slot: out_buf,
+                out_shape,
+                w_key: if weighted { Some(w_key) } else { None },
+                b_key: if weighted { Some(b_key) } else { None },
+                name,
+                kind,
+                macs,
+                est_us,
+            });
+            cur = out_buf;
+        }
+
+        // First-fit slot assignment over the (birth-ordered) liveness
+        // intervals: a slot may be reused once its previous occupant's
+        // inclusive interval has ended.
+        let mut slot_numel: Vec<usize> = Vec::new();
+        let mut slot_busy_until: Vec<usize> = Vec::new();
+        let mut buffers_meta: Vec<BufferInfo> = Vec::with_capacity(bufs.len());
+        for b in &bufs {
+            let mut assigned = None;
+            for s in 0..slot_numel.len() {
+                if slot_busy_until[s] < b.birth {
+                    assigned = Some(s);
+                    break;
+                }
+            }
+            let slot = match assigned {
+                Some(s) => {
+                    slot_numel[s] = slot_numel[s].max(b.numel);
+                    slot_busy_until[s] = b.death;
+                    s
+                }
+                None => {
+                    slot_numel.push(b.numel);
+                    slot_busy_until.push(b.death);
+                    slot_numel.len() - 1
+                }
+            };
+            buffers_meta.push(BufferInfo { slot, birth: b.birth, death: b.death, numel: b.numel });
+        }
+
+        // Remap the steps' buffer indices to their assigned arena slots.
+        for step in &mut steps {
+            step.in_slot = buffers_meta[step.in_slot].slot;
+            step.out_slot = buffers_meta[step.out_slot].slot;
+            if let Op::Conv2dIm2col { scratch_slot, .. } = &mut step.op {
+                *scratch_slot = buffers_meta[*scratch_slot].slot;
+            }
+        }
+
+        let mut input_shape_dims = vec![batch];
+        input_shape_dims.extend_from_slice(&shapes[0]);
+        let mut output_shape_dims = vec![batch];
+        output_shape_dims.extend_from_slice(shapes.last().unwrap());
+        let est_us = steps.iter().map(|s| s.est_us).sum();
+
+        Ok(ExecutionPlan {
+            arch_name: arch.name.clone(),
+            batch,
+            input_shape: Shape::new(&input_shape_dims),
+            output_shape: Shape::new(&output_shape_dims),
+            input_slot: buffers_meta[0].slot,
+            output_slot: buffers_meta[cur].slot,
+            steps,
+            slot_numel,
+            buffers_meta,
+            fft_scratch_spec: fft_spec,
+            est_us,
+            arena: Mutex::new(None),
+            arena_builds: AtomicU64::new(0),
+        })
+    }
+
+    // ---- execution --------------------------------------------------------
+
+    /// Run the planned forward pass. Bit-exact with the interpreter
+    /// oracle when both use the same conv strategy per layer.
+    pub fn execute(&self, weights: &WeightStore, input: &Tensor) -> crate::Result<Tensor> {
+        self.execute_inner(weights, input, None)
+    }
+
+    /// Run the planned forward pass, recording per-layer wall time. The
+    /// `LayerTiming` names are the plan's interned `Arc<str>`s — no
+    /// per-call string allocation.
+    pub fn execute_timed(
+        &self,
+        weights: &WeightStore,
+        input: &Tensor,
+    ) -> crate::Result<(Tensor, Vec<LayerTiming>)> {
+        let mut timings = Vec::with_capacity(self.steps.len());
+        let out = self.execute_inner(weights, input, Some(&mut timings))?;
+        Ok((out, timings))
+    }
+
+    fn execute_inner(
+        &self,
+        weights: &WeightStore,
+        input: &Tensor,
+        mut timings: Option<&mut Vec<LayerTiming>>,
+    ) -> crate::Result<Tensor> {
+        anyhow::ensure!(
+            input.shape() == &self.input_shape,
+            "plan for `{}` expects input {}, got {}",
+            self.arch_name,
+            self.input_shape,
+            input.shape()
+        );
+        let mut guard = self.arena.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(ArenaBuffers {
+                slots: self.slot_numel.iter().map(|&n| Tensor::with_capacity(n)).collect(),
+                fft: self.fft_scratch_spec.map(|(g, c)| FftScratch::with_sizes(g, c)),
+            });
+            self.arena_builds.fetch_add(1, Ordering::Relaxed);
+        }
+        let ArenaBuffers { slots, fft } = guard.as_mut().unwrap();
+
+        // Stage the input into its slot (copy, not clone: no allocation).
+        slots[self.input_slot].reshape_within(self.input_shape.clone())?;
+        slots[self.input_slot].data_mut().copy_from_slice(input.data());
+
+        for step in &self.steps {
+            let t0 = Instant::now();
+            match &step.op {
+                Op::Relu => relu_in_place(&mut slots[step.in_slot]),
+                Op::SoftmaxInPlace => softmax_in_place(&mut slots[step.in_slot])?,
+                Op::FlattenAlias => slots[step.in_slot].reshape_within(step.out_shape.clone())?,
+                Op::DropoutNoop => {}
+                Op::Conv2dDirect { params } => {
+                    let w = weights.get(step.w_key.as_deref().unwrap())?;
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        conv2d_direct_into(&slots[step.in_slot], w, Some(b), *params, &mut out)
+                    });
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::Conv2dIm2col { params, scratch_slot, patch_shape } => {
+                    let w = weights.get(step.w_key.as_deref().unwrap())?;
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let mut out = take_slot(slots, step.out_slot);
+                    let mut patches = take_slot(slots, *scratch_slot);
+                    let r = out
+                        .reshape_within(step.out_shape.clone())
+                        .and_then(|_| patches.reshape_within(patch_shape.clone()))
+                        .and_then(|_| {
+                            conv2d_im2col_into(
+                                &slots[step.in_slot],
+                                w,
+                                Some(b),
+                                *params,
+                                &mut patches,
+                                &mut out,
+                            )
+                        });
+                    slots[*scratch_slot] = patches;
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::Conv2dFft { fft: conv } => {
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let scratch = fft.as_mut().expect("fft scratch allocated with the arena");
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        conv.run_into(&slots[step.in_slot], Some(b), scratch, &mut out)
+                    });
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::Conv1d { params } => {
+                    let w = weights.get(step.w_key.as_deref().unwrap())?;
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        conv1d_into(&slots[step.in_slot], w, Some(b), *params, &mut out)
+                    });
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::MaxPool2d { params } => {
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out
+                        .reshape_within(step.out_shape.clone())
+                        .and_then(|_| max_pool2d_into(&slots[step.in_slot], *params, &mut out));
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::AvgPool2d { params } => {
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out
+                        .reshape_within(step.out_shape.clone())
+                        .and_then(|_| avg_pool2d_into(&slots[step.in_slot], *params, &mut out));
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::MaxPool1d { k, stride } => {
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        max_pool1d_into(&slots[step.in_slot], *k, *stride, &mut out)
+                    });
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::GlobalAvgPool => {
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out
+                        .reshape_within(step.out_shape.clone())
+                        .and_then(|_| global_avg_pool_into(&slots[step.in_slot], &mut out));
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::Dense => {
+                    let w = weights.get(step.w_key.as_deref().unwrap())?;
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out
+                        .reshape_within(step.out_shape.clone())
+                        .and_then(|_| dense_into(&slots[step.in_slot], w, Some(b), &mut out));
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+            }
+            if let Some(ts) = timings.as_deref_mut() {
+                ts.push(LayerTiming {
+                    name: step.name.clone(),
+                    kind: step.kind,
+                    micros: t0.elapsed().as_secs_f64() * 1e6,
+                    macs: step.macs,
+                });
+            }
+        }
+
+        // The only per-forward allocation: the caller-owned output.
+        let out = &slots[self.output_slot];
+        debug_assert_eq!(out.shape(), &self.output_shape);
+        Tensor::new(self.output_shape.clone(), out.data().to_vec())
+    }
+
+    // ---- introspection ----------------------------------------------------
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Expected input shape, batch dimension included.
+    pub fn input_shape(&self) -> &Shape {
+        &self.input_shape
+    }
+
+    /// Output shape, batch dimension included.
+    pub fn output_shape(&self) -> &Shape {
+        &self.output_shape
+    }
+
+    /// Cost-model estimate for one forward pass, µs.
+    pub fn estimated_us(&self) -> f64 {
+        self.est_us
+    }
+
+    /// Arena slot capacities, in elements.
+    pub fn slot_sizes(&self) -> &[usize] {
+        &self.slot_numel
+    }
+
+    /// Peak arena footprint: every slot at capacity, in bytes.
+    pub fn peak_arena_bytes(&self) -> usize {
+        self.slot_numel.iter().sum::<usize>() * std::mem::size_of::<f32>()
+    }
+
+    /// Liveness + slot assignment per buffer (arena-aliasing tests).
+    pub fn buffers(&self) -> &[BufferInfo] {
+        &self.buffers_meta
+    }
+
+    /// Per-step view: slots, strategy, estimates.
+    pub fn steps(&self) -> Vec<StepInfo> {
+        self.steps
+            .iter()
+            .map(|s| StepInfo {
+                name: s.name.clone(),
+                kind: s.kind,
+                in_slot: s.in_slot,
+                out_slot: s.out_slot,
+                scratch_slot: match &s.op {
+                    Op::Conv2dIm2col { scratch_slot, .. } => Some(*scratch_slot),
+                    _ => None,
+                },
+                in_place: s.op.in_place(),
+                strategy: s.op.strategy(),
+                out_shape: s.out_shape.dims().to_vec(),
+                macs: s.macs,
+                est_us: s.est_us,
+            })
+            .collect()
+    }
+
+    /// `(layer name, chosen strategy)` for every conv2d step.
+    pub fn conv_strategies(&self) -> Vec<(Arc<str>, ConvStrategy)> {
+        self.steps
+            .iter()
+            .filter_map(|s| s.op.strategy().map(|st| (s.name.clone(), st)))
+            .collect()
+    }
+
+    /// How many times the arena has been (re)built — 1 after any number
+    /// of executes, which is the "zero steady-state allocation" invariant
+    /// the tests pin down.
+    pub fn arena_builds(&self) -> u64 {
+        self.arena_builds.load(Ordering::Relaxed)
+    }
+
+    /// Human-readable plan dump: per-layer strategy, slot routing and
+    /// the arena layout (`dlk plan`).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "plan `{}` batch {}: {} steps, {} arena slots, peak arena {}, est {:.1} us",
+            self.arch_name,
+            self.batch,
+            self.steps.len(),
+            self.slot_numel.len(),
+            crate::metrics::fmt_bytes(self.peak_arena_bytes() as u64),
+            self.est_us
+        );
+        for (i, n) in self.slot_numel.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  slot {i}: {} elems ({})",
+                n,
+                crate::metrics::fmt_bytes((n * std::mem::size_of::<f32>()) as u64)
+            );
+        }
+        if let Some((grid, chan)) = self.fft_scratch_spec {
+            let _ = writeln!(
+                s,
+                "  fft scratch: {} complex elems",
+                grid * 2 + chan
+            );
+        }
+        for (i, step) in self.steps.iter().enumerate() {
+            let route = if step.op.in_place() {
+                format!("s{} in-place", step.in_slot)
+            } else {
+                match &step.op {
+                    Op::Conv2dIm2col { scratch_slot, .. } => {
+                        format!("s{}->s{} (scratch s{})", step.in_slot, step.out_slot, scratch_slot)
+                    }
+                    _ => format!("s{}->s{}", step.in_slot, step.out_slot),
+                }
+            };
+            let strategy = step
+                .op
+                .strategy()
+                .map(|st| format!(" [{}]", st.name()))
+                .unwrap_or_default();
+            let dims: Vec<String> =
+                step.out_shape.dims().iter().map(|d| d.to_string()).collect();
+            let _ = writeln!(
+                s,
+                "  step {i:2} {:<12} {:<14}{strategy:<9} {route:<24} -> [{}]  est {:.1} us",
+                step.name,
+                step.kind,
+                dims.join("x"),
+                step.est_us
+            );
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planned executor: plan cache over (arch, weights)
+// ---------------------------------------------------------------------------
+
+/// An architecture + weights bound to a cache of compiled
+/// [`ExecutionPlan`]s, one per batch size — the planned counterpart of
+/// [`super::CpuExecutor`]. `CpuModel` precompiles one plan per AOT-ladder
+/// batch size at load; ad-hoc batch sizes compile on first use and are
+/// cached.
+pub struct PlannedExecutor {
+    arch: Architecture,
+    weights: Arc<WeightStore>,
+    opts: PlanOptions,
+    cache: Mutex<PlanCache>,
+}
+
+/// Per-executor compile cache: plans by batch size, plus the FFT filter
+/// spectra shared by every plan (they are batch-independent).
+#[derive(Default)]
+struct PlanCache {
+    plans: BTreeMap<usize, Arc<ExecutionPlan>>,
+    fft: BTreeMap<String, Arc<FftConvPlan>>,
+}
+
+impl PlannedExecutor {
+    /// Bind an architecture to (shared) weights; validates them.
+    pub fn new(
+        arch: Architecture,
+        weights: Arc<WeightStore>,
+        opts: PlanOptions,
+    ) -> crate::Result<PlannedExecutor> {
+        weights.validate(&arch)?;
+        Ok(PlannedExecutor { arch, weights, opts, cache: Mutex::new(PlanCache::default()) })
+    }
+
+    /// Build with deterministic random weights — delegates the seeding
+    /// to [`super::CpuExecutor::with_random_weights`] and shares the
+    /// resulting store, so an interpreter oracle built with the same
+    /// seed holds bit-identical weights.
+    pub fn with_random_weights(
+        arch: Architecture,
+        seed: u64,
+        opts: PlanOptions,
+    ) -> crate::Result<PlannedExecutor> {
+        let exec = super::CpuExecutor::with_random_weights(arch.clone(), seed)?;
+        PlannedExecutor::new(arch, exec.shared_weights(), opts)
+    }
+
+    pub fn arch(&self) -> &Architecture {
+        &self.arch
+    }
+
+    pub fn weights(&self) -> &WeightStore {
+        &self.weights
+    }
+
+    pub fn options(&self) -> &PlanOptions {
+        &self.opts
+    }
+
+    /// The cached plan for `batch`, compiling it on first request. FFT
+    /// filter spectra are shared across all of this executor's plans.
+    pub fn plan_for(&self, batch: usize) -> crate::Result<Arc<ExecutionPlan>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(p) = cache.plans.get(&batch) {
+            return Ok(p.clone());
+        }
+        let plan = Arc::new(ExecutionPlan::compile_with_fft_cache(
+            &self.arch,
+            &self.weights,
+            batch,
+            &self.opts,
+            &mut cache.fft,
+        )?);
+        cache.plans.insert(batch, plan.clone());
+        Ok(plan)
+    }
+
+    /// Compile (and cache) a plan per batch size up front — what
+    /// `CpuModel::load` does for the AOT ladder.
+    pub fn precompile(&self, batches: &[usize]) -> crate::Result<()> {
+        for &b in batches {
+            self.plan_for(b)?;
+        }
+        Ok(())
+    }
+
+    /// Already-compiled plan for `batch`, if any.
+    pub fn cached_plan(&self, batch: usize) -> Option<Arc<ExecutionPlan>> {
+        self.cache.lock().unwrap().plans.get(&batch).cloned()
+    }
+
+    /// Number of compiled plans in the cache.
+    pub fn plan_count(&self) -> usize {
+        self.cache.lock().unwrap().plans.len()
+    }
+
+    /// Forward a `[batch, ...]` input through its batch's plan.
+    pub fn forward(&self, input: &Tensor) -> crate::Result<Tensor> {
+        anyhow::ensure!(input.shape().rank() >= 1, "input must have a batch dimension");
+        let plan = self.plan_for(input.shape().dim(0))?;
+        plan.execute(&self.weights, input)
+    }
+
+    /// Forward with per-layer timings (interned names).
+    pub fn forward_timed(&self, input: &Tensor) -> crate::Result<(Tensor, Vec<LayerTiming>)> {
+        anyhow::ensure!(input.shape().rank() >= 1, "input must have a batch dimension");
+        let plan = self.plan_for(input.shape().dim(0))?;
+        plan.execute_timed(&self.weights, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{lenet, nin_cifar10};
+    use crate::nn::CpuExecutor;
+
+    fn tiny_arch() -> Architecture {
+        let mut a = Architecture::new("tiny-plan", &[1, 6, 6]);
+        a.push("conv1", LayerKind::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 });
+        a.push("relu1", LayerKind::Relu);
+        a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+        a.push("flatten", LayerKind::Flatten);
+        a.push("fc", LayerKind::Dense { out: 3 });
+        a.push("softmax", LayerKind::Softmax);
+        a
+    }
+
+    #[test]
+    fn plan_matches_interpreter_bit_exact_per_strategy() {
+        let x = Tensor::randn(Shape::nchw(2, 1, 6, 6), 3, 1.0);
+        for strat in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+            let mut oracle = CpuExecutor::with_random_weights(tiny_arch(), 9).unwrap();
+            oracle.set_strategy(strat);
+            let expect = oracle.forward(&x).unwrap();
+            let planned =
+                PlannedExecutor::with_random_weights(tiny_arch(), 9, PlanOptions::fixed(strat))
+                    .unwrap();
+            let got = planned.forward(&x).unwrap();
+            assert_eq!(got.data(), expect.data(), "strategy {}", strat.name());
+            assert_eq!(got.shape(), expect.shape());
+        }
+    }
+
+    #[test]
+    fn steady_state_reuses_the_arena() {
+        let planned =
+            PlannedExecutor::with_random_weights(tiny_arch(), 5, PlanOptions::default()).unwrap();
+        let x = Tensor::randn(Shape::nchw(4, 1, 6, 6), 8, 1.0);
+        let y1 = planned.forward(&x).unwrap();
+        let y2 = planned.forward(&x).unwrap();
+        assert_eq!(y1, y2);
+        let plan = planned.cached_plan(4).unwrap();
+        // One arena build across repeated executes: zero steady-state
+        // allocation (the paper's "reuse memory between layers").
+        assert_eq!(plan.arena_builds(), 1);
+        assert_eq!(planned.plan_count(), 1);
+    }
+
+    #[test]
+    fn arena_slots_never_overlap_while_live() {
+        for batch in [1usize, 3] {
+            let planned =
+                PlannedExecutor::with_random_weights(lenet(), 7, PlanOptions::default()).unwrap();
+            let plan = planned.plan_for(batch).unwrap();
+            let bufs = plan.buffers();
+            for (i, a) in bufs.iter().enumerate() {
+                for b in &bufs[i + 1..] {
+                    if a.slot == b.slot {
+                        assert!(
+                            a.death < b.birth || b.death < a.birth,
+                            "buffers {a:?} and {b:?} share slot {} while both live",
+                            a.slot
+                        );
+                    }
+                }
+            }
+            // Liveness-based reuse must beat one-buffer-per-intermediate.
+            assert!(plan.slot_sizes().len() < bufs.len());
+            assert!(plan.peak_arena_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn auto_strategy_is_per_layer_on_nin() {
+        // NIN mixes 5x5, 3x3 and 1x1 convs: with the (host-calibrated)
+        // cost model the per-layer choice exists and every conv got one.
+        let planned =
+            PlannedExecutor::with_random_weights(nin_cifar10(), 4, PlanOptions::default())
+                .unwrap();
+        let plan = planned.plan_for(1).unwrap();
+        let strategies = plan.conv_strategies();
+        assert_eq!(strategies.len(), 9, "NIN has 9 conv layers");
+        // And the dump names every one of them.
+        let dump = plan.dump();
+        assert!(dump.contains("conv1") && dump.contains("cccp6"), "{dump}");
+        assert!(dump.contains("peak arena"), "{dump}");
+    }
+
+    #[test]
+    fn fft_spectra_shared_across_ladder_plans() {
+        // Filter spectra are batch-independent: every plan compiled by
+        // one executor must hold the *same* Arc, not a recomputed copy.
+        let planned = PlannedExecutor::with_random_weights(
+            tiny_arch(),
+            6,
+            PlanOptions::fixed(ConvStrategy::Fft),
+        )
+        .unwrap();
+        let p1 = planned.plan_for(1).unwrap();
+        let p2 = planned.plan_for(2).unwrap();
+        let spectra_of = |p: &ExecutionPlan| {
+            p.steps
+                .iter()
+                .find_map(|s| match &s.op {
+                    Op::Conv2dFft { fft } => Some(fft.clone()),
+                    _ => None,
+                })
+                .expect("fixed-fft plan has an fft conv step")
+        };
+        assert!(Arc::ptr_eq(&spectra_of(&p1), &spectra_of(&p2)));
+    }
+
+    #[test]
+    fn fixed_fft_precomputes_spectra_and_runs() {
+        let planned = PlannedExecutor::with_random_weights(
+            tiny_arch(),
+            3,
+            PlanOptions::fixed(ConvStrategy::Fft),
+        )
+        .unwrap();
+        let plan = planned.plan_for(2).unwrap();
+        assert!(plan.steps().iter().any(|s| s.strategy == Some(ConvStrategy::Fft)));
+        let x = Tensor::randn(Shape::nchw(2, 1, 6, 6), 21, 1.0);
+        let y = planned.forward(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn plan_rejects_wrong_batch_and_shape() {
+        let planned =
+            PlannedExecutor::with_random_weights(tiny_arch(), 3, PlanOptions::default()).unwrap();
+        let plan = planned.plan_for(2).unwrap();
+        let wrong_batch = Tensor::zeros(Shape::nchw(3, 1, 6, 6));
+        assert!(plan.execute(planned.weights(), &wrong_batch).is_err());
+        let wrong_chan = Tensor::zeros(Shape::nchw(2, 2, 6, 6));
+        assert!(plan.execute(planned.weights(), &wrong_chan).is_err());
+        // The executor-level entry point routes to the right plan.
+        assert!(planned.forward(&wrong_chan).is_err());
+    }
+
+    #[test]
+    fn cost_model_orders_geometries_sanely() {
+        let cm = CostModel::analytic();
+        let p1 = Conv2dParams::new(1, 0);
+        // 1x1 convs must never pick FFT (grid overhead dwarfs the MACs).
+        let (s, _) = cm.pick_conv2d(1, 64, 8, 8, 64, 1, p1).unwrap();
+        assert_ne!(s, ConvStrategy::Fft);
+        // Costs are monotone in output channels for a fixed strategy.
+        let small = cm.conv2d_us(ConvStrategy::Im2col, 1, 8, 16, 16, 8, 3, p1).unwrap();
+        let large = cm.conv2d_us(ConvStrategy::Im2col, 1, 8, 16, 16, 32, 3, p1).unwrap();
+        assert!(large > small);
+        // Whole-forward estimates: NIN costs more than LeNet.
+        let nin = cm.estimate_forward_us(&nin_cifar10(), 1).unwrap();
+        let le = cm.estimate_forward_us(&lenet(), 1).unwrap();
+        assert!(nin > le, "nin {nin} <= lenet {le}");
+    }
+
+    #[test]
+    fn strategy_parse_round_trips() {
+        for s in ["auto", "direct", "im2col", "fft"] {
+            assert_eq!(PlanStrategy::parse(s).unwrap().name(), s);
+        }
+        assert!(PlanStrategy::parse("metal").is_err());
+    }
+
+    #[test]
+    fn timed_execution_uses_interned_names() {
+        let planned =
+            PlannedExecutor::with_random_weights(tiny_arch(), 2, PlanOptions::default()).unwrap();
+        let x = Tensor::randn(Shape::nchw(1, 1, 6, 6), 5, 1.0);
+        let (_, t1) = planned.forward_timed(&x).unwrap();
+        let (_, t2) = planned.forward_timed(&x).unwrap();
+        assert_eq!(t1.len(), 6);
+        assert_eq!(&*t1[0].name, "conv1");
+        // Same Arc across calls: the name was interned once at compile.
+        assert!(Arc::ptr_eq(&t1[0].name, &t2[0].name));
+        assert!(t1[0].macs > 0);
+        assert_eq!(t1[1].macs, 0); // relu
+    }
+}

@@ -47,6 +47,20 @@ fn pool2d(
     is_max: bool,
 ) -> crate::Result<Tensor> {
     anyhow::ensure!(input.shape().rank() == 4, "pool input must be NCHW, got {}", input.shape());
+    let (n, c) = (input.shape().dim(0), input.shape().dim(1));
+    let (oh, ow) = params.out_hw(input.shape().dim(2), input.shape().dim(3))?;
+    let mut out = Tensor::zeros(Shape::nchw(n, c, oh, ow));
+    pool2d_into(input, params, is_max, &mut out)?;
+    Ok(out)
+}
+
+fn pool2d_into(
+    input: &Tensor,
+    params: Pool2dParams,
+    is_max: bool,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    anyhow::ensure!(input.shape().rank() == 4, "pool input must be NCHW, got {}", input.shape());
     let (n, c, h, w) = (
         input.shape().dim(0),
         input.shape().dim(1),
@@ -54,7 +68,11 @@ fn pool2d(
         input.shape().dim(3),
     );
     let (oh, ow) = params.out_hw(h, w)?;
-    let mut out = Tensor::zeros(Shape::nchw(n, c, oh, ow));
+    anyhow::ensure!(
+        out.shape().dims() == [n, c, oh, ow],
+        "pool out tensor is {}, expected [{n},{c},{oh},{ow}]",
+        out.shape()
+    );
     let x = input.data();
     let o = out.data_mut();
     for b in 0..n {
@@ -95,7 +113,7 @@ fn pool2d(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Max pooling.
@@ -103,13 +121,32 @@ pub fn max_pool2d(input: &Tensor, params: Pool2dParams) -> crate::Result<Tensor>
     pool2d(input, params, true)
 }
 
+/// [`max_pool2d`] into a preallocated `[n, c, oh, ow]` tensor.
+pub fn max_pool2d_into(input: &Tensor, params: Pool2dParams, out: &mut Tensor) -> crate::Result<()> {
+    pool2d_into(input, params, true, out)
+}
+
 /// Average pooling (in-bounds count divisor, Caffe `AVE` with pad exclusion).
 pub fn avg_pool2d(input: &Tensor, params: Pool2dParams) -> crate::Result<Tensor> {
     pool2d(input, params, false)
 }
 
+/// [`avg_pool2d`] into a preallocated `[n, c, oh, ow]` tensor.
+pub fn avg_pool2d_into(input: &Tensor, params: Pool2dParams, out: &mut Tensor) -> crate::Result<()> {
+    pool2d_into(input, params, false, out)
+}
+
 /// Global average pooling: NCHW -> [N, C] (NIN classifier head).
 pub fn global_avg_pool(input: &Tensor) -> crate::Result<Tensor> {
+    anyhow::ensure!(input.shape().rank() == 4, "gap input must be NCHW");
+    let (n, c) = (input.shape().dim(0), input.shape().dim(1));
+    let mut out = Tensor::zeros(Shape::new(&[n, c]));
+    global_avg_pool_into(input, &mut out)?;
+    Ok(out)
+}
+
+/// [`global_avg_pool`] into a preallocated `[n, c]` tensor.
+pub fn global_avg_pool_into(input: &Tensor, out: &mut Tensor) -> crate::Result<()> {
     anyhow::ensure!(input.shape().rank() == 4, "gap input must be NCHW");
     let (n, c, h, w) = (
         input.shape().dim(0),
@@ -117,7 +154,11 @@ pub fn global_avg_pool(input: &Tensor) -> crate::Result<Tensor> {
         input.shape().dim(2),
         input.shape().dim(3),
     );
-    let mut out = Tensor::zeros(Shape::new(&[n, c]));
+    anyhow::ensure!(
+        out.shape().dims() == [n, c],
+        "gap out tensor is {}, expected [{n},{c}]",
+        out.shape()
+    );
     let x = input.data();
     let o = out.data_mut();
     let inv = 1.0 / (h * w) as f32;
@@ -127,7 +168,7 @@ pub fn global_avg_pool(input: &Tensor) -> crate::Result<Tensor> {
             o[b * c + ch] = plane.iter().sum::<f32>() * inv;
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -204,6 +245,24 @@ mod tests {
         let y = global_avg_pool(&x).unwrap();
         assert_eq!(y.shape().dims(), &[2, 3]);
         assert_eq!(y.data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let x = img(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0], 4, 4);
+        let p = Pool2dParams::new(2, 2, 0);
+        let mut out = Tensor::filled(Shape::nchw(1, 1, 2, 2), f32::NAN);
+        max_pool2d_into(&x, p, &mut out).unwrap();
+        assert_eq!(out.data(), max_pool2d(&x, p).unwrap().data());
+        avg_pool2d_into(&x, p, &mut out).unwrap();
+        assert_eq!(out.data(), avg_pool2d(&x, p).unwrap().data());
+        let mut gout = Tensor::filled(&[1, 1][..], f32::NAN);
+        global_avg_pool_into(&x, &mut gout).unwrap();
+        assert_eq!(gout.data(), global_avg_pool(&x).unwrap().data());
+        // Mis-shaped out tensors are rejected.
+        let mut bad = Tensor::zeros(Shape::nchw(1, 1, 3, 3));
+        assert!(max_pool2d_into(&x, p, &mut bad).is_err());
+        assert!(global_avg_pool_into(&x, &mut bad).is_err());
     }
 
     #[test]

@@ -5,11 +5,19 @@ use crate::tensor::Tensor;
 
 /// Row-wise softmax of a `[batch, classes]` tensor.
 pub fn softmax(x: &Tensor) -> crate::Result<Tensor> {
+    let mut out = x.clone();
+    softmax_in_place(&mut out)?;
+    Ok(out)
+}
+
+/// Row-wise softmax, mutating `x` — the paper's roadmap item 5 ("more
+/// in-place calculations to save memory"); the execution plan runs the
+/// classifier head through this so no extra buffer is needed.
+pub fn softmax_in_place(x: &mut Tensor) -> crate::Result<()> {
     anyhow::ensure!(x.shape().rank() == 2, "softmax expects [batch, classes], got {}", x.shape());
     let classes = x.shape().dim(1);
     anyhow::ensure!(classes > 0, "softmax needs at least one class");
-    let mut out = x.clone();
-    for row in out.data_mut().chunks_exact_mut(classes) {
+    for row in x.data_mut().chunks_exact_mut(classes) {
         let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
         let mut sum = 0.0;
         for v in row.iter_mut() {
@@ -21,7 +29,7 @@ pub fn softmax(x: &Tensor) -> crate::Result<Tensor> {
             *v *= inv;
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Row-wise log-softmax (used for cross-entropy checking against the

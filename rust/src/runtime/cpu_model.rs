@@ -1,6 +1,6 @@
-//! A model resident on the CPU reference backend: manifest + a
-//! [`CpuExecutor`](crate::nn::CpuExecutor) over the same on-disk format the
-//! PJRT path consumes (`manifest.json` + `weights.dlkw`).
+//! A model resident on the CPU reference backend: manifest + compiled
+//! [`ExecutionPlan`](crate::nn::ExecutionPlan)s over the same on-disk
+//! format the PJRT path consumes (`manifest.json` + `weights.dlkw`).
 //!
 //! This is the engine's fallback when the crate is built without the
 //! `pjrt` feature (no `xla` dependency available). It deliberately mirrors
@@ -8,17 +8,27 @@
 //! AOT batch sizes, pad-to-batch/slice-back execution — so every layer
 //! above the engine (pool, coordinator, cache, benches) behaves identically
 //! on either backend.
+//!
+//! Loading compiles one execution plan per ladder batch size ("plan once,
+//! execute many"): per-layer conv strategies are fixed by the calibrated
+//! cost model and every intermediate gets an arena slot, so steady-state
+//! inference allocates nothing per layer. The walk-the-architecture
+//! interpreter stays available as [`CpuModel::infer_interpreted`] — the
+//! correctness oracle the parity tests compare against.
 
 use crate::model::{Manifest, ModelFiles, WeightStore};
-use crate::nn::CpuExecutor;
+use crate::nn::plan::ExecutionPlan;
+use crate::nn::{CpuExecutor, PlanOptions, PlannedExecutor};
 use crate::tensor::{Shape, Tensor};
 use std::path::Path;
+use std::sync::Arc;
 
 /// A fully loaded CPU-backend model.
 pub struct CpuModel {
     /// The manifest that travelled with the model directory.
     pub manifest: Manifest,
     exec: CpuExecutor,
+    planned: PlannedExecutor,
     /// Bytes of weights resident (for cache/placement budgets).
     pub weight_bytes: usize,
     batches: Vec<usize>,
@@ -29,11 +39,18 @@ impl CpuModel {
     /// weights-only packages, e.g. pulled over the air).
     pub const DEFAULT_BATCHES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
 
-    /// Load a model directory (`manifest.json` / `weights.dlkw`), verify
-    /// integrity, and bind the weights to a CPU executor. HLO artifacts are
-    /// not required; the declared `aot_batches` still bound execution batch
-    /// sizes for parity with the PJRT path.
+    /// [`CpuModel::load_with`] under the default plan options (per-layer
+    /// auto strategy from the calibrated cost model).
     pub fn load(dir: &Path) -> crate::Result<CpuModel> {
+        CpuModel::load_with(dir, PlanOptions::default())
+    }
+
+    /// Load a model directory (`manifest.json` / `weights.dlkw`), verify
+    /// integrity, bind the weights, and compile one execution plan per
+    /// declared AOT batch size. HLO artifacts are not required; the
+    /// declared `aot_batches` still bound execution batch sizes for
+    /// parity with the PJRT path.
+    pub fn load_with(dir: &Path, opts: PlanOptions) -> crate::Result<CpuModel> {
         let files = ModelFiles::new(dir);
         let manifest = Manifest::load(&files.manifest())?;
 
@@ -64,12 +81,39 @@ impl CpuModel {
         }
 
         let exec = CpuExecutor::new(manifest.arch.clone(), store)?;
-        Ok(CpuModel { manifest, exec, weight_bytes, batches })
+        // One plan per ladder batch size, sharing the executor's weights.
+        // Plan metadata (shapes, liveness, slots, strategies, FFT filter
+        // spectra) is built here; arena buffers allocate lazily on each
+        // plan's first execute and are reused forever after.
+        let planned = PlannedExecutor::new(manifest.arch.clone(), exec.shared_weights(), opts)?;
+        planned.precompile(&batches)?;
+        Ok(CpuModel { manifest, exec, planned, weight_bytes, batches })
     }
 
     /// Batch sizes available (the manifest's declared AOT sizes).
     pub fn batches(&self) -> Vec<usize> {
         self.batches.clone()
+    }
+
+    /// Number of compiled execution plans (one per ladder batch size).
+    pub fn plan_count(&self) -> usize {
+        self.planned.plan_count()
+    }
+
+    /// The compiled plan for `batch`, if that size is on the ladder.
+    pub fn plan_for(&self, batch: usize) -> Option<Arc<ExecutionPlan>> {
+        self.planned.cached_plan(batch)
+    }
+
+    /// The plan for `batch`, compiling and caching one if the size is
+    /// off the ladder (`dlk plan --batch` inspection).
+    pub fn compile_plan(&self, batch: usize) -> crate::Result<Arc<ExecutionPlan>> {
+        self.planned.plan_for(batch)
+    }
+
+    /// Plan options this model was loaded with.
+    pub fn plan_options(&self) -> &PlanOptions {
+        self.planned.options()
     }
 
     /// Smallest declared batch size >= `n`, or the largest available
@@ -83,10 +127,7 @@ impl CpuModel {
         *self.batches.last().unwrap()
     }
 
-    /// Run inference on a `[n, ...]` input; pads to the chosen batch size
-    /// and slices the result back to `n` rows — the same contract as the
-    /// PJRT loader, so cross-backend tests can compare outputs directly.
-    pub fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
+    fn check_and_pad(&self, input: &Tensor) -> crate::Result<(usize, usize, Tensor)> {
         let dims = input.shape().dims();
         anyhow::ensure!(!dims.is_empty(), "input must have a batch dimension");
         let n = dims[0];
@@ -117,16 +158,36 @@ impl CpuModel {
             shape[0] = exec_batch;
             Tensor::new(Shape::new(&shape), data)?
         };
+        Ok((n, exec_batch, padded))
+    }
 
-        let full = self.exec.forward(&padded)?;
+    fn slice_rows(full: Tensor, n: usize, exec_batch: usize) -> crate::Result<Tensor> {
         if n == exec_batch {
             return Ok(full);
         }
-        // Slice the first n rows.
         let row = full.numel() / exec_batch;
         let mut sliced_dims = full.shape().dims().to_vec();
         sliced_dims[0] = n;
         Tensor::new(Shape::new(&sliced_dims), full.data()[..n * row].to_vec())
+    }
+
+    /// Run inference on a `[n, ...]` input; pads to the chosen batch size
+    /// and slices the result back to `n` rows — the same contract as the
+    /// PJRT loader, so cross-backend tests can compare outputs directly.
+    /// Executes through the compiled plan for that batch size.
+    pub fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
+        let (n, exec_batch, padded) = self.check_and_pad(input)?;
+        let full = self.planned.forward(&padded)?;
+        CpuModel::slice_rows(full, n, exec_batch)
+    }
+
+    /// The retired interpreter path, kept as the correctness oracle: same
+    /// pad/slice contract, but walking the architecture layer by layer
+    /// with the executor-wide strategy instead of executing the plan.
+    pub fn infer_interpreted(&self, input: &Tensor) -> crate::Result<Tensor> {
+        let (n, exec_batch, padded) = self.check_and_pad(input)?;
+        let full = self.exec.forward(&padded)?;
+        CpuModel::slice_rows(full, n, exec_batch)
     }
 }
 
@@ -142,6 +203,10 @@ mod tests {
         assert_eq!(m.manifest.id, "tiny-cpu");
         assert_eq!(m.batches(), vec![1, 4, 8]);
         assert!(m.weight_bytes > 0);
+        // One compiled plan per ladder batch size, ready before first use.
+        assert_eq!(m.plan_count(), 3);
+        assert!(m.plan_for(4).is_some());
+        assert!(m.plan_for(3).is_none());
 
         let x = Tensor::randn(Shape::nchw(2, 1, 8, 8), 5, 1.0);
         let y = m.infer(&x).unwrap();
@@ -177,6 +242,25 @@ mod tests {
     }
 
     #[test]
+    fn planned_agrees_with_interpreter_oracle() {
+        use crate::nn::ConvStrategy;
+        let dir = testutil::tiny_model_dir("cpu-oracle", "tiny-oracle", 16, 13);
+        // Under a fixed strategy the plan and the interpreter run the
+        // exact same kernels — bit-exact, padding path included.
+        let m = CpuModel::load_with(
+            &dir,
+            PlanOptions::fixed(ConvStrategy::Im2col),
+        )
+        .unwrap();
+        for n in [1usize, 3, 8] {
+            let x = Tensor::randn(Shape::nchw(n, 1, 8, 8), 20 + n as u64, 1.0);
+            let planned = m.infer(&x).unwrap();
+            let oracle = m.infer_interpreted(&x).unwrap();
+            assert_eq!(planned.data(), oracle.data(), "batch {n}");
+        }
+    }
+
+    #[test]
     fn oversized_batch_rejected() {
         let dir = testutil::tiny_model_dir("cpu-over", "tiny-over", 8, 3);
         let m = CpuModel::load(&dir).unwrap();
@@ -206,6 +290,7 @@ mod tests {
             .unwrap();
         let m = CpuModel::load(&dir).unwrap();
         assert_eq!(m.batches(), CpuModel::DEFAULT_BATCHES.to_vec());
+        assert_eq!(m.plan_count(), CpuModel::DEFAULT_BATCHES.len());
         let x = Tensor::randn(Shape::nchw(3, 1, 8, 8), 2, 1.0);
         assert_eq!(m.infer(&x).unwrap().shape().dims(), &[3, 4]);
     }

@@ -26,6 +26,7 @@ use super::loaded_model::LoadedModel;
 use super::pool::Overloaded;
 use crate::metrics::Histogram;
 use crate::model::Manifest;
+use crate::nn::{PlanOptions, PlanStrategy};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -81,11 +82,20 @@ pub struct EngineConfig {
     pub queue_cap: usize,
     /// Execution backend.
     pub backend: BackendKind,
+    /// Conv-strategy policy for the execution plans compiled at model
+    /// load (CPU backend): per-layer auto selection by default, or one
+    /// forced strategy (`dlk serve --conv-strategy`).
+    pub strategy: PlanStrategy,
 }
 
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
-        EngineConfig { shard: 0, queue_cap: 1024, backend: BackendKind::default() }
+        EngineConfig {
+            shard: 0,
+            queue_cap: 1024,
+            backend: BackendKind::default(),
+            strategy: PlanStrategy::Auto,
+        }
     }
 }
 
@@ -107,6 +117,10 @@ pub struct ModelInfo {
     pub labels: Vec<String>,
     /// Wall time the load took (disk + weight staging + compile).
     pub load_micros: u64,
+    /// Execution plans compiled at load — one per ladder batch size
+    /// (CPU backend: arena + per-layer strategies; PJRT backend: one AOT
+    /// executable per batch).
+    pub plans: usize,
     /// The shard now holding the model.
     pub shard: usize,
 }
@@ -208,15 +222,15 @@ impl Engine {
 /// The backend a shard thread owns (kept on-thread: PJRT handles are
 /// `!Send`).
 enum Backend {
-    Cpu,
+    Cpu { strategy: PlanStrategy },
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtClient),
 }
 
 impl Backend {
-    fn create(kind: BackendKind) -> crate::Result<Backend> {
+    fn create(kind: BackendKind, strategy: PlanStrategy) -> crate::Result<Backend> {
         match kind {
-            BackendKind::Cpu => Ok(Backend::Cpu),
+            BackendKind::Cpu => Ok(Backend::Cpu { strategy }),
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => match xla::PjRtClient::cpu() {
                 Ok(c) => Ok(Backend::Pjrt(c)),
@@ -227,7 +241,10 @@ impl Backend {
 
     fn load(&self, dir: &std::path::Path) -> crate::Result<Resident> {
         match self {
-            Backend::Cpu => Ok(Resident::Cpu(CpuModel::load(dir)?)),
+            Backend::Cpu { strategy } => Ok(Resident::Cpu(CpuModel::load_with(
+                dir,
+                PlanOptions { strategy: *strategy, cost_model: None },
+            )?)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(client) => Ok(Resident::Pjrt(LoadedModel::load(client, dir)?)),
         }
@@ -266,6 +283,16 @@ impl Resident {
         }
     }
 
+    fn plan_count(&self) -> usize {
+        match self {
+            Resident::Cpu(m) => m.plan_count(),
+            // One AOT-compiled executable per declared batch size plays
+            // the plan role on the PJRT backend.
+            #[cfg(feature = "pjrt")]
+            Resident::Pjrt(m) => m.batches().len(),
+        }
+    }
+
     fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
         match self {
             Resident::Cpu(m) => m.infer(input),
@@ -292,6 +319,7 @@ fn load_model(
         classes: m.manifest().arch.num_classes().unwrap_or(0),
         labels: m.manifest().labels.clone(),
         load_micros: t0.elapsed().as_micros() as u64,
+        plans: m.plan_count(),
         shard,
     };
     Ok((m, info))
@@ -303,7 +331,7 @@ fn engine_main(
     rx: mpsc::Receiver<Request>,
     ready: mpsc::Sender<crate::Result<()>>,
 ) {
-    let backend = match Backend::create(config.backend) {
+    let backend = match Backend::create(config.backend, config.strategy) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -554,7 +582,13 @@ mod tests {
     // (integration); here we use synthetic CPU-backend fixtures.
 
     fn cpu_engine(shard: usize, queue_cap: usize) -> EngineHandle {
-        Engine::start_with(EngineConfig { shard, queue_cap, backend: BackendKind::Cpu }).unwrap()
+        Engine::start_with(EngineConfig {
+            shard,
+            queue_cap,
+            backend: BackendKind::Cpu,
+            ..Default::default()
+        })
+        .unwrap()
     }
 
     #[test]
@@ -595,6 +629,7 @@ mod tests {
         assert_eq!(info.id, "tiny-engine");
         assert_eq!(info.shard, 3);
         assert_eq!(info.classes, 4);
+        assert_eq!(info.plans, 3, "one plan per declared AOT batch size");
 
         let x = Tensor::randn(crate::tensor::Shape::nchw(2, 1, 8, 8), 1, 1.0);
         let out = engine.infer("tiny-engine", x).unwrap();

@@ -24,6 +24,7 @@ use std::time::Instant;
 use super::placement::Placement;
 use crate::metrics::PoolUtilization;
 use crate::model::{Manifest, ModelFiles};
+use crate::nn::PlanStrategy;
 use crate::tensor::Tensor;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -84,11 +85,19 @@ pub struct PoolConfig {
     pub queue_cap: usize,
     /// Execution backend for every shard.
     pub backend: BackendKind,
+    /// Conv-strategy policy for plans compiled at model load, applied by
+    /// every shard (`--conv-strategy` on the CLI).
+    pub strategy: PlanStrategy,
 }
 
 impl Default for PoolConfig {
     fn default() -> PoolConfig {
-        PoolConfig { shards: 0, queue_cap: 1024, backend: BackendKind::default() }
+        PoolConfig {
+            shards: 0,
+            queue_cap: 1024,
+            backend: BackendKind::default(),
+            strategy: PlanStrategy::Auto,
+        }
     }
 }
 
@@ -152,6 +161,7 @@ impl EnginePool {
                 shard,
                 queue_cap: config.queue_cap,
                 backend: config.backend,
+                strategy: config.strategy,
             })?);
         }
         Ok(PoolHandle {
@@ -341,7 +351,13 @@ mod tests {
     use crate::testutil;
 
     fn cpu_pool(shards: usize, queue_cap: usize) -> PoolHandle {
-        EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu }).unwrap()
+        EnginePool::start(PoolConfig {
+            shards,
+            queue_cap,
+            backend: BackendKind::Cpu,
+            ..Default::default()
+        })
+        .unwrap()
     }
 
     #[test]
@@ -472,6 +488,7 @@ mod tests {
             shard: 0,
             queue_cap: 16,
             backend: BackendKind::Cpu,
+            ..Default::default()
         })
         .unwrap();
         let pool = PoolHandle::single(engine);

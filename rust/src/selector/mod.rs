@@ -10,7 +10,15 @@
 //! latency-budget filter — rank candidate models by affinity to the
 //! context, drop those whose expected load+inference cost busts the
 //! budget, and return the ranked list the cache should prefetch.
+//!
+//! Expected latencies come from the execution-plan cost model
+//! ([`Candidate::for_arch`]): the inference leg is the calibrated
+//! per-layer estimate for a batch-1 forward and the load leg is modeled
+//! weight staging, so the budget filter tracks real per-model forward
+//! cost instead of hand-tuned constants.
 
+use crate::model::Architecture;
+use crate::nn::CostModel;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -62,6 +70,34 @@ pub struct Candidate {
     /// Expected load latency when not resident.
     pub load_latency: Duration,
     pub resident: bool,
+}
+
+impl Candidate {
+    /// Build a candidate whose latency expectations come from the
+    /// execution-plan [`CostModel`] instead of hand-tuned constants:
+    /// `infer_latency` is the model's batch-1 forward estimate (per-layer
+    /// optimal conv strategy — the same numbers
+    /// [`ExecutionPlan`](crate::nn::ExecutionPlan) plans with), and
+    /// `load_latency` models weight staging at ~1 GB/s. Affinities start
+    /// empty; fill them per deployment.
+    pub fn for_arch(
+        id: &str,
+        arch: &Architecture,
+        cost: &CostModel,
+        resident: bool,
+    ) -> crate::Result<Candidate> {
+        let infer_us = cost.estimate_forward_us(arch, 1)?;
+        let weight_bytes = arch.param_count()? * 4;
+        let load_us = weight_bytes as f64 / 1000.0; // ~1 GB/s SSD→RAM staging
+        Ok(Candidate {
+            id: id.to_string(),
+            location_affinity: BTreeMap::new(),
+            peak_hours: Vec::new(),
+            infer_latency: Duration::from_micros(infer_us.round() as u64),
+            load_latency: Duration::from_micros(load_us.round() as u64),
+            resident,
+        })
+    }
 }
 
 /// A scored candidate.
@@ -218,6 +254,27 @@ mod tests {
         assert_eq!(circular_hour_distance(23, 1), 2);
         assert_eq!(circular_hour_distance(0, 12), 12);
         assert_eq!(circular_hour_distance(6, 6), 0);
+    }
+
+    #[test]
+    fn plan_cost_model_drives_the_latency_budget() {
+        use crate::model::{lenet, nin_cifar10};
+        let cm = CostModel::analytic();
+        let nin = Candidate::for_arch("nin-cifar10", &nin_cifar10(), &cm, true).unwrap();
+        let le = Candidate::for_arch("lenet-mnist", &lenet(), &cm, true).unwrap();
+        // The estimates track real per-model forward cost: the 20-layer
+        // NIN costs far more than LeNet, and a cold model pays staging.
+        assert!(nin.infer_latency > le.infer_latency * 4, "{:?} vs {:?}", nin.infer_latency, le.infer_latency);
+        let cold = Candidate::for_arch("nin-cold", &nin_cifar10(), &cm, false).unwrap();
+        assert!(cold.load_latency > Duration::ZERO);
+
+        // A budget between the two filters exactly the heavy model out.
+        let ctx = Context {
+            latency_budget: (nin.infer_latency + le.infer_latency) / 2,
+            ..Default::default()
+        };
+        let best = MetaModel::default().select(&ctx, &[nin, le]).unwrap();
+        assert_eq!(best.id, "lenet-mnist");
     }
 
     #[test]

@@ -395,6 +395,7 @@ mod tests {
             shards: 1,
             queue_cap: 16,
             backend: BackendKind::Cpu,
+            ..Default::default()
         })
         .unwrap();
         let mut net = SimulatedNetwork::wifi();

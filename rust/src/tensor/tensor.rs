@@ -75,6 +75,38 @@ impl Tensor {
         self.data[off] = value;
     }
 
+    /// An empty tensor whose backing buffer can later hold up to
+    /// `capacity` elements without reallocating — the building block of
+    /// the execution-plan arena (`nn::plan`), where every intermediate
+    /// slot is allocated once at plan-build time and retargeted per layer
+    /// with [`Tensor::reshape_within`].
+    pub fn with_capacity(capacity: usize) -> Tensor {
+        Tensor { shape: Shape::new(&[0]), data: Vec::with_capacity(capacity) }
+    }
+
+    /// Elements the backing buffer can hold without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Retarget this tensor to `shape` without reallocating: the element
+    /// count may differ from the current one but must fit the buffer's
+    /// capacity. Newly exposed elements read as zero; surviving elements
+    /// keep their values (so an equal-`numel` call is a pure shape
+    /// change, which is how the plan executes `Flatten` as an alias).
+    pub fn reshape_within(&mut self, shape: impl Into<Shape>) -> crate::Result<()> {
+        let shape = shape.into();
+        let n = shape.numel();
+        anyhow::ensure!(
+            n <= self.data.capacity(),
+            "shape {shape} needs {n} elements but the buffer capacity is {}",
+            self.data.capacity()
+        );
+        self.data.resize(n, 0.0);
+        self.shape = shape;
+        Ok(())
+    }
+
     /// Zero-copy reshape.
     pub fn reshape(self, shape: impl Into<Shape>) -> crate::Result<Tensor> {
         let shape = shape.into();
@@ -258,6 +290,26 @@ mod tests {
         assert!(Tensor::from_f32_bytes(&[2][..], &[0u8; 7]).is_err());
         assert!(Tensor::from_f16_bytes(&[2][..], &[0u8; 3]).is_err());
         assert!(Tensor::from_i8_bytes(&[2][..], &[0u8; 3], 1.0).is_err());
+    }
+
+    #[test]
+    fn reshape_within_stays_in_capacity() {
+        let mut t = Tensor::with_capacity(16);
+        assert_eq!(t.numel(), 0);
+        assert!(t.capacity() >= 16);
+        t.reshape_within(Shape::nchw(1, 1, 4, 4)).unwrap();
+        assert_eq!(t.shape().dims(), &[1, 1, 4, 4]);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        t.data_mut()[3] = 5.0;
+        // Shrink, then grow back: no reallocation, fresh cells are zero.
+        let cap = t.capacity();
+        t.reshape_within(&[2, 2][..]).unwrap();
+        assert_eq!(t.numel(), 4);
+        t.reshape_within(&[16][..]).unwrap();
+        assert_eq!(t.capacity(), cap);
+        assert_eq!(t.data()[3], 5.0);
+        // A target far beyond capacity is rejected.
+        assert!(t.reshape_within(&[1 << 20][..]).is_err());
     }
 
     #[test]

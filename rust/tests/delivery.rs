@@ -14,7 +14,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 fn cpu_pool(shards: usize, queue_cap: usize) -> deeplearningkit::runtime::PoolHandle {
-    EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu }).unwrap()
+    EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu, ..Default::default() })
+        .unwrap()
 }
 
 fn probe() -> Tensor {
@@ -27,6 +28,7 @@ fn reference_output(dir: &std::path::Path, id: &str, x: &Tensor) -> Tensor {
         shard: 0,
         queue_cap: 8,
         backend: BackendKind::Cpu,
+        ..Default::default()
     })
     .unwrap();
     engine.load(dir).unwrap();

@@ -1,0 +1,207 @@
+//! Execution-plan integration tests (all artifact-free):
+//!
+//! 1. **Bit-exact parity** between the planned executor and the
+//!    walk-the-architecture interpreter oracle, for every `LayerKind`
+//!    and every ladder batch size, under each fixed conv strategy.
+//! 2. **Arena-aliasing safety**: no two concurrently-live buffers share
+//!    a slot, in-place steps alias, out-of-place steps don't.
+//! 3. **Plan-cache behavior across a hot-swap**: a `PoolHandle::swap`
+//!    rebuilds the ladder's plans for the new version and keeps serving
+//!    every ladder batch size, bit-exact with a fresh load.
+
+use deeplearningkit::model::{Architecture, LayerKind};
+use deeplearningkit::nn::{ConvStrategy, CpuExecutor, PlanOptions, PlannedExecutor};
+use deeplearningkit::runtime::{BackendKind, CpuModel, EnginePool, PoolConfig};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::testutil;
+
+/// 2-D architecture covering Conv2d, Relu, MaxPool2d, AvgPool2d,
+/// Dropout, Flatten, Dense and Softmax.
+fn arch_2d() -> Architecture {
+    let mut a = Architecture::new("plan-2d", &[2, 12, 12]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 4, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("conv2", LayerKind::Conv2d { out_ch: 6, k: 3, stride: 1, pad: 0 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("pool2", LayerKind::AvgPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("drop", LayerKind::Dropout { rate: 0.5 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc", LayerKind::Dense { out: 5 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// Conv + GlobalAvgPool head (the NIN classifier shape).
+fn arch_gap() -> Architecture {
+    let mut a = Architecture::new("plan-gap", &[1, 8, 8]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 3, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("gap", LayerKind::GlobalAvgPool);
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// 1-D architecture covering Conv1d and MaxPool1d (char-CNN shape).
+fn arch_1d() -> Architecture {
+    let mut a = Architecture::new("plan-1d", &[3, 24]);
+    a.push("conv1", LayerKind::Conv1d { out_ch: 5, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool1d { k: 2, stride: 2 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc", LayerKind::Dense { out: 4 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+fn input_for(arch: &Architecture, batch: usize, seed: u64) -> Tensor {
+    let mut dims = vec![batch];
+    dims.extend_from_slice(&arch.input);
+    Tensor::randn(Shape::new(&dims), seed, 1.0)
+}
+
+/// Every `LayerKind` × every ladder batch size × every fixed strategy:
+/// the planned executor must be bit-exact with the interpreter oracle
+/// (same strategy ⇒ same kernels ⇒ identical f32 sequences).
+#[test]
+fn planned_executor_bit_exact_with_oracle_all_kinds_all_ladder_batches() {
+    for arch_fn in [arch_2d, arch_gap, arch_1d] {
+        for strat in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+            let mut oracle = CpuExecutor::with_random_weights(arch_fn(), 42).unwrap();
+            oracle.set_strategy(strat);
+            let planned =
+                PlannedExecutor::with_random_weights(arch_fn(), 42, PlanOptions::fixed(strat))
+                    .unwrap();
+            for &batch in &CpuModel::DEFAULT_BATCHES {
+                let x = input_for(oracle.arch(), batch, 7 + batch as u64);
+                let expect = oracle.forward(&x).unwrap();
+                let got = planned.forward(&x).unwrap();
+                assert_eq!(expect.shape(), got.shape());
+                assert_eq!(
+                    expect.data(),
+                    got.data(),
+                    "arch {} strategy {} batch {batch}",
+                    oracle.arch().name,
+                    strat.name()
+                );
+            }
+        }
+    }
+}
+
+/// Auto strategy (per-layer cost-model pick) must agree with the oracle
+/// numerically — each chosen kernel is one of the three verified ones,
+/// so tolerances are the cross-strategy ones from `nn::graph` tests.
+#[test]
+fn auto_plan_agrees_with_oracle_within_cross_strategy_tolerance() {
+    for arch_fn in [arch_2d, arch_gap, arch_1d] {
+        let oracle = CpuExecutor::with_random_weights(arch_fn(), 11).unwrap();
+        let planned =
+            PlannedExecutor::with_random_weights(arch_fn(), 11, PlanOptions::default()).unwrap();
+        for batch in [1usize, 4] {
+            let x = input_for(oracle.arch(), batch, 3 + batch as u64);
+            let expect = oracle.forward(&x).unwrap();
+            let got = planned.forward(&x).unwrap();
+            testutil::assert_allclose(got.data(), expect.data(), 1e-3, 1e-4);
+        }
+    }
+}
+
+/// Arena-aliasing safety: for every compiled plan, buffers sharing a
+/// slot have disjoint live intervals, in-place steps stay on their
+/// slot, and out-of-place steps never write the slot they read.
+#[test]
+fn arena_assignment_never_overlaps_live_buffers() {
+    for arch_fn in [arch_2d, arch_gap, arch_1d] {
+        let planned =
+            PlannedExecutor::with_random_weights(arch_fn(), 5, PlanOptions::default()).unwrap();
+        for batch in [1usize, 8] {
+            let plan = planned.plan_for(batch).unwrap();
+            let bufs = plan.buffers();
+            for (i, a) in bufs.iter().enumerate() {
+                for b in &bufs[i + 1..] {
+                    if a.slot == b.slot {
+                        assert!(
+                            a.death < b.birth || b.death < a.birth,
+                            "{}: buffers {a:?} / {b:?} overlap in slot {}",
+                            plan.dump(),
+                            a.slot
+                        );
+                    }
+                }
+            }
+            for step in plan.steps() {
+                if step.in_place {
+                    assert_eq!(step.in_slot, step.out_slot, "{}", plan.dump());
+                } else {
+                    assert_ne!(step.in_slot, step.out_slot, "{}", plan.dump());
+                    if let Some(scratch) = step.scratch_slot {
+                        assert_ne!(scratch, step.in_slot);
+                        assert_ne!(scratch, step.out_slot);
+                    }
+                }
+            }
+            // Liveness reuse must beat one-slot-per-intermediate, and the
+            // dump must advertise the arena footprint.
+            assert!(plan.slot_sizes().len() < bufs.len());
+            assert!(plan.dump().contains("peak arena"));
+        }
+    }
+}
+
+/// Steady state allocates nothing: the arena is built exactly once per
+/// plan no matter how many forwards run through it.
+#[test]
+fn arena_is_built_once_across_forwards() {
+    let planned =
+        PlannedExecutor::with_random_weights(arch_2d(), 3, PlanOptions::default()).unwrap();
+    let x = input_for(planned.arch(), 2, 9);
+    for _ in 0..5 {
+        planned.forward(&x).unwrap();
+    }
+    let plan = planned.cached_plan(2).unwrap();
+    assert_eq!(plan.arena_builds(), 1);
+}
+
+/// Hot-swap keeps the plan machinery healthy: the new version arrives
+/// with one plan per ladder batch size, serves every ladder size, and
+/// its outputs are bit-exact with a fresh standalone load of the same
+/// directory.
+#[test]
+fn plan_cache_survives_pool_hot_swap() {
+    let pool = EnginePool::start(PoolConfig {
+        shards: 2,
+        queue_cap: 64,
+        backend: BackendKind::Cpu,
+        ..Default::default()
+    })
+    .unwrap();
+
+    let v1 = testutil::tiny_model_dir("plan-swap-v1", "plan-swap-m", 16, 1);
+    let info = pool.load(&v1).unwrap();
+    assert_eq!(info.plans, 3, "fixture ladder [1,4,8] → 3 plans");
+
+    // Serve a couple of ladder sizes on v1.
+    for n in [1usize, 4] {
+        let x = Tensor::randn(Shape::nchw(n, 1, 8, 8), 40 + n as u64, 1.0);
+        let (out, _) = pool.infer("plan-swap-m", x).unwrap();
+        assert_eq!(out.shape().dims(), &[n, 4]);
+    }
+
+    // Swap to a wider v2: plans must be rebuilt for the new weights.
+    let v2 = testutil::tiny_model_dir("plan-swap-v2", "plan-swap-m", 32, 2);
+    let report = pool.swap(&v2).unwrap();
+    assert_eq!(report.old_version, Some(1));
+    assert_eq!(report.info.plans, 3, "swap recompiles the ladder's plans");
+
+    // Every ladder batch size still serves, bit-exact with a fresh load
+    // of the v2 directory (same plans, same weights, same kernels).
+    let fresh = CpuModel::load(&v2).unwrap();
+    for n in [1usize, 3, 8] {
+        let x = Tensor::randn(Shape::nchw(n, 1, 8, 8), 50 + n as u64, 1.0);
+        let (out, _) = pool.infer("plan-swap-m", x.clone()).unwrap();
+        let expect = fresh.infer(&x).unwrap();
+        assert_eq!(out.data(), expect.data(), "batch {n} after swap");
+    }
+    pool.shutdown();
+}

@@ -10,7 +10,8 @@ use deeplearningkit::testutil;
 use std::time::Duration;
 
 fn cpu_pool(shards: usize, queue_cap: usize) -> PoolHandle {
-    EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu }).unwrap()
+    EnginePool::start(PoolConfig { shards, queue_cap, backend: BackendKind::Cpu, ..Default::default() })
+        .unwrap()
 }
 
 /// One per-item input (no batch dimension — the coordinator's submit
