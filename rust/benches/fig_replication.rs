@@ -1,0 +1,210 @@
+//! E13 — replicated placement for hot models: the one-owner-per-model
+//! invariant (E10's baseline) caps a *single* popular model's throughput
+//! at one shard, however many shards the pool has. This experiment
+//! regenerates the scaling argument for owner sets: one hot model,
+//! replicas ∈ {1, 2, 4} on a 4-shard pool, 16 closed-loop clients.
+//!
+//! replicas = 1 is exactly the E10 one-owner baseline (behavior-identical
+//! placement and routing). Larger owner sets fan the same traffic over
+//! k shards via power-of-two-choices on outstanding requests per replica;
+//! one batcher worker per replica keeps every copy fed. Reported per
+//! config: aggregate throughput, p50/p95 latency, speedup over the
+//! one-owner baseline, per-replica execution split. A final segment
+//! demonstrates a replica-wide hot-swap under load completing with zero
+//! failed requests.
+
+use deeplearningkit::bench::bench_header;
+use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::metrics::Table;
+use deeplearningkit::model::lenet;
+use deeplearningkit::runtime::{BackendKind, EnginePool, PoolConfig};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::{data, testutil};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const SHARDS: usize = 4;
+const CLIENTS: usize = 16;
+const REQUESTS_PER_CLIENT: usize = 24;
+
+fn main() {
+    bench_header(
+        "E13 (replicated placement)",
+        "one hot model: throughput/latency vs replica count (1 replica = E10 one-owner baseline)",
+    );
+
+    let id = "lenet-hot";
+    let dir = testutil::tempdir("fig-replication");
+    testutil::write_model_dir(&dir, id, lenet(), 4242, &[1, 8, 32]).expect("write fixture");
+
+    // Pre-generate client inputs (one glyph set per client).
+    let inputs: Vec<Vec<Tensor>> = (0..CLIENTS)
+        .map(|c| {
+            let batch = data::glyphs(REQUESTS_PER_CLIENT, 900 + c as u64);
+            (0..REQUESTS_PER_CLIENT)
+                .map(|i| {
+                    Tensor::new(
+                        Shape::new(&[1usize, 28, 28]),
+                        batch.inputs.data()[i * 784..(i + 1) * 784].to_vec(),
+                    )
+                    .unwrap()
+                })
+                .collect()
+        })
+        .collect();
+
+    let total_requests = CLIENTS * REQUESTS_PER_CLIENT;
+    let mut table = Table::new(
+        &format!(
+            "1 hot model on {SHARDS} shards, {CLIENTS} closed-loop clients, \
+             {total_requests} requests"
+        ),
+        &["replicas", "throughput", "speedup", "p50", "p95", "exec split"],
+    );
+    let mut baseline_rps: Option<f64> = None;
+    for replicas in [1usize, 2, 4] {
+        let pool = EnginePool::start(PoolConfig {
+            shards: SHARDS,
+            queue_cap: 4096,
+            backend: BackendKind::Cpu,
+            ..Default::default()
+        })
+        .expect("start pool");
+        let mut coord = Coordinator::over_pool(
+            pool.clone(),
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(2),
+                    queue_cap: 4096,
+                },
+            },
+        );
+        coord.serve_model_replicated(&dir, replicas).expect("serve hot model");
+        assert_eq!(pool.replicas_of(id).len(), replicas, "owner set size");
+
+        let coord = std::sync::Arc::new(coord);
+        let failed = AtomicU64::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for client_inputs in &inputs {
+                let coord = coord.clone();
+                let failed = &failed;
+                scope.spawn(move || {
+                    for x in client_inputs {
+                        if coord.infer(id, x.clone()).is_err() {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = total_requests as f64 / wall;
+        let speedup = match baseline_rps {
+            Some(base) => rps / base,
+            None => {
+                baseline_rps = Some(rps);
+                1.0
+            }
+        };
+        let stats = coord.stats();
+        let util = pool.utilization().expect("pool stats");
+        let split: Vec<String> = util
+            .executions
+            .iter()
+            .take(replicas.max(1))
+            .enumerate()
+            .map(|(s, e)| format!("s{s}:{e}"))
+            .collect();
+        table.row(&[
+            format!("{replicas}"),
+            format!("{rps:.0} req/s"),
+            format!("{speedup:.2}x"),
+            format!("{:.1}ms", stats.p50_us as f64 / 1000.0),
+            format!("{:.1}ms", stats.p95_us as f64 / 1000.0),
+            split.join(" "),
+        ]);
+        assert_eq!(failed.load(Ordering::Relaxed), 0, "no request may fail in the sweep");
+        pool.shutdown();
+    }
+    table.print();
+    println!(
+        "\nshape: with one replica (the E10 one-owner baseline) every batch of\n\
+         the hot model serializes onto a single shard; replicas stage full\n\
+         weight copies on k shards and power-of-two-choices routing on\n\
+         outstanding requests spreads batches over them, so one model's\n\
+         throughput scales with its owner set until it exhausts cores."
+    );
+
+    // --- Replica-wide hot-swap under load --------------------------------
+    println!();
+    println!("replica-wide hot-swap: v2 rollout across 4 replicas under client load");
+    let pool = EnginePool::start(PoolConfig {
+        shards: SHARDS,
+        queue_cap: 4096,
+        backend: BackendKind::Cpu,
+        ..Default::default()
+    })
+    .expect("start pool");
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+                queue_cap: 4096,
+            },
+        },
+    );
+    coord.serve_model_replicated(&dir, 4).expect("serve");
+    let v2_dir = testutil::tempdir("fig-replication-v2");
+    testutil::write_model_dir(&v2_dir, id, lenet(), 5353, &[1, 8, 32]).expect("write v2");
+    {
+        // Stamp v2 so the swap report shows a version bump.
+        let manifest_path = v2_dir.join("manifest.json");
+        let mut m = deeplearningkit::model::Manifest::load(&manifest_path).expect("manifest");
+        m.version = 2;
+        m.save(&manifest_path).expect("save manifest");
+    }
+
+    let coord = std::sync::Arc::new(coord);
+    let failed = AtomicU64::new(0);
+    let done = AtomicU64::new(0);
+    let report = std::thread::scope(|scope| {
+        for client_inputs in &inputs {
+            let coord = coord.clone();
+            let failed = &failed;
+            let done = &done;
+            scope.spawn(move || {
+                for x in client_inputs {
+                    match coord.infer(id, x.clone()) {
+                        Ok(_) => {
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        coord.update_model(id, &v2_dir).expect("replica-wide hot-swap")
+    });
+    println!(
+        "  v{} -> v{} across shards {:?}: {} drained, {:.1} ms rollout, \
+         {}/{} requests completed, {} failed",
+        report.old_version.unwrap_or(0),
+        report.info.version,
+        report.replicas,
+        report.drained,
+        report.swap_micros as f64 / 1000.0,
+        done.load(Ordering::Relaxed),
+        total_requests,
+        failed.load(Ordering::Relaxed),
+    );
+    assert_eq!(report.replicas.len(), 4, "rollout must cover the whole owner set");
+    assert_eq!(failed.load(Ordering::Relaxed), 0, "a hot-swap must fail zero requests");
+    pool.shutdown();
+}

@@ -7,16 +7,21 @@
 //! under a **per-shard** byte budget (the "GPU-accessible RAM" of the
 //! paper's iPhone, one budget per engine shard), loading from a model
 //! directory ("SSD") on miss and evicting by policy (LRU or LFU) **among
-//! the models sharing the victim's shard** — eviction frees bytes where
-//! the new model actually lands, never on an unrelated shard. Experiment
-//! E5 measures hit/miss switch latency across budgets and policies.
+//! the models sharing the pressured shard**. The cache is replica-aware:
+//! a hot model resident on k shards pins a full weight copy on *each*
+//! landing shard, every copy is accounted against that shard's budget,
+//! and capacity eviction works **per replica** — a victim with replicas
+//! elsewhere is *shrunk* (only the pressured shard's copy and affinity
+//! are dropped, the survivors keep serving) before any model is evicted
+//! entirely. Experiment E5 measures hit/miss switch latency across
+//! budgets and policies.
 
 mod policy;
 
 pub use policy::{EvictionPolicy, PolicyKind};
 
 use crate::model::{Manifest, ModelFiles};
-use crate::runtime::{EngineHandle, ModelInfo, PoolHandle, SwapReport};
+use crate::runtime::{EngineHandle, ModelInfo, PoolHandle, ReplicaAssignment, SwapReport};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -27,12 +32,19 @@ use std::time::{Duration, Instant};
 pub struct Access {
     /// Whether the model was already resident.
     pub hit: bool,
-    /// Load time when it was a miss (disk + stage + compile).
+    /// Load time when it was a miss (disk + stage + compile, summed over
+    /// every replica staged).
     pub load_time: Duration,
-    /// Models evicted (from the loaded model's shard) to make room.
+    /// Models evicted entirely (their last replica on a pressured shard
+    /// was their only one) to make room.
     pub evicted: Vec<String>,
-    /// Shard the model is resident on after this access.
+    /// Replica shrinks performed to make room: (model, shard) pairs whose
+    /// replica was dropped while the model kept serving elsewhere.
+    pub shrunk: Vec<(String, usize)>,
+    /// Primary shard (lowest shard id of the owner set) after this access.
     pub shard: usize,
+    /// Every shard holding a replica after this access, ascending.
+    pub replica_shards: Vec<usize>,
 }
 
 /// Cache statistics.
@@ -40,10 +52,14 @@ pub struct Access {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Models evicted entirely under capacity pressure.
     pub evictions: u64,
+    /// Replica-set shrinks under capacity pressure (the model survived on
+    /// its other shards).
+    pub shrinks: u64,
     /// Versioned hot-swaps applied through the cache.
     pub swaps: u64,
-    /// Weight bytes resident across all shards.
+    /// Weight bytes resident across all shards (each replica counted).
     pub resident_bytes: usize,
 }
 
@@ -61,16 +77,38 @@ impl CacheStats {
 
 struct Resident {
     info: ModelInfo,
-    bytes: usize,
-    shard: usize,
+    /// The owner set: one entry per replica, each pinning `bytes` on its
+    /// shard (sorted by shard id, mirroring the pool placement).
+    replicas: Vec<ReplicaAssignment>,
 }
 
-/// A byte-budgeted model cache over the engine pool. The budget applies
-/// per shard: each shard may pin at most `budget_bytes` of weights.
+impl Resident {
+    fn on(&self, shard: usize) -> bool {
+        self.replicas.iter().any(|a| a.shard == shard)
+    }
+
+    fn shards(&self) -> Vec<usize> {
+        self.replicas.iter().map(|a| a.shard).collect()
+    }
+
+    fn total_bytes(&self) -> usize {
+        self.replicas.iter().map(|a| a.bytes).sum()
+    }
+}
+
+struct CatalogEntry {
+    dir: PathBuf,
+    /// Per-model replica count; `None` uses the pool default.
+    replicas: Option<usize>,
+}
+
+/// A byte-budgeted, replica-aware model cache over the engine pool. The
+/// budget applies per shard: each shard may pin at most `budget_bytes` of
+/// weights, counting every replica staged on it.
 pub struct ModelCache {
     pool: PoolHandle,
-    /// Model id -> directory on "SSD".
-    catalog: BTreeMap<String, PathBuf>,
+    /// Model id -> directory on "SSD" (+ optional replica override).
+    catalog: BTreeMap<String, CatalogEntry>,
     resident: BTreeMap<String, Resident>,
     policy: EvictionPolicy,
     budget_bytes: usize,
@@ -97,9 +135,18 @@ impl ModelCache {
         }
     }
 
-    /// Register a model directory under its id (does not load).
+    /// Register a model directory under its id (does not load). Loads use
+    /// the pool's default replica count.
     pub fn register(&mut self, id: &str, dir: impl Into<PathBuf>) {
-        self.catalog.insert(id.to_string(), dir.into());
+        self.catalog
+            .insert(id.to_string(), CatalogEntry { dir: dir.into(), replicas: None });
+    }
+
+    /// Register a model directory with an explicit per-model replica
+    /// count (clamped to the pool's shard count at load time).
+    pub fn register_replicated(&mut self, id: &str, dir: impl Into<PathBuf>, replicas: usize) {
+        self.catalog
+            .insert(id.to_string(), CatalogEntry { dir: dir.into(), replicas: Some(replicas) });
     }
 
     /// Cache statistics snapshot.
@@ -112,7 +159,7 @@ impl ModelCache {
         self.resident.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Whether `id` is resident.
+    /// Whether `id` is resident (on at least one shard).
     pub fn is_resident(&self, id: &str) -> bool {
         self.resident.contains_key(id)
     }
@@ -122,33 +169,109 @@ impl ModelCache {
         self.resident.get(id).map(|r| &r.info)
     }
 
-    /// Weight bytes the cache has pinned on `shard`.
-    pub fn resident_bytes_on(&self, shard: usize) -> usize {
-        self.resident.values().filter(|r| r.shard == shard).map(|r| r.bytes).sum()
+    /// Shards holding a replica of a resident model, ascending.
+    pub fn resident_replicas(&self, id: &str) -> Vec<usize> {
+        self.resident.get(id).map(|r| r.shards()).unwrap_or_default()
     }
 
-    /// Undo a load the cache decided not to keep: unload from the pool
-    /// and drop the placement affinity the load created.
+    /// Weight bytes the cache has pinned on `shard` (every replica
+    /// counted against its landing shard).
+    pub fn resident_bytes_on(&self, shard: usize) -> usize {
+        self.resident
+            .values()
+            .flat_map(|r| r.replicas.iter())
+            .filter(|a| a.shard == shard)
+            .map(|a| a.bytes)
+            .sum()
+    }
+
+    fn refresh_resident_bytes(&mut self) {
+        self.stats.resident_bytes = self.resident.values().map(|r| r.total_bytes()).sum();
+    }
+
+    /// Undo a load the cache decided not to keep: unload every replica
+    /// from the pool and drop the placement affinity the load created.
     fn rollback_load(&self, id: &str) -> crate::Result<()> {
         let unload = self.pool.unload(id);
         self.pool.forget_affinity(id);
         unload
     }
 
-    /// Ensure `id` is resident, loading and evicting (on its shard) as
-    /// needed.
+    /// One capacity-pressure step on `shard`: pick a policy victim among
+    /// the residents sharing the shard (never `exclude`) and free its
+    /// bytes there — by *shrinking* its replica set if it has replicas
+    /// elsewhere (only the victim shard's copy and affinity are dropped),
+    /// or by evicting the model entirely when this was its last replica.
+    /// Returns `false` when no victim is available on the shard.
+    fn evict_step(
+        &mut self,
+        shard: usize,
+        exclude: &str,
+        evicted: &mut Vec<String>,
+        shrunk: &mut Vec<(String, usize)>,
+    ) -> crate::Result<bool> {
+        let candidates: Vec<String> = self
+            .resident
+            .iter()
+            .filter(|(cid, r)| cid.as_str() != exclude && r.on(shard))
+            .map(|(cid, _)| cid.clone())
+            .collect();
+        let Some(victim) = self.policy.pick_victim(candidates.iter().map(|s| s.as_str()))
+        else {
+            return Ok(false);
+        };
+        let multi = self.resident.get(&victim).map(|r| r.replicas.len() > 1).unwrap_or(false);
+        if multi {
+            // Shrink: the victim keeps serving from its other replicas.
+            // Forget only the victim shard's affinity — the surviving
+            // shards keep their stickiness (per-replica affinity).
+            self.pool.unload_replica(&victim, shard)?;
+            self.pool.forget_affinity_on(&victim, shard);
+            if let Some(r) = self.resident.get_mut(&victim) {
+                r.replicas.retain(|a| a.shard != shard);
+            }
+            self.stats.shrinks += 1;
+            shrunk.push((victim, shard));
+        } else {
+            // Last replica: full capacity eviction. Also drop the whole
+            // shard affinity so the next load places least-loaded instead
+            // of bouncing back onto this (full) shard — otherwise two
+            // models alternating over one shard's budget would thrash
+            // forever while other shards sit empty.
+            self.pool.unload(&victim)?;
+            self.pool.forget_affinity(&victim);
+            self.resident.remove(&victim);
+            self.policy.forget(&victim);
+            self.stats.evictions += 1;
+            evicted.push(victim);
+        }
+        Ok(true)
+    }
+
+    /// Ensure `id` is resident, loading (onto its replica set) and
+    /// evicting/shrinking on each landing shard as needed.
     pub fn ensure(&mut self, id: &str) -> crate::Result<Access> {
         if let Some(r) = self.resident.get(id) {
-            let shard = r.shard;
+            let shard = r.replicas.first().map(|a| a.shard).unwrap_or(0);
+            let replica_shards = r.shards();
             self.policy.touch(id);
             self.stats.hits += 1;
-            return Ok(Access { hit: true, load_time: Duration::ZERO, evicted: Vec::new(), shard });
+            return Ok(Access {
+                hit: true,
+                load_time: Duration::ZERO,
+                evicted: Vec::new(),
+                shrunk: Vec::new(),
+                shard,
+                replica_shards,
+            });
         }
-        let dir = self
-            .catalog
-            .get(id)
-            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not in the cache catalog"))?
-            .clone();
+        let (dir, replicas) = {
+            let entry = self
+                .catalog
+                .get(id)
+                .ok_or_else(|| anyhow::anyhow!("model `{id}` is not in the cache catalog"))?;
+            (entry.dir.clone(), entry.replicas)
+        };
         self.stats.misses += 1;
 
         // The pool may be shared with other users (a Coordinator serving
@@ -159,10 +282,12 @@ impl ModelCache {
         let pre_existing = self.pool.shard_of(&manifest_id).is_some();
 
         let t0 = Instant::now();
-        let info = self.pool.load(&dir)?;
+        let info = match replicas {
+            Some(k) => self.pool.load_replicated(&dir, k)?,
+            None => self.pool.load(&dir)?,
+        };
         let load_time = t0.elapsed();
         let bytes = info.weight_bytes;
-        let shard = info.shard;
 
         // Every downstream path (eviction unload, infer routing) addresses
         // the pool by the manifest id, so the catalog key must match it.
@@ -180,8 +305,9 @@ impl ModelCache {
         }
 
         if bytes > self.budget_bytes {
-            // The model alone exceeds a shard budget: undo the load (when
-            // ours) so the pool is not left carrying untracked weights.
+            // Each replica pins the full weights: one copy alone exceeding
+            // a shard budget can never fit. Undo the load (when ours) so
+            // the pool is not left carrying untracked weights.
             if !pre_existing {
                 self.rollback_load(&info.id)?;
             }
@@ -191,53 +317,47 @@ impl ModelCache {
             );
         }
 
-        // Evict on the shard the model landed on until it fits.
+        // Evict/shrink on every shard the replicas landed on until each
+        // shard's budget accommodates its new copy.
+        let assignments = self.pool.replica_assignments(id);
         let mut evicted = Vec::new();
-        while self.resident_bytes_on(shard) + bytes > self.budget_bytes {
-            let candidates: Vec<String> = self
-                .resident
-                .iter()
-                .filter(|(_, r)| r.shard == shard)
-                .map(|(id, _)| id.clone())
-                .collect();
-            let victim = self
-                .policy
-                .pick_victim(candidates.iter().map(|s| s.as_str()))
-                .expect("over budget implies a resident victim on the shard");
-            self.pool.unload(&victim)?;
-            // Capacity eviction: also drop the victim's shard affinity so
-            // its next load places least-loaded instead of bouncing back
-            // onto this (full) shard — otherwise two models alternating
-            // over one shard's budget would thrash forever while other
-            // shards sit empty.
-            self.pool.forget_affinity(&victim);
-            self.resident.remove(&victim);
-            self.policy.forget(&victim);
-            self.stats.evictions += 1;
-            evicted.push(victim);
+        let mut shrunk = Vec::new();
+        for a in &assignments {
+            while self.resident_bytes_on(a.shard) + a.bytes > self.budget_bytes {
+                let progressed = self.evict_step(a.shard, id, &mut evicted, &mut shrunk)?;
+                assert!(
+                    progressed,
+                    "over budget on shard {} implies a resident victim there",
+                    a.shard
+                );
+            }
         }
 
-        self.resident.insert(id.to_string(), Resident { info, bytes, shard });
+        let shard = assignments.first().map(|a| a.shard).unwrap_or(0);
+        let replica_shards: Vec<usize> = assignments.iter().map(|a| a.shard).collect();
+        self.resident
+            .insert(id.to_string(), Resident { info, replicas: assignments });
         self.policy.touch(id);
-        self.stats.resident_bytes = self.resident.values().map(|r| r.bytes).sum();
-        Ok(Access { hit: false, load_time, evicted, shard })
+        self.refresh_resident_bytes();
+        Ok(Access { hit: false, load_time, evicted, shrunk, shard, replica_shards })
     }
 
     /// Run inference through the cache (ensures residency first; the
-    /// request routes to the model's shard with admission control).
+    /// request routes to one replica of the model's owner set with
+    /// admission control).
     pub fn infer(&mut self, id: &str, input: Tensor) -> crate::Result<(Tensor, Access)> {
         let access = self.ensure(id)?;
-        let (out, _shard) = self.pool.infer(id, input)?;
+        let (out, _routed) = self.pool.infer(id, input)?;
         Ok((out, access))
     }
 
-    /// Hot-swap a resident model to a new version directory. The owning
-    /// shard drains in-flight work on the old version and replaces it
-    /// atomically ([`PoolHandle::swap`]); this method then retargets the
-    /// catalog, **evicts the old version's byte accounting on that shard**
-    /// (it was freed by the replacement) and — if the new version grew
-    /// past the shard budget — evicts *other* residents of the same shard
-    /// until it fits again.
+    /// Hot-swap a resident model to a new version directory, across its
+    /// whole owner set. Each replica's shard drains in-flight work on the
+    /// old version and replaces it atomically ([`PoolHandle::swap`], in
+    /// ascending shard order); this method then retargets the catalog,
+    /// re-accounts every replica's bytes on its landing shard and — where
+    /// the new version grew past a shard budget — evicts/shrinks *other*
+    /// residents of that shard until it fits again.
     pub fn swap_version(
         &mut self,
         id: &str,
@@ -257,51 +377,64 @@ impl ModelCache {
             manifest.id
         );
 
-        let report = self.pool.swap(&dir)?;
-        let shard = report.shard;
+        let report = match self.pool.swap(&dir) {
+            Ok(report) => report,
+            Err(e) => {
+                // A mid-rollout failure may have shrunk the owner set
+                // (survivors already serve the new version; the stale
+                // replicas were unloaded — see `PoolHandle::swap`).
+                // Reconcile our byte accounting with what is actually
+                // resident before propagating, so later capacity math
+                // never counts phantom replicas.
+                let assignments = self.pool.replica_assignments(id);
+                if assignments.is_empty() {
+                    self.resident.remove(id);
+                    self.policy.forget(id);
+                } else if let Some(entry) = self.resident.get_mut(id) {
+                    entry.replicas = assignments;
+                }
+                self.refresh_resident_bytes();
+                return Err(e);
+            }
+        };
         let bytes = report.info.weight_bytes;
-        self.catalog.insert(id.to_string(), dir);
-        let entry = self.resident.get_mut(id).expect("checked resident above");
-        entry.info = report.info.clone();
-        entry.bytes = bytes;
-        entry.shard = shard;
+        let assignments = self.pool.replica_assignments(id);
+        let replicas = self.catalog.get(id).and_then(|e| e.replicas);
+        self.catalog.insert(id.to_string(), CatalogEntry { dir, replicas });
+        {
+            let entry = self.resident.get_mut(id).expect("checked resident above");
+            entry.info = report.info.clone();
+            entry.replicas = assignments.clone();
+        }
         self.policy.touch(id);
         self.stats.swaps += 1;
 
-        // Rebalance the shard budget around the new version's footprint.
+        // Rebalance every replica shard's budget around the new version's
+        // footprint.
         let mut evicted = Vec::new();
-        while self.resident_bytes_on(shard) > self.budget_bytes {
-            let candidates: Vec<String> = self
-                .resident
-                .iter()
-                .filter(|(cid, r)| r.shard == shard && cid.as_str() != id)
-                .map(|(cid, _)| cid.clone())
-                .collect();
-            let Some(victim) = self.policy.pick_victim(candidates.iter().map(|s| s.as_str()))
-            else {
-                // Nothing left to evict but the swapped model itself: the
-                // new version alone busts the shard budget. Unload it so
-                // the pool is not left over budget, then report.
-                self.pool.unload(id)?;
-                self.pool.forget_affinity(id);
-                self.resident.remove(id);
-                self.policy.forget(id);
-                self.stats.resident_bytes = self.resident.values().map(|r| r.bytes).sum();
-                anyhow::bail!(
-                    "model `{id}` v{} ({bytes} B) exceeds the per-shard cache budget ({} B); \
-                     unloaded",
-                    report.info.version,
-                    self.budget_bytes
-                );
-            };
-            self.pool.unload(&victim)?;
-            self.pool.forget_affinity(&victim);
-            self.resident.remove(&victim);
-            self.policy.forget(&victim);
-            self.stats.evictions += 1;
-            evicted.push(victim);
+        let mut shrunk = Vec::new();
+        for a in &assignments {
+            while self.resident_bytes_on(a.shard) > self.budget_bytes {
+                if !self.evict_step(a.shard, id, &mut evicted, &mut shrunk)? {
+                    // Nothing left to evict but the swapped model itself:
+                    // the new version alone busts the shard budget. Unload
+                    // it (every replica) so the pool is not left over
+                    // budget, then report.
+                    self.pool.unload(id)?;
+                    self.pool.forget_affinity(id);
+                    self.resident.remove(id);
+                    self.policy.forget(id);
+                    self.refresh_resident_bytes();
+                    anyhow::bail!(
+                        "model `{id}` v{} ({bytes} B) exceeds the per-shard cache budget \
+                         ({} B); unloaded",
+                        report.info.version,
+                        self.budget_bytes
+                    );
+                }
+            }
         }
-        self.stats.resident_bytes = self.resident.values().map(|r| r.bytes).sum();
+        self.refresh_resident_bytes();
         Ok((report, evicted))
     }
 }
@@ -350,10 +483,69 @@ mod tests {
         let c = mc.ensure("m-c").unwrap();
         assert_eq!(c.shard, 0);
         assert_eq!(c.evicted, vec!["m-a".to_string()]);
+        assert!(c.shrunk.is_empty(), "single-replica victims evict, not shrink");
         assert!(mc.is_resident("m-b") && !mc.is_resident("m-a"));
         assert_eq!(mc.stats().evictions, 1);
+        assert_eq!(mc.stats().shrinks, 0);
         let c_bytes = mc.resident_info("m-c").unwrap().weight_bytes;
         assert_eq!(mc.resident_bytes_on(0), c_bytes);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn replicated_model_accounts_bytes_on_every_landing_shard() {
+        let pool = cpu_pool(3);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+        mc.register_replicated("hot", testutil::tiny_model_dir("cache-rep", "hot", 16, 1), 3);
+        let access = mc.ensure("hot").unwrap();
+        assert_eq!(access.replica_shards, vec![0, 1, 2]);
+        assert_eq!(access.shard, 0);
+        let bytes = mc.resident_info("hot").unwrap().weight_bytes;
+        for s in 0..3 {
+            assert_eq!(mc.resident_bytes_on(s), bytes, "each shard pins a full copy");
+        }
+        assert_eq!(mc.stats().resident_bytes, 3 * bytes);
+        // A re-ensure is a hit across the whole set.
+        let again = mc.ensure("hot").unwrap();
+        assert!(again.hit);
+        assert_eq!(again.replica_shards, vec![0, 1, 2]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn capacity_pressure_shrinks_replica_set_before_evicting() {
+        // Two shards, budget fits one tiny model per shard. A 2-replica
+        // hot model fills both shards; a newcomer must *shrink* the hot
+        // model on its landing shard — not evict it — and the hot model
+        // keeps serving from the surviving replica.
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 6_000, PolicyKind::Lru);
+        mc.register_replicated("hot", testutil::tiny_model_dir("cache-shrink", "hot", 16, 1), 2);
+        mc.register("solo", testutil::tiny_model_dir("cache-shrink", "solo", 16, 2));
+        let hot = mc.ensure("hot").unwrap();
+        assert_eq!(hot.replica_shards, vec![0, 1]);
+
+        let solo = mc.ensure("solo").unwrap();
+        assert_eq!(solo.shard, 0, "least-loaded tie breaks to shard 0");
+        assert_eq!(solo.evicted, Vec::<String>::new());
+        assert_eq!(solo.shrunk, vec![("hot".to_string(), 0)]);
+        assert!(mc.is_resident("hot"), "shrunk, not evicted");
+        assert_eq!(mc.resident_replicas("hot"), vec![1]);
+        assert_eq!(pool.replicas_of("hot"), vec![1]);
+        assert_eq!(mc.stats().shrinks, 1);
+        assert_eq!(mc.stats().evictions, 0);
+
+        // The hot model still serves from its surviving replica.
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 3, 1.0);
+        let (out, access) = mc.infer("hot", x).unwrap();
+        assert!(access.hit);
+        assert_eq!(out.shape().dims(), &[1, 4]);
+
+        // Per-replica affinity: shard 0's stickiness was forgotten, shard
+        // 1's kept — after a full unload, a single-replica reload of
+        // `hot` returns to shard 1, not the (now emptier) shard 0.
+        pool.unload("hot").unwrap();
+        assert_eq!(pool.placement_preview("hot"), 1);
         pool.shutdown();
     }
 
@@ -407,6 +599,26 @@ mod tests {
         assert_eq!(mc.resident_bytes_on(0), report.info.weight_bytes);
         // The catalog now points at v2: a re-ensure is a hit, no reload.
         assert!(mc.ensure("m-a").unwrap().hit);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn swap_version_fans_across_replicas_and_reaccounts_each_shard() {
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+        mc.register_replicated("m", testutil::tiny_model_dir("cache-swap-rep", "m", 16, 1), 2);
+        mc.ensure("m").unwrap();
+        let old_bytes = mc.resident_info("m").unwrap().weight_bytes;
+
+        let v2 = testutil::tiny_model_dir("cache-swap-rep-v2", "m", 32, 2);
+        let (report, evicted) = mc.swap_version("m", &v2).unwrap();
+        assert!(evicted.is_empty());
+        assert_eq!(report.replicas, vec![0, 1], "swap covered both replicas");
+        assert!(report.info.weight_bytes > old_bytes);
+        for s in 0..2 {
+            assert_eq!(mc.resident_bytes_on(s), report.info.weight_bytes);
+        }
+        assert_eq!(mc.resident_replicas("m"), vec![0, 1]);
         pool.shutdown();
     }
 

@@ -6,7 +6,7 @@
 //! dispatch amortized over more items), the deadline bounds added latency.
 //! Experiment E8 sweeps this.
 
-use crate::runtime::Overloaded;
+use crate::runtime::{Overloaded, Routed};
 use crate::tensor::{Shape, Tensor};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -48,6 +48,9 @@ pub struct BatchMeta {
     pub queue_micros: u64,
     /// Engine-pool shard that executed the batch.
     pub shard: usize,
+    /// Index of the chosen replica within the model's owner set (0 for an
+    /// unreplicated model — the single owner).
+    pub replica: usize,
 }
 
 /// The batching core: owns the queue, decides when to flush. Execution is
@@ -117,9 +120,10 @@ impl Batcher {
 
     /// Take up to `max_batch` requests, stack their inputs into one batch
     /// tensor, run `exec`, and scatter results (or the error) back to every
-    /// reply channel. `exec` returns the output batch plus the engine-pool
-    /// shard that executed it (surfaced to clients via [`BatchMeta`]).
-    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<(Tensor, usize)>) {
+    /// reply channel. `exec` returns the output batch plus the routing
+    /// decision — which shard/replica executed it (surfaced to clients via
+    /// [`BatchMeta`]).
+    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<(Tensor, Routed)>) {
         if self.queue.is_empty() {
             return;
         }
@@ -154,7 +158,7 @@ impl Batcher {
         let stacked = Tensor::new(Shape::new(&dims), data).expect("stack shapes consistent");
 
         match exec(&stacked) {
-            Ok((out, shard)) => {
+            Ok((out, routed)) => {
                 // Scatter rows back. Output is [n, ...per-item dims].
                 let row = out.numel() / n;
                 let out_dims: Vec<usize> = out.shape().dims()[1..].to_vec();
@@ -164,7 +168,8 @@ impl Batcher {
                     let meta = BatchMeta {
                         batch_size: n,
                         queue_micros: now.duration_since(p.enqueued).as_micros() as u64,
-                        shard,
+                        shard: routed.shard,
+                        replica: routed.replica,
                     };
                     let _ = p.reply.send(Ok((t, meta)));
                 }
@@ -213,14 +218,14 @@ mod tests {
         b.push(p2).map_err(|_| ()).unwrap();
         assert!(b.should_flush(Instant::now()));
 
-        // exec: identity + 10, "executed on shard 5".
+        // exec: identity + 10, "executed on shard 5, replica 1 of 2".
         b.flush(|x| {
             assert_eq!(x.shape().dims(), &[2, 2]);
             let mut out = x.clone();
             for v in out.data_mut() {
                 *v += 10.0;
             }
-            Ok((out, 5))
+            Ok((out, Routed { shard: 5, replica: 1, replicas: 2 }))
         });
         let (t1, m1) = r1.recv().unwrap().unwrap();
         let (t2, m2) = r2.recv().unwrap().unwrap();
@@ -228,7 +233,9 @@ mod tests {
         assert_eq!(t2.data(), &[12.0, 12.0]);
         assert_eq!(m1.batch_size, 2);
         assert_eq!(m1.shard, 5);
+        assert_eq!(m1.replica, 1);
         assert_eq!(m2.shard, 5);
+        assert_eq!(m2.replica, 1);
         assert!(b.is_empty());
     }
 
@@ -296,7 +303,7 @@ mod tests {
             b.push(p).map_err(|_| ()).unwrap();
             receivers.push(r);
         }
-        b.flush(|x| Ok((x.clone(), 0)));
+        b.flush(|x| Ok((x.clone(), Routed { shard: 0, replica: 0, replicas: 1 })));
         assert_eq!(b.len(), 3);
         assert!(receivers[0].try_recv().unwrap().is_ok());
         assert!(receivers[1].try_recv().unwrap().is_ok());
@@ -322,7 +329,7 @@ mod tests {
         })
         .map_err(|_| ())
         .unwrap();
-        b.flush(|x| Ok((x.clone(), 0)));
+        b.flush(|x| Ok((x.clone(), Routed { shard: 0, replica: 0, replicas: 1 })));
         assert!(r1.recv().unwrap().is_err());
         assert!(r2.recv().unwrap().is_err());
     }

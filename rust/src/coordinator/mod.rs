@@ -6,10 +6,11 @@
 //! coordinator in front of the sharded engine pool:
 //!
 //! ```text
-//! client threads ──submit──► per-model Batcher ──batches──► PoolHandle
-//!                 (admission   (size/deadline)           (model → shard)
-//!                  control)                                     │
-//!                                                     engine shard threads
+//! client threads ──submit──► per-replica Batcher ──batches──► PoolHandle
+//!                 (admission   workers (shared        (model → owner set,
+//!                  control)    queue, size/deadline)   p2c replica pick)
+//!                                                            │
+//!                                                  engine shard threads
 //! ```
 //!
 //! Admission control happens at `submit`: a model whose queue is at

@@ -1,6 +1,12 @@
-//! The coordinator: per-model batcher worker threads in front of the
-//! engine pool, with end-to-end latency metrics, SLO accounting and
-//! submit-time admission control.
+//! The coordinator: per-model batcher workers in front of the engine
+//! pool, with end-to-end latency metrics, SLO accounting and submit-time
+//! admission control.
+//!
+//! A model replicated on k shards gets **k batcher workers** sharing one
+//! submission queue: while one worker's batch executes on its routed
+//! replica, a sibling collects the next batch — so a single hot model can
+//! keep every replica busy. With k = 1 this degenerates to the original
+//! one-worker-per-model loop.
 
 use super::batcher::{Batcher, BatcherConfig, Pending};
 use super::NIELSEN_SLO_MICROS;
@@ -34,6 +40,9 @@ pub struct RequestResult {
     pub batch_size: usize,
     /// Engine-pool shard that executed the batch.
     pub shard: usize,
+    /// Index of the chosen replica within the model's owner set (0 for an
+    /// unreplicated model).
+    pub replica: usize,
 }
 
 struct ModelWorker {
@@ -45,12 +54,13 @@ struct ModelWorker {
     /// largest executable batch at spawn). A hot-swap must not install a
     /// version that cannot execute batches this large.
     max_batch: usize,
-    /// Requests submitted but not yet picked up by the batcher worker —
-    /// the submit-time admission-control window.
+    /// Requests submitted but not yet picked up by a batcher worker —
+    /// the submit-time admission-control window (shared across workers).
     depth: Arc<AtomicUsize>,
-    /// The batcher worker thread, joined on retire so in-flight work
-    /// drains before the model is unloaded from its shard.
-    join: std::thread::JoinHandle<()>,
+    /// The batcher worker threads (one per replica at serve time), joined
+    /// on retire so in-flight work drains before the model is unloaded
+    /// from its owner set.
+    joins: Vec<std::thread::JoinHandle<()>>,
 }
 
 struct Shared {
@@ -64,11 +74,12 @@ struct Shared {
 
 /// Multi-model serving coordinator over an engine pool.
 ///
-/// One batcher worker thread per served model coalesces requests into
-/// batches and flushes them through the [`PoolHandle`], which routes each
-/// batch to the shard holding the model's weights. Rejections — at submit
-/// time when a model's queue is at `queue_cap`, or downstream when the
-/// owning shard is saturated — surface as typed [`Overloaded`] errors.
+/// One batcher worker per model replica coalesces requests into batches
+/// and flushes them through the [`PoolHandle`], which routes each batch
+/// to one replica of the model's owner set (power-of-two-choices on
+/// outstanding requests). Rejections — at submit time when a model's
+/// queue is at `queue_cap`, or downstream when the routed shard is
+/// saturated — surface as typed [`Overloaded`] errors.
 pub struct Coordinator {
     pool: PoolHandle,
     config: CoordinatorConfig,
@@ -101,10 +112,28 @@ impl Coordinator {
         }
     }
 
-    /// Load a model from a directory (placed onto a pool shard by the
-    /// placement policy) and start its batcher worker.
+    /// Load a model from a directory (placed onto the pool's default
+    /// replica count by the placement policy) and start one batcher
+    /// worker per replica.
     pub fn serve_model(&mut self, dir: impl Into<std::path::PathBuf>) -> crate::Result<ModelInfo> {
         let info = self.pool.load(dir)?;
+        self.start_workers(info)
+    }
+
+    /// Like [`Coordinator::serve_model`], but with an explicit per-model
+    /// replica count (clamped to the pool's shard count).
+    pub fn serve_model_replicated(
+        &mut self,
+        dir: impl Into<std::path::PathBuf>,
+        replicas: usize,
+    ) -> crate::Result<ModelInfo> {
+        let info = self.pool.load_replicated(dir, replicas)?;
+        self.start_workers(info)
+    }
+
+    /// Spawn the loaded model's batcher workers (one per replica, all
+    /// draining one shared submission queue) and register the worker set.
+    fn start_workers(&mut self, info: ModelInfo) -> crate::Result<ModelInfo> {
         let id = info.id.clone();
 
         // Batch cap: don't exceed the largest AOT batch.
@@ -114,35 +143,74 @@ impl Coordinator {
         }
 
         let (tx, rx) = mpsc::channel::<Pending>();
+        let rx = Arc::new(Mutex::new(rx));
         let depth = Arc::new(AtomicUsize::new(0));
-        let pool = self.pool.clone();
-        let shared = self.shared.clone();
-        let model_id = id.clone();
-        let worker_depth = depth.clone();
-        let shard = info.shard;
-        let join = std::thread::Builder::new()
-            .name(format!("dlk-batcher-{id}"))
-            .spawn(move || batcher_main(rx, cfg, pool, model_id, shard, worker_depth, shared))
-            .map_err(|e| anyhow::anyhow!("spawning batcher: {e}"))?;
+        let workers = self.pool.replica_count(&id).max(1);
+        // Idle-poll bound for the collect phase. A lone worker keeps the
+        // original lazy 50 ms poll; sibling workers must wake fast, since
+        // a worker holding the shared receiver in `recv_timeout` blocks a
+        // sibling whose local batch has hit its flush deadline.
+        let idle_poll = if workers == 1 {
+            Duration::from_millis(50)
+        } else {
+            cfg.max_delay.clamp(Duration::from_millis(1), Duration::from_millis(50))
+        };
+        // A lone worker may greedily drain the whole channel into its
+        // batcher (the original behavior). Sibling workers stop at one
+        // full batch, leaving the rest of a burst in the channel for the
+        // other replicas' workers to pick up — otherwise the first worker
+        // to take the lock would swallow the burst and serialize it onto
+        // one replica.
+        let greedy_cap = if workers == 1 { usize::MAX } else { cfg.max_batch };
+        let mut joins = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let pool = self.pool.clone();
+            let shared = self.shared.clone();
+            let model_id = id.clone();
+            let worker_depth = depth.clone();
+            let worker_rx = rx.clone();
+            let shard = info.shard;
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dlk-batcher-{id}-r{w}"))
+                    .spawn(move || {
+                        batcher_main(
+                            worker_rx,
+                            cfg,
+                            idle_poll,
+                            greedy_cap,
+                            pool,
+                            model_id,
+                            shard,
+                            worker_depth,
+                            shared,
+                        )
+                    })
+                    .map_err(|e| anyhow::anyhow!("spawning batcher: {e}"))?,
+            );
+        }
 
         self.workers.insert(
             id,
-            ModelWorker { tx, info: Mutex::new(info.clone()), max_batch: cfg.max_batch, depth, join },
+            ModelWorker { tx, info: Mutex::new(info.clone()), max_batch: cfg.max_batch, depth, joins },
         );
         Ok(info)
     }
 
     /// Hot-swap a served model to a new version directory while it keeps
-    /// serving. Guarantees: **no request is ever failed by the update**;
-    /// batches already submitted to the owning shard complete on the old
-    /// version (the shard FIFO drains them ahead of the swap); requests
-    /// submitted after this call returns run on the new version. Requests
-    /// still coalescing in the model's batcher when the swap lands may
-    /// flush to either side of it — version-consistent cutover for those
-    /// would require pausing the batcher, which this path deliberately
-    /// does not do. The model's batcher worker, queue and shard placement
-    /// all survive the swap. Blocks until the owning shard has drained
-    /// and replaced.
+    /// serving, across its **whole owner set**. Guarantees: **no request
+    /// is ever failed by the update**; batches already submitted to a
+    /// replica's shard complete on the old version (each shard's FIFO
+    /// drains them ahead of its swap); requests submitted after this call
+    /// returns run on the new version everywhere. Mid-rollout, replicas
+    /// may briefly serve mixed versions (the swap walks the owner set in
+    /// ascending shard order — see `PoolHandle::swap` for the ordering
+    /// contract), and requests still coalescing in the model's batchers
+    /// when a swap lands may flush to either side of it — version-
+    /// consistent cutover for those would require pausing the batchers,
+    /// which this path deliberately does not do. The model's batcher
+    /// workers, queue and owner-set placement all survive the swap.
+    /// Blocks until every replica has drained and replaced.
     pub fn update_model(
         &self,
         id: &str,
@@ -184,16 +252,18 @@ impl Coordinator {
         Ok(report)
     }
 
-    /// Stop serving a model: closes its queue, waits for the batcher
-    /// worker to drain in-flight work, then unloads from its shard (the
-    /// model keeps its shard affinity for a later reload).
+    /// Stop serving a model: closes its queue, waits for every batcher
+    /// worker to drain in-flight work, then unloads from its whole owner
+    /// set (the model keeps its per-shard affinity for a later reload).
     pub fn retire_model(&mut self, id: &str) -> crate::Result<()> {
-        let ModelWorker { tx, join, .. } = self
+        let ModelWorker { tx, joins, .. } = self
             .workers
             .remove(id)
             .ok_or_else(|| anyhow::anyhow!("model `{id}` is not being served"))?;
-        drop(tx); // closes the channel; worker drains remaining work
-        let _ = join.join(); // drain must finish before the unload below
+        drop(tx); // closes the channel; workers drain remaining work
+        for join in joins {
+            let _ = join.join(); // drain must finish before the unload below
+        }
         self.pool.unload(id)
     }
 
@@ -210,11 +280,12 @@ impl Coordinator {
 
     /// Submit asynchronously; returns a ticket to wait on. Admission
     /// control happens here: once `queue_cap` submissions are waiting to
-    /// be picked up by the model's batcher, further submissions are
-    /// rejected with a typed [`Overloaded`] error instead of queueing
-    /// without bound. (The batcher's internal queue is capped at
-    /// `queue_cap` as well, so a model holds at most ~2×`queue_cap`
-    /// unserved requests across both stages.)
+    /// be picked up by the model's batcher workers, further submissions
+    /// are rejected with a typed [`Overloaded`] error instead of queueing
+    /// without bound. (Each of the model's k batcher workers also caps
+    /// its internal queue at `queue_cap`, so a model holds at most
+    /// ~(k+1)×`queue_cap` unserved requests across both stages — ~2× for
+    /// an unreplicated model.)
     pub fn submit(&self, model_id: &str, input: Tensor) -> crate::Result<Ticket> {
         let worker = self
             .workers
@@ -226,9 +297,15 @@ impl Coordinator {
         if prev >= self.config.batcher.queue_cap {
             worker.depth.fetch_sub(1, Ordering::AcqRel);
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            // Report the model's current primary shard; the serve-time
+            // snapshot may be stale after a replica shrink.
+            let shard = self
+                .pool
+                .shard_of(model_id)
+                .unwrap_or_else(|| worker.info.lock().unwrap().shard);
             return Err(anyhow::Error::new(Overloaded {
                 model: model_id.to_string(),
-                shard: worker.info.lock().unwrap().shard,
+                shard,
                 queue_cap: self.config.batcher.queue_cap,
             }));
         }
@@ -302,6 +379,7 @@ impl Ticket {
                     latency,
                     batch_size: meta.batch_size,
                     shard: meta.shard,
+                    replica: meta.replica,
                 })
             }
             Err(e) => {
@@ -312,11 +390,20 @@ impl Ticket {
     }
 }
 
-/// Batcher worker loop: poll the channel with the flush deadline as the
-/// timeout; execute batches on the model's pool shard.
+/// Batcher worker loop. Each served model runs one of these per replica;
+/// the workers share the submission channel behind a mutex. A worker
+/// holds the channel lock only while *collecting* (so at most one worker
+/// coalesces arrivals at a time) and releases it to *execute*, letting a
+/// sibling collect the next batch while this one's flush runs on its
+/// routed replica — that overlap is what lets one hot model keep k
+/// replicas busy. `shard` is the model's primary shard, reported in
+/// queue-overflow rejections.
+#[allow(clippy::too_many_arguments)]
 fn batcher_main(
-    rx: mpsc::Receiver<Pending>,
+    rx: Arc<Mutex<mpsc::Receiver<Pending>>>,
     cfg: BatcherConfig,
+    idle_poll: Duration,
+    greedy_cap: usize,
     pool: PoolHandle,
     model_id: String,
     shard: usize,
@@ -325,44 +412,56 @@ fn batcher_main(
 ) {
     let mut batcher = Batcher::new(cfg);
     loop {
-        let now = Instant::now();
-        let timeout = batcher
-            .next_deadline(now)
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(pending) => {
-                depth.fetch_sub(1, Ordering::AcqRel);
-                // Rejections are counted once, in `Ticket::wait`, when the
-                // error reaches the client.
-                let reject = |p: Pending| {
-                    let _ = p.reply.send(Err(anyhow::Error::new(Overloaded {
-                        model: model_id.clone(),
-                        shard,
-                        queue_cap: cfg.queue_cap,
-                    })));
-                };
-                if let Err(p) = batcher.push(pending) {
-                    reject(p);
-                }
-                // Greedily drain everything already waiting in the channel
-                // (requests that arrived while the previous batch executed)
-                // so they coalesce into this batch.
-                while let Ok(pending) = rx.try_recv() {
+        // Collect phase, under the shared receiver lock.
+        let disconnected = {
+            let rx = rx.lock().unwrap();
+            let now = Instant::now();
+            let timeout = batcher.next_deadline(now).unwrap_or(idle_poll);
+            match rx.recv_timeout(timeout) {
+                Ok(pending) => {
                     depth.fetch_sub(1, Ordering::AcqRel);
+                    // Rejections are counted once, in `Ticket::wait`, when
+                    // the error reaches the client. `shard` is the
+                    // serve-time primary — a diagnostic-only snapshot,
+                    // deliberately not a placement lookup: this path runs
+                    // per rejected request while holding the shared
+                    // receiver lock, exactly when the queue is over cap.
+                    let reject = |p: Pending| {
+                        let _ = p.reply.send(Err(anyhow::Error::new(Overloaded {
+                            model: model_id.clone(),
+                            shard,
+                            queue_cap: cfg.queue_cap,
+                        })));
+                    };
                     if let Err(p) = batcher.push(pending) {
                         reject(p);
                     }
+                    // Greedily drain what's already waiting in the channel
+                    // (requests that arrived while the previous batch
+                    // executed) so it coalesces into this batch — up to
+                    // `greedy_cap`, so sibling replica workers get their
+                    // share of a burst.
+                    while batcher.len() < greedy_cap {
+                        let Ok(pending) = rx.try_recv() else { break };
+                        depth.fetch_sub(1, Ordering::AcqRel);
+                        if let Err(p) = batcher.push(pending) {
+                            reject(p);
+                        }
+                    }
+                    false
                 }
+                Err(mpsc::RecvTimeoutError::Timeout) => false,
+                Err(mpsc::RecvTimeoutError::Disconnected) => true,
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Drain remaining work, then exit.
-                while !batcher.is_empty() {
-                    shared.batches.fetch_add(1, Ordering::Relaxed);
-                    batcher.flush(|batch| pool.infer(&model_id, batch.clone()));
-                }
-                return;
+        };
+        // Execute phase, lock released: sibling workers can collect.
+        if disconnected {
+            // Drain this worker's remaining local work, then exit.
+            while !batcher.is_empty() {
+                shared.batches.fetch_add(1, Ordering::Relaxed);
+                batcher.flush(|batch| pool.infer(&model_id, batch.clone()));
             }
+            return;
         }
         while batcher.should_flush(Instant::now()) {
             shared.batches.fetch_add(1, Ordering::Relaxed);

@@ -110,6 +110,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("max-batch", "dynamic batcher max batch", Some("8"))
         .flag("max-delay-ms", "batcher flush deadline (ms)", Some("2"))
         .flag("shards", "engine pool shards (0 = available parallelism)", Some("0"))
+        .flag("replicas", "replicas per served model (hot models on k shards; capped at the shard count)", Some("1"))
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
@@ -137,16 +138,21 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let max_batch = a.get_usize("max-batch", 8)?;
     let max_delay = Duration::from_millis(a.get_usize("max-delay-ms", 2)? as u64);
     let shards = a.get_usize("shards", 0)?;
+    let replicas = a.get_usize("replicas", 1)?.max(1);
     let queue_cap = a.get_usize("queue-cap", 1024)?.max(1);
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
 
     let pool = runtime::EnginePool::start(runtime::PoolConfig {
         shards,
         queue_cap,
+        replicas,
         strategy,
         ..Default::default()
     })?;
-    println!("engine pool: {} shard(s), queue cap {queue_cap}", pool.shard_count());
+    println!(
+        "engine pool: {} shard(s), queue cap {queue_cap}, {replicas} replica(s) per model",
+        pool.shard_count()
+    );
     let mut coord = coordinator::Coordinator::over_pool(
         pool.clone(),
         coordinator::CoordinatorConfig {
@@ -180,11 +186,11 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         };
         let info = coord.serve_model(dir)?;
         println!(
-            "serving `{}` v{} on shard {} ({} classes, AOT batches {:?}, {} plans, \
+            "serving `{}` v{} on shard(s) {:?} ({} classes, AOT batches {:?}, {} plans, \
              {} KB weights, load {:.1} ms)",
             info.id,
             info.version,
-            info.shard,
+            pool.replicas_of(&info.id),
             info.classes,
             info.batches,
             info.plans,
@@ -229,11 +235,11 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
                         match swapped {
                             Ok(report) => {
                                 println!(
-                                    "[auto-update] `{id}` v{} -> v{} hot-swapped on shard {} \
-                                     ({} in-flight drained, {:.1} ms)",
+                                    "[auto-update] `{id}` v{} -> v{} hot-swapped on shard(s) \
+                                     {:?} ({} in-flight drained, {:.1} ms)",
                                     report.old_version.unwrap_or(0),
                                     report.info.version,
-                                    report.shard,
+                                    report.replicas,
                                     report.drained,
                                     report.swap_micros as f64 / 1000.0
                                 );
@@ -300,7 +306,12 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         println!("{}", util.summary());
     }
     for info in coord.served_models() {
-        println!("final: `{}` v{} on shard {}", info.id, info.version, info.shard);
+        println!(
+            "final: `{}` v{} on shard(s) {:?}",
+            info.id,
+            info.version,
+            coord.pool().replicas_of(&info.id)
+        );
     }
     let over_n = overloaded.load(std::sync::atomic::Ordering::Relaxed);
     if over_n > 0 {

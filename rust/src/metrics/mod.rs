@@ -59,9 +59,25 @@ pub struct ServingStats {
     pub slo_attainment: f64,
 }
 
+/// One replica's routing load: a (model, shard) pair plus the number of
+/// requests routed there and not yet completed. `PoolHandle::utilization`
+/// reports one row per replica of every routable owner set, so replica
+/// routing stays observable per replica.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicaLoad {
+    /// Model id this replica serves.
+    pub model: String,
+    /// Shard holding the replica.
+    pub shard: usize,
+    /// Requests routed to this replica and not yet completed.
+    pub outstanding: usize,
+}
+
 /// Pool utilization snapshot: per-shard load counters, assembled from the
-/// engine pool's per-shard stats (`PoolStats::utilization()`). All vectors
-/// are indexed by shard id and share one length.
+/// engine pool's per-shard stats (`PoolStats::utilization()`), plus the
+/// per-shard admission queue depth and per-replica outstanding counts
+/// that `PoolHandle::utilization` fills in. All per-shard vectors are
+/// indexed by shard id and share one length.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PoolUtilization {
     /// Batches executed per shard.
@@ -72,6 +88,14 @@ pub struct PoolUtilization {
     pub resident_models: Vec<usize>,
     /// Weight bytes resident per shard.
     pub resident_bytes: Vec<usize>,
+    /// Inferences admitted but not yet completed per shard (the admission
+    /// window each shard's `queue_cap` bounds). Empty when the snapshot
+    /// was built from bare `PoolStats`.
+    pub queue_depth: Vec<usize>,
+    /// Per-replica outstanding request counts, one row per (model, shard)
+    /// replica, sorted by model then shard. Empty when the snapshot was
+    /// built from bare `PoolStats`.
+    pub replicas: Vec<ReplicaLoad>,
 }
 
 impl PoolUtilization {
@@ -108,7 +132,8 @@ impl PoolUtilization {
         max / mean
     }
 
-    /// One-line summary for logs and the CLI.
+    /// One-line summary for logs and the CLI. Replica rows (when present)
+    /// follow on a second line so per-replica routing stays observable.
     pub fn summary(&self) -> String {
         let per_shard: Vec<String> = self
             .executions
@@ -118,12 +143,21 @@ impl PoolUtilization {
             .enumerate()
             .map(|(s, ((e, m), b))| format!("s{s}: {e} exec/{m} models/{}", fmt_bytes(*b as u64)))
             .collect();
-        format!(
+        let mut line = format!(
             "pool[{} shards] imbalance={:.2} {}",
             self.shard_count(),
             self.imbalance(),
             per_shard.join("  ")
-        )
+        );
+        if !self.replicas.is_empty() {
+            let per_replica: Vec<String> = self
+                .replicas
+                .iter()
+                .map(|r| format!("{}@s{}: {} outstanding", r.model, r.shard, r.outstanding))
+                .collect();
+            line.push_str(&format!("\nreplicas: {}", per_replica.join("  ")));
+        }
+        line
     }
 }
 
@@ -230,6 +264,7 @@ mod tests {
             items: vec![60, 20, 0, 0],
             resident_models: vec![2, 1, 0, 0],
             resident_bytes: vec![2048, 1024, 0, 0],
+            ..Default::default()
         };
         assert_eq!(u.shard_count(), 4);
         assert_eq!(u.total_executions(), 40);
@@ -238,6 +273,25 @@ mod tests {
         assert!((u.imbalance() - 3.0).abs() < 1e-12);
         let s = u.summary();
         assert!(s.contains("pool[4 shards]") && s.contains("s0: 30 exec"), "{s}");
+        assert!(!s.contains("replicas:"), "no replica rows without replica data");
+    }
+
+    #[test]
+    fn pool_utilization_reports_replica_loads() {
+        let u = PoolUtilization {
+            executions: vec![5, 5],
+            items: vec![5, 5],
+            resident_models: vec![1, 1],
+            resident_bytes: vec![100, 100],
+            queue_depth: vec![3, 0],
+            replicas: vec![
+                ReplicaLoad { model: "hot".into(), shard: 0, outstanding: 3 },
+                ReplicaLoad { model: "hot".into(), shard: 1, outstanding: 0 },
+            ],
+        };
+        let s = u.summary();
+        assert!(s.contains("hot@s0: 3 outstanding"), "{s}");
+        assert!(s.contains("hot@s1: 0 outstanding"), "{s}");
     }
 
     #[test]

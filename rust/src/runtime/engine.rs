@@ -475,7 +475,9 @@ impl EngineHandle {
 
     /// Inferences admitted but not yet completed on this shard (a point
     /// snapshot; the drain a concurrent [`EngineHandle::swap`] will wait
-    /// out).
+    /// out). The pool reports this as the per-shard queue depth in
+    /// `PoolUtilization` and sums it per replica leg when fanning a
+    /// hot-swap across a model's owner set.
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::Acquire)
     }

@@ -9,11 +9,15 @@
 //! [`api_mapping`] for the full correspondence table).
 //!
 //! Scaling: [`EnginePool`] runs N such shards behind one [`PoolHandle`].
-//! [`Placement`] maps each model to a shard (least-loaded-bytes with
-//! sticky affinity) and every shard's bounded request queue provides
-//! admission control — saturation surfaces as the typed [`Overloaded`]
-//! error rather than unbounded queueing. `DESIGN.md` §3 walks through the
-//! request lifecycle.
+//! [`Placement`] maps each model to an **owner set** of shards
+//! (least-loaded-bytes with per-shard sticky affinity); a hot model may
+//! be replicated on k shards, each replica staging a full weight copy,
+//! and per-batch routing picks among replicas by power-of-two-choices on
+//! outstanding requests ([`Routed`] reports the pick). Every shard's
+//! bounded request queue provides admission control — saturation surfaces
+//! as the typed [`Overloaded`] error rather than unbounded queueing.
+//! Hot-swaps fan across the whole owner set with per-shard FIFO drains.
+//! `DESIGN.md` §3 walks through the request lifecycle.
 //!
 //! Backends: the `pjrt` feature enables the XLA/PJRT path over the AOT
 //! artifacts; without it every shard runs the in-crate CPU reference
@@ -38,5 +42,5 @@ pub use engine::{
 pub use literal::{literal_to_tensor, tensor_to_literal};
 #[cfg(feature = "pjrt")]
 pub use loaded_model::LoadedModel;
-pub use placement::{Placement, ShardAssignment};
-pub use pool::{EnginePool, Overloaded, PoolConfig, PoolHandle, PoolStats, SwapReport};
+pub use placement::{Placement, ReplicaAssignment, ReplicaSet};
+pub use pool::{EnginePool, Overloaded, PoolConfig, PoolHandle, PoolStats, Routed, SwapReport};

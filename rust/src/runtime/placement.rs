@@ -1,50 +1,129 @@
 //! Model→shard placement for the engine pool.
 //!
-//! Policy: **least-loaded-bytes with model affinity**.
+//! Policy: **least-loaded-bytes with model affinity**, generalized from a
+//! single owner per model to an **owner set** ([`ReplicaSet`]): a hot
+//! model may be resident on k distinct shards at once, each replica
+//! pinning a full copy of the weights.
 //!
-//! - A model that is resident stays where it is (its weights are staged on
-//!   that shard's device; moving them would repay the full load cost).
-//! - A model that was resident before keeps its *affinity*: a reload goes
-//!   back to the shard that served it last (warm OS page cache, stable
-//!   shard-local metrics), even across unload/load cycles.
-//! - A brand-new model lands on the shard currently pinning the fewest
+//! - A replica that is resident stays where it is (its weights are staged
+//!   on that shard's device; moving them would repay the full load cost).
+//! - A model that was resident before keeps its *affinity set*: a reload
+//!   prefers the shards that served it last (warm OS page cache, stable
+//!   shard-local metrics), even across unload/load cycles. Affinity is
+//!   tracked **per replica shard** — shrinking a replica set forgets only
+//!   the victim shard's affinity, never the model's whole set.
+//! - Additional replicas land on the shards currently pinning the fewest
 //!   resident weight bytes; ties break toward the lowest shard id for
-//!   determinism.
+//!   determinism. Replicas of one model never share a shard.
 //!
-//! [`Placement`] is pure bookkeeping — it never talks to an engine — so the
-//! policy is unit-testable without spawning threads. [`PoolHandle`]
+//! Byte accounting is kept as **per-shard running counters**, so
+//! [`Placement::bytes_on`] is O(1) and [`Placement::place_replicas`] is
+//! O(shards·k) worst case — both run inside the pool mutex on every load.
+//!
+//! [`Placement`] is pure bookkeeping — it never talks to an engine — so
+//! the policy is unit-testable without spawning threads. [`PoolHandle`]
 //! (`runtime/pool.rs`) consults it under a mutex on every load/unload.
 //!
 //! [`PoolHandle`]: super::PoolHandle
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-/// Where a resident model lives and how many weight bytes it pins there.
+/// One replica of a resident model: the shard it lives on and how many
+/// weight bytes it pins there.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ShardAssignment {
-    /// Owning shard index (`0..shards`).
+pub struct ReplicaAssignment {
+    /// Shard index (`0..shards`) holding this replica.
     pub shard: usize,
     /// Resident weight bytes, as reported by the engine after the load.
     pub bytes: usize,
 }
 
-/// Placement bookkeeping: which shard owns each model.
+/// The owner set of a resident model: one entry per replica, kept sorted
+/// by shard id (replicas of one model never share a shard).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaSet {
+    replicas: Vec<ReplicaAssignment>,
+}
+
+impl ReplicaSet {
+    /// Number of replicas in the set.
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Whether the set holds no replicas.
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// The replicas, sorted by shard id.
+    pub fn replicas(&self) -> &[ReplicaAssignment] {
+        &self.replicas
+    }
+
+    /// Shard ids holding a replica, ascending.
+    pub fn shard_ids(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.shard).collect()
+    }
+
+    /// The primary shard: the lowest shard id in the set (deterministic
+    /// representative for single-owner call sites).
+    pub fn primary(&self) -> Option<usize> {
+        self.replicas.first().map(|r| r.shard)
+    }
+
+    /// The replica on `shard`, if any.
+    pub fn on(&self, shard: usize) -> Option<&ReplicaAssignment> {
+        self.replicas.iter().find(|r| r.shard == shard)
+    }
+
+    /// Insert or update the replica on `shard`; returns the previous bytes
+    /// on that shard, if a replica was already there.
+    fn upsert(&mut self, shard: usize, bytes: usize) -> Option<usize> {
+        match self.replicas.binary_search_by_key(&shard, |r| r.shard) {
+            Ok(i) => {
+                let old = self.replicas[i].bytes;
+                self.replicas[i].bytes = bytes;
+                Some(old)
+            }
+            Err(i) => {
+                self.replicas.insert(i, ReplicaAssignment { shard, bytes });
+                None
+            }
+        }
+    }
+
+    /// Remove the replica on `shard`; returns its bytes if it existed.
+    fn remove(&mut self, shard: usize) -> Option<usize> {
+        match self.replicas.binary_search_by_key(&shard, |r| r.shard) {
+            Ok(i) => Some(self.replicas.remove(i).bytes),
+            Err(_) => None,
+        }
+    }
+}
+
+/// Placement bookkeeping: which shards own each model.
 #[derive(Clone, Debug)]
 pub struct Placement {
     shards: usize,
-    /// Models currently resident: id → (shard, bytes).
-    resident: BTreeMap<String, ShardAssignment>,
-    /// Sticky shard preference for models that were resident before.
-    affinity: BTreeMap<String, usize>,
+    /// Models currently resident: id → owner set.
+    resident: BTreeMap<String, ReplicaSet>,
+    /// Sticky per-shard preference for models that were resident before.
+    affinity: BTreeMap<String, BTreeSet<usize>>,
+    /// Running total of resident weight bytes per shard — kept in sync by
+    /// `commit`/`release*`/`forget` so `bytes_on` never scans residents.
+    shard_bytes: Vec<usize>,
 }
 
 impl Placement {
     /// Bookkeeping for a pool of `shards` engines (clamped to at least 1).
     pub fn new(shards: usize) -> Placement {
+        let shards = shards.max(1);
         Placement {
-            shards: shards.max(1),
+            shards,
             resident: BTreeMap::new(),
             affinity: BTreeMap::new(),
+            shard_bytes: vec![0; shards],
         }
     }
 
@@ -53,64 +132,163 @@ impl Placement {
         self.shards
     }
 
-    /// Decide which shard should host `id`. Pure: does not record anything —
-    /// call [`Placement::commit`] once the load succeeded.
+    /// Decide which shard should host a single replica of `id` — the k=1
+    /// convenience form of [`Placement::place_replicas`].
     pub fn place(&self, id: &str) -> usize {
-        if let Some(a) = self.resident.get(id) {
-            return a.shard;
-        }
-        if let Some(&s) = self.affinity.get(id) {
-            return s;
-        }
-        (0..self.shards)
-            .min_by_key(|&s| (self.bytes_on(s), s))
-            .unwrap_or(0)
+        self.place_replicas(id, 1)[0]
     }
 
-    /// Record a successful load of `id` onto `shard` with `bytes` of
-    /// resident weights. Also pins the model's affinity to that shard.
+    /// Decide which shards should host `k` replicas of `id`. Pure: does
+    /// not record anything — call [`Placement::commit`] per shard once
+    /// each load succeeded.
+    ///
+    /// Selection order: shards already holding a replica (residency is
+    /// never shrunk by a load — if more than `k` replicas are resident,
+    /// all of them are returned), then affinity shards ascending, then
+    /// least-loaded-bytes among the rest (ties to the lowest shard id).
+    /// The result is ascending and always non-empty; `k` is clamped to
+    /// `1..=shards` since replicas of one model never share a shard.
+    pub fn place_replicas(&self, id: &str, k: usize) -> Vec<usize> {
+        let k = k.clamp(1, self.shards);
+        let mut chosen: Vec<usize> =
+            self.resident.get(id).map(|set| set.shard_ids()).unwrap_or_default();
+        if let Some(aff) = self.affinity.get(id) {
+            for &s in aff {
+                if chosen.len() >= k {
+                    break;
+                }
+                if !chosen.contains(&s) {
+                    chosen.push(s);
+                }
+            }
+        }
+        while chosen.len() < k {
+            let next = (0..self.shards)
+                .filter(|s| !chosen.contains(s))
+                .min_by_key(|&s| (self.shard_bytes[s], s))
+                .expect("k <= shards leaves a free shard");
+            chosen.push(next);
+        }
+        chosen.sort_unstable();
+        chosen
+    }
+
+    /// Record a successful load of one replica of `id` onto `shard` with
+    /// `bytes` of resident weights. Also pins the model's affinity to that
+    /// shard (affinity is a per-shard set; other shards' entries are kept).
     pub fn commit(&mut self, id: &str, shard: usize, bytes: usize) {
         debug_assert!(shard < self.shards, "shard {shard} out of range");
-        self.resident.insert(id.to_string(), ShardAssignment { shard, bytes });
-        self.affinity.insert(id.to_string(), shard);
+        let set = self.resident.entry(id.to_string()).or_default();
+        let old = set.upsert(shard, bytes).unwrap_or(0);
+        self.shard_bytes[shard] = self.shard_bytes[shard] - old + bytes;
+        self.affinity.entry(id.to_string()).or_default().insert(shard);
     }
 
-    /// Record an unload. Frees the shard's byte accounting but **keeps the
-    /// affinity**, so a later reload returns to the same shard. Returns the
-    /// shard the model was resident on, if any.
-    pub fn release(&mut self, id: &str) -> Option<usize> {
-        self.resident.remove(id).map(|a| a.shard)
+    /// Record a full unload. Frees every replica's byte accounting but
+    /// **keeps the affinity set**, so a later reload returns to the same
+    /// shards. Returns the owner set the model was resident on, if any.
+    pub fn release(&mut self, id: &str) -> Option<ReplicaSet> {
+        let set = self.resident.remove(id)?;
+        for r in set.replicas() {
+            self.shard_bytes[r.shard] -= r.bytes;
+        }
+        Some(set)
     }
 
-    /// Drop all state for `id`, including affinity (e.g. the model was
-    /// deleted from the catalog entirely).
+    /// Record the unload of the single replica on `shard` (a replica-set
+    /// shrink). Keeps the shard's affinity — capacity evictions should
+    /// follow up with [`Placement::forget_affinity_on`]. Returns the
+    /// remaining replica count, or `None` if no replica lived on `shard`.
+    pub fn release_replica(&mut self, id: &str, shard: usize) -> Option<usize> {
+        let set = self.resident.get_mut(id)?;
+        let bytes = set.remove(shard)?;
+        self.shard_bytes[shard] -= bytes;
+        let remaining = set.len();
+        if remaining == 0 {
+            self.resident.remove(id);
+        }
+        Some(remaining)
+    }
+
+    /// Drop all state for `id`, including the whole affinity set (e.g. the
+    /// model was deleted from the catalog entirely).
     pub fn forget(&mut self, id: &str) {
-        self.resident.remove(id);
+        let _ = self.release(id);
         self.affinity.remove(id);
     }
 
-    /// Shard currently holding `id`, if it is resident.
+    /// Drop only `shard` from `id`'s affinity set, keeping every other
+    /// shard's stickiness. This is the right call after a *replica shrink*
+    /// on capacity pressure: the victim shard stops attracting reloads
+    /// while the surviving replicas keep their homes.
+    pub fn forget_affinity_on(&mut self, id: &str, shard: usize) {
+        if let Some(aff) = self.affinity.get_mut(id) {
+            aff.remove(&shard);
+            if aff.is_empty() {
+                self.affinity.remove(id);
+            }
+        }
+    }
+
+    /// Primary shard currently holding `id` (lowest shard id in the owner
+    /// set), if it is resident.
     pub fn shard_of(&self, id: &str) -> Option<usize> {
-        self.resident.get(id).map(|a| a.shard)
+        self.resident.get(id).and_then(|set| set.primary())
     }
 
-    /// Total resident weight bytes pinned on `shard`.
+    /// All shards currently holding a replica of `id`, ascending (empty if
+    /// not resident).
+    pub fn shards_of(&self, id: &str) -> Vec<usize> {
+        self.resident.get(id).map(|set| set.shard_ids()).unwrap_or_default()
+    }
+
+    /// The owner set of `id`, if resident.
+    pub fn replica_set(&self, id: &str) -> Option<&ReplicaSet> {
+        self.resident.get(id)
+    }
+
+    /// Total resident weight bytes pinned on `shard` — O(1) via the
+    /// running per-shard counters.
     pub fn bytes_on(&self, shard: usize) -> usize {
-        self.resident.values().filter(|a| a.shard == shard).map(|a| a.bytes).sum()
+        self.shard_bytes.get(shard).copied().unwrap_or(0)
     }
 
-    /// Ids of the models resident on `shard` (sorted, deterministic).
+    /// Ids of the models with a replica on `shard` (sorted, deterministic).
     pub fn resident_on(&self, shard: usize) -> Vec<String> {
         self.resident
             .iter()
-            .filter(|(_, a)| a.shard == shard)
+            .filter(|(_, set)| set.on(shard).is_some())
             .map(|(id, _)| id.clone())
             .collect()
     }
 
-    /// Number of models resident across the pool.
+    /// Number of models resident across the pool (each counted once,
+    /// however many replicas it has).
     pub fn resident_count(&self) -> usize {
         self.resident.len()
+    }
+
+    /// Total replicas resident across the pool.
+    pub fn replica_count(&self) -> usize {
+        self.resident.values().map(|set| set.len()).sum()
+    }
+
+    /// Test-only consistency check: the running per-shard counters must
+    /// equal a brute-force recount over the owner sets.
+    #[cfg(test)]
+    fn assert_counters_consistent(&self) {
+        for shard in 0..self.shards {
+            let brute: usize = self
+                .resident
+                .values()
+                .filter_map(|set| set.on(shard))
+                .map(|r| r.bytes)
+                .sum();
+            assert_eq!(
+                self.shard_bytes[shard], brute,
+                "shard {shard}: running counter diverged from brute-force recount"
+            );
+        }
     }
 }
 
@@ -128,6 +306,7 @@ mod tests {
         p.commit("c", 2, 500);
         // Now shard 1 (10 B) is the least loaded.
         assert_eq!(p.place("d"), 1);
+        p.assert_counters_consistent();
     }
 
     #[test]
@@ -148,10 +327,12 @@ mod tests {
     fn affinity_survives_unload() {
         let mut p = Placement::new(2);
         p.commit("m", 1, 100);
-        assert_eq!(p.release("m"), Some(1));
+        let released = p.release("m").expect("was resident");
+        assert_eq!(released.shard_ids(), vec![1]);
         assert_eq!(p.shard_of("m"), None);
         // Even though shard 0 is emptier, the reload goes back to shard 1.
         assert_eq!(p.place("m"), 1);
+        p.assert_counters_consistent();
     }
 
     #[test]
@@ -162,6 +343,7 @@ mod tests {
         p.forget("m");
         // No affinity left: least-loaded (shard 0) wins again.
         assert_eq!(p.place("m"), 0);
+        p.assert_counters_consistent();
     }
 
     #[test]
@@ -176,6 +358,7 @@ mod tests {
         assert_eq!(p.resident_count(), 3);
         p.release("b");
         assert_eq!(p.bytes_on(0), 100);
+        p.assert_counters_consistent();
     }
 
     #[test]
@@ -191,5 +374,116 @@ mod tests {
         p.commit("m", 0, 100);
         p.commit("m", 0, 200); // reload with different weights
         assert_eq!(p.bytes_on(0), 200);
+        p.assert_counters_consistent();
+    }
+
+    #[test]
+    fn replicas_land_on_distinct_least_loaded_shards() {
+        let mut p = Placement::new(4);
+        p.commit("old", 0, 1000);
+        p.commit("older", 2, 500);
+        // Three replicas: shards 1 and 3 are empty (lowest id first), then
+        // shard 2 (500 B) beats shard 0 (1000 B).
+        assert_eq!(p.place_replicas("hot", 3), vec![1, 2, 3]);
+        for s in [1, 2, 3] {
+            p.commit("hot", s, 300);
+        }
+        assert_eq!(p.shards_of("hot"), vec![1, 2, 3]);
+        assert_eq!(p.shard_of("hot"), Some(1), "primary is the lowest shard id");
+        assert_eq!(p.replica_count(), 5);
+        assert_eq!(p.resident_count(), 3);
+        for s in [1, 2, 3] {
+            assert_eq!(p.replica_set("hot").unwrap().on(s).unwrap().bytes, 300);
+        }
+        p.assert_counters_consistent();
+    }
+
+    #[test]
+    fn k_clamps_to_shard_count() {
+        let p = Placement::new(2);
+        assert_eq!(p.place_replicas("m", 0), vec![0]);
+        assert_eq!(p.place_replicas("m", 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn grow_keeps_existing_replicas_and_fills_least_loaded() {
+        let mut p = Placement::new(3);
+        p.commit("hot", 2, 100);
+        p.commit("ballast", 0, 1000);
+        // Growing to 2 keeps the resident replica on 2 and adds shard 1
+        // (empty) rather than moving anything.
+        assert_eq!(p.place_replicas("hot", 2), vec![1, 2]);
+        // A load asking for fewer replicas than are resident returns the
+        // whole owner set — loads never shrink residency.
+        p.commit("hot", 1, 100);
+        assert_eq!(p.place_replicas("hot", 1), vec![1, 2]);
+        p.assert_counters_consistent();
+    }
+
+    #[test]
+    fn release_replica_shrinks_and_keeps_other_shards() {
+        let mut p = Placement::new(3);
+        p.commit("m", 0, 100);
+        p.commit("m", 1, 100);
+        p.commit("m", 2, 100);
+        assert_eq!(p.release_replica("m", 1), Some(2));
+        assert_eq!(p.shards_of("m"), vec![0, 2]);
+        assert_eq!(p.bytes_on(1), 0);
+        assert_eq!(p.bytes_on(0), 100);
+        // Removing an absent replica is a no-op signal.
+        assert_eq!(p.release_replica("m", 1), None);
+        // Draining the set removes the resident entry entirely.
+        assert_eq!(p.release_replica("m", 0), Some(1));
+        assert_eq!(p.release_replica("m", 2), Some(0));
+        assert_eq!(p.shard_of("m"), None);
+        assert_eq!(p.resident_count(), 0);
+        p.assert_counters_consistent();
+    }
+
+    #[test]
+    fn forget_affinity_on_is_per_replica() {
+        // Regression for the capacity-eviction follow-through: shrinking a
+        // replica set must forget only the victim shard's affinity, not
+        // the model's whole set.
+        let mut p = Placement::new(3);
+        p.commit("m", 0, 100);
+        p.commit("m", 2, 100);
+        p.release("m"); // full unload; affinity set is {0, 2}
+        p.forget_affinity_on("m", 0);
+        // Shard 2's stickiness survives: a k=1 reload goes there, not to
+        // the (equally empty, lower-id) shard 0.
+        assert_eq!(p.place("m"), 2);
+        assert_eq!(p.place_replicas("m", 2), vec![0, 2], "second replica fills least-loaded");
+        // Dropping the last affinity shard clears the entry.
+        p.forget_affinity_on("m", 2);
+        assert_eq!(p.place("m"), 0);
+    }
+
+    #[test]
+    fn running_counters_match_brute_force_under_churn() {
+        // Satellite pin: the O(1) per-shard counters stay exact through an
+        // arbitrary commit/release/shrink/forget interleaving.
+        let mut p = Placement::new(4);
+        for (i, id) in ["a", "b", "c", "d", "e"].iter().enumerate() {
+            for s in p.place_replicas(id, 1 + i % 3) {
+                p.commit(id, s, 100 * (i + 1));
+            }
+            p.assert_counters_consistent();
+        }
+        p.release_replica("c", p.shards_of("c")[0]);
+        p.assert_counters_consistent();
+        p.release("b");
+        p.assert_counters_consistent();
+        p.commit("b", 3, 777);
+        p.forget("d");
+        p.assert_counters_consistent();
+        let total: usize = (0..4).map(|s| p.bytes_on(s)).sum();
+        let mut brute = 0usize;
+        for s in 0..4 {
+            for id in p.resident_on(s) {
+                brute += p.replica_set(&id).unwrap().on(s).unwrap().bytes;
+            }
+        }
+        assert_eq!(total, brute);
     }
 }

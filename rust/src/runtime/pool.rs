@@ -3,17 +3,24 @@
 //! The seed reproduction funnelled every request for every model through a
 //! single engine thread — one `MTLCommandQueue` for the whole app. This
 //! module is the scaling seam: [`EnginePool`] starts N shards (default:
-//! available parallelism), [`Placement`] assigns each model to a shard
-//! (least-loaded-bytes with affinity, so a model's batches always hit the
-//! shard holding its staged weights), and each shard's bounded queue gives
-//! per-shard admission control — a saturated shard rejects with the typed
-//! [`Overloaded`] error instead of queueing without bound.
+//! available parallelism), [`Placement`] assigns each model an **owner
+//! set** of shards (least-loaded-bytes with per-shard affinity; a hot
+//! model may be replicated on k shards, each staging a full weight copy),
+//! and each shard's bounded queue gives per-shard admission control — a
+//! saturated shard rejects with the typed [`Overloaded`] error instead of
+//! queueing without bound.
 //!
 //! ```text
-//!                    ┌─ shard 0 (engine thread, models A,C)
-//!  PoolHandle ──────►├─ shard 1 (engine thread, models B)
-//!   placement lookup └─ shard 2 (engine thread, models D,E)
+//!                    ┌─ shard 0 (engine thread, models A,C,H)
+//!  PoolHandle ──────►├─ shard 1 (engine thread, models B,H)   H = hot,
+//!   replica routing  └─ shard 2 (engine thread, models D,E)   2 replicas
 //! ```
+//!
+//! Per-batch routing picks among a model's replicas by
+//! **power-of-two-choices** on outstanding requests per replica, with a
+//! deterministic tie-break toward the lowest shard id — so one hot model
+//! spreads across its owner set without a global queue, and a single
+//! replica (k = 1) degenerates to the original "route to the one owner".
 //!
 //! Everything above this layer (coordinator, cache, CLI) takes a
 //! [`PoolHandle`]; a single-engine deployment is just
@@ -21,12 +28,14 @@
 
 use super::engine::{BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, ModelInfo};
 use std::time::Instant;
-use super::placement::Placement;
-use crate::metrics::PoolUtilization;
+use super::placement::{Placement, ReplicaAssignment};
+use crate::metrics::{PoolUtilization, ReplicaLoad};
 use crate::model::{Manifest, ModelFiles};
 use crate::nn::PlanStrategy;
 use crate::tensor::Tensor;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Typed admission-control rejection: the target shard's request queue is
@@ -58,20 +67,38 @@ impl std::fmt::Display for Overloaded {
 
 impl std::error::Error for Overloaded {}
 
+/// Where one batch was routed: the chosen replica of the model's owner
+/// set. Surfaced to clients through `BatchMeta`/`RequestResult`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Routed {
+    /// Shard that executed the batch.
+    pub shard: usize,
+    /// Index of the chosen replica within the model's owner set (owner
+    /// sets are sorted by shard id; 0 is the primary replica).
+    pub replica: usize,
+    /// Size of the owner set at routing time.
+    pub replicas: usize,
+}
+
 /// Result of a zero-downtime hot-swap through the pool (see
 /// [`PoolHandle::swap`]).
 #[derive(Clone, Debug)]
 pub struct SwapReport {
-    /// The new resident version's metadata.
+    /// The new resident version's metadata (from the primary replica).
     pub info: ModelInfo,
     /// Version replaced under the same id (`None`: first load).
     pub old_version: Option<u32>,
-    /// Shard the swap ran on (the model's owning shard).
+    /// Primary shard the swap ran on (lowest shard id of the owner set).
     pub shard: usize,
-    /// Inferences in flight on that shard when the swap was submitted —
-    /// the work the shard drained (on the old version) before replacing.
+    /// Every shard whose replica was swapped, in rollout (ascending
+    /// shard) order. A single-owner model reports one entry.
+    pub replicas: Vec<usize>,
+    /// Inferences in flight across the owner set when the swap was
+    /// submitted — the work the shards drained (on the old version)
+    /// before replacing.
     pub drained: usize,
-    /// Wall time of the whole swap: drain + load + atomic replace.
+    /// Wall time of the whole swap: per-replica drain + load + atomic
+    /// replace, across the full owner set.
     pub swap_micros: u64,
 }
 
@@ -83,6 +110,9 @@ pub struct PoolConfig {
     pub shards: usize,
     /// Per-shard request-queue bound (admission control).
     pub queue_cap: usize,
+    /// Default replica count for model loads (clamped to `1..=shards`;
+    /// per-model overrides via [`PoolHandle::load_replicated`]).
+    pub replicas: usize,
     /// Execution backend for every shard.
     pub backend: BackendKind,
     /// Conv-strategy policy for plans compiled at model load, applied by
@@ -95,6 +125,7 @@ impl Default for PoolConfig {
         PoolConfig {
             shards: 0,
             queue_cap: 1024,
+            replicas: 1,
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
         }
@@ -135,13 +166,56 @@ impl PoolStats {
         self.shards.iter().map(|s| s.resident_bytes).sum()
     }
 
-    /// Condense into the metrics-layer utilization snapshot.
+    /// Condense into the metrics-layer utilization snapshot (shard-level
+    /// counters only; [`PoolHandle::utilization`] additionally fills the
+    /// per-replica queue depth and outstanding counts).
     pub fn utilization(&self) -> PoolUtilization {
         PoolUtilization {
             executions: self.shards.iter().map(|s| s.executions).collect(),
             items: self.shards.iter().map(|s| s.items).collect(),
             resident_models: self.shards.iter().map(|s| s.resident_models).collect(),
             resident_bytes: self.shards.iter().map(|s| s.resident_bytes).collect(),
+            queue_depth: Vec::new(),
+            replicas: Vec::new(),
+        }
+    }
+}
+
+/// One routable replica of a model: its shard plus the pool-side count of
+/// requests routed there and not yet completed (the power-of-two-choices
+/// load signal).
+struct Route {
+    shard: usize,
+    outstanding: Arc<AtomicUsize>,
+}
+
+/// A model's routing table: one [`Route`] per replica, sorted by shard id
+/// (mirrors the placement owner set).
+struct ReplicaRoutes {
+    routes: Vec<Route>,
+}
+
+impl ReplicaRoutes {
+    /// Pick a replica for one batch. Power-of-two-choices: derive two
+    /// distinct candidates from a Weyl-sequence hash of the routing
+    /// clock, then take the one with fewer outstanding requests; ties
+    /// break deterministically toward the lower shard id (owner sets are
+    /// shard-sorted, so lower index = lower shard).
+    fn pick(&self, tick: usize) -> usize {
+        let n = self.routes.len();
+        if n <= 1 {
+            return 0;
+        }
+        let h = (tick as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) as usize;
+        let i = h % n;
+        let j = (i + 1 + (h / n) % (n - 1)) % n;
+        let (a, b) = (i.min(j), i.max(j));
+        let load_a = self.routes[a].outstanding.load(Ordering::Acquire);
+        let load_b = self.routes[b].outstanding.load(Ordering::Acquire);
+        if load_b < load_a {
+            b
+        } else {
+            a
         }
     }
 }
@@ -167,16 +241,27 @@ impl EnginePool {
         Ok(PoolHandle {
             shards: Arc::new(handles),
             placement: Arc::new(Mutex::new(Placement::new(shards))),
+            routes: Arc::new(Mutex::new(BTreeMap::new())),
+            route_clock: Arc::new(AtomicUsize::new(0)),
+            default_replicas: config.replicas.max(1),
         })
     }
 }
 
-/// Cloneable, thread-safe handle to an engine pool: placement-aware
+/// Cloneable, thread-safe handle to an engine pool: replica-aware
 /// `load`/`unload`/`infer` plus aggregate stats.
 #[derive(Clone)]
 pub struct PoolHandle {
     shards: Arc<Vec<EngineHandle>>,
     placement: Arc<Mutex<Placement>>,
+    /// Per-model routing tables (owner set + outstanding counters),
+    /// rebuilt whenever the owner set changes. Reads clone the `Arc`, so
+    /// the hot path holds this lock only for a map lookup.
+    routes: Arc<Mutex<BTreeMap<String, Arc<ReplicaRoutes>>>>,
+    /// Monotonic tick feeding the power-of-two-choices candidate hash.
+    route_clock: Arc<AtomicUsize>,
+    /// Pool-default replica count for loads without a per-model override.
+    default_replicas: usize,
 }
 
 impl PoolHandle {
@@ -187,6 +272,9 @@ impl PoolHandle {
         PoolHandle {
             shards: Arc::new(vec![engine]),
             placement: Arc::new(Mutex::new(Placement::new(1))),
+            routes: Arc::new(Mutex::new(BTreeMap::new())),
+            route_clock: Arc::new(AtomicUsize::new(0)),
+            default_replicas: 1,
         }
     }
 
@@ -195,131 +283,430 @@ impl PoolHandle {
         self.shards.len()
     }
 
+    /// The pool-default replica count applied by [`PoolHandle::load`].
+    pub fn default_replicas(&self) -> usize {
+        self.default_replicas
+    }
+
     /// Direct handle to one shard (for shard-local diagnostics).
     pub fn shard_handle(&self, shard: usize) -> &EngineHandle {
         &self.shards[shard]
     }
 
-    /// Which shard would host `id` right now (affinity or least-loaded) —
-    /// a pure preview; nothing is recorded.
+    /// Which shard would host a single replica of `id` right now
+    /// (residency, then affinity, then least-loaded) — a pure preview;
+    /// nothing is recorded.
     pub fn placement_preview(&self, id: &str) -> usize {
         self.placement.lock().unwrap().place(id)
     }
 
-    /// Shard currently holding `id`, if resident.
+    /// Which shards would host `k` replicas of `id` right now — a pure
+    /// preview; nothing is recorded.
+    pub fn placement_preview_replicas(&self, id: &str, k: usize) -> Vec<usize> {
+        self.placement.lock().unwrap().place_replicas(id, k)
+    }
+
+    /// Primary shard currently holding `id` (lowest shard id of the owner
+    /// set), if resident.
     pub fn shard_of(&self, id: &str) -> Option<usize> {
         self.placement.lock().unwrap().shard_of(id)
     }
 
-    /// Load a model directory onto the shard the placement policy picks
-    /// (resident shard, then sticky affinity, then least-loaded-bytes).
-    pub fn load(&self, dir: impl Into<PathBuf>) -> crate::Result<ModelInfo> {
-        let dir = dir.into();
-        // Peek the manifest for the model id and a weight-byte estimate so
-        // placement can decide before the heavyweight load runs on the
-        // chosen shard's thread.
-        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
-        let estimate = manifest.arch.param_count().map(|p| p * 4).unwrap_or(0);
-        // Decide and *reserve* under one lock acquisition: the estimate is
-        // committed immediately so concurrent loads see each other's
-        // in-flight placements instead of all picking the same
-        // least-loaded shard.
-        let shard = {
-            let mut p = self.placement.lock().unwrap();
-            let shard = p.place(&manifest.id);
-            p.commit(&manifest.id, shard, estimate);
-            shard
-        };
-        match self.shards[shard].load(dir) {
-            Ok(info) => {
-                self.placement.lock().unwrap().commit(&info.id, shard, info.weight_bytes);
-                Ok(info)
+    /// Every shard currently holding a replica of `id`, ascending (empty
+    /// if not resident).
+    pub fn replicas_of(&self, id: &str) -> Vec<usize> {
+        self.placement.lock().unwrap().shards_of(id)
+    }
+
+    /// The owner set of `id` with per-replica byte accounting (empty if
+    /// not resident).
+    pub fn replica_assignments(&self, id: &str) -> Vec<ReplicaAssignment> {
+        self.placement
+            .lock()
+            .unwrap()
+            .replica_set(id)
+            .map(|set| set.replicas().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Number of replicas of `id` currently resident.
+    pub fn replica_count(&self, id: &str) -> usize {
+        self.placement.lock().unwrap().replica_set(id).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Rebuild `id`'s routing table from the placement owner set,
+    /// preserving outstanding counters for replicas that survive. The
+    /// placement lock is held across the routes install so concurrent
+    /// rebuilds serialize and can never overwrite the table with a stale
+    /// snapshot (lock order is always placement → routes, never the
+    /// reverse).
+    fn rebuild_routes(&self, id: &str) {
+        let placement = self.placement.lock().unwrap();
+        let shards = placement.shards_of(id);
+        let mut routes = self.routes.lock().unwrap();
+        if shards.is_empty() {
+            routes.remove(id);
+            return;
+        }
+        let old = routes.get(id).cloned();
+        let rebuilt: Vec<Route> = shards
+            .iter()
+            .map(|&shard| Route {
+                shard,
+                outstanding: old
+                    .as_ref()
+                    .and_then(|set| set.routes.iter().find(|r| r.shard == shard))
+                    .map(|r| r.outstanding.clone())
+                    .unwrap_or_default(),
+            })
+            .collect();
+        routes.insert(id.to_string(), Arc::new(ReplicaRoutes { routes: rebuilt }));
+    }
+
+    /// Drop one replica from `id`'s routing table without touching
+    /// placement — the pre-unload step of a replica shrink, so new picks
+    /// stop targeting the victim while its bookkeeping is still intact.
+    fn remove_route(&self, id: &str, shard: usize) {
+        let mut routes = self.routes.lock().unwrap();
+        let remaining: Option<Vec<Route>> = routes.get(id).map(|set| {
+            set.routes
+                .iter()
+                .filter(|r| r.shard != shard)
+                .map(|r| Route { shard: r.shard, outstanding: r.outstanding.clone() })
+                .collect()
+        });
+        match remaining {
+            Some(remaining) if remaining.is_empty() => {
+                routes.remove(id);
             }
-            Err(e) => {
-                // Roll the reservation back (affinity kept: a retry of the
-                // same model landing on the same shard is harmless).
-                self.placement.lock().unwrap().release(&manifest.id);
-                Err(e)
+            Some(remaining) => {
+                routes.insert(id.to_string(), Arc::new(ReplicaRoutes { routes: remaining }));
             }
+            None => {}
         }
     }
 
-    /// Zero-downtime versioned hot-swap. If the model is resident, the
-    /// swap runs on its owning shard: the shard's FIFO queue first drains
-    /// every inference already submitted (they complete on the **old**
-    /// version), then the replacement is atomic — inferences submitted
-    /// after this call return from the **new** version, and no request is
-    /// ever failed by the swap. If the model is not resident the swap
-    /// degenerates to a placed [`PoolHandle::load`].
+    /// Load a model directory onto the shards the placement policy picks
+    /// (resident owner set, then sticky affinity, then least-loaded-bytes)
+    /// with the pool-default replica count. Returns the primary replica's
+    /// metadata.
+    pub fn load(&self, dir: impl Into<PathBuf>) -> crate::Result<ModelInfo> {
+        self.load_impl(dir.into(), None)
+    }
+
+    /// Load a model directory with an explicit per-model replica count
+    /// (clamped to `1..=shards`; replicas of one model never share a
+    /// shard). A load never shrinks an existing owner set — if more
+    /// replicas are already resident, all of them are refreshed.
     ///
-    /// Blocks until the swap completes. Other shards — and other models on
-    /// the same shard's queue — keep serving throughout.
+    /// Re-loading a resident model refreshes every replica from `dir`;
+    /// use [`PoolHandle::swap`] to replace a *serving* model with
+    /// different weights — a multi-replica refresh that fails partway
+    /// leaves already-refreshed replicas on the new copy while
+    /// unattempted ones keep the old (the rollback restores bookkeeping,
+    /// not staged weights).
+    pub fn load_replicated(&self, dir: impl Into<PathBuf>, replicas: usize) -> crate::Result<ModelInfo> {
+        self.load_impl(dir.into(), Some(replicas))
+    }
+
+    fn load_impl(&self, dir: PathBuf, replicas: Option<usize>) -> crate::Result<ModelInfo> {
+        // Peek the manifest for the model id and a weight-byte estimate so
+        // placement can decide before the heavyweight loads run on the
+        // chosen shards' threads.
+        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
+        let estimate = manifest.arch.param_count().map(|p| p * 4).unwrap_or(0);
+        let k = replicas.unwrap_or(self.default_replicas);
+        // Decide and *reserve* under one lock acquisition: the estimate is
+        // committed immediately for every target so concurrent loads see
+        // each other's in-flight placements instead of all picking the
+        // same least-loaded shards. The prior owner set is snapshotted so
+        // a partial failure can roll back to it instead of taking an
+        // already-serving model offline.
+        let (prior, targets) = {
+            let mut p = self.placement.lock().unwrap();
+            let prior = p.replica_set(&manifest.id).cloned();
+            let targets = p.place_replicas(&manifest.id, k);
+            for &shard in &targets {
+                p.commit(&manifest.id, shard, estimate);
+            }
+            (prior, targets)
+        };
+        let mut primary: Option<ModelInfo> = None;
+        let mut loaded: Vec<usize> = Vec::new();
+        let mut failure: Option<anyhow::Error> = None;
+        for &shard in &targets {
+            match self.shards[shard].load(dir.clone()) {
+                Ok(info) => {
+                    self.placement.lock().unwrap().commit(&info.id, shard, info.weight_bytes);
+                    if primary.is_none() {
+                        primary = Some(info);
+                    }
+                    loaded.push(shard);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Roll back to the prior owner set (affinity kept: a retry of
+            // the same model landing on the same shards is harmless).
+            // Replicas that did not exist before this call are unloaded
+            // from their engines and released; prior replicas stay
+            // resident and serving — a refreshed one keeps its just-loaded
+            // copy (same directory) and its committed actual bytes, an
+            // unattempted one gets its recorded bytes restored.
+            let prior_shards: Vec<usize> =
+                prior.as_ref().map(|set| set.shard_ids()).unwrap_or_default();
+            {
+                let mut p = self.placement.lock().unwrap();
+                for &shard in &targets {
+                    if !prior_shards.contains(&shard) {
+                        p.release_replica(&manifest.id, shard);
+                    }
+                }
+                if let Some(set) = &prior {
+                    for r in set.replicas() {
+                        if !loaded.contains(&r.shard) {
+                            p.commit(&manifest.id, r.shard, r.bytes);
+                        }
+                    }
+                }
+            }
+            for &shard in &loaded {
+                if !prior_shards.contains(&shard) {
+                    let _ = self.shards[shard].unload(&manifest.id);
+                }
+            }
+            self.rebuild_routes(&manifest.id);
+            return Err(e);
+        }
+        self.rebuild_routes(&manifest.id);
+        Ok(primary.expect("place_replicas returns at least one shard"))
+    }
+
+    /// Zero-downtime versioned hot-swap, fanned across the model's whole
+    /// owner set. Replicas are swapped in ascending shard order; on each
+    /// shard the FIFO queue first drains every inference already submitted
+    /// (they complete on the **old** version), then the replacement is
+    /// atomic — so no request is ever failed by the swap.
+    ///
+    /// **Ordering contract:** the rollout is sequential, so while it runs
+    /// the owner set may briefly serve *mixed versions* — replicas on
+    /// lower shard ids answer with the new version while higher shards
+    /// still drain the old one. When this call returns `Ok`, every
+    /// replica serves the new version; if a leg fails mid-rollout the
+    /// owner set is *shrunk* to the replicas already swapped (the stale
+    /// ones are unloaded, affinity kept), so the set never keeps serving
+    /// mixed versions past the call. If the model is not resident the
+    /// swap degenerates to a placed [`PoolHandle::load`].
+    ///
+    /// Blocks until the full rollout completes. Other models — and other
+    /// work on the same shards' queues — keep serving throughout.
     pub fn swap(&self, dir: impl Into<PathBuf>) -> crate::Result<SwapReport> {
         let dir = dir.into();
         let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
         let t0 = Instant::now();
-        match self.shard_of(&manifest.id) {
-            Some(shard) => {
-                let drained = self.shards[shard].inflight();
-                let swap = self.shards[shard].swap(dir)?;
-                // Commit the new version's actual weight bytes so
-                // least-loaded placement sees the post-swap footprint.
-                self.placement
-                    .lock()
-                    .unwrap()
-                    .commit(&swap.info.id, shard, swap.info.weight_bytes);
-                Ok(SwapReport {
-                    info: swap.info,
-                    old_version: swap.old_version,
-                    shard,
-                    drained,
-                    swap_micros: t0.elapsed().as_micros() as u64,
-                })
+        let owner_shards = self.replicas_of(&manifest.id);
+        if owner_shards.is_empty() {
+            let info = self.load(dir)?;
+            let replicas = self.replicas_of(&info.id);
+            return Ok(SwapReport {
+                shard: info.shard,
+                info,
+                old_version: None,
+                replicas,
+                drained: 0,
+                swap_micros: t0.elapsed().as_micros() as u64,
+            });
+        }
+        let mut drained = 0usize;
+        let mut primary = None;
+        let mut swapped: Vec<usize> = Vec::new();
+        for &shard in &owner_shards {
+            drained += self.shards[shard].inflight();
+            match self.shards[shard].swap(dir.clone()) {
+                Ok(swap) => {
+                    // Commit the new version's actual weight bytes so
+                    // least-loaded placement sees the post-swap footprint.
+                    self.placement
+                        .lock()
+                        .unwrap()
+                        .commit(&swap.info.id, shard, swap.info.weight_bytes);
+                    if primary.is_none() {
+                        primary = Some(swap);
+                    }
+                    swapped.push(shard);
+                }
+                Err(e) => {
+                    // A mid-rollout failure must not leave the owner set
+                    // permanently serving mixed versions. If nothing
+                    // swapped yet the set is still uniformly on the old
+                    // version — report and leave it alone. Otherwise
+                    // shrink the set to the replicas already on the new
+                    // version: unload the failed shard and every
+                    // unattempted one (they still hold the old version;
+                    // affinity kept for a later re-grow), so the model
+                    // keeps serving — degraded in capacity, consistent in
+                    // version.
+                    if swapped.is_empty() {
+                        return Err(e);
+                    }
+                    let stale: Vec<usize> = owner_shards
+                        .iter()
+                        .copied()
+                        .filter(|s| !swapped.contains(s))
+                        .collect();
+                    {
+                        let mut p = self.placement.lock().unwrap();
+                        for &s in &stale {
+                            p.release_replica(&manifest.id, s);
+                        }
+                    }
+                    self.rebuild_routes(&manifest.id);
+                    for &s in &stale {
+                        let _ = self.shards[s].unload(&manifest.id);
+                    }
+                    return Err(anyhow::anyhow!(
+                        "swap of `{}` failed on shard {shard} mid-rollout; owner set shrunk \
+                         to the {} replica(s) already on the new version ({swapped:?}): {e}",
+                        manifest.id,
+                        swapped.len()
+                    ));
+                }
             }
-            None => {
-                let info = self.load(dir)?;
-                Ok(SwapReport {
-                    shard: info.shard,
-                    info,
-                    old_version: None,
-                    drained: 0,
-                    swap_micros: t0.elapsed().as_micros() as u64,
-                })
+        }
+        let primary = primary.expect("owner set is non-empty");
+        Ok(SwapReport {
+            info: primary.info,
+            old_version: primary.old_version,
+            shard: owner_shards[0],
+            replicas: owner_shards,
+            drained,
+            swap_micros: t0.elapsed().as_micros() as u64,
+        })
+    }
+
+    /// Unload a model from its whole owner set. Keeps the model's
+    /// per-shard affinity so a reload returns to the same shards (use
+    /// [`PoolHandle::forget_affinity`] afterwards for capacity-driven
+    /// evictions, where stickiness would pin reloads to the full shards).
+    pub fn unload(&self, id: &str) -> crate::Result<()> {
+        let owner_shards = self.replicas_of(id);
+        if owner_shards.is_empty() {
+            return Err(anyhow::anyhow!("model `{id}` is not loaded on any shard"));
+        }
+        let mut first_err = None;
+        for &shard in &owner_shards {
+            match self.shards[shard].unload(id) {
+                // Only drop the bookkeeping for replicas the engine
+                // actually freed: a failed leg keeps its placement entry
+                // (the weights are still staged there), so byte accounting
+                // stays honest and the caller can retry.
+                Ok(()) => {
+                    self.placement.lock().unwrap().release_replica(id, shard);
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
             }
+        }
+        self.rebuild_routes(id);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 
-    /// Unload a model from its shard. Keeps the model's shard affinity so
-    /// a reload returns to the same shard (use
-    /// [`PoolHandle::forget_affinity`] afterwards for capacity-driven
-    /// evictions, where stickiness would pin reloads to the full shard).
-    pub fn unload(&self, id: &str) -> crate::Result<()> {
-        let shard = self
-            .shard_of(id)
-            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not loaded on any shard"))?;
-        self.shards[shard].unload(id)?;
-        self.placement.lock().unwrap().release(id);
-        Ok(())
+    /// Unload a single replica of `id` from `shard`, shrinking the owner
+    /// set while the remaining replicas keep serving. Refuses to remove
+    /// the last replica (that is a full [`PoolHandle::unload`]). Keeps
+    /// the victim shard's affinity — a capacity eviction should follow
+    /// with [`PoolHandle::forget_affinity_on`] so reloads stop bouncing
+    /// back onto the shard that just ran out of room. Returns the
+    /// remaining replica count.
+    pub fn unload_replica(&self, id: &str, shard: usize) -> crate::Result<usize> {
+        {
+            let p = self.placement.lock().unwrap();
+            let set = p
+                .replica_set(id)
+                .ok_or_else(|| anyhow::anyhow!("model `{id}` is not loaded on any shard"))?;
+            anyhow::ensure!(
+                set.on(shard).is_some(),
+                "model `{id}` has no replica on shard {shard}"
+            );
+            anyhow::ensure!(
+                set.len() > 1,
+                "refusing to shrink `{id}` below one replica; use `unload` for a full unload"
+            );
+        }
+        // Stop routing to the victim *before* the engine drops it: the
+        // shard's FIFO queue still completes every inference enqueued
+        // ahead of the unload. (An infer thread that snapshotted the old
+        // routing table and has not yet enqueued can still lose the race
+        // and get a typed "not loaded" error — the same window a plain
+        // concurrent unload always had; callers treat it like any other
+        // shed request.)
+        self.remove_route(id, shard);
+        if let Err(e) = self.shards[shard].unload(id) {
+            // The engine still pins the weights: keep the bookkeeping (so
+            // byte accounting stays honest and the caller can retry) and
+            // restore the route from the unchanged placement.
+            self.rebuild_routes(id);
+            return Err(e);
+        }
+        let remaining = self
+            .placement
+            .lock()
+            .unwrap()
+            .release_replica(id, shard)
+            .unwrap_or(0);
+        self.rebuild_routes(id);
+        Ok(remaining)
     }
 
-    /// Drop a model's sticky shard affinity (and residency bookkeeping, if
-    /// any). A later load places it fresh by least-loaded-bytes. This is
-    /// the right call after a *capacity eviction*: keeping affinity there
-    /// would reload the victim onto the very shard that just ran out of
-    /// room while other shards sit idle.
+    /// Drop a model's sticky shard affinity on **every** shard (and
+    /// residency bookkeeping, if any). A later load places it fresh by
+    /// least-loaded-bytes. This is the right call after a full *capacity
+    /// eviction*: keeping affinity there would reload the victim onto the
+    /// very shards that just ran out of room while other shards sit idle.
     pub fn forget_affinity(&self, id: &str) {
         self.placement.lock().unwrap().forget(id);
+        self.routes.lock().unwrap().remove(id);
     }
 
-    /// Admission-controlled inference routed to the model's shard. Returns
-    /// the output and the shard that executed it; rejects with a typed
-    /// [`Overloaded`] error when the shard's queue is full.
-    pub fn infer(&self, id: &str, input: Tensor) -> crate::Result<(Tensor, usize)> {
-        let shard = self
-            .shard_of(id)
+    /// Drop a model's sticky affinity on one shard only, keeping every
+    /// other shard's stickiness — the per-replica form of
+    /// [`PoolHandle::forget_affinity`], paired with
+    /// [`PoolHandle::unload_replica`] on capacity-driven shrinks.
+    pub fn forget_affinity_on(&self, id: &str, shard: usize) {
+        self.placement.lock().unwrap().forget_affinity_on(id, shard);
+    }
+
+    /// Admission-controlled inference routed to one replica of the
+    /// model's owner set (power-of-two-choices on outstanding requests,
+    /// deterministic tie-break). Returns the output and the chosen
+    /// replica; rejects with a typed [`Overloaded`] error when the chosen
+    /// shard's queue is full.
+    pub fn infer(&self, id: &str, input: Tensor) -> crate::Result<(Tensor, Routed)> {
+        let set = self
+            .routes
+            .lock()
+            .unwrap()
+            .get(id)
+            .cloned()
             .ok_or_else(|| anyhow::anyhow!("model `{id}` is not loaded on any shard"))?;
-        let out = self.shards[shard].try_infer(id, input)?;
-        Ok((out, shard))
+        let tick = self.route_clock.fetch_add(1, Ordering::Relaxed);
+        let idx = set.pick(tick);
+        let route = &set.routes[idx];
+        route.outstanding.fetch_add(1, Ordering::AcqRel);
+        let result = self.shards[route.shard].try_infer(id, input);
+        route.outstanding.fetch_sub(1, Ordering::AcqRel);
+        Ok((
+            result?,
+            Routed { shard: route.shard, replica: idx, replicas: set.routes.len() },
+        ))
     }
 
     /// Per-shard statistics.
@@ -331,9 +718,24 @@ impl PoolHandle {
         Ok(PoolStats { shards })
     }
 
-    /// Pool utilization snapshot (per-shard executions/items/residency).
+    /// Pool utilization snapshot: per-shard executions/items/residency,
+    /// per-shard admission queue depth, and per-replica outstanding
+    /// request counts for every routable owner set.
     pub fn utilization(&self) -> crate::Result<PoolUtilization> {
-        Ok(self.stats()?.utilization())
+        let mut util = self.stats()?.utilization();
+        util.queue_depth = self.shards.iter().map(|h| h.inflight()).collect();
+        let routes = self.routes.lock().unwrap();
+        util.replicas = routes
+            .iter()
+            .flat_map(|(id, set)| {
+                set.routes.iter().map(move |r| ReplicaLoad {
+                    model: id.clone(),
+                    shard: r.shard,
+                    outstanding: r.outstanding.load(Ordering::Acquire),
+                })
+            })
+            .collect();
+        Ok(util)
     }
 
     /// Shut down every shard (optional; dropping all handles also stops
@@ -364,6 +766,7 @@ mod tests {
     fn auto_shards_resolves_positive() {
         assert!(PoolConfig::default().resolved_shards() >= 1);
         assert_eq!(PoolConfig { shards: 3, ..Default::default() }.resolved_shards(), 3);
+        assert_eq!(PoolConfig::default().replicas, 1, "default pool is unreplicated");
     }
 
     #[test]
@@ -386,13 +789,15 @@ mod tests {
         let a = testutil::tiny_model_dir("pool-route", "model-r", 16, 3);
         let info = pool.load(&a).unwrap();
         let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 4, 1.0);
-        let (out, shard) = pool.infer("model-r", x).unwrap();
-        assert_eq!(shard, info.shard);
+        let (out, routed) = pool.infer("model-r", x).unwrap();
+        assert_eq!(routed.shard, info.shard);
+        assert_eq!(routed.replica, 0);
+        assert_eq!(routed.replicas, 1);
         assert_eq!(out.shape().dims(), &[1, 4]);
         // The executing shard's counters moved; the other shard's did not.
         let stats = pool.stats().unwrap();
-        assert_eq!(stats.shards[shard].executions, 1);
-        assert_eq!(stats.shards[1 - shard].executions, 0);
+        assert_eq!(stats.shards[routed.shard].executions, 1);
+        assert_eq!(stats.shards[1 - routed.shard].executions, 0);
         assert_eq!(stats.total_executions(), 1);
         pool.shutdown();
     }
@@ -442,6 +847,53 @@ mod tests {
     }
 
     #[test]
+    fn replicated_load_lands_on_distinct_shards_and_routes() {
+        let pool = cpu_pool(4, 64);
+        let dir = testutil::tiny_model_dir("pool-rep", "rep-m", 16, 7);
+        let info = pool.load_replicated(&dir, 3).unwrap();
+        assert_eq!(info.shard, 0, "primary replica is the lowest shard id");
+        assert_eq!(pool.replicas_of("rep-m"), vec![0, 1, 2]);
+        assert_eq!(pool.replica_count("rep-m"), 3);
+        let assignments = pool.replica_assignments("rep-m");
+        assert_eq!(assignments.len(), 3);
+        for a in &assignments {
+            assert_eq!(a.bytes, info.weight_bytes, "each replica pins a full weight copy");
+        }
+        // Every replica shard actually holds a loadable copy.
+        for s in [0usize, 1, 2] {
+            assert_eq!(pool.shard_handle(s).stats().unwrap().resident_models, 1);
+        }
+        assert_eq!(pool.shard_handle(3).stats().unwrap().resident_models, 0);
+        // Inference routes to one of the replicas and reports the pick.
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 9, 1.0);
+        let (out, routed) = pool.infer("rep-m", x).unwrap();
+        assert!(routed.shard <= 2);
+        assert_eq!(routed.replicas, 3);
+        assert_eq!(out.shape().dims(), &[1, 4]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn unload_replica_shrinks_owner_set_and_keeps_serving() {
+        let pool = cpu_pool(3, 64);
+        let dir = testutil::tiny_model_dir("pool-shrink", "shrink-m", 16, 5);
+        pool.load_replicated(&dir, 3).unwrap();
+        assert_eq!(pool.unload_replica("shrink-m", 1).unwrap(), 2);
+        assert_eq!(pool.replicas_of("shrink-m"), vec![0, 2]);
+        // The shrunk shard no longer holds the model; survivors serve.
+        assert_eq!(pool.shard_handle(1).stats().unwrap().resident_models, 0);
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 6, 1.0);
+        let (_, routed) = pool.infer("shrink-m", x).unwrap();
+        assert!(routed.shard == 0 || routed.shard == 2);
+        assert_eq!(routed.replicas, 2);
+        // Shrinking below one replica is refused.
+        pool.unload_replica("shrink-m", 0).unwrap();
+        let e = pool.unload_replica("shrink-m", 2).unwrap_err().to_string();
+        assert!(e.contains("below one replica"), "{e}");
+        pool.shutdown();
+    }
+
+    #[test]
     fn swap_stays_on_owning_shard_and_updates_placement_bytes() {
         let pool = cpu_pool(2, 64);
         let v1 = testutil::tiny_model_dir("pool-swap-v1", "swap-p", 8, 1);
@@ -454,6 +906,7 @@ mod tests {
         let v2 = testutil::tiny_model_dir("pool-swap-v2", "swap-p", 64, 3);
         let report = pool.swap(&v2).unwrap();
         assert_eq!(report.shard, i1.shard, "swap must stay on the owning shard");
+        assert_eq!(report.replicas, vec![i1.shard]);
         assert_eq!(report.old_version, Some(1));
         assert!(report.info.weight_bytes > i1.weight_bytes);
         assert_eq!(pool.shard_of("swap-p"), Some(i1.shard));
@@ -466,11 +919,28 @@ mod tests {
     }
 
     #[test]
+    fn swap_fans_out_across_every_replica() {
+        let pool = cpu_pool(3, 64);
+        let v1 = testutil::tiny_model_dir("pool-fan-v1", "fan-m", 8, 1);
+        pool.load_replicated(&v1, 3).unwrap();
+        let v2 = testutil::tiny_model_dir("pool-fan-v2", "fan-m", 32, 2);
+        let report = pool.swap(&v2).unwrap();
+        assert_eq!(report.replicas, vec![0, 1, 2], "rollout covers the whole owner set");
+        assert_eq!(report.old_version, Some(1));
+        // Every replica now pins the fatter v2 footprint.
+        for a in pool.replica_assignments("fan-m") {
+            assert_eq!(a.bytes, report.info.weight_bytes);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
     fn swap_of_unplaced_model_is_a_placed_load() {
         let pool = cpu_pool(2, 64);
         let dir = testutil::tiny_model_dir("pool-swap-fresh", "fresh-p", 8, 5);
         let report = pool.swap(&dir).unwrap();
         assert_eq!(report.old_version, None);
+        assert_eq!(report.replicas, vec![report.shard]);
         assert_eq!(pool.shard_of("fresh-p"), Some(report.shard));
         pool.shutdown();
     }
@@ -480,6 +950,27 @@ mod tests {
         let e = Overloaded { model: "m".into(), shard: 2, queue_cap: 8 };
         let text = e.to_string();
         assert!(text.contains("overloaded") && text.contains("shard 2"), "{text}");
+    }
+
+    #[test]
+    fn pick_policy_prefers_the_less_loaded_replica() {
+        // Pure routing-table test: with replica 0 carrying outstanding
+        // work, power-of-two-choices must send the next batch to replica 1
+        // whenever both are candidates (n = 2 ⇒ always).
+        let set = ReplicaRoutes {
+            routes: vec![
+                Route { shard: 0, outstanding: Arc::new(AtomicUsize::new(5)) },
+                Route { shard: 1, outstanding: Arc::new(AtomicUsize::new(0)) },
+            ],
+        };
+        for tick in 0..64 {
+            assert_eq!(set.pick(tick), 1, "tick {tick} must pick the idle replica");
+        }
+        // Ties break deterministically toward the lower shard id.
+        set.routes[1].outstanding.store(5, Ordering::Release);
+        for tick in 0..64 {
+            assert_eq!(set.pick(tick), 0, "tick {tick}: tie must break to shard 0");
+        }
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!                                   verify (per-entry sha256 + manifest hash)
 //!                                               │ decompress (.dlkc → .dlkw)
 //!                                               ▼
-//!                                   hot-swap into the EnginePool
-//!                                   (drain old version → atomic replace)
+//!                                   hot-swap into the EnginePool, fanned
+//!                                   across the model's whole owner set
+//!                                   (per replica: drain old version →
+//!                                   atomic replace, ascending shard order)
 //! ```
 //!
 //! [`publish_model`] is the trainer side; [`pull`] is the device side up
@@ -272,18 +274,22 @@ pub fn pull(
 #[derive(Clone, Debug)]
 pub struct Delivery {
     pub pulled: PulledModel,
-    /// The pool-level swap (drain + atomic replace; a first delivery is a
-    /// placed load with `old_version: None`).
+    /// The pool-level swap, fanned across the model's whole owner set
+    /// (per replica: drain + atomic replace; `SwapReport::replicas` lists
+    /// the rollout order). A first delivery is a placed load with
+    /// `old_version: None`.
     pub swap: SwapReport,
-    /// Full cold-start-to-first-inference breakdown (E11).
+    /// Full cold-start-to-first-inference breakdown (E11). For a
+    /// replicated model, `load` covers staging every replica.
     pub timing: DeliveryTiming,
 }
 
 /// The full device-side loop: [`pull`] a version, then hot-swap it into
-/// `pool` with zero downtime. When `probe` is given (a `[n, ...]` input
-/// batch), one inference runs on the new version and the
-/// `first_infer` leg is timed — completing the E11
-/// cold-start-to-first-inference measurement.
+/// `pool` with zero downtime — across every replica of the model's owner
+/// set (see `PoolHandle::swap` for the mixed-version rollout ordering
+/// contract). When `probe` is given (a `[n, ...]` input batch), one
+/// inference runs on the new version and the `first_infer` leg is timed —
+/// completing the E11 cold-start-to-first-inference measurement.
 pub fn deliver(
     registry: &Registry,
     id: &str,

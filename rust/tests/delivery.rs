@@ -287,6 +287,169 @@ fn coordinator_update_fails_zero_requests_under_load() {
 }
 
 #[test]
+fn replica_wide_hot_swap_fails_zero_requests_under_load() {
+    // k = 3 replicas of one hot model under concurrent client load; a
+    // mid-workload update must swap every replica and fail no request.
+    let root = testutil::tempdir("delivery-rep-swap");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("rep-m", 16), 110, WirePlan::Raw, "v1")
+        .unwrap();
+
+    let pool = cpu_pool(3, 1024);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 1024,
+            },
+        },
+    );
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "rep-m", None, &mut net, &dest).unwrap();
+    coord.serve_model_replicated(&v1.dir, 3).unwrap();
+    assert_eq!(pool.replicas_of("rep-m"), vec![0, 1, 2]);
+    let coord = std::sync::Arc::new(coord);
+
+    let completed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 50;
+
+    let report = std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let coord = coord.clone();
+            let completed = &completed;
+            let failed = &failed;
+            scope.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let x = Tensor::randn(
+                        Shape::new(&[1usize, 8, 8]),
+                        (c * PER_CLIENT + i) as u64,
+                        1.0,
+                    );
+                    match coord.infer("rep-m", x) {
+                        Ok(r) => {
+                            assert_eq!(r.output.shape().dims(), &[4]);
+                            assert!(r.shard <= 2 && r.replica < 3);
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+
+        // Mid-workload: publish v2, pull it, hot-swap the whole owner set.
+        std::thread::sleep(Duration::from_millis(20));
+        store::publish_synthetic(&reg, testutil::tiny_cnn("rep-m", 16), 120, WirePlan::Raw, "v2")
+            .unwrap();
+        let mut net = SimulatedNetwork::wifi();
+        let v2 = deploy::pull(&reg, "rep-m", None, &mut net, &dest).unwrap();
+        coord.update_model("rep-m", &v2.dir).unwrap()
+    });
+
+    assert_eq!(
+        failed.load(Ordering::Relaxed),
+        0,
+        "a replica-wide hot-swap must fail zero in-flight requests"
+    );
+    assert_eq!(completed.load(Ordering::Relaxed), (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(report.old_version, Some(1));
+    assert_eq!(report.info.version, 2);
+    assert_eq!(report.replicas, vec![0, 1, 2], "rollout covered every replica");
+    assert_eq!(pool.replicas_of("rep-m"), vec![0, 1, 2], "owner set survived the swap");
+
+    // After the update returns, every replica serves v2: concurrent
+    // probes (landing on different replicas) all match the v2 reference.
+    let x_item = Tensor::randn(Shape::new(&[1usize, 8, 8]), 77_777, 1.0);
+    let x_batch = Tensor::new(Shape::nchw(1, 1, 8, 8), x_item.data().to_vec()).unwrap();
+    let ref2 = reference_output(&dest.join("rep-m").join("v2"), "rep-m", &x_batch);
+    std::thread::scope(|scope| {
+        for _ in 0..12 {
+            let coord = coord.clone();
+            let x = x_item.clone();
+            let ref2 = &ref2;
+            scope.spawn(move || {
+                let r = coord.infer("rep-m", x).unwrap();
+                assert_eq!(r.output.data(), ref2.data(), "post-swap replica served v1");
+            });
+        }
+    });
+    pool.shutdown();
+}
+
+#[test]
+fn replica_rollout_swaps_in_ascending_shard_order() {
+    // The documented mixed-version window: a replica-wide swap walks the
+    // owner set in ascending shard order with a per-shard FIFO drain, so
+    // while a higher shard still drains old-version work, the lower shard
+    // already answers with the new version — and no request ever fails.
+    let root = testutil::tempdir("delivery-rollout");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("roll-m", 16), 130, WirePlan::Raw, "v1")
+        .unwrap();
+    store::publish_synthetic(&reg, testutil::tiny_cnn("roll-m", 16), 140, WirePlan::Raw, "v2")
+        .unwrap();
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "roll-m", Some(1), &mut net, &dest).unwrap();
+    let v2 = deploy::pull(&reg, "roll-m", Some(2), &mut net, &dest).unwrap();
+
+    let x = probe();
+    let ref1 = reference_output(&v1.dir, "roll-m", &x);
+    let ref2 = reference_output(&v2.dir, "roll-m", &x);
+    assert_ne!(ref1.data(), ref2.data(), "versions must be distinguishable");
+
+    let pool = cpu_pool(2, 64);
+    pool.load_replicated(&v1.dir, 2).unwrap();
+    assert_eq!(pool.replicas_of("roll-m"), vec![0, 1]);
+
+    // Hold shard 1 busy and queue one inference behind the stall, so the
+    // shard-1 leg of the rollout must wait: queue = [stall][infer][swap].
+    pool.shard_handle(1).debug_stall(Duration::from_millis(800)).unwrap();
+    let ticket1 = pool.shard_handle(1).try_infer_async("roll-m", x.clone()).unwrap();
+
+    let pool_for_swap = pool.clone();
+    let v2_dir = v2.dir.clone();
+    let swapper = std::thread::spawn(move || pool_for_swap.swap(&v2_dir));
+
+    // Mixed-version window: while shard 1 still drains v1 work, shard 0
+    // must start answering with v2 (its swap ran first, unobstructed).
+    let mut saw_new_on_shard0 = false;
+    for _ in 0..200 {
+        let out = pool.shard_handle(0).try_infer("roll-m", x.clone()).unwrap();
+        if out.data() == ref2.data() {
+            saw_new_on_shard0 = true;
+            break;
+        }
+        assert_eq!(out.data(), ref1.data(), "shard 0 must serve v1 or v2, nothing else");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(saw_new_on_shard0, "shard 0 never cut over while shard 1 was stalled");
+
+    // The drained request on shard 1 completes on the OLD version (FIFO:
+    // it was enqueued before the shard-1 swap leg), and nothing failed.
+    let out1 = ticket1.wait().unwrap();
+    assert_eq!(out1.data(), ref1.data(), "in-flight work drains on the old version");
+
+    let report = swapper.join().unwrap().unwrap();
+    assert_eq!(report.replicas, vec![0, 1], "ascending rollout order");
+    assert_eq!(report.old_version, Some(1));
+
+    // Rollout complete: both replicas answer with v2.
+    for s in 0..2usize {
+        let out = pool.shard_handle(s).try_infer("roll-m", x.clone()).unwrap();
+        assert_eq!(out.data(), ref2.data(), "shard {s} must serve v2 after the rollout");
+    }
+    pool.shutdown();
+}
+
+#[test]
 fn update_rejects_versions_that_cannot_serve_the_running_batch_size() {
     // The batcher's max batch is baked in at serve time; an update to a
     // version whose batch ladder is smaller must be rejected up front

@@ -1,7 +1,7 @@
-//! Integration tests for the sharded serving path: engine pool, placement,
-//! admission control, and the coordinator on top — all on synthetic
-//! CPU-backend model fixtures, so they run in any environment (no AOT
-//! artifacts needed).
+//! Integration tests for the sharded serving path: engine pool, placement
+//! (owner sets + replication), admission control, and the coordinator on
+//! top — all on synthetic CPU-backend model fixtures, so they run in any
+//! environment (no AOT artifacts needed).
 
 use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use deeplearningkit::runtime::{BackendKind, EnginePool, Overloaded, PoolConfig, PoolHandle};
@@ -134,6 +134,114 @@ fn retire_and_reserve_returns_to_affinity_shard() {
     assert_eq!(again.shard, ia.shard);
     let r = coord.infer("ret-a", input(2)).unwrap();
     assert_eq!(r.shard, ia.shard);
+    pool.shutdown();
+}
+
+#[test]
+fn replicated_model_lands_on_k_distinct_shards() {
+    let pool = cpu_pool(4, 256);
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+        },
+    );
+    let dir = testutil::tiny_model_dir("shard-rep", "rep-m", 16, 11);
+    let info = coord.serve_model_replicated(&dir, 3).unwrap();
+    // k replicas on k distinct shards; the primary is the lowest id.
+    assert_eq!(pool.replicas_of("rep-m"), vec![0, 1, 2]);
+    assert_eq!(info.shard, 0);
+    // Each replica shard really holds a copy; the spare shard does not.
+    for s in 0..3usize {
+        assert_eq!(pool.shard_handle(s).stats().unwrap().resident_models, 1, "shard {s}");
+    }
+    assert_eq!(pool.shard_handle(3).stats().unwrap().resident_models, 0);
+    // Requests route to a replica shard and surface the pick.
+    for i in 0..8u64 {
+        let r = coord.infer("rep-m", input(i)).unwrap();
+        assert!(r.shard <= 2, "routed off the owner set: shard {}", r.shard);
+        assert!(r.replica < 3);
+        assert_eq!(r.output.shape().dims(), &[4]);
+    }
+    // Per-replica observability: one utilization row per replica.
+    let util = pool.utilization().unwrap();
+    let rows: Vec<_> = util.replicas.iter().filter(|r| r.model == "rep-m").collect();
+    assert_eq!(rows.len(), 3);
+    assert_eq!(util.queue_depth.len(), 4);
+    pool.shutdown();
+}
+
+#[test]
+fn pick_policy_balances_a_hot_model_across_replicas() {
+    // One hot model, two replicas, concurrent closed-loop clients driving
+    // the pool directly: power-of-two-choices on outstanding requests
+    // must keep both replicas busy instead of pinning one shard.
+    let pool = cpu_pool(2, 256);
+    let dir = testutil::tiny_model_dir("shard-p2c", "p2c-m", 16, 13);
+    pool.load_replicated(&dir, 2).unwrap();
+    assert_eq!(pool.replicas_of("p2c-m"), vec![0, 1]);
+
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 32;
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let pool = pool.clone();
+            scope.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let x = Tensor::randn(
+                        Shape::nchw(1, 1, 8, 8),
+                        (c * PER_CLIENT + i) as u64,
+                        1.0,
+                    );
+                    let (out, routed) = pool.infer("p2c-m", x).unwrap();
+                    assert_eq!(out.shape().dims(), &[1, 4]);
+                    assert_eq!(routed.replicas, 2);
+                }
+            });
+        }
+    });
+    let stats = pool.stats().unwrap();
+    let total: u64 = stats.shards.iter().map(|s| s.executions).sum();
+    assert_eq!(total, (CLIENTS * PER_CLIENT) as u64);
+    for s in 0..2usize {
+        let share = stats.shards[s].executions as f64 / total as f64;
+        assert!(
+            share >= 0.15,
+            "replica on shard {s} starved: {} of {total} executions",
+            stats.shards[s].executions
+        );
+    }
+    // Outstanding counters drained back to zero once the load stopped.
+    let util = pool.utilization().unwrap();
+    for r in util.replicas.iter().filter(|r| r.model == "p2c-m") {
+        assert_eq!(r.outstanding, 0, "shard {} counter must drain", r.shard);
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn replica_set_shrinks_under_capacity_pressure() {
+    use deeplearningkit::cache::{ModelCache, PolicyKind};
+    // Budget fits one tiny model per shard. A 2-replica hot model fills
+    // both shards; a newcomer shrinks the hot model's set on its landing
+    // shard instead of evicting the model, and the survivor keeps serving.
+    let pool = cpu_pool(2, 64);
+    let mut cache = ModelCache::over_pool(pool.clone(), 6_000, PolicyKind::Lru);
+    cache.register_replicated("hot", testutil::tiny_model_dir("shard-cap", "hot", 16, 1), 2);
+    cache.register("cold", testutil::tiny_model_dir("shard-cap", "cold", 16, 2));
+    assert_eq!(cache.ensure("hot").unwrap().replica_shards, vec![0, 1]);
+
+    let access = cache.ensure("cold").unwrap();
+    assert_eq!(access.shrunk, vec![("hot".to_string(), access.shard)]);
+    assert!(access.evicted.is_empty(), "hot must shrink, not evict");
+    assert_eq!(pool.replica_count("hot"), 1);
+    assert!(cache.is_resident("hot"));
+    let (out, _) = cache.infer("hot", Tensor::randn(Shape::nchw(1, 1, 8, 8), 5, 1.0)).unwrap();
+    assert_eq!(out.shape().dims(), &[1, 4]);
     pool.shutdown();
 }
 
