@@ -1,0 +1,142 @@
+//! E14 — quantized execution, measured: f32 vs f16 vs int8 vs
+//! cost-model-auto weight residency on the NIN-style tower from E12.
+//!
+//! The paper's roadmap calls out lower-precision (16/8-bit) resident
+//! weights as the lever for fitting more and larger models on device;
+//! this figure measures both sides of that trade on the compiled-plan
+//! path: per-forward latency and resident weight bytes per precision
+//! policy, with every variant held to the same tolerance-based
+//! oracle-parity contract the test suite enforces
+//! (`testutil::assert_within_tolerance`).
+
+use deeplearningkit::bench::{bench_header, Bench};
+use deeplearningkit::metrics::{fmt_bytes, fmt_us, Table};
+use deeplearningkit::model::{Architecture, LayerKind};
+use deeplearningkit::nn::{CpuExecutor, PlanOptions, PlanPrecision, PlannedExecutor};
+use deeplearningkit::tensor::{DType, Shape, Tensor};
+use deeplearningkit::testutil;
+
+/// The E12 NIN-style mlpconv tower: 5x5 stem convs, 1x1 mlpconv layers,
+/// a 3x3 block and a global-average-pool head — enough weighted-layer
+/// diversity for per-layer precision picks to be visible.
+fn nin_style() -> Architecture {
+    let mut a = Architecture::new("nin-style", &[3, 32, 32]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 48, k: 5, stride: 1, pad: 2 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("cccp1", LayerKind::Conv2d { out_ch: 40, k: 1, stride: 1, pad: 0 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("cccp2", LayerKind::Conv2d { out_ch: 24, k: 1, stride: 1, pad: 0 });
+    a.push("relu3", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("conv2", LayerKind::Conv2d { out_ch: 48, k: 5, stride: 1, pad: 2 });
+    a.push("relu4", LayerKind::Relu);
+    a.push("cccp3", LayerKind::Conv2d { out_ch: 48, k: 1, stride: 1, pad: 0 });
+    a.push("relu5", LayerKind::Relu);
+    a.push("pool2", LayerKind::AvgPool2d { k: 3, stride: 2, pad: 0 });
+    a.push("conv3", LayerKind::Conv2d { out_ch: 48, k: 3, stride: 1, pad: 1 });
+    a.push("relu6", LayerKind::Relu);
+    a.push("cccp4", LayerKind::Conv2d { out_ch: 10, k: 1, stride: 1, pad: 0 });
+    a.push("relu7", LayerKind::Relu);
+    a.push("gap", LayerKind::GlobalAvgPool);
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// Coarsest resident dtype in a plan — it picks the parity band.
+fn coarsest(precisions: &[(std::sync::Arc<str>, DType)]) -> DType {
+    if precisions.iter().any(|(_, d)| *d == DType::I8) {
+        DType::I8
+    } else if precisions.iter().any(|(_, d)| *d == DType::F16) {
+        DType::F16
+    } else {
+        DType::F32
+    }
+}
+
+fn main() {
+    bench_header(
+        "E14 (quantized execution)",
+        "f32/f16/int8/auto resident weights on the NIN-style tower, batch 1",
+    );
+    let arch = nin_style();
+    let x = Tensor::randn(Shape::nchw(1, 3, 32, 32), 3, 1.0);
+    let oracle = CpuExecutor::with_random_weights(arch.clone(), 42).unwrap();
+    let expect = oracle.forward(&x).unwrap();
+    let b = Bench::quick();
+
+    let mut table = Table::new(
+        "NIN-style batch-1 forward by weight-residency precision",
+        &["precision", "latency", "resident weights", "vs f32 bytes"],
+    );
+    let mut f32_bytes = 0usize;
+    let mut i8_bytes = usize::MAX;
+    let mut auto_bytes = usize::MAX;
+    let mut auto_precisions = Vec::new();
+    for precision in
+        [PlanPrecision::F32, PlanPrecision::F16, PlanPrecision::Int8, PlanPrecision::Auto]
+    {
+        let planned = PlannedExecutor::with_random_weights(
+            arch.clone(),
+            42,
+            PlanOptions::with_precision(precision),
+        )
+        .unwrap();
+        planned.forward(&x).unwrap(); // compile + quantize + build arena once
+        let plan = planned.cached_plan(1).unwrap();
+        let bytes = plan.resident_weight_bytes();
+
+        // Every variant is held to the parity contract before it is timed
+        // (same helper the tier-1 parity matrix uses).
+        let got = planned.forward(&x).unwrap();
+        testutil::assert_within_tolerance(
+            got.data(),
+            expect.data(),
+            coarsest(&plan.weight_precisions()),
+        );
+
+        let m = b.run(|| planned.forward(&x).unwrap());
+        table.row(&[
+            precision.name().to_string(),
+            fmt_us(m.mean_us),
+            fmt_bytes(bytes as u64),
+            if f32_bytes == 0 {
+                "1.00x".to_string()
+            } else {
+                format!("{:.2}x", bytes as f64 / f32_bytes as f64)
+            },
+        ]);
+        match precision {
+            PlanPrecision::F32 => f32_bytes = bytes,
+            PlanPrecision::Int8 => i8_bytes = bytes,
+            PlanPrecision::Auto => {
+                auto_bytes = bytes;
+                auto_precisions = plan.weight_precisions();
+            }
+            PlanPrecision::F16 => {}
+        }
+    }
+    table.print();
+
+    println!("\nauto plan per-layer residency (cost model, default accuracy budget):");
+    for (name, d) in &auto_precisions {
+        println!("  {name:<8} -> {}", d.name());
+    }
+
+    // Shape assertions, coarse on purpose (CI smoke): quantization must
+    // actually shrink the resident footprint — int8 to at most half of
+    // f32 (1 byte + scale vs 4 bytes per weight; f32 biases stay) — and
+    // the auto plan must never exceed the pure-f32 footprint.
+    assert!(
+        i8_bytes * 2 <= f32_bytes,
+        "int8 resident bytes {i8_bytes} must be <= 0.5x of f32 {f32_bytes}"
+    );
+    assert!(
+        auto_bytes <= f32_bytes,
+        "auto residency {auto_bytes} must never exceed the pure-f32 footprint {f32_bytes}"
+    );
+    println!(
+        "\nE14 shape holds: int8 residency {} <= 0.5x f32 {}, parity inside the tolerance contract",
+        fmt_bytes(i8_bytes as u64),
+        fmt_bytes(f32_bytes as u64)
+    );
+}

@@ -32,4 +32,6 @@ pub use pipeline::{
     StagePlan, StageSize,
 };
 pub use prune::{magnitude_prune, sparse_decode, sparse_encode, SparseTensor};
-pub use quantize::{kmeans_quantize, QuantizedTensor};
+pub use quantize::{
+    kmeans_quantize, symmetric_i8_scale, QuantizedTensor, ResidentF16, ResidentI8,
+};

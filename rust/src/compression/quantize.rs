@@ -36,6 +36,162 @@ impl QuantizedTensor {
     }
 }
 
+/// Per-tensor scale for symmetric i8 quantization: `max|w| / 127`, with a
+/// neutral 1.0 for all-zero tensors (nothing to scale) and for tensors
+/// whose magnitude is not finite (codes then saturate at ±127 instead of
+/// propagating inf/NaN into the scale). Never zero, never NaN.
+pub fn symmetric_i8_scale(data: &[f32]) -> f32 {
+    let max_abs = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        1.0
+    } else {
+        max_abs / 127.0
+    }
+}
+
+/// A weight tensor quantized to symmetric i8 for *execution* residency:
+/// the codes plus the scale preserved from quantization time, so kernels
+/// can run integer-coded inner loops and fold the scale into their
+/// epilogue. Unlike [`QuantizedTensor`] (the k-means wire/storage form),
+/// this is the form the execution plan keeps resident in memory.
+///
+/// Exact zeros map to code 0 (symmetric, zero-point-free), so the GEMM
+/// kernels' pruned-weight fast path survives quantization.
+#[derive(Clone, Debug)]
+pub struct ResidentI8 {
+    shape: Vec<usize>,
+    codes: Vec<i8>,
+    scale: f32,
+}
+
+impl ResidentI8 {
+    /// Quantize a dense tensor. The scale comes from
+    /// [`symmetric_i8_scale`]; codes are round-to-nearest, clamped to
+    /// ±127.
+    pub fn quantize(t: &Tensor) -> ResidentI8 {
+        let scale = symmetric_i8_scale(t.data());
+        let codes = t
+            .data()
+            .iter()
+            .map(|&v| {
+                let c = (v / scale).round();
+                if c.is_nan() {
+                    0
+                } else {
+                    c.clamp(-127.0, 127.0) as i8
+                }
+            })
+            .collect();
+        ResidentI8 { shape: t.shape().dims().to_vec(), codes, scale }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn codes(&self) -> &[i8] {
+        &self.codes
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    pub fn numel(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Resident size: one byte per code plus the f32 scale.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 4
+    }
+
+    /// Decode back to a dense f32 tensor (`code * scale`).
+    pub fn dequantize(&self) -> crate::Result<Tensor> {
+        let data: Vec<f32> = self.codes.iter().map(|&c| c as f32 * self.scale).collect();
+        Tensor::new(&self.shape[..], data)
+    }
+
+    /// Relative RMS quantization error against the reference data:
+    /// `sqrt(Σ(w - ŵ)² / Σw²)`, 0.0 for all-zero references. This is the
+    /// measure the planner's precision picker holds to the accuracy
+    /// budget.
+    pub fn relative_rms_error(&self, reference: &[f32]) -> f64 {
+        assert_eq!(reference.len(), self.codes.len(), "reference length mismatch");
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&c, &w) in self.codes.iter().zip(reference) {
+            let back = c as f32 * self.scale;
+            num += ((w - back) as f64).powi(2);
+            den += (w as f64).powi(2);
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            (num / den).sqrt()
+        }
+    }
+}
+
+/// A weight tensor converted to IEEE binary16 for execution residency:
+/// raw bit patterns, decoded through the process-wide lookup table
+/// ([`crate::tensor::f16_lut`]) in kernel inner loops. Exact zeros stay
+/// exact (f16 represents ±0.0), preserving the pruned-weight fast path.
+#[derive(Clone, Debug)]
+pub struct ResidentF16 {
+    shape: Vec<usize>,
+    bits: Vec<u16>,
+}
+
+impl ResidentF16 {
+    /// Convert a dense tensor (round-to-nearest-even per element).
+    pub fn quantize(t: &Tensor) -> ResidentF16 {
+        let bits = t.data().iter().map(|&v| crate::tensor::f32_to_f16_bits(v)).collect();
+        ResidentF16 { shape: t.shape().dims().to_vec(), bits }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn bits(&self) -> &[u16] {
+        &self.bits
+    }
+
+    pub fn numel(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Resident size: two bytes per element.
+    pub fn bytes(&self) -> usize {
+        self.bits.len() * 2
+    }
+
+    /// Decode back to a dense f32 tensor.
+    pub fn dequantize(&self) -> crate::Result<Tensor> {
+        let data: Vec<f32> =
+            self.bits.iter().map(|&b| crate::tensor::f16_bits_to_f32(b)).collect();
+        Tensor::new(&self.shape[..], data)
+    }
+
+    /// Relative RMS conversion error (see [`ResidentI8::relative_rms_error`]).
+    pub fn relative_rms_error(&self, reference: &[f32]) -> f64 {
+        assert_eq!(reference.len(), self.bits.len(), "reference length mismatch");
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&b, &w) in self.bits.iter().zip(reference) {
+            let back = crate::tensor::f16_bits_to_f32(b);
+            num += ((w - back) as f64).powi(2);
+            den += (w as f64).powi(2);
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            (num / den).sqrt()
+        }
+    }
+}
+
 /// Max elements used to *fit* the codebook; larger tensors are subsampled
 /// (assignment still covers every element). Keeps AlexNet-scale tensors
 /// (fc6: 37.7M weights) tractable with negligible codebook quality loss.
@@ -200,5 +356,144 @@ mod tests {
         let q = kmeans_quantize(&t, 3, false);
         let back = q.decode().unwrap();
         assert_eq!(back.data(), t.data());
+    }
+
+    // ---- scale-computation edge cases (resident quantization) -------------
+    //
+    // The execution plan bakes these scales into resident kernels, so a
+    // NaN or zero scale would poison every forward pass. Each case below
+    // must produce a finite, positive scale and a lossless-or-bounded
+    // round trip — no panics.
+
+    fn assert_sane_scale_and_roundtrip(t: &Tensor) {
+        let scale = symmetric_i8_scale(t.data());
+        assert!(scale.is_finite() && scale > 0.0, "scale={scale}");
+        let q = ResidentI8::quantize(t);
+        assert_eq!(q.scale(), scale);
+        let back = q.dequantize().unwrap();
+        assert_eq!(back.shape(), t.shape());
+        assert!(back.data().iter().all(|v| v.is_finite()), "NaN/inf leaked into decode");
+        // Error stays within half a quantization step per element.
+        for (&a, &b) in back.data().iter().zip(t.data()) {
+            if b.is_finite() {
+                assert!((a - b).abs() <= 0.5 * scale + 1e-12, "a={a} b={b} scale={scale}");
+            }
+        }
+        assert!(!q.relative_rms_error(t.data()).is_nan());
+    }
+
+    #[test]
+    fn i8_scale_all_zero_tensor() {
+        let t = Tensor::zeros(&[33][..]);
+        assert_eq!(symmetric_i8_scale(t.data()), 1.0);
+        assert_sane_scale_and_roundtrip(&t);
+        let q = ResidentI8::quantize(&t);
+        assert!(q.codes().iter().all(|&c| c == 0));
+        assert_eq!(q.relative_rms_error(t.data()), 0.0);
+    }
+
+    #[test]
+    fn i8_scale_single_value_tensors() {
+        // One element, and many elements of one repeated value: the
+        // single magnitude becomes the clip point, losslessly (code ±127).
+        for v in [5.0f32, -0.375, 1e-8, 3e38] {
+            let one = Tensor::filled(&[1][..], v);
+            assert_sane_scale_and_roundtrip(&one);
+            let many = Tensor::filled(&[17][..], v);
+            assert_sane_scale_and_roundtrip(&many);
+            let q = ResidentI8::quantize(&many);
+            let back = q.dequantize().unwrap();
+            for &b in back.data() {
+                assert!((b - v).abs() <= (v.abs() / 127.0) * 0.51, "v={v} back={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_scale_extreme_dynamic_range() {
+        // 38 orders of magnitude: small values collapse to code 0, the
+        // scale stays finite, nothing NaNs.
+        let t = Tensor::new(&[6][..], vec![1e-30, -1e-30, 1e30, -1e30, 0.0, 1.0]).unwrap();
+        assert_sane_scale_and_roundtrip(&t);
+        let q = ResidentI8::quantize(&t);
+        assert_eq!(q.scale(), 1e30 / 127.0);
+        assert_eq!(q.codes()[0], 0, "tiny value collapses to zero code");
+        assert_eq!(q.codes()[2], 127);
+        assert_eq!(q.codes()[3], -127);
+    }
+
+    #[test]
+    fn i8_scale_negative_only_range() {
+        let t = Tensor::new(&[4][..], vec![-0.5, -1.0, -2.0, -4.0]).unwrap();
+        assert_sane_scale_and_roundtrip(&t);
+        let q = ResidentI8::quantize(&t);
+        assert_eq!(q.scale(), 4.0 / 127.0);
+        assert!(q.codes().iter().all(|&c| c < 0));
+        assert_eq!(q.codes()[3], -127);
+    }
+
+    #[test]
+    fn i8_scale_nonfinite_magnitudes_fall_back() {
+        // Not a supported input, but the scale must still be sane and the
+        // codes must saturate instead of going NaN.
+        let t = Tensor::new(&[3][..], vec![f32::INFINITY, -1.0, 2.0]).unwrap();
+        assert_eq!(symmetric_i8_scale(t.data()), 1.0);
+        let q = ResidentI8::quantize(&t);
+        assert_eq!(q.codes()[0], 127, "inf saturates");
+        assert!(q.dequantize().unwrap().data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn i8_preserves_exact_zeros() {
+        let mut t = Tensor::randn(&[256][..], 31, 1.0);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            if i % 4 == 0 {
+                *v = 0.0;
+            }
+        }
+        let q = ResidentI8::quantize(&t);
+        for (i, (&c, &v)) in q.codes().iter().zip(t.data()).enumerate() {
+            if v == 0.0 {
+                assert_eq!(c, 0, "index {i}: pruned zero must stay code 0");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_edge_ranges_do_not_panic() {
+        // The same edge inputs through the k-means path: all-zero,
+        // single-value, extreme range, negative-only.
+        for data in [
+            vec![0.0f32; 50],
+            vec![7.5f32; 50],
+            vec![1e-30, 1e30, -1e30, 0.0, 2.0],
+            vec![-0.5, -1.0, -2.0, -4.0, -8.0],
+        ] {
+            let t = Tensor::new(&[data.len()][..], data).unwrap();
+            for bits in [1u32, 4] {
+                let q = kmeans_quantize(&t, bits, true);
+                assert!(q.codebook.iter().all(|c| c.is_finite()), "{:?}", q.codebook);
+                let back = q.decode().unwrap();
+                assert!(back.data().iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn resident_f16_round_trip_and_bytes() {
+        let t = Tensor::randn(&[333][..], 41, 2.0);
+        let h = ResidentF16::quantize(&t);
+        assert_eq!(h.bytes(), 333 * 2);
+        assert_eq!(h.numel(), 333);
+        let back = h.dequantize().unwrap();
+        for (&a, &b) in back.data().iter().zip(t.data()) {
+            assert!((a - b).abs() <= b.abs() / 1024.0 + 1e-7, "a={a} b={b}");
+        }
+        // Conversion error well inside the f16 half-ulp bound.
+        assert!(h.relative_rms_error(t.data()) <= 1.0 / 1024.0);
+        // i8 is coarser than f16 on the same data.
+        let q = ResidentI8::quantize(&t);
+        assert!(q.relative_rms_error(t.data()) >= h.relative_rms_error(t.data()));
+        assert!(q.bytes() < h.bytes());
     }
 }

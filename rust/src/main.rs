@@ -113,6 +113,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("replicas", "replicas per served model (hot models on k shards; capped at the shard count)", Some("1"))
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
+        .flag("precision", "weight-residency precision for compiled plans: f32, f16, int8 or auto", Some("f32"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
         .switch("auto-update", "poll the registry and hot-swap newly published versions")
         .flag("update-poll-ms", "auto-update poll interval (ms)", Some("200"))
@@ -141,17 +142,20 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let replicas = a.get_usize("replicas", 1)?.max(1);
     let queue_cap = a.get_usize("queue-cap", 1024)?.max(1);
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
+    let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
 
     let pool = runtime::EnginePool::start(runtime::PoolConfig {
         shards,
         queue_cap,
         replicas,
         strategy,
+        precision,
         ..Default::default()
     })?;
     println!(
-        "engine pool: {} shard(s), queue cap {queue_cap}, {replicas} replica(s) per model",
-        pool.shard_count()
+        "engine pool: {} shard(s), queue cap {queue_cap}, {replicas} replica(s) per model, {} weights",
+        pool.shard_count(),
+        precision.name()
     );
     let mut coord = coordinator::Coordinator::over_pool(
         pool.clone(),
@@ -330,11 +334,13 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
         .flag("model", "model id", Some("lenet-mnist"))
         .flag("count", "number of inputs", Some("8"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
+        .flag("precision", "weight-residency precision: f32, f16, int8 or auto", Some("f32"))
         .switch("cpu", "use the rust CPU reference backend instead of PJRT");
     let a = cmd.parse(argv)?;
     let model_id = a.get_or("model", "lenet-mnist").to_string();
     let count = a.get_usize("count", 8)?.max(1);
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
+    let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
     let batch = generator_for(&model_id)(count, 7);
 
     let manifest = model::Manifest::load(&model_dir(&model_id).join("manifest.json"))?;
@@ -345,12 +351,13 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
         let planned = nn::PlannedExecutor::new(
             manifest.arch.clone(),
             std::sync::Arc::new(ws),
-            nn::PlanOptions { strategy, cost_model: None },
+            nn::PlanOptions { strategy, precision, ..Default::default() },
         )?;
         planned.forward(&batch.inputs)?.argmax_rows()
     } else {
         let engine = runtime::Engine::start_with(runtime::EngineConfig {
             strategy,
+            precision,
             ..Default::default()
         })?;
         engine.load(model_dir(&model_id))?;
@@ -380,7 +387,8 @@ fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
         "compile a model's execution plans and print per-layer strategies + arena layout",
     )
     .flag("batch", "comma-separated batch sizes (default: the model's AOT ladder)", None)
-    .flag("conv-strategy", "conv strategy: auto, direct, im2col or fft", Some("auto"));
+    .flag("conv-strategy", "conv strategy: auto, direct, im2col or fft", Some("auto"))
+    .flag("precision", "weight-residency precision: f32, f16, int8 or auto", Some("f32"));
     let a = cmd.parse(argv)?;
     let target = a.positional().first().ok_or_else(|| {
         anyhow::anyhow!("usage: dlk plan <model-dir-or-id> [--batch 1,8] [--conv-strategy auto]")
@@ -395,8 +403,11 @@ fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
         }
     };
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
-    let model =
-        runtime::CpuModel::load_with(&dir, nn::PlanOptions { strategy, cost_model: None })?;
+    let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
+    let model = runtime::CpuModel::load_with(
+        &dir,
+        nn::PlanOptions { strategy, precision, ..Default::default() },
+    )?;
     let batches: Vec<usize> = match a.get("batch") {
         Some(spec) => spec
             .split(',')
@@ -409,12 +420,13 @@ fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
         None => model.batches(),
     };
     println!(
-        "model `{}` v{} from {} — {} plan(s), conv strategy {}",
+        "model `{}` v{} from {} — {} plan(s), conv strategy {}, {} weights",
         model.manifest.id,
         model.manifest.version,
         dir.display(),
         batches.len(),
-        strategy.name()
+        strategy.name(),
+        precision.name()
     );
     for b in batches {
         let plan = model.compile_plan(b)?;

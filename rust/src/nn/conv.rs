@@ -7,8 +7,15 @@
 //!   restructuring the Pallas kernel uses to land on the MXU
 //!   (DESIGN.md §Hardware-Adaptation), and the fast CPU path.
 //! - FFT convolution lives in [`conv2d_fft`](super::conv2d_fft).
+//!
+//! The direct and im2col families also come in quantized-resident
+//! variants (`*_i8_into`, `*_f16_into`) for ROADMAP item 2: weights stay
+//! in their reduced form, inner loops accumulate over codes, and the
+//! per-tensor i8 scale is folded into the epilogue so the bias remains
+//! full-precision.
 
-use crate::tensor::{Shape, Tensor};
+use crate::compression::{ResidentF16, ResidentI8};
+use crate::tensor::{f16_lut, Shape, Tensor};
 
 /// Convolution hyper-parameters (square kernel, symmetric padding).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -290,6 +297,217 @@ pub fn conv2d_im2col_into(
     Ok(())
 }
 
+/// Shape checks for the quantized-resident kernels (mirrors
+/// [`check_args`] with the weight given as dims instead of a tensor).
+fn check_args_q(
+    input: &Tensor,
+    wdims: &[usize],
+    bias: Option<&Tensor>,
+) -> crate::Result<(usize, usize, usize, usize, usize, usize)> {
+    anyhow::ensure!(input.shape().rank() == 4, "conv2d input must be NCHW, got {}", input.shape());
+    anyhow::ensure!(
+        wdims.len() == 4,
+        "conv2d weight must be [out_ch, in_ch, k, k], got {wdims:?}"
+    );
+    let (n, c, h, w) = (
+        input.shape().dim(0),
+        input.shape().dim(1),
+        input.shape().dim(2),
+        input.shape().dim(3),
+    );
+    let (oc, wc, kh, kw) = (wdims[0], wdims[1], wdims[2], wdims[3]);
+    anyhow::ensure!(kh == kw, "only square kernels supported, got {kh}x{kw}");
+    anyhow::ensure!(wc == c, "weight in_ch {wc} != input channels {c}");
+    if let Some(b) = bias {
+        anyhow::ensure!(b.numel() == oc, "bias has {} elements, expected {oc}", b.numel());
+    }
+    Ok((n, c, h, w, oc, kh))
+}
+
+/// [`conv2d_direct_into`] with symmetric-i8 resident weights: the 7-loop
+/// accumulates `x · code`, then the epilogue applies `acc * scale + bias`.
+pub fn conv2d_direct_i8_into(
+    input: &Tensor,
+    weight: &ResidentI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
+    let x = input.data();
+    let codes = weight.codes();
+    let scale = weight.scale();
+    let o = out.data_mut();
+
+    for b in 0..n {
+        for och in 0..oc {
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..c {
+                        for ky in 0..k {
+                            let iy = (oy * params.stride + ky) as isize - params.pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let x_row = (b * c + ic) * h * w + iy as usize * w;
+                            let w_row = ((och * c + ic) * k + ky) * k;
+                            for kx in 0..k {
+                                let ix = (ox * params.stride + kx) as isize - params.pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                acc += x[x_row + ix as usize] * codes[w_row + kx] as f32;
+                            }
+                        }
+                    }
+                    o[((b * oc + och) * oh + oy) * ow + ox] = acc * scale + bias_v;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`conv2d_direct_into`] with f16-resident weights (lookup-table decode).
+pub fn conv2d_direct_f16_into(
+    input: &Tensor,
+    weight: &ResidentF16,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
+    let x = input.data();
+    let bits = weight.bits();
+    let lut = f16_lut();
+    let o = out.data_mut();
+
+    for b in 0..n {
+        for och in 0..oc {
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bias_v;
+                    for ic in 0..c {
+                        for ky in 0..k {
+                            let iy = (oy * params.stride + ky) as isize - params.pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let x_row = (b * c + ic) * h * w + iy as usize * w;
+                            let w_row = ((och * c + ic) * k + ky) * k;
+                            for kx in 0..k {
+                                let ix = (ox * params.stride + kx) as isize - params.pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                acc += x[x_row + ix as usize] * lut[bits[w_row + kx] as usize];
+                            }
+                        }
+                    }
+                    o[((b * oc + och) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`conv2d_im2col_into`] with symmetric-i8 resident weights. The GEMM
+/// runs over codes (keeping the zero-code pruned fast path — exact zeros
+/// quantize to code 0), and the scale + bias land in a fused epilogue.
+pub fn conv2d_im2col_i8_into(
+    input: &Tensor,
+    weight: &ResidentI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    patches: &mut Tensor,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
+    let cols = oh * ow;
+    let rows = c * k * k;
+
+    let codes = weight.codes();
+    let scale = weight.scale();
+    for b in 0..n {
+        im2col_into(input, b, k, params, patches)?;
+        let p = patches.data();
+        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
+        for och in 0..oc {
+            let orow = &mut o[och * cols..(och + 1) * cols];
+            orow.fill(0.0);
+            for r in 0..rows {
+                let cv = codes[och * rows + r];
+                if cv == 0 {
+                    continue; // pruned-weight fast path survives quantization
+                }
+                let wv = cv as f32;
+                let prow = &p[r * cols..(r + 1) * cols];
+                for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
+                    *ov += wv * pv;
+                }
+            }
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            for ov in orow.iter_mut() {
+                *ov = *ov * scale + bias_v;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`conv2d_im2col_into`] with f16-resident weights (lookup-table decode;
+/// zero bit patterns keep the pruned fast path).
+pub fn conv2d_im2col_f16_into(
+    input: &Tensor,
+    weight: &ResidentF16,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    patches: &mut Tensor,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
+    let cols = oh * ow;
+    let rows = c * k * k;
+
+    let bits = weight.bits();
+    let lut = f16_lut();
+    for b in 0..n {
+        im2col_into(input, b, k, params, patches)?;
+        let p = patches.data();
+        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
+        for och in 0..oc {
+            let orow = &mut o[och * cols..(och + 1) * cols];
+            match bias {
+                Some(bv) => orow.fill(bv.data()[och]),
+                None => orow.fill(0.0),
+            }
+            for r in 0..rows {
+                let wv = lut[bits[och * rows + r] as usize];
+                if wv == 0.0 {
+                    continue;
+                }
+                let prow = &p[r * cols..(r + 1) * cols];
+                for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
+                    *ov += wv * pv;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Default convolution entry point (im2col).
 pub fn conv2d(
     input: &Tensor,
@@ -457,6 +675,86 @@ mod tests {
         let mut bad = Tensor::zeros(Shape::nchw(1, 4, 6, 6));
         assert!(conv2d_direct_into(&x, &w, Some(&b), p, &mut bad).is_err());
         assert!(conv2d_im2col_into(&x, &w, None, p, &mut patches, &mut bad).is_err());
+    }
+
+    #[test]
+    fn quantized_convs_match_dequantized_f32_kernels() {
+        // Both quantized families must agree with the f32 kernels run on
+        // the dequantized weights — isolating quantization error from
+        // kernel error. f16 direct is bit-exact (same accumulation
+        // order); i8 differs only by the scale epilogue rounding.
+        let mut rng = XorShiftRng::new(123);
+        let x = Tensor::new(Shape::nchw(2, 3, 7, 7), Gen::tensor_data(&mut rng, 294)).unwrap();
+        let w = Tensor::new(&[4, 3, 3, 3][..], Gen::tensor_data(&mut rng, 108)).unwrap();
+        let b = Tensor::new(&[4][..], Gen::tensor_data(&mut rng, 4)).unwrap();
+        for p in [Conv2dParams::new(1, 1), Conv2dParams::new(2, 0)] {
+            let (oh, ow) = p.out_hw(7, 7, 3).unwrap();
+
+            let q = crate::compression::ResidentI8::quantize(&w);
+            let wq = q.dequantize().unwrap();
+            let expect_i8 = conv2d_direct(&x, &wq, Some(&b), p).unwrap();
+            let mut got = Tensor::filled(Shape::nchw(2, 4, oh, ow), f32::NAN);
+            conv2d_direct_i8_into(&x, &q, Some(&b), p, &mut got).unwrap();
+            assert_allclose(got.data(), expect_i8.data(), 1e-5, 1e-5);
+            let mut patches = Tensor::filled(&[27, oh * ow][..], f32::NAN);
+            let mut got2 = Tensor::filled(Shape::nchw(2, 4, oh, ow), f32::NAN);
+            conv2d_im2col_i8_into(&x, &q, Some(&b), p, &mut patches, &mut got2).unwrap();
+            let expect_i8_gemm = conv2d_im2col(&x, &wq, Some(&b), p).unwrap();
+            assert_allclose(got2.data(), expect_i8_gemm.data(), 1e-4, 1e-4);
+
+            let hq = crate::compression::ResidentF16::quantize(&w);
+            let wh = hq.dequantize().unwrap();
+            let expect_f16 = conv2d_direct(&x, &wh, Some(&b), p).unwrap();
+            let mut goth = Tensor::filled(Shape::nchw(2, 4, oh, ow), f32::NAN);
+            conv2d_direct_f16_into(&x, &hq, Some(&b), p, &mut goth).unwrap();
+            assert_eq!(goth.data(), expect_f16.data(), "f16 direct bit-exact vs dequantized");
+            let expect_f16_gemm = conv2d_im2col(&x, &wh, Some(&b), p).unwrap();
+            let mut goth2 = Tensor::filled(Shape::nchw(2, 4, oh, ow), f32::NAN);
+            conv2d_im2col_f16_into(&x, &hq, Some(&b), p, &mut patches, &mut goth2).unwrap();
+            assert_eq!(goth2.data(), expect_f16_gemm.data(), "f16 im2col bit-exact");
+        }
+    }
+
+    #[test]
+    fn quantized_convs_preserve_pruned_zero_fast_path() {
+        // Pruned (exactly zero) weights must quantize to code 0 / bit
+        // pattern 0 and be skipped without changing results.
+        let mut rng = XorShiftRng::new(6);
+        let x = Tensor::new(Shape::nchw(1, 2, 5, 5), Gen::tensor_data(&mut rng, 50)).unwrap();
+        let mut wdata = Gen::tensor_data(&mut rng, 3 * 2 * 9);
+        for (i, v) in wdata.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let w = Tensor::new(&[3, 2, 3, 3][..], wdata).unwrap();
+        let p = Conv2dParams::new(1, 1);
+        let q = crate::compression::ResidentI8::quantize(&w);
+        for (&c, &v) in q.codes().iter().zip(w.data()) {
+            if v == 0.0 {
+                assert_eq!(c, 0);
+            }
+        }
+        let reference = conv2d_direct(&x, &q.dequantize().unwrap(), None, p).unwrap();
+        let mut patches = Tensor::zeros(&[18, 25][..]);
+        let mut got = Tensor::zeros(Shape::nchw(1, 3, 5, 5));
+        conv2d_im2col_i8_into(&x, &q, None, p, &mut patches, &mut got).unwrap();
+        assert_allclose(got.data(), reference.data(), 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn quantized_convs_reject_bad_shapes() {
+        let x = Tensor::zeros(Shape::nchw(1, 2, 4, 4));
+        let w_bad_ch = Tensor::zeros(&[1, 3, 3, 3][..]);
+        let q = crate::compression::ResidentI8::quantize(&w_bad_ch);
+        let h = crate::compression::ResidentF16::quantize(&w_bad_ch);
+        let p = Conv2dParams::default();
+        let mut out = Tensor::zeros(Shape::nchw(1, 1, 2, 2));
+        let mut patches = Tensor::zeros(&[27, 4][..]);
+        assert!(conv2d_direct_i8_into(&x, &q, None, p, &mut out).is_err());
+        assert!(conv2d_direct_f16_into(&x, &h, None, p, &mut out).is_err());
+        assert!(conv2d_im2col_i8_into(&x, &q, None, p, &mut patches, &mut out).is_err());
+        assert!(conv2d_im2col_f16_into(&x, &h, None, p, &mut patches, &mut out).is_err());
     }
 
     #[test]

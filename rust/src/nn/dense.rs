@@ -1,6 +1,10 @@
-//! Dense (fully-connected) layer and the GEMM primitives behind it.
+//! Dense (fully-connected) layer and the GEMM primitives behind it,
+//! including the quantized-resident variants ([`dense_i8_into`],
+//! [`dense_f16_into`]) the execution plan dispatches when a layer's
+//! weights live in reduced precision (ROADMAP item 2).
 
-use crate::tensor::{Shape, Tensor};
+use crate::compression::{ResidentF16, ResidentI8};
+use crate::tensor::{f16_lut, Shape, Tensor};
 
 /// Naive row-major matmul: `a[m,k] @ b[k,n] -> [m,n]` in ikj order (cache
 /// friendly for row-major b).
@@ -110,6 +114,85 @@ pub fn dense_into(
     Ok(())
 }
 
+fn check_dense_q(
+    x: &Tensor,
+    wdims: &[usize],
+    bias: Option<&Tensor>,
+    out: &Tensor,
+) -> crate::Result<(usize, usize, usize)> {
+    anyhow::ensure!(x.shape().rank() == 2, "dense input must be [batch, in], got {}", x.shape());
+    anyhow::ensure!(wdims.len() == 2, "dense weight must be [out, in], got {wdims:?}");
+    let (batch, in_f) = (x.shape().dim(0), x.shape().dim(1));
+    let (out_f, w_in) = (wdims[0], wdims[1]);
+    anyhow::ensure!(w_in == in_f, "dense weight in-features {w_in} != input {in_f}");
+    if let Some(b) = bias {
+        anyhow::ensure!(b.numel() == out_f, "dense bias size {} != {out_f}", b.numel());
+    }
+    anyhow::ensure!(
+        out.shape().dims() == [batch, out_f],
+        "dense out tensor is {}, expected [{batch},{out_f}]",
+        out.shape()
+    );
+    Ok((batch, in_f, out_f))
+}
+
+/// [`dense_into`] with symmetric-i8 resident weights: the inner loop
+/// accumulates `x · code` and the per-tensor scale is folded into the
+/// epilogue (`acc * scale + bias`), so the bias stays full-precision.
+pub fn dense_i8_into(
+    x: &Tensor,
+    weight: &ResidentI8,
+    bias: Option<&Tensor>,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (batch, in_f, out_f) = check_dense_q(x, weight.dims(), bias, out)?;
+    let xd = x.data();
+    let codes = weight.codes();
+    let scale = weight.scale();
+    let od = out.data_mut();
+    for bi in 0..batch {
+        let xrow = &xd[bi * in_f..(bi + 1) * in_f];
+        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
+        for of in 0..out_f {
+            let wrow = &codes[of * in_f..(of + 1) * in_f];
+            let mut acc = 0.0f32;
+            for (xv, &c) in xrow.iter().zip(wrow) {
+                acc += xv * c as f32;
+            }
+            orow[of] = acc * scale + bias.map_or(0.0, |bv| bv.data()[of]);
+        }
+    }
+    Ok(())
+}
+
+/// [`dense_into`] with f16-resident weights, decoded through the
+/// process-wide lookup table — one indexed load per element.
+pub fn dense_f16_into(
+    x: &Tensor,
+    weight: &ResidentF16,
+    bias: Option<&Tensor>,
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (batch, in_f, out_f) = check_dense_q(x, weight.dims(), bias, out)?;
+    let xd = x.data();
+    let bits = weight.bits();
+    let lut = f16_lut();
+    let od = out.data_mut();
+    for bi in 0..batch {
+        let xrow = &xd[bi * in_f..(bi + 1) * in_f];
+        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
+        for of in 0..out_f {
+            let wrow = &bits[of * in_f..(of + 1) * in_f];
+            let mut acc = bias.map_or(0.0, |bv| bv.data()[of]);
+            for (xv, &b) in xrow.iter().zip(wrow) {
+                acc += xv * lut[b as usize];
+            }
+            orow[of] = acc;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +271,64 @@ mod tests {
         let w = Tensor::zeros(&[4, 3][..]);
         let bad_bias = Tensor::zeros(&[5][..]);
         assert!(dense(&a, &w, Some(&bad_bias)).is_err());
+    }
+
+    #[test]
+    fn quantized_dense_matches_dequantized_f32() {
+        // The i8/f16 kernels must equal the f32 kernel run on the
+        // *dequantized* weights (same association order), so any parity
+        // gap against the oracle comes from quantization alone.
+        let mut rng = XorShiftRng::new(91);
+        let x = Tensor::new(&[3, 20][..], Gen::tensor_data(&mut rng, 60)).unwrap();
+        let w = Tensor::new(&[7, 20][..], Gen::tensor_data(&mut rng, 140)).unwrap();
+        let b = Tensor::new(&[7][..], Gen::tensor_data(&mut rng, 7)).unwrap();
+
+        let q = crate::compression::ResidentI8::quantize(&w);
+        let wq = q.dequantize().unwrap();
+        let expect_i8 = dense(&x, &wq, Some(&b)).unwrap();
+        let mut got_i8 = Tensor::filled(&[3, 7][..], f32::NAN);
+        dense_i8_into(&x, &q, Some(&b), &mut got_i8).unwrap();
+        assert_allclose(got_i8.data(), expect_i8.data(), 1e-5, 1e-6);
+
+        let h = crate::compression::ResidentF16::quantize(&w);
+        let wh = h.dequantize().unwrap();
+        let expect_f16 = dense(&x, &wh, Some(&b)).unwrap();
+        let mut got_f16 = Tensor::filled(&[3, 7][..], f32::NAN);
+        dense_f16_into(&x, &h, Some(&b), &mut got_f16).unwrap();
+        assert_eq!(got_f16.data(), expect_f16.data(), "f16 path is bit-exact vs dequantized");
+    }
+
+    #[test]
+    fn quantized_dense_close_to_f32_reference() {
+        let mut rng = XorShiftRng::new(92);
+        let x = Tensor::new(&[2, 32][..], Gen::tensor_data(&mut rng, 64)).unwrap();
+        let w = Tensor::new(&[5, 32][..], Gen::tensor_data(&mut rng, 160)).unwrap();
+        let reference = dense(&x, &w, None).unwrap();
+
+        let q = crate::compression::ResidentI8::quantize(&w);
+        let mut yi8 = Tensor::zeros(&[2, 5][..]);
+        dense_i8_into(&x, &q, None, &mut yi8).unwrap();
+        assert_allclose(yi8.data(), reference.data(), 5e-2, 5e-2);
+
+        let h = crate::compression::ResidentF16::quantize(&w);
+        let mut yf16 = Tensor::zeros(&[2, 5][..]);
+        dense_f16_into(&x, &h, None, &mut yf16).unwrap();
+        assert_allclose(yf16.data(), reference.data(), 5e-3, 5e-3);
+    }
+
+    #[test]
+    fn quantized_dense_shape_errors() {
+        let x = Tensor::zeros(&[2, 3][..]);
+        let w = Tensor::zeros(&[4, 2][..]); // in-features mismatch
+        let q = crate::compression::ResidentI8::quantize(&w);
+        let h = crate::compression::ResidentF16::quantize(&w);
+        let mut out = Tensor::zeros(&[2, 4][..]);
+        assert!(dense_i8_into(&x, &q, None, &mut out).is_err());
+        assert!(dense_f16_into(&x, &h, None, &mut out).is_err());
+        // Mis-shaped out tensor.
+        let w2 = Tensor::zeros(&[4, 3][..]);
+        let q2 = crate::compression::ResidentI8::quantize(&w2);
+        let mut bad = Tensor::zeros(&[3, 4][..]);
+        assert!(dense_i8_into(&x, &q2, None, &mut bad).is_err());
     }
 }

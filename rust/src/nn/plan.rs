@@ -20,21 +20,31 @@
 //! - FFT convs bake their **precalculated filter spectra** into the plan
 //!   (the paper's own phrase), so per-forward work is input transforms
 //!   only.
+//! - Weights can stay **quantized-resident** (ROADMAP item 2, "use lower
+//!   resolution on floating point"): [`PlanPrecision`] bakes i8/f16
+//!   weight tensors with their scales into the plan steps, the cost
+//!   model picks a per-layer precision under a configurable accuracy
+//!   budget in auto mode, and the integer/f16 kernels in
+//!   [`super::conv`]/[`super::dense`] run straight off the resident form.
 //!
 //! The walk-the-architecture interpreter ([`super::CpuExecutor`]) is
 //! retained as the correctness oracle: `rust/tests/plan.rs` holds the
 //! planned executor bit-exact against it for every layer kind and every
-//! ladder batch size.
+//! ladder batch size under f32, and within the documented per-precision
+//! tolerances (`testutil::assert_within_tolerance`) for quantized plans.
 
 use super::fft::Complex;
 use super::fft_conv::{FftConvPlan, FftScratch};
 use super::{
-    avg_pool2d_into, conv1d_into, conv2d_direct_into, conv2d_im2col_into, dense_into,
-    fft_conv_flops, global_avg_pool_into, max_pool1d_into, max_pool2d_into, relu_in_place,
-    softmax_in_place, Conv1dParams, Conv2dParams, ConvStrategy, LayerTiming, Pool2dParams,
+    avg_pool2d_into, conv1d_into, conv2d_direct_f16_into, conv2d_direct_i8_into,
+    conv2d_direct_into, conv2d_im2col_f16_into, conv2d_im2col_i8_into, conv2d_im2col_into,
+    dense_f16_into, dense_i8_into, dense_into, fft_conv_flops, global_avg_pool_into,
+    max_pool1d_into, max_pool2d_into, relu_in_place, softmax_in_place, Conv1dParams,
+    Conv2dParams, ConvStrategy, LayerTiming, Pool2dParams,
 };
+use crate::compression::{ResidentF16, ResidentI8};
 use crate::model::{Architecture, LayerKind, WeightStore};
-use crate::tensor::{Shape, Tensor};
+use crate::tensor::{DType, Shape, Tensor};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -303,6 +313,26 @@ impl CostModel {
         }
         Ok(total)
     }
+
+    /// Pick the resident precision for one weight tensor under a
+    /// relative-RMS quantization-error budget: the smallest-bytes form
+    /// whose *measured* error on these exact weights fits. The CPU scalar
+    /// kernels run all three forms at comparable µs/MAC, so bytes — the
+    /// currency of the cache budget and replica placement — break the
+    /// tie; a backend where the forms diverge in speed would weigh
+    /// `self`'s coefficients here.
+    pub fn pick_precision(&self, w: &Tensor, budget: f64) -> DType {
+        if !(budget > 0.0) {
+            return DType::F32;
+        }
+        if ResidentI8::quantize(w).relative_rms_error(w.data()) <= budget {
+            return DType::I8;
+        }
+        if ResidentF16::quantize(w).relative_rms_error(w.data()) <= budget {
+            return DType::F16;
+        }
+        DType::F32
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -342,18 +372,110 @@ impl PlanStrategy {
     }
 }
 
+/// Weight-residency precision policy for a plan (ROADMAP item 2). The
+/// default keeps every weight f32 — fetched from the shared store at
+/// execute time, bit-exact with the interpreter oracle. The quantized
+/// policies bake reduced-precision copies (with their scales) into the
+/// plan steps for conv2d direct/im2col and dense layers; FFT convs (whose
+/// resident form is f32 spectra) and conv1d stay full-precision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PlanPrecision {
+    /// Full-precision everywhere (the bit-exact default).
+    #[default]
+    F32,
+    /// f16-resident weights for every quantizable layer.
+    F16,
+    /// Symmetric-i8-resident weights for every quantizable layer.
+    Int8,
+    /// Per-layer pick by the cost model under
+    /// [`PlanOptions::accuracy_budget`]: the smallest resident form whose
+    /// measured quantization error fits the budget.
+    Auto,
+}
+
+impl PlanPrecision {
+    /// Parse a CLI value: `f32`, `f16`, `int8` or `auto`.
+    pub fn parse(s: &str) -> crate::Result<PlanPrecision> {
+        Ok(match s {
+            "f32" => PlanPrecision::F32,
+            "f16" => PlanPrecision::F16,
+            "int8" => PlanPrecision::Int8,
+            "auto" => PlanPrecision::Auto,
+            other => anyhow::bail!(
+                "unknown precision `{other}` (expected f32, f16, int8 or auto)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanPrecision::F32 => "f32",
+            PlanPrecision::F16 => "f16",
+            PlanPrecision::Int8 => "int8",
+            PlanPrecision::Auto => "auto",
+        }
+    }
+
+    /// Whether this policy replaces eligible conv2d weights with a
+    /// quantized resident form (auto decides per layer, so it counts).
+    fn quantizes(self) -> bool {
+        !matches!(self, PlanPrecision::F32)
+    }
+
+    /// Placement-estimate bytes per parameter before a model's plans
+    /// exist (the pool peeks only the manifest). Conservative for `Auto`,
+    /// which may quantize everything or nothing; the estimate is replaced
+    /// by the plan's actual resident bytes right after the load.
+    pub fn estimate_bytes_per_param(self) -> usize {
+        match self {
+            PlanPrecision::F32 | PlanPrecision::Auto => 4,
+            PlanPrecision::F16 => 2,
+            PlanPrecision::Int8 => 1,
+        }
+    }
+}
+
+/// Default relative-RMS weight-quantization error budget for
+/// [`PlanPrecision::Auto`]. Symmetric i8 on a Gaussian-ish tensor
+/// measures ≈0.6–0.9% (the per-tensor max sets the step size), so the
+/// default admits i8 only for tame dynamic ranges and otherwise settles
+/// on f16 (≈0.05%); raise the budget (e.g. to 0.01) to push typical
+/// layers down to i8, lower it toward 0 to force f32.
+pub const DEFAULT_ACCURACY_BUDGET: f64 = 0.005;
+
 /// Options for [`ExecutionPlan::compile`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct PlanOptions {
     pub strategy: PlanStrategy,
+    /// Weight-residency precision policy.
+    pub precision: PlanPrecision,
+    /// Per-layer accuracy budget consumed by [`PlanPrecision::Auto`]
+    /// (relative RMS weight error; see [`DEFAULT_ACCURACY_BUDGET`]).
+    pub accuracy_budget: f64,
     /// Cost model override; `None` uses the process-wide calibrated one.
     pub cost_model: Option<CostModel>,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions {
+            strategy: PlanStrategy::default(),
+            precision: PlanPrecision::default(),
+            accuracy_budget: DEFAULT_ACCURACY_BUDGET,
+            cost_model: None,
+        }
+    }
 }
 
 impl PlanOptions {
     /// Force one conv strategy everywhere.
     pub fn fixed(strategy: ConvStrategy) -> PlanOptions {
-        PlanOptions { strategy: PlanStrategy::Fixed(strategy), cost_model: None }
+        PlanOptions { strategy: PlanStrategy::Fixed(strategy), ..PlanOptions::default() }
+    }
+
+    /// Default options under one precision policy.
+    pub fn with_precision(precision: PlanPrecision) -> PlanOptions {
+        PlanOptions { precision, ..PlanOptions::default() }
     }
 
     fn resolve_cost(&self) -> CostModel {
@@ -402,6 +524,30 @@ impl Op {
     }
 }
 
+/// A weight tensor quantized at compile time and kept resident in the
+/// plan. Batch-independent (like FFT spectra), so `PlannedExecutor`
+/// shares one `Arc` per layer across every ladder plan.
+enum ResidentWeights {
+    F16(ResidentF16),
+    I8(ResidentI8),
+}
+
+impl ResidentWeights {
+    fn dtype(&self) -> DType {
+        match self {
+            ResidentWeights::F16(_) => DType::F16,
+            ResidentWeights::I8(_) => DType::I8,
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            ResidentWeights::F16(r) => r.bytes(),
+            ResidentWeights::I8(r) => r.bytes(),
+        }
+    }
+}
+
 struct Step {
     op: Op,
     in_slot: usize,
@@ -410,6 +556,12 @@ struct Step {
     out_shape: Shape,
     w_key: Option<String>,
     b_key: Option<String>,
+    /// Quantized weight residency; `None` means f32 weights fetched from
+    /// the shared store at execute time.
+    resident: Option<Arc<ResidentWeights>>,
+    /// Bytes of parameters this step keeps resident: the weight at its
+    /// resident dtype plus the f32 bias. Zero for unweighted steps.
+    param_bytes: usize,
     /// Interned layer name (shared with every `LayerTiming` this step
     /// emits — no per-forward string allocation).
     name: Arc<str>,
@@ -418,6 +570,15 @@ struct Step {
     macs: u64,
     /// Cost-model estimate, µs.
     est_us: f64,
+}
+
+impl Step {
+    /// Resident dtype of this step's weights (`None` for unweighted steps).
+    fn weight_dtype(&self) -> Option<DType> {
+        self.w_key.as_ref().map(|_| {
+            self.resident.as_ref().map_or(DType::F32, |r| r.dtype())
+        })
+    }
 }
 
 /// Liveness record for one arena buffer: which steps it spans and the
@@ -441,6 +602,8 @@ pub struct StepInfo {
     pub scratch_slot: Option<usize>,
     pub in_place: bool,
     pub strategy: Option<ConvStrategy>,
+    /// Resident dtype of this step's weights; `None` for unweighted steps.
+    pub precision: Option<DType>,
     pub out_shape: Vec<usize>,
     pub macs: u64,
     pub est_us: f64,
@@ -489,20 +652,29 @@ impl ExecutionPlan {
         batch: usize,
         opts: &PlanOptions,
     ) -> crate::Result<ExecutionPlan> {
-        ExecutionPlan::compile_with_fft_cache(arch, weights, batch, opts, &mut BTreeMap::new())
+        ExecutionPlan::compile_with_caches(
+            arch,
+            weights,
+            batch,
+            opts,
+            &mut BTreeMap::new(),
+            &mut BTreeMap::new(),
+        )
     }
 
     /// [`ExecutionPlan::compile`] reusing precomputed FFT filter spectra
-    /// across plans: spectra depend only on (weights, layer geometry),
-    /// never on batch, so `PlannedExecutor` hands every ladder compile
-    /// the same cache (keyed by weight name) and a conv layer's filters
-    /// are transformed exactly once per model.
-    fn compile_with_fft_cache(
+    /// and quantized resident weights across plans: both depend only on
+    /// (weights, layer geometry), never on batch, so `PlannedExecutor`
+    /// hands every ladder compile the same caches (keyed by weight name)
+    /// and a conv layer's filters are transformed — and its weights
+    /// quantized — exactly once per model.
+    fn compile_with_caches(
         arch: &Architecture,
         weights: &WeightStore,
         batch: usize,
         opts: &PlanOptions,
         fft_cache: &mut BTreeMap<String, Arc<FftConvPlan>>,
+        quant_cache: &mut BTreeMap<String, Arc<ResidentWeights>>,
     ) -> crate::Result<ExecutionPlan> {
         anyhow::ensure!(batch > 0, "plan batch must be positive");
         weights.validate(arch)?;
@@ -561,9 +733,30 @@ impl ExecutionPlan {
                 LayerKind::Conv2d { out_ch, k, stride, pad } => {
                     let params = Conv2dParams::new(*stride, *pad);
                     let (c, h, w) = (inp[0], inp[1], inp[2]);
+                    let force_quant = matches!(
+                        opts.precision,
+                        PlanPrecision::F16 | PlanPrecision::Int8
+                    );
                     let (strategy, est) = match opts.strategy {
                         PlanStrategy::Fixed(s) => {
                             (s, cost.conv2d_us(s, batch, c, h, w, *out_ch, *k, params)?)
+                        }
+                        // Forced quantization restricts auto strategy to
+                        // the quantizable kernels (FFT's resident form is
+                        // f32 spectra, which would silently undo the
+                        // requested precision).
+                        PlanStrategy::Auto if force_quant => {
+                            let d = cost.conv2d_us(
+                                ConvStrategy::Direct, batch, c, h, w, *out_ch, *k, params,
+                            )?;
+                            let i2 = cost.conv2d_us(
+                                ConvStrategy::Im2col, batch, c, h, w, *out_ch, *k, params,
+                            )?;
+                            if d <= i2 {
+                                (ConvStrategy::Direct, d)
+                            } else {
+                                (ConvStrategy::Im2col, i2)
+                            }
                         }
                         // The capped pick: auto mode declines FFT when the
                         // plan-resident spectra would outgrow the cap.
@@ -644,6 +837,50 @@ impl ExecutionPlan {
                     (Op::SoftmaxInPlace, out_numel as f64 * 4.0 * cost.elem_us, false, cur)
                 }
             };
+            // Resident-precision selection. Only the direct/im2col conv and
+            // dense GEMM kernels have quantized variants; FFT convs keep f32
+            // spectra and conv1d stays f32-resident. The quantized form is
+            // batch-independent, so it is shared across ladder plans via
+            // `quant_cache` exactly like FFT spectra.
+            let quantizable =
+                matches!(&op, Op::Conv2dDirect { .. } | Op::Conv2dIm2col { .. } | Op::Dense);
+            let resident = if weighted && quantizable && opts.precision.quantizes() {
+                if let Some(r) = quant_cache.get(&w_key) {
+                    Some(r.clone())
+                } else {
+                    let wt = weights.get(&w_key)?;
+                    let target = match opts.precision {
+                        PlanPrecision::F16 => DType::F16,
+                        PlanPrecision::Int8 => DType::I8,
+                        PlanPrecision::Auto => cost.pick_precision(wt, opts.accuracy_budget),
+                        PlanPrecision::F32 => DType::F32,
+                    };
+                    let built = match target {
+                        DType::F32 => None,
+                        DType::F16 => {
+                            Some(Arc::new(ResidentWeights::F16(ResidentF16::quantize(wt))))
+                        }
+                        DType::I8 => Some(Arc::new(ResidentWeights::I8(ResidentI8::quantize(wt)))),
+                    };
+                    if let Some(r) = &built {
+                        quant_cache.insert(w_key.clone(), r.clone());
+                    }
+                    built
+                }
+            } else {
+                None
+            };
+            // Bytes the step's parameters keep resident: weights at their
+            // resident dtype, biases always f32. FFT spectra are charged as
+            // f32 weights — the spectra themselves vary with the calibrated
+            // strategy choice, which would make byte accounting host-dependent.
+            let param_bytes = if weighted {
+                let w_numel = weights.get(&w_key)?.numel();
+                let b_numel = weights.get(&b_key)?.numel();
+                resident.as_ref().map_or(w_numel * 4, |r| r.bytes()) + b_numel * 4
+            } else {
+                0
+            };
             steps.push(Step {
                 op,
                 in_slot: in_buf,
@@ -655,6 +892,8 @@ impl ExecutionPlan {
                 kind,
                 macs,
                 est_us,
+                resident,
+                param_bytes,
             });
             cur = out_buf;
         }
@@ -776,17 +1015,27 @@ impl ExecutionPlan {
                 Op::FlattenAlias => slots[step.in_slot].reshape_within(step.out_shape.clone())?,
                 Op::DropoutNoop => {}
                 Op::Conv2dDirect { params } => {
-                    let w = weights.get(step.w_key.as_deref().unwrap())?;
                     let b = weights.get(step.b_key.as_deref().unwrap())?;
                     let mut out = take_slot(slots, step.out_slot);
                     let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
-                        conv2d_direct_into(&slots[step.in_slot], w, Some(b), *params, &mut out)
+                        let x = &slots[step.in_slot];
+                        match step.resident.as_deref() {
+                            None => {
+                                let w = weights.get(step.w_key.as_deref().unwrap())?;
+                                conv2d_direct_into(x, w, Some(b), *params, &mut out)
+                            }
+                            Some(ResidentWeights::F16(h)) => {
+                                conv2d_direct_f16_into(x, h, Some(b), *params, &mut out)
+                            }
+                            Some(ResidentWeights::I8(q)) => {
+                                conv2d_direct_i8_into(x, q, Some(b), *params, &mut out)
+                            }
+                        }
                     });
                     slots[step.out_slot] = out;
                     r?;
                 }
                 Op::Conv2dIm2col { params, scratch_slot, patch_shape } => {
-                    let w = weights.get(step.w_key.as_deref().unwrap())?;
                     let b = weights.get(step.b_key.as_deref().unwrap())?;
                     let mut out = take_slot(slots, step.out_slot);
                     let mut patches = take_slot(slots, *scratch_slot);
@@ -794,14 +1043,19 @@ impl ExecutionPlan {
                         .reshape_within(step.out_shape.clone())
                         .and_then(|_| patches.reshape_within(patch_shape.clone()))
                         .and_then(|_| {
-                            conv2d_im2col_into(
-                                &slots[step.in_slot],
-                                w,
-                                Some(b),
-                                *params,
-                                &mut patches,
-                                &mut out,
-                            )
+                            let x = &slots[step.in_slot];
+                            match step.resident.as_deref() {
+                                None => {
+                                    let w = weights.get(step.w_key.as_deref().unwrap())?;
+                                    conv2d_im2col_into(x, w, Some(b), *params, &mut patches, &mut out)
+                                }
+                                Some(ResidentWeights::F16(h)) => conv2d_im2col_f16_into(
+                                    x, h, Some(b), *params, &mut patches, &mut out,
+                                ),
+                                Some(ResidentWeights::I8(q)) => conv2d_im2col_i8_into(
+                                    x, q, Some(b), *params, &mut patches, &mut out,
+                                ),
+                            }
                         });
                     slots[*scratch_slot] = patches;
                     slots[step.out_slot] = out;
@@ -860,12 +1114,19 @@ impl ExecutionPlan {
                     r?;
                 }
                 Op::Dense => {
-                    let w = weights.get(step.w_key.as_deref().unwrap())?;
                     let b = weights.get(step.b_key.as_deref().unwrap())?;
                     let mut out = take_slot(slots, step.out_slot);
-                    let r = out
-                        .reshape_within(step.out_shape.clone())
-                        .and_then(|_| dense_into(&slots[step.in_slot], w, Some(b), &mut out));
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        let x = &slots[step.in_slot];
+                        match step.resident.as_deref() {
+                            None => {
+                                let w = weights.get(step.w_key.as_deref().unwrap())?;
+                                dense_into(x, w, Some(b), &mut out)
+                            }
+                            Some(ResidentWeights::F16(h)) => dense_f16_into(x, h, Some(b), &mut out),
+                            Some(ResidentWeights::I8(q)) => dense_i8_into(x, q, Some(b), &mut out),
+                        }
+                    });
                     slots[step.out_slot] = out;
                     r?;
                 }
@@ -940,6 +1201,7 @@ impl ExecutionPlan {
                 out_shape: s.out_shape.dims().to_vec(),
                 macs: s.macs,
                 est_us: s.est_us,
+                precision: s.weight_dtype(),
             })
             .collect()
     }
@@ -950,6 +1212,22 @@ impl ExecutionPlan {
             .iter()
             .filter_map(|s| s.op.strategy().map(|st| (s.name.clone(), st)))
             .collect()
+    }
+
+    /// `(layer name, resident weight dtype)` for every weighted step.
+    pub fn weight_precisions(&self) -> Vec<(Arc<str>, DType)> {
+        self.steps
+            .iter()
+            .filter_map(|s| s.weight_dtype().map(|d| (s.name.clone(), d)))
+            .collect()
+    }
+
+    /// Bytes of parameters this plan keeps resident, at each step's
+    /// resident dtype (weights) plus f32 biases. For a pure-f32 plan this
+    /// is exactly `param_count * 4`, which keeps the pool/cache byte
+    /// accounting backward compatible.
+    pub fn resident_weight_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.param_bytes).sum()
     }
 
     /// How many times the arena has been (re)built — 1 after any number
@@ -965,12 +1243,13 @@ impl ExecutionPlan {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "plan `{}` batch {}: {} steps, {} arena slots, peak arena {}, est {:.1} us",
+            "plan `{}` batch {}: {} steps, {} arena slots, peak arena {}, resident weights {}, est {:.1} us",
             self.arch_name,
             self.batch,
             self.steps.len(),
             self.slot_numel.len(),
             crate::metrics::fmt_bytes(self.peak_arena_bytes() as u64),
+            crate::metrics::fmt_bytes(self.resident_weight_bytes() as u64),
             self.est_us
         );
         for (i, n) in self.slot_numel.iter().enumerate() {
@@ -999,11 +1278,19 @@ impl ExecutionPlan {
                     _ => format!("s{}->s{}", step.in_slot, step.out_slot),
                 }
             };
-            let strategy = step
-                .op
-                .strategy()
-                .map(|st| format!(" [{}]", st.name()))
-                .unwrap_or_default();
+            // Tag: conv strategy and/or non-f32 resident precision, e.g.
+            // `[im2col i8]`, `[direct]`, `[f16]` (dense).
+            let strategy = {
+                let strat = step.op.strategy().map(ConvStrategy::name);
+                let prec =
+                    step.weight_dtype().filter(|d| *d != DType::F32).map(DType::name);
+                match (strat, prec) {
+                    (Some(st), Some(p)) => format!(" [{st} {p}]"),
+                    (Some(st), None) => format!(" [{st}]"),
+                    (None, Some(p)) => format!(" [{p}]"),
+                    (None, None) => String::new(),
+                }
+            };
             let dims: Vec<String> =
                 step.out_shape.dims().iter().map(|d| d.to_string()).collect();
             let _ = writeln!(
@@ -1036,11 +1323,13 @@ pub struct PlannedExecutor {
 }
 
 /// Per-executor compile cache: plans by batch size, plus the FFT filter
-/// spectra shared by every plan (they are batch-independent).
+/// spectra and quantized resident weights shared by every plan (both are
+/// batch-independent).
 #[derive(Default)]
 struct PlanCache {
     plans: BTreeMap<usize, Arc<ExecutionPlan>>,
     fft: BTreeMap<String, Arc<FftConvPlan>>,
+    quant: BTreeMap<String, Arc<ResidentWeights>>,
 }
 
 impl PlannedExecutor {
@@ -1086,12 +1375,14 @@ impl PlannedExecutor {
         if let Some(p) = cache.plans.get(&batch) {
             return Ok(p.clone());
         }
-        let plan = Arc::new(ExecutionPlan::compile_with_fft_cache(
+        let cache = &mut *cache;
+        let plan = Arc::new(ExecutionPlan::compile_with_caches(
             &self.arch,
             &self.weights,
             batch,
             &self.opts,
             &mut cache.fft,
+            &mut cache.quant,
         )?);
         cache.plans.insert(batch, plan.clone());
         Ok(plan)
@@ -1294,6 +1585,167 @@ mod tests {
             assert_eq!(PlanStrategy::parse(s).unwrap().name(), s);
         }
         assert!(PlanStrategy::parse("metal").is_err());
+    }
+
+    #[test]
+    fn quantized_plans_execute_and_shrink_resident_bytes() {
+        let base = PlanOptions::fixed(ConvStrategy::Im2col);
+        let f32_exec = PlannedExecutor::with_random_weights(tiny_arch(), 9, base).unwrap();
+        let x = Tensor::randn(Shape::nchw(2, 1, 6, 6), 13, 1.0);
+        let y32 = f32_exec.forward(&x).unwrap();
+        let f32_bytes = f32_exec.plan_for(2).unwrap().resident_weight_bytes();
+        // Pure-f32 resident bytes are exactly param_count * 4.
+        assert_eq!(f32_bytes, f32_exec.arch().param_count().unwrap() * 4);
+
+        for precision in [PlanPrecision::F16, PlanPrecision::Int8] {
+            let opts = PlanOptions { precision, ..base };
+            let q = PlannedExecutor::with_random_weights(tiny_arch(), 9, opts).unwrap();
+            let yq = q.forward(&x).unwrap();
+            // Softmax outputs live in [0,1]: a small absolute band covers
+            // both precisions (the shared-harness tolerances in
+            // tests/plan.rs pin the real contract).
+            for (a, b) in yq.data().iter().zip(y32.data()) {
+                assert!((a - b).abs() < 0.05, "{}: {a} vs {b}", precision.name());
+            }
+            let q_bytes = q.plan_for(2).unwrap().resident_weight_bytes();
+            assert!(
+                q_bytes < f32_bytes,
+                "{}: {q_bytes} >= {f32_bytes}",
+                precision.name()
+            );
+            if precision == PlanPrecision::Int8 {
+                assert!(q_bytes * 2 <= f32_bytes, "int8 resident {q_bytes} vs f32 {f32_bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_residency_shared_across_ladder_plans() {
+        // Like FFT spectra, quantized weights are batch-independent: every
+        // plan compiled by one executor must hold the same Arc.
+        let opts = PlanOptions {
+            precision: PlanPrecision::Int8,
+            ..PlanOptions::fixed(ConvStrategy::Direct)
+        };
+        let planned = PlannedExecutor::with_random_weights(tiny_arch(), 6, opts).unwrap();
+        let p1 = planned.plan_for(1).unwrap();
+        let p2 = planned.plan_for(2).unwrap();
+        let resident_of = |p: &ExecutionPlan, name: &str| {
+            p.steps
+                .iter()
+                .find(|s| &*s.name == name)
+                .and_then(|s| s.resident.clone())
+                .expect("quantized step holds resident weights")
+        };
+        assert!(Arc::ptr_eq(&resident_of(&p1, "conv1"), &resident_of(&p2, "conv1")));
+        assert!(Arc::ptr_eq(&resident_of(&p1, "fc"), &resident_of(&p2, "fc")));
+    }
+
+    #[test]
+    fn forced_quantization_declines_fft_in_auto_mode() {
+        // Auto strategy under a forced quantized precision must not pick
+        // FFT (its resident form is f32 spectra, which would silently
+        // undo the request)...
+        let planned = PlannedExecutor::with_random_weights(
+            tiny_arch(),
+            3,
+            PlanOptions::with_precision(PlanPrecision::Int8),
+        )
+        .unwrap();
+        let plan = planned.plan_for(1).unwrap();
+        for (name, st) in plan.conv_strategies() {
+            assert_ne!(st, ConvStrategy::Fft, "{name}");
+        }
+        for (name, d) in plan.weight_precisions() {
+            assert_eq!(d, DType::I8, "{name}");
+        }
+
+        // ...but an explicit Fixed(Fft) still wins: the conv stays
+        // f32-resident while the dense layer quantizes.
+        let opts = PlanOptions {
+            precision: PlanPrecision::Int8,
+            ..PlanOptions::fixed(ConvStrategy::Fft)
+        };
+        let planned = PlannedExecutor::with_random_weights(tiny_arch(), 3, opts).unwrap();
+        let plan = planned.plan_for(1).unwrap();
+        let precs: BTreeMap<String, DType> = plan
+            .weight_precisions()
+            .into_iter()
+            .map(|(n, d)| (n.to_string(), d))
+            .collect();
+        assert_eq!(precs["conv1"], DType::F32);
+        assert_eq!(precs["fc"], DType::I8);
+        // Introspection agrees with the per-step view.
+        let info = plan.steps();
+        assert!(info.iter().any(|s| s.precision == Some(DType::I8)));
+        assert!(info.iter().any(|s| s.precision == Some(DType::F32)));
+    }
+
+    #[test]
+    fn auto_precision_mixes_layers_and_dump_tags_them() {
+        // conv1d has no quantized kernel and stays f32; the dense layer
+        // fits the default budget in some reduced form — a naturally
+        // mixed-precision plan.
+        let mut a = Architecture::new("mixed-1d", &[2, 16]);
+        a.push("conv1", LayerKind::Conv1d { out_ch: 3, k: 3, stride: 1, pad: 1 });
+        a.push("relu", LayerKind::Relu);
+        a.push("flatten", LayerKind::Flatten);
+        a.push("fc", LayerKind::Dense { out: 4 });
+        a.push("softmax", LayerKind::Softmax);
+        let planned = PlannedExecutor::with_random_weights(
+            a,
+            17,
+            PlanOptions::with_precision(PlanPrecision::Auto),
+        )
+        .unwrap();
+        let plan = planned.plan_for(1).unwrap();
+        let precs: BTreeMap<String, DType> = plan
+            .weight_precisions()
+            .into_iter()
+            .map(|(n, d)| (n.to_string(), d))
+            .collect();
+        assert_eq!(precs["conv1"], DType::F32);
+        assert_ne!(precs["fc"], DType::F32);
+        // The dump names the resident total and tags the quantized step.
+        let dump = plan.dump();
+        assert!(dump.contains("resident weights"), "{dump}");
+        assert!(
+            dump.contains(" [f16]") || dump.contains(" [i8]"),
+            "quantized dense step untagged: {dump}"
+        );
+        // And it still runs.
+        let x = Tensor::randn(Shape::new(&[1, 2, 16]), 23, 1.0);
+        let y = planned.forward(&x).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 4]);
+    }
+
+    #[test]
+    fn precision_parse_round_trips() {
+        for s in ["f32", "f16", "int8", "auto"] {
+            assert_eq!(PlanPrecision::parse(s).unwrap().name(), s);
+        }
+        assert!(PlanPrecision::parse("bf16").is_err());
+        assert_eq!(PlanPrecision::F32.estimate_bytes_per_param(), 4);
+        assert_eq!(PlanPrecision::F16.estimate_bytes_per_param(), 2);
+        assert_eq!(PlanPrecision::Int8.estimate_bytes_per_param(), 1);
+        assert_eq!(PlanPrecision::Auto.estimate_bytes_per_param(), 4);
+    }
+
+    #[test]
+    fn pick_precision_respects_budget() {
+        let cm = CostModel::analytic();
+        let w = Tensor::randn(Shape::new(&[16, 16]), 41, 1.0);
+        // Zero or negative budget always means f32.
+        assert_eq!(cm.pick_precision(&w, 0.0), DType::F32);
+        assert_eq!(cm.pick_precision(&w, -1.0), DType::F32);
+        // A generous budget admits i8, the smallest form.
+        assert_eq!(cm.pick_precision(&w, 0.5), DType::I8);
+        // A tensor with one huge outlier blows the i8 step size; a
+        // moderate budget lands on f16 instead.
+        let mut data = w.data().to_vec();
+        data[0] = 1.0e4;
+        let spiky = Tensor::new(Shape::new(&[16, 16]), data).unwrap();
+        assert_eq!(cm.pick_precision(&spiky, 0.005), DType::F16);
     }
 
     #[test]

@@ -66,7 +66,6 @@ impl CpuModel {
             );
         }
         let store = WeightStore::from_bytes(&weight_blob)?;
-        let weight_bytes = manifest.arch.param_count()? * 4;
 
         let mut batches = manifest.aot_batches.clone();
         batches.sort_unstable();
@@ -87,6 +86,15 @@ impl CpuModel {
         // plan's first execute and are reused forever after.
         let planned = PlannedExecutor::new(manifest.arch.clone(), exec.shared_weights(), opts)?;
         planned.precompile(&batches)?;
+        // Resident bytes at the plans' actual per-layer precisions
+        // (batch-independent, so any ladder plan reports the same total).
+        // A pure-f32 plan reports exactly `param_count * 4`; quantized
+        // models charge their smaller resident size to cache/placement
+        // budgets, so a shard budget holds more of them.
+        let weight_bytes = match planned.cached_plan(batches[0]) {
+            Some(plan) => plan.resident_weight_bytes(),
+            None => manifest.arch.param_count()? * 4,
+        };
         Ok(CpuModel { manifest, exec, planned, weight_bytes, batches })
     }
 
@@ -257,6 +265,35 @@ mod tests {
             let planned = m.infer(&x).unwrap();
             let oracle = m.infer_interpreted(&x).unwrap();
             assert_eq!(planned.data(), oracle.data(), "batch {n}");
+        }
+    }
+
+    #[test]
+    fn quantized_load_charges_quantized_bytes_and_stays_close() {
+        use crate::nn::{ConvStrategy, PlanPrecision};
+        let dir = testutil::tiny_model_dir("cpu-quant", "tiny-quant", 16, 11);
+        let f32m = CpuModel::load_with(&dir, PlanOptions::fixed(ConvStrategy::Im2col)).unwrap();
+        assert_eq!(f32m.weight_bytes, f32m.manifest.arch.param_count().unwrap() * 4);
+        let i8m = CpuModel::load_with(
+            &dir,
+            PlanOptions {
+                precision: PlanPrecision::Int8,
+                ..PlanOptions::fixed(ConvStrategy::Im2col)
+            },
+        )
+        .unwrap();
+        assert!(
+            i8m.weight_bytes * 2 <= f32m.weight_bytes,
+            "int8 resident {} vs f32 {}",
+            i8m.weight_bytes,
+            f32m.weight_bytes
+        );
+        // Still serves, still a softmax distribution close to f32.
+        let x = Tensor::randn(Shape::nchw(2, 1, 8, 8), 29, 1.0);
+        let yq = i8m.infer(&x).unwrap();
+        let y = f32m.infer(&x).unwrap();
+        for (a, b) in yq.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
         }
     }
 

@@ -26,7 +26,7 @@ use super::loaded_model::LoadedModel;
 use super::pool::Overloaded;
 use crate::metrics::Histogram;
 use crate::model::Manifest;
-use crate::nn::{PlanOptions, PlanStrategy};
+use crate::nn::{PlanOptions, PlanPrecision, PlanStrategy};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -86,6 +86,10 @@ pub struct EngineConfig {
     /// load (CPU backend): per-layer auto selection by default, or one
     /// forced strategy (`dlk serve --conv-strategy`).
     pub strategy: PlanStrategy,
+    /// Weight-residency precision policy for those plans (`dlk serve
+    /// --precision`): f32 by default; f16/int8 keep quantized weights
+    /// resident, `auto` lets the cost model pick per layer.
+    pub precision: PlanPrecision,
 }
 
 impl Default for EngineConfig {
@@ -95,6 +99,7 @@ impl Default for EngineConfig {
             queue_cap: 1024,
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
+            precision: PlanPrecision::F32,
         }
     }
 }
@@ -222,15 +227,19 @@ impl Engine {
 /// The backend a shard thread owns (kept on-thread: PJRT handles are
 /// `!Send`).
 enum Backend {
-    Cpu { strategy: PlanStrategy },
+    Cpu { strategy: PlanStrategy, precision: PlanPrecision },
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtClient),
 }
 
 impl Backend {
-    fn create(kind: BackendKind, strategy: PlanStrategy) -> crate::Result<Backend> {
+    fn create(
+        kind: BackendKind,
+        strategy: PlanStrategy,
+        precision: PlanPrecision,
+    ) -> crate::Result<Backend> {
         match kind {
-            BackendKind::Cpu => Ok(Backend::Cpu { strategy }),
+            BackendKind::Cpu => Ok(Backend::Cpu { strategy, precision }),
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => match xla::PjRtClient::cpu() {
                 Ok(c) => Ok(Backend::Pjrt(c)),
@@ -241,9 +250,13 @@ impl Backend {
 
     fn load(&self, dir: &std::path::Path) -> crate::Result<Resident> {
         match self {
-            Backend::Cpu { strategy } => Ok(Resident::Cpu(CpuModel::load_with(
+            Backend::Cpu { strategy, precision } => Ok(Resident::Cpu(CpuModel::load_with(
                 dir,
-                PlanOptions { strategy: *strategy, cost_model: None },
+                PlanOptions {
+                    strategy: *strategy,
+                    precision: *precision,
+                    ..PlanOptions::default()
+                },
             )?)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(client) => Ok(Resident::Pjrt(LoadedModel::load(client, dir)?)),
@@ -331,7 +344,7 @@ fn engine_main(
     rx: mpsc::Receiver<Request>,
     ready: mpsc::Sender<crate::Result<()>>,
 ) {
-    let backend = match Backend::create(config.backend, config.strategy) {
+    let backend = match Backend::create(config.backend, config.strategy, config.precision) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b

@@ -31,7 +31,7 @@ use std::time::Instant;
 use super::placement::{Placement, ReplicaAssignment};
 use crate::metrics::{PoolUtilization, ReplicaLoad};
 use crate::model::{Manifest, ModelFiles};
-use crate::nn::PlanStrategy;
+use crate::nn::{PlanPrecision, PlanStrategy};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -118,6 +118,11 @@ pub struct PoolConfig {
     /// Conv-strategy policy for plans compiled at model load, applied by
     /// every shard (`--conv-strategy` on the CLI).
     pub strategy: PlanStrategy,
+    /// Weight-residency precision policy for those plans, applied by
+    /// every shard (`--precision` on the CLI). Quantized models charge
+    /// their quantized bytes to placement and cache budgets, so a shard
+    /// budget holds proportionally more replicas.
+    pub precision: PlanPrecision,
 }
 
 impl Default for PoolConfig {
@@ -128,6 +133,7 @@ impl Default for PoolConfig {
             replicas: 1,
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
+            precision: PlanPrecision::F32,
         }
     }
 }
@@ -236,6 +242,7 @@ impl EnginePool {
                 queue_cap: config.queue_cap,
                 backend: config.backend,
                 strategy: config.strategy,
+                precision: config.precision,
             })?);
         }
         Ok(PoolHandle {
@@ -244,6 +251,7 @@ impl EnginePool {
             routes: Arc::new(Mutex::new(BTreeMap::new())),
             route_clock: Arc::new(AtomicUsize::new(0)),
             default_replicas: config.replicas.max(1),
+            estimate_bytes_per_param: config.precision.estimate_bytes_per_param(),
         })
     }
 }
@@ -262,6 +270,10 @@ pub struct PoolHandle {
     route_clock: Arc<AtomicUsize>,
     /// Pool-default replica count for loads without a per-model override.
     default_replicas: usize,
+    /// Manifest-peek placement estimate: bytes per parameter at the
+    /// pool's precision policy. Replaced by the plan's actual resident
+    /// bytes as soon as each shard's load completes.
+    estimate_bytes_per_param: usize,
 }
 
 impl PoolHandle {
@@ -275,6 +287,7 @@ impl PoolHandle {
             routes: Arc::new(Mutex::new(BTreeMap::new())),
             route_clock: Arc::new(AtomicUsize::new(0)),
             default_replicas: 1,
+            estimate_bytes_per_param: 4,
         }
     }
 
@@ -414,7 +427,11 @@ impl PoolHandle {
         // placement can decide before the heavyweight loads run on the
         // chosen shards' threads.
         let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
-        let estimate = manifest.arch.param_count().map(|p| p * 4).unwrap_or(0);
+        let estimate = manifest
+            .arch
+            .param_count()
+            .map(|p| p * self.estimate_bytes_per_param)
+            .unwrap_or(0);
         let k = replicas.unwrap_or(self.default_replicas);
         // Decide and *reserve* under one lock acquisition: the estimate is
         // committed immediately for every target so concurrent loads see

@@ -187,6 +187,12 @@ pub struct PulledModel {
 /// `weights_sha256` against the materialized dense weights (so a
 /// compressed package proves it reconstructed exactly what the publisher
 /// hashed).
+///
+/// Quantized *execution* does not change this contract: the wire and
+/// on-disk forms stay dense f32 and verify against the same hashes;
+/// f16/int8 residency (a pool's `--precision` policy) is applied at
+/// plan-compile time when the pulled directory loads, with no f32
+/// re-round-trip of the stored weights.
 pub fn pull(
     registry: &Registry,
     id: &str,

@@ -99,6 +99,21 @@ pub fn f32_to_f16_bits(value: f32) -> u16 {
     sign // underflow to signed zero
 }
 
+/// Process-wide f16 → f32 decode table: all 65,536 bit patterns (256 KiB),
+/// built on first use. Kernel inner loops over f16-resident weights index
+/// this instead of running the branchy bit conversion per element.
+pub fn f16_lut() -> &'static [f32; 1 << 16] {
+    use std::sync::OnceLock;
+    static LUT: OnceLock<Box<[f32; 1 << 16]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut table = vec![0.0f32; 1 << 16].into_boxed_slice();
+        for (i, v) in table.iter_mut().enumerate() {
+            *v = f16_bits_to_f32(i as u16);
+        }
+        table.try_into().expect("table has 1<<16 entries")
+    })
+}
+
 /// Convert IEEE binary16 bits to `f32` (exact).
 pub fn f16_bits_to_f32(bits: u16) -> f32 {
     let sign = ((bits & 0x8000) as u32) << 16;
@@ -205,6 +220,22 @@ mod tests {
                 assert_eq!(back, bits, "bits={bits:#06x} f={f}");
             }
         }
+    }
+
+    #[test]
+    fn lut_agrees_with_conversion_for_all_patterns() {
+        let lut = f16_lut();
+        for bits in 0u16..=u16::MAX {
+            let direct = f16_bits_to_f32(bits);
+            let table = lut[bits as usize];
+            if direct.is_nan() {
+                assert!(table.is_nan(), "bits={bits:#06x}");
+            } else {
+                assert_eq!(table.to_bits(), direct.to_bits(), "bits={bits:#06x}");
+            }
+        }
+        // Same allocation on every call.
+        assert!(std::ptr::eq(f16_lut(), lut));
     }
 
     #[test]

@@ -11,6 +11,6 @@ mod shape;
 #[allow(clippy::module_inception)]
 mod tensor;
 
-pub use dtype::{f16_bits_to_f32, f32_to_f16_bits, DType};
+pub use dtype::{f16_bits_to_f32, f16_lut, f32_to_f16_bits, DType};
 pub use shape::Shape;
 pub use tensor::Tensor;

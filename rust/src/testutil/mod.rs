@@ -53,6 +53,40 @@ pub fn assert_allclose(actual: &[f32], expected: &[f32], rtol: f32, atol: f32) {
     }
 }
 
+/// The oracle-parity tolerance contract, defined once and reused by the
+/// parity tests (`rust/tests/plan.rs`) and the E14 bench
+/// (`fig_quantized_exec`): a planned execution at resident precision `d`
+/// must match the f32 interpreter oracle elementwise within
+/// `|a-e| <= atol(d) + rtol(d)*|e|`.
+///
+/// - **f32**: plans are bit-exact against the oracle under a fixed conv
+///   strategy; the contract budget (1e-3 / 1e-4) covers per-layer *auto*
+///   strategy picks, where a different kernel changes f32 summation
+///   order.
+/// - **f16**: RNE weight rounding adds <= 2^-11 relative error per
+///   weight; through a few He-initialized layers the softmax outputs
+///   move by well under the 1e-2 / 5e-3 budget.
+/// - **i8**: symmetric per-tensor quantization carries ~0.7% relative
+///   RMS weight error per layer; accumulated over the deepest test
+///   architectures the outputs stay inside 1e-1 / 5e-2 with margin,
+///   while a wrong scale or clamp blows past it immediately.
+pub fn parity_tolerance(dtype: crate::tensor::DType) -> (f32, f32) {
+    use crate::tensor::DType;
+    match dtype {
+        DType::F32 => (1e-3, 1e-4),
+        DType::F16 => (1e-2, 5e-3),
+        DType::I8 => (1e-1, 5e-2),
+    }
+}
+
+/// [`assert_allclose`] under the [`parity_tolerance`] contract for one
+/// resident precision.
+#[track_caller]
+pub fn assert_within_tolerance(actual: &[f32], expected: &[f32], dtype: crate::tensor::DType) {
+    let (rtol, atol) = parity_tolerance(dtype);
+    assert_allclose(actual, expected, rtol, atol);
+}
+
 /// Run a property over `cases` generated inputs, reporting the seed of the
 /// failing case so it can be replayed.
 #[track_caller]
@@ -101,6 +135,26 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn allclose_fails_on_length() {
         assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn tolerance_contract_orders_precisions() {
+        use crate::tensor::DType;
+        // Reduced precision always gets a wider band than f32, i8 wider
+        // than f16 — the contract must stay monotone or the parity matrix
+        // stops meaning anything.
+        let (r32, a32) = parity_tolerance(DType::F32);
+        let (r16, a16) = parity_tolerance(DType::F16);
+        let (r8, a8) = parity_tolerance(DType::I8);
+        assert!(r32 < r16 && r16 < r8);
+        assert!(a32 < a16 && a16 < a8);
+        assert_within_tolerance(&[1.0], &[1.0005], DType::F16);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn tolerance_contract_still_rejects_garbage() {
+        assert_within_tolerance(&[0.9], &[0.1], crate::tensor::DType::I8);
     }
 
     #[test]

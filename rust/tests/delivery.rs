@@ -552,3 +552,133 @@ fn delivery_timing_reports_every_leg() {
     assert!(s.contains("cold-start"), "{s}");
     pool.shutdown();
 }
+
+#[test]
+fn quantized_pull_and_f32_to_int8_swap_fail_zero_requests() {
+    use deeplearningkit::nn::PlanPrecision;
+    use deeplearningkit::tensor::DType;
+
+    let root = testutil::tempdir("delivery-quant");
+    let reg = Registry::open(root.join("registry")).unwrap();
+    let pub_report = store::publish_synthetic(
+        &reg,
+        testutil::tiny_cnn("quant-m", 16),
+        150,
+        WirePlan::Compressed(compression::StagePlan::default()),
+        "v1",
+    )
+    .unwrap();
+
+    // The wire format is precision-agnostic: the package carries f32
+    // weights under the unchanged dense-sha verification contract;
+    // quantized residency happens at plan-compile time on the device.
+    let mut net = SimulatedNetwork::wifi();
+    let dest = root.join("device");
+    let v1 = deploy::pull(&reg, "quant-m", None, &mut net, &dest).unwrap();
+    assert!(v1.was_compressed);
+    let bytes = std::fs::read(ModelFiles::new(&v1.dir).weights()).unwrap();
+    assert_eq!(store::sha256_hex(&bytes), pub_report.weights_sha256);
+
+    // An int8 pool loads the pulled directory with quantized residency...
+    let pool = EnginePool::start(PoolConfig {
+        shards: 2,
+        queue_cap: 1024,
+        backend: BackendKind::Cpu,
+        precision: PlanPrecision::Int8,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut coord = Coordinator::over_pool(
+        pool.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_cap: 1024,
+            },
+        },
+    );
+    let info = coord.serve_model(&v1.dir).unwrap();
+    let f32_bytes = Manifest::load(&ModelFiles::new(&v1.dir).manifest())
+        .unwrap()
+        .arch
+        .param_count()
+        .unwrap()
+        * 4;
+    assert!(
+        info.weight_bytes * 2 <= f32_bytes,
+        "quantized residency must at least halve the f32 bytes: {} vs {f32_bytes}",
+        info.weight_bytes
+    );
+
+    // ...and serves inside the i8 tolerance band of an f32 engine loaded
+    // from the very same pulled directory.
+    let x_item = Tensor::randn(Shape::new(&[1usize, 8, 8]), 31_337, 1.0);
+    let x_batch = Tensor::new(Shape::nchw(1, 1, 8, 8), x_item.data().to_vec()).unwrap();
+    let ref1 = reference_output(&v1.dir, "quant-m", &x_batch);
+    let got = coord.infer("quant-m", x_item.clone()).unwrap();
+    testutil::assert_within_tolerance(got.output.data(), ref1.data(), DType::I8);
+
+    // Mid-workload version bump: v2 travels as f32 wire bytes, the swap
+    // recompiles it into int8 residency on the serving shard, and no
+    // request fails while the weights change under the traffic.
+    let coord = std::sync::Arc::new(coord);
+    let completed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 60;
+    let report = std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let coord = coord.clone();
+            let completed = &completed;
+            let failed = &failed;
+            scope.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let x = Tensor::randn(
+                        Shape::new(&[1usize, 8, 8]),
+                        (c * PER_CLIENT + i) as u64,
+                        1.0,
+                    );
+                    match coord.infer("quant-m", x) {
+                        Ok(r) => {
+                            assert_eq!(r.output.shape().dims(), &[4]);
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+
+        std::thread::sleep(Duration::from_millis(20));
+        store::publish_synthetic(
+            &reg,
+            testutil::tiny_cnn("quant-m", 16),
+            160,
+            WirePlan::Compressed(compression::StagePlan::default()),
+            "v2",
+        )
+        .unwrap();
+        let mut net = SimulatedNetwork::wifi();
+        let v2 = deploy::pull(&reg, "quant-m", None, &mut net, &dest).unwrap();
+        coord.update_model("quant-m", &v2.dir).unwrap()
+    });
+
+    assert_eq!(
+        failed.load(Ordering::Relaxed),
+        0,
+        "an f32-wire → int8-resident hot-swap must fail zero requests"
+    );
+    assert_eq!(completed.load(Ordering::Relaxed), (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(report.old_version, Some(1));
+    assert_eq!(report.info.version, 2);
+    assert!(report.info.weight_bytes * 2 <= f32_bytes, "v2 swapped in quantized too");
+
+    // Post-swap traffic tracks the v2 f32 reference inside the band.
+    let ref2 = reference_output(&dest.join("quant-m").join("v2"), "quant-m", &x_batch);
+    let after = coord.infer("quant-m", x_item).unwrap();
+    testutil::assert_within_tolerance(after.output.data(), ref2.data(), DType::I8);
+    pool.shutdown();
+}

@@ -8,11 +8,18 @@
 //! 3. **Plan-cache behavior across a hot-swap**: a `PoolHandle::swap`
 //!    rebuilds the ladder's plans for the new version and keeps serving
 //!    every ladder batch size, bit-exact with a fresh load.
+//! 4. **Quantized parity matrix**: every `LayerKind` × every ladder
+//!    batch size × {f32, f16, int8} planned execution against the f32
+//!    interpreter oracle, within the shared tolerance contract
+//!    (`testutil::assert_within_tolerance`), plus mixed-precision plans
+//!    chosen by the cost model.
 
 use deeplearningkit::model::{Architecture, LayerKind};
-use deeplearningkit::nn::{ConvStrategy, CpuExecutor, PlanOptions, PlannedExecutor};
+use deeplearningkit::nn::{
+    ConvStrategy, CpuExecutor, PlanOptions, PlanPrecision, PlannedExecutor,
+};
 use deeplearningkit::runtime::{BackendKind, CpuModel, EnginePool, PoolConfig};
-use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::tensor::{DType, Shape, Tensor};
 use deeplearningkit::testutil;
 
 /// 2-D architecture covering Conv2d, Relu, MaxPool2d, AvgPool2d,
@@ -103,6 +110,88 @@ fn auto_plan_agrees_with_oracle_within_cross_strategy_tolerance() {
             let expect = oracle.forward(&x).unwrap();
             let got = planned.forward(&x).unwrap();
             testutil::assert_allclose(got.data(), expect.data(), 1e-3, 1e-4);
+        }
+    }
+}
+
+/// The quantized parity matrix: every `LayerKind` × every ladder batch
+/// size × every precision policy, planned execution against the f32
+/// interpreter oracle, inside the tolerance contract defined once in
+/// `testutil::parity_tolerance` (shared with the E14 bench).
+#[test]
+fn quantized_parity_matrix_all_kinds_all_ladder_batches() {
+    for arch_fn in [arch_2d, arch_gap, arch_1d] {
+        let oracle = CpuExecutor::with_random_weights(arch_fn(), 77).unwrap();
+        for (precision, dtype) in [
+            (PlanPrecision::F32, DType::F32),
+            (PlanPrecision::F16, DType::F16),
+            (PlanPrecision::Int8, DType::I8),
+        ] {
+            let planned = PlannedExecutor::with_random_weights(
+                arch_fn(),
+                77,
+                PlanOptions::with_precision(precision),
+            )
+            .unwrap();
+            for &batch in &CpuModel::DEFAULT_BATCHES {
+                let x = input_for(oracle.arch(), batch, 60 + batch as u64);
+                let expect = oracle.forward(&x).unwrap();
+                let got = planned.forward(&x).unwrap();
+                assert_eq!(expect.shape(), got.shape());
+                testutil::assert_within_tolerance(got.data(), expect.data(), dtype);
+            }
+        }
+    }
+}
+
+/// Mixed-precision plans chosen by the cost model: `Auto` keeps conv1d
+/// f32-resident (no quantized kernel) while the dense head drops to a
+/// reduced form under the default accuracy budget — and the whole plan
+/// still tracks the oracle at its coarsest precision's tolerance.
+#[test]
+fn cost_model_auto_precision_mixes_layers_within_tolerance() {
+    let oracle = CpuExecutor::with_random_weights(arch_1d(), 19).unwrap();
+    let planned = PlannedExecutor::with_random_weights(
+        arch_1d(),
+        19,
+        PlanOptions::with_precision(PlanPrecision::Auto),
+    )
+    .unwrap();
+    let precisions = planned.plan_for(1).unwrap().weight_precisions();
+    let by_name: std::collections::BTreeMap<String, DType> =
+        precisions.iter().map(|(n, d)| (n.to_string(), *d)).collect();
+    assert_eq!(by_name["conv1"], DType::F32, "conv1d has no quantized kernel");
+    assert_ne!(by_name["fc"], DType::F32, "dense head should fit a reduced form");
+
+    let coarsest = if precisions.iter().any(|(_, d)| *d == DType::I8) {
+        DType::I8
+    } else {
+        DType::F16
+    };
+    for &batch in &CpuModel::DEFAULT_BATCHES {
+        let x = input_for(oracle.arch(), batch, 80 + batch as u64);
+        let expect = oracle.forward(&x).unwrap();
+        let got = planned.forward(&x).unwrap();
+        testutil::assert_within_tolerance(got.data(), expect.data(), coarsest);
+    }
+}
+
+/// The loaded-model path (pad/slice contract included): a quantized
+/// `CpuModel` tracks its own `infer_interpreted` f32 oracle within the
+/// per-precision tolerance, including off-ladder batches that pad.
+#[test]
+fn loaded_quantized_model_tracks_interpreter_oracle() {
+    let dir = testutil::tiny_model_dir("plan-quant-parity", "quant-parity-m", 16, 21);
+    for (precision, dtype) in
+        [(PlanPrecision::F16, DType::F16), (PlanPrecision::Int8, DType::I8)]
+    {
+        let m = CpuModel::load_with(&dir, PlanOptions { precision, ..Default::default() })
+            .unwrap();
+        for n in [1usize, 3, 8] {
+            let x = Tensor::randn(Shape::nchw(n, 1, 8, 8), 90 + n as u64, 1.0);
+            let got = m.infer(&x).unwrap();
+            let expect = m.infer_interpreted(&x).unwrap();
+            testutil::assert_within_tolerance(got.data(), expect.data(), dtype);
         }
     }
 }

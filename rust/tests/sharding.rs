@@ -246,6 +246,128 @@ fn replica_set_shrinks_under_capacity_pressure() {
 }
 
 #[test]
+fn same_shard_budget_holds_more_int8_models_than_f32() {
+    use deeplearningkit::cache::{ModelCache, PolicyKind};
+    use deeplearningkit::nn::{ConvStrategy, PlanOptions, PlanPrecision, PlanStrategy};
+    use deeplearningkit::runtime::CpuModel;
+
+    // Pin the conv strategy so the resident footprint is deterministic (a
+    // cost-model kernel pick could otherwise change which weights quantize).
+    let strategy = PlanStrategy::Fixed(ConvStrategy::Im2col);
+    let dirs: Vec<_> = (0..4)
+        .map(|k| testutil::tiny_model_dir("shard-qcache", &format!("qc-{k}"), 16, 60 + k as u64))
+        .collect();
+    let f32_bytes = CpuModel::load_with(&dirs[0], PlanOptions { strategy, ..Default::default() })
+        .unwrap()
+        .weight_bytes;
+    let i8_bytes = CpuModel::load_with(
+        &dirs[0],
+        PlanOptions { strategy, precision: PlanPrecision::Int8, ..Default::default() },
+    )
+    .unwrap()
+    .weight_bytes;
+    assert!(i8_bytes * 2 <= f32_bytes, "int8 residency must at least halve: {i8_bytes} vs {f32_bytes}");
+
+    // A budget that holds exactly one f32 copy of the fixture...
+    let budget = f32_bytes;
+    let f32_pool = EnginePool::start(PoolConfig {
+        shards: 1,
+        queue_cap: 64,
+        backend: BackendKind::Cpu,
+        strategy,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut f32_cache = ModelCache::over_pool(f32_pool.clone(), budget, PolicyKind::Lru);
+    f32_cache.register("qc-0", &dirs[0]);
+    f32_cache.register("qc-1", &dirs[1]);
+    f32_cache.ensure("qc-0").unwrap();
+    let access = f32_cache.ensure("qc-1").unwrap();
+    assert_eq!(access.evicted, vec!["qc-0".to_string()], "two f32 copies cannot share the budget");
+    assert_eq!(f32_cache.stats().resident_bytes, f32_bytes);
+    f32_pool.shutdown();
+
+    // ...holds three int8 copies at once on a pool serving quantized
+    // plans, with the byte counter tracking the quantized sizes.
+    let i8_pool = EnginePool::start(PoolConfig {
+        shards: 1,
+        queue_cap: 64,
+        backend: BackendKind::Cpu,
+        strategy,
+        precision: PlanPrecision::Int8,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut i8_cache = ModelCache::over_pool(i8_pool.clone(), budget, PolicyKind::Lru);
+    for (k, dir) in dirs.iter().enumerate() {
+        i8_cache.register(&format!("qc-{k}"), dir);
+    }
+    for k in 0..3 {
+        let access = i8_cache.ensure(&format!("qc-{k}")).unwrap();
+        assert!(access.evicted.is_empty(), "3 quantized models fit where 1 f32 did");
+    }
+    assert!((0..3).all(|k| i8_cache.is_resident(&format!("qc-{k}"))));
+    assert_eq!(i8_cache.stats().resident_bytes, 3 * i8_bytes);
+
+    // A fourth pushes past the budget: LRU makes room at int8 granularity
+    // and the counter keeps matching the quantized resident set.
+    let access = i8_cache.ensure("qc-3").unwrap();
+    assert_eq!(access.evicted, vec!["qc-0".to_string()]);
+    assert_eq!(i8_cache.stats().evictions, 1);
+    assert_eq!(i8_cache.stats().resident_bytes, 3 * i8_bytes);
+    let (out, _) =
+        i8_cache.infer("qc-3", Tensor::randn(Shape::nchw(1, 1, 8, 8), 9, 1.0)).unwrap();
+    assert_eq!(out.shape().dims(), &[1, 4]);
+    i8_pool.shutdown();
+}
+
+#[test]
+fn quantized_replica_shrink_keeps_byte_counters_exact() {
+    use deeplearningkit::cache::{ModelCache, PolicyKind};
+    use deeplearningkit::nn::{ConvStrategy, PlanOptions, PlanPrecision, PlanStrategy};
+    use deeplearningkit::runtime::CpuModel;
+
+    let strategy = PlanStrategy::Fixed(ConvStrategy::Im2col);
+    let hot_dir = testutil::tiny_model_dir("shard-qshrink", "q-hot", 16, 70);
+    let cold_dir = testutil::tiny_model_dir("shard-qshrink", "q-cold", 16, 71);
+    let i8_bytes = CpuModel::load_with(
+        &hot_dir,
+        PlanOptions { strategy, precision: PlanPrecision::Int8, ..Default::default() },
+    )
+    .unwrap()
+    .weight_bytes;
+
+    // Per-shard budget fits one *quantized* copy per shard — an f32 copy
+    // of the same fixture (~4x larger) would not even load.
+    let budget = i8_bytes + i8_bytes / 2;
+    let pool = EnginePool::start(PoolConfig {
+        shards: 2,
+        queue_cap: 64,
+        backend: BackendKind::Cpu,
+        strategy,
+        precision: PlanPrecision::Int8,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut cache = ModelCache::over_pool(pool.clone(), budget, PolicyKind::Lru);
+    cache.register_replicated("q-hot", hot_dir, 2);
+    cache.register("q-cold", cold_dir);
+
+    assert_eq!(cache.ensure("q-hot").unwrap().replica_shards, vec![0, 1]);
+    assert_eq!(cache.stats().resident_bytes, 2 * i8_bytes, "each replica pins quantized bytes");
+
+    // The newcomer shrinks the hot set on its landing shard; the byte
+    // counter stays exact at int8 granularity through the churn.
+    let access = cache.ensure("q-cold").unwrap();
+    assert_eq!(access.shrunk, vec![("q-hot".to_string(), access.shard)]);
+    assert!(access.evicted.is_empty(), "hot must shrink, not evict");
+    assert_eq!(cache.stats().shrinks, 1);
+    assert_eq!(cache.stats().resident_bytes, 2 * i8_bytes);
+    assert_eq!(pool.replica_count("q-hot"), 1);
+    pool.shutdown();
+}
+
+#[test]
 fn concurrent_clients_across_sharded_models() {
     // Smoke the full stack under concurrency: 4 models on 2 shards, 4
     // client threads each hammering one model.
