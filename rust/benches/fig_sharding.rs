@@ -11,8 +11,9 @@
 //! admission control: a stalled shard sheds a burst with typed
 //! `Overloaded` rejections instead of queueing without bound.
 
-use deeplearningkit::bench::bench_header;
+use deeplearningkit::bench::{bench_header, persist};
 use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use deeplearningkit::json::Value;
 use deeplearningkit::metrics::Table;
 use deeplearningkit::model::lenet;
 use deeplearningkit::runtime::{BackendKind, EnginePool, Overloaded, PoolConfig};
@@ -65,6 +66,7 @@ fn main() {
         &["shards", "throughput", "speedup", "p50", "p99", "imbalance"],
     );
     let mut baseline_rps: Option<f64> = None;
+    let mut sweep = Value::array();
     for shards in [1usize, 2, 4, 8] {
         let pool = EnginePool::start(PoolConfig {
             shards,
@@ -123,10 +125,35 @@ fn main() {
             format!("{:.1}ms", stats.p99_us as f64 / 1000.0),
             format!("{:.2}", util.imbalance()),
         ]);
+        sweep.push(Value::obj(&[
+            ("shards", shards.into()),
+            ("throughput_rps", rps.into()),
+            ("speedup_vs_1_shard", speedup.into()),
+            ("p50_us", (stats.p50_us as usize).into()),
+            ("p99_us", (stats.p99_us as usize).into()),
+            ("imbalance", util.imbalance().into()),
+        ]));
         assert_eq!(failed.load(Ordering::Relaxed), 0, "no request may fail in the sweep");
         pool.shutdown();
     }
     table.print();
+    persist(
+        "E10",
+        &Value::obj(&[
+            ("experiment", "E10".into()),
+            ("title", "multi-model aggregate throughput vs shard count".into()),
+            (
+                "config",
+                Value::obj(&[
+                    ("models", MODELS.into()),
+                    ("clients", CLIENTS.into()),
+                    ("requests", total_requests.into()),
+                    ("backend", "cpu".into()),
+                ]),
+            ),
+            ("sweep", sweep),
+        ]),
+    );
     println!(
         "\nshape: with one shard every model serializes onto a single engine\n\
          thread (the seed architecture); shards add parallel engine threads\n\

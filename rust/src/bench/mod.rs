@@ -86,6 +86,19 @@ impl Bench {
     }
 }
 
+/// Persist a bench result document as `BENCH_<id>.json` in the current
+/// working directory (`cargo bench` runs from the workspace root, so the
+/// repo accumulates a machine-readable trajectory of experiment results
+/// alongside the printed tables). Failure to write is a warning, not a
+/// bench failure — CI may run from a read-only checkout.
+pub fn persist(experiment_id: &str, doc: &crate::json::Value) {
+    let path = std::path::PathBuf::from(format!("BENCH_{experiment_id}.json"));
+    match crate::json::to_file(&path, doc) {
+        Ok(()) => println!("\npersisted {}", path.display()),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
 /// Header printed at the top of every bench binary, naming the paper
 /// artifact being regenerated.
 pub fn bench_header(experiment_id: &str, paper_artifact: &str) {

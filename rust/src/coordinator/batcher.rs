@@ -5,6 +5,16 @@
 //! Classic serving trade-off: larger batches raise throughput (one PJRT
 //! dispatch amortized over more items), the deadline bounds added latency.
 //! Experiment E8 sweeps this.
+//!
+//! The flush is split into two halves so the serving workers can
+//! **stream** batches into a shard's pipeline window instead of blocking
+//! on completion: [`Batcher::take`] forms a [`PreparedBatch`] (stacked
+//! input + the pending repliers), and [`Batcher::scatter`] distributes an
+//! execution result back to them. [`Batcher::flush`] composes the two for
+//! synchronous callers and tests. Time is injected everywhere
+//! ([`Batcher::push_at`], [`Batcher::should_flush`], [`Batcher::take`]
+//! all take `now`), so the flush invariants are testable with a synthetic
+//! clock — no sleeps.
 
 use crate::runtime::{Overloaded, Routed};
 use crate::tensor::{Shape, Tensor};
@@ -51,11 +61,47 @@ pub struct BatchMeta {
     /// Index of the chosen replica within the model's owner set (0 for an
     /// unreplicated model — the single owner).
     pub replica: usize,
+    /// Pipeline-window occupancy on the executing shard when this batch
+    /// took its slot (1 = it had the pipeline to itself).
+    pub window: usize,
+    /// Stage-phase time for the batch on the shard (microseconds).
+    pub stage_micros: u64,
+    /// Execute-phase time for the batch on the shard (microseconds).
+    pub exec_micros: u64,
+}
+
+/// A formed batch en route to execution: the stacked `[n, ...]` input plus
+/// the repliers awaiting its rows. Produced by [`Batcher::take`], resolved
+/// by [`Batcher::scatter`] — in between it can sit in a shard's pipeline
+/// window while the batcher keeps collecting.
+pub struct PreparedBatch {
+    input: Tensor,
+    batch: Vec<Pending>,
+    /// When the batch was formed (each reply's `queue_micros` measures
+    /// enqueue → this point).
+    taken: Instant,
+}
+
+impl PreparedBatch {
+    /// The stacked `[n, ...per-item dims]` input tensor.
+    pub fn input(&self) -> &Tensor {
+        &self.input
+    }
+
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.batch.len()
+    }
+
+    /// Whether the batch is empty (never true for a `take`-produced batch).
+    pub fn is_empty(&self) -> bool {
+        self.batch.is_empty()
+    }
 }
 
 /// The batching core: owns the queue, decides when to flush. Execution is
-/// delegated to the caller-provided closure so the same logic is testable
-/// without a PJRT engine.
+/// delegated to the caller so the same logic is testable without a PJRT
+/// engine.
 ///
 /// The flush deadline counts from when the oldest request was *pushed into
 /// this queue*, not from client submit time: requests that waited in the
@@ -84,11 +130,19 @@ impl Batcher {
 
     /// Enqueue a request. Errors (backpressure) if the queue is full.
     pub fn push(&mut self, pending: Pending) -> Result<(), Pending> {
+        self.push_at(pending, Instant::now())
+    }
+
+    /// [`Batcher::push`] with an injected clock: `now` becomes the
+    /// deadline anchor when this push makes the queue non-empty. The
+    /// queue-cap check is exact — the push that would make the queue hold
+    /// `queue_cap + 1` requests is the first one rejected.
+    pub fn push_at(&mut self, pending: Pending, now: Instant) -> Result<(), Pending> {
         if self.queue.len() >= self.config.queue_cap {
             return Err(pending);
         }
         if self.queue.is_empty() {
-            self.oldest_pushed = Some(Instant::now());
+            self.oldest_pushed = Some(now);
         }
         self.queue.push(pending);
         Ok(())
@@ -118,36 +172,29 @@ impl Batcher {
         })
     }
 
-    /// Take up to `max_batch` requests, stack their inputs into one batch
-    /// tensor, run `exec`, and scatter results (or the error) back to every
-    /// reply channel. `exec` returns the output batch plus the routing
-    /// decision — which shard/replica executed it (surfaced to clients via
-    /// [`BatchMeta`]).
-    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<(Tensor, Routed)>) {
+    /// Form a batch: drain up to `max_batch` requests and stack their
+    /// inputs into one `[n, ...]` tensor. Returns `None` when the queue is
+    /// empty or the drained requests mixed per-item shapes (those all get
+    /// an error reply here — a malformed batch never reaches execution).
+    /// `now` re-anchors the deadline for whatever stays queued.
+    pub fn take(&mut self, now: Instant) -> Option<PreparedBatch> {
         if self.queue.is_empty() {
-            return;
+            return None;
         }
         let take = self.queue.len().min(self.config.max_batch);
         let batch: Vec<Pending> = self.queue.drain(..take).collect();
-        self.oldest_pushed = if self.queue.is_empty() { None } else { Some(Instant::now()) };
+        self.oldest_pushed = if self.queue.is_empty() { None } else { Some(now) };
         let n = batch.len();
-        let now = Instant::now();
 
         // Stack inputs: all must share the per-item shape.
         let item_shape = batch[0].input.shape().clone();
-        let mut ok_shapes = true;
-        for p in &batch[1..] {
-            if p.input.shape() != &item_shape {
-                ok_shapes = false;
-            }
-        }
-        if !ok_shapes {
+        if batch[1..].iter().any(|p| p.input.shape() != &item_shape) {
             for p in batch {
                 let _ = p
                     .reply
                     .send(Err(anyhow::anyhow!("mixed input shapes in one model queue")));
             }
-            return;
+            return None;
         }
         let mut data = Vec::with_capacity(n * item_shape.numel());
         for p in &batch {
@@ -155,32 +202,44 @@ impl Batcher {
         }
         let mut dims = vec![n];
         dims.extend_from_slice(item_shape.dims());
-        let stacked = Tensor::new(Shape::new(&dims), data).expect("stack shapes consistent");
+        let input = Tensor::new(Shape::new(&dims), data).expect("stack shapes consistent");
+        Some(PreparedBatch { input, batch, taken: now })
+    }
 
-        match exec(&stacked) {
+    /// Resolve a formed batch: scatter output rows (with per-request
+    /// [`BatchMeta`]) or the failure back to every reply channel. Typed
+    /// `Overloaded` rejections are re-wrapped per requester so each caller
+    /// can downcast and apply backoff. An associated function — by the
+    /// time results arrive the batcher may already be collecting the next
+    /// batch, possibly on another thread.
+    pub fn scatter(prepared: PreparedBatch, result: crate::Result<(Tensor, Routed)>) {
+        let n = prepared.batch.len();
+        match result {
             Ok((out, routed)) => {
                 // Scatter rows back. Output is [n, ...per-item dims].
                 let row = out.numel() / n;
                 let out_dims: Vec<usize> = out.shape().dims()[1..].to_vec();
-                for (i, p) in batch.into_iter().enumerate() {
+                for (i, p) in prepared.batch.into_iter().enumerate() {
                     let slice = out.data()[i * row..(i + 1) * row].to_vec();
                     let t = Tensor::new(Shape::new(&out_dims), slice).expect("row shape");
                     let meta = BatchMeta {
                         batch_size: n,
-                        queue_micros: now.duration_since(p.enqueued).as_micros() as u64,
+                        queue_micros: prepared.taken.duration_since(p.enqueued).as_micros()
+                            as u64,
                         shard: routed.shard,
                         replica: routed.replica,
+                        window: routed.window,
+                        stage_micros: routed.stage_micros,
+                        exec_micros: routed.exec_micros,
                     };
                     let _ = p.reply.send(Ok((t, meta)));
                 }
             }
             Err(e) => {
-                // Every requester in the batch gets the failure. Typed
-                // `Overloaded` rejections are re-wrapped per requester so
-                // each caller can downcast and apply backoff.
+                // Every requester in the batch gets the failure.
                 let overloaded = e.downcast_ref::<Overloaded>().cloned();
                 let msg = e.to_string();
-                for p in batch {
+                for p in prepared.batch {
                     let err = match &overloaded {
                         Some(o) => anyhow::Error::new(o.clone()),
                         None => anyhow::anyhow!("batch execution failed: {msg}"),
@@ -190,11 +249,22 @@ impl Batcher {
             }
         }
     }
+
+    /// Synchronous flush: [`Batcher::take`] one batch, run `exec`, and
+    /// [`Batcher::scatter`] the result. The streaming workers use the two
+    /// halves directly so execution overlaps collection.
+    pub fn flush(&mut self, exec: impl FnOnce(&Tensor) -> crate::Result<(Tensor, Routed)>) {
+        if let Some(prepared) = self.take(Instant::now()) {
+            let result = exec(prepared.input());
+            Batcher::scatter(prepared, result);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testutil::XorShiftRng;
 
     fn pending(v: f32) -> (Pending, mpsc::Receiver<crate::Result<(Tensor, BatchMeta)>>) {
         let (tx, rx) = mpsc::channel();
@@ -225,7 +295,7 @@ mod tests {
             for v in out.data_mut() {
                 *v += 10.0;
             }
-            Ok((out, Routed { shard: 5, replica: 1, replicas: 2 }))
+            Ok((out, Routed::at(5, 1, 2)))
         });
         let (t1, m1) = r1.recv().unwrap().unwrap();
         let (t2, m2) = r2.recv().unwrap().unwrap();
@@ -241,17 +311,56 @@ mod tests {
 
     #[test]
     fn flushes_on_deadline() {
+        // Injected clock: one request, pushed at t0, must deadline-flush at
+        // exactly t0 + max_delay — no sooner, no sleeps.
         let cfg = BatcherConfig {
             max_batch: 100,
-            max_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
             ..Default::default()
         };
         let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
         let (p, _r) = pending(1.0);
-        b.push(p).map_err(|_| ()).unwrap();
-        assert!(!b.should_flush(Instant::now()));
-        std::thread::sleep(Duration::from_millis(2));
-        assert!(b.should_flush(Instant::now()));
+        b.push_at(p, t0).map_err(|_| ()).unwrap();
+        assert!(!b.should_flush(t0));
+        assert!(!b.should_flush(t0 + Duration::from_micros(4_999)));
+        assert!(b.should_flush(t0 + Duration::from_millis(5)));
+        assert!(b.should_flush(t0 + Duration::from_millis(50)));
+        assert_eq!(b.next_deadline(t0), Some(Duration::from_millis(5)));
+        assert_eq!(
+            b.next_deadline(t0 + Duration::from_millis(3)),
+            Some(Duration::from_millis(2))
+        );
+    }
+
+    #[test]
+    fn deadline_anchors_to_oldest_queued_not_newest() {
+        let cfg = BatcherConfig {
+            max_batch: 100,
+            max_delay: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        let (p1, _r1) = pending(1.0);
+        let (p2, _r2) = pending(2.0);
+        b.push_at(p1, t0).map_err(|_| ()).unwrap();
+        // A later push must NOT extend the oldest request's deadline.
+        b.push_at(p2, t0 + Duration::from_millis(4)).map_err(|_| ()).unwrap();
+        assert!(b.should_flush(t0 + Duration::from_millis(5)));
+        // After a partial take, the remainder re-anchors to the take time.
+        let cfg2 = BatcherConfig { max_batch: 1, ..cfg };
+        let mut b2 = Batcher::new(cfg2);
+        let (q1, _s1) = pending(1.0);
+        let (q2, _s2) = pending(2.0);
+        b2.push_at(q1, t0).map_err(|_| ()).unwrap();
+        b2.push_at(q2, t0).map_err(|_| ()).unwrap();
+        let taken = b2.take(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(taken.len(), 1);
+        assert_eq!(b2.len(), 1);
+        // The leftover's deadline counts from the take, not its push.
+        assert!(!b2.should_flush(t0 + Duration::from_millis(12)));
+        assert!(b2.should_flush(t0 + Duration::from_millis(15)));
     }
 
     #[test]
@@ -262,6 +371,89 @@ mod tests {
         let (p2, _r2) = pending(2.0);
         assert!(b.push(p1).is_ok());
         assert!(b.push(p2).is_err());
+    }
+
+    #[test]
+    fn queue_cap_boundary_is_exact() {
+        // Off-by-one pin: cap pushes are admitted, push cap+1 is rejected,
+        // and draining one slot re-admits exactly one.
+        for cap in [1usize, 2, 7, 64] {
+            let cfg = BatcherConfig { queue_cap: cap, max_batch: 1, ..Default::default() };
+            let mut b = Batcher::new(cfg);
+            for i in 0..cap {
+                let (p, _r) = pending(i as f32);
+                assert!(b.push(p).is_ok(), "push {i} of cap {cap} must be admitted");
+            }
+            assert_eq!(b.len(), cap);
+            let (p_over, _r_over) = pending(-1.0);
+            assert!(b.push(p_over).is_err(), "push cap+1 must be rejected at cap {cap}");
+            assert_eq!(b.len(), cap, "a rejected push must not grow the queue");
+            // One take frees exactly one slot (max_batch = 1).
+            let prepared = b.take(Instant::now()).unwrap();
+            assert_eq!(prepared.len(), 1);
+            let (p_next, _r_next) = pending(-2.0);
+            assert!(b.push(p_next).is_ok(), "one drained slot re-admits one push");
+            let (p_again, _r_again) = pending(-3.0);
+            assert!(b.push(p_again).is_err(), "and only one");
+        }
+    }
+
+    #[test]
+    fn flush_invariants_hold_under_random_schedules() {
+        // Property sweep with a synthetic clock: for random configs and
+        // random push/advance schedules,
+        //   (1) should_flush ⟺ (len >= max_batch) ∨ (oldest age >= max_delay)
+        //   (2) a take never exceeds max_batch and drains oldest-first
+        //   (3) admitted + rejected == offered, admitted <= queue_cap.
+        for seed in 0..20u64 {
+            let mut rng = XorShiftRng::new(1000 + seed);
+            let max_batch = rng.range_usize(1, 9);
+            let queue_cap = rng.range_usize(max_batch, max_batch + 16);
+            let delay_us = rng.range_usize(100, 5000) as u64;
+            let cfg = BatcherConfig {
+                max_batch,
+                queue_cap,
+                max_delay: Duration::from_micros(delay_us),
+            };
+            let mut b = Batcher::new(cfg);
+            let t0 = Instant::now();
+            let mut now = t0;
+            let mut oldest: Option<Instant> = None;
+            let mut queued = 0usize;
+            for step in 0..200 {
+                if rng.bernoulli(0.6) {
+                    let (p, _r) = pending(step as f32);
+                    std::mem::forget(_r); // keep reply channels open
+                    let admitted = b.push_at(p, now).is_ok();
+                    assert_eq!(admitted, queued < queue_cap, "seed {seed} step {step}");
+                    if admitted {
+                        if queued == 0 {
+                            oldest = Some(now);
+                        }
+                        queued += 1;
+                    }
+                } else {
+                    now += Duration::from_micros(rng.range_usize(0, 2 * delay_us as usize) as u64);
+                }
+                let expect = queued >= max_batch
+                    || (queued > 0
+                        && now.duration_since(oldest.unwrap()).as_micros() as u64 >= delay_us);
+                assert_eq!(b.should_flush(now), expect, "seed {seed} step {step}");
+                if b.should_flush(now) && rng.bernoulli(0.7) {
+                    let before = queued;
+                    let prepared = b.take(now).expect("flushable queue yields a batch");
+                    assert!(prepared.len() <= max_batch, "seed {seed} step {step}");
+                    assert_eq!(prepared.len(), before.min(max_batch));
+                    queued -= prepared.len();
+                    oldest = if queued == 0 { None } else { Some(now) };
+                    // Oldest-first: the stacked rows are the earliest pushes.
+                    let first = prepared.input().data()[0];
+                    for later in b.queue.iter() {
+                        assert!(later.input.data()[0] > first, "seed {seed} step {step}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -303,11 +495,34 @@ mod tests {
             b.push(p).map_err(|_| ()).unwrap();
             receivers.push(r);
         }
-        b.flush(|x| Ok((x.clone(), Routed { shard: 0, replica: 0, replicas: 1 })));
+        b.flush(|x| Ok((x.clone(), Routed::at(0, 0, 1))));
         assert_eq!(b.len(), 3);
         assert!(receivers[0].try_recv().unwrap().is_ok());
         assert!(receivers[1].try_recv().unwrap().is_ok());
         assert!(receivers[2].try_recv().is_err()); // still queued
+    }
+
+    #[test]
+    fn scatter_carries_pipeline_trace_into_meta() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let (p, r) = pending(1.0);
+        b.push(p).map_err(|_| ()).unwrap();
+        let prepared = b.take(Instant::now()).unwrap();
+        let out = prepared.input().clone();
+        let routed = Routed {
+            shard: 2,
+            replica: 0,
+            replicas: 1,
+            window: 3,
+            stage_micros: 17,
+            exec_micros: 410,
+        };
+        Batcher::scatter(prepared, Ok((out, routed)));
+        let (_, meta) = r.recv().unwrap().unwrap();
+        assert_eq!(meta.window, 3);
+        assert_eq!(meta.stage_micros, 17);
+        assert_eq!(meta.exec_micros, 410);
+        assert_eq!(meta.shard, 2);
     }
 
     #[test]
@@ -329,7 +544,9 @@ mod tests {
         })
         .map_err(|_| ())
         .unwrap();
-        b.flush(|x| Ok((x.clone(), Routed { shard: 0, replica: 0, replicas: 1 })));
+        // A mixed-shape drain errors every requester and never yields a
+        // batch for execution.
+        assert!(b.take(Instant::now()).is_none());
         assert!(r1.recv().unwrap().is_err());
         assert!(r2.recv().unwrap().is_err());
     }

@@ -16,12 +16,15 @@
 //! Admission control happens at `submit`: a model whose queue is at
 //! `queue_cap` rejects with the typed
 //! [`Overloaded`](crate::runtime::Overloaded) error instead of queueing
-//! without bound.
+//! without bound. Downstream, formed batches **stream** into the routed
+//! shard's pipeline window (`PoolHandle::infer_async`) and resolve on a
+//! per-model completion thread, so batch collection overlaps execution;
+//! a full window also surfaces as `Overloaded`.
 
 mod batcher;
 mod server;
 
-pub use batcher::{BatchMeta, Batcher, BatcherConfig, Pending};
+pub use batcher::{BatchMeta, Batcher, BatcherConfig, Pending, PreparedBatch};
 pub use server::{Coordinator, CoordinatorConfig, RequestResult};
 
 /// Nielsen's "feels instantaneous" bar the paper cites (§1.1).

@@ -7,12 +7,19 @@
 //! replica, a sibling collects the next batch — so a single hot model can
 //! keep every replica busy. With k = 1 this degenerates to the original
 //! one-worker-per-model loop.
+//!
+//! Batches **stream** into the engine pool: a worker submits each formed
+//! batch with `PoolHandle::infer_async` and hands the in-flight ticket to
+//! the model's completion thread, so collection never blocks on
+//! execution — consecutive batches from one worker overlap inside the
+//! routed shard's pipeline window, and backpressure surfaces as the typed
+//! [`Overloaded`] error when that window is full.
 
-use super::batcher::{Batcher, BatcherConfig, Pending};
+use super::batcher::{Batcher, BatcherConfig, Pending, PreparedBatch};
 use super::NIELSEN_SLO_MICROS;
 use crate::metrics::{Histogram, ServingStats};
 use crate::model::{Manifest, ModelFiles};
-use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle, SwapReport};
+use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle, PoolTicket, SwapReport};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -43,6 +50,18 @@ pub struct RequestResult {
     /// Index of the chosen replica within the model's owner set (0 for an
     /// unreplicated model).
     pub replica: usize,
+    /// Pipeline-window occupancy on the executing shard when this
+    /// request's batch took its slot (1 = the batch had the shard's
+    /// pipeline to itself).
+    pub window: usize,
+}
+
+/// One streamed batch in flight: the formed batch plus its pool ticket.
+/// Collect workers produce these; the model's completion thread waits and
+/// scatters, so collection never blocks on execution.
+struct FlushJob {
+    prepared: PreparedBatch,
+    ticket: PoolTicket,
 }
 
 struct ModelWorker {
@@ -162,13 +181,18 @@ impl Coordinator {
         // to take the lock would swallow the burst and serialize it onto
         // one replica.
         let greedy_cap = if workers == 1 { usize::MAX } else { cfg.max_batch };
-        let mut joins = Vec::with_capacity(workers);
+        // The streaming seam: collect workers push (batch, ticket) jobs
+        // here; one completion thread per model waits tickets out and
+        // scatters replies, so the collect side never blocks on execution.
+        let (done_tx, done_rx) = mpsc::channel::<FlushJob>();
+        let mut joins = Vec::with_capacity(workers + 1);
         for w in 0..workers {
             let pool = self.pool.clone();
             let shared = self.shared.clone();
             let model_id = id.clone();
             let worker_depth = depth.clone();
             let worker_rx = rx.clone();
+            let worker_done = done_tx.clone();
             let shard = info.shard;
             joins.push(
                 std::thread::Builder::new()
@@ -184,11 +208,24 @@ impl Coordinator {
                             shard,
                             worker_depth,
                             shared,
+                            worker_done,
                         )
                     })
                     .map_err(|e| anyhow::anyhow!("spawning batcher: {e}"))?,
             );
         }
+        // `done_tx` clones live only in the collect workers: when the last
+        // one exits (retire drops the submission channel), the job channel
+        // closes and the completion thread drains what's left and follows.
+        // Joined last in `retire_model`, so retire still means "every reply
+        // delivered before the unload".
+        drop(done_tx);
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("dlk-completer-{id}"))
+                .spawn(move || completion_main(done_rx))
+                .map_err(|e| anyhow::anyhow!("spawning completion thread: {e}"))?,
+        );
 
         self.workers.insert(
             id,
@@ -380,6 +417,7 @@ impl Ticket {
                     batch_size: meta.batch_size,
                     shard: meta.shard,
                     replica: meta.replica,
+                    window: meta.window,
                 })
             }
             Err(e) => {
@@ -393,11 +431,13 @@ impl Ticket {
 /// Batcher worker loop. Each served model runs one of these per replica;
 /// the workers share the submission channel behind a mutex. A worker
 /// holds the channel lock only while *collecting* (so at most one worker
-/// coalesces arrivals at a time) and releases it to *execute*, letting a
-/// sibling collect the next batch while this one's flush runs on its
-/// routed replica — that overlap is what lets one hot model keep k
-/// replicas busy. `shard` is the model's primary shard, reported in
-/// queue-overflow rejections.
+/// coalesces arrivals at a time) and releases it to *flush*. A flush is a
+/// **streaming submit**: the formed batch enters the routed shard's
+/// pipeline window via `infer_async` and the in-flight ticket goes to the
+/// model's completion thread — this worker immediately returns to
+/// collecting, so consecutive batches overlap inside the shard's window
+/// and a single worker keeps its replica's pipeline full. `shard` is the
+/// model's primary shard, reported in queue-overflow rejections.
 #[allow(clippy::too_many_arguments)]
 fn batcher_main(
     rx: Arc<Mutex<mpsc::Receiver<Pending>>>,
@@ -409,7 +449,27 @@ fn batcher_main(
     shard: usize,
     depth: Arc<AtomicUsize>,
     shared: Arc<Shared>,
+    done: mpsc::Sender<FlushJob>,
 ) {
+    // Stream one formed batch toward execution. Pre-admission failures
+    // (unknown model, typed Overloaded from a full pipeline window) resolve
+    // the whole batch immediately; an admitted batch resolves later on the
+    // completion thread. If the completion thread is already gone (only
+    // possible once serving is torn down), fall back to waiting inline so
+    // no reply is ever dropped.
+    let flush_streaming = |batcher: &mut Batcher| {
+        let Some(prepared) = batcher.take(Instant::now()) else { return };
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        match pool.infer_async(&model_id, prepared.input().clone()) {
+            Ok(ticket) => {
+                if let Err(mpsc::SendError(job)) = done.send(FlushJob { prepared, ticket }) {
+                    let result = job.ticket.wait();
+                    Batcher::scatter(job.prepared, result);
+                }
+            }
+            Err(e) => Batcher::scatter(prepared, Err(e)),
+        }
+    };
     let mut batcher = Batcher::new(cfg);
     loop {
         // Collect phase, under the shared receiver lock.
@@ -454,18 +514,29 @@ fn batcher_main(
                 Err(mpsc::RecvTimeoutError::Disconnected) => true,
             }
         };
-        // Execute phase, lock released: sibling workers can collect.
+        // Flush phase, lock released: sibling workers can collect while
+        // this worker's batches stream into the pipeline window.
         if disconnected {
-            // Drain this worker's remaining local work, then exit.
+            // Drain this worker's remaining local work, then exit; the
+            // in-flight tickets resolve on the completion thread, which
+            // outlives every collect worker.
             while !batcher.is_empty() {
-                shared.batches.fetch_add(1, Ordering::Relaxed);
-                batcher.flush(|batch| pool.infer(&model_id, batch.clone()));
+                flush_streaming(&mut batcher);
             }
             return;
         }
         while batcher.should_flush(Instant::now()) {
-            shared.batches.fetch_add(1, Ordering::Relaxed);
-            batcher.flush(|batch| pool.infer(&model_id, batch.clone()));
+            flush_streaming(&mut batcher);
         }
+    }
+}
+
+/// Completion loop, one thread per served model: waits out streamed
+/// batches in submission order and scatters each reply. Exits when every
+/// collect worker has dropped its job sender and the channel drains.
+fn completion_main(done: mpsc::Receiver<FlushJob>) {
+    while let Ok(job) = done.recv() {
+        let result = job.ticket.wait();
+        Batcher::scatter(job.prepared, result);
     }
 }

@@ -112,6 +112,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("shards", "engine pool shards (0 = available parallelism)", Some("0"))
         .flag("replicas", "replicas per served model (hot models on k shards; capped at the shard count)", Some("1"))
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
+        .flag("window-depth", "per-shard pipeline window: batches overlapping in stage/execute/scatter (1 = serial)", Some("2"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .flag("precision", "weight-residency precision for compiled plans: f32, f16, int8 or auto", Some("f32"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
@@ -141,19 +142,22 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let shards = a.get_usize("shards", 0)?;
     let replicas = a.get_usize("replicas", 1)?.max(1);
     let queue_cap = a.get_usize("queue-cap", 1024)?.max(1);
+    let window_depth = a.get_usize("window-depth", 2)?.max(1);
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
     let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
 
     let pool = runtime::EnginePool::start(runtime::PoolConfig {
         shards,
         queue_cap,
+        window_depth,
         replicas,
         strategy,
         precision,
         ..Default::default()
     })?;
     println!(
-        "engine pool: {} shard(s), queue cap {queue_cap}, {replicas} replica(s) per model, {} weights",
+        "engine pool: {} shard(s), queue cap {queue_cap}, window depth {window_depth}, \
+         {replicas} replica(s) per model, {} weights",
         pool.shard_count(),
         precision.name()
     );

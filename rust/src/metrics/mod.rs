@@ -92,6 +92,19 @@ pub struct PoolUtilization {
     /// window each shard's `queue_cap` bounds). Empty when the snapshot
     /// was built from bare `PoolStats`.
     pub queue_depth: Vec<usize>,
+    /// Configured pipeline window depth per shard (how many batches may
+    /// overlap in the shard's stage→execute→scatter pipeline).
+    pub window_depth: Vec<usize>,
+    /// Batches inside each shard's pipeline window right now.
+    pub window_occupancy: Vec<usize>,
+    /// Cumulative stage-phase busy time per shard (validate + pad,
+    /// microseconds) — with `exec_us`/`scatter_us`, how E15 attributes
+    /// the pipelining win to overlapped phases.
+    pub stage_us: Vec<u64>,
+    /// Cumulative execute-phase busy time per shard (microseconds).
+    pub exec_us: Vec<u64>,
+    /// Cumulative scatter-phase busy time per shard (microseconds).
+    pub scatter_us: Vec<u64>,
     /// Per-replica outstanding request counts, one row per (model, shard)
     /// replica, sorted by model then shard. Empty when the snapshot was
     /// built from bare `PoolStats`.
@@ -141,7 +154,15 @@ impl PoolUtilization {
             .zip(&self.resident_models)
             .zip(&self.resident_bytes)
             .enumerate()
-            .map(|(s, ((e, m), b))| format!("s{s}: {e} exec/{m} models/{}", fmt_bytes(*b as u64)))
+            .map(|(s, ((e, m), b))| {
+                let mut col = format!("s{s}: {e} exec/{m} models/{}", fmt_bytes(*b as u64));
+                if let (Some(occ), Some(depth)) =
+                    (self.window_occupancy.get(s), self.window_depth.get(s))
+                {
+                    col.push_str(&format!(" win {occ}/{depth}"));
+                }
+                col
+            })
             .collect();
         let mut line = format!(
             "pool[{} shards] imbalance={:.2} {}",
@@ -288,10 +309,27 @@ mod tests {
                 ReplicaLoad { model: "hot".into(), shard: 0, outstanding: 3 },
                 ReplicaLoad { model: "hot".into(), shard: 1, outstanding: 0 },
             ],
+            ..Default::default()
         };
         let s = u.summary();
         assert!(s.contains("hot@s0: 3 outstanding"), "{s}");
         assert!(s.contains("hot@s1: 0 outstanding"), "{s}");
+    }
+
+    #[test]
+    fn pool_utilization_summary_shows_window_occupancy() {
+        let u = PoolUtilization {
+            executions: vec![4, 4],
+            items: vec![4, 4],
+            resident_models: vec![1, 1],
+            resident_bytes: vec![64, 64],
+            window_depth: vec![4, 4],
+            window_occupancy: vec![2, 0],
+            ..Default::default()
+        };
+        let s = u.summary();
+        assert!(s.contains("s0: 4 exec/1 models/64B win 2/4"), "{s}");
+        assert!(s.contains("s1: 4 exec/1 models/64B win 0/4"), "{s}");
     }
 
     #[test]

@@ -136,47 +136,9 @@ impl CpuModel {
     }
 
     fn check_and_pad(&self, input: &Tensor) -> crate::Result<(usize, usize, Tensor)> {
-        let dims = input.shape().dims();
-        anyhow::ensure!(!dims.is_empty(), "input must have a batch dimension");
-        let n = dims[0];
-        anyhow::ensure!(n > 0, "empty batch");
-        anyhow::ensure!(
-            dims[1..] == self.manifest.arch.input[..],
-            "input shape {} does not match model `{}` input {:?}",
-            input.shape(),
-            self.manifest.id,
-            self.manifest.arch.input
-        );
-        let exec_batch = self.pick_batch(n);
-        anyhow::ensure!(
-            n <= exec_batch,
-            "batch {n} exceeds largest AOT batch {exec_batch} for `{}` (split upstream)",
-            self.manifest.id
-        );
-
-        // Pad with zero rows to the executable's batch.
-        let padded = if n == exec_batch {
-            input.clone()
-        } else {
-            let row = input.numel() / n;
-            let mut data = Vec::with_capacity(exec_batch * row);
-            data.extend_from_slice(input.data());
-            data.resize(exec_batch * row, 0.0);
-            let mut shape = dims.to_vec();
-            shape[0] = exec_batch;
-            Tensor::new(Shape::new(&shape), data)?
-        };
-        Ok((n, exec_batch, padded))
-    }
-
-    fn slice_rows(full: Tensor, n: usize, exec_batch: usize) -> crate::Result<Tensor> {
-        if n == exec_batch {
-            return Ok(full);
-        }
-        let row = full.numel() / exec_batch;
-        let mut sliced_dims = full.shape().dims().to_vec();
-        sliced_dims[0] = n;
-        Tensor::new(Shape::new(&sliced_dims), full.data()[..n * row].to_vec())
+        let (n, exec_batch) =
+            check_batch(&self.manifest.id, &self.manifest.arch.input, &self.batches, input)?;
+        Ok((n, exec_batch, pad_rows(input, n, exec_batch)))
     }
 
     /// Run inference on a `[n, ...]` input; pads to the chosen batch size
@@ -185,8 +147,19 @@ impl CpuModel {
     /// Executes through the compiled plan for that batch size.
     pub fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
         let (n, exec_batch, padded) = self.check_and_pad(input)?;
-        let full = self.planned.forward(&padded)?;
-        CpuModel::slice_rows(full, n, exec_batch)
+        let full = self.infer_exact(&padded)?;
+        slice_rows(full, n, exec_batch)
+    }
+
+    /// Forward an already-padded ladder batch through the compiled plan —
+    /// the engine's stage thread validates and pads upstream, so the
+    /// execute phase calls this directly. Panics (deliberately, before
+    /// touching any plan state) on a `testutil::poison_input` tensor; the
+    /// engine's fault-injection tests rely on that panic being catchable
+    /// without poisoning the plan's arena lock.
+    pub fn infer_exact(&self, padded: &Tensor) -> crate::Result<Tensor> {
+        crate::testutil::panic_if_poisoned(&self.manifest.id, padded);
+        self.planned.forward(padded)
     }
 
     /// The retired interpreter path, kept as the correctness oracle: same
@@ -195,8 +168,68 @@ impl CpuModel {
     pub fn infer_interpreted(&self, input: &Tensor) -> crate::Result<Tensor> {
         let (n, exec_batch, padded) = self.check_and_pad(input)?;
         let full = self.exec.forward(&padded)?;
-        CpuModel::slice_rows(full, n, exec_batch)
+        slice_rows(full, n, exec_batch)
     }
+}
+
+/// Validate a `[n, ...]` batch against a model's input dims and AOT batch
+/// ladder; returns `(n, exec_batch)` where `exec_batch` is the smallest
+/// ladder size >= n. Shared by [`CpuModel::infer`] and the engine's stage
+/// thread (which validates against a metadata mirror before the model's
+/// owning thread ever sees the request) — keep the error messages here,
+/// so both paths reject identically.
+pub(crate) fn check_batch(
+    id: &str,
+    item_dims: &[usize],
+    batches: &[usize],
+    input: &Tensor,
+) -> crate::Result<(usize, usize)> {
+    let dims = input.shape().dims();
+    anyhow::ensure!(!dims.is_empty(), "input must have a batch dimension");
+    let n = dims[0];
+    anyhow::ensure!(n > 0, "empty batch");
+    anyhow::ensure!(
+        dims[1..] == item_dims[..],
+        "input shape {} does not match model `{id}` input {item_dims:?}",
+        input.shape(),
+    );
+    let exec_batch = batches
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .unwrap_or_else(|| *batches.last().unwrap());
+    anyhow::ensure!(
+        n <= exec_batch,
+        "batch {n} exceeds largest AOT batch {exec_batch} for `{id}` (split upstream)",
+    );
+    Ok((n, exec_batch))
+}
+
+/// Pad a validated `[n, ...]` batch with zero rows up to `exec_batch`
+/// (no-op clone when already exact). Infallible after [`check_batch`].
+pub(crate) fn pad_rows(input: &Tensor, n: usize, exec_batch: usize) -> Tensor {
+    if n == exec_batch {
+        return input.clone();
+    }
+    let row = input.numel() / n;
+    let mut data = Vec::with_capacity(exec_batch * row);
+    data.extend_from_slice(input.data());
+    data.resize(exec_batch * row, 0.0);
+    let mut shape = input.shape().dims().to_vec();
+    shape[0] = exec_batch;
+    Tensor::new(Shape::new(&shape), data).expect("padded shape is consistent by construction")
+}
+
+/// Slice a padded `[exec_batch, ...]` output back to the caller's first
+/// `n` rows (no-op when exact).
+pub(crate) fn slice_rows(full: Tensor, n: usize, exec_batch: usize) -> crate::Result<Tensor> {
+    if n == exec_batch {
+        return Ok(full);
+    }
+    let row = full.numel() / exec_batch;
+    let mut sliced_dims = full.shape().dims().to_vec();
+    sliced_dims[0] = n;
+    Tensor::new(Shape::new(&sliced_dims), full.data()[..n * row].to_vec())
 }
 
 #[cfg(test)]

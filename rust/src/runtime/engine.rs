@@ -1,37 +1,75 @@
-//! Engine shard: a dedicated thread owning one execution backend and every
-//! model resident on it.
+//! Engine shard: a three-phase pipeline (stage → execute → scatter) over
+//! one execution backend and every model resident on it.
 //!
 //! [`EngineHandle`] is the thread-safe facade: `load`, `unload`, `infer`,
-//! `stats`. Requests travel over a **bounded** mpsc channel; each carries a
-//! reply channel. This is the Metal `MTLCommandQueue` role from paper
-//! Fig. 2 — commands are serialized onto the device by a queue the app
-//! threads feed. The shard's admission window is its in-flight-inference
-//! count (bounded by `queue_cap`): [`EngineHandle::try_infer`] rejects
-//! with a typed [`Overloaded`](super::Overloaded) error instead of
-//! blocking when the window is full, while control-plane traffic
+//! `stats`. Requests travel over a **bounded** mpsc channel into a
+//! per-shard pipeline of three threads:
+//!
+//! ```text
+//!  rx ──► stage ──staged──► execute ──done──► scatter ──reply──► caller
+//!         (validate+pad)    (owns backend     (slice rows,
+//!         FIFO, acquires     + residents,      send reply,
+//!         a window slot)     runs the plan)    release slot)
+//! ```
+//!
+//! This is the paper's GPU pipeline brought to the serving layer: data
+//! staging for batch *n+1* overlaps kernel execution of batch *n* while
+//! batch *n−1*'s results scatter back — the `MTLCommandQueue` role from
+//! paper Fig. 2, with a multi-slot in-flight window instead of a
+//! one-command-at-a-time hop. [`EngineConfig::window_depth`] bounds how
+//! many batches may occupy the pipeline at once; depth 1 degenerates to
+//! the old strictly serial engine (stage *n+1* cannot begin until batch
+//! *n* has fully scattered), which concurrency tests pin as behaviorally
+//! identical to the pre-pipeline engine.
+//!
+//! Backpressure is **window-occupancy based**: the shard's admission
+//! window is its in-flight-inference count — every request admitted and
+//! not yet replied to, whether waiting for a slot, staged, executing or
+//! scattering — bounded by `queue_cap`. [`EngineHandle::try_infer`]
+//! rejects with a typed [`Overloaded`](super::Overloaded) error instead
+//! of blocking when that window is full, while control-plane traffic
 //! (stats/load/unload) keeps flowing through reserved channel slack.
+//!
+//! Ordering invariants the pipeline preserves (and `rust/tests/
+//! pipeline.rs` enforces):
+//!
+//! - **FIFO end-to-end.** Every channel is FIFO and every phase is a
+//!   single thread, so inferences execute and reply in admission order;
+//!   [`ExecTrace::seq`] exposes the per-shard completion sequence.
+//! - **Swap drains the window, not just the queue.** Control ops travel
+//!   the same FIFO path and the stage thread blocks until the execute
+//!   thread acks them, so a [`Request::Swap`] runs only after everything
+//!   admitted before it has *executed* — no request is ever failed by a
+//!   swap, even with a full in-flight window.
+//! - **Fault isolation.** A panic inside a model's forward (see
+//!   `testutil::poison_input`) is caught on the execute thread and
+//!   surfaced as a typed [`ExecutionPanic`](super::ExecutionPanic) on
+//!   that ticket alone; later in-window requests still complete.
 //!
 //! One process runs N shards as an [`EnginePool`](super::EnginePool)
 //! (`runtime/pool.rs`); a single shard is still useful standalone and is
 //! what [`Engine::start`] gives you.
 //!
 //! Backends: with the `pjrt` feature the shard owns an `xla::PjRtClient`
-//! (raw pointers, `!Send` — hence the thread-per-shard design); without it
-//! the shard runs the in-crate CPU reference executor over the same model
-//! format, so the whole serving stack works in artifact-less environments.
+//! (raw pointers, `!Send` — hence the execute phase stays on the one
+//! thread that owns the backend and residents, and the stage thread
+//! validates against a metadata mirror instead of touching models);
+//! without it the shard runs the in-crate CPU reference executor over the
+//! same model format, so the whole serving stack works in artifact-less
+//! environments.
 
-use super::cpu_model::CpuModel;
+use super::cpu_model::{check_batch, pad_rows, slice_rows, CpuModel};
 #[cfg(feature = "pjrt")]
 use super::loaded_model::LoadedModel;
-use super::pool::Overloaded;
+use super::pool::{ExecutionPanic, Overloaded};
 use crate::metrics::Histogram;
 use crate::model::Manifest;
 use crate::nn::{PlanOptions, PlanPrecision, PlanStrategy};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Which execution backend a shard runs.
@@ -76,10 +114,16 @@ pub struct EngineConfig {
     /// Shard index, surfaced in stats, thread names and `Overloaded`
     /// rejections. A standalone engine is shard 0.
     pub shard: usize,
-    /// Bound on the shard's request queue. `try_infer` rejects with
-    /// [`Overloaded`](super::Overloaded) once this many requests are
-    /// queued (admission control / backpressure).
+    /// Bound on the shard's admission window (requests admitted and not
+    /// yet replied to). `try_infer` rejects with
+    /// [`Overloaded`](super::Overloaded) exactly when this many requests
+    /// are in flight (admission control / backpressure).
     pub queue_cap: usize,
+    /// How many batches may occupy the stage→execute→scatter pipeline at
+    /// once. 1 = the old strictly serial engine (no overlap); 2+ lets
+    /// staging and scattering overlap execution of other batches. E15
+    /// sweeps this.
+    pub window_depth: usize,
     /// Execution backend.
     pub backend: BackendKind,
     /// Conv-strategy policy for the execution plans compiled at model
@@ -92,11 +136,16 @@ pub struct EngineConfig {
     pub precision: PlanPrecision,
 }
 
+/// Default pipeline depth: one batch executing while the next stages and
+/// the previous scatters is the smallest window that actually overlaps.
+pub const DEFAULT_WINDOW_DEPTH: usize = 2;
+
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
         EngineConfig {
             shard: 0,
             queue_cap: 1024,
+            window_depth: DEFAULT_WINDOW_DEPTH,
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
             precision: PlanPrecision::F32,
@@ -147,6 +196,15 @@ pub struct EngineStats {
     pub resident_models: usize,
     /// Weight bytes resident on this shard.
     pub resident_bytes: usize,
+    /// Configured pipeline window depth.
+    pub window_depth: usize,
+    /// Batches inside the stage→execute→scatter pipeline right now.
+    pub window_occupancy: usize,
+    /// Cumulative per-phase busy time (microseconds) — how E15 attributes
+    /// the pipelining win.
+    pub stage_us: u64,
+    pub exec_us: u64,
+    pub scatter_us: u64,
 }
 
 /// Result of a hot-swap on one shard: the freshly loaded model plus what
@@ -160,20 +218,149 @@ pub struct SwapInfo {
     pub old_version: Option<u32>,
 }
 
+/// Per-request pipeline trace, attached to every successful reply.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecTrace {
+    /// Window occupancy (batches in the pipeline, this one included) when
+    /// the request took its slot — at most the shard's `window_depth`.
+    pub window: usize,
+    /// Per-shard completion sequence number (1-based, monotone across
+    /// every reply the scatter thread sends). Admission order equals
+    /// completion order on a shard, so consecutive submissions must see
+    /// strictly increasing values — the FIFO contract the pipeline tests
+    /// pin.
+    pub seq: u64,
+    /// Stage-phase time for this request (validate + pad, microseconds).
+    pub stage_micros: u64,
+    /// Execute-phase time (plan forward, microseconds).
+    pub exec_micros: u64,
+    /// Scatter-phase time (row slice, microseconds; excludes the reply
+    /// send itself).
+    pub scatter_micros: u64,
+}
+
+type InferReply = mpsc::Sender<crate::Result<(Tensor, ExecTrace)>>;
+
 enum Request {
     Load { dir: PathBuf, reply: mpsc::Sender<crate::Result<ModelInfo>> },
-    /// Versioned hot-swap: because the queue is FIFO, every inference
-    /// enqueued before this request completes on the old version first
-    /// (the drain), then the replacement is atomic on the engine thread.
+    /// Versioned hot-swap: control ops travel the same FIFO as inferences
+    /// and the stage thread blocks until the execute thread acks, so every
+    /// inference admitted before this request executes on the old version
+    /// first (the drain covers the whole in-flight window), then the
+    /// replacement is atomic on the execute thread.
     Swap { dir: PathBuf, reply: mpsc::Sender<crate::Result<SwapInfo>> },
     Unload { id: String, reply: mpsc::Sender<crate::Result<()>> },
-    Infer { id: String, input: Tensor, reply: mpsc::Sender<crate::Result<Tensor>> },
+    Infer { id: String, input: Tensor, reply: InferReply },
     Stats { reply: mpsc::Sender<EngineStats> },
-    /// Test hook: hold the engine thread busy for a while (see
+    /// Test hook: hold the execute thread busy for a while (see
     /// `EngineHandle::debug_stall`). `started` is acked just before the
     /// sleep begins so callers can wait for the stall deterministically.
     Stall { duration: Duration, started: mpsc::Sender<()> },
     Shutdown,
+}
+
+/// What the stage thread hands the execute thread. Same FIFO order as the
+/// request channel; inference payloads are already validated and padded.
+enum Staged {
+    Exec {
+        id: String,
+        /// Real rows in the batch (`items` counter; scatter slices to it).
+        n: usize,
+        /// The ladder batch `padded` was padded to.
+        exec_batch: usize,
+        padded: Tensor,
+        /// Window occupancy when this request took its slot.
+        window: usize,
+        stage_micros: u64,
+        reply: InferReply,
+    },
+    Control { op: ControlOp, ack: mpsc::Sender<MetaUpdate> },
+    Stats { reply: mpsc::Sender<EngineStats> },
+    Stall { duration: Duration, started: mpsc::Sender<()> },
+    Shutdown,
+}
+
+enum ControlOp {
+    Load { dir: PathBuf, reply: mpsc::Sender<crate::Result<ModelInfo>> },
+    Swap { dir: PathBuf, reply: mpsc::Sender<crate::Result<SwapInfo>> },
+    Unload { id: String, reply: mpsc::Sender<crate::Result<()>> },
+}
+
+/// Execute-thread ack telling the stage thread how to update its metadata
+/// mirror after a control op. The stage thread blocks on this, which is
+/// what serializes control ops against staging (and gives swap its
+/// whole-window drain).
+enum MetaUpdate {
+    Install { id: String, meta: StageMeta },
+    Remove { id: String },
+    Keep,
+}
+
+/// The stage thread's mirror of the metadata staging needs: model input
+/// dims and the AOT batch ladder. Residents themselves stay on the
+/// execute thread (PJRT handles are `!Send`).
+#[derive(Clone, Debug)]
+struct StageMeta {
+    input: Vec<usize>,
+    batches: Vec<usize>,
+}
+
+/// One executed batch en route to the scatter thread.
+struct Done {
+    /// Full padded output (or the execute-phase error).
+    result: crate::Result<Tensor>,
+    n: usize,
+    exec_batch: usize,
+    window: usize,
+    stage_micros: u64,
+    exec_micros: u64,
+    reply: InferReply,
+}
+
+/// The multi-slot in-flight window: bounds how many batches occupy the
+/// stage→execute→scatter pipeline at once. The stage thread acquires a
+/// slot *before* staging (so depth 1 is strictly serial) and the scatter
+/// thread releases it after the reply is sent.
+struct Window {
+    depth: usize,
+    slots: Mutex<usize>,
+    freed: Condvar,
+    /// Lock-free occupancy mirror for stats and handle reads.
+    occupancy: AtomicUsize,
+}
+
+impl Window {
+    fn new(depth: usize) -> Window {
+        Window {
+            depth: depth.max(1),
+            slots: Mutex::new(0),
+            freed: Condvar::new(),
+            occupancy: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block until a slot frees, take it, and return the new occupancy
+    /// (this request included).
+    fn acquire(&self) -> usize {
+        let mut used = self.slots.lock().unwrap();
+        while *used >= self.depth {
+            used = self.freed.wait(used).unwrap();
+        }
+        *used += 1;
+        self.occupancy.store(*used, Ordering::Release);
+        *used
+    }
+
+    fn release(&self) {
+        let mut used = self.slots.lock().unwrap();
+        *used -= 1;
+        self.occupancy.store(*used, Ordering::Release);
+        self.freed.notify_one();
+    }
+
+    fn occupancy(&self) -> usize {
+        self.occupancy.load(Ordering::Acquire)
+    }
 }
 
 /// Channel slots reserved beyond `queue_cap` so rare control-plane
@@ -189,9 +376,10 @@ pub struct EngineHandle {
     tx: mpsc::SyncSender<Request>,
     shard: usize,
     queue_cap: usize,
-    /// Inferences admitted but not yet completed by the engine thread
-    /// (the admission-control window for `try_infer`).
+    /// Inferences admitted but not yet replied to (the admission-control
+    /// window for `try_infer`).
     inflight: Arc<AtomicUsize>,
+    window: Arc<Window>,
 }
 
 /// The engine: spawn with [`Engine::start`] (one default shard) or
@@ -200,32 +388,60 @@ pub struct Engine;
 
 impl Engine {
     /// Start a single engine shard with the default config (shard 0,
-    /// default backend, queue cap 1024).
+    /// default backend, queue cap 1024, window depth 2).
     pub fn start() -> crate::Result<EngineHandle> {
         Engine::start_with(EngineConfig::default())
     }
 
-    /// Start an engine shard with an explicit configuration. The backend
-    /// client is created on-thread; this returns once it is ready.
+    /// Start an engine shard with an explicit configuration: three
+    /// pipeline threads (stage, execute, scatter). The backend client is
+    /// created on the execute thread; this returns once it is ready.
     pub fn start_with(config: EngineConfig) -> crate::Result<EngineHandle> {
         let queue_cap = config.queue_cap.max(1);
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_cap + CONTROL_SLACK);
+        let (staged_tx, staged_rx) = mpsc::channel::<Staged>();
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
         let inflight = Arc::new(AtomicUsize::new(0));
-        let thread_inflight = inflight.clone();
-        std::thread::Builder::new()
-            .name(format!("dlk-engine-{}", config.shard))
-            .spawn(move || engine_main(config, thread_inflight, rx, ready_tx))
-            .map_err(|e| anyhow::anyhow!("spawning engine thread: {e}"))?;
+        let window = Arc::new(Window::new(config.window_depth));
+        let stage_us = Arc::new(AtomicU64::new(0));
+        let scatter_us = Arc::new(AtomicU64::new(0));
+
+        let spawn_err = |e: std::io::Error| anyhow::anyhow!("spawning engine thread: {e}");
+        {
+            let (window, stage_us, scatter_us) =
+                (window.clone(), stage_us.clone(), scatter_us.clone());
+            std::thread::Builder::new()
+                .name(format!("dlk-engine-{}", config.shard))
+                .spawn(move || {
+                    execute_main(config, staged_rx, done_tx, window, stage_us, scatter_us, ready_tx)
+                })
+                .map_err(spawn_err)?;
+        }
+        {
+            let (window, inflight, stage_us) = (window.clone(), inflight.clone(), stage_us.clone());
+            std::thread::Builder::new()
+                .name(format!("dlk-stage-{}", config.shard))
+                .spawn(move || stage_main(rx, staged_tx, window, inflight, stage_us))
+                .map_err(spawn_err)?;
+        }
+        {
+            let (window, inflight, scatter_us) =
+                (window.clone(), inflight.clone(), scatter_us.clone());
+            std::thread::Builder::new()
+                .name(format!("dlk-scatter-{}", config.shard))
+                .spawn(move || scatter_main(done_rx, window, inflight, scatter_us))
+                .map_err(spawn_err)?;
+        }
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(EngineHandle { tx, shard: config.shard, queue_cap, inflight })
+        Ok(EngineHandle { tx, shard: config.shard, queue_cap, inflight, window })
     }
 }
 
-/// The backend a shard thread owns (kept on-thread: PJRT handles are
-/// `!Send`).
+/// The backend a shard's execute thread owns (kept on-thread: PJRT
+/// handles are `!Send`).
 enum Backend {
     Cpu { strategy: PlanStrategy, precision: PlanPrecision },
     #[cfg(feature = "pjrt")]
@@ -306,16 +522,24 @@ impl Resident {
         }
     }
 
-    fn infer(&self, input: &Tensor) -> crate::Result<Tensor> {
+    fn stage_meta(&self) -> StageMeta {
+        StageMeta { input: self.manifest().arch.input.clone(), batches: self.batches() }
+    }
+
+    /// Forward on an already-padded ladder batch (the stage thread did
+    /// validate + pad against the metadata mirror).
+    fn infer_exact(&self, padded: &Tensor) -> crate::Result<Tensor> {
         match self {
-            Resident::Cpu(m) => m.infer(input),
+            Resident::Cpu(m) => m.infer_exact(padded),
+            // The PJRT loader re-pads internally; on an exact ladder
+            // batch that's a no-op.
             #[cfg(feature = "pjrt")]
-            Resident::Pjrt(m) => m.infer(input),
+            Resident::Pjrt(m) => m.infer(padded),
         }
     }
 }
 
-/// Load a model directory on the engine thread, producing the resident
+/// Load a model directory on the execute thread, producing the resident
 /// model and its metadata (shared by the load and swap paths).
 fn load_model(
     backend: &Backend,
@@ -338,10 +562,105 @@ fn load_model(
     Ok((m, info))
 }
 
-fn engine_main(
-    config: EngineConfig,
-    inflight: Arc<AtomicUsize>,
+/// Stage thread: validates and pads inferences against the metadata
+/// mirror, acquires a window slot per batch, and forwards everything else
+/// down the same FIFO. Blocks on control-op acks so the mirror is always
+/// consistent with what the execute thread will see — requests staged
+/// after a swap's ack pad for the *new* version's ladder.
+fn stage_main(
     rx: mpsc::Receiver<Request>,
+    staged: mpsc::Sender<Staged>,
+    window: Arc<Window>,
+    inflight: Arc<AtomicUsize>,
+    stage_us: Arc<AtomicU64>,
+) {
+    let mut meta: BTreeMap<String, StageMeta> = BTreeMap::new();
+    let control = |meta: &mut BTreeMap<String, StageMeta>, op: ControlOp| {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if staged.send(Staged::Control { op, ack: ack_tx }).is_err() {
+            return;
+        }
+        match ack_rx.recv() {
+            Ok(MetaUpdate::Install { id, meta: m }) => {
+                meta.insert(id, m);
+            }
+            Ok(MetaUpdate::Remove { id }) => {
+                meta.remove(&id);
+            }
+            Ok(MetaUpdate::Keep) | Err(_) => {}
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Load { dir, reply } => control(&mut meta, ControlOp::Load { dir, reply }),
+            Request::Swap { dir, reply } => control(&mut meta, ControlOp::Swap { dir, reply }),
+            Request::Unload { id, reply } => control(&mut meta, ControlOp::Unload { id, reply }),
+            Request::Infer { id, input, reply } => {
+                // Admission decisions are FIFO-consistent (this thread is
+                // the single consumer), but requests rejected here reply
+                // immediately without occupying a window slot.
+                let checked = match meta.get(&id) {
+                    Some(m) => check_batch(&id, &m.input, &m.batches, &input),
+                    None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
+                };
+                let (n, exec_batch) = match checked {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                        continue;
+                    }
+                };
+                // Serialize with the pipeline: a slot must free before the
+                // next batch stages (depth 1 ⇒ strictly serial engine).
+                let occupancy = window.acquire();
+                let t0 = Instant::now();
+                let padded = pad_rows(&input, n, exec_batch);
+                let stage_micros = t0.elapsed().as_micros() as u64;
+                stage_us.fetch_add(stage_micros, Ordering::Relaxed);
+                let msg = Staged::Exec {
+                    id,
+                    n,
+                    exec_batch,
+                    padded,
+                    window: occupancy,
+                    stage_micros,
+                    reply,
+                };
+                if staged.send(msg).is_err() {
+                    // Execute thread is gone; the dropped reply sender
+                    // surfaces as "shard dropped the request" upstream.
+                    window.release();
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                    return;
+                }
+            }
+            Request::Stats { reply } => {
+                let _ = staged.send(Staged::Stats { reply });
+            }
+            Request::Stall { duration, started } => {
+                let _ = staged.send(Staged::Stall { duration, started });
+            }
+            Request::Shutdown => {
+                let _ = staged.send(Staged::Shutdown);
+                return;
+            }
+        }
+    }
+    // All handles dropped: `staged` drops here, the execute thread drains
+    // what's already in flight and exits, then the scatter thread follows.
+}
+
+/// Execute thread: owns the backend and every resident model; runs plan
+/// forwards, performs control ops (acking the stage thread's metadata
+/// mirror), answers stats, and forwards executed batches to scatter.
+fn execute_main(
+    config: EngineConfig,
+    staged: mpsc::Receiver<Staged>,
+    done: mpsc::Sender<Done>,
+    window: Arc<Window>,
+    stage_us: Arc<AtomicU64>,
+    scatter_us: Arc<AtomicU64>,
     ready: mpsc::Sender<crate::Result<()>>,
 ) {
     let backend = match Backend::create(config.backend, config.strategy, config.precision) {
@@ -358,54 +677,99 @@ fn engine_main(
     let mut exec_hist = Histogram::new();
     let mut executions: u64 = 0;
     let mut items: u64 = 0;
+    let mut exec_us: u64 = 0;
 
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Load { dir, reply } => {
-                let result = load_model(&backend, &dir, config.shard).map(|(m, info)| {
-                    models.insert(info.id.clone(), m);
-                    info
-                });
-                let _ = reply.send(result);
-            }
-            Request::Swap { dir, reply } => {
-                // All inferences enqueued ahead of this request have
-                // already executed (FIFO queue = the drain); the insert
-                // below replaces the old version atomically from every
-                // client's point of view.
-                let result = load_model(&backend, &dir, config.shard).map(|(m, info)| {
-                    let old_version =
-                        models.insert(info.id.clone(), m).map(|old| old.manifest().version);
-                    SwapInfo { info, old_version }
-                });
-                let _ = reply.send(result);
-            }
-            Request::Unload { id, reply } => {
-                let result = match models.remove(&id) {
-                    Some(_) => Ok(()),
-                    None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
-                };
-                let _ = reply.send(result);
-            }
-            Request::Infer { id, input, reply } => {
+    while let Ok(msg) = staged.recv() {
+        match msg {
+            Staged::Exec { id, n, exec_batch, padded, window: occ, stage_micros, reply } => {
+                let t0 = Instant::now();
                 let result = match models.get(&id) {
                     Some(m) => {
-                        let t0 = Instant::now();
-                        let n = input.shape().dims().first().copied().unwrap_or(0) as u64;
-                        let r = m.infer(&input);
-                        if r.is_ok() {
-                            exec_hist.record(t0.elapsed().as_micros() as u64);
-                            executions += 1;
-                            items += n;
+                        // A kernel panic must not take the shard down with
+                        // every other in-window request: catch it and fail
+                        // only this ticket, typed.
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            m.infer_exact(&padded)
+                        })) {
+                            Ok(r) => r,
+                            Err(payload) => Err(anyhow::Error::new(ExecutionPanic {
+                                model: id.clone(),
+                                shard: config.shard,
+                                message: panic_message(payload),
+                            })),
                         }
-                        r
                     }
+                    // Unreachable today — unloads serialize through this
+                    // same FIFO ahead of staging — but stay graceful.
                     None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
                 };
-                let _ = reply.send(result);
-                inflight.fetch_sub(1, Ordering::AcqRel);
+                let exec_micros = t0.elapsed().as_micros() as u64;
+                exec_us += exec_micros;
+                if result.is_ok() {
+                    exec_hist.record(exec_micros);
+                    executions += 1;
+                    items += n as u64;
+                }
+                let msg =
+                    Done { result, n, exec_batch, window: occ, stage_micros, exec_micros, reply };
+                if done.send(msg).is_err() {
+                    return;
+                }
             }
-            Request::Stats { reply } => {
+            Staged::Control { op, ack } => match op {
+                ControlOp::Load { dir, reply } => {
+                    // Every inference staged ahead of this op has already
+                    // executed (FIFO); the ack below updates the stage
+                    // thread's mirror before anything else stages.
+                    match load_model(&backend, &dir, config.shard) {
+                        Ok((m, info)) => {
+                            let _ = ack.send(MetaUpdate::Install {
+                                id: info.id.clone(),
+                                meta: m.stage_meta(),
+                            });
+                            models.insert(info.id.clone(), m);
+                            let _ = reply.send(Ok(info));
+                        }
+                        Err(e) => {
+                            let _ = ack.send(MetaUpdate::Keep);
+                            let _ = reply.send(Err(e));
+                        }
+                    }
+                }
+                ControlOp::Swap { dir, reply } => {
+                    // The whole in-flight window admitted before this op
+                    // has executed (FIFO = the drain); the insert replaces
+                    // the old version atomically from every client's point
+                    // of view.
+                    match load_model(&backend, &dir, config.shard) {
+                        Ok((m, info)) => {
+                            let _ = ack.send(MetaUpdate::Install {
+                                id: info.id.clone(),
+                                meta: m.stage_meta(),
+                            });
+                            let old_version = models
+                                .insert(info.id.clone(), m)
+                                .map(|old| old.manifest().version);
+                            let _ = reply.send(Ok(SwapInfo { info, old_version }));
+                        }
+                        Err(e) => {
+                            let _ = ack.send(MetaUpdate::Keep);
+                            let _ = reply.send(Err(e));
+                        }
+                    }
+                }
+                ControlOp::Unload { id, reply } => match models.remove(&id) {
+                    Some(_) => {
+                        let _ = ack.send(MetaUpdate::Remove { id });
+                        let _ = reply.send(Ok(()));
+                    }
+                    None => {
+                        let _ = ack.send(MetaUpdate::Keep);
+                        let _ = reply.send(Err(anyhow::anyhow!("model `{id}` is not loaded")));
+                    }
+                },
+            },
+            Staged::Stats { reply } => {
                 let _ = reply.send(EngineStats {
                     shard: config.shard,
                     executions,
@@ -415,30 +779,96 @@ fn engine_main(
                     exec_p99_us: exec_hist.quantile(0.99),
                     resident_models: models.len(),
                     resident_bytes: models.values().map(|m| m.weight_bytes()).sum(),
+                    window_depth: window.depth,
+                    window_occupancy: window.occupancy(),
+                    stage_us: stage_us.load(Ordering::Relaxed),
+                    exec_us,
+                    scatter_us: scatter_us.load(Ordering::Relaxed),
                 });
             }
-            Request::Stall { duration, started } => {
+            Staged::Stall { duration, started } => {
                 let _ = started.send(());
                 std::thread::sleep(duration);
             }
-            Request::Shutdown => break,
+            Staged::Shutdown => return,
         }
+    }
+}
+
+/// Scatter thread: slices padded outputs back to the caller's rows, sends
+/// replies (stamping the per-shard completion sequence), and releases
+/// window slots.
+fn scatter_main(
+    done: mpsc::Receiver<Done>,
+    window: Arc<Window>,
+    inflight: Arc<AtomicUsize>,
+    scatter_us: Arc<AtomicU64>,
+) {
+    let mut seq: u64 = 0;
+    while let Ok(d) = done.recv() {
+        let t0 = Instant::now();
+        let sliced = d.result.and_then(|full| slice_rows(full, d.n, d.exec_batch));
+        let scatter_micros = t0.elapsed().as_micros() as u64;
+        scatter_us.fetch_add(scatter_micros, Ordering::Relaxed);
+        seq += 1;
+        let trace = ExecTrace {
+            window: d.window,
+            seq,
+            stage_micros: d.stage_micros,
+            exec_micros: d.exec_micros,
+            scatter_micros,
+        };
+        let _ = d.reply.send(sliced.map(|t| (t, trace)));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        window.release();
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
 /// A reply ticket for an in-flight asynchronous inference
 /// ([`EngineHandle::try_infer_async`]).
 pub struct InferTicket {
-    reply: mpsc::Receiver<crate::Result<Tensor>>,
+    reply: mpsc::Receiver<crate::Result<(Tensor, ExecTrace)>>,
     shard: usize,
 }
 
 impl InferTicket {
     /// Block until the result arrives.
     pub fn wait(self) -> crate::Result<Tensor> {
+        self.wait_traced().map(|(t, _)| t)
+    }
+
+    /// Block until the result arrives, with the pipeline trace (window
+    /// occupancy, completion sequence, per-phase timings).
+    pub fn wait_traced(self) -> crate::Result<(Tensor, ExecTrace)> {
         self.reply
             .recv()
             .map_err(|_| anyhow::anyhow!("engine shard {} dropped the request", self.shard))?
+    }
+
+    /// Like [`InferTicket::wait_traced`] with a bound — errors instead of
+    /// blocking past `timeout` (the concurrency battery's lost-reply
+    /// detector).
+    pub fn wait_timeout(self, timeout: Duration) -> crate::Result<(Tensor, ExecTrace)> {
+        match self.reply.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow::anyhow!(
+                "engine shard {} reply timed out after {timeout:?}",
+                self.shard
+            )),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("engine shard {} dropped the request", self.shard))
+            }
+        }
     }
 
     /// The shard executing this request.
@@ -468,6 +898,17 @@ impl EngineHandle {
         self.queue_cap
     }
 
+    /// The shard's configured pipeline window depth.
+    pub fn window_depth(&self) -> usize {
+        self.window.depth
+    }
+
+    /// Batches inside the shard's stage→execute→scatter pipeline right
+    /// now (a point snapshot, at most [`EngineHandle::window_depth`]).
+    pub fn window_occupancy(&self) -> usize {
+        self.window.occupancy()
+    }
+
     /// Load a model directory; stages weights and prepares all declared
     /// batch sizes. Blocks (does not count against admission control —
     /// loads are rare control-plane work).
@@ -476,21 +917,22 @@ impl EngineHandle {
     }
 
     /// Versioned hot-swap: load the model directory and atomically replace
-    /// the resident model with the same id. The shard's FIFO queue drains
-    /// every inference submitted before this call on the **old** version;
-    /// inferences submitted after it run on the new version. No request is
-    /// ever failed by a swap. Blocks until the swap (drain + load +
-    /// replace) completes; control-plane work, exempt from admission
-    /// control like [`EngineHandle::load`].
+    /// the resident model with the same id. The shard's FIFO pipeline
+    /// drains every inference submitted before this call — including the
+    /// whole in-flight window — on the **old** version; inferences
+    /// submitted after it run on the new version. No request is ever
+    /// failed by a swap. Blocks until the swap (drain + load + replace)
+    /// completes; control-plane work, exempt from admission control like
+    /// [`EngineHandle::load`].
     pub fn swap(&self, dir: impl Into<PathBuf>) -> crate::Result<SwapInfo> {
         self.call(|reply| Request::Swap { dir: dir.into(), reply })?
     }
 
-    /// Inferences admitted but not yet completed on this shard (a point
-    /// snapshot; the drain a concurrent [`EngineHandle::swap`] will wait
-    /// out). The pool reports this as the per-shard queue depth in
-    /// `PoolUtilization` and sums it per replica leg when fanning a
-    /// hot-swap across a model's owner set.
+    /// Inferences admitted but not yet replied to (a point snapshot; the
+    /// drain a concurrent [`EngineHandle::swap`] will wait out). The pool
+    /// reports this as the per-shard queue depth in `PoolUtilization` and
+    /// sums it per replica leg when fanning a hot-swap across a model's
+    /// owner set.
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::Acquire)
     }
@@ -515,20 +957,23 @@ impl EngineHandle {
         reply_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine shard {} dropped the request", self.shard))?
+            .map(|(t, _)| t)
     }
 
     /// Admission-controlled inference: rejects with a typed
     /// [`Overloaded`](super::Overloaded) error (instead of blocking) when
-    /// the shard's request queue is full.
+    /// the shard's in-flight window is full.
     pub fn try_infer(&self, id: &str, input: Tensor) -> crate::Result<Tensor> {
         self.try_infer_async(id, input)?.wait()
     }
 
     /// Admission-controlled, non-blocking submission: enqueues the request
     /// and returns an [`InferTicket`] to wait on, or a typed
-    /// [`Overloaded`](super::Overloaded) error when the shard already has
-    /// `queue_cap` inferences in flight. Admission counts in-flight
-    /// inferences (not raw channel occupancy), so control-plane calls like
+    /// [`Overloaded`](super::Overloaded) error **exactly** when the shard
+    /// already has `queue_cap` inferences in flight. Admission counts
+    /// in-flight inferences — the occupancy of the shard's admission
+    /// window, wherever each request sits in the pipeline — not raw
+    /// channel occupancy, so control-plane calls like
     /// [`EngineHandle::stats`] stay responsive under saturation.
     pub fn try_infer_async(&self, id: &str, input: Tensor) -> crate::Result<InferTicket> {
         // Atomic admission: increment first, back out on overflow.
@@ -567,10 +1012,11 @@ impl EngineHandle {
         self.call(|reply| Request::Stats { reply })
     }
 
-    /// Test hook: occupy the engine thread for `duration` so tests can
-    /// deterministically fill the request queue and observe `Overloaded`
-    /// rejections. Returns once the engine thread has *started* stalling
-    /// (no sleep-based synchronization needed at the call site).
+    /// Test hook: occupy the execute thread for `duration` so tests can
+    /// deterministically fill the request queue / pipeline window and
+    /// observe `Overloaded` rejections. Returns once the execute thread
+    /// has *started* stalling (no sleep-based synchronization needed at
+    /// the call site).
     #[doc(hidden)]
     pub fn debug_stall(&self, duration: Duration) -> crate::Result<()> {
         let (started_tx, started_rx) = mpsc::channel();
@@ -594,7 +1040,8 @@ mod tests {
     use crate::testutil;
 
     // Engine tests that need real AOT artifacts live in rust/tests/
-    // (integration); here we use synthetic CPU-backend fixtures.
+    // (integration); here we use synthetic CPU-backend fixtures. The
+    // pipeline concurrency battery lives in rust/tests/pipeline.rs.
 
     fn cpu_engine(shard: usize, queue_cap: usize) -> EngineHandle {
         Engine::start_with(EngineConfig {
@@ -612,6 +1059,8 @@ mod tests {
         let stats = engine.stats().unwrap();
         assert_eq!(stats.resident_models, 0);
         assert_eq!(stats.shard, 0);
+        assert_eq!(stats.window_depth, DEFAULT_WINDOW_DEPTH);
+        assert_eq!(stats.window_occupancy, 0);
         engine.shutdown();
     }
 
@@ -656,6 +1105,23 @@ mod tests {
         assert_eq!(stats.items, 2);
         assert_eq!(stats.resident_models, 1);
         assert!(stats.resident_bytes > 0);
+        assert!(stats.exec_us > 0, "execute phase time accumulates");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn traced_reply_carries_pipeline_metadata() {
+        let engine = cpu_engine(0, 16);
+        let dir = testutil::tiny_model_dir("engine-trace", "trace-m", 8, 4);
+        engine.load(&dir).unwrap();
+        let x = Tensor::zeros(crate::tensor::Shape::nchw(3, 1, 8, 8));
+        let (out, trace) = engine.try_infer_async("trace-m", x).unwrap().wait_traced().unwrap();
+        assert_eq!(out.shape().dims(), &[3, 4]);
+        assert_eq!(trace.seq, 1, "first completion on this shard");
+        assert!(trace.window >= 1 && trace.window <= DEFAULT_WINDOW_DEPTH);
+        // 3 rows padded onto the [1,4,8] ladder execute at batch 4.
+        let stats = engine.stats().unwrap();
+        assert_eq!(stats.items, 3, "items count real rows, not padded");
         engine.shutdown();
     }
 
@@ -665,7 +1131,7 @@ mod tests {
         let dir = testutil::tiny_model_dir("engine-full", "tiny-full", 8, 2);
         engine.load(&dir).unwrap();
 
-        // Occupy the engine thread (returns once the stall has begun),
+        // Occupy the execute thread (returns once the stall has begun),
         // then fill the 1-slot admission window with an async submission;
         // the next admission must be rejected, typed.
         engine.debug_stall(Duration::from_millis(300)).unwrap();
@@ -680,7 +1146,7 @@ mod tests {
         assert!(err.to_string().contains("overloaded"), "{err}");
 
         // The admitted request still completes once the stall ends.
-        let out = ticket.wait().unwrap();
+        let (out, _) = ticket.wait_traced().unwrap();
         assert_eq!(out.shape().dims(), &[1, 4]);
         engine.shutdown();
     }
@@ -720,5 +1186,23 @@ mod tests {
         assert_eq!(swap.old_version, None);
         assert_eq!(engine.stats().unwrap().resident_models, 1);
         engine.shutdown();
+    }
+
+    #[test]
+    fn window_primitive_blocks_at_depth_and_releases() {
+        let w = Arc::new(Window::new(2));
+        assert_eq!(w.acquire(), 1);
+        assert_eq!(w.acquire(), 2);
+        assert_eq!(w.occupancy(), 2);
+        // A third acquire must block until a release.
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || w2.acquire());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(w.occupancy(), 2, "third acquire still blocked");
+        w.release();
+        assert_eq!(t.join().unwrap(), 2);
+        w.release();
+        w.release();
+        assert_eq!(w.occupancy(), 0);
     }
 }

@@ -36,11 +36,15 @@ mod pool;
 pub use api_mapping::{api_mapping_table, ApiMappingRow};
 pub use cpu_model::CpuModel;
 pub use engine::{
-    BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, InferTicket, ModelInfo, SwapInfo,
+    BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, ExecTrace, InferTicket,
+    ModelInfo, SwapInfo, DEFAULT_WINDOW_DEPTH,
 };
 #[cfg(feature = "pjrt")]
 pub use literal::{literal_to_tensor, tensor_to_literal};
 #[cfg(feature = "pjrt")]
 pub use loaded_model::LoadedModel;
 pub use placement::{Placement, ReplicaAssignment, ReplicaSet};
-pub use pool::{EnginePool, Overloaded, PoolConfig, PoolHandle, PoolStats, Routed, SwapReport};
+pub use pool::{
+    EnginePool, ExecutionPanic, Overloaded, PoolConfig, PoolHandle, PoolStats, PoolTicket, Routed,
+    SwapReport,
+};

@@ -67,8 +67,36 @@ impl std::fmt::Display for Overloaded {
 
 impl std::error::Error for Overloaded {}
 
+/// Typed fault-isolation error: the model's forward **panicked** on the
+/// executing shard. The panic was caught on the execute thread; only this
+/// request failed — the shard, its other in-window requests, and the
+/// model stay healthy. Recover with `err.downcast_ref::<ExecutionPanic>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecutionPanic {
+    /// Model whose forward panicked.
+    pub model: String,
+    /// Shard the panic was caught on.
+    pub shard: usize,
+    /// The panic payload, when it was a string.
+    pub message: String,
+}
+
+impl std::fmt::Display for ExecutionPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "model `{}` panicked during execution on shard {}: {} \
+             (fault isolated to this request)",
+            self.model, self.shard, self.message
+        )
+    }
+}
+
+impl std::error::Error for ExecutionPanic {}
+
 /// Where one batch was routed: the chosen replica of the model's owner
-/// set. Surfaced to clients through `BatchMeta`/`RequestResult`.
+/// set, plus the executing shard's pipeline trace for that batch.
+/// Surfaced to clients through `BatchMeta`/`RequestResult`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Routed {
     /// Shard that executed the batch.
@@ -78,6 +106,21 @@ pub struct Routed {
     pub replica: usize,
     /// Size of the owner set at routing time.
     pub replicas: usize,
+    /// Pipeline-window occupancy on the executing shard when this batch
+    /// took its slot (>= 1; 1 means it had the pipeline to itself).
+    pub window: usize,
+    /// Stage-phase time for this batch (validate + pad, microseconds).
+    pub stage_micros: u64,
+    /// Execute-phase time for this batch (microseconds).
+    pub exec_micros: u64,
+}
+
+impl Routed {
+    /// A routing record with no pipeline trace yet (tests, synthetic
+    /// metadata): occupancy 1, zero phase timings.
+    pub fn at(shard: usize, replica: usize, replicas: usize) -> Routed {
+        Routed { shard, replica, replicas, window: 1, stage_micros: 0, exec_micros: 0 }
+    }
 }
 
 /// Result of a zero-downtime hot-swap through the pool (see
@@ -110,6 +153,10 @@ pub struct PoolConfig {
     pub shards: usize,
     /// Per-shard request-queue bound (admission control).
     pub queue_cap: usize,
+    /// Per-shard pipeline window depth: how many batches may overlap in
+    /// each shard's stage→execute→scatter pipeline (`--window-depth` on
+    /// the CLI; 1 = the old strictly serial engine).
+    pub window_depth: usize,
     /// Default replica count for model loads (clamped to `1..=shards`;
     /// per-model overrides via [`PoolHandle::load_replicated`]).
     pub replicas: usize,
@@ -130,6 +177,7 @@ impl Default for PoolConfig {
         PoolConfig {
             shards: 0,
             queue_cap: 1024,
+            window_depth: super::engine::DEFAULT_WINDOW_DEPTH,
             replicas: 1,
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
@@ -182,6 +230,11 @@ impl PoolStats {
             resident_models: self.shards.iter().map(|s| s.resident_models).collect(),
             resident_bytes: self.shards.iter().map(|s| s.resident_bytes).collect(),
             queue_depth: Vec::new(),
+            window_depth: self.shards.iter().map(|s| s.window_depth).collect(),
+            window_occupancy: self.shards.iter().map(|s| s.window_occupancy).collect(),
+            stage_us: self.shards.iter().map(|s| s.stage_us).collect(),
+            exec_us: self.shards.iter().map(|s| s.exec_us).collect(),
+            scatter_us: self.shards.iter().map(|s| s.scatter_us).collect(),
             replicas: Vec::new(),
         }
     }
@@ -226,6 +279,77 @@ impl ReplicaRoutes {
     }
 }
 
+/// RAII raise of a replica's outstanding-request count: decrements on
+/// drop, so the power-of-two-choices load signal can never leak when a
+/// caller abandons a ticket or an error path returns early.
+struct OutstandingGuard(Arc<AtomicUsize>);
+
+impl OutstandingGuard {
+    fn raise(counter: Arc<AtomicUsize>) -> OutstandingGuard {
+        counter.fetch_add(1, Ordering::AcqRel);
+        OutstandingGuard(counter)
+    }
+}
+
+impl Drop for OutstandingGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A routed, admitted, in-flight inference (see
+/// [`PoolHandle::infer_async`]). Waiting consumes the ticket; dropping it
+/// without waiting abandons the reply (the shard still executes the
+/// batch) and releases the routing load signal.
+pub struct PoolTicket {
+    ticket: super::engine::InferTicket,
+    replica: usize,
+    replicas: usize,
+    _outstanding: OutstandingGuard,
+}
+
+impl PoolTicket {
+    /// The shard executing this request.
+    pub fn shard(&self) -> usize {
+        self.ticket.shard()
+    }
+
+    /// Block until the result arrives.
+    pub fn wait(self) -> crate::Result<(Tensor, Routed)> {
+        let shard = self.ticket.shard();
+        let (out, trace) = self.ticket.wait_traced()?;
+        Ok((
+            out,
+            Routed {
+                shard,
+                replica: self.replica,
+                replicas: self.replicas,
+                window: trace.window,
+                stage_micros: trace.stage_micros,
+                exec_micros: trace.exec_micros,
+            },
+        ))
+    }
+
+    /// Like [`PoolTicket::wait`], erroring instead of blocking past
+    /// `timeout`.
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> crate::Result<(Tensor, Routed)> {
+        let shard = self.ticket.shard();
+        let (out, trace) = self.ticket.wait_timeout(timeout)?;
+        Ok((
+            out,
+            Routed {
+                shard,
+                replica: self.replica,
+                replicas: self.replicas,
+                window: trace.window,
+                stage_micros: trace.stage_micros,
+                exec_micros: trace.exec_micros,
+            },
+        ))
+    }
+}
+
 /// The engine pool. [`EnginePool::start`] returns the cloneable
 /// [`PoolHandle`]; the pool itself holds no state beyond its shards.
 pub struct EnginePool;
@@ -240,6 +364,7 @@ impl EnginePool {
             handles.push(Engine::start_with(EngineConfig {
                 shard,
                 queue_cap: config.queue_cap,
+                window_depth: config.window_depth,
                 backend: config.backend,
                 strategy: config.strategy,
                 precision: config.precision,
@@ -705,8 +830,21 @@ impl PoolHandle {
     /// model's owner set (power-of-two-choices on outstanding requests,
     /// deterministic tie-break). Returns the output and the chosen
     /// replica; rejects with a typed [`Overloaded`] error when the chosen
-    /// shard's queue is full.
+    /// shard's in-flight window is full. Blocking form of
+    /// [`PoolHandle::infer_async`].
     pub fn infer(&self, id: &str, input: Tensor) -> crate::Result<(Tensor, Routed)> {
+        self.infer_async(id, input)?.wait()
+    }
+
+    /// Admission-controlled **streaming** submission: route the batch,
+    /// enqueue it into the chosen shard's pipeline window, and return a
+    /// [`PoolTicket`] immediately — the caller overlaps its own work
+    /// (collecting the next batch) with execution and waits on the ticket
+    /// later. The per-replica outstanding count (the
+    /// power-of-two-choices load signal) stays raised until the ticket is
+    /// waited or dropped. Errors here are pre-admission: unknown model,
+    /// or a typed [`Overloaded`] when the shard's window is at capacity.
+    pub fn infer_async(&self, id: &str, input: Tensor) -> crate::Result<PoolTicket> {
         let set = self
             .routes
             .lock()
@@ -717,13 +855,17 @@ impl PoolHandle {
         let tick = self.route_clock.fetch_add(1, Ordering::Relaxed);
         let idx = set.pick(tick);
         let route = &set.routes[idx];
-        route.outstanding.fetch_add(1, Ordering::AcqRel);
-        let result = self.shards[route.shard].try_infer(id, input);
-        route.outstanding.fetch_sub(1, Ordering::AcqRel);
-        Ok((
-            result?,
-            Routed { shard: route.shard, replica: idx, replicas: set.routes.len() },
-        ))
+        // The guard raises the outstanding count for exactly as long as
+        // the request is in flight, whichever way the ticket resolves
+        // (waited, dropped, or rejected below on the error path).
+        let outstanding = OutstandingGuard::raise(route.outstanding.clone());
+        let ticket = self.shards[route.shard].try_infer_async(id, input)?;
+        Ok(PoolTicket {
+            ticket,
+            replica: idx,
+            replicas: set.routes.len(),
+            _outstanding: outstanding,
+        })
     }
 
     /// Per-shard statistics.

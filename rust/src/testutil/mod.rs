@@ -53,6 +53,37 @@ pub fn assert_allclose(actual: &[f32], expected: &[f32], rtol: f32, atol: f32) {
     }
 }
 
+/// Bit pattern marking a poisoned fault-injection input: a quiet NaN with
+/// a recognizable payload that real data (finite activations, or NaNs
+/// produced by arithmetic) never carries.
+pub const POISON_BITS: u32 = 0x7FC0_DEAD;
+
+/// Build a poisoned input tensor of `shape`: element 0 carries
+/// [`POISON_BITS`], the rest are zeros. Feeding this through any model's
+/// forward makes the execution plan panic (see [`panic_if_poisoned`]) —
+/// the fault the engine's pipeline tests inject to prove a kernel panic
+/// fails only its own ticket.
+pub fn poison_input(shape: &[usize]) -> crate::tensor::Tensor {
+    let mut t = crate::tensor::Tensor::zeros(shape);
+    t.data_mut()[0] = f32::from_bits(POISON_BITS);
+    t
+}
+
+/// Panic iff `input` is a [`poison_input`] tensor (O(1): only element 0 is
+/// checked). Called at the top of the CPU model's exact-batch forward,
+/// *before* any plan state is touched, so the panic is catchable without
+/// poisoning the plan's arena mutex — later requests on the same model
+/// must keep succeeding.
+pub fn panic_if_poisoned(model: &str, input: &crate::tensor::Tensor) {
+    if input
+        .data()
+        .first()
+        .is_some_and(|v| v.to_bits() == POISON_BITS)
+    {
+        panic!("injected fault: poisoned input for model `{model}`");
+    }
+}
+
 /// The oracle-parity tolerance contract, defined once and reused by the
 /// parity tests (`rust/tests/plan.rs`) and the E14 bench
 /// (`fig_quantized_exec`): a planned execution at resident precision `d`

@@ -4,7 +4,9 @@
 //! environment (no AOT artifacts needed).
 
 use deeplearningkit::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
-use deeplearningkit::runtime::{BackendKind, EnginePool, Overloaded, PoolConfig, PoolHandle};
+use deeplearningkit::runtime::{
+    BackendKind, EnginePool, Overloaded, PoolConfig, PoolHandle, DEFAULT_WINDOW_DEPTH,
+};
 use deeplearningkit::tensor::{Shape, Tensor};
 use deeplearningkit::testutil;
 use std::time::Duration;
@@ -49,12 +51,29 @@ fn coordinator_spreads_models_over_shards() {
         assert_eq!(r.shard, info.shard);
         assert_eq!(pool.shard_of(&info.id), Some(info.shard));
         assert_eq!(r.output.shape().dims(), &[4]);
+        // Each reply carries the pipeline-window occupancy its batch saw.
+        assert!(
+            r.window >= 1 && r.window <= DEFAULT_WINDOW_DEPTH,
+            "window occupancy {} out of range",
+            r.window
+        );
     }
     // Both shards did work.
     let util = pool.utilization().unwrap();
     assert_eq!(util.shard_count(), 2);
     assert!(util.executions.iter().all(|&e| e > 0), "{:?}", util.executions);
     assert!((util.shares().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    // The pipeline-window fields flow through pool utilization: every
+    // shard reports its configured depth, occupancy never exceeds it
+    // (slots release moments after the reply, so 0 is not guaranteed
+    // here), and shards that executed accumulated execute-phase time.
+    assert_eq!(util.window_depth, vec![DEFAULT_WINDOW_DEPTH; 2]);
+    assert!(
+        util.window_occupancy.iter().all(|&o| o <= DEFAULT_WINDOW_DEPTH),
+        "{:?}",
+        util.window_occupancy
+    );
+    assert!(util.exec_us.iter().all(|&us| us > 0), "{:?}", util.exec_us);
     pool.shutdown();
 }
 
