@@ -1,18 +1,30 @@
-//! E14 — quantized execution, measured: f32 vs f16 vs int8 vs
-//! cost-model-auto weight residency on the NIN-style tower from E12.
+//! E14 — quantized execution, measured: f32 vs f16 vs int8-weights vs
+//! full-integer int8 vs cost-model-auto residency on the NIN-style tower
+//! from E12, plus an integer-GEMM latency sweep.
 //!
 //! The paper's roadmap calls out lower-precision (16/8-bit) resident
 //! weights as the lever for fitting more and larger models on device;
 //! this figure measures both sides of that trade on the compiled-plan
 //! path: per-forward latency and resident weight bytes per precision
-//! policy, with every variant held to the same tolerance-based
-//! oracle-parity contract the test suite enforces
-//! (`testutil::assert_within_tolerance`).
+//! policy, with every variant held to the tolerance-based oracle-parity
+//! contract the test suite enforces. Full-integer plans (`int8`:
+//! packed-i8 weights *and* per-forward quantized activations) are held
+//! to the wider `full_integer_parity_tolerance` band; weights-only
+//! plans keep the per-dtype `parity_tolerance` bands.
+//!
+//! The second half is the acceptance sweep: with the conv strategy
+//! pinned to im2col (so every conv is a GEMM), the full-integer forward
+//! must be strictly faster than f32 at every swept batch — integer
+//! accumulation reassociates and vectorizes where f32 summation cannot.
+//! Results persist to `BENCH_E14.json`.
 
-use deeplearningkit::bench::{bench_header, Bench};
+use deeplearningkit::bench::{bench_header, persist, Bench};
+use deeplearningkit::json::Value;
 use deeplearningkit::metrics::{fmt_bytes, fmt_us, Table};
 use deeplearningkit::model::{Architecture, LayerKind};
-use deeplearningkit::nn::{CpuExecutor, PlanOptions, PlanPrecision, PlannedExecutor};
+use deeplearningkit::nn::{
+    ConvStrategy, CpuExecutor, PlanOptions, PlanPrecision, PlannedExecutor,
+};
 use deeplearningkit::tensor::{DType, Shape, Tensor};
 use deeplearningkit::testutil;
 
@@ -42,7 +54,8 @@ fn nin_style() -> Architecture {
     a
 }
 
-/// Coarsest resident dtype in a plan — it picks the parity band.
+/// Coarsest resident dtype in a plan — it picks the parity band for
+/// weights-only plans (full-integer plans use the dedicated band).
 fn coarsest(precisions: &[(std::sync::Arc<str>, DType)]) -> DType {
     if precisions.iter().any(|(_, d)| *d == DType::I8) {
         DType::I8
@@ -56,7 +69,7 @@ fn coarsest(precisions: &[(std::sync::Arc<str>, DType)]) -> DType {
 fn main() {
     bench_header(
         "E14 (quantized execution)",
-        "f32/f16/int8/auto resident weights on the NIN-style tower, batch 1",
+        "f32/f16/int8-weights/int8/auto residency on the NIN-style tower, plus the im2col integer-GEMM sweep",
     );
     let arch = nin_style();
     let x = Tensor::randn(Shape::nchw(1, 3, 32, 32), 3, 1.0);
@@ -66,15 +79,20 @@ fn main() {
 
     let mut table = Table::new(
         "NIN-style batch-1 forward by weight-residency precision",
-        &["precision", "latency", "resident weights", "vs f32 bytes"],
+        &["precision", "path", "latency", "resident weights", "vs f32 bytes"],
     );
+    let mut residency = Value::array();
     let mut f32_bytes = 0usize;
     let mut i8_bytes = usize::MAX;
     let mut auto_bytes = usize::MAX;
     let mut auto_precisions = Vec::new();
-    for precision in
-        [PlanPrecision::F32, PlanPrecision::F16, PlanPrecision::Int8, PlanPrecision::Auto]
-    {
+    for precision in [
+        PlanPrecision::F32,
+        PlanPrecision::F16,
+        PlanPrecision::Int8Weights,
+        PlanPrecision::Int8,
+        PlanPrecision::Auto,
+    ] {
         let planned = PlannedExecutor::with_random_weights(
             arch.clone(),
             42,
@@ -84,19 +102,24 @@ fn main() {
         planned.forward(&x).unwrap(); // compile + quantize + build arena once
         let plan = planned.cached_plan(1).unwrap();
         let bytes = plan.resident_weight_bytes();
+        let full_int = plan.has_full_integer_steps();
 
-        // Every variant is held to the parity contract before it is timed
-        // (same helper the tier-1 parity matrix uses).
+        // Every variant is held to the parity contract before it is
+        // timed (same bands the tier-1 parity matrix uses): the
+        // full-integer band when activations are quantized too, the
+        // per-dtype weights-only band otherwise.
         let got = planned.forward(&x).unwrap();
-        testutil::assert_within_tolerance(
-            got.data(),
-            expect.data(),
-            coarsest(&plan.weight_precisions()),
-        );
+        let band = if full_int {
+            testutil::full_integer_parity_tolerance()
+        } else {
+            testutil::parity_tolerance(coarsest(&plan.weight_precisions()))
+        };
+        testutil::assert_allclose(got.data(), expect.data(), band.0, band.1);
 
         let m = b.run(|| planned.forward(&x).unwrap());
         table.row(&[
             precision.name().to_string(),
+            if full_int { "i8xi8->i32".to_string() } else { "f32 accum".to_string() },
             fmt_us(m.mean_us),
             fmt_bytes(bytes as u64),
             if f32_bytes == 0 {
@@ -105,6 +128,14 @@ fn main() {
                 format!("{:.2}x", bytes as f64 / f32_bytes as f64)
             },
         ]);
+        residency.push(Value::obj(&[
+            ("precision", precision.name().into()),
+            ("full_integer", full_int.into()),
+            ("mean_us", m.mean_us.into()),
+            ("min_us", m.min_us.into()),
+            ("resident_bytes", bytes.into()),
+            ("quant_arena_bytes", plan.quant_arena_bytes().into()),
+        ]));
         match precision {
             PlanPrecision::F32 => f32_bytes = bytes,
             PlanPrecision::Int8 => i8_bytes = bytes,
@@ -112,7 +143,7 @@ fn main() {
                 auto_bytes = bytes;
                 auto_precisions = plan.weight_precisions();
             }
-            PlanPrecision::F16 => {}
+            PlanPrecision::F16 | PlanPrecision::Int8Weights => {}
         }
     }
     table.print();
@@ -124,8 +155,9 @@ fn main() {
 
     // Shape assertions, coarse on purpose (CI smoke): quantization must
     // actually shrink the resident footprint — int8 to at most half of
-    // f32 (1 byte + scale vs 4 bytes per weight; f32 biases stay) — and
-    // the auto plan must never exceed the pure-f32 footprint.
+    // f32 (1 byte + scale vs 4 bytes per weight; f32 biases stay, and
+    // packed panels pad the depth axis to a multiple of 4) — and the
+    // auto plan must never exceed the pure-f32 footprint.
     assert!(
         i8_bytes * 2 <= f32_bytes,
         "int8 resident bytes {i8_bytes} must be <= 0.5x of f32 {f32_bytes}"
@@ -134,8 +166,94 @@ fn main() {
         auto_bytes <= f32_bytes,
         "auto residency {auto_bytes} must never exceed the pure-f32 footprint {f32_bytes}"
     );
+
+    // ------------------------------------------------------------------
+    // Integer-GEMM sweep (acceptance): pin every conv to im2col so the
+    // whole tower is GEMM-bound, then race f32 against the full-integer
+    // path. Integer MACs widen to i32 and reassociate, so the i8 kernel
+    // vectorizes where f32 accumulation must stay ordered — the int8
+    // forward must come in strictly under f32 at every batch, even
+    // paying for per-forward activation quantization. Compared on
+    // min-latency, the noise-robust end of the distribution.
+    // ------------------------------------------------------------------
+    let mut sweep_table = Table::new(
+        "im2col-pinned forward, f32 vs full-integer int8 (min latency)",
+        &["batch", "f32", "int8 (i8xi8->i32)", "speedup"],
+    );
+    let mut sweep = Value::array();
+    for &batch in &[1usize, 4] {
+        let xb = Tensor::randn(Shape::nchw(batch, 3, 32, 32), 5 + batch as u64, 1.0);
+        let f32_exec = PlannedExecutor::with_random_weights(
+            arch.clone(),
+            42,
+            PlanOptions::fixed(ConvStrategy::Im2col),
+        )
+        .unwrap();
+        let i8_exec = PlannedExecutor::with_random_weights(
+            arch.clone(),
+            42,
+            PlanOptions {
+                precision: PlanPrecision::Int8,
+                ..PlanOptions::fixed(ConvStrategy::Im2col)
+            },
+        )
+        .unwrap();
+        f32_exec.forward(&xb).unwrap(); // compile + arena outside the clock
+        i8_exec.forward(&xb).unwrap();
+        assert!(
+            i8_exec.cached_plan(batch).unwrap().has_full_integer_steps(),
+            "int8 im2col plan at batch {batch} must run the full-integer path"
+        );
+        let mf = b.run(|| f32_exec.forward(&xb).unwrap());
+        let mi = b.run(|| i8_exec.forward(&xb).unwrap());
+        sweep_table.row(&[
+            batch.to_string(),
+            fmt_us(mf.min_us),
+            fmt_us(mi.min_us),
+            format!("{:.2}x", mf.min_us / mi.min_us),
+        ]);
+        sweep.push(Value::obj(&[
+            ("batch", batch.into()),
+            ("f32_min_us", mf.min_us.into()),
+            ("f32_mean_us", mf.mean_us.into()),
+            ("int8_min_us", mi.min_us.into()),
+            ("int8_mean_us", mi.mean_us.into()),
+            ("speedup", (mf.min_us / mi.min_us).into()),
+        ]));
+        assert!(
+            mi.min_us < mf.min_us,
+            "acceptance: full-integer im2col forward must beat f32 at batch {batch} \
+             (int8 {:.1}us vs f32 {:.1}us)",
+            mi.min_us,
+            mf.min_us
+        );
+    }
+    sweep_table.print();
+
+    let doc = Value::obj(&[
+        ("experiment", "E14".into()),
+        (
+            "title",
+            "quantized execution: residency by precision policy + full-integer im2col GEMM sweep"
+                .into(),
+        ),
+        (
+            "config",
+            Value::obj(&[
+                ("model", "nin-style".into()),
+                ("input", "3x32x32".into()),
+                ("seed", 42usize.into()),
+                ("sweep_batches", (&[1usize, 4][..]).into()),
+            ]),
+        ),
+        ("residency", residency),
+        ("gemm_sweep", sweep),
+    ]);
+    persist("E14", &doc);
+
     println!(
-        "\nE14 shape holds: int8 residency {} <= 0.5x f32 {}, parity inside the tolerance contract",
+        "\nE14 shape holds: int8 residency {} <= 0.5x f32 {}, full-integer im2col \
+         strictly faster than f32 at every swept batch, parity inside the tolerance contract",
         fmt_bytes(i8_bytes as u64),
         fmt_bytes(f32_bytes as u64)
     );

@@ -33,5 +33,6 @@ pub use pipeline::{
 };
 pub use prune::{magnitude_prune, sparse_decode, sparse_encode, SparseTensor};
 pub use quantize::{
-    kmeans_quantize, symmetric_i8_scale, QuantizedTensor, ResidentF16, ResidentI8,
+    kmeans_quantize, quantize_i8_into, requant_scale, symmetric_i8_scale, QuantizedTensor,
+    ResidentF16, ResidentI8,
 };

@@ -47,6 +47,20 @@ impl CompressedTensor {
     pub fn bytes(&self) -> usize {
         self.quant.codebook.len() * 4 + self.table.bytes() + self.packed.len()
     }
+
+    /// This tensor in execution-resident symmetric-i8 form, built
+    /// straight from the codebook ([`ResidentI8::from_codebook`]) — no
+    /// dense f32 intermediate. Bit-equivalent to decoding and
+    /// re-quantizing, which the unit tests pin.
+    pub fn resident_i8(&self) -> super::ResidentI8 {
+        super::ResidentI8::from_codebook(&self.quant)
+    }
+
+    /// This tensor in execution-resident f16 form, built straight from
+    /// the codebook ([`ResidentF16::from_codebook`]).
+    pub fn resident_f16(&self) -> super::ResidentF16 {
+        super::ResidentF16::from_codebook(&self.quant)
+    }
 }
 
 /// A compressed model: compressed weight tensors + raw f32 biases.
@@ -213,6 +227,27 @@ mod tests {
         // Error is bounded: quantized weights near originals.
         // Pruning zeroes most weights, so MAE ~ mean |w| of pruned mass.
         assert!(report.mean_abs_error < 0.1, "mae={}", report.mean_abs_error);
+    }
+
+    #[test]
+    fn compressed_tensors_yield_residents_without_f32_round_trip() {
+        // The direct DLKC→resident path must be bit-equivalent to the
+        // decode-then-quantize round trip for every tensor of a real
+        // compressed model (the per-codebook edge cases live in
+        // quantize.rs; this pins the model-level API).
+        let (_, ws) = lenet_weights();
+        let (model, _) = compress_model(&ws, StagePlan::default()).unwrap();
+        assert!(!model.tensors.is_empty());
+        for ct in &model.tensors {
+            let dense = ct.quant.decode().unwrap();
+            let i8_direct = ct.resident_i8();
+            let i8_round = super::super::ResidentI8::quantize(&dense);
+            assert_eq!(i8_direct.codes(), i8_round.codes(), "{}", ct.name);
+            assert_eq!(i8_direct.scale(), i8_round.scale(), "{}", ct.name);
+            let f16_direct = ct.resident_f16();
+            let f16_round = super::super::ResidentF16::quantize(&dense);
+            assert_eq!(f16_direct.bits(), f16_round.bits(), "{}", ct.name);
+        }
     }
 
     #[test]

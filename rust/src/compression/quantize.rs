@@ -49,6 +49,40 @@ pub fn symmetric_i8_scale(data: &[f32]) -> f32 {
     }
 }
 
+/// Quantize a slice into a caller-provided i8 buffer with a known scale —
+/// the activation-side counterpart of [`ResidentI8::quantize`], used by
+/// the full-integer forward path to code each layer input into the plan's
+/// i8 arena. Same code rule as the resident form: round-to-nearest,
+/// clamped to ±127, NaN→0, exact zeros → code 0.
+pub fn quantize_i8_into(data: &[f32], scale: f32, out: &mut [i8]) {
+    assert_eq!(data.len(), out.len(), "quantize_i8_into length mismatch");
+    for (o, &v) in out.iter_mut().zip(data) {
+        let c = (v / scale).round();
+        *o = if c.is_nan() { 0 } else { c.clamp(-127.0, 127.0) as i8 };
+    }
+}
+
+/// The fused requantization factor for a full-integer step:
+/// `x_scale * w_scale`, applied once per output element to bring the
+/// i32 accumulator back to f32 activation range.
+///
+/// Both inputs come from [`symmetric_i8_scale`] and are therefore finite
+/// and positive, but their *product* can still underflow to a denormal/0
+/// (two tiny scales) or overflow to inf (two huge ones). Either would
+/// poison every forward through the plan, so the product is clamped into
+/// `[f32::MIN_POSITIVE, f32::MAX]` — the result is always a finite,
+/// positive, normal f32. Never NaN, never Inf, never zero.
+pub fn requant_scale(x_scale: f32, w_scale: f32) -> f32 {
+    let prod = x_scale * w_scale;
+    if prod.is_nan() {
+        // Unreachable for scales produced by `symmetric_i8_scale`, but a
+        // NaN here would propagate through clamp — fall back to neutral.
+        1.0
+    } else {
+        prod.clamp(f32::MIN_POSITIVE, f32::MAX)
+    }
+}
+
 /// A weight tensor quantized to symmetric i8 for *execution* residency:
 /// the codes plus the scale preserved from quantization time, so kernels
 /// can run integer-coded inner loops and fold the scale into their
@@ -83,6 +117,38 @@ impl ResidentI8 {
             })
             .collect();
         ResidentI8 { shape: t.shape().dims().to_vec(), codes, scale }
+    }
+
+    /// Build directly from a `DLKC` codebook tensor without materializing
+    /// the dense f32 intermediate: the scale comes from the largest
+    /// |codebook entry| actually referenced by a code (same fallback rule
+    /// as [`symmetric_i8_scale`]), and each codebook entry is mapped to
+    /// its nearest symmetric i8 code once — the per-element pass is then
+    /// a table lookup. Bit-equivalent to
+    /// `ResidentI8::quantize(&q.decode()?)` (out-of-range codes decode to
+    /// 0.0, matching [`QuantizedTensor::decode`]), which the unit tests
+    /// pin.
+    pub fn from_codebook(q: &QuantizedTensor) -> ResidentI8 {
+        let entry = |c: u32| q.codebook.get(c as usize).copied().unwrap_or(0.0);
+        // symmetric_i8_scale over the decoded values, without decoding.
+        let max_abs = q.codes.iter().fold(0.0f32, |m, &c| m.max(entry(c).abs()));
+        let scale = if max_abs == 0.0 || !max_abs.is_finite() { 1.0 } else { max_abs / 127.0 };
+        let code_for = |v: f32| {
+            let c = (v / scale).round();
+            if c.is_nan() {
+                0
+            } else {
+                c.clamp(-127.0, 127.0) as i8
+            }
+        };
+        let entry_codes: Vec<i8> = q.codebook.iter().map(|&e| code_for(e)).collect();
+        // Out-of-range codes decode to 0.0, which always codes to 0.
+        let codes = q
+            .codes
+            .iter()
+            .map(|&c| entry_codes.get(c as usize).copied().unwrap_or(0))
+            .collect();
+        ResidentI8 { shape: q.shape.clone(), codes, scale }
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -148,6 +214,23 @@ impl ResidentF16 {
     pub fn quantize(t: &Tensor) -> ResidentF16 {
         let bits = t.data().iter().map(|&v| crate::tensor::f32_to_f16_bits(v)).collect();
         ResidentF16 { shape: t.shape().dims().to_vec(), bits }
+    }
+
+    /// Build directly from a `DLKC` codebook tensor without the dense f32
+    /// intermediate: each codebook entry is converted to f16 once, the
+    /// per-element pass is a table lookup. Bit-equivalent to
+    /// `ResidentF16::quantize(&q.decode()?)` (out-of-range codes decode
+    /// to 0.0).
+    pub fn from_codebook(q: &QuantizedTensor) -> ResidentF16 {
+        let entry_bits: Vec<u16> =
+            q.codebook.iter().map(|&e| crate::tensor::f32_to_f16_bits(e)).collect();
+        let zero = crate::tensor::f32_to_f16_bits(0.0);
+        let bits = q
+            .codes
+            .iter()
+            .map(|&c| entry_bits.get(c as usize).copied().unwrap_or(zero))
+            .collect();
+        ResidentF16 { shape: q.shape.clone(), bits }
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -495,5 +578,145 @@ mod tests {
         let q = ResidentI8::quantize(&t);
         assert!(q.relative_rms_error(t.data()) >= h.relative_rms_error(t.data()));
         assert!(q.bytes() < h.bytes());
+    }
+
+    // ---- requantization scale (full-integer epilogue) ----------------------
+    //
+    // requant_scale is baked into every full-integer step's epilogue; the
+    // contract is: finite, positive, normal, for ANY pair of scales the
+    // symmetric quantizer can produce — including pairs whose product
+    // underflows or overflows f32.
+
+    #[test]
+    fn requant_scale_is_always_finite_positive_normal() {
+        let scales = [
+            1.0f32,
+            127.0,
+            1.0 / 127.0,
+            f32::MIN_POSITIVE,        // smallest normal a quantizer scale can be
+            1e-30,                    // product of two of these is denormal/zero
+            1e30,                     // product of two of these overflows
+            3.4e38 / 127.0,           // max-magnitude tensor
+            1e-38,                    // denormal scale (hostile input)
+            f32::MAX,
+        ];
+        for &a in &scales {
+            for &b in &scales {
+                let s = requant_scale(a, b);
+                assert!(s.is_finite(), "requant_scale({a}, {b}) = {s} not finite");
+                assert!(s >= f32::MIN_POSITIVE, "requant_scale({a}, {b}) = {s} subnormal/zero");
+                // Exact product whenever it is representable and normal.
+                let prod = a * b;
+                if prod.is_finite() && prod >= f32::MIN_POSITIVE {
+                    assert_eq!(s, prod, "clamp must not disturb in-range products");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requant_scale_survives_edge_case_tensors() {
+        // Scales drawn from the same edge tensors the plan can meet:
+        // all-zero activations, single-value tensors, denormal ranges,
+        // non-finite garbage. Whatever pair lands in the epilogue, the
+        // fused scale stays sane.
+        let edge_tensors: Vec<Vec<f32>> = vec![
+            vec![0.0; 16],                         // all-zero activation range
+            vec![5.0],                             // single-value tensor
+            vec![-0.375; 9],                       // repeated single value
+            vec![1e-39, -1e-39, 1e-40],            // denormal magnitudes
+            vec![f32::INFINITY, f32::NAN, 1.0],    // non-finite fallback
+            vec![3.4e38, -3.4e38],                 // extreme magnitudes
+        ];
+        for x in &edge_tensors {
+            for w in &edge_tensors {
+                let xs = symmetric_i8_scale(x);
+                let ws = symmetric_i8_scale(w);
+                let s = requant_scale(xs, ws);
+                assert!(
+                    s.is_finite() && s >= f32::MIN_POSITIVE,
+                    "x={x:?} w={w:?} xs={xs} ws={ws} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requant_scale_nan_input_falls_back_neutral() {
+        // symmetric_i8_scale never emits NaN, but the guard must hold
+        // against one anyway rather than letting clamp propagate it.
+        assert_eq!(requant_scale(f32::NAN, 1.0), 1.0);
+        assert_eq!(requant_scale(1.0, f32::NAN), 1.0);
+    }
+
+    #[test]
+    fn quantize_i8_into_matches_resident_codes() {
+        let t = Tensor::randn(&[257][..], 52, 1.5);
+        let q = ResidentI8::quantize(&t);
+        let mut out = vec![0i8; t.data().len()];
+        quantize_i8_into(t.data(), q.scale(), &mut out);
+        assert_eq!(out, q.codes(), "activation-side coder must match resident coder");
+        // Edge inputs: NaN→0, inf saturates, zeros stay zero.
+        let weird = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0];
+        let mut out = vec![99i8; weird.len()];
+        quantize_i8_into(&weird, 1.0, &mut out);
+        assert_eq!(out, vec![0, 127, -127, 0, 0]);
+    }
+
+    // ---- direct DLKC → resident load (codebook path) -----------------------
+
+    #[test]
+    fn resident_i8_from_codebook_bit_equivalent_to_round_trip() {
+        // The direct path must produce the same scale and the same codes
+        // as decode-to-f32 → quantize, bit for bit, across weight-like
+        // and edge-case codebooks.
+        let tensors = [
+            Tensor::randn(&[4, 1, 3, 3][..], 61, 0.8),
+            Tensor::randn(&[10, 64][..], 62, 0.1),
+            Tensor::zeros(&[33][..]),
+            Tensor::filled(&[17][..], -2.5),
+        ];
+        for t in &tensors {
+            for bits in [2u32, 5, 8] {
+                for zero_preserving in [false, true] {
+                    let q = kmeans_quantize(t, bits, zero_preserving);
+                    let direct = ResidentI8::from_codebook(&q);
+                    let round_trip = ResidentI8::quantize(&q.decode().unwrap());
+                    assert_eq!(direct.scale().to_bits(), round_trip.scale().to_bits());
+                    assert_eq!(direct.codes(), round_trip.codes());
+                    assert_eq!(direct.dims(), round_trip.dims());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_f16_from_codebook_bit_equivalent_to_round_trip() {
+        for t in [Tensor::randn(&[6, 5, 5][..], 63, 1.2), Tensor::zeros(&[12][..])] {
+            let q = kmeans_quantize(&t, 5, true);
+            let direct = ResidentF16::from_codebook(&q);
+            let round_trip = ResidentF16::quantize(&q.decode().unwrap());
+            assert_eq!(direct.bits(), round_trip.bits());
+            assert_eq!(direct.dims(), round_trip.dims());
+        }
+    }
+
+    #[test]
+    fn from_codebook_out_of_range_codes_decode_as_zero() {
+        // decode() maps out-of-range codes to 0.0; the direct path must
+        // agree (code 0 / f16 +0.0), not panic or index out of bounds.
+        let q = QuantizedTensor {
+            shape: vec![3],
+            codebook: vec![-1.0, 2.0],
+            codes: vec![1, 7, 0], // 7 is out of range
+            bits: 2,
+        };
+        let direct = ResidentI8::from_codebook(&q);
+        let round_trip = ResidentI8::quantize(&q.decode().unwrap());
+        assert_eq!(direct.scale().to_bits(), round_trip.scale().to_bits());
+        assert_eq!(direct.codes(), round_trip.codes());
+        assert_eq!(direct.codes()[1], 0);
+        let h = ResidentF16::from_codebook(&q);
+        assert_eq!(h.bits()[1], crate::tensor::f32_to_f16_bits(0.0));
     }
 }

@@ -114,7 +114,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
         .flag("window-depth", "per-shard pipeline window: batches overlapping in stage/execute/scatter (1 = serial)", Some("2"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
-        .flag("precision", "weight-residency precision for compiled plans: f32, f16, int8 or auto", Some("f32"))
+        .flag("precision", "weight-residency precision for compiled plans: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
         .switch("auto-update", "poll the registry and hot-swap newly published versions")
         .flag("update-poll-ms", "auto-update poll interval (ms)", Some("200"))
@@ -338,7 +338,7 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
         .flag("model", "model id", Some("lenet-mnist"))
         .flag("count", "number of inputs", Some("8"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
-        .flag("precision", "weight-residency precision: f32, f16, int8 or auto", Some("f32"))
+        .flag("precision", "weight-residency precision: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"))
         .switch("cpu", "use the rust CPU reference backend instead of PJRT");
     let a = cmd.parse(argv)?;
     let model_id = a.get_or("model", "lenet-mnist").to_string();
@@ -392,7 +392,7 @@ fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
     )
     .flag("batch", "comma-separated batch sizes (default: the model's AOT ladder)", None)
     .flag("conv-strategy", "conv strategy: auto, direct, im2col or fft", Some("auto"))
-    .flag("precision", "weight-residency precision: f32, f16, int8 or auto", Some("f32"));
+    .flag("precision", "weight-residency precision: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"));
     let a = cmd.parse(argv)?;
     let target = a.positional().first().ok_or_else(|| {
         anyhow::anyhow!("usage: dlk plan <model-dir-or-id> [--batch 1,8] [--conv-strategy auto]")

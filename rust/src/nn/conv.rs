@@ -14,8 +14,10 @@
 //! per-tensor i8 scale is folded into the epilogue so the bias remains
 //! full-precision.
 
-use crate::compression::{ResidentF16, ResidentI8};
+use crate::compression::{quantize_i8_into, requant_scale, symmetric_i8_scale, ResidentF16, ResidentI8};
 use crate::tensor::{f16_lut, Shape, Tensor};
+
+use super::gemm_i8::{dot_i8, gemm_i8_i32, im2col_i8_transposed, PackedI8};
 
 /// Convolution hyper-parameters (square kernel, symmetric padding).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -465,6 +467,119 @@ pub fn conv2d_im2col_i8_into(
     Ok(())
 }
 
+/// [`conv2d_direct_into`] over the *full-integer* path: the input is
+/// quantized once per forward (per-tensor symmetric scale) into the
+/// caller's i8 scratch, the 7-loop accumulates exact i8×i8→i32 with the
+/// clipped kernel row reduced as one contiguous [`dot_i8`], and the
+/// epilogue applies the fused `requant_scale(x_scale, w_scale)` plus the
+/// full-precision bias.
+pub fn conv2d_direct_i8i8_into(
+    input: &Tensor,
+    weight: &PackedI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    xq: &mut [i8],
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
+    let numel = input.numel();
+    anyhow::ensure!(xq.len() >= numel, "i8 activation scratch too small");
+    let x = input.data();
+    let xs = symmetric_i8_scale(x);
+    let xq = &mut xq[..numel];
+    quantize_i8_into(x, xs, xq);
+    let rs = requant_scale(xs, weight.scale());
+    let wd = weight.data();
+    let kp = weight.k_pad();
+    let o = out.data_mut();
+
+    for b in 0..n {
+        for och in 0..oc {
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            let wrow = &wd[och * kp..(och + 1) * kp];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    // Clip the kernel window against the image once; the
+                    // surviving kx run is a contiguous i8 dot.
+                    let x0 = ox * params.stride;
+                    let kx_lo = params.pad.saturating_sub(x0);
+                    let kx_hi = k.min((w + params.pad).saturating_sub(x0));
+                    let mut acc = 0i32;
+                    if kx_lo < kx_hi {
+                        let ix0 = x0 + kx_lo - params.pad;
+                        let run = kx_hi - kx_lo;
+                        for ic in 0..c {
+                            for ky in 0..k {
+                                let iy =
+                                    (oy * params.stride + ky) as isize - params.pad as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                let x_row = (b * c + ic) * h * w + iy as usize * w + ix0;
+                                let w_row = (ic * k + ky) * k + kx_lo;
+                                acc += dot_i8(&wrow[w_row..w_row + run], &xq[x_row..x_row + run]);
+                            }
+                        }
+                    }
+                    o[((b * oc + och) * oh + oy) * ow + ox] = acc as f32 * rs + bias_v;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`conv2d_im2col_into`] over the *full-integer* path: quantize the
+/// whole batch input once (per-tensor symmetric scale), lower each image
+/// with the transposed i8 im2col, run the packed [`gemm_i8_i32`], and
+/// requantize the exact i32 accumulators back to f32 in a fused epilogue
+/// (`acc * requant_scale + bias`). All three scratch buffers come from
+/// the plan's integer arena — steady-state forwards allocate nothing.
+pub fn conv2d_im2col_i8i8_into(
+    input: &Tensor,
+    weight: &PackedI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    xq: &mut [i8],
+    patches_q: &mut [i8],
+    acc: &mut [i32],
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
+    let (oh, ow) = params.out_hw(h, w, k)?;
+    check_out(out, n, oc, oh, ow)?;
+    let cols = oh * ow;
+    let kp = weight.k_pad();
+    let numel = input.numel();
+    anyhow::ensure!(xq.len() >= numel, "i8 activation scratch too small");
+    anyhow::ensure!(patches_q.len() >= cols * kp, "i8 patch scratch too small");
+    anyhow::ensure!(acc.len() >= oc * cols, "i32 accumulator scratch too small");
+    let x = input.data();
+    let xs = symmetric_i8_scale(x);
+    let xq = &mut xq[..numel];
+    quantize_i8_into(x, xs, xq);
+    let rs = requant_scale(xs, weight.scale());
+    let acc = &mut acc[..oc * cols];
+
+    for b in 0..n {
+        let img = &xq[b * c * h * w..(b + 1) * c * h * w];
+        im2col_i8_transposed(img, c, h, w, k, params, kp, patches_q);
+        gemm_i8_i32(oc, cols, kp, weight.data(), patches_q, acc);
+        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
+        for och in 0..oc {
+            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            let arow = &acc[och * cols..(och + 1) * cols];
+            let orow = &mut o[och * cols..(och + 1) * cols];
+            for (ov, &av) in orow.iter_mut().zip(arow) {
+                *ov = av as f32 * rs + bias_v;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// [`conv2d_im2col_into`] with f16-resident weights (lookup-table decode;
 /// zero bit patterns keep the pruned fast path).
 pub fn conv2d_im2col_f16_into(
@@ -713,6 +828,76 @@ mod tests {
             conv2d_im2col_f16_into(&x, &hq, Some(&b), p, &mut patches, &mut goth2).unwrap();
             assert_eq!(goth2.data(), expect_f16_gemm.data(), "f16 im2col bit-exact");
         }
+    }
+
+    #[test]
+    fn full_integer_convs_match_f32_on_dequantized_operands() {
+        // The i8i8 kernels quantize activations internally; running the
+        // f32 kernel on the *dequantized* activations and weights
+        // isolates requant rounding (one f32 multiply on an exact i32
+        // accumulator) from quantization error. Direct and im2col share
+        // the exact integer accumulator and the same epilogue, so they
+        // must also agree with each other bit for bit.
+        let mut rng = XorShiftRng::new(321);
+        let x = Tensor::new(Shape::nchw(2, 3, 7, 7), Gen::tensor_data(&mut rng, 294)).unwrap();
+        let w = Tensor::new(&[4, 3, 3, 3][..], Gen::tensor_data(&mut rng, 108)).unwrap();
+        let b = Tensor::new(&[4][..], Gen::tensor_data(&mut rng, 4)).unwrap();
+        for p in [Conv2dParams::new(1, 1), Conv2dParams::new(2, 0), Conv2dParams::new(1, 2)] {
+            let (oh, ow) = p.out_hw(7, 7, 3).unwrap();
+            let q = crate::compression::ResidentI8::quantize(&w);
+            let packed = PackedI8::pack(&q);
+
+            // Reference: f32 conv on dequantized activations + weights.
+            let xs = symmetric_i8_scale(x.data());
+            let mut xcodes = vec![0i8; x.numel()];
+            quantize_i8_into(x.data(), xs, &mut xcodes);
+            let x_deq = Tensor::new(
+                x.shape().dims(),
+                xcodes.iter().map(|&cv| cv as f32 * xs).collect::<Vec<_>>(),
+            )
+            .unwrap();
+            let expect = conv2d_direct(&x_deq, &q.dequantize().unwrap(), Some(&b), p).unwrap();
+
+            let mut xq = vec![i8::MIN; x.numel()]; // poisoned scratch
+            let mut got_direct = Tensor::filled(Shape::nchw(2, 4, oh, ow), f32::NAN);
+            conv2d_direct_i8i8_into(&x, &packed, Some(&b), p, &mut xq, &mut got_direct).unwrap();
+            assert_allclose(got_direct.data(), expect.data(), 1e-3, 1e-3);
+
+            let cols = oh * ow;
+            let mut patches_q = vec![i8::MIN; cols * packed.k_pad()];
+            let mut acc = vec![i32::MIN; 4 * cols];
+            let mut got_gemm = Tensor::filled(Shape::nchw(2, 4, oh, ow), f32::NAN);
+            conv2d_im2col_i8i8_into(
+                &x, &packed, Some(&b), p, &mut xq, &mut patches_q, &mut acc, &mut got_gemm,
+            )
+            .unwrap();
+            assert_eq!(
+                got_gemm.data(),
+                got_direct.data(),
+                "integer direct and im2col share exact accumulators ({p:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn full_integer_convs_reject_small_scratch() {
+        let x = Tensor::zeros(Shape::nchw(1, 2, 4, 4));
+        let w = Tensor::randn(&[3, 2, 3, 3][..], 8, 1.0);
+        let packed = PackedI8::pack(&crate::compression::ResidentI8::quantize(&w));
+        let p = Conv2dParams::new(1, 1);
+        let mut out = Tensor::zeros(Shape::nchw(1, 3, 4, 4));
+        let mut tiny = vec![0i8; 3];
+        assert!(conv2d_direct_i8i8_into(&x, &packed, None, p, &mut tiny, &mut out).is_err());
+        let mut xq = vec![0i8; 32];
+        let mut acc = vec![0i32; 3 * 16];
+        assert!(conv2d_im2col_i8i8_into(&x, &packed, None, p, &mut xq, &mut tiny, &mut acc, &mut out)
+            .is_err());
+        let mut patches_q = vec![0i8; 16 * packed.k_pad()];
+        let mut tiny_acc = vec![0i32; 3];
+        assert!(conv2d_im2col_i8i8_into(
+            &x, &packed, None, p, &mut xq, &mut patches_q, &mut tiny_acc, &mut out
+        )
+        .is_err());
     }
 
     #[test]

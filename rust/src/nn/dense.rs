@@ -3,8 +3,10 @@
 //! [`dense_f16_into`]) the execution plan dispatches when a layer's
 //! weights live in reduced precision (ROADMAP item 2).
 
-use crate::compression::{ResidentF16, ResidentI8};
+use crate::compression::{quantize_i8_into, requant_scale, symmetric_i8_scale, ResidentF16, ResidentI8};
 use crate::tensor::{f16_lut, Shape, Tensor};
+
+use super::gemm_i8::{gemm_i8_i32, PackedI8};
 
 /// Naive row-major matmul: `a[m,k] @ b[k,n] -> [m,n]` in ikj order (cache
 /// friendly for row-major b).
@@ -165,6 +167,46 @@ pub fn dense_i8_into(
     Ok(())
 }
 
+/// [`dense_into`] over the *full-integer* path: each input row is
+/// quantized (per-tensor symmetric scale) into a zero-padded panel of
+/// the caller's i8 scratch, the packed [`gemm_i8_i32`] produces exact
+/// i32 accumulators, and the epilogue applies the fused
+/// `requant_scale(x_scale, w_scale)` plus the full-precision bias. This
+/// is the kernel that turns the serial (unvectorizable) f32 dot loops of
+/// [`dense_into`] into wide integer reductions.
+pub fn dense_i8i8_into(
+    x: &Tensor,
+    weight: &PackedI8,
+    bias: Option<&Tensor>,
+    xq: &mut [i8],
+    acc: &mut [i32],
+    out: &mut Tensor,
+) -> crate::Result<()> {
+    let (batch, in_f, out_f) = check_dense_q(x, weight.dims(), bias, out)?;
+    let kp = weight.k_pad();
+    anyhow::ensure!(xq.len() >= batch * kp, "i8 activation scratch too small");
+    anyhow::ensure!(acc.len() >= batch * out_f, "i32 accumulator scratch too small");
+    let xd = x.data();
+    let xs = symmetric_i8_scale(xd);
+    let xq = &mut xq[..batch * kp];
+    xq.fill(0); // zero the pad tails once; rows are overwritten below
+    for bi in 0..batch {
+        quantize_i8_into(&xd[bi * in_f..(bi + 1) * in_f], xs, &mut xq[bi * kp..bi * kp + in_f]);
+    }
+    let acc = &mut acc[..batch * out_f];
+    gemm_i8_i32(batch, out_f, kp, xq, weight.data(), acc);
+    let rs = requant_scale(xs, weight.scale());
+    let od = out.data_mut();
+    for bi in 0..batch {
+        let arow = &acc[bi * out_f..(bi + 1) * out_f];
+        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
+        for (of, (ov, &av)) in orow.iter_mut().zip(arow).enumerate() {
+            *ov = av as f32 * rs + bias.map_or(0.0, |bv| bv.data()[of]);
+        }
+    }
+    Ok(())
+}
+
 /// [`dense_into`] with f16-resident weights, decoded through the
 /// process-wide lookup table — one indexed load per element.
 pub fn dense_f16_into(
@@ -314,6 +356,53 @@ mod tests {
         let mut yf16 = Tensor::zeros(&[2, 5][..]);
         dense_f16_into(&x, &h, None, &mut yf16).unwrap();
         assert_allclose(yf16.data(), reference.data(), 5e-3, 5e-3);
+    }
+
+    #[test]
+    fn full_integer_dense_matches_f32_on_dequantized_operands() {
+        // Reference: f32 dense on dequantized activations + weights.
+        // The integer path's only rounding is the one requant multiply
+        // on an exact i32 accumulator, so the two agree tightly.
+        let mut rng = XorShiftRng::new(93);
+        let x = Tensor::new(&[3, 20][..], Gen::tensor_data(&mut rng, 60)).unwrap();
+        let w = Tensor::new(&[7, 20][..], Gen::tensor_data(&mut rng, 140)).unwrap();
+        let b = Tensor::new(&[7][..], Gen::tensor_data(&mut rng, 7)).unwrap();
+
+        let q = crate::compression::ResidentI8::quantize(&w);
+        let packed = PackedI8::pack(&q);
+        assert_eq!((packed.k(), packed.k_pad()), (20, 20));
+
+        let xs = symmetric_i8_scale(x.data());
+        let mut xcodes = vec![0i8; 60];
+        quantize_i8_into(x.data(), xs, &mut xcodes);
+        let x_deq =
+            Tensor::new(&[3, 20][..], xcodes.iter().map(|&c| c as f32 * xs).collect::<Vec<_>>())
+                .unwrap();
+        let expect = dense(&x_deq, &q.dequantize().unwrap(), Some(&b)).unwrap();
+
+        let mut xq = vec![i8::MIN; 3 * packed.k_pad()]; // poisoned scratch
+        let mut acc = vec![i32::MIN; 3 * 7];
+        let mut got = Tensor::filled(&[3, 7][..], f32::NAN);
+        dense_i8i8_into(&x, &packed, Some(&b), &mut xq, &mut acc, &mut got).unwrap();
+        assert_allclose(got.data(), expect.data(), 1e-4, 1e-4);
+
+        // Unaligned in-features exercise the pad tail.
+        let w2 = Tensor::new(&[5, 19][..], Gen::tensor_data(&mut rng, 95)).unwrap();
+        let x2 = Tensor::new(&[2, 19][..], Gen::tensor_data(&mut rng, 38)).unwrap();
+        let packed2 = PackedI8::pack(&crate::compression::ResidentI8::quantize(&w2));
+        assert_eq!((packed2.k(), packed2.k_pad()), (19, 20));
+        let mut xq2 = vec![i8::MIN; 2 * 20];
+        let mut acc2 = vec![0i32; 2 * 5];
+        let mut got2 = Tensor::zeros(&[2, 5][..]);
+        dense_i8i8_into(&x2, &packed2, None, &mut xq2, &mut acc2, &mut got2).unwrap();
+        let reference = dense(&x2, &w2, None).unwrap();
+        assert_allclose(got2.data(), reference.data(), 5e-2, 5e-2);
+
+        // Scratch-size violations are rejected, not UB.
+        let mut tiny = vec![0i8; 2];
+        assert!(dense_i8i8_into(&x, &packed, None, &mut tiny, &mut acc, &mut got).is_err());
+        let mut tiny_acc = vec![0i32; 2];
+        assert!(dense_i8i8_into(&x, &packed, None, &mut xq, &mut tiny_acc, &mut got).is_err());
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Packed int8 GEMM — the full-integer inner engine behind the
+//! `*_i8i8_into` conv/dense kernels (ROADMAP item 2 follow-on: turn the
+//! int8 footprint win into a latency win).
+//!
+//! Why integer GEMM beats the f32 kernels here: the f32 dense/GEMM inner
+//! loops are serial dot products, and LLVM cannot vectorize an f32
+//! reduction (FP addition is not associative, and this crate builds
+//! without `-ffast-math`-style reassociation). Integer addition *is*
+//! associative, so the canonical `acc += a[i] as i32 * b[i] as i32` zip
+//! loop in [`dot_i8`] autovectorizes to widening-multiply/add lanes
+//! (`pmaddwd` is baseline SSE2 on x86-64, `smlal` on NEON) — 8–16 MACs
+//! per cycle where the f32 loop retires one fused multiply-add per
+//! FP-latency chain.
+//!
+//! The weight side is pre-packed once at plan-compile time into
+//! [`PackedI8`]: row-major dot-layout panels (`[rows, k_pad]`, each row
+//! zero-padded to a multiple of 4) so every GEMM row reduction runs over
+//! one contiguous, alignment-friendly slice with no tail conditionals in
+//! the hot loop. The activation side is quantized per forward by the
+//! plan (`compression::quantize_i8_into`) into the i8 arena, and the
+//! i32 accumulator is brought back to f32 with one fused
+//! `requant_scale(x_scale, w_scale)` multiply in the epilogue.
+
+use crate::compression::ResidentI8;
+
+use super::Conv2dParams;
+
+/// Largest reduction depth the i8×i8→i32 kernels accept: with worst-case
+/// ±127 codes each MAC contributes ≤ 127² = 16129, so `i32::MAX / 16129`
+/// ≈ 133 152 guarantees the accumulator cannot overflow. Every model
+/// layer in sight is orders of magnitude below this (AlexNet fc6, the
+/// largest layer in the paper's lineage, has k = 9216).
+pub const MAX_GEMM_K: usize = 133_000;
+
+/// Number of B rows processed per block in [`gemm_i8_i32`]: a 16-row
+/// panel of k ≤ 1024 stays L1/L2-hot while the A row streams across it.
+const JB: usize = 16;
+
+/// A weight tensor packed for the integer GEMM: the symmetric-i8 codes of
+/// a [`ResidentI8`], laid out as `rows` contiguous dot-panels of
+/// `k_pad = k.next_multiple_of(4)` codes (tail zero-padded). `rows` is
+/// the leading logical dim (out-channels for conv, out-features for
+/// dense); `k` is the collapsed remainder (`in_ch·k·k` resp. `in`),
+/// which is already the dot-product layout for both layer kinds — packing
+/// is a pad-and-copy, not a transpose.
+#[derive(Clone, Debug)]
+pub struct PackedI8 {
+    shape: Vec<usize>,
+    rows: usize,
+    k: usize,
+    k_pad: usize,
+    data: Vec<i8>,
+    scale: f32,
+}
+
+impl PackedI8 {
+    /// Pack resident codes into padded dot-panels. Panics if the
+    /// reduction depth exceeds [`MAX_GEMM_K`] (i32 accumulator safety) —
+    /// a compile-time (plan-build) event, never a per-forward one.
+    pub fn pack(q: &ResidentI8) -> PackedI8 {
+        let shape = q.dims().to_vec();
+        assert!(!shape.is_empty() && shape[0] > 0, "packed weights need a leading dim");
+        let rows = shape[0];
+        let numel = q.numel();
+        assert_eq!(numel % rows, 0, "ragged weight shape {shape:?}");
+        let k = numel / rows;
+        let k_pad = k.next_multiple_of(4);
+        assert!(
+            k_pad <= MAX_GEMM_K,
+            "reduction depth {k_pad} exceeds i32-safe bound {MAX_GEMM_K}"
+        );
+        let mut data = vec![0i8; rows * k_pad];
+        for r in 0..rows {
+            data[r * k_pad..r * k_pad + k].copy_from_slice(&q.codes()[r * k..(r + 1) * k]);
+        }
+        PackedI8 { shape, rows, k, k_pad, data, scale: q.scale() }
+    }
+
+    /// Logical (unpacked) weight shape, e.g. `[oc, ic, k, k]`.
+    pub fn dims(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical reduction depth (codes per row before padding).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Padded panel stride (multiple of 4).
+    pub fn k_pad(&self) -> usize {
+        self.k_pad
+    }
+
+    /// Packed panels, `rows * k_pad` codes.
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Resident size: one byte per packed code plus the f32 scale.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4
+    }
+}
+
+/// Contiguous i8 dot product with i32 accumulation. The length-bounded
+/// reslice lets the bounds checks hoist out of the loop, and the integer
+/// reduction reassociates freely — this is the loop the autovectorizer
+/// turns into widening multiply-add lanes.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = 0i32;
+    for i in 0..n {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
+}
+
+/// Integer GEMM over pre-transposed panels:
+/// `out[m, n] = A[m, k_pad] · Bᵀ` where `bt` holds `n` rows of `k_pad`
+/// codes each (both operands row-major in dot layout). Blocked over `bt`
+/// rows ([`JB`]) so a panel of B stays cache-hot while successive A rows
+/// stream across it. Accumulation is exact i8×i8→i32 — no rounding
+/// until the caller's requantization epilogue.
+pub fn gemm_i8_i32(m: usize, n: usize, k_pad: usize, a: &[i8], bt: &[i8], out: &mut [i32]) {
+    assert!(a.len() >= m * k_pad, "A panel too small");
+    assert!(bt.len() >= n * k_pad, "B panel too small");
+    assert!(out.len() >= m * n, "output too small");
+    for j0 in (0..n).step_by(JB) {
+        let jmax = (j0 + JB).min(n);
+        for i in 0..m {
+            let arow = &a[i * k_pad..(i + 1) * k_pad];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in j0..jmax {
+                orow[j] = dot_i8(arow, &bt[j * k_pad..(j + 1) * k_pad]);
+            }
+        }
+    }
+}
+
+/// i8 im2col in *transposed* (dot) layout: lowers one quantized image
+/// `xq = [c, h, w]` into `out[cols, k_pad]` where each row is the full
+/// receptive field of one output pixel, zero-padded to `k_pad`. Unlike
+/// the f32 [`super::im2col_into`] (which emits `[c·k·k, cols]` for the
+/// broadcast-row GEMM), the transposed layout makes each GEMM reduction
+/// a contiguous slice pair for [`gemm_i8_i32`].
+///
+/// The buffer is fully zeroed first: padding cells and the per-row tail
+/// must not leak stale codes when the plan reuses the scratch across
+/// batch elements and layers.
+pub fn im2col_i8_transposed(
+    xq: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    params: Conv2dParams,
+    k_pad: usize,
+    out: &mut [i8],
+) {
+    debug_assert!(xq.len() >= c * h * w);
+    let oh = (h + 2 * params.pad - k) / params.stride + 1;
+    let ow = (w + 2 * params.pad - k) / params.stride + 1;
+    let cols = oh * ow;
+    assert!(k_pad >= c * k * k, "k_pad {k_pad} < patch size {}", c * k * k);
+    assert!(out.len() >= cols * k_pad, "patch buffer too small");
+    let out = &mut out[..cols * k_pad];
+    out.fill(0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let orow = &mut out[(oy * ow + ox) * k_pad..(oy * ow + ox + 1) * k_pad];
+            let x0 = ox * params.stride;
+            // Clip the kernel window against the image once per pixel;
+            // the surviving kx run is a contiguous copy.
+            let kx_lo = params.pad.saturating_sub(x0);
+            let kx_hi = k.min((w + params.pad).saturating_sub(x0));
+            if kx_lo >= kx_hi {
+                continue;
+            }
+            let ix0 = x0 + kx_lo - params.pad;
+            for ic in 0..c {
+                for ky in 0..k {
+                    let iy = (oy * params.stride + ky) as isize - params.pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let x_row = ic * h * w + iy as usize * w;
+                    let r0 = (ic * k + ky) * k;
+                    orow[r0 + kx_lo..r0 + kx_hi]
+                        .copy_from_slice(&xq[x_row + ix0..x_row + ix0 + (kx_hi - kx_lo)]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::testutil::{Gen, XorShiftRng};
+
+    fn packed_from(dims: &[usize], data: Vec<f32>) -> PackedI8 {
+        let t = Tensor::new(dims, data).unwrap();
+        PackedI8::pack(&ResidentI8::quantize(&t))
+    }
+
+    #[test]
+    fn pack_pads_rows_to_multiple_of_four() {
+        // [2, 9] weight (k=9) → k_pad=12, tails zero.
+        let q = packed_from(&[2, 3, 3][..], (1..=18).map(|v| v as f32).collect());
+        assert_eq!((q.rows(), q.k(), q.k_pad()), (2, 9, 12));
+        assert_eq!(q.data().len(), 2 * 12);
+        assert_eq!(q.bytes(), 2 * 12 + 4);
+        for r in 0..2 {
+            assert_eq!(&q.data()[r * 12 + 9..(r + 1) * 12], &[0, 0, 0]);
+            // Unpadded prefix preserves the resident codes in order.
+            let t = Tensor::new(&[2, 3, 3][..], (1..=18).map(|v| v as f32).collect()).unwrap();
+            let res = ResidentI8::quantize(&t);
+            assert_eq!(&q.data()[r * 12..r * 12 + 9], &res.codes()[r * 9..(r + 1) * 9]);
+        }
+        // Already-aligned k is untouched.
+        let q4 = packed_from(&[3, 4][..], (1..=12).map(|v| v as f32).collect());
+        assert_eq!((q4.k(), q4.k_pad()), (4, 4));
+    }
+
+    #[test]
+    fn dot_i8_exact_and_saturating_codes() {
+        let a = vec![127i8; 1000];
+        let b = vec![-127i8; 1000];
+        assert_eq!(dot_i8(&a, &b), -127 * 127 * 1000);
+        assert_eq!(dot_i8(&[], &[]), 0);
+        assert_eq!(dot_i8(&[3, -4, 5], &[2, 2, 2]), 8);
+    }
+
+    #[test]
+    fn gemm_matches_scalar_reference() {
+        let mut rng = XorShiftRng::new(314);
+        let (m, n, k_pad) = (5, 13, 24);
+        let a: Vec<i8> = (0..m * k_pad).map(|_| (rng.range_usize(0, 255) as i32 - 127) as i8).collect();
+        let bt: Vec<i8> =
+            (0..n * k_pad).map(|_| (rng.range_usize(0, 255) as i32 - 127) as i8).collect();
+        let mut out = vec![i32::MIN; m * n];
+        gemm_i8_i32(m, n, k_pad, &a, &bt, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for kk in 0..k_pad {
+                    acc += a[i * k_pad + kk] as i64 * bt[j * k_pad + kk] as i64;
+                }
+                assert_eq!(out[i * n + j] as i64, acc, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_im2col_matches_f32_lowering() {
+        // Quantize with integer-valued activations so the i8 codes decode
+        // exactly, then check every patch row against the f32 im2col
+        // column for the same output pixel.
+        let mut rng = XorShiftRng::new(99);
+        let (c, h, w, k) = (2, 5, 6, 3);
+        let data: Vec<f32> =
+            (0..c * h * w).map(|_| (rng.range_usize(0, 255) as i32 - 127) as f32).collect();
+        let x = Tensor::new(crate::tensor::Shape::nchw(1, c, h, w), data).unwrap();
+        for params in [Conv2dParams::new(1, 1), Conv2dParams::new(2, 0), Conv2dParams::new(1, 2)] {
+            let (oh, ow) = params.out_hw(h, w, k).unwrap();
+            let cols = oh * ow;
+            let rows = c * k * k;
+            let k_pad = rows.next_multiple_of(4);
+            let q = ResidentI8::quantize(&x);
+            let mut patches_q = vec![i8::MIN; cols * k_pad + 7]; // poisoned + oversized
+            im2col_i8_transposed(q.codes(), c, h, w, k, params, k_pad, &mut patches_q);
+            let f = super::super::im2col(&x, 0, k, params).unwrap();
+            let scale = q.scale();
+            for col in 0..cols {
+                for r in 0..rows {
+                    let got = patches_q[col * k_pad + r] as f32 * scale;
+                    let want = f.data()[r * cols + col];
+                    assert!(
+                        (got - want).abs() <= scale * 0.5 + 1e-6,
+                        "col={col} r={r}: {got} vs {want} ({params:?})"
+                    );
+                }
+                for r in rows..k_pad {
+                    assert_eq!(patches_q[col * k_pad + r], 0, "tail must stay zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_end_to_end_equals_f32_conv_on_integer_data() {
+        // Activations and weights are integers in [-127, 127] with the
+        // max magnitude pinned at 127, so the symmetric scale is exactly
+        // 1.0 and quantization is lossless. The integer pipeline (pack →
+        // lower → gemm → requant) must then reproduce the f32 conv
+        // exactly: every partial sum is an integer below 2^24.
+        let mut rng = XorShiftRng::new(7);
+        let (c, h, w, oc, k) = (3, 6, 6, 4, 3);
+        let params = Conv2dParams::new(1, 1);
+        let mut xd: Vec<f32> =
+            (0..c * h * w).map(|_| (rng.range_usize(0, 255) as i32 - 127) as f32).collect();
+        let mut wd: Vec<f32> =
+            (0..oc * c * k * k).map(|_| (rng.range_usize(0, 255) as i32 - 127) as f32).collect();
+        xd[0] = 127.0;
+        wd[0] = 127.0;
+        let x = Tensor::new(crate::tensor::Shape::nchw(1, c, h, w), xd).unwrap();
+        let wt = Tensor::new(&[oc, c, k, k][..], wd).unwrap();
+        let expect = super::super::conv2d_direct(&x, &wt, None, params).unwrap();
+
+        let xq = ResidentI8::quantize(&x);
+        let wq = PackedI8::pack(&ResidentI8::quantize(&wt));
+        assert_eq!(xq.scale(), 1.0);
+        assert_eq!(wq.scale(), 1.0);
+        let (oh, ow) = params.out_hw(h, w, k).unwrap();
+        let cols = oh * ow;
+        let mut patches_q = vec![0i8; cols * wq.k_pad()];
+        im2col_i8_transposed(xq.codes(), c, h, w, k, params, wq.k_pad(), &mut patches_q);
+        let mut acc = vec![0i32; oc * cols];
+        gemm_i8_i32(oc, cols, wq.k_pad(), wq.data(), &patches_q, &mut acc);
+        let rs = crate::compression::requant_scale(xq.scale(), wq.scale());
+        assert_eq!(rs, 1.0);
+        for (i, (&ai, &ev)) in acc.iter().zip(expect.data()).enumerate() {
+            assert_eq!(ai as f32 * rs, ev, "output {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds i32-safe bound")]
+    fn pack_rejects_overflow_prone_depth() {
+        let t = Tensor::zeros(&[1, MAX_GEMM_K + 4][..]);
+        PackedI8::pack(&ResidentI8::quantize(&t));
+    }
+}

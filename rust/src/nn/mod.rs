@@ -20,6 +20,7 @@ mod conv1d;
 mod dense;
 mod fft;
 mod fft_conv;
+mod gemm_i8;
 mod graph;
 pub mod plan;
 mod pool;
@@ -27,12 +28,15 @@ mod softmax;
 
 pub use activation::{relu, relu_in_place, sigmoid, tanh_act};
 pub use conv::{
-    conv2d, conv2d_direct, conv2d_direct_f16_into, conv2d_direct_i8_into, conv2d_direct_into,
-    conv2d_im2col, conv2d_im2col_f16_into, conv2d_im2col_i8_into, conv2d_im2col_into, im2col,
-    im2col_into, Conv2dParams,
+    conv2d, conv2d_direct, conv2d_direct_f16_into, conv2d_direct_i8_into, conv2d_direct_i8i8_into,
+    conv2d_direct_into, conv2d_im2col, conv2d_im2col_f16_into, conv2d_im2col_i8_into,
+    conv2d_im2col_i8i8_into, conv2d_im2col_into, im2col, im2col_into, Conv2dParams,
 };
 pub use conv1d::{conv1d, conv1d_into, max_pool1d, max_pool1d_into, Conv1dParams};
-pub use dense::{dense, dense_f16_into, dense_i8_into, dense_into, matmul, matmul_blocked};
+pub use dense::{
+    dense, dense_f16_into, dense_i8_into, dense_i8i8_into, dense_into, matmul, matmul_blocked,
+};
+pub use gemm_i8::{dot_i8, gemm_i8_i32, im2col_i8_transposed, PackedI8, MAX_GEMM_K};
 pub use fft::{fft, fft2d, ifft, ifft2d, Complex};
 pub use fft_conv::{conv2d_fft, fft_conv_flops, FftConvPlan, FftScratch};
 pub use graph::{CpuExecutor, LayerTiming};

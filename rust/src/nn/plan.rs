@@ -37,12 +37,13 @@ use super::fft::Complex;
 use super::fft_conv::{FftConvPlan, FftScratch};
 use super::{
     avg_pool2d_into, conv1d_into, conv2d_direct_f16_into, conv2d_direct_i8_into,
-    conv2d_direct_into, conv2d_im2col_f16_into, conv2d_im2col_i8_into, conv2d_im2col_into,
-    dense_f16_into, dense_i8_into, dense_into, fft_conv_flops, global_avg_pool_into,
-    max_pool1d_into, max_pool2d_into, relu_in_place, softmax_in_place, Conv1dParams,
-    Conv2dParams, ConvStrategy, LayerTiming, Pool2dParams,
+    conv2d_direct_i8i8_into, conv2d_direct_into, conv2d_im2col_f16_into, conv2d_im2col_i8_into,
+    conv2d_im2col_i8i8_into, conv2d_im2col_into, dense_f16_into, dense_i8_into, dense_i8i8_into,
+    dense_into, fft_conv_flops, gemm_i8_i32, global_avg_pool_into, max_pool1d_into,
+    max_pool2d_into, relu_in_place, softmax_in_place, Conv1dParams, Conv2dParams, ConvStrategy,
+    LayerTiming, PackedI8, Pool2dParams, MAX_GEMM_K,
 };
-use crate::compression::{ResidentF16, ResidentI8};
+use crate::compression::{quantize_i8_into, symmetric_i8_scale, ResidentF16, ResidentI8};
 use crate::model::{Architecture, LayerKind, WeightStore};
 use crate::tensor::{DType, Shape, Tensor};
 use std::collections::BTreeMap;
@@ -76,6 +77,16 @@ pub struct CostModel {
     pub fft_us_per_flop: f64,
     /// µs per element for elementwise / pooling traffic.
     pub elem_us: f64,
+    /// µs per MAC for the packed i8×i8→i32 GEMM (full-integer im2col
+    /// conv and dense). Integer adds reassociate, so this inner loop
+    /// autovectorizes where the f32 one cannot — measured well below
+    /// [`CostModel::gemm_us_per_mac`] on every probed host.
+    pub gemm_i8_us_per_mac: f64,
+    /// µs per MAC for the full-integer direct convolution.
+    pub direct_i8_us_per_mac: f64,
+    /// µs per element for the activation-quantization boundary (one
+    /// max-abs scan plus one round/clamp store per input element).
+    pub quant_us_per_elem: f64,
 }
 
 impl Default for CostModel {
@@ -114,6 +125,9 @@ impl CostModel {
             lower_us_per_elem: 1.5e-3,
             fft_us_per_flop: 4.0e-4,
             elem_us: 5.0e-4,
+            gemm_i8_us_per_mac: 1.5e-4,
+            direct_i8_us_per_mac: 7.5e-4,
+            quant_us_per_elem: 5.0e-4,
         }
     }
 
@@ -183,6 +197,33 @@ impl CostModel {
         let t_elem = probe_us(3, || relu_in_place(&mut buf));
         let elem = t_elem / (1 << 14) as f64;
 
+        // Packed i8×i8→i32 GEMM (full-integer im2col conv and dense).
+        let (gm, gn, gk) = (16usize, 64usize, 256usize);
+        let a8 = vec![3i8; gm * gk];
+        let bt8 = vec![-5i8; gn * gk];
+        let mut acc8 = vec![0i32; gm * gn];
+        let t_gemm_i8 = probe_us(3, || gemm_i8_i32(gm, gn, gk, &a8, &bt8, &mut acc8));
+        let gemm_i8 = t_gemm_i8 / (gm * gn * gk) as f64;
+
+        // Full-integer direct conv (same geometry as the f32 direct
+        // probe, so the two coefficients are directly comparable).
+        let q8 = PackedI8::pack(&ResidentI8::quantize(&w8));
+        let mut xq8 = vec![0i8; x.numel()];
+        let mut out8q = Tensor::zeros(Shape::nchw(1, 8, hw, hw));
+        let t_direct_i8 = probe_us(3, || {
+            conv2d_direct_i8i8_into(&x, &q8, None, p, &mut xq8, &mut out8q).unwrap();
+        });
+        let direct_i8 = t_direct_i8 / macs8;
+
+        // Activation quantization: max-abs scan + round/clamp store.
+        let qdata = buf.data().to_vec();
+        let mut qcodes = vec![0i8; qdata.len()];
+        let t_quant = probe_us(3, || {
+            let s = symmetric_i8_scale(&qdata);
+            quantize_i8_into(&qdata, s, &mut qcodes);
+        });
+        let quant = t_quant / qdata.len() as f64;
+
         let ok = |v: f64| v.is_finite() && v > 0.0;
         CostModel {
             direct_us_per_mac: if ok(direct) { direct } else { fallback.direct_us_per_mac },
@@ -190,6 +231,13 @@ impl CostModel {
             lower_us_per_elem: if ok(lower) { lower } else { fallback.lower_us_per_elem },
             fft_us_per_flop: if ok(fft) { fft } else { fallback.fft_us_per_flop },
             elem_us: if ok(elem) { elem } else { fallback.elem_us },
+            gemm_i8_us_per_mac: if ok(gemm_i8) { gemm_i8 } else { fallback.gemm_i8_us_per_mac },
+            direct_i8_us_per_mac: if ok(direct_i8) {
+                direct_i8
+            } else {
+                fallback.direct_i8_us_per_mac
+            },
+            quant_us_per_elem: if ok(quant) { quant } else { fallback.quant_us_per_elem },
         }
     }
 
@@ -222,6 +270,36 @@ impl CostModel {
             ConvStrategy::Fft => {
                 fft_conv_flops(n, c, h, w, oc, k, params.pad) as f64 * self.fft_us_per_flop
             }
+        })
+    }
+
+    /// Predicted cost of one *full-integer* conv2d call, in µs: the
+    /// integer-path MAC coefficients plus the per-forward activation
+    /// quantization of the input. FFT has no integer form, so it prices
+    /// as infinite and is never picked for a full-integer layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_i8_us(
+        &self,
+        strategy: ConvStrategy,
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        oc: usize,
+        k: usize,
+        params: Conv2dParams,
+    ) -> crate::Result<f64> {
+        let (oh, ow) = params.out_hw(h, w, k)?;
+        let macs = (n * oc * oh * ow * c * k * k) as f64;
+        let quant = (n * c * h * w) as f64 * self.quant_us_per_elem;
+        Ok(match strategy {
+            ConvStrategy::Direct => macs * self.direct_i8_us_per_mac + quant,
+            ConvStrategy::Im2col => {
+                macs * self.gemm_i8_us_per_mac
+                    + (n * c * k * k * oh * ow) as f64 * self.lower_us_per_elem
+                    + quant
+            }
+            ConvStrategy::Fft => f64::INFINITY,
         })
     }
 
@@ -315,23 +393,33 @@ impl CostModel {
     }
 
     /// Pick the resident precision for one weight tensor under a
-    /// relative-RMS quantization-error budget: the smallest-bytes form
-    /// whose *measured* error on these exact weights fits. The CPU scalar
-    /// kernels run all three forms at comparable µs/MAC, so bytes — the
-    /// currency of the cache budget and replica placement — break the
-    /// tie; a backend where the forms diverge in speed would weigh
-    /// `self`'s coefficients here.
+    /// relative-RMS quantization-error budget. Candidates whose
+    /// *measured* error on these exact weights fits the budget are
+    /// ranked by estimated per-MAC latency first (i8 now runs the
+    /// packed full-integer GEMM, priced by its own measured
+    /// coefficient), then by resident bytes — so the pick is
+    /// latency-aware, with footprint breaking ties (f16 decodes through
+    /// the same f32 inner loops, so it wins over f32 on bytes alone).
     pub fn pick_precision(&self, w: &Tensor, budget: f64) -> DType {
         if !(budget > 0.0) {
             return DType::F32;
         }
-        if ResidentI8::quantize(w).relative_rms_error(w.data()) <= budget {
-            return DType::I8;
+        let mut best = (self.gemm_us_per_mac, DType::F32.size(), DType::F32);
+        for (us_per_mac, dtype) in [
+            (self.gemm_us_per_mac, DType::F16),
+            (self.gemm_i8_us_per_mac, DType::I8),
+        ] {
+            let fits = match dtype {
+                DType::F16 => ResidentF16::quantize(w).relative_rms_error(w.data()) <= budget,
+                _ => ResidentI8::quantize(w).relative_rms_error(w.data()) <= budget,
+            };
+            if fits
+                && (us_per_mac < best.0 || (us_per_mac == best.0 && dtype.size() < best.1))
+            {
+                best = (us_per_mac, dtype.size(), dtype);
+            }
         }
-        if ResidentF16::quantize(w).relative_rms_error(w.data()) <= budget {
-            return DType::F16;
-        }
-        DType::F32
+        best.2
     }
 }
 
@@ -378,6 +466,13 @@ impl PlanStrategy {
 /// policies bake reduced-precision copies (with their scales) into the
 /// plan steps for conv2d direct/im2col and dense layers; FFT convs (whose
 /// resident form is f32 spectra) and conv1d stay full-precision.
+///
+/// `Int8` runs the *full-integer* path: weights pre-packed into GEMM
+/// panels, activations quantized at each such step's boundary, and one
+/// i8×i8→i32 GEMM per layer with a fused requantization epilogue.
+/// `Int8Weights` keeps the original weights-only form — i8-resident
+/// weights dequantized on the fly inside f32 kernels — for callers that
+/// want the footprint win without activation quantization error.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum PlanPrecision {
     /// Full-precision everywhere (the bit-exact default).
@@ -385,24 +480,30 @@ pub enum PlanPrecision {
     F32,
     /// f16-resident weights for every quantizable layer.
     F16,
-    /// Symmetric-i8-resident weights for every quantizable layer.
+    /// Full-integer execution: packed-i8 weights *and* quantized
+    /// activations for every quantizable layer.
     Int8,
+    /// Symmetric-i8-resident weights only; activations stay f32 and the
+    /// kernels dequantize per element.
+    Int8Weights,
     /// Per-layer pick by the cost model under
-    /// [`PlanOptions::accuracy_budget`]: the smallest resident form whose
-    /// measured quantization error fits the budget.
+    /// [`PlanOptions::accuracy_budget`]: latency-ranked among the
+    /// resident forms whose measured quantization error fits the budget
+    /// (an i8 pick runs the full-integer path).
     Auto,
 }
 
 impl PlanPrecision {
-    /// Parse a CLI value: `f32`, `f16`, `int8` or `auto`.
+    /// Parse a CLI value: `f32`, `f16`, `int8`, `int8-weights` or `auto`.
     pub fn parse(s: &str) -> crate::Result<PlanPrecision> {
         Ok(match s {
             "f32" => PlanPrecision::F32,
             "f16" => PlanPrecision::F16,
             "int8" => PlanPrecision::Int8,
+            "int8-weights" => PlanPrecision::Int8Weights,
             "auto" => PlanPrecision::Auto,
             other => anyhow::bail!(
-                "unknown precision `{other}` (expected f32, f16, int8 or auto)"
+                "unknown precision `{other}` (expected f32, f16, int8, int8-weights or auto)"
             ),
         })
     }
@@ -412,6 +513,7 @@ impl PlanPrecision {
             PlanPrecision::F32 => "f32",
             PlanPrecision::F16 => "f16",
             PlanPrecision::Int8 => "int8",
+            PlanPrecision::Int8Weights => "int8-weights",
             PlanPrecision::Auto => "auto",
         }
     }
@@ -430,7 +532,7 @@ impl PlanPrecision {
         match self {
             PlanPrecision::F32 | PlanPrecision::Auto => 4,
             PlanPrecision::F16 => 2,
-            PlanPrecision::Int8 => 1,
+            PlanPrecision::Int8 | PlanPrecision::Int8Weights => 1,
         }
     }
 }
@@ -490,6 +592,13 @@ impl PlanOptions {
 enum Op {
     Conv2dDirect { params: Conv2dParams },
     Conv2dIm2col { params: Conv2dParams, scratch_slot: usize, patch_shape: Shape },
+    /// Full-integer variants: quantize the step's input activations,
+    /// run i8×i8→i32 against the packed resident panels, requantize in
+    /// the epilogue. Their scratch lives in the shared integer arena
+    /// ([`QuantBuffers`]), not in the f32 slots — the im2col form needs
+    /// no f32 patch slot at all.
+    Conv2dDirectI8 { params: Conv2dParams },
+    Conv2dIm2colI8 { params: Conv2dParams },
     /// Shared across every ladder batch size's plan: the filter spectra
     /// depend only on (weights, input H×W, params), never on batch, so
     /// `PlannedExecutor` compiles them once per conv layer.
@@ -501,6 +610,7 @@ enum Op {
     MaxPool1d { k: usize, stride: usize },
     GlobalAvgPool,
     Dense,
+    DenseI8,
     FlattenAlias,
     DropoutNoop,
     SoftmaxInPlace,
@@ -509,8 +619,8 @@ enum Op {
 impl Op {
     fn strategy(&self) -> Option<ConvStrategy> {
         match self {
-            Op::Conv2dDirect { .. } => Some(ConvStrategy::Direct),
-            Op::Conv2dIm2col { .. } => Some(ConvStrategy::Im2col),
+            Op::Conv2dDirect { .. } | Op::Conv2dDirectI8 { .. } => Some(ConvStrategy::Direct),
+            Op::Conv2dIm2col { .. } | Op::Conv2dIm2colI8 { .. } => Some(ConvStrategy::Im2col),
             Op::Conv2dFft { .. } => Some(ConvStrategy::Fft),
             _ => None,
         }
@@ -522,6 +632,15 @@ impl Op {
             Op::Relu | Op::FlattenAlias | Op::DropoutNoop | Op::SoftmaxInPlace
         )
     }
+
+    /// Whether this step runs the full-integer path (quantized
+    /// activations + packed-i8 GEMM + requantization).
+    fn full_integer(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv2dDirectI8 { .. } | Op::Conv2dIm2colI8 { .. } | Op::DenseI8
+        )
+    }
 }
 
 /// A weight tensor quantized at compile time and kept resident in the
@@ -530,13 +649,16 @@ impl Op {
 enum ResidentWeights {
     F16(ResidentF16),
     I8(ResidentI8),
+    /// i8 codes pre-packed into zero-padded GEMM panels for the
+    /// full-integer kernels.
+    I8Packed(PackedI8),
 }
 
 impl ResidentWeights {
     fn dtype(&self) -> DType {
         match self {
             ResidentWeights::F16(_) => DType::F16,
-            ResidentWeights::I8(_) => DType::I8,
+            ResidentWeights::I8(_) | ResidentWeights::I8Packed(_) => DType::I8,
         }
     }
 
@@ -544,6 +666,7 @@ impl ResidentWeights {
         match self {
             ResidentWeights::F16(r) => r.bytes(),
             ResidentWeights::I8(r) => r.bytes(),
+            ResidentWeights::I8Packed(p) => p.bytes(),
         }
     }
 }
@@ -607,11 +730,40 @@ pub struct StepInfo {
     pub out_shape: Vec<usize>,
     pub macs: u64,
     pub est_us: f64,
+    /// Whether this step runs the full-integer path (quantized
+    /// activations, packed-i8 GEMM, requantization epilogue).
+    pub full_integer: bool,
+}
+
+/// Sizing for the integer scratch shared by every full-integer step:
+/// max over steps of (quantized-input i8 elems, transposed-patch i8
+/// elems, i32 accumulator elems). One set serves the whole plan because
+/// steps run sequentially — exactly like the f32 slot arena.
+#[derive(Clone, Copy, Debug)]
+struct QuantSpec {
+    x: usize,
+    patches: usize,
+    acc: usize,
+}
+
+fn grow_quant(spec: &mut Option<QuantSpec>, x: usize, patches: usize, acc: usize) {
+    let s = spec.get_or_insert(QuantSpec { x: 0, patches: 0, acc: 0 });
+    s.x = s.x.max(x);
+    s.patches = s.patches.max(patches);
+    s.acc = s.acc.max(acc);
+}
+
+/// Lazily-built integer scratch backing [`QuantSpec`].
+struct QuantBuffers {
+    x: Vec<i8>,
+    patches: Vec<i8>,
+    acc: Vec<i32>,
 }
 
 struct ArenaBuffers {
     slots: Vec<Tensor>,
     fft: Option<FftScratch>,
+    quant: Option<QuantBuffers>,
 }
 
 /// A forward pass compiled for one `(architecture, batch)` pair: layer
@@ -635,6 +787,8 @@ pub struct ExecutionPlan {
     buffers_meta: Vec<BufferInfo>,
     /// `(grid, channel_planes)` FFT scratch sizing, when any conv chose FFT.
     fft_scratch_spec: Option<(usize, usize)>,
+    /// Integer scratch sizing, when any step runs full-integer.
+    quant_scratch_spec: Option<QuantSpec>,
     est_us: f64,
     arena: Mutex<Option<ArenaBuffers>>,
     arena_builds: AtomicU64,
@@ -697,6 +851,7 @@ impl ExecutionPlan {
         // arena slots after liveness assignment below.
         let mut steps: Vec<Step> = Vec::with_capacity(arch.layers.len());
         let mut fft_spec: Option<(usize, usize)> = None;
+        let mut quant_spec: Option<QuantSpec> = None;
 
         for (i, layer) in arch.layers.iter().enumerate() {
             let inp = &shapes[i];
@@ -729,29 +884,94 @@ impl ExecutionPlan {
                 bufs.len() - 1
             };
 
+            // Resident-precision selection, resolved *before* the op is
+            // built: the chosen form decides the kernel family. A packed
+            // full-integer resident compiles to the i8×i8 ops, which draw
+            // integer scratch from the shared quant arena instead of an
+            // f32 patch slot. Only direct/im2col conv and dense have
+            // quantized variants; FFT convs keep f32 spectra (any
+            // resident is dropped again below) and conv1d stays f32. The
+            // quantized form is batch-independent, so it is shared across
+            // ladder plans via `quant_cache` exactly like FFT spectra.
+            let maybe_quant = matches!(
+                &layer.kind,
+                LayerKind::Conv2d { .. } | LayerKind::Dense { .. }
+            ) && opts.precision.quantizes()
+                // A forced-FFT plan never runs a quantized conv kernel;
+                // skip the build so the cache stays clean.
+                && !(matches!(&layer.kind, LayerKind::Conv2d { .. })
+                    && matches!(opts.strategy, PlanStrategy::Fixed(ConvStrategy::Fft)));
+            let mut resident: Option<Arc<ResidentWeights>> = if maybe_quant {
+                if let Some(r) = quant_cache.get(&w_key) {
+                    Some(r.clone())
+                } else {
+                    let wt = weights.get(&w_key)?;
+                    let target = match opts.precision {
+                        PlanPrecision::F16 => DType::F16,
+                        PlanPrecision::Int8 | PlanPrecision::Int8Weights => DType::I8,
+                        PlanPrecision::Auto => cost.pick_precision(wt, opts.accuracy_budget),
+                        PlanPrecision::F32 => DType::F32,
+                    };
+                    let built = match target {
+                        DType::F32 => None,
+                        DType::F16 => {
+                            Some(Arc::new(ResidentWeights::F16(ResidentF16::quantize(wt))))
+                        }
+                        DType::I8 => {
+                            let q = ResidentI8::quantize(wt);
+                            // `int8` (and an auto pick of i8) runs
+                            // full-integer: pack the GEMM panels now.
+                            // `int8-weights` — or a reduction depth that
+                            // would overflow the i32 accumulator — keeps
+                            // the weights-only dequantizing form.
+                            let rows = q.dims()[0].max(1);
+                            let k_depth = q.numel() / rows;
+                            let packable =
+                                !matches!(opts.precision, PlanPrecision::Int8Weights)
+                                    && k_depth.next_multiple_of(4) <= MAX_GEMM_K;
+                            Some(Arc::new(if packable {
+                                ResidentWeights::I8Packed(PackedI8::pack(&q))
+                            } else {
+                                ResidentWeights::I8(q)
+                            }))
+                        }
+                    };
+                    if let Some(r) = &built {
+                        quant_cache.insert(w_key.clone(), r.clone());
+                    }
+                    built
+                }
+            } else {
+                None
+            };
+            let full_int = matches!(resident.as_deref(), Some(ResidentWeights::I8Packed(_)));
+
             let (op, est_us, weighted, out_buf) = match &layer.kind {
                 LayerKind::Conv2d { out_ch, k, stride, pad } => {
                     let params = Conv2dParams::new(*stride, *pad);
                     let (c, h, w) = (inp[0], inp[1], inp[2]);
                     let force_quant = matches!(
                         opts.precision,
-                        PlanPrecision::F16 | PlanPrecision::Int8
+                        PlanPrecision::F16 | PlanPrecision::Int8 | PlanPrecision::Int8Weights
                     );
-                    let (strategy, est) = match opts.strategy {
-                        PlanStrategy::Fixed(s) => {
-                            (s, cost.conv2d_us(s, batch, c, h, w, *out_ch, *k, params)?)
+                    // Full-integer layers price with the integer-path
+                    // coefficients (packed GEMM + activation quantization).
+                    let conv_est = |s: ConvStrategy| -> crate::Result<f64> {
+                        if full_int && s != ConvStrategy::Fft {
+                            cost.conv2d_i8_us(s, batch, c, h, w, *out_ch, *k, params)
+                        } else {
+                            cost.conv2d_us(s, batch, c, h, w, *out_ch, *k, params)
                         }
+                    };
+                    let (strategy, est) = match opts.strategy {
+                        PlanStrategy::Fixed(s) => (s, conv_est(s)?),
                         // Forced quantization restricts auto strategy to
                         // the quantizable kernels (FFT's resident form is
                         // f32 spectra, which would silently undo the
                         // requested precision).
                         PlanStrategy::Auto if force_quant => {
-                            let d = cost.conv2d_us(
-                                ConvStrategy::Direct, batch, c, h, w, *out_ch, *k, params,
-                            )?;
-                            let i2 = cost.conv2d_us(
-                                ConvStrategy::Im2col, batch, c, h, w, *out_ch, *k, params,
-                            )?;
+                            let d = conv_est(ConvStrategy::Direct)?;
+                            let i2 = conv_est(ConvStrategy::Im2col)?;
                             if d <= i2 {
                                 (ConvStrategy::Direct, d)
                             } else {
@@ -760,13 +980,33 @@ impl ExecutionPlan {
                         }
                         // The capped pick: auto mode declines FFT when the
                         // plan-resident spectra would outgrow the cap.
+                        // (Auto *precision* keeps the f32-cost strategy
+                        // pick; a full-integer layer reprices its choice.)
                         PlanStrategy::Auto => {
-                            cost.pick_conv2d_capped(batch, c, h, w, *out_ch, *k, params)?
+                            let (s, est0) =
+                                cost.pick_conv2d_capped(batch, c, h, w, *out_ch, *k, params)?;
+                            if full_int && s != ConvStrategy::Fft {
+                                (s, conv_est(s)?)
+                            } else {
+                                (s, est0)
+                            }
                         }
                     };
                     let out_buf = out_of_place(&mut bufs, out_numel);
+                    let in_elems = batch * c * h * w;
                     let op = match strategy {
+                        ConvStrategy::Direct if full_int => {
+                            grow_quant(&mut quant_spec, in_elems, 0, 0);
+                            Op::Conv2dDirectI8 { params }
+                        }
                         ConvStrategy::Direct => Op::Conv2dDirect { params },
+                        ConvStrategy::Im2col if full_int => {
+                            let (oh, ow) = params.out_hw(h, w, *k)?;
+                            let cols = oh * ow;
+                            let k_pad = (c * k * k).next_multiple_of(4);
+                            grow_quant(&mut quant_spec, in_elems, cols * k_pad, *out_ch * cols);
+                            Op::Conv2dIm2colI8 { params }
+                        }
                         ConvStrategy::Im2col => {
                             let (oh, ow) = params.out_hw(h, w, *k)?;
                             let patch_shape = Shape::new(&[c * k * k, oh * ow]);
@@ -828,8 +1068,17 @@ impl ExecutionPlan {
                         "layer `{}`: dense expects a flattened input, got {inp:?}",
                         layer.name
                     );
-                    let est = macs as f64 * cost.gemm_us_per_mac;
-                    (Op::Dense, est, true, out_of_place(&mut bufs, out_numel))
+                    if full_int {
+                        let in_f = inp[0];
+                        let k_pad = in_f.next_multiple_of(4);
+                        grow_quant(&mut quant_spec, batch * k_pad, 0, out_numel);
+                        let est = macs as f64 * cost.gemm_i8_us_per_mac
+                            + (batch * in_f) as f64 * cost.quant_us_per_elem;
+                        (Op::DenseI8, est, true, out_of_place(&mut bufs, out_numel))
+                    } else {
+                        let est = macs as f64 * cost.gemm_us_per_mac;
+                        (Op::Dense, est, true, out_of_place(&mut bufs, out_numel))
+                    }
                 }
                 LayerKind::Flatten => (Op::FlattenAlias, 0.0, false, cur),
                 LayerKind::Dropout { .. } => (Op::DropoutNoop, 0.0, false, cur),
@@ -837,39 +1086,12 @@ impl ExecutionPlan {
                     (Op::SoftmaxInPlace, out_numel as f64 * 4.0 * cost.elem_us, false, cur)
                 }
             };
-            // Resident-precision selection. Only the direct/im2col conv and
-            // dense GEMM kernels have quantized variants; FFT convs keep f32
-            // spectra and conv1d stays f32-resident. The quantized form is
-            // batch-independent, so it is shared across ladder plans via
-            // `quant_cache` exactly like FFT spectra.
-            let quantizable =
-                matches!(&op, Op::Conv2dDirect { .. } | Op::Conv2dIm2col { .. } | Op::Dense);
-            let resident = if weighted && quantizable && opts.precision.quantizes() {
-                if let Some(r) = quant_cache.get(&w_key) {
-                    Some(r.clone())
-                } else {
-                    let wt = weights.get(&w_key)?;
-                    let target = match opts.precision {
-                        PlanPrecision::F16 => DType::F16,
-                        PlanPrecision::Int8 => DType::I8,
-                        PlanPrecision::Auto => cost.pick_precision(wt, opts.accuracy_budget),
-                        PlanPrecision::F32 => DType::F32,
-                    };
-                    let built = match target {
-                        DType::F32 => None,
-                        DType::F16 => {
-                            Some(Arc::new(ResidentWeights::F16(ResidentF16::quantize(wt))))
-                        }
-                        DType::I8 => Some(Arc::new(ResidentWeights::I8(ResidentI8::quantize(wt)))),
-                    };
-                    if let Some(r) = &built {
-                        quant_cache.insert(w_key.clone(), r.clone());
-                    }
-                    built
-                }
-            } else {
-                None
-            };
+            // FFT convs keep f32 spectra; drop any resident picked above
+            // (auto strategy may have chosen FFT after an auto-precision
+            // build — the cached copy stays for other ladder batches).
+            if matches!(&op, Op::Conv2dFft { .. }) {
+                resident = None;
+            }
             // Bytes the step's parameters keep resident: weights at their
             // resident dtype, biases always f32. FFT spectra are charged as
             // f32 weights — the spectra themselves vary with the calibrated
@@ -953,6 +1175,7 @@ impl ExecutionPlan {
             slot_numel,
             buffers_meta,
             fft_scratch_spec: fft_spec,
+            quant_scratch_spec: quant_spec,
             est_us,
             arena: Mutex::new(None),
             arena_builds: AtomicU64::new(0),
@@ -998,10 +1221,15 @@ impl ExecutionPlan {
             *guard = Some(ArenaBuffers {
                 slots: self.slot_numel.iter().map(|&n| Tensor::with_capacity(n)).collect(),
                 fft: self.fft_scratch_spec.map(|(g, c)| FftScratch::with_sizes(g, c)),
+                quant: self.quant_scratch_spec.map(|s| QuantBuffers {
+                    x: vec![0; s.x],
+                    patches: vec![0; s.patches],
+                    acc: vec![0; s.acc],
+                }),
             });
             self.arena_builds.fetch_add(1, Ordering::Relaxed);
         }
-        let ArenaBuffers { slots, fft } = guard.as_mut().unwrap();
+        let ArenaBuffers { slots, fft, quant } = guard.as_mut().unwrap();
 
         // Stage the input into its slot (copy, not clone: no allocation).
         slots[self.input_slot].reshape_within(self.input_shape.clone())?;
@@ -1030,6 +1258,10 @@ impl ExecutionPlan {
                             Some(ResidentWeights::I8(q)) => {
                                 conv2d_direct_i8_into(x, q, Some(b), *params, &mut out)
                             }
+                            Some(ResidentWeights::I8Packed(_)) => anyhow::bail!(
+                                "packed weights on a non-integer conv step `{}`",
+                                step.name
+                            ),
                         }
                     });
                     slots[step.out_slot] = out;
@@ -1055,9 +1287,58 @@ impl ExecutionPlan {
                                 Some(ResidentWeights::I8(q)) => conv2d_im2col_i8_into(
                                     x, q, Some(b), *params, &mut patches, &mut out,
                                 ),
+                                Some(ResidentWeights::I8Packed(_)) => anyhow::bail!(
+                                    "packed weights on a non-integer conv step `{}`",
+                                    step.name
+                                ),
                             }
                         });
                     slots[*scratch_slot] = patches;
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::Conv2dDirectI8 { params } => {
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let qb = quant.as_mut().expect("quant scratch allocated with the arena");
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        let x = &slots[step.in_slot];
+                        match step.resident.as_deref() {
+                            Some(ResidentWeights::I8Packed(p)) => {
+                                conv2d_direct_i8i8_into(x, p, Some(b), *params, &mut qb.x, &mut out)
+                            }
+                            _ => anyhow::bail!(
+                                "full-integer conv step `{}` lost its packed weights",
+                                step.name
+                            ),
+                        }
+                    });
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::Conv2dIm2colI8 { params } => {
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let qb = quant.as_mut().expect("quant scratch allocated with the arena");
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        let x = &slots[step.in_slot];
+                        match step.resident.as_deref() {
+                            Some(ResidentWeights::I8Packed(p)) => conv2d_im2col_i8i8_into(
+                                x,
+                                p,
+                                Some(b),
+                                *params,
+                                &mut qb.x,
+                                &mut qb.patches,
+                                &mut qb.acc,
+                                &mut out,
+                            ),
+                            _ => anyhow::bail!(
+                                "full-integer conv step `{}` lost its packed weights",
+                                step.name
+                            ),
+                        }
+                    });
                     slots[step.out_slot] = out;
                     r?;
                 }
@@ -1125,6 +1406,29 @@ impl ExecutionPlan {
                             }
                             Some(ResidentWeights::F16(h)) => dense_f16_into(x, h, Some(b), &mut out),
                             Some(ResidentWeights::I8(q)) => dense_i8_into(x, q, Some(b), &mut out),
+                            Some(ResidentWeights::I8Packed(_)) => anyhow::bail!(
+                                "packed weights on a non-integer dense step `{}`",
+                                step.name
+                            ),
+                        }
+                    });
+                    slots[step.out_slot] = out;
+                    r?;
+                }
+                Op::DenseI8 => {
+                    let b = weights.get(step.b_key.as_deref().unwrap())?;
+                    let qb = quant.as_mut().expect("quant scratch allocated with the arena");
+                    let mut out = take_slot(slots, step.out_slot);
+                    let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
+                        let x = &slots[step.in_slot];
+                        match step.resident.as_deref() {
+                            Some(ResidentWeights::I8Packed(p)) => {
+                                dense_i8i8_into(x, p, Some(b), &mut qb.x, &mut qb.acc, &mut out)
+                            }
+                            _ => anyhow::bail!(
+                                "full-integer dense step `{}` lost its packed weights",
+                                step.name
+                            ),
                         }
                     });
                     slots[step.out_slot] = out;
@@ -1202,8 +1506,24 @@ impl ExecutionPlan {
                 macs: s.macs,
                 est_us: s.est_us,
                 precision: s.weight_dtype(),
+                full_integer: s.op.full_integer(),
             })
             .collect()
+    }
+
+    /// Whether any step runs the full-integer path.
+    pub fn has_full_integer_steps(&self) -> bool {
+        self.steps.iter().any(|s| s.op.full_integer())
+    }
+
+    /// Bytes of integer scratch (quantized activations, transposed
+    /// patches, i32 accumulators) the arena holds for full-integer
+    /// steps. Zero when no step runs full-integer. Reported separately
+    /// from [`ExecutionPlan::peak_arena_bytes`], which stays the f32
+    /// slot arena.
+    pub fn quant_arena_bytes(&self) -> usize {
+        self.quant_scratch_spec
+            .map_or(0, |s| s.x + s.patches + s.acc * std::mem::size_of::<i32>())
     }
 
     /// `(layer name, chosen strategy)` for every conv2d step.
@@ -1267,6 +1587,13 @@ impl ExecutionPlan {
                 grid * 2 + chan
             );
         }
+        if self.quant_scratch_spec.is_some() {
+            let _ = writeln!(
+                s,
+                "  quant arena: {} (i8 activations + patches, i32 accumulators)",
+                crate::metrics::fmt_bytes(self.quant_arena_bytes() as u64)
+            );
+        }
         for (i, step) in self.steps.iter().enumerate() {
             let route = if step.op.in_place() {
                 format!("s{} in-place", step.in_slot)
@@ -1279,11 +1606,16 @@ impl ExecutionPlan {
                 }
             };
             // Tag: conv strategy and/or non-f32 resident precision, e.g.
-            // `[im2col i8]`, `[direct]`, `[f16]` (dense).
+            // `[im2col i8]`, `[direct]`, `[f16]` (dense). Full-integer
+            // steps tag as `i8i8` — quantized on both operands — to
+            // distinguish them from weights-only `i8`.
             let strategy = {
                 let strat = step.op.strategy().map(ConvStrategy::name);
-                let prec =
-                    step.weight_dtype().filter(|d| *d != DType::F32).map(DType::name);
+                let prec = if step.op.full_integer() {
+                    Some("i8i8")
+                } else {
+                    step.weight_dtype().filter(|d| *d != DType::F32).map(DType::name)
+                };
                 match (strat, prec) {
                     (Some(st), Some(p)) => format!(" [{st} {p}]"),
                     (Some(st), None) => format!(" [{st}]"),
@@ -1597,15 +1929,20 @@ mod tests {
         // Pure-f32 resident bytes are exactly param_count * 4.
         assert_eq!(f32_bytes, f32_exec.arch().param_count().unwrap() * 4);
 
-        for precision in [PlanPrecision::F16, PlanPrecision::Int8] {
+        // Softmax outputs live in [0,1]: a small absolute band per
+        // precision (the shared-harness tolerances in tests/plan.rs pin
+        // the real contract). Full-integer int8 also quantizes the
+        // activations, so its band is wider than the weights-only forms.
+        for (precision, band) in [
+            (PlanPrecision::F16, 0.05),
+            (PlanPrecision::Int8Weights, 0.05),
+            (PlanPrecision::Int8, 0.1),
+        ] {
             let opts = PlanOptions { precision, ..base };
             let q = PlannedExecutor::with_random_weights(tiny_arch(), 9, opts).unwrap();
             let yq = q.forward(&x).unwrap();
-            // Softmax outputs live in [0,1]: a small absolute band covers
-            // both precisions (the shared-harness tolerances in
-            // tests/plan.rs pin the real contract).
             for (a, b) in yq.data().iter().zip(y32.data()) {
-                assert!((a - b).abs() < 0.05, "{}: {a} vs {b}", precision.name());
+                assert!((a - b).abs() < band, "{}: {a} vs {b}", precision.name());
             }
             let q_bytes = q.plan_for(2).unwrap().resident_weight_bytes();
             assert!(
@@ -1613,10 +1950,70 @@ mod tests {
                 "{}: {q_bytes} >= {f32_bytes}",
                 precision.name()
             );
-            if precision == PlanPrecision::Int8 {
+            if precision != PlanPrecision::F16 {
+                // Both i8 forms (packed panels pad the reduction depth to
+                // a multiple of 4, so they carry a little slack) still
+                // halve the resident footprint.
                 assert!(q_bytes * 2 <= f32_bytes, "int8 resident {q_bytes} vs f32 {f32_bytes}");
             }
         }
+    }
+
+    #[test]
+    fn full_integer_plans_allocate_quant_arena_and_execute() {
+        // `int8` compiles the packed full-integer ops and sizes a shared
+        // integer scratch arena; `int8-weights` keeps the old
+        // dequantize-on-the-fly kernels (f32 patch scratch, no quant
+        // arena).
+        let base = PlanOptions::fixed(ConvStrategy::Im2col);
+        let x = Tensor::randn(Shape::nchw(2, 1, 6, 6), 13, 1.0);
+        let f32_exec = PlannedExecutor::with_random_weights(tiny_arch(), 9, base).unwrap();
+        let y32 = f32_exec.forward(&x).unwrap();
+
+        let wi = PlannedExecutor::with_random_weights(
+            tiny_arch(),
+            9,
+            PlanOptions { precision: PlanPrecision::Int8Weights, ..base },
+        )
+        .unwrap();
+        let p_wi = wi.plan_for(2).unwrap();
+        assert!(!p_wi.has_full_integer_steps());
+        assert_eq!(p_wi.quant_arena_bytes(), 0);
+        assert!(p_wi.steps().iter().any(|s| s.scratch_slot.is_some()));
+
+        let fi = PlannedExecutor::with_random_weights(
+            tiny_arch(),
+            9,
+            PlanOptions { precision: PlanPrecision::Int8, ..base },
+        )
+        .unwrap();
+        let p_fi = fi.plan_for(2).unwrap();
+        assert!(p_fi.has_full_integer_steps());
+        assert!(p_fi.quant_arena_bytes() > 0);
+        // Full-integer im2col needs no f32 patch slot: its scratch is
+        // the (4x smaller) integer arena.
+        for s in p_fi.steps() {
+            if s.full_integer {
+                assert!(s.scratch_slot.is_none(), "{}", s.name);
+                assert_eq!(s.precision, Some(DType::I8), "{}", s.name);
+            }
+        }
+        let dump = p_fi.dump();
+        assert!(dump.contains(" [im2col i8i8]"), "{dump}");
+        assert!(dump.contains("quant arena"), "{dump}");
+
+        // Both i8 forms track the f32 output; steady state reuses the
+        // arena (integer scratch included — it is built with it).
+        let y_wi = wi.forward(&x).unwrap();
+        let y_fi = fi.forward(&x).unwrap();
+        let _ = fi.forward(&x).unwrap();
+        for (a, b) in y_wi.data().iter().zip(y32.data()) {
+            assert!((a - b).abs() < 0.05, "int8-weights: {a} vs {b}");
+        }
+        for (a, b) in y_fi.data().iter().zip(y32.data()) {
+            assert!((a - b).abs() < 0.1, "int8: {a} vs {b}");
+        }
+        assert_eq!(p_fi.arena_builds(), 1);
     }
 
     #[test]
@@ -1692,10 +2089,15 @@ mod tests {
         a.push("flatten", LayerKind::Flatten);
         a.push("fc", LayerKind::Dense { out: 4 });
         a.push("softmax", LayerKind::Softmax);
+        // Analytic coefficients keep the latency-aware pick
+        // deterministic across hosts.
         let planned = PlannedExecutor::with_random_weights(
             a,
             17,
-            PlanOptions::with_precision(PlanPrecision::Auto),
+            PlanOptions {
+                cost_model: Some(CostModel::analytic()),
+                ..PlanOptions::with_precision(PlanPrecision::Auto)
+            },
         )
         .unwrap();
         let plan = planned.plan_for(1).unwrap();
@@ -1710,7 +2112,7 @@ mod tests {
         let dump = plan.dump();
         assert!(dump.contains("resident weights"), "{dump}");
         assert!(
-            dump.contains(" [f16]") || dump.contains(" [i8]"),
+            dump.contains(" [f16]") || dump.contains(" [i8]") || dump.contains(" [i8i8]"),
             "quantized dense step untagged: {dump}"
         );
         // And it still runs.
@@ -1721,13 +2123,14 @@ mod tests {
 
     #[test]
     fn precision_parse_round_trips() {
-        for s in ["f32", "f16", "int8", "auto"] {
+        for s in ["f32", "f16", "int8", "int8-weights", "auto"] {
             assert_eq!(PlanPrecision::parse(s).unwrap().name(), s);
         }
         assert!(PlanPrecision::parse("bf16").is_err());
         assert_eq!(PlanPrecision::F32.estimate_bytes_per_param(), 4);
         assert_eq!(PlanPrecision::F16.estimate_bytes_per_param(), 2);
         assert_eq!(PlanPrecision::Int8.estimate_bytes_per_param(), 1);
+        assert_eq!(PlanPrecision::Int8Weights.estimate_bytes_per_param(), 1);
         assert_eq!(PlanPrecision::Auto.estimate_bytes_per_param(), 4);
     }
 
@@ -1738,7 +2141,8 @@ mod tests {
         // Zero or negative budget always means f32.
         assert_eq!(cm.pick_precision(&w, 0.0), DType::F32);
         assert_eq!(cm.pick_precision(&w, -1.0), DType::F32);
-        // A generous budget admits i8, the smallest form.
+        // A generous budget admits i8 — smallest *and* fastest, since it
+        // now prices as the packed full-integer GEMM.
         assert_eq!(cm.pick_precision(&w, 0.5), DType::I8);
         // A tensor with one huge outlier blows the i8 step size; a
         // moderate budget lands on f16 instead.

@@ -321,12 +321,14 @@ mod tests {
             i8m.weight_bytes,
             f32m.weight_bytes
         );
-        // Still serves, still a softmax distribution close to f32.
+        // Still serves, still a softmax distribution close to f32. The
+        // int8 policy now runs full-integer (quantized activations too),
+        // so the band is the wider full-integer one.
         let x = Tensor::randn(Shape::nchw(2, 1, 8, 8), 29, 1.0);
         let yq = i8m.infer(&x).unwrap();
         let y = f32m.infer(&x).unwrap();
         for (a, b) in yq.data().iter().zip(y.data()) {
-            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
         }
     }
 

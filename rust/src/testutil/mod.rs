@@ -118,6 +118,25 @@ pub fn assert_within_tolerance(actual: &[f32], expected: &[f32], dtype: crate::t
     assert_allclose(actual, expected, rtol, atol);
 }
 
+/// The parity band for *full-integer* execution (`--precision int8`):
+/// packed-i8 weights **and** per-forward symmetric-i8 activations, with
+/// one fused requantization per layer. On top of the weights-only i8
+/// error ([`parity_tolerance`]`(I8)`), every quantized step adds up to
+/// ~0.4% relative activation rounding (half a step at 127 levels),
+/// compounded across layers — so the band is one notch wider: 2e-1
+/// relative, 1e-1 absolute. Still tight enough that a wrong requantize
+/// scale (even off by one power of two) or a clamp bug fails instantly.
+pub fn full_integer_parity_tolerance() -> (f32, f32) {
+    (2e-1, 1e-1)
+}
+
+/// [`assert_allclose`] under the [`full_integer_parity_tolerance`] band.
+#[track_caller]
+pub fn assert_within_full_integer_tolerance(actual: &[f32], expected: &[f32]) {
+    let (rtol, atol) = full_integer_parity_tolerance();
+    assert_allclose(actual, expected, rtol, atol);
+}
+
 /// Run a property over `cases` generated inputs, reporting the seed of the
 /// failing case so it can be replayed.
 #[track_caller]
@@ -179,7 +198,17 @@ mod tests {
         let (r8, a8) = parity_tolerance(DType::I8);
         assert!(r32 < r16 && r16 < r8);
         assert!(a32 < a16 && a16 < a8);
+        // Full-integer (weights + activations) sits strictly above
+        // weights-only i8 — activation rounding compounds on top.
+        let (rfi, afi) = full_integer_parity_tolerance();
+        assert!(r8 < rfi && a8 < afi);
         assert_within_tolerance(&[1.0], &[1.0005], DType::F16);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn full_integer_band_still_rejects_garbage() {
+        assert_within_full_integer_tolerance(&[0.9], &[0.1]);
     }
 
     #[test]

@@ -556,7 +556,6 @@ fn delivery_timing_reports_every_leg() {
 #[test]
 fn quantized_pull_and_f32_to_int8_swap_fail_zero_requests() {
     use deeplearningkit::nn::PlanPrecision;
-    use deeplearningkit::tensor::DType;
 
     let root = testutil::tempdir("delivery-quant");
     let reg = Registry::open(root.join("registry")).unwrap();
@@ -611,13 +610,14 @@ fn quantized_pull_and_f32_to_int8_swap_fail_zero_requests() {
         info.weight_bytes
     );
 
-    // ...and serves inside the i8 tolerance band of an f32 engine loaded
-    // from the very same pulled directory.
+    // ...and serves inside the full-integer tolerance band of an f32
+    // engine loaded from the very same pulled directory (the int8 policy
+    // quantizes activations too).
     let x_item = Tensor::randn(Shape::new(&[1usize, 8, 8]), 31_337, 1.0);
     let x_batch = Tensor::new(Shape::nchw(1, 1, 8, 8), x_item.data().to_vec()).unwrap();
     let ref1 = reference_output(&v1.dir, "quant-m", &x_batch);
     let got = coord.infer("quant-m", x_item.clone()).unwrap();
-    testutil::assert_within_tolerance(got.output.data(), ref1.data(), DType::I8);
+    testutil::assert_within_full_integer_tolerance(got.output.data(), ref1.data());
 
     // Mid-workload version bump: v2 travels as f32 wire bytes, the swap
     // recompiles it into int8 residency on the serving shard, and no
@@ -679,6 +679,6 @@ fn quantized_pull_and_f32_to_int8_swap_fail_zero_requests() {
     // Post-swap traffic tracks the v2 f32 reference inside the band.
     let ref2 = reference_output(&dest.join("quant-m").join("v2"), "quant-m", &x_batch);
     let after = coord.infer("quant-m", x_item).unwrap();
-    testutil::assert_within_tolerance(after.output.data(), ref2.data(), DType::I8);
+    testutil::assert_within_full_integer_tolerance(after.output.data(), ref2.data());
     pool.shutdown();
 }

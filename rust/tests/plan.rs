@@ -9,10 +9,11 @@
 //!    rebuilds the ladder's plans for the new version and keeps serving
 //!    every ladder batch size, bit-exact with a fresh load.
 //! 4. **Quantized parity matrix**: every `LayerKind` × every ladder
-//!    batch size × {f32, f16, int8} planned execution against the f32
-//!    interpreter oracle, within the shared tolerance contract
-//!    (`testutil::assert_within_tolerance`), plus mixed-precision plans
-//!    chosen by the cost model.
+//!    batch size × {f32, f16, int8-weights, full-integer int8} planned
+//!    execution against the f32 interpreter oracle, within the shared
+//!    tolerance contract (`testutil::parity_tolerance` /
+//!    `testutil::full_integer_parity_tolerance`), plus mixed-precision
+//!    plans chosen by the cost model.
 
 use deeplearningkit::model::{Architecture, LayerKind};
 use deeplearningkit::nn::{
@@ -117,15 +118,20 @@ fn auto_plan_agrees_with_oracle_within_cross_strategy_tolerance() {
 /// The quantized parity matrix: every `LayerKind` × every ladder batch
 /// size × every precision policy, planned execution against the f32
 /// interpreter oracle, inside the tolerance contract defined once in
-/// `testutil::parity_tolerance` (shared with the E14 bench).
+/// `testutil::parity_tolerance` / `testutil::full_integer_parity_tolerance`
+/// (shared with the E14 bench). `int8-weights` keeps i8 weights with f32
+/// activations (the weights-only band); `int8` runs the full-integer
+/// path — packed-i8 GEMM with quantized activations and requantization —
+/// under its own documented, wider band.
 #[test]
 fn quantized_parity_matrix_all_kinds_all_ladder_batches() {
     for arch_fn in [arch_2d, arch_gap, arch_1d] {
         let oracle = CpuExecutor::with_random_weights(arch_fn(), 77).unwrap();
-        for (precision, dtype) in [
-            (PlanPrecision::F32, DType::F32),
-            (PlanPrecision::F16, DType::F16),
-            (PlanPrecision::Int8, DType::I8),
+        for (precision, band) in [
+            (PlanPrecision::F32, testutil::parity_tolerance(DType::F32)),
+            (PlanPrecision::F16, testutil::parity_tolerance(DType::F16)),
+            (PlanPrecision::Int8Weights, testutil::parity_tolerance(DType::I8)),
+            (PlanPrecision::Int8, testutil::full_integer_parity_tolerance()),
         ] {
             let planned = PlannedExecutor::with_random_weights(
                 arch_fn(),
@@ -138,7 +144,16 @@ fn quantized_parity_matrix_all_kinds_all_ladder_batches() {
                 let expect = oracle.forward(&x).unwrap();
                 let got = planned.forward(&x).unwrap();
                 assert_eq!(expect.shape(), got.shape());
-                testutil::assert_within_tolerance(got.data(), expect.data(), dtype);
+                testutil::assert_allclose(got.data(), expect.data(), band.0, band.1);
+            }
+            // The full-integer policy must actually compile the packed
+            // ops — otherwise this row silently degrades to weights-only.
+            if precision == PlanPrecision::Int8 {
+                assert!(
+                    planned.plan_for(1).unwrap().has_full_integer_steps(),
+                    "{}: int8 plan has no full-integer steps",
+                    oracle.arch().name
+                );
             }
         }
     }
@@ -151,10 +166,15 @@ fn quantized_parity_matrix_all_kinds_all_ladder_batches() {
 #[test]
 fn cost_model_auto_precision_mixes_layers_within_tolerance() {
     let oracle = CpuExecutor::with_random_weights(arch_1d(), 19).unwrap();
+    // Analytic coefficients keep the latency-aware precision pick
+    // deterministic across hosts.
     let planned = PlannedExecutor::with_random_weights(
         arch_1d(),
         19,
-        PlanOptions::with_precision(PlanPrecision::Auto),
+        PlanOptions {
+            cost_model: Some(deeplearningkit::nn::CostModel::analytic()),
+            ..PlanOptions::with_precision(PlanPrecision::Auto)
+        },
     )
     .unwrap();
     let precisions = planned.plan_for(1).unwrap().weight_precisions();
@@ -163,16 +183,18 @@ fn cost_model_auto_precision_mixes_layers_within_tolerance() {
     assert_eq!(by_name["conv1"], DType::F32, "conv1d has no quantized kernel");
     assert_ne!(by_name["fc"], DType::F32, "dense head should fit a reduced form");
 
-    let coarsest = if precisions.iter().any(|(_, d)| *d == DType::I8) {
-        DType::I8
+    // An auto pick of i8 runs the full-integer path, so the whole-plan
+    // band is that path's; otherwise the f16 weights-only band applies.
+    let band = if precisions.iter().any(|(_, d)| *d == DType::I8) {
+        testutil::full_integer_parity_tolerance()
     } else {
-        DType::F16
+        testutil::parity_tolerance(DType::F16)
     };
     for &batch in &CpuModel::DEFAULT_BATCHES {
         let x = input_for(oracle.arch(), batch, 80 + batch as u64);
         let expect = oracle.forward(&x).unwrap();
         let got = planned.forward(&x).unwrap();
-        testutil::assert_within_tolerance(got.data(), expect.data(), coarsest);
+        testutil::assert_allclose(got.data(), expect.data(), band.0, band.1);
     }
 }
 
@@ -182,16 +204,18 @@ fn cost_model_auto_precision_mixes_layers_within_tolerance() {
 #[test]
 fn loaded_quantized_model_tracks_interpreter_oracle() {
     let dir = testutil::tiny_model_dir("plan-quant-parity", "quant-parity-m", 16, 21);
-    for (precision, dtype) in
-        [(PlanPrecision::F16, DType::F16), (PlanPrecision::Int8, DType::I8)]
-    {
+    for (precision, band) in [
+        (PlanPrecision::F16, testutil::parity_tolerance(DType::F16)),
+        (PlanPrecision::Int8Weights, testutil::parity_tolerance(DType::I8)),
+        (PlanPrecision::Int8, testutil::full_integer_parity_tolerance()),
+    ] {
         let m = CpuModel::load_with(&dir, PlanOptions { precision, ..Default::default() })
             .unwrap();
         for n in [1usize, 3, 8] {
             let x = Tensor::randn(Shape::nchw(n, 1, 8, 8), 90 + n as u64, 1.0);
             let got = m.infer(&x).unwrap();
             let expect = m.infer_interpreted(&x).unwrap();
-            testutil::assert_within_tolerance(got.data(), expect.data(), dtype);
+            testutil::assert_allclose(got.data(), expect.data(), band.0, band.1);
         }
     }
 }
