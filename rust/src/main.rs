@@ -113,6 +113,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("replicas", "replicas per served model (hot models on k shards; capped at the shard count)", Some("1"))
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
         .flag("window-depth", "per-shard pipeline window: batches overlapping in stage/execute/scatter (1 = serial)", Some("2"))
+        .flag("intra-threads", "intra-op worker lanes per shard (0 = auto: DLK_INTRA_THREADS, else cores/shards; never oversubscribes)", Some("0"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .flag("precision", "weight-residency precision for compiled plans: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
@@ -143,22 +144,27 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let replicas = a.get_usize("replicas", 1)?.max(1);
     let queue_cap = a.get_usize("queue-cap", 1024)?.max(1);
     let window_depth = a.get_usize("window-depth", 2)?.max(1);
+    let intra_threads = a.get_usize("intra-threads", 0)?;
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
     let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
 
-    let pool = runtime::EnginePool::start(runtime::PoolConfig {
+    let config = runtime::PoolConfig {
         shards,
         queue_cap,
         window_depth,
         replicas,
         strategy,
         precision,
+        intra_threads,
         ..Default::default()
-    })?;
+    };
+    let budget = config.budget();
+    let pool = runtime::EnginePool::start(config)?;
     println!(
-        "engine pool: {} shard(s), queue cap {queue_cap}, window depth {window_depth}, \
-         {replicas} replica(s) per model, {} weights",
+        "engine pool: {} shard(s) x {} intra-op lane(s), queue cap {queue_cap}, window depth \
+         {window_depth}, {replicas} replica(s) per model, {} weights",
         pool.shard_count(),
+        budget.intra_threads,
         precision.name()
     );
     let mut coord = coordinator::Coordinator::over_pool(
@@ -339,12 +345,14 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
         .flag("count", "number of inputs", Some("8"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .flag("precision", "weight-residency precision: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"))
+        .flag("intra-threads", "intra-op worker lanes (0 = auto: DLK_INTRA_THREADS, else serial)", Some("0"))
         .switch("cpu", "use the rust CPU reference backend instead of PJRT");
     let a = cmd.parse(argv)?;
     let model_id = a.get_or("model", "lenet-mnist").to_string();
     let count = a.get_usize("count", 8)?.max(1);
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
     let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
+    let intra_threads = a.get_usize("intra-threads", 0)?;
     let batch = generator_for(&model_id)(count, 7);
 
     let manifest = model::Manifest::load(&model_dir(&model_id).join("manifest.json"))?;
@@ -355,13 +363,14 @@ fn cmd_infer(argv: &[String]) -> anyhow::Result<()> {
         let planned = nn::PlannedExecutor::new(
             manifest.arch.clone(),
             std::sync::Arc::new(ws),
-            nn::PlanOptions { strategy, precision, ..Default::default() },
+            nn::PlanOptions { strategy, precision, intra_threads, ..Default::default() },
         )?;
         planned.forward(&batch.inputs)?.argmax_rows()
     } else {
         let engine = runtime::Engine::start_with(runtime::EngineConfig {
             strategy,
             precision,
+            intra_threads,
             ..Default::default()
         })?;
         engine.load(model_dir(&model_id))?;
@@ -392,7 +401,8 @@ fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
     )
     .flag("batch", "comma-separated batch sizes (default: the model's AOT ladder)", None)
     .flag("conv-strategy", "conv strategy: auto, direct, im2col or fft", Some("auto"))
-    .flag("precision", "weight-residency precision: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"));
+    .flag("precision", "weight-residency precision: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"))
+    .flag("intra-threads", "intra-op worker lanes assumed by the plan (0 = auto: DLK_INTRA_THREADS, else serial)", Some("0"));
     let a = cmd.parse(argv)?;
     let target = a.positional().first().ok_or_else(|| {
         anyhow::anyhow!("usage: dlk plan <model-dir-or-id> [--batch 1,8] [--conv-strategy auto]")
@@ -408,9 +418,10 @@ fn cmd_plan(argv: &[String]) -> anyhow::Result<()> {
     };
     let strategy = nn::PlanStrategy::parse(a.get_or("conv-strategy", "auto"))?;
     let precision = nn::PlanPrecision::parse(a.get_or("precision", "f32"))?;
+    let intra_threads = a.get_usize("intra-threads", 0)?;
     let model = runtime::CpuModel::load_with(
         &dir,
-        nn::PlanOptions { strategy, precision, ..Default::default() },
+        nn::PlanOptions { strategy, precision, intra_threads, ..Default::default() },
     )?;
     let batches: Vec<usize> = match a.get("batch") {
         Some(spec) => spec

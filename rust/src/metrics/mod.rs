@@ -105,6 +105,14 @@ pub struct PoolUtilization {
     pub exec_us: Vec<u64>,
     /// Cumulative scatter-phase busy time per shard (microseconds).
     pub scatter_us: Vec<u64>,
+    /// Intra-op worker lanes budgeted per shard (1 = serial forwards).
+    pub intra_threads: Vec<usize>,
+    /// Cumulative kernel-pool lane busy time per shard (microseconds,
+    /// summed across lanes; stays 0 while a shard runs serial). Divide
+    /// by `exec_us × intra_threads` — see
+    /// [`PoolUtilization::intra_busy_fractions`] — for the lane
+    /// saturation the intra-op E16 experiment tracks.
+    pub intra_busy_us: Vec<u64>,
     /// Per-replica outstanding request counts, one row per (model, shard)
     /// replica, sorted by model then shard. Empty when the snapshot was
     /// built from bare `PoolStats`.
@@ -145,9 +153,29 @@ impl PoolUtilization {
         max / mean
     }
 
+    /// Per-shard intra-op busy fraction: kernel-pool lane busy time over
+    /// the execute phase's lane capacity
+    /// (`intra_busy_us / (exec_us × intra_threads)`). 0.0 for serial or
+    /// idle shards; near 1.0 means every budgeted lane stayed saturated.
+    pub fn intra_busy_fractions(&self) -> Vec<f64> {
+        self.intra_threads
+            .iter()
+            .zip(&self.intra_busy_us)
+            .zip(&self.exec_us)
+            .map(|((&threads, &busy), &exec)| {
+                if threads <= 1 || exec == 0 {
+                    0.0
+                } else {
+                    (busy as f64 / (exec as f64 * threads as f64)).min(1.0)
+                }
+            })
+            .collect()
+    }
+
     /// One-line summary for logs and the CLI. Replica rows (when present)
     /// follow on a second line so per-replica routing stays observable.
     pub fn summary(&self) -> String {
+        let intra_busy = self.intra_busy_fractions();
         let per_shard: Vec<String> = self
             .executions
             .iter()
@@ -160,6 +188,14 @@ impl PoolUtilization {
                     (self.window_occupancy.get(s), self.window_depth.get(s))
                 {
                     col.push_str(&format!(" win {occ}/{depth}"));
+                }
+                if let Some(&threads) = self.intra_threads.get(s) {
+                    if threads > 1 {
+                        col.push_str(&format!(
+                            " intra x{threads} {:.0}%busy",
+                            intra_busy.get(s).copied().unwrap_or(0.0) * 100.0
+                        ));
+                    }
                 }
                 col
             })
@@ -330,6 +366,27 @@ mod tests {
         let s = u.summary();
         assert!(s.contains("s0: 4 exec/1 models/64B win 2/4"), "{s}");
         assert!(s.contains("s1: 4 exec/1 models/64B win 0/4"), "{s}");
+    }
+
+    #[test]
+    fn pool_utilization_intra_busy_fractions() {
+        let u = PoolUtilization {
+            executions: vec![4, 4, 4],
+            items: vec![4, 4, 4],
+            resident_models: vec![1, 1, 1],
+            resident_bytes: vec![64, 64, 64],
+            exec_us: vec![1000, 1000, 0],
+            intra_threads: vec![4, 1, 4],
+            intra_busy_us: vec![2000, 0, 500],
+            ..Default::default()
+        };
+        let f = u.intra_busy_fractions();
+        assert!((f[0] - 0.5).abs() < 1e-12, "2000us busy over 4x1000us capacity");
+        assert_eq!(f[1], 0.0, "serial shard reports no intra busy");
+        assert_eq!(f[2], 0.0, "idle shard reports no intra busy");
+        let s = u.summary();
+        assert!(s.contains("s0: 4 exec/1 models/64B intra x4 50%busy"), "{s}");
+        assert!(!s.contains("s1: 4 exec/1 models/64B intra"), "serial shard omits intra column");
     }
 
     #[test]

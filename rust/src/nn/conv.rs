@@ -17,7 +17,8 @@
 use crate::compression::{quantize_i8_into, requant_scale, symmetric_i8_scale, ResidentF16, ResidentI8};
 use crate::tensor::{f16_lut, Shape, Tensor};
 
-use super::gemm_i8::{dot_i8, gemm_i8_i32, im2col_i8_transposed, PackedI8};
+use super::gemm_i8::{dot_i8, gemm_i8_i32_par, im2col_i8_transposed_par, PackedI8};
+use super::parallel::{Par, UnsafeSlice};
 
 /// Convolution hyper-parameters (square kernel, symmetric padding).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,16 +123,37 @@ pub fn conv2d_direct_into(
     params: Conv2dParams,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_direct_par_into(input, weight, bias, params, out, Par::serial())
+}
+
+/// [`conv2d_direct_into`] partitioned over output channels (the
+/// flattened `(batch, out_channel)` axis — each unit owns one contiguous
+/// `oh*ow` output plane). Every element keeps the serial 7-loop
+/// accumulation order, so outputs are bitwise identical at any thread
+/// count.
+pub fn conv2d_direct_par_into(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
     let x = input.data();
     let wt = weight.data();
-    let o = out.data_mut();
+    let plane = oh * ow;
+    let ov = UnsafeSlice::new(out.data_mut());
 
-    for b in 0..n {
-        for och in 0..oc {
+    par.run_chunks(n * oc, |lo, hi| {
+        // SAFETY: chunks own disjoint ranges of (batch, out_ch) planes.
+        let o = unsafe { ov.slice(lo * plane, hi * plane) };
+        for idx in lo..hi {
+            let (b, och) = (idx / oc, idx % oc);
             let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            let oplane = &mut o[(idx - lo) * plane..(idx - lo + 1) * plane];
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut acc = bias_v;
@@ -153,11 +175,11 @@ pub fn conv2d_direct_into(
                             }
                         }
                     }
-                    o[((b * oc + och) * oh + oy) * ow + ox] = acc;
+                    oplane[oy * ow + ox] = acc;
                 }
             }
         }
-    }
+    });
     Ok(())
 }
 
@@ -192,6 +214,21 @@ pub fn im2col_into(
     params: Conv2dParams,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    im2col_par_into(input, batch, k, params, out, Par::serial())
+}
+
+/// [`im2col_into`] partitioned over patch rows (the `c*k*k` axis): each
+/// chunk zero-fills its own rows (under padding) and then writes them,
+/// so the matrix contents are identical to the serial lowering at any
+/// thread count.
+pub fn im2col_par_into(
+    input: &Tensor,
+    batch: usize,
+    k: usize,
+    params: Conv2dParams,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let c = input.shape().dim(1);
     let h = input.shape().dim(2);
     let w = input.shape().dim(3);
@@ -204,37 +241,37 @@ pub fn im2col_into(
         out.shape()
     );
     let x = input.data();
-    let o = out.data_mut();
-    if params.pad > 0 {
-        // Out-of-image cells are only skipped (left zero) under padding.
-        o.fill(0.0);
-    }
+    let ov = UnsafeSlice::new(out.data_mut());
     let base = batch * c * h * w;
 
-    let mut row = 0;
-    for ic in 0..c {
-        for ky in 0..k {
-            for kx in 0..k {
-                let out_row = &mut o[row * cols..(row + 1) * cols];
-                for oy in 0..oh {
-                    let iy = (oy * params.stride + ky) as isize - params.pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue; // stays zero (padding)
-                    }
-                    let x_row = base + ic * h * w + iy as usize * w;
-                    let o_off = oy * ow;
-                    for ox in 0..ow {
-                        let ix = (ox * params.stride + kx) as isize - params.pad as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        out_row[o_off + ox] = x[x_row + ix as usize];
-                    }
+    par.run_chunks(rows, |r_lo, r_hi| {
+        // SAFETY: chunks own disjoint patch-row bands [r_lo, r_hi).
+        let o = unsafe { ov.slice(r_lo * cols, r_hi * cols) };
+        if params.pad > 0 {
+            // Out-of-image cells are only skipped (left zero) under padding.
+            o.fill(0.0);
+        }
+        for row in r_lo..r_hi {
+            // row ↔ (ic, ky, kx) in the serial lowering's iteration order.
+            let (ic, ky, kx) = (row / (k * k), (row / k) % k, row % k);
+            let out_row = &mut o[(row - r_lo) * cols..(row - r_lo + 1) * cols];
+            for oy in 0..oh {
+                let iy = (oy * params.stride + ky) as isize - params.pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue; // stays zero (padding)
                 }
-                row += 1;
+                let x_row = base + ic * h * w + iy as usize * w;
+                let o_off = oy * ow;
+                for ox in 0..ow {
+                    let ix = (ox * params.stride + kx) as isize - params.pad as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    out_row[o_off + ox] = x[x_row + ix as usize];
+                }
             }
         }
-    }
+    });
     Ok(())
 }
 
@@ -265,6 +302,22 @@ pub fn conv2d_im2col_into(
     patches: &mut Tensor,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_im2col_par_into(input, weight, bias, params, patches, out, Par::serial())
+}
+
+/// [`conv2d_im2col_into`] with the lowering partitioned over patch rows
+/// and the GEMM over output channels. Each output channel's broadcast-row
+/// accumulation keeps the serial `r`-ascending order, so outputs are
+/// bitwise identical at any thread count.
+pub fn conv2d_im2col_par_into(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    patches: &mut Tensor,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args(input, weight, bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
@@ -274,27 +327,31 @@ pub fn conv2d_im2col_into(
     // Weight viewed as [oc, rows] without copying.
     let wmat = weight.data();
     for b in 0..n {
-        im2col_into(input, b, k, params, patches)?;
+        im2col_par_into(input, b, k, params, patches, par)?;
         let p = patches.data();
-        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
+        let ov = UnsafeSlice::new(&mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols]);
         // GEMM: out[ocH, cols] = W[oc, rows] x P[rows, cols]  (ikj order)
-        for och in 0..oc {
-            let orow = &mut o[och * cols..(och + 1) * cols];
-            match bias {
-                Some(bv) => orow.fill(bv.data()[och]),
-                None => orow.fill(0.0),
-            }
-            for r in 0..rows {
-                let wv = wmat[och * rows + r];
-                if wv == 0.0 {
-                    continue; // pruned-weight fast path (compression E4/E7)
+        par.run_chunks(oc, |lo, hi| {
+            // SAFETY: chunks own disjoint output-channel bands [lo, hi).
+            let o = unsafe { ov.slice(lo * cols, hi * cols) };
+            for och in lo..hi {
+                let orow = &mut o[(och - lo) * cols..(och - lo + 1) * cols];
+                match bias {
+                    Some(bv) => orow.fill(bv.data()[och]),
+                    None => orow.fill(0.0),
                 }
-                let prow = &p[r * cols..(r + 1) * cols];
-                for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
-                    *ov += wv * pv;
+                for r in 0..rows {
+                    let wv = wmat[och * rows + r];
+                    if wv == 0.0 {
+                        continue; // pruned-weight fast path (compression E4/E7)
+                    }
+                    let prow = &p[r * cols..(r + 1) * cols];
+                    for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
+                        *ov += wv * pv;
+                    }
                 }
             }
-        }
+        });
     }
     Ok(())
 }
@@ -335,17 +392,36 @@ pub fn conv2d_direct_i8_into(
     params: Conv2dParams,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_direct_i8_par_into(input, weight, bias, params, out, Par::serial())
+}
+
+/// [`conv2d_direct_i8_into`] partitioned over the flattened
+/// `(batch, out_channel)` axis (same bitwise-determinism contract as
+/// [`conv2d_direct_par_into`]).
+pub fn conv2d_direct_i8_par_into(
+    input: &Tensor,
+    weight: &ResidentI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
     let x = input.data();
     let codes = weight.codes();
     let scale = weight.scale();
-    let o = out.data_mut();
+    let plane = oh * ow;
+    let ov = UnsafeSlice::new(out.data_mut());
 
-    for b in 0..n {
-        for och in 0..oc {
+    par.run_chunks(n * oc, |lo, hi| {
+        // SAFETY: chunks own disjoint ranges of (batch, out_ch) planes.
+        let o = unsafe { ov.slice(lo * plane, hi * plane) };
+        for idx in lo..hi {
+            let (b, och) = (idx / oc, idx % oc);
             let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            let oplane = &mut o[(idx - lo) * plane..(idx - lo + 1) * plane];
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut acc = 0.0f32;
@@ -366,11 +442,11 @@ pub fn conv2d_direct_i8_into(
                             }
                         }
                     }
-                    o[((b * oc + och) * oh + oy) * ow + ox] = acc * scale + bias_v;
+                    oplane[oy * ow + ox] = acc * scale + bias_v;
                 }
             }
         }
-    }
+    });
     Ok(())
 }
 
@@ -382,17 +458,36 @@ pub fn conv2d_direct_f16_into(
     params: Conv2dParams,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_direct_f16_par_into(input, weight, bias, params, out, Par::serial())
+}
+
+/// [`conv2d_direct_f16_into`] partitioned over the flattened
+/// `(batch, out_channel)` axis (same bitwise-determinism contract as
+/// [`conv2d_direct_par_into`]).
+pub fn conv2d_direct_f16_par_into(
+    input: &Tensor,
+    weight: &ResidentF16,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
     let x = input.data();
     let bits = weight.bits();
     let lut = f16_lut();
-    let o = out.data_mut();
+    let plane = oh * ow;
+    let ov = UnsafeSlice::new(out.data_mut());
 
-    for b in 0..n {
-        for och in 0..oc {
+    par.run_chunks(n * oc, |lo, hi| {
+        // SAFETY: chunks own disjoint ranges of (batch, out_ch) planes.
+        let o = unsafe { ov.slice(lo * plane, hi * plane) };
+        for idx in lo..hi {
+            let (b, och) = (idx / oc, idx % oc);
             let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+            let oplane = &mut o[(idx - lo) * plane..(idx - lo + 1) * plane];
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut acc = bias_v;
@@ -413,11 +508,11 @@ pub fn conv2d_direct_f16_into(
                             }
                         }
                     }
-                    o[((b * oc + och) * oh + oy) * ow + ox] = acc;
+                    oplane[oy * ow + ox] = acc;
                 }
             }
         }
-    }
+    });
     Ok(())
 }
 
@@ -432,6 +527,21 @@ pub fn conv2d_im2col_i8_into(
     patches: &mut Tensor,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_im2col_i8_par_into(input, weight, bias, params, patches, out, Par::serial())
+}
+
+/// [`conv2d_im2col_i8_into`] with the lowering partitioned over patch
+/// rows and the GEMM + epilogue over output channels (same
+/// bitwise-determinism contract as [`conv2d_im2col_par_into`]).
+pub fn conv2d_im2col_i8_par_into(
+    input: &Tensor,
+    weight: &ResidentI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    patches: &mut Tensor,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
@@ -441,28 +551,32 @@ pub fn conv2d_im2col_i8_into(
     let codes = weight.codes();
     let scale = weight.scale();
     for b in 0..n {
-        im2col_into(input, b, k, params, patches)?;
+        im2col_par_into(input, b, k, params, patches, par)?;
         let p = patches.data();
-        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
-        for och in 0..oc {
-            let orow = &mut o[och * cols..(och + 1) * cols];
-            orow.fill(0.0);
-            for r in 0..rows {
-                let cv = codes[och * rows + r];
-                if cv == 0 {
-                    continue; // pruned-weight fast path survives quantization
+        let ov = UnsafeSlice::new(&mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols]);
+        par.run_chunks(oc, |lo, hi| {
+            // SAFETY: chunks own disjoint output-channel bands [lo, hi).
+            let o = unsafe { ov.slice(lo * cols, hi * cols) };
+            for och in lo..hi {
+                let orow = &mut o[(och - lo) * cols..(och - lo + 1) * cols];
+                orow.fill(0.0);
+                for r in 0..rows {
+                    let cv = codes[och * rows + r];
+                    if cv == 0 {
+                        continue; // pruned-weight fast path survives quantization
+                    }
+                    let wv = cv as f32;
+                    let prow = &p[r * cols..(r + 1) * cols];
+                    for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
+                        *ov += wv * pv;
+                    }
                 }
-                let wv = cv as f32;
-                let prow = &p[r * cols..(r + 1) * cols];
-                for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
-                    *ov += wv * pv;
+                let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+                for ov in orow.iter_mut() {
+                    *ov = *ov * scale + bias_v;
                 }
             }
-            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
-            for ov in orow.iter_mut() {
-                *ov = *ov * scale + bias_v;
-            }
-        }
+        });
     }
     Ok(())
 }
@@ -481,6 +595,23 @@ pub fn conv2d_direct_i8i8_into(
     xq: &mut [i8],
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_direct_i8i8_par_into(input, weight, bias, params, xq, out, Par::serial())
+}
+
+/// [`conv2d_direct_i8i8_into`] with the activation quantization kept
+/// serial (one linear pass) and the integer 7-loop partitioned over the
+/// flattened `(batch, out_channel)` axis. Integer accumulation is
+/// associative, and each element is still one task's exact i32 sum, so
+/// outputs are bitwise identical at any thread count.
+pub fn conv2d_direct_i8i8_par_into(
+    input: &Tensor,
+    weight: &PackedI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    xq: &mut [i8],
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
@@ -493,12 +624,18 @@ pub fn conv2d_direct_i8i8_into(
     let rs = requant_scale(xs, weight.scale());
     let wd = weight.data();
     let kp = weight.k_pad();
-    let o = out.data_mut();
+    let plane = oh * ow;
+    let ov = UnsafeSlice::new(out.data_mut());
+    let xq = &*xq; // shared read-only from here on
 
-    for b in 0..n {
-        for och in 0..oc {
+    par.run_chunks(n * oc, |lo, hi| {
+        // SAFETY: chunks own disjoint ranges of (batch, out_ch) planes.
+        let o = unsafe { ov.slice(lo * plane, hi * plane) };
+        for idx in lo..hi {
+            let (b, och) = (idx / oc, idx % oc);
             let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
             let wrow = &wd[och * kp..(och + 1) * kp];
+            let oplane = &mut o[(idx - lo) * plane..(idx - lo + 1) * plane];
             for oy in 0..oh {
                 for ox in 0..ow {
                     // Clip the kernel window against the image once; the
@@ -523,11 +660,11 @@ pub fn conv2d_direct_i8i8_into(
                             }
                         }
                     }
-                    o[((b * oc + och) * oh + oy) * ow + ox] = acc as f32 * rs + bias_v;
+                    oplane[oy * ow + ox] = acc as f32 * rs + bias_v;
                 }
             }
         }
-    }
+    });
     Ok(())
 }
 
@@ -537,6 +674,7 @@ pub fn conv2d_direct_i8i8_into(
 /// requantize the exact i32 accumulators back to f32 in a fused epilogue
 /// (`acc * requant_scale + bias`). All three scratch buffers come from
 /// the plan's integer arena — steady-state forwards allocate nothing.
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_im2col_i8i8_into(
     input: &Tensor,
     weight: &PackedI8,
@@ -546,6 +684,26 @@ pub fn conv2d_im2col_i8i8_into(
     patches_q: &mut [i8],
     acc: &mut [i32],
     out: &mut Tensor,
+) -> crate::Result<()> {
+    conv2d_im2col_i8i8_par_into(input, weight, bias, params, xq, patches_q, acc, out, Par::serial())
+}
+
+/// [`conv2d_im2col_i8i8_into`] with the transposed lowering partitioned
+/// over patch rows, the integer GEMM over `m`-panels (output channels;
+/// the packed B-panel shared read-only), and the requant epilogue over
+/// output channels. Integer accumulation plus per-element requant keeps
+/// outputs bitwise identical to serial at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_im2col_i8i8_par_into(
+    input: &Tensor,
+    weight: &PackedI8,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    xq: &mut [i8],
+    patches_q: &mut [i8],
+    acc: &mut [i32],
+    out: &mut Tensor,
+    par: Par,
 ) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
@@ -565,17 +723,22 @@ pub fn conv2d_im2col_i8i8_into(
 
     for b in 0..n {
         let img = &xq[b * c * h * w..(b + 1) * c * h * w];
-        im2col_i8_transposed(img, c, h, w, k, params, kp, patches_q);
-        gemm_i8_i32(oc, cols, kp, weight.data(), patches_q, acc);
-        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
-        for och in 0..oc {
-            let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
-            let arow = &acc[och * cols..(och + 1) * cols];
-            let orow = &mut o[och * cols..(och + 1) * cols];
-            for (ov, &av) in orow.iter_mut().zip(arow) {
-                *ov = av as f32 * rs + bias_v;
+        im2col_i8_transposed_par(img, c, h, w, k, params, kp, patches_q, par);
+        gemm_i8_i32_par(oc, cols, kp, weight.data(), patches_q, acc, par);
+        let acc = &*acc;
+        let ov = UnsafeSlice::new(&mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols]);
+        par.run_chunks(oc, |lo, hi| {
+            // SAFETY: chunks own disjoint output-channel bands [lo, hi).
+            let o = unsafe { ov.slice(lo * cols, hi * cols) };
+            for och in lo..hi {
+                let bias_v = bias.map_or(0.0, |bv| bv.data()[och]);
+                let arow = &acc[och * cols..(och + 1) * cols];
+                let orow = &mut o[(och - lo) * cols..(och - lo + 1) * cols];
+                for (ov, &av) in orow.iter_mut().zip(arow) {
+                    *ov = av as f32 * rs + bias_v;
+                }
             }
-        }
+        });
     }
     Ok(())
 }
@@ -590,6 +753,21 @@ pub fn conv2d_im2col_f16_into(
     patches: &mut Tensor,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    conv2d_im2col_f16_par_into(input, weight, bias, params, patches, out, Par::serial())
+}
+
+/// [`conv2d_im2col_f16_into`] with the lowering partitioned over patch
+/// rows and the GEMM over output channels (same bitwise-determinism
+/// contract as [`conv2d_im2col_par_into`]).
+pub fn conv2d_im2col_f16_par_into(
+    input: &Tensor,
+    weight: &ResidentF16,
+    bias: Option<&Tensor>,
+    params: Conv2dParams,
+    patches: &mut Tensor,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (n, c, h, w, oc, k) = check_args_q(input, weight.dims(), bias)?;
     let (oh, ow) = params.out_hw(h, w, k)?;
     check_out(out, n, oc, oh, ow)?;
@@ -599,26 +777,30 @@ pub fn conv2d_im2col_f16_into(
     let bits = weight.bits();
     let lut = f16_lut();
     for b in 0..n {
-        im2col_into(input, b, k, params, patches)?;
+        im2col_par_into(input, b, k, params, patches, par)?;
         let p = patches.data();
-        let o = &mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols];
-        for och in 0..oc {
-            let orow = &mut o[och * cols..(och + 1) * cols];
-            match bias {
-                Some(bv) => orow.fill(bv.data()[och]),
-                None => orow.fill(0.0),
-            }
-            for r in 0..rows {
-                let wv = lut[bits[och * rows + r] as usize];
-                if wv == 0.0 {
-                    continue;
+        let ov = UnsafeSlice::new(&mut out.data_mut()[b * oc * cols..(b + 1) * oc * cols]);
+        par.run_chunks(oc, |lo, hi| {
+            // SAFETY: chunks own disjoint output-channel bands [lo, hi).
+            let o = unsafe { ov.slice(lo * cols, hi * cols) };
+            for och in lo..hi {
+                let orow = &mut o[(och - lo) * cols..(och - lo + 1) * cols];
+                match bias {
+                    Some(bv) => orow.fill(bv.data()[och]),
+                    None => orow.fill(0.0),
                 }
-                let prow = &p[r * cols..(r + 1) * cols];
-                for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
-                    *ov += wv * pv;
+                for r in 0..rows {
+                    let wv = lut[bits[och * rows + r] as usize];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let prow = &p[r * cols..(r + 1) * cols];
+                    for (ov, pv) in orow.iter_mut().zip(prow.iter()) {
+                        *ov += wv * pv;
+                    }
                 }
             }
-        }
+        });
     }
     Ok(())
 }

@@ -6,7 +6,8 @@
 use crate::compression::{quantize_i8_into, requant_scale, symmetric_i8_scale, ResidentF16, ResidentI8};
 use crate::tensor::{f16_lut, Shape, Tensor};
 
-use super::gemm_i8::{gemm_i8_i32, PackedI8};
+use super::gemm_i8::{gemm_i8_i32_par, PackedI8};
+use super::parallel::{Par, UnsafeSlice};
 
 /// Naive row-major matmul: `a[m,k] @ b[k,n] -> [m,n]` in ikj order (cache
 /// friendly for row-major b).
@@ -37,6 +38,20 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> crate::Result<Tensor> {
 /// Blocked/tiled matmul — the hot-path variant used by the CPU executor.
 /// Tiles chosen so a block of `b` fits L1 (64x64 f32 = 16 KiB).
 pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> crate::Result<Tensor> {
+    matmul_blocked_par(a, b, Par::serial())
+}
+
+/// [`matmul_blocked`] partitioned over output-row blocks: each chunk
+/// owns a contiguous `[i_lo, i_hi)` band of rows and runs the full
+/// `k0 → n0 → kk` tile walk over it, so every output element
+/// accumulates in exactly the serial order — results are bitwise
+/// identical at any thread count.
+///
+/// Unlike the naive [`matmul`] oracle, the inner loop has no
+/// `a[i,k] == 0` skip: the branch defeats autovectorization on dense
+/// (non-pruned) inputs, which is what this variant is for (E16 pins
+/// blocked ≥ naive on dense data).
+pub fn matmul_blocked_par(a: &Tensor, b: &Tensor, par: Par) -> crate::Result<Tensor> {
     const BK: usize = 64;
     const BN: usize = 64;
     anyhow::ensure!(a.shape().rank() == 2 && b.shape().rank() == 2, "matmul expects rank-2");
@@ -45,27 +60,28 @@ pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> crate::Result<Tensor> {
     anyhow::ensure!(k == k2, "matmul inner dims {k} vs {k2}");
     let mut out = Tensor::zeros(Shape::new(&[m, n]));
     let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    for k0 in (0..k).step_by(BK) {
-        let kmax = (k0 + BK).min(k);
-        for n0 in (0..n).step_by(BN) {
-            let nmax = (n0 + BN).min(n);
-            for i in 0..m {
-                let arow = &ad[i * k..(i + 1) * k];
-                let orow = &mut od[i * n + n0..i * n + nmax];
-                for kk in k0..kmax {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &bd[kk * n + n0..kk * n + nmax];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
+    let ov = UnsafeSlice::new(out.data_mut());
+    par.run_chunks(m, |i_lo, i_hi| {
+        // SAFETY: each chunk owns the disjoint row band [i_lo, i_hi).
+        let od = unsafe { ov.slice(i_lo * n, i_hi * n) };
+        for k0 in (0..k).step_by(BK) {
+            let kmax = (k0 + BK).min(k);
+            for n0 in (0..n).step_by(BN) {
+                let nmax = (n0 + BN).min(n);
+                for i in i_lo..i_hi {
+                    let arow = &ad[i * k..(i + 1) * k];
+                    let orow = &mut od[(i - i_lo) * n + n0..(i - i_lo) * n + nmax];
+                    for kk in k0..kmax {
+                        let av = arow[kk];
+                        let brow = &bd[kk * n + n0..kk * n + nmax];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
                     }
                 }
             }
         }
-    }
+    });
     Ok(out)
 }
 
@@ -86,6 +102,20 @@ pub fn dense_into(
     bias: Option<&Tensor>,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    dense_par_into(x, weight, bias, out, Par::serial())
+}
+
+/// [`dense_into`] partitioned over out-feature blocks: each chunk owns
+/// the `[lo, hi)` output columns of every batch row and computes each
+/// one as the same full serial dot, so outputs are bitwise identical at
+/// any thread count.
+pub fn dense_par_into(
+    x: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     anyhow::ensure!(x.shape().rank() == 2, "dense input must be [batch, in], got {}", x.shape());
     anyhow::ensure!(weight.shape().rank() == 2, "dense weight must be [out, in]");
     let (batch, in_f) = (x.shape().dim(0), x.shape().dim(1));
@@ -100,19 +130,22 @@ pub fn dense_into(
         out.shape()
     );
     let (xd, wd) = (x.data(), weight.data());
-    let od = out.data_mut();
-    for bi in 0..batch {
-        let xrow = &xd[bi * in_f..(bi + 1) * in_f];
-        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
-        for of in 0..out_f {
-            let wrow = &wd[of * in_f..(of + 1) * in_f];
-            let mut acc = bias.map_or(0.0, |bv| bv.data()[of]);
-            for (xv, wv) in xrow.iter().zip(wrow) {
-                acc += xv * wv;
+    let ov = UnsafeSlice::new(out.data_mut());
+    par.run_chunks(out_f, |lo, hi| {
+        for bi in 0..batch {
+            let xrow = &xd[bi * in_f..(bi + 1) * in_f];
+            // SAFETY: chunks own disjoint [lo, hi) column ranges.
+            let orow = unsafe { ov.slice(bi * out_f + lo, bi * out_f + hi) };
+            for (oi, of) in (lo..hi).enumerate() {
+                let wrow = &wd[of * in_f..(of + 1) * in_f];
+                let mut acc = bias.map_or(0.0, |bv| bv.data()[of]);
+                for (xv, wv) in xrow.iter().zip(wrow) {
+                    acc += xv * wv;
+                }
+                orow[oi] = acc;
             }
-            orow[of] = acc;
         }
-    }
+    });
     Ok(())
 }
 
@@ -147,23 +180,38 @@ pub fn dense_i8_into(
     bias: Option<&Tensor>,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    dense_i8_par_into(x, weight, bias, out, Par::serial())
+}
+
+/// [`dense_i8_into`] partitioned over out-feature blocks (same contract
+/// as [`dense_par_into`]: bitwise identical to serial).
+pub fn dense_i8_par_into(
+    x: &Tensor,
+    weight: &ResidentI8,
+    bias: Option<&Tensor>,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (batch, in_f, out_f) = check_dense_q(x, weight.dims(), bias, out)?;
     let xd = x.data();
     let codes = weight.codes();
     let scale = weight.scale();
-    let od = out.data_mut();
-    for bi in 0..batch {
-        let xrow = &xd[bi * in_f..(bi + 1) * in_f];
-        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
-        for of in 0..out_f {
-            let wrow = &codes[of * in_f..(of + 1) * in_f];
-            let mut acc = 0.0f32;
-            for (xv, &c) in xrow.iter().zip(wrow) {
-                acc += xv * c as f32;
+    let ov = UnsafeSlice::new(out.data_mut());
+    par.run_chunks(out_f, |lo, hi| {
+        for bi in 0..batch {
+            let xrow = &xd[bi * in_f..(bi + 1) * in_f];
+            // SAFETY: chunks own disjoint [lo, hi) column ranges.
+            let orow = unsafe { ov.slice(bi * out_f + lo, bi * out_f + hi) };
+            for (oi, of) in (lo..hi).enumerate() {
+                let wrow = &codes[of * in_f..(of + 1) * in_f];
+                let mut acc = 0.0f32;
+                for (xv, &c) in xrow.iter().zip(wrow) {
+                    acc += xv * c as f32;
+                }
+                orow[oi] = acc * scale + bias.map_or(0.0, |bv| bv.data()[of]);
             }
-            orow[of] = acc * scale + bias.map_or(0.0, |bv| bv.data()[of]);
         }
-    }
+    });
     Ok(())
 }
 
@@ -182,6 +230,23 @@ pub fn dense_i8i8_into(
     acc: &mut [i32],
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    dense_i8i8_par_into(x, weight, bias, xq, acc, out, Par::serial())
+}
+
+/// [`dense_i8i8_into`] with the integer GEMM partitioned over `m`-panels
+/// (batch-row blocks; the [`PackedI8`] B-panel is shared read-only).
+/// Quantization and the requant epilogue stay serial — they are linear
+/// passes dwarfed by the GEMM — so outputs are bitwise identical to the
+/// serial kernel at any thread count.
+pub fn dense_i8i8_par_into(
+    x: &Tensor,
+    weight: &PackedI8,
+    bias: Option<&Tensor>,
+    xq: &mut [i8],
+    acc: &mut [i32],
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (batch, in_f, out_f) = check_dense_q(x, weight.dims(), bias, out)?;
     let kp = weight.k_pad();
     anyhow::ensure!(xq.len() >= batch * kp, "i8 activation scratch too small");
@@ -194,7 +259,7 @@ pub fn dense_i8i8_into(
         quantize_i8_into(&xd[bi * in_f..(bi + 1) * in_f], xs, &mut xq[bi * kp..bi * kp + in_f]);
     }
     let acc = &mut acc[..batch * out_f];
-    gemm_i8_i32(batch, out_f, kp, xq, weight.data(), acc);
+    gemm_i8_i32_par(batch, out_f, kp, xq, weight.data(), acc, par);
     let rs = requant_scale(xs, weight.scale());
     let od = out.data_mut();
     for bi in 0..batch {
@@ -215,23 +280,38 @@ pub fn dense_f16_into(
     bias: Option<&Tensor>,
     out: &mut Tensor,
 ) -> crate::Result<()> {
+    dense_f16_par_into(x, weight, bias, out, Par::serial())
+}
+
+/// [`dense_f16_into`] partitioned over out-feature blocks (same contract
+/// as [`dense_par_into`]: bitwise identical to serial).
+pub fn dense_f16_par_into(
+    x: &Tensor,
+    weight: &ResidentF16,
+    bias: Option<&Tensor>,
+    out: &mut Tensor,
+    par: Par,
+) -> crate::Result<()> {
     let (batch, in_f, out_f) = check_dense_q(x, weight.dims(), bias, out)?;
     let xd = x.data();
     let bits = weight.bits();
     let lut = f16_lut();
-    let od = out.data_mut();
-    for bi in 0..batch {
-        let xrow = &xd[bi * in_f..(bi + 1) * in_f];
-        let orow = &mut od[bi * out_f..(bi + 1) * out_f];
-        for of in 0..out_f {
-            let wrow = &bits[of * in_f..(of + 1) * in_f];
-            let mut acc = bias.map_or(0.0, |bv| bv.data()[of]);
-            for (xv, &b) in xrow.iter().zip(wrow) {
-                acc += xv * lut[b as usize];
+    let ov = UnsafeSlice::new(out.data_mut());
+    par.run_chunks(out_f, |lo, hi| {
+        for bi in 0..batch {
+            let xrow = &xd[bi * in_f..(bi + 1) * in_f];
+            // SAFETY: chunks own disjoint [lo, hi) column ranges.
+            let orow = unsafe { ov.slice(bi * out_f + lo, bi * out_f + hi) };
+            for (oi, of) in (lo..hi).enumerate() {
+                let wrow = &bits[of * in_f..(of + 1) * in_f];
+                let mut acc = bias.map_or(0.0, |bv| bv.data()[of]);
+                for (xv, &b) in xrow.iter().zip(wrow) {
+                    acc += xv * lut[b as usize];
+                }
+                orow[oi] = acc;
             }
-            orow[of] = acc;
         }
-    }
+    });
     Ok(())
 }
 

@@ -23,6 +23,7 @@
 
 use crate::compression::ResidentI8;
 
+use super::parallel::{Par, UnsafeSlice};
 use super::Conv2dParams;
 
 /// Largest reduction depth the i8×i8→i32 kernels accept: with worst-case
@@ -132,19 +133,41 @@ pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 /// stream across it. Accumulation is exact i8×i8→i32 — no rounding
 /// until the caller's requantization epilogue.
 pub fn gemm_i8_i32(m: usize, n: usize, k_pad: usize, a: &[i8], bt: &[i8], out: &mut [i32]) {
+    gemm_i8_i32_par(m, n, k_pad, a, bt, out, Par::serial());
+}
+
+/// [`gemm_i8_i32`] partitioned over `m`-panels: each chunk owns a
+/// contiguous block of A rows (and the matching output rows) and runs
+/// the full [`JB`]-blocked walk over the shared read-only B panel.
+/// Every output element is one whole [`dot_i8`], so the result is
+/// bitwise identical to serial at any thread count.
+pub fn gemm_i8_i32_par(
+    m: usize,
+    n: usize,
+    k_pad: usize,
+    a: &[i8],
+    bt: &[i8],
+    out: &mut [i32],
+    par: Par,
+) {
     assert!(a.len() >= m * k_pad, "A panel too small");
     assert!(bt.len() >= n * k_pad, "B panel too small");
     assert!(out.len() >= m * n, "output too small");
-    for j0 in (0..n).step_by(JB) {
-        let jmax = (j0 + JB).min(n);
-        for i in 0..m {
-            let arow = &a[i * k_pad..(i + 1) * k_pad];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in j0..jmax {
-                orow[j] = dot_i8(arow, &bt[j * k_pad..(j + 1) * k_pad]);
+    let ov = UnsafeSlice::new(&mut out[..m * n]);
+    par.run_chunks(m, |i_lo, i_hi| {
+        // SAFETY: each chunk owns the disjoint row band [i_lo, i_hi).
+        let orows = unsafe { ov.slice(i_lo * n, i_hi * n) };
+        for j0 in (0..n).step_by(JB) {
+            let jmax = (j0 + JB).min(n);
+            for i in i_lo..i_hi {
+                let arow = &a[i * k_pad..(i + 1) * k_pad];
+                let orow = &mut orows[(i - i_lo) * n..(i - i_lo + 1) * n];
+                for j in j0..jmax {
+                    orow[j] = dot_i8(arow, &bt[j * k_pad..(j + 1) * k_pad]);
+                }
             }
         }
-    }
+    });
 }
 
 /// i8 im2col in *transposed* (dot) layout: lowers one quantized image
@@ -167,17 +190,39 @@ pub fn im2col_i8_transposed(
     k_pad: usize,
     out: &mut [i8],
 ) {
+    im2col_i8_transposed_par(xq, c, h, w, k, params, k_pad, out, Par::serial());
+}
+
+/// [`im2col_i8_transposed`] partitioned over output-pixel (patch-row)
+/// blocks: each chunk zero-fills its own rows and then writes them, so
+/// the buffer contents are identical to the serial lowering at any
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_i8_transposed_par(
+    xq: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    params: Conv2dParams,
+    k_pad: usize,
+    out: &mut [i8],
+    par: Par,
+) {
     debug_assert!(xq.len() >= c * h * w);
     let oh = (h + 2 * params.pad - k) / params.stride + 1;
     let ow = (w + 2 * params.pad - k) / params.stride + 1;
     let cols = oh * ow;
     assert!(k_pad >= c * k * k, "k_pad {k_pad} < patch size {}", c * k * k);
     assert!(out.len() >= cols * k_pad, "patch buffer too small");
-    let out = &mut out[..cols * k_pad];
-    out.fill(0);
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let orow = &mut out[(oy * ow + ox) * k_pad..(oy * ow + ox + 1) * k_pad];
+    let ov = UnsafeSlice::new(&mut out[..cols * k_pad]);
+    par.run_chunks(cols, |p_lo, p_hi| {
+        // SAFETY: each chunk owns the disjoint patch rows [p_lo, p_hi).
+        let orows = unsafe { ov.slice(p_lo * k_pad, p_hi * k_pad) };
+        orows.fill(0);
+        for p in p_lo..p_hi {
+            let (oy, ox) = (p / ow, p % ow);
+            let orow = &mut orows[(p - p_lo) * k_pad..(p - p_lo + 1) * k_pad];
             let x0 = ox * params.stride;
             // Clip the kernel window against the image once per pixel;
             // the surviving kx run is a contiguous copy.
@@ -200,7 +245,7 @@ pub fn im2col_i8_transposed(
                 }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]

@@ -22,26 +22,37 @@ mod fft;
 mod fft_conv;
 mod gemm_i8;
 mod graph;
+pub mod parallel;
 pub mod plan;
 mod pool;
 mod softmax;
 
 pub use activation::{relu, relu_in_place, sigmoid, tanh_act};
 pub use conv::{
-    conv2d, conv2d_direct, conv2d_direct_f16_into, conv2d_direct_i8_into, conv2d_direct_i8i8_into,
-    conv2d_direct_into, conv2d_im2col, conv2d_im2col_f16_into, conv2d_im2col_i8_into,
-    conv2d_im2col_i8i8_into, conv2d_im2col_into, im2col, im2col_into, Conv2dParams,
+    conv2d, conv2d_direct, conv2d_direct_f16_into, conv2d_direct_f16_par_into,
+    conv2d_direct_i8_into, conv2d_direct_i8_par_into, conv2d_direct_i8i8_into,
+    conv2d_direct_i8i8_par_into, conv2d_direct_into, conv2d_direct_par_into, conv2d_im2col,
+    conv2d_im2col_f16_into, conv2d_im2col_f16_par_into, conv2d_im2col_i8_into,
+    conv2d_im2col_i8_par_into, conv2d_im2col_i8i8_into, conv2d_im2col_i8i8_par_into,
+    conv2d_im2col_into, conv2d_im2col_par_into, im2col, im2col_into, im2col_par_into,
+    Conv2dParams,
 };
 pub use conv1d::{conv1d, conv1d_into, max_pool1d, max_pool1d_into, Conv1dParams};
 pub use dense::{
-    dense, dense_f16_into, dense_i8_into, dense_i8i8_into, dense_into, matmul, matmul_blocked,
+    dense, dense_f16_into, dense_f16_par_into, dense_i8_into, dense_i8_par_into, dense_i8i8_into,
+    dense_i8i8_par_into, dense_into, dense_par_into, matmul, matmul_blocked, matmul_blocked_par,
 };
-pub use gemm_i8::{dot_i8, gemm_i8_i32, im2col_i8_transposed, PackedI8, MAX_GEMM_K};
+pub use gemm_i8::{
+    dot_i8, gemm_i8_i32, gemm_i8_i32_par, im2col_i8_transposed, im2col_i8_transposed_par,
+    PackedI8, MAX_GEMM_K,
+};
+pub use parallel::{default_intra_threads, resolve_intra_threads, KernelPool, Par};
 pub use fft::{fft, fft2d, ifft, ifft2d, Complex};
 pub use fft_conv::{conv2d_fft, fft_conv_flops, FftConvPlan, FftScratch};
 pub use graph::{CpuExecutor, LayerTiming};
 pub use plan::{
-    CostModel, ExecutionPlan, PlanOptions, PlanPrecision, PlanStrategy, PlannedExecutor,
+    CostModel, ExecutionPlan, Parallelism, PlanOptions, PlanPrecision, PlanStrategy,
+    PlannedExecutor,
 };
 pub use pool::{
     avg_pool2d, avg_pool2d_into, global_avg_pool, global_avg_pool_into, max_pool2d,

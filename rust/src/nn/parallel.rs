@@ -1,0 +1,470 @@
+//! Intra-op fork-join parallelism: a small persistent worker pool that
+//! lets one forward pass use every core the shard was budgeted.
+//!
+//! The paper's whole execution model is data-parallel — DeepLearningKit
+//! runs each conv/GEMM as thousands of Metal threads — while our CPU
+//! kernels were purely sequential loops on the shard's execute thread.
+//! [`KernelPool`] is the CPU analogue of a Metal threadgroup: a fixed
+//! set of persistent threads (std `mpsc`-free, `Mutex`/`Condvar` like
+//! the engine's in-flight `Window`) that fork-join over **fixed,
+//! size-deterministic partitions** of a kernel's output.
+//!
+//! Determinism contract (pinned by `rust/tests/parallel.rs`): a task
+//! never splits a reduction (k) axis — every output element is computed
+//! entirely inside one task, in the same inner-loop order as the serial
+//! kernel — so results are **bitwise identical** to single-threaded
+//! execution regardless of thread count or which worker claims which
+//! chunk. Workers only ever write disjoint `&mut` output ranges
+//! (arithmetically disjoint chunks of one buffer), preserving the PJRT
+//! `!Send` invariant: the backend and its residents stay on the execute
+//! thread; workers run pure closures over slices.
+//!
+//! Panic isolation: a panicking task is caught in the worker, its
+//! payload is re-thrown from [`KernelPool::run`] on the dispatching
+//! thread after the join barrier, and the pool survives — the engine's
+//! existing `catch_unwind` turns it into a typed `ExecutionPanic` that
+//! fails only that ticket.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Default intra-op thread count when nothing was configured: the
+/// `DLK_INTRA_THREADS` environment variable (CI runs the tier-1 suite
+/// under `=1` and `=4`), else 1 (serial — the pre-pool behavior).
+pub fn default_intra_threads() -> usize {
+    intra_threads_env().unwrap_or(1)
+}
+
+/// `DLK_INTRA_THREADS`, when set to a positive integer.
+pub fn intra_threads_env() -> Option<usize> {
+    std::env::var("DLK_INTRA_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// Resolve a configured intra-op thread count: `0` means "auto"
+/// (environment override, else serial).
+pub fn resolve_intra_threads(configured: usize) -> usize {
+    if configured == 0 {
+        default_intra_threads()
+    } else {
+        configured
+    }
+}
+
+struct Job {
+    /// Erased-lifetime pointer to the dispatcher's closure. Only valid
+    /// while the dispatcher is blocked inside [`KernelPool::run`]; the
+    /// join barrier there guarantees no worker holds it afterwards.
+    f: *const (dyn Fn(usize) + Sync),
+    /// Shared claim counter: workers and the dispatcher race on task
+    /// indices. Which lane runs which task never affects results (tasks
+    /// write disjoint ranges), only load balance.
+    next: Arc<AtomicUsize>,
+    tasks: usize,
+}
+
+// SAFETY: the raw closure pointer crosses threads, but it is only
+// dereferenced between job publication and the join barrier in `run`,
+// while the dispatcher (which owns the borrow) is blocked.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per dispatched job so a worker never re-enters a job
+    /// it already finished.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers currently inside the published job.
+    active: usize,
+    shutdown: bool,
+    /// First panic payload caught in any lane of the current job.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new job or shutdown.
+    work: Condvar,
+    /// The dispatcher waits here for `active == 0`.
+    done: Condvar,
+    /// Cumulative nanoseconds lanes spent executing tasks (dispatcher
+    /// lane included) — the numerator of the busy fraction surfaced in
+    /// `ExecTrace`/`PoolUtilization`.
+    busy_ns: AtomicU64,
+    dispatches: AtomicU64,
+}
+
+/// A fixed-size fork-join worker pool. `threads` counts *lanes*
+/// including the dispatching thread, so `KernelPool::new(4)` spawns 3
+/// workers and `KernelPool::new(1)` spawns none (pure serial).
+///
+/// One job runs at a time; concurrent dispatchers serialize on an
+/// internal lock (each engine shard owns one pool and dispatches from
+/// its single execute thread, so this is uncontended in the serving
+/// stack).
+pub struct KernelPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes dispatchers; see type docs.
+    dispatch: Mutex<()>,
+}
+
+impl KernelPool {
+    pub fn new(threads: usize) -> KernelPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+                panic: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            busy_ns: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("dlk-kern-{i}"))
+                    .spawn(move || worker_main(shared))
+                    .expect("spawn kernel worker")
+            })
+            .collect();
+        KernelPool { shared, workers, threads, dispatch: Mutex::new(()) }
+    }
+
+    /// Total lanes (workers + the dispatching thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cumulative microseconds lanes spent executing tasks.
+    pub fn busy_us(&self) -> u64 {
+        self.shared.busy_ns.load(Ordering::Relaxed) / 1_000
+    }
+
+    /// Number of fork-join dispatches so far.
+    pub fn dispatches(&self) -> u64 {
+        self.shared.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(0), f(1), …, f(tasks-1)` across the pool's lanes and wait
+    /// for all of them. The dispatcher participates, so a 1-lane pool
+    /// (or `tasks <= 1`) degenerates to a plain in-order loop.
+    ///
+    /// If any task panics, the first payload is re-thrown from this call
+    /// after every lane has finished; the pool remains usable.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        if self.threads == 1 || tasks == 1 {
+            let t0 = Instant::now();
+            let r = (0..tasks).try_for_each(|i| catch_unwind(AssertUnwindSafe(|| f(i))));
+            self.shared.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if let Err(p) = r {
+                resume_unwind(p);
+            }
+            return;
+        }
+
+        let _serialized = self.dispatch.lock().unwrap();
+        let next = Arc::new(AtomicUsize::new(0));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none() && st.active == 0);
+            st.epoch += 1;
+            // SAFETY: erased lifetime; the pointer outlives every use
+            // because this function only returns after the join barrier
+            // below observes `active == 0` with the job retracted.
+            st.job = Some(Job {
+                f: f as *const (dyn Fn(usize) + Sync),
+                next: next.clone(),
+                tasks,
+            });
+            self.shared.work.notify_all();
+        }
+
+        // Dispatcher lane: claim and run tasks alongside the workers.
+        let t0 = Instant::now();
+        let mut local_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                // Keep claiming: the counter must exhaust so every task
+                // is accounted for before the barrier releases.
+                local_panic.get_or_insert(p);
+            }
+        }
+        self.shared.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        // Join barrier: retract the job (no late worker may pick it up),
+        // then wait out the lanes that already joined it.
+        let mut st = self.shared.state.lock().unwrap();
+        st.job = None;
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        let pool_panic = st.panic.take();
+        drop(st);
+        if let Some(p) = local_panic.or(pool_panic) {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        // Wait for an unseen job (or shutdown), registering in `active`
+        // under the lock so the dispatcher's barrier counts us.
+        let (f, next, tasks) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = &st.job {
+                    if st.epoch != seen_epoch {
+                        seen_epoch = st.epoch;
+                        st.active += 1;
+                        break (job.f, job.next.clone(), job.tasks);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+
+        let t0 = Instant::now();
+        // SAFETY: the dispatcher cannot return from `run` (and thus the
+        // closure cannot be dropped) until this lane decrements `active`.
+        let f = unsafe { &*f };
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut st = shared.state.lock().unwrap();
+                st.panic.get_or_insert(p);
+            }
+        }
+        shared.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A borrowed parallelism context handed down to kernels: which pool to
+/// fork on (if any) and how many lanes this step was budgeted by the
+/// plan's [`Parallelism`](super::Parallelism) decision.
+#[derive(Clone, Copy)]
+pub struct Par<'a> {
+    pool: Option<&'a KernelPool>,
+    threads: usize,
+}
+
+impl<'a> Par<'a> {
+    /// No parallelism: every `run_chunks` call is a plain in-order loop.
+    pub fn serial() -> Par<'static> {
+        Par { pool: None, threads: 1 }
+    }
+
+    /// Fork on `pool` with at most `threads` lanes (clamped to the
+    /// pool's size; 0 or 1 means serial).
+    pub fn new(pool: &'a KernelPool, threads: usize) -> Par<'a> {
+        let threads = threads.clamp(1, pool.threads());
+        Par { pool: (threads > 1).then_some(pool), threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        if self.pool.is_some() {
+            self.threads
+        } else {
+            1
+        }
+    }
+
+    /// Partition `units` work items into at most `threads` contiguous
+    /// chunks — a **fixed, size-deterministic** split (`ceil(units /
+    /// threads)` per chunk, independent of scheduling) — and run
+    /// `f(lo, hi)` for each `[lo, hi)` range. Serial contexts run the
+    /// chunks in order on the calling thread; the partition itself is
+    /// identical either way.
+    pub fn run_chunks(&self, units: usize, f: impl Fn(usize, usize) + Sync) {
+        if units == 0 {
+            return;
+        }
+        let lanes = self.threads().min(units);
+        if lanes <= 1 {
+            f(0, units);
+            return;
+        }
+        let grain = units.div_ceil(lanes);
+        let chunks = units.div_ceil(grain);
+        match self.pool {
+            Some(pool) => pool.run(chunks, &|c: usize| {
+                let lo = c * grain;
+                f(lo, (lo + grain).min(units));
+            }),
+            None => {
+                for c in 0..chunks {
+                    let lo = c * grain;
+                    f(lo, (lo + grain).min(units));
+                }
+            }
+        }
+    }
+}
+
+/// A raw view over one contiguous output buffer that lets concurrent
+/// tasks carve out *disjoint* `&mut` subranges (the `split_at_mut`
+/// pattern, expressed index-wise so a chunked dispatch can claim its
+/// range without threading a recursive split through the pool).
+pub(crate) struct UnsafeSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: tasks only touch disjoint ranges (see `slice`), so handing the
+// view to multiple threads is as sound as `split_at_mut` would be.
+unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
+unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+
+impl<'a, T> UnsafeSlice<'a, T> {
+    pub(crate) fn new(slice: &'a mut [T]) -> UnsafeSlice<'a, T> {
+        UnsafeSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// The `[lo, hi)` subslice.
+    ///
+    /// # Safety
+    /// Callers must guarantee that ranges handed out to concurrently
+    /// running tasks never overlap, and that the range is in bounds.
+    /// Every kernel in this crate derives `[lo, hi)` from its chunk's
+    /// partition indices, which are disjoint by construction.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn covers_every_task_exactly_once() {
+        let pool = KernelPool::new(4);
+        for tasks in [1usize, 2, 3, 7, 64, 1000] {
+            let hits: Vec<AtomicU32> = (0..tasks).map(|_| AtomicU32::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+        assert!(pool.dispatches() >= 6);
+    }
+
+    #[test]
+    fn single_lane_pool_is_serial_in_order() {
+        let pool = KernelPool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run(5, &|i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn chunk_partition_is_size_deterministic() {
+        // The partition depends only on (units, threads) — never on
+        // scheduling — so chunk boundaries are reproducible.
+        let pool = KernelPool::new(3);
+        let par = Par::new(&pool, 3);
+        let seen = Mutex::new(Vec::new());
+        par.run_chunks(10, |lo, hi| seen.lock().unwrap().push((lo, hi)));
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 4), (4, 8), (8, 10)]);
+
+        // Serial context: identical partition, in order.
+        let mut serial = Vec::new();
+        Par::serial().run_chunks(10, |lo, hi| serial.push((lo, hi)));
+        assert_eq!(serial, vec![(0, 10)]);
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let pool = KernelPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 5 {
+                    panic!("task 5 poisoned");
+                }
+            });
+        }));
+        let payload = r.expect_err("panic must propagate to the dispatcher");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("poisoned"), "unexpected payload: {msg}");
+
+        // The pool still serves the next job.
+        let count = AtomicUsize::new(0);
+        pool.run(16, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn busy_time_accumulates() {
+        let pool = KernelPool::new(2);
+        pool.run(4, &|_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(pool.busy_us() >= 4 * 2_000, "busy {}us", pool.busy_us());
+    }
+
+    #[test]
+    fn intra_threads_resolution() {
+        // Explicit values win; 0 falls back to env/default (this test
+        // avoids mutating the environment — just the pure paths).
+        assert_eq!(resolve_intra_threads(3), 3);
+        assert!(resolve_intra_threads(0) >= 1);
+    }
+}

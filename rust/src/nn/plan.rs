@@ -35,13 +35,15 @@
 
 use super::fft::Complex;
 use super::fft_conv::{FftConvPlan, FftScratch};
+use super::parallel::{resolve_intra_threads, KernelPool, Par};
 use super::{
-    avg_pool2d_into, conv1d_into, conv2d_direct_f16_into, conv2d_direct_i8_into,
-    conv2d_direct_i8i8_into, conv2d_direct_into, conv2d_im2col_f16_into, conv2d_im2col_i8_into,
-    conv2d_im2col_i8i8_into, conv2d_im2col_into, dense_f16_into, dense_i8_into, dense_i8i8_into,
-    dense_into, fft_conv_flops, gemm_i8_i32, global_avg_pool_into, max_pool1d_into,
-    max_pool2d_into, relu_in_place, softmax_in_place, Conv1dParams, Conv2dParams, ConvStrategy,
-    LayerTiming, PackedI8, Pool2dParams, MAX_GEMM_K,
+    avg_pool2d_into, conv1d_into, conv2d_direct_f16_par_into, conv2d_direct_i8_par_into,
+    conv2d_direct_i8i8_into, conv2d_direct_i8i8_par_into, conv2d_direct_into,
+    conv2d_direct_par_into, conv2d_im2col_f16_par_into, conv2d_im2col_i8_par_into,
+    conv2d_im2col_i8i8_par_into, conv2d_im2col_into, conv2d_im2col_par_into, dense_f16_par_into,
+    dense_i8_par_into, dense_i8i8_par_into, dense_par_into, fft_conv_flops, gemm_i8_i32,
+    global_avg_pool_into, max_pool1d_into, max_pool2d_into, relu_in_place, softmax_in_place,
+    Conv1dParams, Conv2dParams, ConvStrategy, LayerTiming, PackedI8, Pool2dParams, MAX_GEMM_K,
 };
 use crate::compression::{quantize_i8_into, symmetric_i8_scale, ResidentF16, ResidentI8};
 use crate::model::{Architecture, LayerKind, WeightStore};
@@ -60,6 +62,33 @@ const FFT_SPECTRA_CAP_BYTES: usize = 16 << 20;
 // ---------------------------------------------------------------------------
 // Cost model
 // ---------------------------------------------------------------------------
+
+/// Per-step intra-op parallelism decision, compiled into the plan by
+/// [`CostModel::parallelism`]. `threads == 1` means the step runs serial
+/// on the execute thread; otherwise the kernel's partition axis is split
+/// into `grain`-sized chunks across a [`KernelPool`]. The partition is a
+/// pure function of `(units, threads)` — never of load or timing — so a
+/// plan executes bitwise identically at any thread count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker lanes the step fans out over (1 = serial).
+    pub threads: usize,
+    /// Partition-axis units per chunk (`ceil(units / threads)`).
+    pub grain: usize,
+}
+
+impl Parallelism {
+    /// The serial decision (what every step gets at `--intra-threads 1`).
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1, grain: 0 }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Parallelism {
+        Parallelism::serial()
+    }
+}
 
 /// Per-operation cost coefficients (microseconds per unit of work). The
 /// absolute values only matter relative to each other — the plan uses
@@ -87,6 +116,10 @@ pub struct CostModel {
     /// µs per element for the activation-quantization boundary (one
     /// max-abs scan plus one round/clamp store per input element).
     pub quant_us_per_elem: f64,
+    /// µs of fork-join overhead per parallel kernel dispatch (publish
+    /// the job, wake the pool, join the barrier). Steps whose predicted
+    /// parallel saving does not clear this stay serial.
+    pub fork_join_us: f64,
 }
 
 impl Default for CostModel {
@@ -101,6 +134,18 @@ fn fft_spectra_bytes(c: usize, h: usize, w: usize, oc: usize, params: Conv2dPara
     let grid =
         (h + 2 * params.pad).next_power_of_two() * (w + 2 * params.pad).next_power_of_two();
     oc * c * grid * std::mem::size_of::<Complex>()
+}
+
+/// Partition-axis units a conv2d kernel of this strategy exposes to the
+/// worker pool: direct convs split `(batch, out_channel)` output planes,
+/// im2col convs split output channels (lowering and GEMM both), FFT has
+/// no parallel form and stays serial.
+fn conv_partition_units(s: ConvStrategy, n: usize, oc: usize) -> usize {
+    match s {
+        ConvStrategy::Direct => n * oc,
+        ConvStrategy::Im2col => oc,
+        ConvStrategy::Fft => 1,
+    }
 }
 
 /// Minimum-of-N wall time for one closure, in µs.
@@ -128,6 +173,7 @@ impl CostModel {
             gemm_i8_us_per_mac: 1.5e-4,
             direct_i8_us_per_mac: 7.5e-4,
             quant_us_per_elem: 5.0e-4,
+            fork_join_us: 15.0,
         }
     }
 
@@ -224,6 +270,16 @@ impl CostModel {
         });
         let quant = t_quant / qdata.len() as f64;
 
+        // Fork-join dispatch: round-trip an empty two-chunk job through a
+        // throwaway two-lane pool. This is the per-dispatch overhead a
+        // parallel step must amortize, measured on this host's actual
+        // wake/join latency.
+        let fork_join = {
+            let pool = KernelPool::new(2);
+            let par = Par::new(&pool, 2);
+            probe_us(8, || par.run_chunks(2, |_, _| {}))
+        };
+
         let ok = |v: f64| v.is_finite() && v > 0.0;
         CostModel {
             direct_us_per_mac: if ok(direct) { direct } else { fallback.direct_us_per_mac },
@@ -238,6 +294,7 @@ impl CostModel {
                 fallback.direct_i8_us_per_mac
             },
             quant_us_per_elem: if ok(quant) { quant } else { fallback.quant_us_per_elem },
+            fork_join_us: if ok(fork_join) { fork_join } else { fallback.fork_join_us },
         }
     }
 
@@ -342,11 +399,45 @@ impl CostModel {
         k: usize,
         params: Conv2dParams,
     ) -> crate::Result<(ConvStrategy, f64)> {
-        let (s, est) = self.pick_conv2d(n, c, h, w, oc, k, params)?;
+        self.pick_conv2d_capped_par(n, c, h, w, oc, k, params, 1)
+    }
+
+    /// [`CostModel::pick_conv2d_capped`] with the candidate costs
+    /// adjusted for intra-op parallelism at `threads` lanes: each
+    /// strategy is priced at its own partition granularity (direct
+    /// splits `n*oc` output planes, im2col `oc` output channels, FFT
+    /// stays serial), so a geometry where im2col wins serially can
+    /// honestly lose to direct once direct's finer partition amortizes
+    /// the fork-join overhead — and vice versa. At `threads == 1` this
+    /// is exactly the serial pick.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pick_conv2d_capped_par(
+        &self,
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        oc: usize,
+        k: usize,
+        params: Conv2dParams,
+        threads: usize,
+    ) -> crate::Result<(ConvStrategy, f64)> {
+        let adj = |serial: f64, s: ConvStrategy| {
+            let par = self.parallelism(serial, conv_partition_units(s, n, oc), threads);
+            self.parallel_us(serial, par)
+        };
+        let mut best: Option<(ConvStrategy, f64)> = None;
+        for s in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+            let us = adj(self.conv2d_us(s, n, c, h, w, oc, k, params)?, s);
+            if best.map_or(true, |(_, b)| us < b) {
+                best = Some((s, us));
+            }
+        }
+        let (s, est) = best.unwrap();
         if s == ConvStrategy::Fft && fft_spectra_bytes(c, h, w, oc, params) > FFT_SPECTRA_CAP_BYTES
         {
-            let d = self.conv2d_us(ConvStrategy::Direct, n, c, h, w, oc, k, params)?;
-            let i2 = self.conv2d_us(ConvStrategy::Im2col, n, c, h, w, oc, k, params)?;
+            let d = adj(self.conv2d_us(ConvStrategy::Direct, n, c, h, w, oc, k, params)?, ConvStrategy::Direct);
+            let i2 = adj(self.conv2d_us(ConvStrategy::Im2col, n, c, h, w, oc, k, params)?, ConvStrategy::Im2col);
             return Ok(if d <= i2 {
                 (ConvStrategy::Direct, d)
             } else {
@@ -356,12 +447,49 @@ impl CostModel {
         Ok((s, est))
     }
 
+    /// The per-step parallelism decision: split `units` partition-axis
+    /// units across up to `max_threads` lanes, but only when the
+    /// predicted saving (`est_us * (1 - 1/t)`) clears twice the measured
+    /// fork-join overhead — tiny layers stay serial rather than paying a
+    /// dispatch that costs more than it saves.
+    pub fn parallelism(&self, est_us: f64, units: usize, max_threads: usize) -> Parallelism {
+        let t = max_threads.min(units).max(1);
+        if t <= 1 || est_us * (1.0 - 1.0 / t as f64) <= 2.0 * self.fork_join_us {
+            return Parallelism::serial();
+        }
+        Parallelism { threads: t, grain: units.div_ceil(t) }
+    }
+
+    /// Predicted wall time of a step under a parallelism decision:
+    /// perfect speedup on the partitioned work plus one fork-join.
+    pub fn parallel_us(&self, est_us: f64, par: Parallelism) -> f64 {
+        if par.threads <= 1 {
+            est_us
+        } else {
+            est_us / par.threads as f64 + self.fork_join_us
+        }
+    }
+
     /// Predicted forward-pass cost for a whole architecture at `batch`,
     /// in µs, assuming the per-layer strategy the plan would pick (the
     /// capped auto selection). This is what the model selector's
     /// latency-budget filter consumes
     /// ([`crate::selector::Candidate::for_arch`]).
     pub fn estimate_forward_us(&self, arch: &Architecture, batch: usize) -> crate::Result<f64> {
+        self.estimate_forward_us_par(arch, batch, 1)
+    }
+
+    /// [`CostModel::estimate_forward_us`] at an intra-op thread count:
+    /// each parallelizable layer is priced at the parallelism decision
+    /// the compiled plan would take for it ([`CostModel::parallelism`]),
+    /// so the selector's latency-budget filter sees the same speedup the
+    /// pool actually delivers. `threads == 1` is the serial estimate.
+    pub fn estimate_forward_us_par(
+        &self,
+        arch: &Architecture,
+        batch: usize,
+        threads: usize,
+    ) -> crate::Result<f64> {
         let shapes = arch.shapes()?;
         let mut total = 0.0;
         for (i, layer) in arch.layers.iter().enumerate() {
@@ -371,13 +499,17 @@ impl CostModel {
             total += match &layer.kind {
                 LayerKind::Conv2d { out_ch, k, stride, pad } => {
                     let p = Conv2dParams::new(*stride, *pad);
-                    self.pick_conv2d_capped(batch, inp[0], inp[1], inp[2], *out_ch, *k, p)?.1
+                    self.pick_conv2d_capped_par(batch, inp[0], inp[1], inp[2], *out_ch, *k, p, threads)?
+                        .1
                 }
                 LayerKind::Conv1d { out_ch, k, .. } => {
                     (batch * out_ch * out[1] * inp[0] * k) as f64 * self.direct_us_per_mac
                 }
                 LayerKind::Dense { out: of } => {
-                    (batch * of * inp.iter().product::<usize>()) as f64 * self.gemm_us_per_mac
+                    let serial =
+                        (batch * of * inp.iter().product::<usize>()) as f64 * self.gemm_us_per_mac;
+                    let par = self.parallelism(serial, *of, threads);
+                    self.parallel_us(serial, par)
                 }
                 LayerKind::MaxPool2d { k, .. } | LayerKind::AvgPool2d { k, .. } => {
                     out_elems * (k * k) as f64 * self.elem_us
@@ -556,6 +688,12 @@ pub struct PlanOptions {
     pub accuracy_budget: f64,
     /// Cost model override; `None` uses the process-wide calibrated one.
     pub cost_model: Option<CostModel>,
+    /// Intra-op worker lanes available to each forward pass. `0` (the
+    /// default) resolves through [`resolve_intra_threads`]: the
+    /// `DLK_INTRA_THREADS` env var if set, else 1 (serial). Values are
+    /// a *ceiling* — the per-step [`Parallelism`] decision still keeps
+    /// steps serial when the fork-join overhead would not amortize.
+    pub intra_threads: usize,
 }
 
 impl Default for PlanOptions {
@@ -565,6 +703,7 @@ impl Default for PlanOptions {
             precision: PlanPrecision::default(),
             accuracy_budget: DEFAULT_ACCURACY_BUDGET,
             cost_model: None,
+            intra_threads: 0,
         }
     }
 }
@@ -691,8 +830,10 @@ struct Step {
     kind: &'static str,
     /// Batch-scaled multiply-accumulates.
     macs: u64,
-    /// Cost-model estimate, µs.
+    /// Cost-model estimate, µs (parallelism-adjusted).
     est_us: f64,
+    /// Compiled intra-op parallelism decision for this step.
+    par: Parallelism,
 }
 
 impl Step {
@@ -733,6 +874,8 @@ pub struct StepInfo {
     /// Whether this step runs the full-integer path (quantized
     /// activations, packed-i8 GEMM, requantization epilogue).
     pub full_integer: bool,
+    /// Compiled intra-op parallelism decision (threads = 1 is serial).
+    pub par: Parallelism,
 }
 
 /// Sizing for the integer scratch shared by every full-integer step:
@@ -790,6 +933,8 @@ pub struct ExecutionPlan {
     /// Integer scratch sizing, when any step runs full-integer.
     quant_scratch_spec: Option<QuantSpec>,
     est_us: f64,
+    /// Resolved intra-op lane ceiling the plan was compiled for.
+    intra_threads: usize,
     arena: Mutex<Option<ArenaBuffers>>,
     arena_builds: AtomicU64,
 }
@@ -834,6 +979,7 @@ impl ExecutionPlan {
         weights.validate(arch)?;
         let shapes = arch.shapes()?;
         let cost = opts.resolve_cost();
+        let intra = resolve_intra_threads(opts.intra_threads);
 
         // Liveness values: index 0 is the staged input; each out-of-place
         // step births a new value (plus, for im2col, a same-step scratch
@@ -963,6 +1109,17 @@ impl ExecutionPlan {
                             cost.conv2d_us(s, batch, c, h, w, *out_ch, *k, params)
                         }
                     };
+                    // Auto selection compares *parallelism-adjusted*
+                    // costs — each strategy priced at its own partition
+                    // granularity — so the pick stays honest under
+                    // intra-op threading. The tuple keeps the winner's
+                    // serial estimate; the shared post-selection code
+                    // below compiles it into the step's `Parallelism`
+                    // decision and adjusted `est_us`.
+                    let par_adj = |s: ConvStrategy, serial: f64| {
+                        let units = conv_partition_units(s, batch, *out_ch);
+                        cost.parallel_us(serial, cost.parallelism(serial, units, intra))
+                    };
                     let (strategy, est) = match opts.strategy {
                         PlanStrategy::Fixed(s) => (s, conv_est(s)?),
                         // Forced quantization restricts auto strategy to
@@ -972,7 +1129,9 @@ impl ExecutionPlan {
                         PlanStrategy::Auto if force_quant => {
                             let d = conv_est(ConvStrategy::Direct)?;
                             let i2 = conv_est(ConvStrategy::Im2col)?;
-                            if d <= i2 {
+                            if par_adj(ConvStrategy::Direct, d)
+                                <= par_adj(ConvStrategy::Im2col, i2)
+                            {
                                 (ConvStrategy::Direct, d)
                             } else {
                                 (ConvStrategy::Im2col, i2)
@@ -983,13 +1142,10 @@ impl ExecutionPlan {
                         // (Auto *precision* keeps the f32-cost strategy
                         // pick; a full-integer layer reprices its choice.)
                         PlanStrategy::Auto => {
-                            let (s, est0) =
-                                cost.pick_conv2d_capped(batch, c, h, w, *out_ch, *k, params)?;
-                            if full_int && s != ConvStrategy::Fft {
-                                (s, conv_est(s)?)
-                            } else {
-                                (s, est0)
-                            }
+                            let (s, _) = cost.pick_conv2d_capped_par(
+                                batch, c, h, w, *out_ch, *k, params, intra,
+                            )?;
+                            (s, conv_est(s)?)
                         }
                     };
                     let out_buf = out_of_place(&mut bufs, out_numel);
@@ -1092,6 +1248,23 @@ impl ExecutionPlan {
             if matches!(&op, Op::Conv2dFft { .. }) {
                 resident = None;
             }
+            // Compile the step's parallelism decision from its op's
+            // partition axis: direct convs split `(batch, out_ch)` output
+            // planes, im2col convs split output channels, dense splits
+            // output features (full-integer dense splits GEMM row
+            // panels, i.e. the batch). Ops without a partitioned kernel
+            // (pools, elementwise, FFT, conv1d) stay serial.
+            let par_units = match &op {
+                Op::Conv2dDirect { .. } | Op::Conv2dDirectI8 { .. } => {
+                    out_shape.dim(0) * out_shape.dim(1)
+                }
+                Op::Conv2dIm2col { .. } | Op::Conv2dIm2colI8 { .. } => out_shape.dim(1),
+                Op::Dense => out_shape.dim(1),
+                Op::DenseI8 => out_shape.dim(0),
+                _ => 1,
+            };
+            let par = cost.parallelism(est_us, par_units, intra);
+            let est_us = cost.parallel_us(est_us, par);
             // Bytes the step's parameters keep resident: weights at their
             // resident dtype, biases always f32. FFT spectra are charged as
             // f32 weights — the spectra themselves vary with the calibrated
@@ -1116,6 +1289,7 @@ impl ExecutionPlan {
                 est_us,
                 resident,
                 param_bytes,
+                par,
             });
             cur = out_buf;
         }
@@ -1177,6 +1351,7 @@ impl ExecutionPlan {
             fft_scratch_spec: fft_spec,
             quant_scratch_spec: quant_spec,
             est_us,
+            intra_threads: intra,
             arena: Mutex::new(None),
             arena_builds: AtomicU64::new(0),
         })
@@ -1187,7 +1362,21 @@ impl ExecutionPlan {
     /// Run the planned forward pass. Bit-exact with the interpreter
     /// oracle when both use the same conv strategy per layer.
     pub fn execute(&self, weights: &WeightStore, input: &Tensor) -> crate::Result<Tensor> {
-        self.execute_inner(weights, input, None)
+        self.execute_inner(weights, input, None, None)
+    }
+
+    /// [`ExecutionPlan::execute`] fanning parallel steps out over a
+    /// [`KernelPool`]. With `None` (or a pool when every step compiled
+    /// serial) this is exactly `execute` — and because partitions are
+    /// size-deterministic and writes ordered, the output is **bitwise
+    /// identical** either way.
+    pub fn execute_with_pool(
+        &self,
+        weights: &WeightStore,
+        input: &Tensor,
+        pool: Option<&KernelPool>,
+    ) -> crate::Result<Tensor> {
+        self.execute_inner(weights, input, None, pool)
     }
 
     /// Run the planned forward pass, recording per-layer wall time. The
@@ -1198,8 +1387,18 @@ impl ExecutionPlan {
         weights: &WeightStore,
         input: &Tensor,
     ) -> crate::Result<(Tensor, Vec<LayerTiming>)> {
+        self.execute_timed_with_pool(weights, input, None)
+    }
+
+    /// [`ExecutionPlan::execute_timed`] over an optional [`KernelPool`].
+    pub fn execute_timed_with_pool(
+        &self,
+        weights: &WeightStore,
+        input: &Tensor,
+        pool: Option<&KernelPool>,
+    ) -> crate::Result<(Tensor, Vec<LayerTiming>)> {
         let mut timings = Vec::with_capacity(self.steps.len());
-        let out = self.execute_inner(weights, input, Some(&mut timings))?;
+        let out = self.execute_inner(weights, input, Some(&mut timings), pool)?;
         Ok((out, timings))
     }
 
@@ -1208,6 +1407,7 @@ impl ExecutionPlan {
         weights: &WeightStore,
         input: &Tensor,
         mut timings: Option<&mut Vec<LayerTiming>>,
+        pool: Option<&KernelPool>,
     ) -> crate::Result<Tensor> {
         anyhow::ensure!(
             input.shape() == &self.input_shape,
@@ -1237,6 +1437,13 @@ impl ExecutionPlan {
 
         for step in &self.steps {
             let t0 = Instant::now();
+            // The compiled decision only fans out when the caller
+            // actually supplied a pool; otherwise every step runs
+            // serial — with bitwise-identical results either way.
+            let par = match pool {
+                Some(p) if step.par.threads > 1 => Par::new(p, step.par.threads),
+                _ => Par::serial(),
+            };
             match &step.op {
                 Op::Relu => relu_in_place(&mut slots[step.in_slot]),
                 Op::SoftmaxInPlace => softmax_in_place(&mut slots[step.in_slot])?,
@@ -1250,13 +1457,13 @@ impl ExecutionPlan {
                         match step.resident.as_deref() {
                             None => {
                                 let w = weights.get(step.w_key.as_deref().unwrap())?;
-                                conv2d_direct_into(x, w, Some(b), *params, &mut out)
+                                conv2d_direct_par_into(x, w, Some(b), *params, &mut out, par)
                             }
                             Some(ResidentWeights::F16(h)) => {
-                                conv2d_direct_f16_into(x, h, Some(b), *params, &mut out)
+                                conv2d_direct_f16_par_into(x, h, Some(b), *params, &mut out, par)
                             }
                             Some(ResidentWeights::I8(q)) => {
-                                conv2d_direct_i8_into(x, q, Some(b), *params, &mut out)
+                                conv2d_direct_i8_par_into(x, q, Some(b), *params, &mut out, par)
                             }
                             Some(ResidentWeights::I8Packed(_)) => anyhow::bail!(
                                 "packed weights on a non-integer conv step `{}`",
@@ -1279,13 +1486,15 @@ impl ExecutionPlan {
                             match step.resident.as_deref() {
                                 None => {
                                     let w = weights.get(step.w_key.as_deref().unwrap())?;
-                                    conv2d_im2col_into(x, w, Some(b), *params, &mut patches, &mut out)
+                                    conv2d_im2col_par_into(
+                                        x, w, Some(b), *params, &mut patches, &mut out, par,
+                                    )
                                 }
-                                Some(ResidentWeights::F16(h)) => conv2d_im2col_f16_into(
-                                    x, h, Some(b), *params, &mut patches, &mut out,
+                                Some(ResidentWeights::F16(h)) => conv2d_im2col_f16_par_into(
+                                    x, h, Some(b), *params, &mut patches, &mut out, par,
                                 ),
-                                Some(ResidentWeights::I8(q)) => conv2d_im2col_i8_into(
-                                    x, q, Some(b), *params, &mut patches, &mut out,
+                                Some(ResidentWeights::I8(q)) => conv2d_im2col_i8_par_into(
+                                    x, q, Some(b), *params, &mut patches, &mut out, par,
                                 ),
                                 Some(ResidentWeights::I8Packed(_)) => anyhow::bail!(
                                     "packed weights on a non-integer conv step `{}`",
@@ -1304,9 +1513,9 @@ impl ExecutionPlan {
                     let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
                         let x = &slots[step.in_slot];
                         match step.resident.as_deref() {
-                            Some(ResidentWeights::I8Packed(p)) => {
-                                conv2d_direct_i8i8_into(x, p, Some(b), *params, &mut qb.x, &mut out)
-                            }
+                            Some(ResidentWeights::I8Packed(p)) => conv2d_direct_i8i8_par_into(
+                                x, p, Some(b), *params, &mut qb.x, &mut out, par,
+                            ),
                             _ => anyhow::bail!(
                                 "full-integer conv step `{}` lost its packed weights",
                                 step.name
@@ -1323,7 +1532,7 @@ impl ExecutionPlan {
                     let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
                         let x = &slots[step.in_slot];
                         match step.resident.as_deref() {
-                            Some(ResidentWeights::I8Packed(p)) => conv2d_im2col_i8i8_into(
+                            Some(ResidentWeights::I8Packed(p)) => conv2d_im2col_i8i8_par_into(
                                 x,
                                 p,
                                 Some(b),
@@ -1332,6 +1541,7 @@ impl ExecutionPlan {
                                 &mut qb.patches,
                                 &mut qb.acc,
                                 &mut out,
+                                par,
                             ),
                             _ => anyhow::bail!(
                                 "full-integer conv step `{}` lost its packed weights",
@@ -1402,10 +1612,14 @@ impl ExecutionPlan {
                         match step.resident.as_deref() {
                             None => {
                                 let w = weights.get(step.w_key.as_deref().unwrap())?;
-                                dense_into(x, w, Some(b), &mut out)
+                                dense_par_into(x, w, Some(b), &mut out, par)
                             }
-                            Some(ResidentWeights::F16(h)) => dense_f16_into(x, h, Some(b), &mut out),
-                            Some(ResidentWeights::I8(q)) => dense_i8_into(x, q, Some(b), &mut out),
+                            Some(ResidentWeights::F16(h)) => {
+                                dense_f16_par_into(x, h, Some(b), &mut out, par)
+                            }
+                            Some(ResidentWeights::I8(q)) => {
+                                dense_i8_par_into(x, q, Some(b), &mut out, par)
+                            }
                             Some(ResidentWeights::I8Packed(_)) => anyhow::bail!(
                                 "packed weights on a non-integer dense step `{}`",
                                 step.name
@@ -1422,9 +1636,9 @@ impl ExecutionPlan {
                     let r = out.reshape_within(step.out_shape.clone()).and_then(|_| {
                         let x = &slots[step.in_slot];
                         match step.resident.as_deref() {
-                            Some(ResidentWeights::I8Packed(p)) => {
-                                dense_i8i8_into(x, p, Some(b), &mut qb.x, &mut qb.acc, &mut out)
-                            }
+                            Some(ResidentWeights::I8Packed(p)) => dense_i8i8_par_into(
+                                x, p, Some(b), &mut qb.x, &mut qb.acc, &mut out, par,
+                            ),
                             _ => anyhow::bail!(
                                 "full-integer dense step `{}` lost its packed weights",
                                 step.name
@@ -1507,8 +1721,14 @@ impl ExecutionPlan {
                 est_us: s.est_us,
                 precision: s.weight_dtype(),
                 full_integer: s.op.full_integer(),
+                par: s.par,
             })
             .collect()
+    }
+
+    /// Resolved intra-op lane ceiling this plan was compiled for.
+    pub fn intra_threads(&self) -> usize {
+        self.intra_threads
     }
 
     /// Whether any step runs the full-integer path.
@@ -1563,13 +1783,15 @@ impl ExecutionPlan {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "plan `{}` batch {}: {} steps, {} arena slots, peak arena {}, resident weights {}, est {:.1} us",
+            "plan `{}` batch {}: {} steps, {} arena slots, peak arena {}, resident weights {}, intra {} thread{}, est {:.1} us",
             self.arch_name,
             self.batch,
             self.steps.len(),
             self.slot_numel.len(),
             crate::metrics::fmt_bytes(self.peak_arena_bytes() as u64),
             crate::metrics::fmt_bytes(self.resident_weight_bytes() as u64),
+            self.intra_threads,
+            if self.intra_threads == 1 { "" } else { "s" },
             self.est_us
         );
         for (i, n) in self.slot_numel.iter().enumerate() {
@@ -1625,9 +1847,16 @@ impl ExecutionPlan {
             };
             let dims: Vec<String> =
                 step.out_shape.dims().iter().map(|d| d.to_string()).collect();
+            // Per-step parallelism, e.g. ` x4t` (omitted for serial steps
+            // so single-threaded dumps stay byte-identical to before).
+            let threads = if step.par.threads > 1 {
+                format!(" x{}t", step.par.threads)
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 s,
-                "  step {i:2} {:<12} {:<14}{strategy:<9} {route:<24} -> [{}]  est {:.1} us",
+                "  step {i:2} {:<12} {:<14}{strategy:<9} {route:<24} -> [{}]  est {:.1} us{threads}",
                 step.name,
                 step.kind,
                 dims.join("x"),
@@ -1651,6 +1880,15 @@ pub struct PlannedExecutor {
     arch: Architecture,
     weights: Arc<WeightStore>,
     opts: PlanOptions,
+    /// Resolved intra-op lane ceiling ([`resolve_intra_threads`] over
+    /// [`PlanOptions::intra_threads`]).
+    intra_threads: usize,
+    /// The worker pool parallel steps fan out over. Lazily self-created
+    /// on first forward when `intra_threads > 1`; the serving stack
+    /// instead attaches its per-shard pool via
+    /// [`PlannedExecutor::attach_pool`] so co-resident models share one
+    /// pool and never oversubscribe the shard's lanes.
+    pool: OnceLock<Option<Arc<KernelPool>>>,
     cache: Mutex<PlanCache>,
 }
 
@@ -1672,7 +1910,14 @@ impl PlannedExecutor {
         opts: PlanOptions,
     ) -> crate::Result<PlannedExecutor> {
         weights.validate(&arch)?;
-        Ok(PlannedExecutor { arch, weights, opts, cache: Mutex::new(PlanCache::default()) })
+        Ok(PlannedExecutor {
+            arch,
+            weights,
+            intra_threads: resolve_intra_threads(opts.intra_threads),
+            opts,
+            pool: OnceLock::new(),
+            cache: Mutex::new(PlanCache::default()),
+        })
     }
 
     /// Build with deterministic random weights — delegates the seeding
@@ -1698,6 +1943,29 @@ impl PlannedExecutor {
 
     pub fn options(&self) -> &PlanOptions {
         &self.opts
+    }
+
+    /// Resolved intra-op lane ceiling for this executor's forwards.
+    pub fn intra_threads(&self) -> usize {
+        self.intra_threads
+    }
+
+    /// Share an externally-owned worker pool (the engine's per-shard
+    /// pool). Must be called before the first forward; later calls (or
+    /// calls racing a lazily self-created pool) are ignored — the first
+    /// pool wins, keeping every forward on one consistent pool.
+    pub fn attach_pool(&self, pool: Arc<KernelPool>) {
+        let _ = self.pool.set(Some(pool));
+    }
+
+    /// The pool forwards fan out over, self-creating it on first use
+    /// when `intra_threads > 1` and no pool was attached.
+    pub fn kernel_pool(&self) -> Option<&Arc<KernelPool>> {
+        self.pool
+            .get_or_init(|| {
+                (self.intra_threads > 1).then(|| Arc::new(KernelPool::new(self.intra_threads)))
+            })
+            .as_ref()
     }
 
     /// The cached plan for `batch`, compiling it on first request. FFT
@@ -1743,14 +2011,14 @@ impl PlannedExecutor {
     pub fn forward(&self, input: &Tensor) -> crate::Result<Tensor> {
         anyhow::ensure!(input.shape().rank() >= 1, "input must have a batch dimension");
         let plan = self.plan_for(input.shape().dim(0))?;
-        plan.execute(&self.weights, input)
+        plan.execute_with_pool(&self.weights, input, self.kernel_pool().map(Arc::as_ref))
     }
 
     /// Forward with per-layer timings (interned names).
     pub fn forward_timed(&self, input: &Tensor) -> crate::Result<(Tensor, Vec<LayerTiming>)> {
         anyhow::ensure!(input.shape().rank() >= 1, "input must have a batch dimension");
         let plan = self.plan_for(input.shape().dim(0))?;
-        plan.execute_timed(&self.weights, input)
+        plan.execute_timed_with_pool(&self.weights, input, self.kernel_pool().map(Arc::as_ref))
     }
 }
 
@@ -2150,6 +2418,78 @@ mod tests {
         data[0] = 1.0e4;
         let spiky = Tensor::new(Shape::new(&[16, 16]), data).unwrap();
         assert_eq!(cm.pick_precision(&spiky, 0.005), DType::F16);
+    }
+
+    #[test]
+    fn parallelism_decision_is_overhead_aware() {
+        let cm = CostModel::analytic();
+        // Tiny steps stay serial no matter how many lanes are offered.
+        assert_eq!(cm.parallelism(1.0, 64, 8), Parallelism::serial());
+        // One lane (or one unit) is always serial.
+        assert_eq!(cm.parallelism(1.0e6, 64, 1), Parallelism::serial());
+        assert_eq!(cm.parallelism(1.0e6, 1, 8), Parallelism::serial());
+        // Big steps split; the grain covers every unit.
+        let p = cm.parallelism(1.0e5, 100, 4);
+        assert_eq!(p, Parallelism { threads: 4, grain: 25 });
+        assert_eq!(cm.parallelism(1.0e5, 10, 4).grain, 3); // ceil(10/4)
+        // Units bound the fan-out.
+        assert_eq!(cm.parallelism(1.0e5, 3, 8).threads, 3);
+        // The adjusted estimate pays one fork-join on top of the split.
+        assert!((cm.parallel_us(1.0e5, p) - (2.5e4 + cm.fork_join_us)).abs() < 1e-9);
+        assert_eq!(cm.parallel_us(500.0, Parallelism::serial()), 500.0);
+        // threads == 1 reduces the capped par pick to the serial pick.
+        let params = Conv2dParams::new(1, 1);
+        let a = cm.pick_conv2d_capped(2, 8, 16, 16, 32, 3, params).unwrap();
+        let b = cm.pick_conv2d_capped_par(2, 8, 16, 16, 32, 3, params, 1).unwrap();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        // Parallel whole-forward estimates never exceed serial ones.
+        let serial = cm.estimate_forward_us(&nin_cifar10(), 2).unwrap();
+        let par4 = cm.estimate_forward_us_par(&nin_cifar10(), 2, 4).unwrap();
+        assert!(par4 < serial, "par {par4} >= serial {serial}");
+    }
+
+    #[test]
+    fn pooled_execution_is_bitwise_identical_to_serial() {
+        // NiN at batch 2 with the analytic model compiles parallel steps
+        // at 4 lanes; a pooled forward must match the serial one bit for
+        // bit (fixed partitions, ordered writes).
+        let opts = PlanOptions {
+            cost_model: Some(CostModel::analytic()),
+            ..PlanOptions::default()
+        };
+        let serial = PlannedExecutor::with_random_weights(
+            nin_cifar10(),
+            11,
+            PlanOptions { intra_threads: 1, ..opts },
+        )
+        .unwrap();
+        let pooled = PlannedExecutor::with_random_weights(
+            nin_cifar10(),
+            11,
+            PlanOptions { intra_threads: 4, ..opts },
+        )
+        .unwrap();
+        assert_eq!(pooled.intra_threads(), 4);
+        let plan = pooled.plan_for(2).unwrap();
+        assert_eq!(plan.intra_threads(), 4);
+        assert!(
+            plan.steps().iter().any(|s| s.par.threads > 1),
+            "no step went parallel:\n{}",
+            plan.dump()
+        );
+        // The dump surfaces per-step thread counts and the lane ceiling.
+        let dump = plan.dump();
+        assert!(dump.contains("intra 4 threads"), "{dump}");
+        assert!(dump.contains(" x4t"), "{dump}");
+        let x = Tensor::randn(Shape::nchw(2, 3, 32, 32), 17, 1.0);
+        let ys = serial.forward(&x).unwrap();
+        let yp = pooled.forward(&x).unwrap();
+        assert_eq!(ys.data(), yp.data());
+        // The pool actually ran work.
+        let pool = pooled.kernel_pool().expect("intra 4 self-creates a pool");
+        assert!(pool.dispatches() > 0);
+        assert!(serial.kernel_pool().is_none(), "serial executor must not build a pool");
     }
 
     #[test]

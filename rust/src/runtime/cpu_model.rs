@@ -124,6 +124,19 @@ impl CpuModel {
         self.planned.options()
     }
 
+    /// Share the engine's per-shard worker pool with this model's
+    /// executor, so every model on a shard fans out over the same lanes
+    /// (no oversubscription). Must be called before the first inference;
+    /// later calls are ignored ([`PlannedExecutor::attach_pool`]).
+    pub fn attach_pool(&self, pool: Arc<crate::nn::KernelPool>) {
+        self.planned.attach_pool(pool);
+    }
+
+    /// Resolved intra-op lane ceiling for this model's forwards.
+    pub fn intra_threads(&self) -> usize {
+        self.planned.intra_threads()
+    }
+
     /// Smallest declared batch size >= `n`, or the largest available
     /// (caller must split bigger batches).
     pub fn pick_batch(&self, n: usize) -> usize {

@@ -64,7 +64,7 @@ use super::loaded_model::LoadedModel;
 use super::pool::{ExecutionPanic, Overloaded};
 use crate::metrics::Histogram;
 use crate::model::Manifest;
-use crate::nn::{PlanOptions, PlanPrecision, PlanStrategy};
+use crate::nn::{resolve_intra_threads, KernelPool, PlanOptions, PlanPrecision, PlanStrategy};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -134,6 +134,14 @@ pub struct EngineConfig {
     /// --precision`): f32 by default; f16/int8 keep quantized weights
     /// resident, `auto` lets the cost model pick per layer.
     pub precision: PlanPrecision,
+    /// Intra-op worker lanes per forward pass on this shard — the
+    /// ceiling the plan compiler's `Parallelism` decisions fork under
+    /// (`dlk serve --intra-threads`). `0` means "auto": the
+    /// `DLK_INTRA_THREADS` environment override, else 1 (serial, the
+    /// pre-pool behavior). The engine pool derives per-shard values from
+    /// one [`CpuBudget`](super::CpuBudget) split so shards × lanes never
+    /// oversubscribe the machine.
+    pub intra_threads: usize,
 }
 
 /// Default pipeline depth: one batch executing while the next stages and
@@ -149,6 +157,7 @@ impl Default for EngineConfig {
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
             precision: PlanPrecision::F32,
+            intra_threads: 0,
         }
     }
 }
@@ -205,6 +214,25 @@ pub struct EngineStats {
     pub stage_us: u64,
     pub exec_us: u64,
     pub scatter_us: u64,
+    /// Intra-op lanes budgeted per forward on this shard (1 = serial).
+    pub intra_threads: usize,
+    /// Cumulative busy time summed across the shard's kernel-pool lanes
+    /// (microseconds; 0 while the shard runs serial).
+    pub intra_busy_us: u64,
+}
+
+impl EngineStats {
+    /// Fraction of the execute phase's lane capacity the intra-op
+    /// workers spent busy: `intra_busy_us / (exec_us × intra_threads)`.
+    /// 0.0 when the shard runs serial or has executed nothing; near 1.0
+    /// means every budgeted lane was saturated for the whole phase.
+    pub fn intra_busy_fraction(&self) -> f64 {
+        if self.intra_threads <= 1 || self.exec_us == 0 {
+            return 0.0;
+        }
+        let cap = self.exec_us as f64 * self.intra_threads as f64;
+        (self.intra_busy_us as f64 / cap).min(1.0)
+    }
 }
 
 /// Result of a hot-swap on one shard: the freshly loaded model plus what
@@ -237,6 +265,11 @@ pub struct ExecTrace {
     /// Scatter-phase time (row slice, microseconds; excludes the reply
     /// send itself).
     pub scatter_micros: u64,
+    /// Kernel-pool lane busy time accumulated during this request's
+    /// execute phase (microseconds, summed across lanes; 0 on a serial
+    /// shard). Dividing by `exec_micros × intra_threads` gives this
+    /// batch's intra-op busy fraction.
+    pub intra_busy_micros: u64,
 }
 
 type InferReply = mpsc::Sender<crate::Result<(Tensor, ExecTrace)>>;
@@ -314,6 +347,7 @@ struct Done {
     window: usize,
     stage_micros: u64,
     exec_micros: u64,
+    intra_busy_micros: u64,
     reply: InferReply,
 }
 
@@ -443,19 +477,35 @@ impl Engine {
 /// The backend a shard's execute thread owns (kept on-thread: PJRT
 /// handles are `!Send`).
 enum Backend {
-    Cpu { strategy: PlanStrategy, precision: PlanPrecision },
+    Cpu {
+        strategy: PlanStrategy,
+        precision: PlanPrecision,
+        /// Resolved intra-op lane budget for plans compiled here.
+        intra_threads: usize,
+        /// The shard's one kernel pool, shared by every resident model's
+        /// executor so co-resident models never oversubscribe the
+        /// shard's lane budget (`None` while serial). Created on the
+        /// execute thread; workers only run pure closures over disjoint
+        /// output slices, so the `!Send` backend invariant holds.
+        pool: Option<Arc<KernelPool>>,
+    },
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtClient),
 }
 
 impl Backend {
-    fn create(
-        kind: BackendKind,
-        strategy: PlanStrategy,
-        precision: PlanPrecision,
-    ) -> crate::Result<Backend> {
-        match kind {
-            BackendKind::Cpu => Ok(Backend::Cpu { strategy, precision }),
+    fn create(config: &EngineConfig) -> crate::Result<Backend> {
+        match config.backend {
+            BackendKind::Cpu => {
+                let intra_threads = resolve_intra_threads(config.intra_threads);
+                let pool = (intra_threads > 1).then(|| Arc::new(KernelPool::new(intra_threads)));
+                Ok(Backend::Cpu {
+                    strategy: config.strategy,
+                    precision: config.precision,
+                    intra_threads,
+                    pool,
+                })
+            }
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => match xla::PjRtClient::cpu() {
                 Ok(c) => Ok(Backend::Pjrt(c)),
@@ -466,16 +516,41 @@ impl Backend {
 
     fn load(&self, dir: &std::path::Path) -> crate::Result<Resident> {
         match self {
-            Backend::Cpu { strategy, precision } => Ok(Resident::Cpu(CpuModel::load_with(
-                dir,
-                PlanOptions {
-                    strategy: *strategy,
-                    precision: *precision,
-                    ..PlanOptions::default()
-                },
-            )?)),
+            Backend::Cpu { strategy, precision, intra_threads, pool } => {
+                let m = CpuModel::load_with(
+                    dir,
+                    PlanOptions {
+                        strategy: *strategy,
+                        precision: *precision,
+                        intra_threads: *intra_threads,
+                        ..PlanOptions::default()
+                    },
+                )?;
+                if let Some(pool) = pool {
+                    m.attach_pool(pool.clone());
+                }
+                Ok(Resident::Cpu(m))
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(client) => Ok(Resident::Pjrt(LoadedModel::load(client, dir)?)),
+        }
+    }
+
+    /// Intra-op lanes this backend's plans may fork over (1 = serial;
+    /// the PJRT runtime does its own intra-op threading).
+    fn intra_threads(&self) -> usize {
+        match self {
+            Backend::Cpu { intra_threads, .. } => *intra_threads,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => 1,
+        }
+    }
+
+    /// Cumulative kernel-pool lane busy time (microseconds; 0 serial).
+    fn intra_busy_us(&self) -> u64 {
+        match self {
+            Backend::Cpu { pool: Some(p), .. } => p.busy_us(),
+            _ => 0,
         }
     }
 }
@@ -663,7 +738,7 @@ fn execute_main(
     scatter_us: Arc<AtomicU64>,
     ready: mpsc::Sender<crate::Result<()>>,
 ) {
-    let backend = match Backend::create(config.backend, config.strategy, config.precision) {
+    let backend = match Backend::create(&config) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -682,6 +757,7 @@ fn execute_main(
     while let Ok(msg) = staged.recv() {
         match msg {
             Staged::Exec { id, n, exec_batch, padded, window: occ, stage_micros, reply } => {
+                let busy0 = backend.intra_busy_us();
                 let t0 = Instant::now();
                 let result = match models.get(&id) {
                     Some(m) => {
@@ -704,14 +780,23 @@ fn execute_main(
                     None => Err(anyhow::anyhow!("model `{id}` is not loaded")),
                 };
                 let exec_micros = t0.elapsed().as_micros() as u64;
+                let intra_busy_micros = backend.intra_busy_us().saturating_sub(busy0);
                 exec_us += exec_micros;
                 if result.is_ok() {
                     exec_hist.record(exec_micros);
                     executions += 1;
                     items += n as u64;
                 }
-                let msg =
-                    Done { result, n, exec_batch, window: occ, stage_micros, exec_micros, reply };
+                let msg = Done {
+                    result,
+                    n,
+                    exec_batch,
+                    window: occ,
+                    stage_micros,
+                    exec_micros,
+                    intra_busy_micros,
+                    reply,
+                };
                 if done.send(msg).is_err() {
                     return;
                 }
@@ -784,6 +869,8 @@ fn execute_main(
                     stage_us: stage_us.load(Ordering::Relaxed),
                     exec_us,
                     scatter_us: scatter_us.load(Ordering::Relaxed),
+                    intra_threads: backend.intra_threads(),
+                    intra_busy_us: backend.intra_busy_us(),
                 });
             }
             Staged::Stall { duration, started } => {
@@ -817,6 +904,7 @@ fn scatter_main(
             stage_micros: d.stage_micros,
             exec_micros: d.exec_micros,
             scatter_micros,
+            intra_busy_micros: d.intra_busy_micros,
         };
         let _ = d.reply.send(sliced.map(|t| (t, trace)));
         inflight.fetch_sub(1, Ordering::AcqRel);
@@ -1148,6 +1236,31 @@ mod tests {
         // The admitted request still completes once the stall ends.
         let (out, _) = ticket.wait_traced().unwrap();
         assert_eq!(out.shape().dims(), &[1, 4]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn explicit_intra_threads_surface_in_stats() {
+        let engine = Engine::start_with(EngineConfig {
+            shard: 0,
+            queue_cap: 16,
+            backend: BackendKind::Cpu,
+            intra_threads: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let dir = testutil::tiny_model_dir("engine-intra", "intra-m", 8, 6);
+        engine.load(&dir).unwrap();
+        let x = Tensor::zeros(crate::tensor::Shape::nchw(2, 1, 8, 8));
+        let (out, trace) = engine.try_infer_async("intra-m", x).unwrap().wait_traced().unwrap();
+        assert_eq!(out.shape().dims(), &[2, 4]);
+        let stats = engine.stats().unwrap();
+        assert_eq!(stats.intra_threads, 3, "explicit lane budget surfaces");
+        // Tiny layers may legitimately stay serial (the cost model's
+        // overhead gate); busy accounting just has to stay bounded.
+        let f = stats.intra_busy_fraction();
+        assert!((0.0..=1.0).contains(&f), "busy fraction {f}");
+        assert!(trace.exec_micros > 0 || trace.intra_busy_micros == 0);
         engine.shutdown();
     }
 

@@ -45,6 +45,6 @@ pub use literal::{literal_to_tensor, tensor_to_literal};
 pub use loaded_model::LoadedModel;
 pub use placement::{Placement, ReplicaAssignment, ReplicaSet};
 pub use pool::{
-    EnginePool, ExecutionPanic, Overloaded, PoolConfig, PoolHandle, PoolStats, PoolTicket, Routed,
-    SwapReport,
+    CpuBudget, EnginePool, ExecutionPanic, Overloaded, PoolConfig, PoolHandle, PoolStats,
+    PoolTicket, Routed, SwapReport,
 };

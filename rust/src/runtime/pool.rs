@@ -145,6 +145,59 @@ pub struct SwapReport {
     pub swap_micros: u64,
 }
 
+/// How the machine's cores are split between engine shards and each
+/// shard's intra-op worker lanes — the single place both defaults come
+/// from, so `shards × intra_threads` never oversubscribes the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuBudget {
+    /// Cores the split was computed against.
+    pub cores: usize,
+    /// Engine shards to start.
+    pub shards: usize,
+    /// Intra-op kernel-pool lanes per shard (1 = serial forwards).
+    pub intra_threads: usize,
+}
+
+impl CpuBudget {
+    /// Split `cores` between a shard count and a per-shard intra-op lane
+    /// count, where `0` means "auto" on either side. Explicit values win
+    /// (the intra side also honors the `DLK_INTRA_THREADS` environment
+    /// override before falling back to auto); an auto side takes the
+    /// cores the other side leaves (`cores / other`, floor 1). Both auto
+    /// keeps the historical default: one single-lane shard per core.
+    pub fn split(cores: usize, shards: usize, intra_threads: usize) -> CpuBudget {
+        let cores = cores.max(1);
+        let intra_cfg = if intra_threads > 0 {
+            intra_threads
+        } else {
+            crate::nn::parallel::intra_threads_env().unwrap_or(0)
+        };
+        let (shards, intra_threads) = match (shards, intra_cfg) {
+            (0, 0) => (cores, 1),
+            (0, intra) => ((cores / intra).max(1), intra),
+            (shards, 0) => (shards, (cores / shards).max(1)),
+            (shards, intra) => (shards, intra),
+        };
+        CpuBudget { cores, shards, intra_threads }
+    }
+
+    /// The split for this machine (`available_parallelism`).
+    pub fn detect(shards: usize, intra_threads: usize) -> CpuBudget {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        CpuBudget::split(cores, shards, intra_threads)
+    }
+}
+
+impl std::fmt::Display for CpuBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} shard(s) x {} intra-op lane(s) on {} core(s)",
+            self.shards, self.intra_threads, self.cores
+        )
+    }
+}
+
 /// Engine-pool configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolConfig {
@@ -170,6 +223,12 @@ pub struct PoolConfig {
     /// their quantized bytes to placement and cache budgets, so a shard
     /// budget holds proportionally more replicas.
     pub precision: PlanPrecision,
+    /// Intra-op worker lanes per shard (`--intra-threads` on the CLI).
+    /// `0` means "auto": the `DLK_INTRA_THREADS` environment override,
+    /// else the cores the shard count leaves (`cores / shards`, floor 1;
+    /// with both sides auto the pool keeps one single-lane shard per
+    /// core). See [`CpuBudget::split`].
+    pub intra_threads: usize,
 }
 
 impl Default for PoolConfig {
@@ -182,18 +241,24 @@ impl Default for PoolConfig {
             backend: BackendKind::default(),
             strategy: PlanStrategy::Auto,
             precision: PlanPrecision::F32,
+            intra_threads: 0,
         }
     }
 }
 
 impl PoolConfig {
-    /// Resolve `shards == 0` to the machine's available parallelism.
+    /// The shard × intra-lane split this config resolves to on this
+    /// machine: one [`CpuBudget`] derives both defaults, so an explicit
+    /// value on either side divides the cores left for the other.
+    pub fn budget(&self) -> CpuBudget {
+        CpuBudget::detect(self.shards, self.intra_threads)
+    }
+
+    /// Resolve `shards == 0` to the machine's available parallelism (via
+    /// the [`CpuBudget`] split — an explicit intra-op lane count divides
+    /// the auto shard count down so the pool never oversubscribes).
     pub fn resolved_shards(&self) -> usize {
-        if self.shards > 0 {
-            self.shards
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        }
+        self.budget().shards
     }
 }
 
@@ -235,6 +300,8 @@ impl PoolStats {
             stage_us: self.shards.iter().map(|s| s.stage_us).collect(),
             exec_us: self.shards.iter().map(|s| s.exec_us).collect(),
             scatter_us: self.shards.iter().map(|s| s.scatter_us).collect(),
+            intra_threads: self.shards.iter().map(|s| s.intra_threads).collect(),
+            intra_busy_us: self.shards.iter().map(|s| s.intra_busy_us).collect(),
             replicas: Vec::new(),
         }
     }
@@ -356,9 +423,13 @@ pub struct EnginePool;
 
 impl EnginePool {
     /// Start `config.resolved_shards()` engine shards and return the pool
-    /// handle. Each shard owns its backend client on its own thread.
+    /// handle. Each shard owns its backend client on its own thread, plus
+    /// its own intra-op kernel pool when the [`CpuBudget`] split gives it
+    /// more than one lane.
     pub fn start(config: PoolConfig) -> crate::Result<PoolHandle> {
-        let shards = config.resolved_shards();
+        let budget = config.budget();
+        let shards = budget.shards;
+        eprintln!("[pool] cpu budget: {budget}");
         let mut handles = Vec::with_capacity(shards);
         for shard in 0..shards {
             handles.push(Engine::start_with(EngineConfig {
@@ -368,6 +439,7 @@ impl EnginePool {
                 backend: config.backend,
                 strategy: config.strategy,
                 precision: config.precision,
+                intra_threads: budget.intra_threads,
             })?);
         }
         Ok(PoolHandle {
@@ -926,6 +998,60 @@ mod tests {
         assert!(PoolConfig::default().resolved_shards() >= 1);
         assert_eq!(PoolConfig { shards: 3, ..Default::default() }.resolved_shards(), 3);
         assert_eq!(PoolConfig::default().replicas, 1, "default pool is unreplicated");
+    }
+
+    #[test]
+    fn cpu_budget_split_derives_both_sides() {
+        // Both explicit: taken verbatim.
+        assert_eq!(
+            CpuBudget::split(8, 2, 4),
+            CpuBudget { cores: 8, shards: 2, intra_threads: 4 }
+        );
+        // Auto shards divide down by the explicit lane count.
+        assert_eq!(
+            CpuBudget::split(8, 0, 4),
+            CpuBudget { cores: 8, shards: 2, intra_threads: 4 }
+        );
+        // An oversized lane count floors the shard side at one.
+        assert_eq!(CpuBudget::split(8, 0, 16).shards, 1);
+        assert_eq!(CpuBudget::split(1, 0, 2).shards, 1);
+        // Auto lanes take the cores the explicit shard count leaves,
+        // unless the DLK_INTRA_THREADS override is set (CI pins it).
+        let b = CpuBudget::split(8, 4, 0);
+        match crate::nn::parallel::intra_threads_env() {
+            Some(env) => assert_eq!(b.intra_threads, env),
+            None => assert_eq!(b.intra_threads, 2),
+        }
+        assert_eq!(b.shards, 4);
+        // Both auto: the historical one-single-lane-shard-per-core
+        // default (again modulo the env override on the intra side).
+        let b = CpuBudget::split(6, 0, 0);
+        match crate::nn::parallel::intra_threads_env() {
+            Some(env) => {
+                assert_eq!(b.intra_threads, env);
+                assert_eq!(b.shards, (6 / env).max(1));
+            }
+            None => assert_eq!((b.shards, b.intra_threads), (6, 1)),
+        }
+        let text = CpuBudget::split(8, 2, 4).to_string();
+        assert!(text.contains("2 shard(s) x 4 intra-op lane(s)"), "{text}");
+    }
+
+    #[test]
+    fn pool_surfaces_intra_budget_in_utilization() {
+        let pool = EnginePool::start(PoolConfig {
+            shards: 2,
+            queue_cap: 8,
+            backend: BackendKind::Cpu,
+            intra_threads: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let util = pool.utilization().unwrap();
+        assert_eq!(util.intra_threads, vec![2, 2], "both shards budget two lanes");
+        assert_eq!(util.intra_busy_us.len(), 2);
+        assert!(util.intra_busy_fractions().iter().all(|f| (0.0..=1.0).contains(f)));
+        pool.shutdown();
     }
 
     #[test]

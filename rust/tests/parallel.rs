@@ -1,0 +1,298 @@
+//! The intra-op parallelism battery (ISSUE 9): determinism and fault
+//! isolation for the kernel worker pool in `nn/parallel.rs`.
+//!
+//! The contract under test is the strong one the plan compiler promises:
+//! forwards executed over a worker pool are **bitwise identical** to the
+//! serial execution — not "close", identical — because every parallel
+//! kernel splits its *output* into fixed, size-deterministic chunks and
+//! each lane writes a disjoint slice with the exact serial loop body.
+//!
+//! What these tests pin:
+//!
+//! - **Bitwise parity everywhere.** Every `LayerKind` (both the 2-D and
+//!   1-D towers, the GAP head) × every ladder batch size × every plan
+//!   precision {f32, f16, int8-weights, full-integer int8} × lane counts
+//!   {2, 4, 8} matches the `intra_threads = 1` forward bit for bit.
+//! - **Every conv lowering.** Direct, im2col and FFT pinned via
+//!   `PlanOptions::fixed`, same parity bar.
+//! - **The battery really forks.** Under the analytic cost model a
+//!   NiN-scale tower must compile parallel steps and the pool must log
+//!   dispatches — guarding against a cost-model regression that quietly
+//!   turns the whole battery into serial-vs-serial.
+//! - **Fault isolation, pool level.** A panic in a worker lane re-throws
+//!   to the dispatcher after the join barrier (no deadlock, no poisoned
+//!   lock) and the same pool serves the next batch.
+//! - **Fault isolation, engine level.** A poisoned forward on a shard
+//!   running 4 intra-op lanes fails only its own ticket with a typed
+//!   `ExecutionPanic`; later in-window requests and fresh batches keep
+//!   matching the oracle.
+
+use deeplearningkit::model::{Architecture, LayerKind};
+use deeplearningkit::nn::{
+    ConvStrategy, CostModel, KernelPool, PlanOptions, PlanPrecision, PlannedExecutor,
+};
+use deeplearningkit::runtime::{BackendKind, CpuModel, Engine, EngineConfig, ExecutionPanic};
+use deeplearningkit::tensor::{Shape, Tensor};
+use deeplearningkit::testutil;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Pool sizes the battery sweeps (1 is the baseline itself). 8 lanes on
+/// a smaller machine still exercises the partition math — chunks just
+/// time-slice.
+const LANES: [usize; 3] = [2, 4, 8];
+
+/// 2-D tower covering Conv2d, Relu, MaxPool2d, AvgPool2d, Dropout,
+/// Flatten, Dense and Softmax.
+fn arch_2d() -> Architecture {
+    let mut a = Architecture::new("par-2d", &[2, 12, 12]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 4, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("conv2", LayerKind::Conv2d { out_ch: 6, k: 3, stride: 1, pad: 0 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("pool2", LayerKind::AvgPool2d { k: 2, stride: 2, pad: 0 });
+    a.push("drop", LayerKind::Dropout { rate: 0.5 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc", LayerKind::Dense { out: 5 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// Conv + GlobalAvgPool head (the NIN classifier shape).
+fn arch_gap() -> Architecture {
+    let mut a = Architecture::new("par-gap", &[1, 8, 8]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 3, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("gap", LayerKind::GlobalAvgPool);
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+/// 1-D tower covering Conv1d and MaxPool1d (char-CNN shape).
+fn arch_1d() -> Architecture {
+    let mut a = Architecture::new("par-1d", &[3, 24]);
+    a.push("conv1", LayerKind::Conv1d { out_ch: 5, k: 3, stride: 1, pad: 1 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("pool1", LayerKind::MaxPool1d { k: 2, stride: 2 });
+    a.push("flatten", LayerKind::Flatten);
+    a.push("fc", LayerKind::Dense { out: 4 });
+    a.push("softmax", LayerKind::Softmax);
+    a
+}
+
+fn input_for(arch: &Architecture, batch: usize, seed: u64) -> Tensor {
+    let mut dims = vec![batch];
+    dims.extend_from_slice(&arch.input);
+    Tensor::randn(Shape::new(&dims), seed, 1.0)
+}
+
+/// Bitwise comparison — `to_bits`, not `==`, so a `-0.0` vs `0.0` or NaN
+/// drift fails loudly instead of slipping through float equality.
+fn assert_bitwise(got: &Tensor, want: &Tensor, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape drift");
+    for (i, (g, w)) in got.data().iter().zip(want.data()).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: output [{i}] diverged from the serial forward ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn every_layer_kind_is_bitwise_identical_across_lane_counts() {
+    let precisions = [
+        PlanPrecision::F32,
+        PlanPrecision::F16,
+        PlanPrecision::Int8Weights,
+        PlanPrecision::Int8,
+    ];
+    for arch_fn in [arch_2d, arch_gap, arch_1d] {
+        for precision in precisions {
+            let opts = PlanOptions::with_precision(precision);
+            let serial = PlannedExecutor::with_random_weights(
+                arch_fn(),
+                42,
+                PlanOptions { intra_threads: 1, ..opts },
+            )
+            .unwrap();
+            let arch = arch_fn();
+            // One baseline forward per ladder batch, shared by every
+            // lane count.
+            let cases: Vec<(usize, Tensor, Tensor)> = CpuModel::DEFAULT_BATCHES
+                .iter()
+                .map(|&batch| {
+                    let x = input_for(&arch, batch, 7 + batch as u64);
+                    let want = serial.forward(&x).unwrap();
+                    (batch, x, want)
+                })
+                .collect();
+            for &t in &LANES {
+                let pooled = PlannedExecutor::with_random_weights(
+                    arch_fn(),
+                    42,
+                    PlanOptions { intra_threads: t, ..opts },
+                )
+                .unwrap();
+                for (batch, x, want) in &cases {
+                    let got = pooled.forward(x).unwrap();
+                    assert_bitwise(
+                        &got,
+                        want,
+                        &format!("{} {} batch {batch} x{t}", arch.name, precision.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_conv_lowering_is_bitwise_identical_across_lane_counts() {
+    for strat in [ConvStrategy::Direct, ConvStrategy::Im2col, ConvStrategy::Fft] {
+        let opts = PlanOptions::fixed(strat);
+        let serial = PlannedExecutor::with_random_weights(
+            arch_2d(),
+            42,
+            PlanOptions { intra_threads: 1, ..opts },
+        )
+        .unwrap();
+        let arch = arch_2d();
+        for &t in &LANES {
+            let pooled = PlannedExecutor::with_random_weights(
+                arch_2d(),
+                42,
+                PlanOptions { intra_threads: t, ..opts },
+            )
+            .unwrap();
+            for batch in [1usize, 8, 32] {
+                let x = input_for(&arch, batch, 90 + batch as u64);
+                let want = serial.forward(&x).unwrap();
+                let got = pooled.forward(&x).unwrap();
+                assert_bitwise(&got, &want, &format!("{} batch {batch} x{t}", strat.name()));
+            }
+        }
+    }
+}
+
+/// Guard against the battery silently degenerating into serial-vs-serial:
+/// under the analytic cost model a NiN-scale tower must compile parallel
+/// steps at every swept lane count, and the pool must actually dispatch.
+#[test]
+fn the_battery_really_forks_under_the_analytic_cost_model() {
+    let mut a = Architecture::new("par-fork", &[3, 32, 32]);
+    a.push("conv1", LayerKind::Conv2d { out_ch: 48, k: 5, stride: 1, pad: 2 });
+    a.push("relu1", LayerKind::Relu);
+    a.push("conv2", LayerKind::Conv2d { out_ch: 32, k: 3, stride: 1, pad: 1 });
+    a.push("relu2", LayerKind::Relu);
+    a.push("gap", LayerKind::GlobalAvgPool);
+    a.push("softmax", LayerKind::Softmax);
+
+    let opts = PlanOptions { cost_model: Some(CostModel::analytic()), ..PlanOptions::default() };
+    let serial = PlannedExecutor::with_random_weights(
+        a.clone(),
+        11,
+        PlanOptions { intra_threads: 1, ..opts },
+    )
+    .unwrap();
+    let x = Tensor::randn(Shape::nchw(2, 3, 32, 32), 17, 1.0);
+    let want = serial.forward(&x).unwrap();
+    for &t in &LANES {
+        let pooled = PlannedExecutor::with_random_weights(
+            a.clone(),
+            11,
+            PlanOptions { intra_threads: t, ..opts },
+        )
+        .unwrap();
+        let plan = pooled.plan_for(2).unwrap();
+        assert!(
+            plan.steps().iter().any(|s| s.par.threads > 1),
+            "x{t}: no step compiled a parallel decision:\n{}",
+            plan.dump()
+        );
+        let got = pooled.forward(&x).unwrap();
+        assert_bitwise(&got, &want, &format!("par-fork x{t}"));
+        let pool = pooled.kernel_pool().unwrap_or_else(|| panic!("x{t} must build a pool"));
+        assert!(pool.dispatches() > 0, "x{t}: the pool never dispatched");
+        assert!(pool.busy_us() > 0, "x{t}: lanes report zero busy time");
+    }
+}
+
+#[test]
+fn kernel_pool_survives_a_worker_panic_and_serves_the_next_batch() {
+    let pool = KernelPool::new(4);
+    let hits = AtomicUsize::new(0);
+    let thrown = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(8, &|i| {
+            if i == 5 {
+                panic!("injected worker fault");
+            }
+            hits.fetch_add(1, Ordering::SeqCst);
+        })
+    }));
+    let payload = thrown.expect_err("the worker panic must re-throw on the dispatcher");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(msg.contains("injected worker fault"), "unexpected panic payload: {msg}");
+
+    // Same pool, next batch: every lane still alive, every task runs.
+    hits.store(0, Ordering::SeqCst);
+    pool.run(16, &|_| {
+        hits.fetch_add(1, Ordering::SeqCst);
+    });
+    assert_eq!(hits.load(Ordering::SeqCst), 16, "a lane died with the panicked batch");
+    assert_eq!(pool.threads(), 4);
+}
+
+#[test]
+fn engine_with_intra_lanes_isolates_a_forward_panic() {
+    let engine = Engine::start_with(EngineConfig {
+        shard: 5,
+        queue_cap: 16,
+        window_depth: 2,
+        backend: BackendKind::Cpu,
+        intra_threads: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let dir = testutil::tiny_model_dir("par-fault", "par-fault-m", 16, 80);
+    engine.load(&dir).unwrap();
+
+    let oracle = CpuModel::load(&dir).unwrap();
+    let good: Vec<Tensor> =
+        (0..2).map(|i| Tensor::randn(Shape::nchw(1, 1, 8, 8), 300 + i, 1.0)).collect();
+    let refs: Vec<Vec<f32>> =
+        good.iter().map(|x| oracle.infer(x).unwrap().data().to_vec()).collect();
+    let poisoned = testutil::poison_input(&[1, 1, 8, 8]);
+
+    // ok, POISON, ok — all in flight on a shard running 4 intra lanes.
+    let t0 = engine.try_infer_async("par-fault-m", good[0].clone()).unwrap();
+    let t_poison = engine.try_infer_async("par-fault-m", poisoned).unwrap();
+    let t1 = engine.try_infer_async("par-fault-m", good[1].clone()).unwrap();
+
+    let (out0, _) = t0.wait_timeout(REPLY_TIMEOUT).unwrap();
+    assert_eq!(out0.data(), &refs[0][..]);
+
+    let err = t_poison.wait_timeout(REPLY_TIMEOUT).unwrap_err();
+    let p = err.downcast_ref::<ExecutionPanic>().expect("typed ExecutionPanic");
+    assert_eq!(p.model, "par-fault-m");
+    assert_eq!(p.shard, 5);
+    assert!(p.message.contains("injected fault"), "{}", p.message);
+
+    // The worker pool survives: the later in-window request and a fresh
+    // batch both complete and still match the serial oracle bit for bit.
+    let (out1, _) = t1.wait_timeout(REPLY_TIMEOUT).unwrap();
+    assert_eq!(out1.data(), &refs[1][..]);
+    let stats = engine.stats().unwrap();
+    assert_eq!(stats.intra_threads, 4, "the lane budget must survive the panic");
+    let again = engine.infer("par-fault-m", good[0].clone()).unwrap();
+    assert_eq!(again.data(), &refs[0][..]);
+    engine.shutdown();
+}
