@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""Gate persisted bench results against committed headline baselines.
+
+Every `cargo bench --bench fig_*` invocation that measures a headline
+number persists a machine-readable `BENCH_E<N>.json` into the working
+directory (see `rust/src/bench/mod.rs::persist`). This script compares
+those artifacts against `python/bench_baselines.json` and fails (exit 1)
+if any headline metric regresses by more than the allowed tolerance
+(default 20%) — the CI bench matrix runs it after each experiment.
+
+Baselines are deliberately *dimensionless* (speedups and ratios, never
+raw microseconds): absolute latencies swing wildly across runner
+hardware, but "int8 beats f32" and "autoscale beats static x1" are
+machine-shape claims that should hold anywhere the experiment's core
+gate passes. Baseline values are conservative floors, not best observed
+results.
+
+Usage:
+    python3 python/bench_check.py                 # scan CWD for BENCH_*.json
+    python3 python/bench_check.py BENCH_E17.json  # check specific artifacts
+    python3 python/bench_check.py --update        # rewrite baselines from artifacts
+
+Semantics:
+  - an artifact with no baseline entry is reported and skipped (new
+    experiments land before their first committed baseline);
+  - a baseline entry with no artifact present is skipped silently (the
+    CI matrix runs one bench per job, so each job sees only its own
+    artifact);
+  - a metric path that no longer resolves inside the artifact is a hard
+    failure (schema drift must update the baseline, not dodge it).
+
+The only metric-path syntax needed by the current experiments:
+  dotted field access (`large_conv.f32_speedup`), integer array index
+  (`sweep[3]`, negatives allowed), and `[max]` / `[min]` reductions over
+  an array of objects (`sweep[max].speedup_vs_depth1` = best entry).
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_baselines.json")
+DEFAULT_TOLERANCE = 0.20
+
+_TOKEN = re.compile(r"([A-Za-z0-9_]+)((?:\[(?:-?\d+|max|min)\])*)")
+
+
+def resolve(doc, path):
+    """Resolve a metric path against a parsed artifact.
+
+    Returns the numeric value, or raises KeyError with a readable
+    message naming the segment that failed.
+    """
+    value = value_at(doc, path.split("."), path)
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        raise KeyError("path `%s` resolved to non-numeric %r" % (path, value))
+    return float(value)
+
+
+def value_at(value, segments, full_path):
+    if not segments:
+        return value
+    seg, rest = segments[0], segments[1:]
+    m = _TOKEN.fullmatch(seg)
+    if not m:
+        raise KeyError("malformed path segment `%s` in `%s`" % (seg, full_path))
+    name, indexes = m.group(1), re.findall(r"\[(-?\d+|max|min)\]", m.group(2))
+    if not isinstance(value, dict) or name not in value:
+        raise KeyError("missing field `%s` in `%s`" % (name, full_path))
+    value = value[name]
+    for idx in indexes:
+        if not isinstance(value, list) or not value:
+            raise KeyError("`%s` is not a non-empty array in `%s`" % (name, full_path))
+        if idx in ("max", "min"):
+            # Reduce over the remaining path applied to each element.
+            candidates = [value_at(elem, rest, full_path) for elem in value]
+            numeric = [c for c in candidates if isinstance(c, (int, float)) and not isinstance(c, bool)]
+            if not numeric:
+                raise KeyError("`[%s]` found no numeric values for `%s`" % (idx, full_path))
+            return max(numeric) if idx == "max" else min(numeric)
+        value = value[int(idx)]
+    return value_at(value, rest, full_path)
+
+
+def check_artifact(path, baselines, tolerance):
+    """Returns (experiment_id, failures, notes, measured) for one artifact."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    exp = doc.get("experiment")
+    failures, notes, measured = [], [], {}
+    if not exp:
+        return None, ["%s: artifact has no `experiment` field" % path], notes, measured
+    entry = baselines.get(exp)
+    if entry is None:
+        notes.append("%s (%s): no committed baseline — skipping (add one via --update)" % (exp, path))
+        return exp, failures, notes, measured
+    for metric in entry.get("metrics", []):
+        mpath, base = metric["path"], float(metric["baseline"])
+        direction = metric.get("direction", "higher")
+        try:
+            value = resolve(doc, mpath)
+        except KeyError as e:
+            failures.append("%s %s: %s (schema drift? update the baseline)" % (exp, mpath, e.args[0]))
+            continue
+        measured[mpath] = value
+        if direction == "higher":
+            floor = base * (1.0 - tolerance)
+            ok, bound = value >= floor, ">= %.4g" % floor
+        else:
+            ceil = base * (1.0 + tolerance)
+            ok, bound = value <= ceil, "<= %.4g" % ceil
+        verdict = "ok" if ok else "REGRESSED"
+        line = "%s %s = %.4g (baseline %.4g, need %s) %s" % (exp, mpath, value, base, bound, verdict)
+        if ok:
+            notes.append(line)
+        else:
+            failures.append(line)
+    return exp, failures, notes, measured
+
+
+def update_baselines(artifacts, baselines, baselines_path, tolerance):
+    """Refresh each committed baseline metric from the measured artifacts.
+
+    Only overwrites values for experiments whose artifact is present;
+    paths that fail to resolve keep their old value and are reported.
+    """
+    touched = 0
+    for path in artifacts:
+        with open(path) as fh:
+            doc = json.load(fh)
+        exp = doc.get("experiment")
+        entry = baselines.get(exp)
+        if not exp or entry is None:
+            print("update: %s has no baseline entry; add it to %s by hand first" % (path, baselines_path))
+            continue
+        for metric in entry.get("metrics", []):
+            try:
+                value = resolve(doc, metric["path"])
+            except KeyError as e:
+                print("update: keeping %s %s (%s)" % (exp, metric["path"], e.args[0]))
+                continue
+            metric["baseline"] = round(value, 6)
+            touched += 1
+    with open(baselines_path, "w") as fh:
+        json.dump(baselines, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print("update: wrote %d metric value(s) to %s (tolerance stays %.0f%%)" % (touched, baselines_path, tolerance * 100))
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="*", help="BENCH_*.json files (default: glob the CWD)")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES, help="committed baseline file")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE, help="allowed relative regression (default 0.20)")
+    ap.add_argument("--update", action="store_true", help="rewrite baselines from the artifacts instead of checking")
+    args = ap.parse_args(argv)
+
+    artifacts = args.artifacts or sorted(glob.glob("BENCH_*.json"))
+    if not artifacts:
+        print("bench-check: no BENCH_*.json artifacts found in %s — nothing to gate" % os.getcwd())
+        return 0
+    with open(args.baselines) as fh:
+        baselines = json.load(fh)
+
+    if args.update:
+        update_baselines(artifacts, baselines, args.baselines, args.tolerance)
+        return 0
+
+    all_failures = []
+    for path in artifacts:
+        exp, failures, notes, _ = check_artifact(path, baselines, args.tolerance)
+        for n in notes:
+            print("bench-check: %s" % n)
+        for f in failures:
+            print("bench-check: %s" % f)
+        all_failures.extend(failures)
+    if all_failures:
+        print("bench-check: FAILED — %d headline metric(s) regressed past %.0f%%" % (len(all_failures), args.tolerance * 100))
+        return 1
+    print("bench-check: all headline metrics within %.0f%% of committed baselines" % (args.tolerance * 100))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

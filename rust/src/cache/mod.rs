@@ -342,6 +342,92 @@ impl ModelCache {
         Ok(Access { hit: false, load_time, evicted, shrunk, shard, replica_shards })
     }
 
+    /// Grow a resident model's replica set by one (autoscale's scale-up
+    /// path), reusing the pool's placement pick and this cache's byte
+    /// accounting: the landing shard is evicted/shrunk until its budget
+    /// accommodates the new copy, exactly as a fresh [`ensure`] would.
+    /// If nothing else on the landing shard can be freed, the grown
+    /// replica is rolled back and the error names the budget. Returns
+    /// the replica count after the grow.
+    ///
+    /// [`ensure`]: ModelCache::ensure
+    pub fn grow_replica(&mut self, id: &str) -> crate::Result<usize> {
+        anyhow::ensure!(
+            self.resident.contains_key(id),
+            "model `{id}` is not resident; use `ensure` for first loads"
+        );
+        let dir = self
+            .catalog
+            .get(id)
+            .map(|e| e.dir.clone())
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not in the cache catalog"))?;
+        let before: Vec<usize> =
+            self.resident.get(id).map(|r| r.shards()).unwrap_or_default();
+        self.pool.grow_replica(&dir)?;
+        let assignments = self.pool.replica_assignments(id);
+        let new = assignments
+            .iter()
+            .find(|a| !before.contains(&a.shard))
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("pool grow of `{id}` reported no new shard"))?;
+
+        // Rebalance the landing shard exactly like `ensure` does for a
+        // fresh load: the new copy is not yet in `self.resident`, so
+        // `resident_bytes_on` counts only the pre-existing tenants.
+        let mut evicted = Vec::new();
+        let mut shrunk = Vec::new();
+        while self.resident_bytes_on(new.shard) + new.bytes > self.budget_bytes {
+            if !self.evict_step(new.shard, id, &mut evicted, &mut shrunk)? {
+                // Nothing left to free but the grown model itself: undo
+                // the grow so the shard is not left over budget.
+                self.pool.unload_replica(id, new.shard)?;
+                self.pool.forget_affinity_on(id, new.shard);
+                anyhow::bail!(
+                    "cannot grow `{id}` onto shard {}: replica ({} B) exceeds the \
+                     per-shard cache budget ({} B)",
+                    new.shard,
+                    new.bytes,
+                    self.budget_bytes
+                );
+            }
+        }
+        let count = {
+            let entry = self.resident.get_mut(id).expect("checked resident above");
+            entry.replicas = self.pool.replica_assignments(id);
+            entry.replicas.len()
+        };
+        self.policy.touch(id);
+        self.refresh_resident_bytes();
+        Ok(count)
+    }
+
+    /// Drop a resident model's replica on `shard` (autoscale's
+    /// scale-down path), reusing the capacity-eviction shrink idiom:
+    /// the pool copy is unloaded, the shard's sticky affinity forgotten
+    /// so a later re-grow places fresh, and the freed bytes leave this
+    /// cache's accounting immediately. Refuses to drop the last replica
+    /// — that is an eviction decision, not a scale-down. Returns the
+    /// replica count after the shrink.
+    pub fn shrink_replica(&mut self, id: &str, shard: usize) -> crate::Result<usize> {
+        let entry = self
+            .resident
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not resident"))?;
+        anyhow::ensure!(entry.on(shard), "model `{id}` has no replica on shard {shard}");
+        anyhow::ensure!(
+            entry.replicas.len() > 1,
+            "refusing to shrink `{id}`'s last replica (shard {shard}); unload instead"
+        );
+        self.pool.unload_replica(id, shard)?;
+        self.pool.forget_affinity_on(id, shard);
+        if let Some(r) = self.resident.get_mut(id) {
+            r.replicas.retain(|a| a.shard != shard);
+        }
+        self.stats.shrinks += 1;
+        self.refresh_resident_bytes();
+        Ok(self.resident.get(id).map(|r| r.replicas.len()).unwrap_or(0))
+    }
+
     /// Run inference through the cache (ensures residency first; the
     /// request routes to one replica of the model's owner set with
     /// admission control).
@@ -436,6 +522,21 @@ impl ModelCache {
         }
         self.refresh_resident_bytes();
         Ok((report, evicted))
+    }
+}
+
+/// Lets the autoscale controller actuate replica changes *through* the
+/// cache, so scale-ups honor per-shard byte budgets (evicting colder
+/// tenants off the landing shard when needed) and scale-downs release
+/// their bytes from the cache's accounting — budgets stay exact while
+/// the controller churns.
+impl crate::runtime::ReplicaActuator for std::sync::Arc<std::sync::Mutex<ModelCache>> {
+    fn grow(&self, model: &str) -> crate::Result<usize> {
+        self.lock().unwrap().grow_replica(model)
+    }
+
+    fn shrink(&self, model: &str, shard: usize) -> crate::Result<usize> {
+        self.lock().unwrap().shrink_replica(model, shard)
     }
 }
 
@@ -546,6 +647,77 @@ mod tests {
         // `hot` returns to shard 1, not the (now emptier) shard 0.
         pool.unload("hot").unwrap();
         assert_eq!(pool.placement_preview("hot"), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn grow_replica_evicts_the_landing_shards_cold_tenant() {
+        // Two shards, budget for one tiny model each. A hot model on
+        // shard 0 grows onto shard 1, which is full of a cold tenant:
+        // the grow must evict the tenant (budget stays exact), not fail
+        // and not overshoot the shard budget.
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 6_000, PolicyKind::Lru);
+        mc.register("hot", testutil::tiny_model_dir("cache-grow", "hot", 16, 1));
+        mc.register("cold", testutil::tiny_model_dir("cache-grow", "cold", 16, 2));
+        assert_eq!(mc.ensure("hot").unwrap().shard, 0);
+        assert_eq!(mc.ensure("cold").unwrap().shard, 1);
+
+        let count = mc.grow_replica("hot").unwrap();
+        assert_eq!(count, 2);
+        assert_eq!(mc.resident_replicas("hot"), vec![0, 1]);
+        assert_eq!(pool.replicas_of("hot"), vec![0, 1]);
+        assert!(!mc.is_resident("cold"), "cold tenant evicted off the landing shard");
+        assert_eq!(mc.stats().evictions, 1);
+        let bytes = mc.resident_info("hot").unwrap().weight_bytes;
+        assert_eq!(mc.resident_bytes_on(1), bytes, "landing shard holds exactly one copy");
+        assert_eq!(mc.stats().resident_bytes, 2 * bytes);
+
+        // Growing a model the cache never loaded is a typed refusal.
+        let e = mc.grow_replica("cold").unwrap_err().to_string();
+        assert!(e.contains("not resident"), "{e}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shrink_replica_releases_bytes_and_guards_the_last_copy() {
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+        mc.register_replicated("m", testutil::tiny_model_dir("cache-shrinkr", "m", 16, 1), 2);
+        mc.ensure("m").unwrap();
+        let bytes = mc.resident_info("m").unwrap().weight_bytes;
+        assert_eq!(mc.stats().resident_bytes, 2 * bytes);
+
+        let count = mc.shrink_replica("m", 0).unwrap();
+        assert_eq!(count, 1);
+        assert_eq!(mc.resident_replicas("m"), vec![1]);
+        assert_eq!(pool.replicas_of("m"), vec![1]);
+        assert_eq!(mc.stats().shrinks, 1);
+        assert_eq!(mc.stats().resident_bytes, bytes);
+
+        let e = mc.shrink_replica("m", 1).unwrap_err().to_string();
+        assert!(e.contains("last replica"), "{e}");
+        let e = mc.shrink_replica("m", 0).unwrap_err().to_string();
+        assert!(e.contains("no replica on shard 0"), "{e}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn actuator_impl_scales_through_the_cache() {
+        use crate::runtime::ReplicaActuator;
+        use std::sync::{Arc, Mutex};
+
+        let pool = cpu_pool(2);
+        let mut mc = ModelCache::over_pool(pool.clone(), 1_000_000, PolicyKind::Lru);
+        mc.register("m", testutil::tiny_model_dir("cache-actuate", "m", 16, 1));
+        mc.ensure("m").unwrap();
+        let cache = Arc::new(Mutex::new(mc));
+
+        assert_eq!(cache.grow("m").unwrap(), 2);
+        assert_eq!(cache.lock().unwrap().resident_replicas("m").len(), 2);
+        let victim = cache.lock().unwrap().resident_replicas("m")[1];
+        assert_eq!(cache.shrink("m", victim).unwrap(), 1);
+        assert_eq!(pool.replicas_of("m").len(), 1);
         pool.shutdown();
     }
 

@@ -20,12 +20,21 @@
 //! shard's pipeline window (`PoolHandle::infer_async`) and resolve on a
 //! per-model completion thread, so batch collection overlaps execution;
 //! a full window also surfaces as `Overloaded`.
+//!
+//! Admission is additionally **SLO-aware** when per-model [`Slo`]s are
+//! configured: near pool saturation, lower-priority traffic is shed
+//! (typed [`Shed`](crate::runtime::Shed), strictly
+//! lowest-priority-first — see [`should_shed`]), and a model with a
+//! deadline whose predicted latency (plan-cost forward estimate plus
+//! observed queue delay) would bust it is answered by a cheaper
+//! compatible ladder model instead, with the substitution recorded in
+//! [`RequestResult::degraded_from`].
 
 mod batcher;
 mod server;
 
 pub use batcher::{BatchMeta, Batcher, BatcherConfig, Pending, PreparedBatch};
-pub use server::{Coordinator, CoordinatorConfig, RequestResult};
+pub use server::{should_shed, Coordinator, CoordinatorConfig, RequestResult, Slo, Ticket};
 
 /// Nielsen's "feels instantaneous" bar the paper cites (§1.1).
 pub const NIELSEN_SLO_MICROS: u64 = 100_000;

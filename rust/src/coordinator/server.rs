@@ -18,8 +18,10 @@
 use super::batcher::{Batcher, BatcherConfig, Pending, PreparedBatch};
 use super::NIELSEN_SLO_MICROS;
 use crate::metrics::{Histogram, ServingStats};
-use crate::model::{Manifest, ModelFiles};
-use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle, PoolTicket, SwapReport};
+use crate::model::{Architecture, Manifest, ModelFiles};
+use crate::nn::CostModel;
+use crate::runtime::{EngineHandle, ModelInfo, Overloaded, PoolHandle, PoolTicket, Shed, SwapReport};
+use crate::selector::{Candidate, Context, MetaModel};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -32,6 +34,99 @@ pub struct CoordinatorConfig {
     /// Per-model dynamic-batching parameters (`queue_cap` doubles as the
     /// submit-time admission bound per model).
     pub batcher: BatcherConfig,
+}
+
+/// Per-model serving objective: a relative priority (feeds the shed
+/// policy) and an optional per-request deadline (feeds degraded-mode
+/// routing). Set via [`Coordinator::set_slo`] or the CLI's
+/// `--slo model=prio:deadline_ms` flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slo {
+    /// Relative importance; **higher sheds later**. Models default to 0.
+    pub priority: usize,
+    /// End-to-end latency deadline for one request. `None`: no deadline,
+    /// degraded-mode routing never engages for this model.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for Slo {
+    fn default() -> Slo {
+        Slo { priority: 0, deadline: None }
+    }
+}
+
+impl Slo {
+    /// Parse one CLI SLO spec: `model=prio` or `model=prio:deadline_ms`
+    /// (a 0 ms deadline means "no deadline").
+    pub fn parse_spec(spec: &str) -> crate::Result<(String, Slo)> {
+        let (model, rest) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad SLO spec `{spec}`: want model=prio[:deadline_ms]"))?;
+        let model = model.trim();
+        anyhow::ensure!(!model.is_empty(), "bad SLO spec `{spec}`: empty model id");
+        let (prio, deadline) = match rest.split_once(':') {
+            Some((p, d)) => (p, Some(d)),
+            None => (rest, None),
+        };
+        let priority = prio
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad SLO spec `{spec}`: priority `{prio}` not a number"))?;
+        let deadline = match deadline {
+            None => None,
+            Some(d) => {
+                let ms = d.trim().parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("bad SLO spec `{spec}`: deadline `{d}` not a number (ms)")
+                })?;
+                (ms > 0).then(|| Duration::from_millis(ms))
+            }
+        };
+        Ok((model.to_string(), Slo { priority, deadline }))
+    }
+}
+
+/// Pool admission saturation at which the lowest-priority traffic
+/// starts shedding; higher priorities shed at graduated thresholds
+/// between this and 1.0 (see [`should_shed`]).
+const SHED_START: f64 = 0.75;
+
+/// EWMA weight for each new queue-delay observation.
+const QUEUE_DELAY_ALPHA: f64 = 0.3;
+
+/// The pure SLO-shed policy: should a request for a model at `priority`
+/// be shed, given the distinct priorities of every served model and the
+/// pool's admission saturation (`inflight` of `capacity`)?
+///
+/// Shedding is **strictly lowest-priority-first**: the distinct served
+/// priorities are ranked ascending, the lowest rank sheds once
+/// saturation reaches [`SHED_START`], each higher rank sheds at a
+/// proportionally higher threshold, and the top rank never sheds. With
+/// uniform priorities (every model equal — the default) nothing sheds
+/// and admission behaves exactly as before this policy existed.
+pub fn should_shed(
+    priority: usize,
+    served_priorities: &[usize],
+    inflight: usize,
+    capacity: usize,
+) -> bool {
+    if capacity == 0 {
+        return false;
+    }
+    let mut ranks: Vec<usize> = served_priorities.to_vec();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let n = ranks.len();
+    if n <= 1 {
+        return false;
+    }
+    let Some(rank) = ranks.iter().position(|&p| p == priority) else {
+        return false;
+    };
+    if rank == n - 1 {
+        return false; // the top priority is never shed
+    }
+    let saturation = inflight as f64 / capacity as f64;
+    saturation >= SHED_START + (1.0 - SHED_START) * rank as f64 / (n - 1) as f64
 }
 
 /// The result of one request.
@@ -54,6 +149,13 @@ pub struct RequestResult {
     /// request's batch took its slot (1 = the batch had the shard's
     /// pipeline to itself).
     pub window: usize,
+    /// Model that actually served this request (differs from the
+    /// requested model when degraded-mode routing substituted a cheaper
+    /// ladder model).
+    pub model: String,
+    /// The originally requested model when this answer was served
+    /// degraded; `None` for a normal answer.
+    pub degraded_from: Option<String>,
 }
 
 /// One streamed batch in flight: the formed batch plus its pool ticket.
@@ -80,6 +182,15 @@ struct ModelWorker {
     /// on retire so in-flight work drains before the model is unloaded
     /// from its owner set.
     joins: Vec<std::thread::JoinHandle<()>>,
+    /// The served architecture (from the serve-time manifest), for the
+    /// degraded-mode compatibility check and plan-cost estimate.
+    arch: Option<Architecture>,
+    /// The model's serving objective ([`Coordinator::set_slo`]).
+    slo: Mutex<Slo>,
+    /// Cached batch-1 forward estimate (microseconds) from the plan cost
+    /// model; computed on first use, so only deadline-bearing models pay
+    /// for the cost model's one-time calibration.
+    est_forward_us: Mutex<Option<f64>>,
 }
 
 struct Shared {
@@ -87,8 +198,17 @@ struct Shared {
     batch_sizes: Mutex<Vec<usize>>,
     requests: AtomicU64,
     rejected: AtomicU64,
+    shed: AtomicU64,
+    degraded: AtomicU64,
     batches: AtomicU64,
     started: Instant,
+    /// Per-model EWMA of observed queue delay (end-to-end latency minus
+    /// the execute phase, microseconds): the measured term the
+    /// degraded-mode predictor adds to the plan-cost forward estimate.
+    queue_delay_us: Mutex<BTreeMap<String, f64>>,
+    /// Test hook: a forced (inflight, capacity) saturation signal for
+    /// the shed policy, in place of sampling the pool.
+    saturation_override: Mutex<Option<(usize, usize)>>,
 }
 
 /// Multi-model serving coordinator over an engine pool.
@@ -125,8 +245,12 @@ impl Coordinator {
                 batch_sizes: Mutex::new(Vec::new()),
                 requests: AtomicU64::new(0),
                 rejected: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                degraded: AtomicU64::new(0),
                 batches: AtomicU64::new(0),
                 started: Instant::now(),
+                queue_delay_us: Mutex::new(BTreeMap::new()),
+                saturation_override: Mutex::new(None),
             }),
         }
     }
@@ -135,8 +259,10 @@ impl Coordinator {
     /// replica count by the placement policy) and start one batcher
     /// worker per replica.
     pub fn serve_model(&mut self, dir: impl Into<std::path::PathBuf>) -> crate::Result<ModelInfo> {
+        let dir = dir.into();
+        let arch = Manifest::load(&ModelFiles::new(&dir).manifest()).map(|m| m.arch).ok();
         let info = self.pool.load(dir)?;
-        self.start_workers(info)
+        self.start_workers(info, arch)
     }
 
     /// Like [`Coordinator::serve_model`], but with an explicit per-model
@@ -146,13 +272,22 @@ impl Coordinator {
         dir: impl Into<std::path::PathBuf>,
         replicas: usize,
     ) -> crate::Result<ModelInfo> {
+        let dir = dir.into();
+        let arch = Manifest::load(&ModelFiles::new(&dir).manifest()).map(|m| m.arch).ok();
         let info = self.pool.load_replicated(dir, replicas)?;
-        self.start_workers(info)
+        self.start_workers(info, arch)
     }
 
     /// Spawn the loaded model's batcher workers (one per replica, all
     /// draining one shared submission queue) and register the worker set.
-    fn start_workers(&mut self, info: ModelInfo) -> crate::Result<ModelInfo> {
+    /// `arch` (the serve-time manifest architecture, when readable)
+    /// powers the SLO layer's plan-cost estimates and degraded-mode
+    /// compatibility checks.
+    fn start_workers(
+        &mut self,
+        info: ModelInfo,
+        arch: Option<Architecture>,
+    ) -> crate::Result<ModelInfo> {
         let id = info.id.clone();
 
         // Batch cap: don't exceed the largest AOT batch.
@@ -229,9 +364,34 @@ impl Coordinator {
 
         self.workers.insert(
             id,
-            ModelWorker { tx, info: Mutex::new(info.clone()), max_batch: cfg.max_batch, depth, joins },
+            ModelWorker {
+                tx,
+                info: Mutex::new(info.clone()),
+                max_batch: cfg.max_batch,
+                depth,
+                joins,
+                arch,
+                slo: Mutex::new(Slo::default()),
+                est_forward_us: Mutex::new(None),
+            },
         );
         Ok(info)
+    }
+
+    /// Set a served model's serving objective (priority + optional
+    /// deadline). Takes effect for the next submission.
+    pub fn set_slo(&self, id: &str, slo: Slo) -> crate::Result<()> {
+        let worker = self
+            .workers
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("model `{id}` is not being served"))?;
+        *worker.slo.lock().unwrap() = slo;
+        Ok(())
+    }
+
+    /// A served model's current serving objective.
+    pub fn slo(&self, id: &str) -> Option<Slo> {
+        self.workers.get(id).map(|w| *w.slo.lock().unwrap())
     }
 
     /// Hot-swap a served model to a new version directory while it keeps
@@ -324,10 +484,43 @@ impl Coordinator {
     /// ~(k+1)×`queue_cap` unserved requests across both stages — ~2× for
     /// an unreplicated model.)
     pub fn submit(&self, model_id: &str, input: Tensor) -> crate::Result<Ticket> {
-        let worker = self
+        let preferred = self
             .workers
             .get(model_id)
             .ok_or_else(|| anyhow::anyhow!("model `{model_id}` is not being served"))?;
+        let slo = *preferred.slo.lock().unwrap();
+        // SLO shed: when the pool's admission windows approach
+        // saturation, lower-priority traffic is turned away (typed
+        // [`Shed`]) before it can queue behind higher-priority work.
+        // Only engages when served models actually differ in priority,
+        // so an unconfigured deployment admits exactly as before.
+        let (inflight, capacity) = self.saturation_signal();
+        if should_shed(slo.priority, &self.served_priorities(), inflight, capacity) {
+            self.shared.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(Shed {
+                model: model_id.to_string(),
+                priority: slo.priority,
+                saturation_pct: if capacity == 0 { 0 } else { inflight * 100 / capacity },
+            }));
+        }
+        // Deadline-driven degraded mode: when the preferred model's
+        // predicted latency (plan-cost forward estimate + observed queue
+        // delay) busts its deadline, answer with a cheaper compatible
+        // ladder model the selector prices within the deadline.
+        let (serve_id, degraded_from) = match slo.deadline {
+            Some(deadline) => match self.pick_degraded(model_id, preferred, deadline) {
+                Some(sub) => {
+                    self.shared.degraded.fetch_add(1, Ordering::Relaxed);
+                    (sub, Some(model_id.to_string()))
+                }
+                None => (model_id.to_string(), None),
+            },
+            None => (model_id.to_string(), None),
+        };
+        let worker = self
+            .workers
+            .get(&serve_id)
+            .ok_or_else(|| anyhow::anyhow!("model `{serve_id}` is not being served"))?;
         // Atomic admission: increment first, back out on overflow, so
         // concurrent submitters can never admit past `queue_cap`.
         let prev = worker.depth.fetch_add(1, Ordering::AcqRel);
@@ -338,10 +531,10 @@ impl Coordinator {
             // snapshot may be stale after a replica shrink.
             let shard = self
                 .pool
-                .shard_of(model_id)
+                .shard_of(&serve_id)
                 .unwrap_or_else(|| worker.info.lock().unwrap().shard);
             return Err(anyhow::Error::new(Overloaded {
-                model: model_id.to_string(),
+                model: serve_id,
                 shard,
                 queue_cap: self.config.batcher.queue_cap,
             }));
@@ -350,10 +543,103 @@ impl Coordinator {
         let started = Instant::now();
         if worker.tx.send(Pending { input, enqueued: started, reply: reply_tx }).is_err() {
             worker.depth.fetch_sub(1, Ordering::AcqRel);
-            return Err(anyhow::anyhow!("batcher for `{model_id}` is gone"));
+            return Err(anyhow::anyhow!("batcher for `{serve_id}` is gone"));
         }
         self.shared.requests.fetch_add(1, Ordering::Relaxed);
-        Ok(Ticket { reply: reply_rx, started, shared: self.shared.clone() })
+        Ok(Ticket {
+            reply: reply_rx,
+            started,
+            shared: self.shared.clone(),
+            model: serve_id,
+            degraded_from,
+        })
+    }
+
+    /// The admission-saturation signal the shed policy keys on (the test
+    /// override when set, else the pool's live counters).
+    fn saturation_signal(&self) -> (usize, usize) {
+        if let Some(forced) = *self.shared.saturation_override.lock().unwrap() {
+            return forced;
+        }
+        self.pool.saturation()
+    }
+
+    /// Every served model's current priority (duplicates fine — the shed
+    /// policy ranks distinct values).
+    fn served_priorities(&self) -> Vec<usize> {
+        self.workers.values().map(|w| w.slo.lock().unwrap().priority).collect()
+    }
+
+    /// The model's batch-1 forward estimate (microseconds) from the
+    /// calibrated plan cost model, computed on first use and cached.
+    fn est_forward_us(&self, worker: &ModelWorker) -> Option<f64> {
+        let mut cached = worker.est_forward_us.lock().unwrap();
+        if cached.is_none() {
+            let arch = worker.arch.as_ref()?;
+            *cached = CostModel::global().estimate_forward_us(arch, 1).ok();
+        }
+        *cached
+    }
+
+    /// A model's observed queue-delay EWMA (microseconds; 0 until the
+    /// first completion — an idle deployment never predicts a miss).
+    fn queue_delay_us(&self, id: &str) -> f64 {
+        self.shared.queue_delay_us.lock().unwrap().get(id).copied().unwrap_or(0.0)
+    }
+
+    /// Degraded-mode pick for one submission: `Some(substitute)` when
+    /// the preferred model's predicted latency busts `deadline` AND a
+    /// strictly cheaper served model with the same input shape and class
+    /// count is predicted to meet it (the selector prices the ladder
+    /// with `deadline` as its latency budget). `None` otherwise —
+    /// degraded mode is best-effort, so a predicted miss without a
+    /// viable fallback still serves the preferred model.
+    fn pick_degraded(&self, id: &str, preferred: &ModelWorker, deadline: Duration) -> Option<String> {
+        let deadline_us = deadline.as_micros() as f64;
+        let preferred_est = self.est_forward_us(preferred)?;
+        if preferred_est + self.queue_delay_us(id) <= deadline_us {
+            return None;
+        }
+        let arch = preferred.arch.as_ref()?;
+        let classes = arch.num_classes().ok()?;
+        let mut candidates = Vec::new();
+        for (other_id, other) in &self.workers {
+            if other_id == id {
+                continue;
+            }
+            let Some(other_arch) = other.arch.as_ref() else { continue };
+            if other_arch.input != arch.input || other_arch.num_classes().ok() != Some(classes) {
+                continue;
+            }
+            let Some(est) = self.est_forward_us(other) else { continue };
+            if est >= preferred_est {
+                continue; // the ladder only steps down in cost
+            }
+            let predicted = est + self.queue_delay_us(other_id);
+            candidates.push(Candidate {
+                id: other_id.clone(),
+                location_affinity: BTreeMap::new(),
+                peak_hours: Vec::new(),
+                infer_latency: Duration::from_micros(predicted.round() as u64),
+                load_latency: Duration::ZERO,
+                resident: true,
+            });
+        }
+        let ctx = Context { latency_budget: deadline, ..Default::default() };
+        MetaModel::default().select(&ctx, &candidates).map(|r| r.id)
+    }
+
+    /// Test hook: force the (inflight, capacity) saturation signal the
+    /// shed policy sees, instead of sampling the pool.
+    #[doc(hidden)]
+    pub fn debug_force_saturation(&self, forced: Option<(usize, usize)>) {
+        *self.shared.saturation_override.lock().unwrap() = forced;
+    }
+
+    /// Test hook: seed a model's observed queue-delay EWMA directly.
+    #[doc(hidden)]
+    pub fn debug_set_queue_delay(&self, id: &str, us: f64) {
+        self.shared.queue_delay_us.lock().unwrap().insert(id.to_string(), us);
     }
 
     /// Serving statistics snapshot.
@@ -366,6 +652,8 @@ impl Coordinator {
             requests,
             batches: self.shared.batches.load(Ordering::Relaxed),
             rejected: self.shared.rejected.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+            degraded: self.shared.degraded.load(Ordering::Relaxed),
             p50_us: hist.quantile(0.5),
             p95_us: hist.quantile(0.95),
             p99_us: hist.quantile(0.99),
@@ -391,6 +679,11 @@ pub struct Ticket {
     reply: mpsc::Receiver<crate::Result<(Tensor, super::batcher::BatchMeta)>>,
     started: Instant,
     shared: Arc<Shared>,
+    /// Model actually serving this request (the degraded substitute when
+    /// one was picked).
+    model: String,
+    /// Originally requested model when served degraded.
+    degraded_from: Option<String>,
 }
 
 impl Ticket {
@@ -409,6 +702,16 @@ impl Ticket {
                     .unwrap()
                     .record(latency.as_micros() as u64);
                 self.shared.batch_sizes.lock().unwrap().push(meta.batch_size);
+                // Everything but the execute phase is queueing in the
+                // wide sense (submit queue, batch window, pipeline
+                // wait): feed the per-model EWMA the degraded-mode
+                // predictor adds to the plan-cost forward estimate.
+                let delay_us = (latency.as_micros() as u64).saturating_sub(meta.exec_micros);
+                {
+                    let mut delays = self.shared.queue_delay_us.lock().unwrap();
+                    let ewma = delays.entry(self.model.clone()).or_insert(0.0);
+                    *ewma = (1.0 - QUEUE_DELAY_ALPHA) * *ewma + QUEUE_DELAY_ALPHA * delay_us as f64;
+                }
                 let predicted = output.argmax();
                 Ok(RequestResult {
                     output,
@@ -418,6 +721,8 @@ impl Ticket {
                     shard: meta.shard,
                     replica: meta.replica,
                     window: meta.window,
+                    model: self.model,
+                    degraded_from: self.degraded_from,
                 })
             }
             Err(e) => {
@@ -538,5 +843,62 @@ fn completion_main(done: mpsc::Receiver<FlushJob>) {
     while let Ok(job) = done.recv() {
         let result = job.ticket.wait();
         Batcher::scatter(job.prepared, result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_spec_parses_both_forms() {
+        let (id, slo) = Slo::parse_spec("mnist=2:50").unwrap();
+        assert_eq!(id, "mnist");
+        assert_eq!(slo.priority, 2);
+        assert_eq!(slo.deadline, Some(Duration::from_millis(50)));
+        let (id, slo) = Slo::parse_spec("cifar=7").unwrap();
+        assert_eq!(id, "cifar");
+        assert_eq!((slo.priority, slo.deadline), (7, None));
+        let (_, slo) = Slo::parse_spec("m=1:0").unwrap();
+        assert_eq!(slo.deadline, None, "a zero deadline means no deadline");
+        for bad in ["mnist", "=1:2", "m=x", "m=1:y"] {
+            assert!(Slo::parse_spec(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn shed_policy_is_strictly_lowest_priority_first() {
+        let served = [0usize, 1, 2];
+        // Below the shed-start saturation nothing sheds.
+        for p in served {
+            assert!(!should_shed(p, &served, 74, 100));
+        }
+        // At shed-start the lowest priority sheds, the others hold.
+        assert!(should_shed(0, &served, 75, 100));
+        assert!(!should_shed(1, &served, 75, 100));
+        assert!(!should_shed(2, &served, 75, 100));
+        // Midway the middle priority sheds too; the top never does.
+        assert!(should_shed(0, &served, 88, 100));
+        assert!(should_shed(1, &served, 88, 100));
+        assert!(!should_shed(2, &served, 88, 100));
+        assert!(!should_shed(2, &served, 100, 100), "top priority never sheds");
+        // Shed thresholds are strictly ordered by priority: at every
+        // saturation level, if a priority sheds, all lower ones do too.
+        for inflight in 0..=100 {
+            let flags: Vec<bool> =
+                served.iter().map(|&p| should_shed(p, &served, inflight, 100)).collect();
+            for w in flags.windows(2) {
+                assert!(w[0] || !w[1], "higher priority shed while lower admitted");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_priorities_never_shed() {
+        for inflight in [0, 50, 100, 1000] {
+            assert!(!should_shed(0, &[0, 0, 0], inflight, 100));
+        }
+        assert!(!should_shed(0, &[], 100, 100), "no served models, nothing sheds");
+        assert!(!should_shed(0, &[0, 1], 100, 0), "zero capacity disables the policy");
     }
 }

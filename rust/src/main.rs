@@ -114,6 +114,15 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .flag("queue-cap", "admission-control queue bound (per shard and per model)", Some("1024"))
         .flag("window-depth", "per-shard pipeline window: batches overlapping in stage/execute/scatter (1 = serial)", Some("2"))
         .flag("intra-threads", "intra-op worker lanes per shard (0 = auto: DLK_INTRA_THREADS, else cores/shards; never oversubscribes)", Some("0"))
+        .flag("slo", "comma-separated per-model SLOs, each model=prio[:deadline_ms]; higher priority sheds last, a deadline enables degraded fallback to a cheaper ladder model", None)
+        .switch("autoscale", "run the replica autoscale controller while serving (grows/shrinks each model's replica set between --autoscale-min/max)")
+        .flag("autoscale-min", "autoscale floor: minimum replicas per model", Some("1"))
+        .flag("autoscale-max", "autoscale ceiling: maximum replicas per model (0 = shard count)", Some("0"))
+        .flag("autoscale-tick-ms", "controller sampling period (ms)", Some("50"))
+        .flag("autoscale-high-water", "per-replica outstanding or owner queue depth marking a model hot", Some("4"))
+        .flag("autoscale-up-ticks", "consecutive hot ticks before a scale-up", Some("3"))
+        .flag("autoscale-idle-ticks", "consecutive idle ticks before a scale-down", Some("10"))
+        .flag("autoscale-cooldown", "refractory ticks after any scaling action (hysteresis)", Some("5"))
         .flag("conv-strategy", "conv strategy for compiled plans: auto, direct, im2col or fft", Some("auto"))
         .flag("precision", "weight-residency precision for compiled plans: f32, f16, int8 (full-integer), int8-weights or auto", Some("f32"))
         .flag("registry", "pull served models from this registry instead of artifacts/", None)
@@ -180,6 +189,10 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let pull_root = std::env::temp_dir().join(format!("dlk-serve-pull-{}", std::process::id()));
     let mut served_versions: std::collections::BTreeMap<String, u32> =
         std::collections::BTreeMap::new();
+    // Source directory per served model — the autoscale controller loads
+    // grown replicas from the same place the original serve did.
+    let mut served_dirs: std::collections::BTreeMap<String, std::path::PathBuf> =
+        std::collections::BTreeMap::new();
     for id in &model_ids {
         let dir = match &registry_path {
             Some(reg_path) => {
@@ -198,7 +211,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             }
             None => model_dir(id),
         };
-        let info = coord.serve_model(dir)?;
+        let info = coord.serve_model(dir.clone())?;
         println!(
             "serving `{}` v{} on shard(s) {:?} ({} classes, AOT batches {:?}, {} plans, \
              {} KB weights, load {:.1} ms)",
@@ -211,9 +224,63 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             info.weight_bytes / 1024,
             info.load_micros as f64 / 1000.0
         );
+        served_dirs.insert(info.id, dir);
+    }
+
+    // Per-model SLOs: shed-lowest-priority-first near saturation, and
+    // deadline-driven degraded fallback to a cheaper compatible model.
+    if let Some(spec) = a.get("slo") {
+        let spec = spec.to_string();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (id, slo) = coordinator::Slo::parse_spec(part)?;
+            coord.set_slo(&id, slo)?;
+            match slo.deadline {
+                Some(d) => println!(
+                    "slo: `{id}` priority {}, deadline {} ms (degraded fallback armed)",
+                    slo.priority,
+                    d.as_millis()
+                ),
+                None => println!("slo: `{id}` priority {} (no deadline)", slo.priority),
+            }
+        }
     }
 
     let coord = std::sync::Arc::new(coord);
+
+    // The autoscale controller closes the loop: it samples pool
+    // utilization every tick and grows/shrinks each model's replica set
+    // between the configured bounds, reusing the pool's placement.
+    let autoscaler = if a.has("autoscale") {
+        let scaler = runtime::PoolScaler::new(pool.clone());
+        for (id, dir) in &served_dirs {
+            scaler.register(id, dir.clone());
+        }
+        let max = a.get_usize("autoscale-max", 0)?;
+        let autoscale_config = runtime::AutoscaleConfig {
+            tick: Duration::from_millis(a.get_usize("autoscale-tick-ms", 50)? as u64),
+            high_water: a.get_usize("autoscale-high-water", 4)?,
+            up_ticks: a.get_usize("autoscale-up-ticks", 3)?.max(1),
+            idle_ticks: a.get_usize("autoscale-idle-ticks", 10)?.max(1),
+            cooldown_ticks: a.get_usize("autoscale-cooldown", 5)?,
+            min_replicas: a.get_usize("autoscale-min", 1)?.max(1),
+            max_replicas: if max == 0 { pool.shard_count() } else { max },
+            ..Default::default()
+        };
+        println!(
+            "autoscale: tick {} ms, high water {}, {} up / {} idle tick(s), cooldown {}, \
+             {}..={} replica(s) per model",
+            autoscale_config.tick.as_millis(),
+            autoscale_config.high_water,
+            autoscale_config.up_ticks,
+            autoscale_config.idle_ticks,
+            autoscale_config.cooldown_ticks,
+            autoscale_config.min_replicas,
+            autoscale_config.max_replicas
+        );
+        Some(runtime::Autoscaler::start(pool.clone(), scaler, autoscale_config))
+    } else {
+        None
+    };
 
     // Auto-update: poll the registry while the workload runs; a newer
     // published version is pulled, verified and hot-swapped into the
@@ -274,6 +341,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let correct = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let done = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let overloaded = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let shed = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let degraded = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let per_thread = (requests / concurrency).max(1);
     std::thread::scope(|scope| {
         for t in 0..concurrency {
@@ -281,6 +350,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             let correct = correct.clone();
             let done = done.clone();
             let overloaded = overloaded.clone();
+            let shed = shed.clone();
+            let degraded = degraded.clone();
             // Client threads round-robin over the served models.
             let model_id = model_ids[t % model_ids.len()].clone();
             scope.spawn(move || {
@@ -294,10 +365,16 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
                     .unwrap();
                     match coord.infer(&model_id, input) {
                         Ok(r) => {
+                            if r.degraded_from.is_some() {
+                                degraded.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
                             if r.predicted == batch.labels[i] {
                                 correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                             }
                             done.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        Err(e) if e.is::<runtime::Shed>() => {
+                            shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                         Err(e) if e.is::<runtime::Overloaded>() => {
                             overloaded.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -312,6 +389,15 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     stop_updates.store(true, std::sync::atomic::Ordering::Relaxed);
     if let Some(updater) = updater {
         let _ = updater.join();
+    }
+    if let Some(handle) = autoscaler {
+        let decisions = handle.decisions();
+        let controller = handle.stats();
+        handle.stop();
+        for d in &decisions {
+            println!("[autoscale] {d}");
+        }
+        println!("{}", controller.summary());
     }
 
     let stats = coord.stats();
@@ -330,6 +416,14 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let over_n = overloaded.load(std::sync::atomic::Ordering::Relaxed);
     if over_n > 0 {
         println!("overloaded rejections: {over_n} (typed backpressure; retry with backoff)");
+    }
+    let shed_n = shed.load(std::sync::atomic::Ordering::Relaxed);
+    if shed_n > 0 {
+        println!("shed rejections: {shed_n} (SLO policy: lower-priority traffic near saturation)");
+    }
+    let degraded_n = degraded.load(std::sync::atomic::Ordering::Relaxed);
+    if degraded_n > 0 {
+        println!("degraded answers: {degraded_n} (cheaper ladder model substituted to hold the deadline)");
     }
     let done_n = done.load(std::sync::atomic::Ordering::Relaxed);
     let correct_n = correct.load(std::sync::atomic::Ordering::Relaxed);

@@ -37,6 +37,36 @@ impl Counter {
     }
 }
 
+/// Outcome counters for the replica autoscale controller
+/// (`runtime::Autoscaler`): every tick sampled and every decision's
+/// fate, so an operator can see at a glance whether the loop is acting
+/// or thrashing.
+#[derive(Debug, Default)]
+pub struct ControllerStats {
+    /// Utilization snapshots consumed.
+    pub ticks: Counter,
+    /// Grow decisions applied successfully.
+    pub scale_ups: Counter,
+    /// Shrink decisions applied successfully.
+    pub scale_downs: Counter,
+    /// Decisions whose actuation failed (the replica set was left at
+    /// its prior count).
+    pub actuation_errors: Counter,
+}
+
+impl ControllerStats {
+    /// One-line summary for logs and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "autoscale: ticks={} scale_ups={} scale_downs={} actuation_errors={}",
+            self.ticks.get(),
+            self.scale_ups.get(),
+            self.scale_downs.get(),
+            self.actuation_errors.get()
+        )
+    }
+}
+
 /// Snapshot of serving statistics, assembled by the coordinator.
 #[derive(Clone, Debug, Default)]
 pub struct ServingStats {
@@ -46,6 +76,13 @@ pub struct ServingStats {
     pub batches: u64,
     /// Requests rejected (admission control / backpressure).
     pub rejected: u64,
+    /// Requests shed by SLO-aware admission (lower-priority traffic
+    /// turned away while the pool was saturated) — disjoint from
+    /// `rejected`, which counts queue-capacity bounces.
+    pub shed: u64,
+    /// Requests answered by a cheaper ladder model because the
+    /// preferred model could not meet its deadline.
+    pub degraded: u64,
     /// End-to-end latency percentiles (microseconds).
     pub p50_us: u64,
     pub p95_us: u64,
@@ -268,11 +305,13 @@ impl DeliveryTiming {
 impl ServingStats {
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} rejected={} p50={:.2}ms p95={:.2}ms p99={:.2}ms \
-             mean_batch={:.2} throughput={:.1} req/s slo(100ms)={:.1}%",
+            "requests={} batches={} rejected={} shed={} degraded={} p50={:.2}ms p95={:.2}ms \
+             p99={:.2}ms mean_batch={:.2} throughput={:.1} req/s slo(100ms)={:.1}%",
             self.requests,
             self.batches,
             self.rejected,
+            self.shed,
+            self.degraded,
             self.p50_us as f64 / 1000.0,
             self.p95_us as f64 / 1000.0,
             self.p99_us as f64 / 1000.0,
@@ -312,6 +351,16 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn controller_stats_summary_formats() {
+        let s = ControllerStats::default();
+        s.ticks.add(12);
+        s.scale_ups.inc();
+        let text = s.summary();
+        assert!(text.contains("ticks=12") && text.contains("scale_ups=1"), "{text}");
+        assert!(text.contains("actuation_errors=0"), "{text}");
     }
 
     #[test]

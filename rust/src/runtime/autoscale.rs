@@ -1,0 +1,550 @@
+//! Closed-loop replica autoscaling: a controller that samples
+//! [`PoolUtilization`] and grows or shrinks each model's replica set
+//! between configurable bounds.
+//!
+//! The loop is split in three so every piece is testable on its own:
+//!
+//! * [`AutoscalePolicy`] — a **pure, deterministic state machine**. One
+//!   [`AutoscalePolicy::tick`] consumes one utilization snapshot and
+//!   returns the scaling [`Decision`]s it implies. No clocks, no
+//!   threads, no pool: tests drive it with synthetic snapshots and an
+//!   injected tick count.
+//! * [`ReplicaActuator`] — the mechanism the decisions are applied
+//!   through. [`PoolScaler`] actuates a bare [`PoolHandle`] (grow via
+//!   [`PoolHandle::grow_replica`], shrink via
+//!   [`PoolHandle::unload_replica`] + per-shard affinity forget); the
+//!   cache layer provides its own actuator so byte budgets stay exact
+//!   when the controller shrinks a cached model.
+//! * [`Autoscaler`] — the sampling thread (`dlk-autoscale`) that wires
+//!   the two together on a wall-clock tick, logs every decision with a
+//!   human-readable reason (per-replica observability in the spirit of
+//!   Guo et al., arXiv:1811.05187), and counts outcomes in
+//!   [`ControllerStats`].
+//!
+//! Signals and hysteresis (DESIGN.md §4): a model is **hot** on a tick
+//! when any replica's outstanding count, or any owner shard's admission
+//! queue depth, exceeds `high_water`; it is **idle** when the summed
+//! outstanding work across its replicas is at or below `low_water`.
+//! Scale-up needs `up_ticks` *consecutive* hot ticks, scale-down needs
+//! `idle_ticks` consecutive idle ticks, and every action starts a
+//! `cooldown_ticks` refractory window during which the model is not
+//! acted on again — so a burst can't thrash the cache with
+//! grow/shrink/grow churn.
+
+use super::pool::PoolHandle;
+use crate::metrics::{ControllerStats, PoolUtilization};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Controller tuning. Tick counts (not wall durations) parameterize the
+/// hysteresis so the policy stays pure; only the sampling thread owns
+/// the wall clock.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Wall-clock sampling period of the controller thread.
+    pub tick: Duration,
+    /// A replica outstanding count or owner-shard queue depth above
+    /// this marks the model hot on that tick.
+    pub high_water: usize,
+    /// Summed outstanding work at or below this marks the model idle.
+    pub low_water: usize,
+    /// Consecutive hot ticks required before a scale-up.
+    pub up_ticks: usize,
+    /// Consecutive idle ticks required before a scale-down.
+    pub idle_ticks: usize,
+    /// Refractory ticks after any action on a model (hysteresis).
+    pub cooldown_ticks: usize,
+    /// Floor: scale-down never goes below this many replicas.
+    pub min_replicas: usize,
+    /// Ceiling: scale-up never goes above this many replicas (always
+    /// additionally clamped to the pool's shard count — replicas of one
+    /// model never share a shard).
+    pub max_replicas: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            tick: Duration::from_millis(100),
+            high_water: 4,
+            low_water: 0,
+            up_ticks: 3,
+            idle_ticks: 10,
+            cooldown_ticks: 5,
+            min_replicas: 1,
+            max_replicas: usize::MAX,
+        }
+    }
+}
+
+/// What a [`Decision`] does to the model's replica set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Add one replica.
+    Grow,
+    /// Remove the replica on [`Decision::shard`].
+    Shrink,
+}
+
+/// One scaling decision, with the evidence that produced it. The
+/// controller logs these verbatim so an operator can answer *why* a
+/// replica appeared or vanished without correlating raw counters.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Model whose replica set is changed.
+    pub model: String,
+    /// Grow or shrink.
+    pub action: ScaleAction,
+    /// Shrink victim shard (`None` for grows — placement picks the
+    /// target).
+    pub shard: Option<usize>,
+    /// Replica count the decision was made against.
+    pub before: usize,
+    /// Intended replica count after actuation.
+    pub after: usize,
+    /// Human-readable evidence: which signal tripped, for how many
+    /// ticks, against which watermark.
+    pub reason: String,
+}
+
+impl std::fmt::Display for Decision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let verb = match self.action {
+            ScaleAction::Grow => "grow",
+            ScaleAction::Shrink => "shrink",
+        };
+        write!(
+            f,
+            "{verb} `{}` {} -> {} replica(s): {}",
+            self.model, self.before, self.after, self.reason
+        )
+    }
+}
+
+/// Per-model hysteresis state.
+#[derive(Clone, Copy, Debug, Default)]
+struct ModelState {
+    hot_streak: usize,
+    idle_streak: usize,
+    cooldown: usize,
+}
+
+/// The pure controller: consumes utilization snapshots, emits
+/// [`Decision`]s. Deterministic — identical snapshot sequences produce
+/// identical decision sequences.
+pub struct AutoscalePolicy {
+    config: AutoscaleConfig,
+    states: BTreeMap<String, ModelState>,
+}
+
+impl AutoscalePolicy {
+    /// A fresh policy with no per-model history.
+    pub fn new(config: AutoscaleConfig) -> AutoscalePolicy {
+        AutoscalePolicy { config, states: BTreeMap::new() }
+    }
+
+    /// The tuning this policy runs with.
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.config
+    }
+
+    /// Consume one snapshot; return the decisions it implies. Models are
+    /// visited in sorted-id order so the decision order is deterministic
+    /// too.
+    pub fn tick(&mut self, util: &PoolUtilization) -> Vec<Decision> {
+        let cfg = self.config;
+        let max_replicas = cfg.max_replicas.min(util.shard_count().max(1));
+        // Group the snapshot's replica rows by model (rows are taken in
+        // one pass with the queue depths, see `PoolHandle::utilization`,
+        // so a model's rows are a consistent owner set).
+        let mut by_model: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+        for row in &util.replicas {
+            by_model.entry(row.model.as_str()).or_default().push((row.shard, row.outstanding));
+        }
+        // Forget models that left the pool so a reload starts cold.
+        self.states.retain(|id, _| by_model.contains_key(id.as_str()));
+
+        let mut decisions = Vec::new();
+        for (model, rows) in &by_model {
+            let replicas = rows.len();
+            let state = self.states.entry((*model).to_string()).or_default();
+            let max_outstanding = rows.iter().map(|&(_, o)| o).max().unwrap_or(0);
+            let total_outstanding: usize = rows.iter().map(|&(_, o)| o).sum();
+            let max_queue = rows
+                .iter()
+                .map(|&(s, _)| util.queue_depth.get(s).copied().unwrap_or(0))
+                .max()
+                .unwrap_or(0);
+            let hot = max_outstanding > cfg.high_water || max_queue > cfg.high_water;
+            let idle = !hot && total_outstanding <= cfg.low_water;
+            if hot {
+                state.hot_streak += 1;
+                state.idle_streak = 0;
+            } else if idle {
+                state.idle_streak += 1;
+                state.hot_streak = 0;
+            } else {
+                state.hot_streak = 0;
+                state.idle_streak = 0;
+            }
+            if state.cooldown > 0 {
+                state.cooldown -= 1;
+                continue;
+            }
+            if state.hot_streak >= cfg.up_ticks && replicas < max_replicas {
+                decisions.push(Decision {
+                    model: (*model).to_string(),
+                    action: ScaleAction::Grow,
+                    shard: None,
+                    before: replicas,
+                    after: replicas + 1,
+                    reason: format!(
+                        "hot for {} tick(s): max outstanding {max_outstanding}, max owner \
+                         queue depth {max_queue}, high water {}",
+                        state.hot_streak, cfg.high_water
+                    ),
+                });
+                state.hot_streak = 0;
+                state.cooldown = cfg.cooldown_ticks;
+            } else if state.idle_streak >= cfg.idle_ticks && replicas > cfg.min_replicas.max(1) {
+                // Victim: the replica with the least outstanding work;
+                // ties break toward the highest shard id so the primary
+                // (lowest shard) is shed last.
+                let victim = rows
+                    .iter()
+                    .min_by_key(|&&(shard, outstanding)| (outstanding, usize::MAX - shard))
+                    .map(|&(shard, _)| shard)
+                    .expect("a resident model has at least one replica row");
+                decisions.push(Decision {
+                    model: (*model).to_string(),
+                    action: ScaleAction::Shrink,
+                    shard: Some(victim),
+                    before: replicas,
+                    after: replicas - 1,
+                    reason: format!(
+                        "idle for {} tick(s): total outstanding {total_outstanding} at or \
+                         below low water {}",
+                        state.idle_streak, cfg.low_water
+                    ),
+                });
+                state.idle_streak = 0;
+                state.cooldown = cfg.cooldown_ticks;
+            }
+        }
+        decisions
+    }
+}
+
+/// The mechanism scaling decisions are applied through. Both methods
+/// return the model's replica count after the action so the caller can
+/// log intended-vs-actual.
+pub trait ReplicaActuator: Send {
+    /// Add one replica of `model`; returns the new replica count.
+    fn grow(&self, model: &str) -> crate::Result<usize>;
+    /// Remove the replica of `model` on `shard`; returns the remaining
+    /// replica count.
+    fn shrink(&self, model: &str, shard: usize) -> crate::Result<usize>;
+}
+
+/// Actuator over a bare [`PoolHandle`]: grows reuse
+/// [`PoolHandle::grow_replica`] (placement's least-loaded-bytes pick),
+/// shrinks reuse the unload-replica path and drop the victim shard's
+/// sticky affinity so a later re-grow places fresh. Models must be
+/// registered with their source directory before the controller can
+/// grow them.
+pub struct PoolScaler {
+    pool: PoolHandle,
+    catalog: Mutex<BTreeMap<String, PathBuf>>,
+}
+
+impl PoolScaler {
+    /// An actuator over `pool` with an empty model catalog.
+    pub fn new(pool: PoolHandle) -> PoolScaler {
+        PoolScaler { pool, catalog: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Register the source directory a grow of `id` loads from.
+    pub fn register(&self, id: &str, dir: impl Into<PathBuf>) {
+        self.catalog.lock().unwrap().insert(id.to_string(), dir.into());
+    }
+}
+
+impl ReplicaActuator for PoolScaler {
+    fn grow(&self, model: &str) -> crate::Result<usize> {
+        let dir = self
+            .catalog
+            .lock()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no source directory registered for `{model}`"))?;
+        self.pool.grow_replica(dir)
+    }
+
+    fn shrink(&self, model: &str, shard: usize) -> crate::Result<usize> {
+        let remaining = self.pool.unload_replica(model, shard)?;
+        self.pool.forget_affinity_on(model, shard);
+        Ok(remaining)
+    }
+}
+
+/// The controller thread. [`Autoscaler::start`] spawns it;
+/// [`AutoscaleHandle::stop`] (or drop) joins it.
+pub struct Autoscaler;
+
+impl Autoscaler {
+    /// Start the `dlk-autoscale` sampling thread: every `config.tick`
+    /// it snapshots `pool.utilization()`, runs the pure policy, and
+    /// applies each decision through `actuator`.
+    pub fn start<A: ReplicaActuator + 'static>(
+        pool: PoolHandle,
+        actuator: A,
+        config: AutoscaleConfig,
+    ) -> AutoscaleHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let log: Arc<Mutex<Vec<Decision>>> = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(ControllerStats::default());
+        let join = {
+            let stop = stop.clone();
+            let log = log.clone();
+            let stats = stats.clone();
+            std::thread::Builder::new()
+                .name("dlk-autoscale".into())
+                .spawn(move || {
+                    let mut policy = AutoscalePolicy::new(config);
+                    while !stop.load(Ordering::Acquire) {
+                        if let Ok(util) = pool.utilization() {
+                            stats.ticks.inc();
+                            for mut decision in policy.tick(&util) {
+                                let applied = match decision.action {
+                                    ScaleAction::Grow => actuator.grow(&decision.model),
+                                    ScaleAction::Shrink => actuator.shrink(
+                                        &decision.model,
+                                        decision.shard.expect("shrink decisions carry a victim"),
+                                    ),
+                                };
+                                match applied {
+                                    Ok(count) => {
+                                        decision.after = count;
+                                        match decision.action {
+                                            ScaleAction::Grow => stats.scale_ups.inc(),
+                                            ScaleAction::Shrink => stats.scale_downs.inc(),
+                                        }
+                                    }
+                                    Err(e) => {
+                                        // Keep serving at the old count;
+                                        // the log still records why the
+                                        // controller tried.
+                                        decision.after = decision.before;
+                                        decision.reason.push_str(&format!(
+                                            " (actuation failed: {e})"
+                                        ));
+                                        stats.actuation_errors.inc();
+                                    }
+                                }
+                                log.lock().unwrap().push(decision);
+                            }
+                        }
+                        // Sleep in short slices so stop() returns
+                        // promptly even with a slow tick.
+                        let mut left = config.tick;
+                        while !stop.load(Ordering::Acquire) && !left.is_zero() {
+                            let slice = left.min(Duration::from_millis(10));
+                            std::thread::sleep(slice);
+                            left = left.saturating_sub(slice);
+                        }
+                    }
+                })
+                .expect("spawn dlk-autoscale")
+        };
+        AutoscaleHandle { stop, join: Some(join), log, stats }
+    }
+}
+
+/// Handle to a running [`Autoscaler`]: decision log, counters, stop.
+pub struct AutoscaleHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    log: Arc<Mutex<Vec<Decision>>>,
+    stats: Arc<ControllerStats>,
+}
+
+impl AutoscaleHandle {
+    /// Every decision the controller has taken so far, in order.
+    pub fn decisions(&self) -> Vec<Decision> {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// The controller's outcome counters.
+    pub fn stats(&self) -> Arc<ControllerStats> {
+        self.stats.clone()
+    }
+
+    /// Stop the controller thread and wait for it to exit.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for AutoscaleHandle {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ReplicaLoad;
+
+    fn snapshot(shards: usize, rows: &[(&str, usize, usize)], queues: &[usize]) -> PoolUtilization {
+        PoolUtilization {
+            executions: vec![0; shards],
+            items: vec![0; shards],
+            resident_models: vec![0; shards],
+            resident_bytes: vec![0; shards],
+            queue_depth: queues.to_vec(),
+            window_depth: vec![1; shards],
+            window_occupancy: vec![0; shards],
+            stage_us: vec![0; shards],
+            exec_us: vec![0; shards],
+            scatter_us: vec![0; shards],
+            intra_threads: vec![1; shards],
+            intra_busy_us: vec![0; shards],
+            replicas: rows
+                .iter()
+                .map(|&(model, shard, outstanding)| ReplicaLoad {
+                    model: model.to_string(),
+                    shard,
+                    outstanding,
+                })
+                .collect(),
+        }
+    }
+
+    fn policy(up: usize, idle: usize, cooldown: usize) -> AutoscalePolicy {
+        AutoscalePolicy::new(AutoscaleConfig {
+            high_water: 2,
+            low_water: 0,
+            up_ticks: up,
+            idle_ticks: idle,
+            cooldown_ticks: cooldown,
+            min_replicas: 1,
+            max_replicas: usize::MAX,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn sustained_hotspot_grows_after_exactly_k_ticks() {
+        let mut p = policy(3, 10, 0);
+        let hot = snapshot(4, &[("m", 0, 9)], &[0, 0, 0, 0]);
+        assert!(p.tick(&hot).is_empty(), "tick 1 of 3: no action yet");
+        assert!(p.tick(&hot).is_empty(), "tick 2 of 3: no action yet");
+        let d = p.tick(&hot);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].action, ScaleAction::Grow);
+        assert_eq!((d[0].before, d[0].after), (1, 2));
+        assert!(d[0].reason.contains("hot for 3 tick(s)"), "{}", d[0].reason);
+    }
+
+    #[test]
+    fn queue_depth_alone_trips_the_hot_signal() {
+        let mut p = policy(1, 10, 0);
+        let hot_queue = snapshot(2, &[("m", 1, 0)], &[0, 7]);
+        let d = p.tick(&hot_queue);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].action, ScaleAction::Grow);
+        assert!(d[0].reason.contains("queue depth 7"), "{}", d[0].reason);
+    }
+
+    #[test]
+    fn a_cold_gap_resets_the_hot_streak() {
+        let mut p = policy(2, 10, 0);
+        let hot = snapshot(2, &[("m", 0, 9)], &[0, 0]);
+        let calm = snapshot(2, &[("m", 0, 1)], &[0, 0]);
+        assert!(p.tick(&hot).is_empty());
+        assert!(p.tick(&calm).is_empty(), "streak broken");
+        assert!(p.tick(&hot).is_empty(), "tick 1 of a fresh streak");
+        assert_eq!(p.tick(&hot).len(), 1, "fresh streak completes");
+    }
+
+    #[test]
+    fn cooldown_prevents_back_to_back_grows() {
+        let mut p = policy(1, 10, 2);
+        let hot = snapshot(4, &[("m", 0, 9)], &[0; 4]);
+        assert_eq!(p.tick(&hot).len(), 1, "first grow fires");
+        assert!(p.tick(&hot).is_empty(), "cooldown tick 1");
+        assert!(p.tick(&hot).is_empty(), "cooldown tick 2");
+        assert_eq!(p.tick(&hot).len(), 1, "refractory over, still hot -> grow again");
+    }
+
+    #[test]
+    fn scale_down_respects_min_replicas_and_picks_idlest_victim() {
+        let mut p = policy(3, 2, 0);
+        let idle2 = snapshot(4, &[("m", 0, 0), ("m", 2, 0)], &[0; 4]);
+        assert!(p.tick(&idle2).is_empty());
+        let d = p.tick(&idle2);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].action, ScaleAction::Shrink);
+        assert_eq!(d[0].shard, Some(2), "equal-idle tie breaks away from the primary");
+        // At one replica, sustained idleness must never shrink further.
+        let idle1 = snapshot(4, &[("m", 0, 0)], &[0; 4]);
+        for _ in 0..8 {
+            assert!(p.tick(&idle1).is_empty(), "min replicas is a floor");
+        }
+    }
+
+    #[test]
+    fn grow_clamps_to_shard_count_and_max_replicas() {
+        let mut p = policy(1, 10, 0);
+        // Every shard already hosts a replica: no grow decision.
+        let full = snapshot(2, &[("m", 0, 9), ("m", 1, 9)], &[0, 0]);
+        assert!(p.tick(&full).is_empty());
+        // An explicit max below the shard count clamps too.
+        let mut p = AutoscalePolicy::new(AutoscaleConfig {
+            high_water: 2,
+            up_ticks: 1,
+            cooldown_ticks: 0,
+            max_replicas: 1,
+            ..Default::default()
+        });
+        let hot = snapshot(4, &[("m", 0, 9)], &[0; 4]);
+        assert!(p.tick(&hot).is_empty(), "max_replicas 1 blocks the grow");
+    }
+
+    #[test]
+    fn departed_models_lose_their_history() {
+        let mut p = policy(2, 10, 0);
+        let hot = snapshot(2, &[("m", 0, 9)], &[0, 0]);
+        assert!(p.tick(&hot).is_empty(), "tick 1 of 2");
+        let gone = snapshot(2, &[], &[0, 0]);
+        assert!(p.tick(&gone).is_empty());
+        assert!(p.tick(&hot).is_empty(), "history was dropped; streak restarts");
+        assert_eq!(p.tick(&hot).len(), 1);
+    }
+
+    #[test]
+    fn decision_display_names_the_evidence() {
+        let d = Decision {
+            model: "m".into(),
+            action: ScaleAction::Grow,
+            shard: None,
+            before: 1,
+            after: 2,
+            reason: "hot for 3 tick(s)".into(),
+        };
+        let text = d.to_string();
+        assert!(text.contains("grow `m` 1 -> 2"), "{text}");
+    }
+}

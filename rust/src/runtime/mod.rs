@@ -24,6 +24,7 @@
 //! executor over the same model format ([`CpuModel`]).
 
 pub mod api_mapping;
+mod autoscale;
 mod cpu_model;
 mod engine;
 #[cfg(feature = "pjrt")]
@@ -34,6 +35,10 @@ mod placement;
 mod pool;
 
 pub use api_mapping::{api_mapping_table, ApiMappingRow};
+pub use autoscale::{
+    AutoscaleConfig, AutoscaleHandle, AutoscalePolicy, Autoscaler, Decision, PoolScaler,
+    ReplicaActuator, ScaleAction,
+};
 pub use cpu_model::CpuModel;
 pub use engine::{
     BackendKind, Engine, EngineConfig, EngineHandle, EngineStats, ExecTrace, InferTicket,
@@ -46,5 +51,5 @@ pub use loaded_model::LoadedModel;
 pub use placement::{Placement, ReplicaAssignment, ReplicaSet};
 pub use pool::{
     CpuBudget, EnginePool, ExecutionPanic, Overloaded, PoolConfig, PoolHandle, PoolStats,
-    PoolTicket, Routed, SwapReport,
+    PoolTicket, Routed, Shed, SwapReport,
 };

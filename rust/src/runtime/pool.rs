@@ -67,6 +67,36 @@ impl std::fmt::Display for Overloaded {
 
 impl std::error::Error for Overloaded {}
 
+/// Typed SLO-admission rejection: the pool is saturated and this
+/// request's model holds a **lower priority** than others being served,
+/// so the admission layer shed it before it ever queued. Distinct from
+/// [`Overloaded`] (a per-shard queue-capacity bounce): a shed is a
+/// *policy* choice — capacity exists but is being reserved for
+/// higher-priority traffic. Recover with `err.downcast_ref::<Shed>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shed {
+    /// Model the request addressed.
+    pub model: String,
+    /// The model's configured priority (higher = more important).
+    pub priority: usize,
+    /// Pool admission saturation (percent of total queue capacity in
+    /// flight) when the request was shed.
+    pub saturation_pct: usize,
+}
+
+impl std::fmt::Display for Shed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "model `{}` (priority {}) shed: pool at {}% admission saturation is \
+             reserved for higher-priority traffic",
+            self.model, self.priority, self.saturation_pct
+        )
+    }
+}
+
+impl std::error::Error for Shed {}
+
 /// Typed fault-isolation error: the model's forward **panicked** on the
 /// executing shard. The panic was caught on the execute thread; only this
 /// request failed — the shard, its other in-window requests, and the
@@ -700,6 +730,60 @@ impl PoolHandle {
         Ok(primary.expect("place_replicas returns at least one shard"))
     }
 
+    /// Add exactly **one** replica of an already-resident model (the
+    /// autoscaler's grow path; also a placed single-replica load when
+    /// the model is not resident yet). Reuses the replicated-load
+    /// placement policy — `place_replicas(id, current + 1)` keeps every
+    /// resident replica and picks one new least-loaded shard — but
+    /// loads **only** the new shard, so a grow never re-stages the
+    /// replicas already serving. Returns the new replica count.
+    pub fn grow_replica(&self, dir: impl Into<PathBuf>) -> crate::Result<usize> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&ModelFiles::new(&dir).manifest())?;
+        let estimate = manifest
+            .arch
+            .param_count()
+            .map(|p| p * self.estimate_bytes_per_param)
+            .unwrap_or(0);
+        // Pick and *reserve* under one placement lock acquisition, same
+        // as `load_impl`: the estimate is committed immediately so
+        // concurrent loads see this in-flight grow.
+        let target = {
+            let mut p = self.placement.lock().unwrap();
+            let resident: Vec<usize> =
+                p.replica_set(&manifest.id).map(|set| set.shard_ids()).unwrap_or_default();
+            anyhow::ensure!(
+                resident.len() < self.shards.len(),
+                "cannot grow `{}`: all {} shard(s) already host a replica",
+                manifest.id,
+                self.shards.len()
+            );
+            let targets = p.place_replicas(&manifest.id, resident.len() + 1);
+            let target = targets
+                .into_iter()
+                .find(|s| !resident.contains(s))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("placement returned no new shard for `{}`", manifest.id)
+                })?;
+            p.commit(&manifest.id, target, estimate);
+            target
+        };
+        match self.shards[target].load(dir) {
+            Ok(info) => {
+                self.placement.lock().unwrap().commit(&info.id, target, info.weight_bytes);
+                self.rebuild_routes(&manifest.id);
+                Ok(self.replica_count(&manifest.id))
+            }
+            Err(e) => {
+                // Release only the replica this grow reserved; the
+                // prior owner set keeps serving untouched.
+                self.placement.lock().unwrap().release_replica(&manifest.id, target);
+                self.rebuild_routes(&manifest.id);
+                Err(e)
+            }
+        }
+    }
+
     /// Zero-downtime versioned hot-swap, fanned across the model's whole
     /// owner set. Replicas are swapped in ascending shard order; on each
     /// shard the FIFO queue first drains every inference already submitted
@@ -949,13 +1033,31 @@ impl PoolHandle {
         Ok(PoolStats { shards })
     }
 
+    /// Pool-wide admission saturation, as `(inflight, capacity)`: total
+    /// in-flight requests across every shard over the summed per-shard
+    /// queue bounds. Atomic loads only — cheap enough for the admission
+    /// hot path (the SLO shed signal).
+    pub fn saturation(&self) -> (usize, usize) {
+        let inflight = self.shards.iter().map(|h| h.inflight()).sum();
+        let capacity = self.shards.iter().map(|h| h.queue_cap()).sum();
+        (inflight, capacity)
+    }
+
     /// Pool utilization snapshot: per-shard executions/items/residency,
     /// per-shard admission queue depth, and per-replica outstanding
     /// request counts for every routable owner set.
+    ///
+    /// The queue depths and the replica rows are taken in **one pass
+    /// under the routes lock** — the lock every owner-set change
+    /// (grow/shrink/unload) serializes through — so a controller tick
+    /// never sees torn state: a shard's depth from before a replica
+    /// moved paired with replica rows from after. (Individual counters
+    /// are still independent atomics; the lock pins the *shape* of the
+    /// snapshot, which is what the autoscaler's signals key on.)
     pub fn utilization(&self) -> crate::Result<PoolUtilization> {
         let mut util = self.stats()?.utilization();
-        util.queue_depth = self.shards.iter().map(|h| h.inflight()).collect();
         let routes = self.routes.lock().unwrap();
+        util.queue_depth = self.shards.iter().map(|h| h.inflight()).collect();
         util.replicas = routes
             .iter()
             .flat_map(|(id, set)| {
@@ -1176,6 +1278,95 @@ mod tests {
         let e = pool.unload_replica("shrink-m", 2).unwrap_err().to_string();
         assert!(e.contains("below one replica"), "{e}");
         pool.shutdown();
+    }
+
+    #[test]
+    fn grow_replica_adds_exactly_one_and_keeps_survivors() {
+        let pool = cpu_pool(3, 64);
+        let dir = testutil::tiny_model_dir("pool-grow", "grow-m", 16, 11);
+        let info = pool.load(&dir).unwrap();
+        assert_eq!(pool.replica_count("grow-m"), 1);
+        assert_eq!(pool.grow_replica(&dir).unwrap(), 2);
+        assert_eq!(pool.grow_replica(&dir).unwrap(), 3);
+        assert_eq!(pool.replicas_of("grow-m"), vec![0, 1, 2]);
+        // Each replica pins a full copy; the original shard's copy was
+        // never re-staged (its executions/byte accounting are intact).
+        for a in pool.replica_assignments("grow-m") {
+            assert_eq!(a.bytes, info.weight_bytes);
+        }
+        // A fully-replicated model refuses further growth with a clear
+        // error.
+        let e = pool.grow_replica(&dir).unwrap_err().to_string();
+        assert!(e.contains("already host a replica"), "{e}");
+        // Routing reaches the grown set.
+        let x = crate::tensor::Tensor::randn(crate::tensor::Shape::nchw(1, 1, 8, 8), 12, 1.0);
+        let (_, routed) = pool.infer("grow-m", x).unwrap();
+        assert_eq!(routed.replicas, 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn grow_replica_of_unplaced_model_is_a_placed_load() {
+        let pool = cpu_pool(2, 64);
+        let dir = testutil::tiny_model_dir("pool-grow-fresh", "grow-f", 8, 13);
+        assert_eq!(pool.grow_replica(&dir).unwrap(), 1);
+        assert_eq!(pool.replica_count("grow-f"), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn utilization_snapshot_is_consistent_under_replica_churn() {
+        // Pin the one-pass snapshot contract: while another thread
+        // grows and shrinks a model's owner set, every snapshot must be
+        // internally consistent — queue depths sized to the pool, and
+        // each model's replica rows a sorted, duplicate-free owner set
+        // within bounds. Before queue depths moved under the routes
+        // lock, a tick could pair depths and rows straddling an
+        // owner-set change.
+        let pool = cpu_pool(3, 64);
+        let dir = testutil::tiny_model_dir("pool-churn", "churn-m", 8, 17);
+        pool.load(&dir).unwrap();
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let churn_pool = pool.clone();
+            let churn_dir = dir.clone();
+            let stop_ref = &stop;
+            scope.spawn(move || {
+                for _ in 0..40 {
+                    let _ = churn_pool.grow_replica(&churn_dir);
+                    let _ = churn_pool.grow_replica(&churn_dir);
+                    for shard in (1..3).rev() {
+                        let _ = churn_pool.unload_replica("churn-m", shard);
+                    }
+                }
+                stop_ref.store(true, Ordering::Release);
+            });
+            while !stop.load(Ordering::Acquire) {
+                let util = pool.utilization().unwrap();
+                assert_eq!(util.queue_depth.len(), 3);
+                let shards: Vec<usize> = util.replicas.iter().map(|r| r.shard).collect();
+                assert!(!shards.is_empty() && shards.len() <= 3, "owner set in bounds");
+                assert!(shards.windows(2).all(|w| w[0] < w[1]), "sorted, duplicate-free");
+                assert!(shards.iter().all(|&s| s < 3));
+            }
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn saturation_reports_pool_wide_capacity() {
+        let pool = cpu_pool(2, 8);
+        let (inflight, cap) = pool.saturation();
+        assert_eq!(inflight, 0);
+        assert_eq!(cap, 16, "two shards x queue cap 8");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shed_error_display_names_the_policy() {
+        let e = Shed { model: "m".into(), priority: 1, saturation_pct: 92 };
+        let text = e.to_string();
+        assert!(text.contains("shed") && text.contains("92%"), "{text}");
     }
 
     #[test]
